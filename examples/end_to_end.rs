@@ -1,0 +1,148 @@
+//! End-to-end driver: proves all three layers compose on real small
+//! workloads and reports the paper's headline metric.
+//!
+//! For every workload in the artifact catalog:
+//!   1. L1/L2: execute the AOT-compiled JAX/Pallas artifact through the
+//!      PJRT runtime (Rust, no Python),
+//!   2. L3: run the symbolic energy analysis AND the cycle-accurate
+//!      simulator on the same configuration,
+//!   3. check (a) simulator outputs == PJRT outputs (functional), (b)
+//!      symbolic counts == simulated counts (exact), and report the
+//!      headline metric: symbolic analysis+eval time vs simulation time,
+//!      plus the speedup at a larger problem size.
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use std::path::Path;
+use std::time::Instant;
+
+use tcpa_energy::analysis::SymbolicAnalysis;
+use tcpa_energy::runtime::{catalog, Runtime};
+use tcpa_energy::schedule::find_schedule;
+use tcpa_energy::sim::{simulate, ArchConfig};
+use tcpa_energy::tiling::{tile_pra, ArrayMapping};
+use tcpa_energy::workloads::{self, workload_inputs, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.txt").exists(),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    let mut rt = Runtime::new()?;
+    let loaded = rt.load_dir(dir)?;
+    println!(
+        "PJRT platform: {}; loaded {} artifacts\n",
+        rt.platform(),
+        loaded.len()
+    );
+
+    let mut all_ok = true;
+    println!(
+        "{:<10} {:>9} {:>12} {:>12} {:>8}  {}",
+        "workload", "PJRT", "sym eval", "simulation", "counts", "functional"
+    );
+    for spec in catalog() {
+        let wl = workloads::by_name(spec.name).unwrap();
+        let params: Vec<Vec<i64>> = wl
+            .phases
+            .iter()
+            .zip(spec.bounds)
+            .map(|(ph, b)| {
+                let mut t = vec![2, 2];
+                while t.len() < ph.ndims {
+                    t.push(1);
+                }
+                t.truncate(ph.ndims);
+                ArrayMapping::new(t).params_for(b)
+            })
+            .collect();
+        let env = workload_inputs(&wl, &params);
+
+        // L1/L2 via PJRT.
+        let inputs: Vec<Tensor> =
+            spec.inputs.iter().map(|n| env[*n].clone()).collect();
+        let t0 = Instant::now();
+        let pjrt_out = rt.execute(spec.name, &inputs)?;
+        let pjrt_t = t0.elapsed();
+
+        // L3: symbolic + simulation on the first phase.
+        let phase = &wl.phases[0];
+        let mut t = vec![2, 2];
+        while t.len() < phase.ndims {
+            t.push(1);
+        }
+        t.truncate(phase.ndims);
+        let mapping = ArrayMapping::new(t.clone());
+        let ana = SymbolicAnalysis::analyze(phase, &mapping);
+        let t1 = Instant::now();
+        let sym = ana.counts_at(&params[0]);
+        let sym_t = t1.elapsed();
+
+        let mut arch = ArchConfig::with_array(t);
+        arch.regs.fd = 1 << 20;
+        let tiled = tile_pra(phase, &mapping);
+        let schedule = find_schedule(&tiled, 1).unwrap();
+        let t2 = Instant::now();
+        let sim = simulate(phase, &arch, &schedule, &params[0], &env);
+        let sim_t = t2.elapsed();
+
+        let counts_ok = sim.counters.diff_symbolic(&sym).is_empty();
+        // Functional: PJRT tuple outputs vs simulator outputs where the
+        // first phase produces them (multi-phase workloads compare the
+        // phase-1 tensor).
+        let mut func_ok = sim.violations.is_empty();
+        for (name, out) in spec.outputs.iter().zip(&pjrt_out) {
+            if let Some(sim_tensor) = sim.outputs.get(*name) {
+                func_ok &= sim_tensor.allclose(out, 1e-3, 1e-3);
+            }
+        }
+        all_ok &= counts_ok && func_ok;
+        println!(
+            "{:<10} {:>8.1?} {:>12.1?} {:>12.1?} {:>8} {:>10}",
+            spec.name,
+            pjrt_t,
+            sym_t,
+            sim_t,
+            if counts_ok { "EXACT" } else { "DIFF" },
+            if func_ok { "match" } else { "DIVERGE" },
+        );
+    }
+
+    // Headline metric (Fig. 4): analysis-time scaling on GESUMMV 8×8.
+    println!("\nheadline: GESUMMV on 8x8 — symbolic vs simulation");
+    let wl = workloads::by_name("gesummv").unwrap();
+    let phase = &wl.phases[0];
+    let mapping = ArrayMapping::new(vec![8, 8]);
+    let t0 = Instant::now();
+    let ana = SymbolicAnalysis::analyze(phase, &mapping);
+    let one_time = t0.elapsed();
+    println!("  one-time symbolic analysis: {one_time:?}");
+    for n in [64i64, 256, 1024] {
+        let params = mapping.params_for(&[n, n]);
+        let t1 = Instant::now();
+        let _ = ana.energy_at(&params);
+        let eval_t = t1.elapsed();
+        let env = workload_inputs(&wl, &[params.clone()]);
+        let mut arch = ArchConfig::with_array(vec![8, 8]);
+        arch.regs.fd = 1 << 20;
+        let tiled = tile_pra(phase, &mapping);
+        let schedule = find_schedule(&tiled, 1).unwrap();
+        let t2 = Instant::now();
+        let _ = simulate(phase, &arch, &schedule, &params, &env);
+        let sim_t = t2.elapsed();
+        println!(
+            "  N={n:>5}: symbolic eval {eval_t:>10.1?}   simulation \
+             {sim_t:>10.1?}   speedup {:>8.0}x",
+            sim_t.as_secs_f64() / eval_t.as_secs_f64().max(1e-9)
+        );
+    }
+
+    anyhow::ensure!(all_ok, "some workloads diverged");
+    println!("\nall layers compose: PJRT == simulator, symbolic == simulated");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: analyze the paper's running example (GESUMMV, Example 1–9)
+//! symbolically and evaluate energy + latency at a concrete size — no
+//! simulation, no artifacts needed.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use tcpa_energy::analysis::SymbolicAnalysis;
+use tcpa_energy::tiling::ArrayMapping;
+use tcpa_energy::workloads::gesummv::gesummv;
+
+fn main() {
+    // The paper's configuration (Example 2): 2×2 PE array.
+    let pra = gesummv();
+    let mapping = ArrayMapping::new(vec![2, 2]);
+
+    // One-time symbolic analysis: tiling, scheduling, classification,
+    // parametric volume computation.
+    let ana = SymbolicAnalysis::analyze(&pra, &mapping);
+    println!(
+        "symbolic analysis of `{}` on a 2x2 array: {:?}\n",
+        pra.name, ana.analysis_time
+    );
+
+    // Full report: schedule vectors, per-statement volumes (Example 9
+    // style case expressions) and energies.
+    println!("{}", ana.report());
+
+    // Instant evaluation at any loop bounds — here the paper's 4×5 example
+    // (tile sizes follow the exact-cover rule p = ceil(N/t) = (2,3)).
+    let params = ana.params_for(&[4, 5]);
+    let energy = ana.energy_at(&params);
+    let latency = ana.latency_at(&params);
+    println!("\nN = 4x5  (params {params:?})");
+    for (class, pj) in &energy.mem_pj {
+        println!("  {class:4} {pj:>12.2} pJ");
+    }
+    println!("  comp {:>12.2} pJ", energy.compute_pj);
+    println!("  E_tot = {:.2} pJ, L = {latency} cycles", energy.total);
+    assert_eq!(latency, 16, "paper Example 3");
+
+    // ... and at a size where simulation would take real time:
+    let big = ana.params_for(&[4096, 4096]);
+    let e_big = ana.energy_at(&big);
+    println!(
+        "\nN = 4096x4096: E_tot = {:.3e} pJ, L = {} cycles \
+         (same one-time analysis, instant evaluation)",
+        e_big.total,
+        ana.latency_at(&big)
+    );
+}

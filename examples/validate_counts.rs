@@ -1,0 +1,48 @@
+//! §V-A validation in example form: print the per-memory-class count
+//! comparison between the symbolic analysis and the cycle-accurate
+//! simulator for every benchmark workload — the "matches exactly" claim,
+//! visibly.
+//!
+//! ```bash
+//! cargo run --release --example validate_counts
+//! ```
+
+use tcpa_energy::coordinator::validate_workload;
+use tcpa_energy::workloads;
+
+fn main() {
+    let mut all_ok = true;
+    for wl in workloads::all() {
+        let bounds: Vec<i64> = match wl.name.as_str() {
+            "jacobi1d" => vec![4, 12],
+            _ => vec![12, 12],
+        };
+        for row in validate_workload(&wl, &bounds, &[2, 2]) {
+            println!(
+                "\n== {} / {}  N={:?} on {:?} array ==",
+                row.workload, row.phase, row.bounds, row.array
+            );
+            println!("{:>6} {:>14} {:>14}", "class", "symbolic", "simulated");
+            for (label, sym, sim) in &row.counts {
+                let mark = if sym == sim { "" } else { "  <-- MISMATCH" };
+                println!("{label:>6} {sym:>14} {sim:>14}{mark}");
+            }
+            println!(
+                "energy: symbolic {:.2} pJ, simulated {:.2} pJ",
+                row.energy_sym_pj, row.energy_sim_pj
+            );
+            println!(
+                "status: {} / functional {}",
+                if row.exact_match { "EXACT" } else { "MISMATCH" },
+                if row.functional_ok { "ok" } else { "DIVERGED" }
+            );
+            all_ok &= row.exact_match && row.functional_ok;
+        }
+    }
+    if all_ok {
+        println!("\nall benchmarks: symbolic == simulated, exactly.");
+    } else {
+        eprintln!("\nVALIDATION FAILED");
+        std::process::exit(1);
+    }
+}

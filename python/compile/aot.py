@@ -1,0 +1,59 @@
+"""AOT lowering: JAX models → HLO **text** artifacts for the Rust runtime.
+
+HLO text (not ``serialize()``d protos) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla_extension
+0.5.1 bundled with the published ``xla`` crate rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (wired into
+``make artifacts``; a no-op for unchanged inputs thanks to the Makefile
+stamp).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MANIFEST
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, (fn, args) in MANIFEST.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            ",".join(str(d) for d in a.shape) if a.shape else "scalar"
+            for a in args
+        )
+        manifest_lines.append(f"{name} {shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    lower_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Layer-1 Pallas kernels mirroring the TCPA LSGP mapping.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): one TCPA *tile* of
+size ``p0×p1`` maps to one Pallas *block* resident in VMEM; the grid walks
+the tile origins exactly like the array's tile grid `K`. Reduction
+dimensions that the TCPA mapping keeps PE-local (``t_ℓ = 1``) stay whole
+inside the block — the accumulation chain that lives in FD registers on
+the TCPA becomes a VMEM-resident accumulator here.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO so the AOT artifacts run anywhere (see /opt/xla-example/README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# --------------------------------------------------------------------------
+# GEMM: grid over (M/bm, N/bn) tile origins; K stays in-block (t_K = 1).
+# --------------------------------------------------------------------------
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    # One (bm, K)×(K, bn) product: the per-PE accumulation chain.
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gemm(A, B, *, bm=8, bn=8):
+    """C = A·B with a (bm × bn) block ↔ TCPA tile mapping."""
+    m, k = A.shape
+    k2, n = B.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % bm == 0 and n % bn == 0, "block must divide shape"
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), A.dtype),
+        interpret=True,
+    )(A, B)
+
+
+# --------------------------------------------------------------------------
+# GESUMMV: grid over row blocks; the i1 accumulation chain stays in-block.
+# --------------------------------------------------------------------------
+def _gesummv_kernel(a_ref, b_ref, x_ref, o_ref):
+    s = a_ref[...] + b_ref[...]
+    o_ref[...] = s @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def gesummv(A, B, x, *, bm=8):
+    """Y = (A + B)·x, row-blocked like the paper's GESUMMV tiling."""
+    m, n = A.shape
+    assert m % bm == 0, "block must divide rows"
+    return pl.pallas_call(
+        _gesummv_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), A.dtype),
+        interpret=True,
+    )(A, B, x)
+
+
+# --------------------------------------------------------------------------
+# MATVEC: row-blocked y = A·x (building block for ATAX/BiCG/MVT models).
+# --------------------------------------------------------------------------
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    o_ref[...] = a_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def matvec(A, x, *, bm=8):
+    """y = A·x with row blocks."""
+    m, n = A.shape
+    assert m % bm == 0, "block must divide rows"
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), A.dtype),
+        interpret=True,
+    )(A, x)
+
+
+# --------------------------------------------------------------------------
+# Jacobi-1D: one relaxation sweep per call; whole line in one block (the
+# TCPA maps the stencil line across PEs, but a sweep is the natural
+# kernel granularity for the VMEM scratchpad).
+# --------------------------------------------------------------------------
+def _jacobi_kernel(v_ref, o_ref):
+    v = v_ref[...]
+    inner = v[:-2] + v[1:-1] + v[2:]
+    o_ref[...] = jnp.concatenate([v[:1], inner, v[-1:]])
+
+
+@jax.jit
+def jacobi1d_step(v):
+    """One unscaled Jacobi sweep with propagated boundaries."""
+    (n,) = v.shape
+    return pl.pallas_call(
+        _jacobi_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), v.dtype),
+        interpret=True,
+    )(v)

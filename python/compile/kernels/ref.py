@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for every workload.
+
+These are the L1 correctness ground truth: the Pallas kernels (and through
+them the AOT artifacts the Rust runtime executes) are asserted allclose
+against these functions by pytest/hypothesis at build time. They are also
+the *numeric twins* of the Rust PRA definitions in
+``rust/src/workloads/`` — same simplifications (GEMM without alpha/beta,
+unscaled Jacobi, rectangular SYRK), documented in DESIGN.md §6.
+"""
+
+import jax.numpy as jnp
+
+
+def gesummv(A, B, x):
+    """Y = (A + B)·x — the paper's running example."""
+    return (A + B) @ x
+
+
+def gemm(A, B):
+    """C = A·B."""
+    return A @ B
+
+
+def matvec(A, x):
+    """y = A·x (building block for ATAX/BiCG/MVT)."""
+    return A @ x
+
+
+def atax(A, x):
+    """y = Aᵀ(A·x)."""
+    return A.T @ (A @ x)
+
+
+def bicg(A, p, r):
+    """(q, s) = (A·p, Aᵀ·r)."""
+    return A @ p, A.T @ r
+
+
+def mvt(A, y1, y2, x1, x2):
+    """(x1 + A·y1, x2 + Aᵀ·y2)."""
+    return x1 + A @ y1, x2 + A.T @ y2
+
+
+def syrk(A, Cin):
+    """C = A·Aᵀ + Cin (rectangular update)."""
+    return A @ A.T + Cin
+
+
+def k2mm(A, B, C):
+    """D = (A·B)·C."""
+    return (A @ B) @ C
+
+
+def jacobi1d(a, steps):
+    """``steps − 1`` unscaled relaxation sweeps v[i] = v[i−1]+v[i]+v[i+1]
+    (boundaries propagate unchanged), matching the PRA where sweep t = 0 is
+    the load of the initial array."""
+    v = a
+    for _ in range(int(steps) - 1):
+        v = jnp.concatenate([v[:1], v[:-2] + v[1:-1] + v[2:], v[-1:]])
+    return v

@@ -1,0 +1,103 @@
+"""Layer-2 JAX models: one function per workload, calling the Layer-1
+Pallas kernels. Lowered once by ``aot.py`` to HLO text; never imported at
+runtime by the Rust coordinator.
+
+Every model's signature and the shapes it is lowered at are listed in
+``MANIFEST`` — the single source of truth shared with ``aot.py`` and (via
+``artifacts/manifest.txt``) with the Rust runtime.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import pallas_kernels as k
+
+
+def gesummv(A, B, x):
+    return (k.gesummv(A, B, x),)
+
+
+def gemm(A, B):
+    return (k.gemm(A, B),)
+
+
+def atax(A, x):
+    tmp = k.matvec(A, x)
+    y = k.matvec(A.T, tmp)
+    return (y, tmp)
+
+
+def bicg(A, p, r):
+    return (k.matvec(A, p), k.matvec(A.T, r))
+
+
+def mvt(A, y1, y2, x1, x2):
+    return (x1 + k.matvec(A, y1), x2 + k.matvec(A.T, y2))
+
+
+def syrk(A, Cin):
+    return (k.gemm(A, A.T) + Cin,)
+
+
+def k2mm(A, B, C):
+    tmp = k.gemm(A, B)
+    return (k.gemm(tmp, C), tmp)
+
+
+def doitgen(A, C4):
+    """SUM[r,q,p] = Σ_s A[r,q,s]·C4[s,p] via the blocked GEMM kernel on the
+    flattened (r,q) axis."""
+    nr, nq, ns = A.shape
+    flat = A.reshape(nr * nq, ns)
+    return (k.gemm(flat, C4).reshape(nr, nq, C4.shape[1]),)
+
+
+def gemver(A, u1, v1, u2, v2, y, z):
+    B = A + jnp.outer(u1, v1) + jnp.outer(u2, v2)
+    x = k.matvec(B.T, y) + z
+    w = k.matvec(B, x)
+    return (B, x, w)
+
+
+def jacobi1d_steps(steps):
+    """Build a fixed-sweep-count Jacobi model (steps is static: the AOT
+    artifact bakes the time extent, like the unrolled TCPA schedule)."""
+
+    def model(a):
+        v = a
+        for _ in range(steps - 1):
+            v = k.jacobi1d_step(v)
+        return (v,)
+
+    return model
+
+
+def _f32(*shape):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+#: name -> (callable, example argument shapes)
+#: Shapes are the ones the AOT artifacts are compiled for; the Rust
+#: end-to-end driver uses exactly these.
+MANIFEST = {
+    "gesummv": (gesummv, [_f32(16, 16), _f32(16, 16), _f32(16)]),
+    "gemm": (gemm, [_f32(16, 16), _f32(16, 16)]),
+    "atax": (atax, [_f32(16, 16), _f32(16)]),
+    "bicg": (bicg, [_f32(16, 16), _f32(16), _f32(16)]),
+    "mvt": (
+        mvt,
+        [_f32(16, 16), _f32(16), _f32(16), _f32(16), _f32(16)],
+    ),
+    "syrk": (syrk, [_f32(16, 16), _f32(16, 16)]),
+    "k2mm": (k2mm, [_f32(16, 16), _f32(16, 16), _f32(16, 16)]),
+    "jacobi1d": (jacobi1d_steps(4), [_f32(32)]),
+    "doitgen": (doitgen, [_f32(4, 4, 8), _f32(8, 8)]),
+    "gemver": (
+        gemver,
+        [
+            _f32(16, 16), _f32(16), _f32(16), _f32(16), _f32(16),
+            _f32(16), _f32(16),
+        ],
+    ),
+}

@@ -1,0 +1,105 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (multiples of the block size, kept small because
+interpret-mode Pallas executes on CPU numpy) and dtypes (f32 exact-ish,
+bf16 loose).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_kernels as k
+from compile.kernels import ref
+
+DIMS = st.sampled_from([8, 16, 24])
+SMALL = st.sampled_from([8, 16])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def rng_array(shape, dtype, seed):
+    r = np.random.default_rng(seed)
+    # eighths in [-1, 1]: keeps bf16 accumulation comparable to f32 refs
+    q = r.integers(-8, 9, size=shape).astype(np.float32) / 8.0
+    return jnp.asarray(q, dtype=dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=1e-5, rtol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, kk=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31))
+def test_gemm_matches_ref(m, n, kk, dtype, seed):
+    A = rng_array((m, kk), dtype, seed)
+    B = rng_array((kk, n), dtype, seed + 1)
+    got = k.gemm(A, B)
+    want = ref.gemm(A.astype(jnp.float32), B.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), **tol(dtype)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31))
+def test_gesummv_matches_ref(m, n, dtype, seed):
+    A = rng_array((m, n), dtype, seed)
+    B = rng_array((m, n), dtype, seed + 1)
+    x = rng_array((n,), dtype, seed + 2)
+    got = k.gesummv(A, B, x)
+    want = ref.gesummv(*(t.astype(jnp.float32) for t in (A, B, x)))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), **tol(dtype)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=SMALL, dtype=DTYPES, seed=st.integers(0, 2**31))
+def test_matvec_matches_ref(m, n, dtype, seed):
+    A = rng_array((m, n), dtype, seed)
+    x = rng_array((n,), dtype, seed + 1)
+    got = k.matvec(A, x)
+    want = ref.matvec(A.astype(jnp.float32), x.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), **tol(dtype)
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32]),
+    steps=st.integers(2, 5),
+    seed=st.integers(0, 2**31),
+)
+def test_jacobi_step_matches_ref(n, steps, seed):
+    v = rng_array((n,), jnp.float32, seed)
+    got = v
+    for _ in range(steps - 1):
+        got = k.jacobi1d_step(got)
+    want = ref.jacobi1d(v, steps)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=SMALL, n=SMALL, kk=SMALL, seed=st.integers(0, 2**31))
+def test_gemm_block_size_invariance(m, n, kk, seed):
+    """The block decomposition must not change the numerics."""
+    A = rng_array((m, kk), jnp.float32, seed)
+    B = rng_array((kk, n), jnp.float32, seed + 1)
+    full = k.gemm(A, B, bm=m, bn=n)  # one block = whole problem
+    blocked = k.gemm(A, B, bm=8, bn=8)
+    np.testing.assert_allclose(
+        np.asarray(full), np.asarray(blocked), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_block_must_divide():
+    A = jnp.zeros((12, 8), jnp.float32)
+    B = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        k.gemm(A, B, bm=8, bn=8)

@@ -1,0 +1,116 @@
+"""L2 correctness: every MANIFEST model vs its oracle at the AOT shapes,
+plus lowering smoke tests (the HLO text the Rust runtime will consume)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.aot import to_hlo_text
+from compile.kernels import ref
+
+
+def synth(shape, seed):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(
+        r.integers(-8, 9, size=shape).astype(np.float32) / 8.0
+    )
+
+
+def args_for(name):
+    _, specs = M.MANIFEST[name]
+    return [synth(s.shape, i + 7) for i, s in enumerate(specs)]
+
+
+def test_manifest_complete():
+    assert sorted(M.MANIFEST) == sorted(
+        [
+            "gesummv", "gemm", "atax", "bicg", "mvt", "syrk", "k2mm",
+            "jacobi1d", "doitgen", "gemver",
+        ]
+    )
+
+
+def test_gesummv_model():
+    A, B, x = args_for("gesummv")
+    (y,) = M.gesummv(A, B, x)
+    np.testing.assert_allclose(y, ref.gesummv(A, B, x), atol=1e-5, rtol=1e-5)
+
+
+def test_gemm_model():
+    A, B = args_for("gemm")
+    (c,) = M.gemm(A, B)
+    np.testing.assert_allclose(c, ref.gemm(A, B), atol=1e-5, rtol=1e-5)
+
+
+def test_atax_model():
+    A, x = args_for("atax")
+    y, tmp = M.atax(A, x)
+    np.testing.assert_allclose(y, ref.atax(A, x), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(tmp, A @ x, atol=1e-5, rtol=1e-5)
+
+
+def test_bicg_model():
+    A, p, r = args_for("bicg")
+    q, s = M.bicg(A, p, r)
+    rq, rs = ref.bicg(A, p, r)
+    np.testing.assert_allclose(q, rq, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(s, rs, atol=1e-5, rtol=1e-5)
+
+
+def test_mvt_model():
+    args = args_for("mvt")
+    x1, x2 = M.mvt(*args)
+    r1, r2 = ref.mvt(*args)
+    np.testing.assert_allclose(x1, r1, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(x2, r2, atol=1e-5, rtol=1e-5)
+
+
+def test_syrk_model():
+    A, Cin = args_for("syrk")
+    (c,) = M.syrk(A, Cin)
+    np.testing.assert_allclose(c, ref.syrk(A, Cin), atol=1e-5, rtol=1e-5)
+
+
+def test_k2mm_model():
+    A, B, C = args_for("k2mm")
+    d, tmp = M.k2mm(A, B, C)
+    np.testing.assert_allclose(d, ref.k2mm(A, B, C), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(tmp, A @ B, atol=1e-5, rtol=1e-5)
+
+
+def test_jacobi_model():
+    (a,) = args_for("jacobi1d")
+    (v,) = M.MANIFEST["jacobi1d"][0](a)
+    np.testing.assert_allclose(
+        v, ref.jacobi1d(a, 4), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_doitgen_model():
+    A, C4 = args_for("doitgen")
+    (s,) = M.doitgen(A, C4)
+    want = jnp.einsum("rqs,sp->rqp", A, C4)
+    np.testing.assert_allclose(s, want, atol=1e-5, rtol=1e-5)
+
+
+def test_gemver_model():
+    A, u1, v1, u2, v2, y, z = args_for("gemver")
+    B, x, w = M.gemver(A, u1, v1, u2, v2, y, z)
+    B_ref = A + jnp.outer(u1, v1) + jnp.outer(u2, v2)
+    x_ref = B_ref.T @ y + z
+    w_ref = B_ref @ x_ref
+    np.testing.assert_allclose(B, B_ref, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(x, x_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(w, w_ref, atol=1e-3, rtol=1e-3)
+
+
+def test_all_models_lower_to_hlo_text():
+    """Lowering smoke: every artifact the Makefile produces is non-empty
+    HLO text with an ENTRY computation (what HloModuleProto::from_text_file
+    parses on the Rust side)."""
+    for name, (fn, specs) in M.MANIFEST.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text, name
+        assert "f32" in text, name

@@ -1,0 +1,85 @@
+//! Fig. 4 of the paper: analysis time, symbolic vs simulation-based, for
+//! GESUMMV on an 8×8 PE array across increasing matrix sizes.
+//!
+//! Expected shape (the paper's claim): the symbolic series stays nearly
+//! constant (< 0.5 s) while the simulation series grows with the N²
+//! iteration-space volume. Counts must agree exactly at every point.
+//!
+//! Emits `results/fig4_analysis_time.csv` and an ASCII rendering.
+
+use tcpa_energy::coordinator::fig4_rows;
+use tcpa_energy::report::{ascii_chart, write_csv, CsvTable};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[i64] = if quick {
+        &[16, 32, 64]
+    } else {
+        &[16, 32, 64, 128, 256, 512, 1024]
+    };
+    println!("Fig. 4 — GESUMMV on 8x8: analysis time vs matrix size\n");
+    println!(
+        "{:>6} {:>18} {:>18} {:>14} {:>7}",
+        "N", "symbolic (1-time)", "symbolic eval", "simulation", "exact"
+    );
+    let rows = fig4_rows(sizes);
+    let mut table = CsvTable::new(vec![
+        "N",
+        "symbolic_analysis_s",
+        "symbolic_eval_s",
+        "simulation_s",
+        "exact",
+    ]);
+    for r in &rows {
+        println!(
+            "{:>6} {:>17.4}s {:>17.6}s {:>13.4}s {:>7}",
+            r.n, r.symbolic_s, r.symbolic_eval_s, r.simulation_s, r.exact
+        );
+        table.push(vec![
+            r.n.to_string(),
+            format!("{:.6}", r.symbolic_s),
+            format!("{:.9}", r.symbolic_eval_s),
+            format!("{:.6}", r.simulation_s),
+            r.exact.to_string(),
+        ]);
+    }
+    write_csv(&table, std::path::Path::new("results"), "fig4_analysis_time")
+        .expect("writing results/fig4_analysis_time.csv");
+    let chart = ascii_chart(
+        "analysis time [log s] vs N (GESUMMV, 8x8)",
+        &[
+            (
+                "symbolic total",
+                rows.iter()
+                    .map(|r| (r.n as f64, r.symbolic_s + r.symbolic_eval_s))
+                    .collect(),
+            ),
+            (
+                "simulation",
+                rows.iter().map(|r| (r.n as f64, r.simulation_s)).collect(),
+            ),
+        ],
+        64,
+        16,
+        true,
+    );
+    println!("\n{chart}");
+
+    // Shape assertions — fail loudly if the reproduction regresses.
+    assert!(rows.iter().all(|r| r.exact), "counts must match exactly");
+    let first = &rows[0];
+    let last = rows.last().unwrap();
+    assert!(
+        last.simulation_s > first.simulation_s * 4.0,
+        "simulation time must grow with N"
+    );
+    assert!(
+        last.symbolic_s + last.symbolic_eval_s < 1.0,
+        "symbolic analysis must stay below 1 s (paper: < 0.5 s)"
+    );
+    println!(
+        "speedup at N={}: {:.0}x",
+        last.n,
+        last.simulation_s / (last.symbolic_eval_s.max(1e-9))
+    );
+}

@@ -1,0 +1,119 @@
+//! Fig. 5 of the paper: total energy `E_tot` and latency `L` vs matrix
+//! size for GEMM on an 8×8 PE grid, with the per-access-location energy
+//! breakdown.
+//!
+//! Expected shape: both grow ~N³; DRAM dominates at small N, while the
+//! on-chip share (FD/RD registers + compute) grows with N as tiles grow
+//! (tile size p = N/8 ⇒ more intra-tile reuse per DRAM element).
+//!
+//! Emits `results/fig5_energy_scaling.csv` and ASCII charts.
+
+use tcpa_energy::coordinator::fig5_rows;
+use tcpa_energy::report::{ascii_chart, write_csv, CsvTable};
+
+fn main() {
+    let sizes: &[i64] = &[16, 32, 64, 128, 256, 512, 1024];
+    println!("Fig. 5 — GEMM on 8x8: energy + latency vs matrix size\n");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "N", "total pJ", "DRAM", "IOb", "FD", "RD", "compute", "L cycles"
+    );
+    let rows = fig5_rows(sizes);
+    let mut table = CsvTable::new(vec![
+        "N", "total_pj", "DR_pj", "IOb_pj", "FD_pj", "RD_pj", "ID_pj",
+        "OD_pj", "compute_pj", "latency_cycles",
+    ]);
+    for r in &rows {
+        println!(
+            "{:>6} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} \
+             {:>12.3e} {:>10}",
+            r.n, r.total_pj, r.dram_pj, r.iob_pj, r.fd_pj, r.rd_pj,
+            r.compute_pj, r.latency_cycles
+        );
+        table.push(vec![
+            r.n.to_string(),
+            format!("{:.1}", r.total_pj),
+            format!("{:.1}", r.dram_pj),
+            format!("{:.1}", r.iob_pj),
+            format!("{:.1}", r.fd_pj),
+            format!("{:.1}", r.rd_pj),
+            format!("{:.1}", r.id_pj),
+            format!("{:.1}", r.od_pj),
+            format!("{:.1}", r.compute_pj),
+            r.latency_cycles.to_string(),
+        ]);
+    }
+    write_csv(&table, std::path::Path::new("results"), "fig5_energy_scaling")
+        .expect("writing results/fig5_energy_scaling.csv");
+    println!(
+        "\n{}",
+        ascii_chart(
+            "GEMM energy breakdown [log pJ] vs N (8x8 grid)",
+            &[
+                ("total", rows.iter().map(|r| (r.n as f64, r.total_pj)).collect()),
+                ("DRAM", rows.iter().map(|r| (r.n as f64, r.dram_pj)).collect()),
+                (
+                    "FD+RD",
+                    rows.iter()
+                        .map(|r| (r.n as f64, r.fd_pj + r.rd_pj))
+                        .collect()
+                ),
+                (
+                    "compute",
+                    rows.iter().map(|r| (r.n as f64, r.compute_pj)).collect()
+                ),
+            ],
+            64,
+            18,
+            true,
+        )
+    );
+    println!(
+        "{}",
+        ascii_chart(
+            "GEMM latency [log cycles] vs N (8x8 grid)",
+            &[(
+                "latency",
+                rows.iter()
+                    .map(|r| (r.n as f64, r.latency_cycles as f64))
+                    .collect()
+            )],
+            64,
+            12,
+            true,
+        )
+    );
+
+    // Shape assertions (the paper's qualitative findings).
+    let dram_share =
+        |r: &tcpa_energy::coordinator::Fig5Row| r.dram_pj / r.total_pj;
+    let onchip_share = |r: &tcpa_energy::coordinator::Fig5Row| {
+        (r.fd_pj + r.rd_pj + r.compute_pj) / r.total_pj
+    };
+    let first = &rows[0];
+    let last = rows.last().unwrap();
+    assert!(
+        dram_share(first) > dram_share(last),
+        "DRAM share must shrink with N: {:.3} vs {:.3}",
+        dram_share(first),
+        dram_share(last)
+    );
+    assert!(
+        onchip_share(last) > onchip_share(first),
+        "on-chip share must grow with N"
+    );
+    assert!(
+        last.total_pj > first.total_pj && last.latency_cycles > first.latency_cycles,
+        "energy and latency grow with problem size"
+    );
+    println!(
+        "DRAM share: {:.1}% at N={} → {:.1}% at N={} (on-chip+compute: \
+         {:.1}% → {:.1}%)",
+        100.0 * dram_share(first),
+        first.n,
+        100.0 * dram_share(last),
+        last.n,
+        100.0 * onchip_share(first),
+        100.0 * onchip_share(last),
+    );
+}

@@ -1,0 +1,38 @@
+//! Simulator throughput benchmark: statement-executions per second of the
+//! cycle-accurate engine across problem sizes (the denominator of the
+//! Fig. 4 comparison, and the §Perf optimization target for L3).
+
+use tcpa_energy::bench_util::time_once;
+use tcpa_energy::schedule::find_schedule;
+use tcpa_energy::sim::{simulate, ArchConfig};
+use tcpa_energy::tiling::{tile_pra, ArrayMapping};
+use tcpa_energy::workloads::{self, workload_inputs};
+
+fn main() {
+    let wl = workloads::by_name("gesummv").unwrap();
+    let phase = &wl.phases[0];
+    let mapping = ArrayMapping::new(vec![8, 8]);
+    let tiled = tile_pra(phase, &mapping);
+    let schedule = find_schedule(&tiled, 1).unwrap();
+    println!("simulator throughput (GESUMMV, 8x8 array)\n");
+    println!(
+        "{:>6} {:>14} {:>12} {:>16}",
+        "N", "stmt execs", "wall", "execs/s"
+    );
+    for n in [64i64, 128, 256, 512] {
+        let params = mapping.params_for(&[n, n]);
+        let env = workload_inputs(&wl, &[params.clone()]);
+        let mut arch = ArchConfig::with_array(vec![8, 8]);
+        arch.regs.fd = 1 << 20;
+        let (t, res) =
+            time_once(|| simulate(phase, &arch, &schedule, &params, &env));
+        let execs = res.counters.executions;
+        println!(
+            "{:>6} {:>14} {:>12.3?} {:>16.3e}",
+            n,
+            execs,
+            t,
+            execs as f64 / t.as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Microbenchmark of the polyhedral substrate (the ISL/Barvinok
+//! substitute): one-time symbolic counting cost and per-evaluation cost,
+//! per array size — supporting the paper's footnote 1 ("analysis time
+//! remains on the order of 1 minute even for 50×50 arrays"; our
+//! implementation is far below that).
+
+use tcpa_energy::bench_util::{bench, time_once};
+use tcpa_energy::polyhedral::{count_concrete, count_symbolic, SymbolicOptions};
+use tcpa_energy::tiling::{tile_pra, ArrayMapping};
+use tcpa_energy::workloads::gesummv::gesummv;
+
+fn main() {
+    println!("symbolic volume computation cost vs array size (GESUMMV S7)\n");
+    println!(
+        "{:>7} {:>16} {:>14} {:>12} {:>8}",
+        "array", "symbolic count", "eval/query", "concrete", "pieces"
+    );
+    for t in [2i64, 4, 8, 16, 32, 50] {
+        let pra = gesummv();
+        let mapping = ArrayMapping::new(vec![t, t]);
+        let tiled = tile_pra(&pra, &mapping);
+        let s7 = tiled
+            .statements
+            .iter()
+            .find(|s| s.base_name == "S7" && !s.is_inter_tile())
+            .unwrap();
+        let opts = SymbolicOptions::default();
+        let (analysis_t, gs) = time_once(|| {
+            count_symbolic(&s7.space, &mapping.t, &tiled.context, &opts)
+        });
+        let n = 8 * t; // p = 8 per PE
+        let params = mapping.params_for(&[n, n]);
+        let eval = bench(3, 20, || gs.eval(&params));
+        let conc = bench(3, 20, || {
+            count_concrete(&s7.space, &mapping.t, &params)
+        });
+        println!(
+            "{:>4}x{:<3} {:>15.3?} {:>14.3?} {:>12.3?} {:>8}",
+            t,
+            t,
+            analysis_t,
+            eval.median,
+            conc.median,
+            gs.pieces.len()
+        );
+        // sanity: symbolic == concrete
+        assert_eq!(
+            gs.eval(&params),
+            count_concrete(&s7.space, &mapping.t, &params)
+        );
+        if t == 50 {
+            assert!(
+                analysis_t.as_secs_f64() < 60.0,
+                "50x50 must stay within the paper's minute"
+            );
+        }
+    }
+}

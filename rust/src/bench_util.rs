@@ -1,0 +1,81 @@
+//! Minimal benchmarking harness (the offline vendor tree has no
+//! criterion): warmup + N timed repetitions, reporting min/median/mean.
+//! All `cargo bench` targets are `harness = false` binaries built on this.
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+    pub reps: usize,
+}
+
+impl BenchStats {
+    /// Render a compact one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "min {:?}  median {:?}  mean {:?}  max {:?}  ({} reps)",
+            self.min, self.median, self.mean, self.max, self.reps
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `reps` measured runs.
+pub fn bench<T>(
+    warmup: usize,
+    reps: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchStats {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let total: Duration = times.iter().sum();
+    BenchStats {
+        min: times[0],
+        median: times[times.len() / 2],
+        mean: total / reps as u32,
+        max: *times.last().unwrap(),
+        reps,
+    }
+}
+
+/// Time `f` once (for the long simulation points of Fig. 4 where
+/// repetitions are impractical — the paper's simulator points are also
+/// single runs).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (Duration, T) {
+    let t0 = Instant::now();
+    let v = f();
+    (t0.elapsed(), v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_orders_stats() {
+        let s = bench(1, 5, || std::hint::black_box((0..100).sum::<u64>()));
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert_eq!(s.reps, 5);
+        assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (d, v) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

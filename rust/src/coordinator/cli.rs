@@ -1,0 +1,457 @@
+//! Hand-rolled CLI (no clap in the offline vendor tree).
+//!
+//! ```text
+//! tcpa-energy list
+//! tcpa-energy analyze  --workload gesummv --array 8x8 [--bounds 64,64] [--report]
+//! tcpa-energy simulate --workload gesummv --array 2x2 --bounds 8,8
+//! tcpa-energy validate [--workload NAME] [--bounds 8,8] [--array 2x2]
+//! tcpa-energy dse      --workload gemm --bounds 64,64 [--max-pes 64]
+//! tcpa-energy figures  [--out results] [--quick]
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::analysis::SymbolicAnalysis;
+use crate::energy::MemoryClass;
+use crate::report::{ascii_chart, write_csv, CsvTable};
+use crate::schedule::find_schedule;
+use crate::sim::{simulate, ArchConfig};
+use crate::tiling::{tile_pra, ArrayMapping};
+use crate::workloads::{self, workload_inputs};
+
+use super::dse::dse_sweep;
+use super::figures::{fig4_rows, fig5_rows};
+use super::validate::validate_workload;
+
+/// CLI failure.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("usage: {0}")]
+    Usage(String),
+    #[error("unknown workload {0}; try `tcpa-energy list`")]
+    UnknownWorkload(String),
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--")
+            {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn parse_vec(s: &str, sep: char) -> Vec<i64> {
+    s.split(sep).map(|x| x.trim().parse().expect("integer list")).collect()
+}
+
+/// Run the CLI; returns the process exit code.
+pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
+    let usage = "tcpa-energy <list|analyze|simulate|validate|dse|figures> \
+                 [flags]";
+    let Some(cmd) = args.first() else {
+        return Err(CliError::Usage(usage.into()));
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "list" => {
+            println!("workloads:");
+            for wl in workloads::all() {
+                let phases: Vec<String> = wl
+                    .phases
+                    .iter()
+                    .map(|p| format!("{} ({}D)", p.name, p.ndims))
+                    .collect();
+                println!("  {:10} phases: {}", wl.name, phases.join(", "));
+            }
+            Ok(0)
+        }
+        "analyze" => {
+            let name = flags
+                .get("workload")
+                .ok_or_else(|| CliError::Usage("--workload required".into()))?;
+            let wl = workloads::by_name(name)
+                .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?;
+            let array = parse_vec(
+                flags.get("array").map(String::as_str).unwrap_or("8x8"),
+                'x',
+            );
+            for phase in &wl.phases {
+                let mut t = array.clone();
+                while t.len() < phase.ndims {
+                    t.push(1);
+                }
+                t.truncate(phase.ndims);
+                let mapping = ArrayMapping::new(t);
+                let ana = SymbolicAnalysis::analyze(phase, &mapping);
+                println!(
+                    "[{}] symbolic analysis took {:?}",
+                    phase.name, ana.analysis_time
+                );
+                if flags.contains_key("report") {
+                    println!("{}", ana.report());
+                }
+                if let Some(bounds) = flags.get("bounds") {
+                    let mut b = parse_vec(bounds, ',');
+                    while b.len() < phase.ndims {
+                        b.push(*b.last().unwrap());
+                    }
+                    b.truncate(phase.ndims);
+                    let params = ana.params_for(&b);
+                    let e = ana.energy_at(&params);
+                    let l = ana.latency_at(&params);
+                    println!("  bounds {b:?} → params {params:?}");
+                    for (c, v) in &e.mem_pj {
+                        println!("    {c:4} {v:>18.2} pJ");
+                    }
+                    println!("    comp {:>18.2} pJ", e.compute_pj);
+                    println!("    TOTAL {:>17.2} pJ   latency {} cycles", e.total, l);
+                }
+            }
+            Ok(0)
+        }
+        "simulate" => {
+            let name = flags
+                .get("workload")
+                .ok_or_else(|| CliError::Usage("--workload required".into()))?;
+            let wl = workloads::by_name(name)
+                .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?;
+            let array = parse_vec(
+                flags.get("array").map(String::as_str).unwrap_or("2x2"),
+                'x',
+            );
+            let bounds = parse_vec(
+                flags.get("bounds").map(String::as_str).unwrap_or("8,8"),
+                ',',
+            );
+            let params_all: Vec<Vec<i64>> = wl
+                .phases
+                .iter()
+                .map(|ph| {
+                    let mut b = bounds.clone();
+                    while b.len() < ph.ndims {
+                        b.push(*b.last().unwrap());
+                    }
+                    b.truncate(ph.ndims);
+                    let mut t = array.clone();
+                    while t.len() < ph.ndims {
+                        t.push(1);
+                    }
+                    t.truncate(ph.ndims);
+                    ArrayMapping::new(t).params_for(&b)
+                })
+                .collect();
+            let mut env = workload_inputs(&wl, &params_all);
+            for (phase, params) in wl.phases.iter().zip(&params_all) {
+                let mut t = array.clone();
+                while t.len() < phase.ndims {
+                    t.push(1);
+                }
+                t.truncate(phase.ndims);
+                let mapping = ArrayMapping::new(t.clone());
+                let arch = ArchConfig::with_array(t);
+                let tiled = tile_pra(phase, &mapping);
+                let schedule = find_schedule(&tiled, arch.pi).unwrap();
+                let res = simulate(phase, &arch, &schedule, params, &env);
+                println!("[{}] {} cycles", phase.name, res.cycles);
+                println!(
+                    "  utilization {:.1}%  max-hop {}  FD pressure {}",
+                    res.stats.utilization * 100.0,
+                    res.stats.max_hop,
+                    res.stats.fd_pressure
+                );
+                for (c, v) in &res.counters.mem {
+                    println!("  {c:4} accesses {v}");
+                }
+                println!(
+                    "  adds {}  muls {}  energy {:.2} pJ",
+                    res.counters.adds,
+                    res.counters.muls,
+                    res.counters.energy_pj(&Default::default())
+                );
+                if !res.violations.is_empty() {
+                    println!("  VIOLATIONS: {:?}", res.violations);
+                }
+                for (n, t) in res.outputs {
+                    env.insert(n, t);
+                }
+            }
+            Ok(0)
+        }
+        "validate" => {
+            let bounds = parse_vec(
+                flags.get("bounds").map(String::as_str).unwrap_or("8,8"),
+                ',',
+            );
+            let array = parse_vec(
+                flags.get("array").map(String::as_str).unwrap_or("2x2"),
+                'x',
+            );
+            let wls: Vec<_> = match flags.get("workload") {
+                Some(n) => vec![workloads::by_name(n)
+                    .ok_or_else(|| CliError::UnknownWorkload(n.clone()))?],
+                None => workloads::all(),
+            };
+            let mut all_ok = true;
+            for wl in wls {
+                for row in validate_workload(&wl, &bounds, &array) {
+                    let status = if row.exact_match && row.functional_ok {
+                        "EXACT"
+                    } else {
+                        all_ok = false;
+                        "MISMATCH"
+                    };
+                    println!(
+                        "{:10} {:9} N={:?} t={:?}  {status}  \
+                         E_sym {:.1} pJ  E_sim {:.1} pJ  \
+                         (eval {:.0} µs, sim {:.0} µs)",
+                        row.workload,
+                        row.phase,
+                        row.bounds,
+                        row.array,
+                        row.energy_sym_pj,
+                        row.energy_sim_pj,
+                        row.sym_eval_us,
+                        row.sim_us
+                    );
+                }
+            }
+            Ok(if all_ok { 0 } else { 1 })
+        }
+        "dse" => {
+            let name = flags
+                .get("workload")
+                .ok_or_else(|| CliError::Usage("--workload required".into()))?;
+            let wl = workloads::by_name(name)
+                .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?;
+            let bounds = parse_vec(
+                flags.get("bounds").map(String::as_str).unwrap_or("64,64"),
+                ',',
+            );
+            let max_pes: i64 = flags
+                .get("max-pes")
+                .map(|s| s.parse().expect("integer"))
+                .unwrap_or(64);
+            let pts = dse_sweep(&wl, &bounds, max_pes);
+            println!(
+                "{:>6} {:>4} {:>16} {:>14} {:>12} {:>16}",
+                "array", "PEs", "energy [pJ]", "DRAM [pJ]", "latency", "EDP"
+            );
+            for p in pts.iter().take(16) {
+                println!(
+                    "{:>3}x{:<3} {:>4} {:>16.1} {:>14.1} {:>12} {:>16.3e}",
+                    p.array.0,
+                    p.array.1,
+                    p.pes,
+                    p.energy_pj,
+                    p.dram_pj,
+                    p.latency_cycles,
+                    p.edp
+                );
+            }
+            Ok(0)
+        }
+        "figures" => {
+            let out =
+                flags.get("out").map(String::as_str).unwrap_or("results");
+            let quick = flags.contains_key("quick");
+            run_figures(Path::new(out), quick)?;
+            Ok(0)
+        }
+        other => Err(CliError::Usage(format!("unknown command {other}; {usage}"))),
+    }
+}
+
+/// Regenerate every paper table/figure into `out`.
+fn run_figures(out: &Path, quick: bool) -> Result<(), CliError> {
+    std::fs::create_dir_all(out)?;
+    // Table I.
+    let table1 = crate::energy::EnergyTable::table1_45nm().to_markdown();
+    std::fs::write(out.join("table1.md"), &table1)?;
+    println!("Table I → {}/table1.md", out.display());
+
+    // Fig. 4.
+    let sizes: &[i64] = if quick {
+        &[16, 32, 64, 128]
+    } else {
+        &[16, 32, 64, 128, 256, 512]
+    };
+    let rows = fig4_rows(sizes);
+    let mut t4 = CsvTable::new(vec![
+        "N", "symbolic_analysis_s", "symbolic_eval_s", "simulation_s", "exact",
+    ]);
+    for r in &rows {
+        t4.push(vec![
+            r.n.to_string(),
+            format!("{:.6}", r.symbolic_s),
+            format!("{:.9}", r.symbolic_eval_s),
+            format!("{:.6}", r.simulation_s),
+            r.exact.to_string(),
+        ]);
+    }
+    write_csv(&t4, out, "fig4_analysis_time")?;
+    let chart = ascii_chart(
+        "Fig. 4: analysis time vs matrix size (GESUMMV, 8x8) [log s]",
+        &[
+            (
+                "symbolic (analysis+eval)",
+                rows.iter()
+                    .map(|r| (r.n as f64, r.symbolic_s + r.symbolic_eval_s))
+                    .collect(),
+            ),
+            (
+                "simulation",
+                rows.iter().map(|r| (r.n as f64, r.simulation_s)).collect(),
+            ),
+        ],
+        64,
+        16,
+        true,
+    );
+    println!("{chart}");
+    std::fs::write(out.join("fig4.txt"), chart)?;
+
+    // Fig. 5.
+    let sizes5: &[i64] = if quick {
+        &[16, 32, 64, 128]
+    } else {
+        &[16, 32, 64, 128, 256, 512, 1024]
+    };
+    let rows5 = fig5_rows(sizes5);
+    let mut t5 = CsvTable::new(vec![
+        "N", "total_pj", "DR_pj", "IOb_pj", "FD_pj", "RD_pj", "ID_pj",
+        "OD_pj", "compute_pj", "latency_cycles",
+    ]);
+    for r in &rows5 {
+        t5.push(vec![
+            r.n.to_string(),
+            format!("{:.1}", r.total_pj),
+            format!("{:.1}", r.dram_pj),
+            format!("{:.1}", r.iob_pj),
+            format!("{:.1}", r.fd_pj),
+            format!("{:.1}", r.rd_pj),
+            format!("{:.1}", r.id_pj),
+            format!("{:.1}", r.od_pj),
+            format!("{:.1}", r.compute_pj),
+            r.latency_cycles.to_string(),
+        ]);
+    }
+    write_csv(&t5, out, "fig5_energy_scaling")?;
+    let chart5 = ascii_chart(
+        "Fig. 5: GEMM energy vs matrix size (8x8 grid) [log pJ]",
+        &[
+            ("total", rows5.iter().map(|r| (r.n as f64, r.total_pj)).collect()),
+            ("DRAM", rows5.iter().map(|r| (r.n as f64, r.dram_pj)).collect()),
+            (
+                "FD+RD",
+                rows5
+                    .iter()
+                    .map(|r| (r.n as f64, r.fd_pj + r.rd_pj))
+                    .collect(),
+            ),
+            (
+                "compute",
+                rows5.iter().map(|r| (r.n as f64, r.compute_pj)).collect(),
+            ),
+        ],
+        64,
+        16,
+        true,
+    );
+    println!("{chart5}");
+    std::fs::write(out.join("fig5.txt"), chart5)?;
+
+    // §V-A validation table.
+    let mut tv = CsvTable::new(vec![
+        "workload", "phase", "bounds", "array", "exact", "functional",
+        "E_sym_pJ", "E_sim_pJ",
+    ]);
+    for wl in workloads::all() {
+        let bounds: Vec<i64> = match wl.name.as_str() {
+            "jacobi1d" => vec![4, 12],
+            _ => vec![8, 8],
+        };
+        for row in validate_workload(&wl, &bounds, &[2, 2]) {
+            tv.push(vec![
+                row.workload.clone(),
+                row.phase.clone(),
+                format!("{:?}", row.bounds),
+                format!("{:?}", row.array),
+                row.exact_match.to_string(),
+                row.functional_ok.to_string(),
+                format!("{:.2}", row.energy_sym_pj),
+                format!("{:.2}", row.energy_sim_pj),
+            ]);
+        }
+    }
+    write_csv(&tv, out, "validation_table")?;
+    println!("validation table → {}/validation_table.csv", out.display());
+    let _ = MemoryClass::ALL; // (rendered inside the validation rows)
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flag_parsing() {
+        let f = parse_flags(&s(&["--workload", "gemm", "--report"]));
+        assert_eq!(f["workload"], "gemm");
+        assert_eq!(f["report"], "true");
+    }
+
+    #[test]
+    fn list_runs() {
+        assert_eq!(run_cli(&s(&["list"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run_cli(&s(&["frobnicate"])).is_err());
+        assert!(run_cli(&[]).is_err());
+    }
+
+    #[test]
+    fn unknown_workload_errors() {
+        let e = run_cli(&s(&["analyze", "--workload", "nope"]));
+        assert!(matches!(e, Err(CliError::UnknownWorkload(_))));
+    }
+
+    #[test]
+    fn analyze_and_validate_roundtrip() {
+        assert_eq!(
+            run_cli(&s(&[
+                "analyze", "--workload", "gesummv", "--array", "2x2",
+                "--bounds", "8,8"
+            ]))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&s(&[
+                "validate", "--workload", "gesummv", "--bounds", "8,8",
+                "--array", "2x2"
+            ]))
+            .unwrap(),
+            0
+        );
+    }
+}

@@ -1,0 +1,115 @@
+//! Design-space exploration (§V-B / §VI): because the analysis is
+//! symbolic, sweeping architectural configurations — array shapes, tile
+//! sizes — is a sequence of cheap expression evaluations, enabling the
+//! "rapid comparison of architectural configurations" the paper motivates.
+
+use crate::analysis::WorkloadAnalysis;
+use crate::energy::MemoryClass;
+use crate::pra::Workload;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    /// 2-D array shape (t0, t1).
+    pub array: (i64, i64),
+    pub pes: i64,
+    pub energy_pj: f64,
+    pub dram_pj: f64,
+    pub latency_cycles: i64,
+    pub edp: f64,
+    /// One-time symbolic analysis cost for this design point.
+    pub analysis_ms: f64,
+}
+
+/// Sweep 2-D array shapes up to `max_pes` PEs for a workload at fixed loop
+/// bounds; returns points sorted by energy-delay product.
+pub fn dse_sweep(
+    wl: &Workload,
+    base_bounds: &[i64],
+    max_pes: i64,
+) -> Vec<DsePoint> {
+    let mut out = Vec::new();
+    for t0 in 1..=max_pes {
+        for t1 in 1..=max_pes {
+            if t0 * t1 > max_pes {
+                continue;
+            }
+            // Skip shapes larger than the problem.
+            let b1 = base_bounds.get(1).copied().unwrap_or(base_bounds[0]);
+            if t0 > base_bounds[0] || t1 > b1 {
+                continue;
+            }
+            let t = vec![t0, t1];
+            let start = std::time::Instant::now();
+            let ana = WorkloadAnalysis::analyze_uniform(wl, &t);
+            let analysis_ms = start.elapsed().as_secs_f64() * 1e3;
+            let params: Vec<Vec<i64>> = ana
+                .phases
+                .iter()
+                .map(|ph| {
+                    let nd = ph.tiled.pra.ndims;
+                    let mut b = base_bounds.to_vec();
+                    while b.len() < nd {
+                        b.push(*base_bounds.last().unwrap());
+                    }
+                    b.truncate(nd);
+                    ph.tiled.mapping.params_for(&b)
+                })
+                .collect();
+            let e = ana.energy_at(&params);
+            let l = ana.latency_at(&params);
+            out.push(DsePoint {
+                array: (t0, t1),
+                pes: t0 * t1,
+                energy_pj: e.total,
+                dram_pj: e.mem_pj.get(&MemoryClass::Dram).copied().unwrap_or(0.0),
+                latency_cycles: l,
+                edp: e.total * l as f64,
+                analysis_ms,
+            });
+        }
+    }
+    out.sort_by(|a, b| a.edp.partial_cmp(&b.edp).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_finds_parallel_better_than_serial_latency() {
+        let wl = crate::workloads::by_name("gesummv").unwrap();
+        let pts = dse_sweep(&wl, &[16, 16], 8);
+        assert!(pts.len() > 3);
+        let serial = pts.iter().find(|p| p.array == (1, 1)).unwrap();
+        let best = &pts[0];
+        assert!(
+            best.latency_cycles < serial.latency_cycles,
+            "parallel mapping should cut latency: {} vs {}",
+            best.latency_cycles,
+            serial.latency_cycles
+        );
+        // Sorted by EDP.
+        for w in pts.windows(2) {
+            assert!(w[0].edp <= w[1].edp);
+        }
+    }
+
+    #[test]
+    fn energy_nearly_mapping_invariant_for_gesummv() {
+        // GESUMMV's DRAM traffic is mapping-independent; total energy
+        // varies only through FD/ID shifts — well within 20%.
+        let wl = crate::workloads::by_name("gesummv").unwrap();
+        let pts = dse_sweep(&wl, &[16, 16], 4);
+        let e0 = pts[0].energy_pj;
+        for p in &pts {
+            assert!(
+                (p.energy_pj - e0).abs() / e0 < 0.2,
+                "{:?}: {} vs {e0}",
+                p.array,
+                p.energy_pj
+            );
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Generators for the paper's figures: data rows for Fig. 4 (analysis-time
+//! scaling) and Fig. 5 (energy/latency scaling with breakdown), shared by
+//! the CLI `figures` subcommand and the `cargo bench` targets.
+
+use crate::analysis::SymbolicAnalysis;
+use crate::bench_util::time_once;
+use crate::energy::MemoryClass;
+use crate::schedule::find_schedule;
+use crate::sim::{simulate, ArchConfig};
+use crate::tiling::{tile_pra, ArrayMapping};
+use crate::workloads::{self, workload_inputs};
+
+/// One Fig. 4 data point: analysis time, symbolic vs simulation.
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub n: i64,
+    /// One-time symbolic analysis (s). Constant in `n` — reported per row
+    /// for transparency, the paper's "symbolic" series.
+    pub symbolic_s: f64,
+    /// Symbolic evaluation at this `n` (s) — the marginal per-size cost.
+    pub symbolic_eval_s: f64,
+    pub simulation_s: f64,
+    /// Exactness check: symbolic counts equal the simulator's.
+    pub exact: bool,
+}
+
+/// Fig. 4: GESUMMV on an 8×8 array across matrix sizes.
+pub fn fig4_rows(sizes: &[i64]) -> Vec<Fig4Row> {
+    let wl = workloads::by_name("gesummv").unwrap();
+    let phase = &wl.phases[0];
+    let mapping = ArrayMapping::new(vec![8, 8]);
+    // One-time symbolic analysis (measured once, reused for every size —
+    // that is the method's point).
+    let (analysis_time, ana) =
+        time_once(|| SymbolicAnalysis::analyze(phase, &mapping));
+    let mut out = Vec::new();
+    for &n in sizes {
+        let params = mapping.params_for(&[n, n]);
+        let (eval_t, sym) = time_once(|| ana.counts_at(&params));
+        // Simulation at the same configuration.
+        let mut arch = ArchConfig::with_array(vec![8, 8]);
+        arch.regs.fd = 1 << 20;
+        let tiled = tile_pra(phase, &mapping);
+        let schedule = find_schedule(&tiled, 1).unwrap();
+        let env = workload_inputs(&wl, &[params.clone()]);
+        let (sim_t, res) =
+            time_once(|| simulate(phase, &arch, &schedule, &params, &env));
+        out.push(Fig4Row {
+            n,
+            symbolic_s: analysis_time.as_secs_f64(),
+            symbolic_eval_s: eval_t.as_secs_f64(),
+            simulation_s: sim_t.as_secs_f64(),
+            exact: res.counters.diff_symbolic(&sym).is_empty(),
+        });
+    }
+    out
+}
+
+/// One Fig. 5 data point: GEMM energy breakdown + latency at matrix size n.
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub n: i64,
+    pub total_pj: f64,
+    pub dram_pj: f64,
+    pub iob_pj: f64,
+    pub fd_pj: f64,
+    pub rd_pj: f64,
+    pub id_pj: f64,
+    pub od_pj: f64,
+    pub compute_pj: f64,
+    pub latency_cycles: i64,
+}
+
+/// Fig. 5: GEMM on an 8×8 grid across matrix sizes (pure symbolic
+/// evaluation; the iteration space grows as N³ but the cost per row is
+/// constant).
+pub fn fig5_rows(sizes: &[i64]) -> Vec<Fig5Row> {
+    let wl = workloads::by_name("gemm").unwrap();
+    let phase = &wl.phases[0];
+    let mapping = ArrayMapping::new(vec![8, 8, 1]);
+    let ana = SymbolicAnalysis::analyze(phase, &mapping);
+    sizes
+        .iter()
+        .map(|&n| {
+            let params = mapping.params_for(&[n, n, n]);
+            let e = ana.energy_at(&params);
+            let g = |c: MemoryClass| e.mem_pj.get(&c).copied().unwrap_or(0.0);
+            Fig5Row {
+                n,
+                total_pj: e.total,
+                dram_pj: g(MemoryClass::Dram),
+                iob_pj: g(MemoryClass::IOb),
+                fd_pj: g(MemoryClass::Fd),
+                rd_pj: g(MemoryClass::Rd),
+                id_pj: g(MemoryClass::Id),
+                od_pj: g(MemoryClass::Od),
+                compute_pj: e.compute_pj,
+                latency_cycles: ana.latency_at(&params),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_shape_holds_at_small_scale() {
+        // Simulation time grows with N; symbolic eval stays ~flat and the
+        // counts match exactly at every size.
+        let rows = fig4_rows(&[16, 64]);
+        assert!(rows.iter().all(|r| r.exact));
+        assert!(rows[1].simulation_s > rows[0].simulation_s);
+        // symbolic evaluation is orders of magnitude below simulation at
+        // the larger size
+        assert!(rows[1].symbolic_eval_s < rows[1].simulation_s);
+    }
+
+    #[test]
+    fn fig5_dram_share_shrinks_with_n() {
+        // The paper's qualitative claim: DRAM-dominated at small N, with
+        // on-chip (FD/RD) + compute share growing as tiles grow.
+        let rows = fig5_rows(&[16, 256]);
+        let share = |r: &Fig5Row| r.dram_pj / r.total_pj;
+        assert!(share(&rows[0]) > share(&rows[1]));
+        let onchip =
+            |r: &Fig5Row| (r.fd_pj + r.rd_pj + r.compute_pj) / r.total_pj;
+        assert!(onchip(&rows[1]) > onchip(&rows[0]));
+        // Latency grows roughly as N³/64.
+        assert!(rows[1].latency_cycles > rows[0].latency_cycles * 1000);
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordinator: the command-line driver, the validation orchestrator,
+//! the design-space-exploration engine, and the figure/table generators
+//! that regenerate every artifact of the paper's evaluation section.
+
+pub mod cli;
+pub mod dse;
+pub mod figures;
+pub mod validate;
+
+pub use cli::{run_cli, CliError};
+pub use dse::{dse_sweep, DsePoint};
+pub use figures::{fig4_rows, fig5_rows, Fig4Row, Fig5Row};
+pub use validate::{validate_workload, ValidationRow};

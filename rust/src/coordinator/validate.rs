@@ -1,0 +1,139 @@
+//! Validation orchestration (§V-A): run the symbolic analysis and the
+//! cycle-accurate simulator on the same configuration and compare counts,
+//! energy, and functional outputs.
+
+use crate::analysis::SymbolicAnalysis;
+use crate::energy::MemoryClass;
+use crate::pra::Workload;
+use crate::schedule::find_schedule;
+use crate::sim::{simulate, ArchConfig};
+use crate::tiling::{tile_pra, ArrayMapping};
+use crate::workloads::{interpret, workload_inputs};
+
+/// One validation configuration's outcome.
+#[derive(Debug, Clone)]
+pub struct ValidationRow {
+    pub workload: String,
+    pub phase: String,
+    pub bounds: Vec<i64>,
+    pub array: Vec<i64>,
+    /// (class label, symbolic, simulated) triples.
+    pub counts: Vec<(String, i128, i128)>,
+    pub energy_sym_pj: f64,
+    pub energy_sim_pj: f64,
+    pub sym_eval_us: f64,
+    pub sim_us: f64,
+    pub exact_match: bool,
+    pub functional_ok: bool,
+}
+
+/// Validate one workload at given loop bounds on a given array shape.
+pub fn validate_workload(
+    wl: &Workload,
+    base_bounds: &[i64],
+    array: &[i64],
+) -> Vec<ValidationRow> {
+    let mut rows = Vec::new();
+    let params_all: Vec<Vec<i64>> = wl
+        .phases
+        .iter()
+        .map(|ph| {
+            let mut b = base_bounds.to_vec();
+            while b.len() < ph.ndims {
+                b.push(*base_bounds.last().unwrap());
+            }
+            b.truncate(ph.ndims);
+            let mut t = array.to_vec();
+            while t.len() < ph.ndims {
+                t.push(1);
+            }
+            t.truncate(ph.ndims);
+            ArrayMapping::new(t).params_for(&b)
+        })
+        .collect();
+    let mut env = workload_inputs(wl, &params_all);
+    for (phase, params) in wl.phases.iter().zip(&params_all) {
+        let mut t = array.to_vec();
+        while t.len() < phase.ndims {
+            t.push(1);
+        }
+        t.truncate(phase.ndims);
+        let mapping = ArrayMapping::new(t.clone());
+        let ana = SymbolicAnalysis::analyze(phase, &mapping);
+        let t0 = std::time::Instant::now();
+        let sym = ana.counts_at(params);
+        let sym_eval_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        let mut arch = ArchConfig::with_array(t);
+        arch.regs.fd = 1 << 20;
+        let tiled = tile_pra(phase, &mapping);
+        let schedule = find_schedule(&tiled, 1).unwrap();
+        let t1 = std::time::Instant::now();
+        let res = simulate(phase, &arch, &schedule, params, &env);
+        let sim_us = t1.elapsed().as_secs_f64() * 1e6;
+
+        let mut counts = Vec::new();
+        for &c in &MemoryClass::ALL {
+            counts.push((
+                c.label().to_string(),
+                sym.mem.get(&c).copied().unwrap_or(0),
+                res.counters.mem.get(&c).copied().unwrap_or(0),
+            ));
+        }
+        counts.push(("add".into(), sym.adds, res.counters.adds));
+        counts.push(("mul".into(), sym.muls, res.counters.muls));
+
+        let golden = interpret(phase, params, &env);
+        let functional_ok = res.violations.is_empty()
+            && res
+                .outputs
+                .iter()
+                .all(|(n, t)| t.allclose(&golden[n], 1e-4, 1e-4));
+        let exact_match = counts.iter().all(|(_, a, b)| a == b);
+        rows.push(ValidationRow {
+            workload: wl.name.clone(),
+            phase: phase.name.clone(),
+            bounds: (0..phase.ndims)
+                .map(|l| params[phase.space.n_index(l)])
+                .collect(),
+            array: mapping.t.clone(),
+            counts,
+            energy_sym_pj: ana.energy_at(params).total,
+            energy_sim_pj: res.counters.energy_pj(&ana.table),
+            sym_eval_us,
+            sim_us,
+            exact_match,
+            functional_ok,
+        });
+        for (name, tensor) in res.outputs {
+            env.insert(name, tensor);
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gesummv_row_is_exact() {
+        let wl = crate::workloads::by_name("gesummv").unwrap();
+        let rows = validate_workload(&wl, &[8, 8], &[2, 2]);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].exact_match, "{:?}", rows[0].counts);
+        assert!(rows[0].functional_ok);
+        assert!(
+            (rows[0].energy_sym_pj - rows[0].energy_sim_pj).abs()
+                < 1e-6 * rows[0].energy_sym_pj
+        );
+    }
+
+    #[test]
+    fn two_phase_workload_produces_two_rows() {
+        let wl = crate::workloads::by_name("atax").unwrap();
+        let rows = validate_workload(&wl, &[8, 8], &[2, 2]);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.exact_match && r.functional_ok));
+    }
+}

@@ -1,0 +1,193 @@
+//! The access-location classifier `L(x)` of §IV-A and the per-statement
+//! energy/access profile (Eq. 9/10).
+
+use std::collections::BTreeMap;
+
+use crate::pra::{Lhs, Op, Operand, Statement};
+use crate::tiling::TiledStmt;
+
+use super::table::{EnergyTable, MemoryClass};
+
+/// Where one read/write access lands (the five cases of the `L(x)` table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessClass {
+    /// Input variable: DRAM → I/O buffer → input register.
+    InputStream,
+    /// Output variable: output register → I/O buffer → DRAM.
+    OutputStream,
+    /// Intra-iteration value in a general-purpose register.
+    Rd,
+    /// PE-local inter-iteration value in a feedback register.
+    Fd,
+    /// Value arriving from a neighbour PE in an input register.
+    Id,
+}
+
+impl AccessClass {
+    /// Memory classes touched by one access of this kind.
+    pub fn memory_classes(&self) -> &'static [MemoryClass] {
+        match self {
+            AccessClass::InputStream => {
+                &[MemoryClass::Dram, MemoryClass::IOb, MemoryClass::Id]
+            }
+            AccessClass::OutputStream => {
+                &[MemoryClass::Dram, MemoryClass::IOb, MemoryClass::Od]
+            }
+            AccessClass::Rd => &[MemoryClass::Rd],
+            AccessClass::Fd => &[MemoryClass::Fd],
+            AccessClass::Id => &[MemoryClass::Id],
+        }
+    }
+
+    /// Energy of one access, in pJ.
+    pub fn energy(&self, table: &EnergyTable) -> f64 {
+        self.memory_classes().iter().map(|&c| table.access(c)).sum()
+    }
+}
+
+/// Classify the read of a transported variable by its displacement:
+/// `RD` if `d = 0 ∧ γ = 0`, `FD` if `d ≠ 0 ∧ γ = 0`, `ID` if `γ ≠ 0`
+/// (the last three cases of the `L(x)` table).
+pub fn classify_displacement(d: &[i64], gamma: &[i64]) -> AccessClass {
+    if gamma.iter().any(|&g| g != 0) {
+        AccessClass::Id
+    } else if d.iter().any(|&x| x != 0) {
+        AccessClass::Fd
+    } else {
+        AccessClass::Rd
+    }
+}
+
+/// Full access/energy profile of one tiled statement variant: everything
+/// Eq. 9/10 needs, per execution.
+#[derive(Debug, Clone)]
+pub struct AccessProfile {
+    /// Access class of each read (RHS operand, in order).
+    pub reads: Vec<AccessClass>,
+    /// Access class of the write (LHS).
+    pub write: AccessClass,
+    /// Operation computed (determines `E(F_q)`).
+    pub op: Op,
+    /// Memory accesses per execution, by class (reads + write combined).
+    pub mem_counts: BTreeMap<MemoryClass, u32>,
+    /// (adds, muls) per execution.
+    pub op_counts: (u32, u32),
+}
+
+impl AccessProfile {
+    /// Build the profile of a tiled statement variant (Eq. 9 for
+    /// computational statements, Eq. 10 for transports — structurally the
+    /// same sum: reads + op + write, with `E(copy) = 0`).
+    pub fn of(stmt: &Statement, tiled: &TiledStmt) -> Self {
+        let reads: Vec<AccessClass> = stmt
+            .args
+            .iter()
+            .map(|arg| match arg {
+                Operand::Tensor { .. } => AccessClass::InputStream,
+                Operand::Var { dep, .. } => {
+                    let gamma_zero = vec![0; dep.len()];
+                    let gamma = tiled
+                        .gamma
+                        .as_deref()
+                        .unwrap_or(&gamma_zero);
+                    // Only the transported (non-zero-dep) operand carries
+                    // the displacement; zero-dep reads are RD regardless.
+                    if dep.iter().any(|&x| x != 0) {
+                        classify_displacement(dep, gamma)
+                    } else {
+                        AccessClass::Rd
+                    }
+                }
+            })
+            .collect();
+        let write = match &stmt.lhs {
+            Lhs::Var(_) => AccessClass::Rd,
+            Lhs::Tensor { .. } => AccessClass::OutputStream,
+        };
+        let mut mem_counts: BTreeMap<MemoryClass, u32> = BTreeMap::new();
+        for r in reads.iter().chain(std::iter::once(&write)) {
+            for &c in r.memory_classes() {
+                *mem_counts.entry(c).or_insert(0) += 1;
+            }
+        }
+        AccessProfile {
+            reads,
+            write,
+            op: stmt.op,
+            mem_counts,
+            op_counts: EnergyTable::op_activations(stmt.op),
+        }
+    }
+
+    /// Per-execution energy `E_q` in pJ (Eq. 9/10).
+    pub fn energy(&self, table: &EnergyTable) -> f64 {
+        self.reads.iter().map(|r| r.energy(table)).sum::<f64>()
+            + table.op(self.op)
+            + self.write.energy(table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tiling::{tile_pra, ArrayMapping};
+    use crate::workloads::gesummv::gesummv;
+
+    fn profile_of(base: &str, inter: bool) -> AccessProfile {
+        let pra = gesummv();
+        let tiled = tile_pra(&pra, &ArrayMapping::new(vec![2, 2]));
+        let ts = tiled
+            .statements
+            .iter()
+            .find(|s| s.base_name == base && s.is_inter_tile() == inter)
+            .unwrap();
+        AccessProfile::of(&pra.statements[ts.stmt_index], ts)
+    }
+
+    #[test]
+    fn displacement_classification() {
+        assert_eq!(classify_displacement(&[0, 0], &[0, 0]), AccessClass::Rd);
+        assert_eq!(classify_displacement(&[0, 1], &[0, 0]), AccessClass::Fd);
+        assert_eq!(classify_displacement(&[0, 1], &[0, -1]), AccessClass::Id);
+    }
+
+    #[test]
+    fn example9_s7_energies() {
+        let t = EnergyTable::table1_45nm();
+        // S7*1 (intra): FD read + RD write = 0.47 pJ.
+        let p1 = profile_of("S7", false);
+        assert_eq!(p1.reads, vec![AccessClass::Fd]);
+        assert_eq!(p1.write, AccessClass::Rd);
+        assert!((p1.energy(&t) - 0.47).abs() < 1e-12);
+        // S7*2 (inter): ID read + RD write = 0.36 pJ.
+        let p2 = profile_of("S7", true);
+        assert_eq!(p2.reads, vec![AccessClass::Id]);
+        assert!((p2.energy(&t) - 0.36).abs() < 1e-12);
+    }
+
+    #[test]
+    fn input_and_output_streams() {
+        let t = EnergyTable::table1_45nm();
+        // S1: x = X[i1] — input stream read + RD write.
+        let p = profile_of("S1", false);
+        assert_eq!(p.reads, vec![AccessClass::InputStream]);
+        assert_eq!(p.write, AccessClass::Rd);
+        assert!((p.energy(&t) - (1280.0 + 16.0 + 0.24 + 0.12)).abs() < 1e-9);
+        // S11: Y[i0] = sA + sB — two RD reads, add, output stream write.
+        let p11 = profile_of("S11", false);
+        assert_eq!(p11.reads, vec![AccessClass::Rd, AccessClass::Rd]);
+        assert_eq!(p11.write, AccessClass::OutputStream);
+        let expect = 2.0 * 0.12 + 0.36 + (1280.0 + 16.0 + 0.12);
+        assert!((p11.energy(&t) - expect).abs() < 1e-9);
+        assert_eq!(p11.op_counts, (1, 0));
+    }
+
+    #[test]
+    fn mem_counts_aggregate() {
+        let p = profile_of("S11", false);
+        assert_eq!(p.mem_counts[&MemoryClass::Rd], 2);
+        assert_eq!(p.mem_counts[&MemoryClass::Dram], 1);
+        assert_eq!(p.mem_counts[&MemoryClass::IOb], 1);
+        assert_eq!(p.mem_counts[&MemoryClass::Od], 1);
+    }
+}

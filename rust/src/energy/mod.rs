@@ -1,0 +1,11 @@
+//! The energy model of §IV-A: Table I per-access/per-operation costs, the
+//! access-location classifier `L(x)`, and per-statement energy profiles
+//! (Eq. 9/10).
+
+pub mod classify;
+pub mod policy;
+pub mod table;
+
+pub use classify::{classify_displacement, AccessClass, AccessProfile};
+pub use policy::Policy;
+pub use table::{EnergyTable, MemoryClass};

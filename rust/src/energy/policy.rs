@@ -1,0 +1,112 @@
+//! Register-allocation / data-movement *policies*: ablations of the
+//! mapping decisions the energy model is sensitive to.
+//!
+//! The paper's §VI motivates using the symbolic analysis "for comparisons
+//! with other loop nest accelerator architectures". The policy knob
+//! reinterprets the access classification for architectures without the
+//! TCPA's register classes:
+//!
+//! * [`Policy::Tcpa`] — the paper's model (FD for PE-local reuse, ID for
+//!   neighbour data, one DRAM trip per tensor element).
+//! * [`Policy::NoFeedback`] — PEs without feedback registers: intra-tile
+//!   inter-iteration values spill to the I/O buffers and back (two IOb
+//!   accesses replace one FD access). Models register-poor CGRA tiles.
+//! * [`Policy::NoLocalReuse`] — no on-PE reuse at all: every transported
+//!   value (intra- and inter-tile) round-trips the I/O buffer, the way a
+//!   pure streaming architecture without a register hierarchy would
+//!   execute the PRA. An Eyeriss-style "no local reuse" lower baseline.
+//!
+//! Only the *energy interpretation* changes; volumes are mapping
+//! properties and stay identical — which is exactly why the symbolic
+//! volumes can be reused across policies (one analysis, many
+//! architectures).
+
+use super::classify::AccessClass;
+use super::table::{EnergyTable, MemoryClass};
+
+/// Architecture policy for interpreting access classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's TCPA register hierarchy.
+    Tcpa,
+    /// No feedback registers: FD accesses become IOb round trips.
+    NoFeedback,
+    /// No on-PE reuse: FD and neighbour-ID accesses become IOb round trips.
+    NoLocalReuse,
+}
+
+impl Policy {
+    /// All policies, for sweeps.
+    pub const ALL: [Policy; 3] =
+        [Policy::Tcpa, Policy::NoFeedback, Policy::NoLocalReuse];
+
+    /// Short label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::Tcpa => "tcpa",
+            Policy::NoFeedback => "no-fd",
+            Policy::NoLocalReuse => "no-reuse",
+        }
+    }
+
+    /// Memory classes one access of `class` touches under this policy.
+    pub fn memory_classes(&self, class: AccessClass) -> Vec<MemoryClass> {
+        // write-out + read-back + register
+        let spill =
+            || vec![MemoryClass::IOb, MemoryClass::IOb, MemoryClass::Rd];
+        match (self, class) {
+            (Policy::Tcpa, c) => c.memory_classes().to_vec(),
+            (Policy::NoFeedback, AccessClass::Fd) => spill(),
+            (Policy::NoFeedback, c) => c.memory_classes().to_vec(),
+            (Policy::NoLocalReuse, AccessClass::Fd)
+            | (Policy::NoLocalReuse, AccessClass::Id) => spill(),
+            (Policy::NoLocalReuse, c) => c.memory_classes().to_vec(),
+        }
+    }
+
+    /// Energy of one access of `class` under this policy.
+    pub fn access_energy(&self, class: AccessClass, table: &EnergyTable) -> f64 {
+        self.memory_classes(class)
+            .iter()
+            .map(|&c| table.access(c))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcpa_matches_default_classification() {
+        let t = EnergyTable::table1_45nm();
+        for c in [
+            AccessClass::InputStream,
+            AccessClass::OutputStream,
+            AccessClass::Rd,
+            AccessClass::Fd,
+            AccessClass::Id,
+        ] {
+            assert_eq!(Policy::Tcpa.access_energy(c, &t), c.energy(&t));
+        }
+    }
+
+    #[test]
+    fn spill_policies_strictly_more_expensive_for_reuse() {
+        let t = EnergyTable::table1_45nm();
+        let fd_tcpa = Policy::Tcpa.access_energy(AccessClass::Fd, &t);
+        let fd_nofd = Policy::NoFeedback.access_energy(AccessClass::Fd, &t);
+        assert!(fd_nofd > fd_tcpa * 10.0, "{fd_nofd} vs {fd_tcpa}");
+        let id_tcpa = Policy::Tcpa.access_energy(AccessClass::Id, &t);
+        let id_noreuse =
+            Policy::NoLocalReuse.access_energy(AccessClass::Id, &t);
+        assert!(id_noreuse > id_tcpa);
+        // DRAM-bound streams are policy-invariant.
+        for p in Policy::ALL {
+            assert_eq!(
+                p.access_energy(AccessClass::InputStream, &t),
+                AccessClass::InputStream.energy(&t)
+            );
+        }
+    }
+}

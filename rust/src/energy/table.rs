@@ -1,0 +1,197 @@
+//! Table I of the paper: per-access energies for the TCPA memory
+//! hierarchy and per-operation energies, 45 nm technology (Pedram et al.,
+//! "Dark Memory and Accelerator-Rich System Optimization in the Dark
+//! Silicon Era", IEEE D&T 2017).
+
+use std::fmt;
+
+use crate::pra::Op;
+
+/// The six memory classes of the processor-array memory system (§IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MemoryClass {
+    /// General-purpose register (intra-iteration dependencies).
+    Rd,
+    /// Feedback register (inter-iteration, PE-local reuse).
+    Fd,
+    /// Input register (data arriving from a neighbour PE or I/O buffer).
+    Id,
+    /// Output register (data leaving towards a neighbour PE or I/O buffer).
+    Od,
+    /// I/O buffer at the array periphery.
+    IOb,
+    /// Host DRAM (off-chip).
+    Dram,
+}
+
+impl MemoryClass {
+    /// All classes in Table-I order.
+    pub const ALL: [MemoryClass; 6] = [
+        MemoryClass::Rd,
+        MemoryClass::Fd,
+        MemoryClass::Id,
+        MemoryClass::Od,
+        MemoryClass::IOb,
+        MemoryClass::Dram,
+    ];
+
+    /// Short label as used in the paper (RD/FD/ID/OD/IOb/DR).
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemoryClass::Rd => "RD",
+            MemoryClass::Fd => "FD",
+            MemoryClass::Id => "ID",
+            MemoryClass::Od => "OD",
+            MemoryClass::IOb => "IOb",
+            MemoryClass::Dram => "DR",
+        }
+    }
+}
+
+impl fmt::Display for MemoryClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Per-access and per-operation energies in pJ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyTable {
+    /// Indexed via [`MemoryClass`] discriminant order of [`MemoryClass::ALL`].
+    pub access_pj: [f64; 6],
+    /// Energy of one addition.
+    pub add_pj: f64,
+    /// Energy of one multiplication.
+    pub mul_pj: f64,
+}
+
+impl EnergyTable {
+    /// Table I values (45 nm).
+    pub fn table1_45nm() -> Self {
+        EnergyTable {
+            access_pj: [
+                0.12,   // RD  general-purpose register
+                0.35,   // FD  feedback register
+                0.24,   // ID  input register
+                0.12,   // OD  output register
+                16.0,   // IOb I/O buffer
+                1280.0, // DR  DRAM
+            ],
+            add_pj: 0.36,
+            mul_pj: 1.24,
+        }
+    }
+
+
+    /// A uniformly scaled table for coarse technology projection (e.g.
+    /// `table1_45nm().scaled(0.3, 0.12)` approximates a 7 nm node: on-chip
+    /// access/logic energy shrinks faster than DRAM interface energy).
+    /// `onchip` scales RD/FD/ID/OD/IOb and the operations; `dram` scales
+    /// the DRAM access.
+    pub fn scaled(&self, onchip: f64, dram: f64) -> Self {
+        let mut t = self.clone();
+        for (i, e) in t.access_pj.iter_mut().enumerate() {
+            *e *= if MemoryClass::ALL[i] == MemoryClass::Dram {
+                dram
+            } else {
+                onchip
+            };
+        }
+        t.add_pj *= onchip;
+        t.mul_pj *= onchip;
+        t
+    }
+
+    /// Energy of one access to `class`, in pJ.
+    pub fn access(&self, class: MemoryClass) -> f64 {
+        let i = MemoryClass::ALL.iter().position(|&c| c == class).unwrap();
+        self.access_pj[i]
+    }
+
+    /// Energy of computing `op` once, in pJ (`E(F_q)` of Eq. 9). Copy is a
+    /// pure transport: zero compute energy. `Add3` activates the adder
+    /// twice; `Sub`/`Max` cost one adder activation.
+    pub fn op(&self, op: Op) -> f64 {
+        match op {
+            Op::Copy => 0.0,
+            Op::Add | Op::Sub | Op::Max => self.add_pj,
+            Op::Add3 => 2.0 * self.add_pj,
+            Op::Mul => self.mul_pj,
+        }
+    }
+
+    /// Number of adder / multiplier activations of `op` (for operation-
+    /// count reporting next to the memory-access counts).
+    pub fn op_activations(op: Op) -> (u32, u32) {
+        match op {
+            Op::Copy => (0, 0),
+            Op::Add | Op::Sub | Op::Max => (1, 0),
+            Op::Add3 => (2, 0),
+            Op::Mul => (0, 1),
+        }
+    }
+
+    /// Render Table I as markdown (for the `figures --table1` output).
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str("| Memory Class/Operation Type | Energy E [pJ] |\n");
+        s.push_str("|---|---|\n");
+        let names = [
+            "General-purpose register (RD)",
+            "Feedback register (FD)",
+            "Input register (ID)",
+            "Output register (OD)",
+            "I/O buffer (IOb)",
+            "DRAM (DR)",
+        ];
+        for (name, e) in names.iter().zip(self.access_pj) {
+            s.push_str(&format!("| {name} | {e} |\n"));
+        }
+        s.push_str(&format!("| Addition (add) | {} |\n", self.add_pj));
+        s.push_str(&format!("| Multiplication (mul) | {} |\n", self.mul_pj));
+        s
+    }
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        EnergyTable::table1_45nm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        let t = EnergyTable::table1_45nm();
+        assert_eq!(t.access(MemoryClass::Rd), 0.12);
+        assert_eq!(t.access(MemoryClass::Fd), 0.35);
+        assert_eq!(t.access(MemoryClass::Id), 0.24);
+        assert_eq!(t.access(MemoryClass::Od), 0.12);
+        assert_eq!(t.access(MemoryClass::IOb), 16.0);
+        assert_eq!(t.access(MemoryClass::Dram), 1280.0);
+        assert_eq!(t.op(Op::Add), 0.36);
+        assert_eq!(t.op(Op::Mul), 1.24);
+        assert_eq!(t.op(Op::Copy), 0.0);
+        assert_eq!(t.op(Op::Add3), 0.72);
+    }
+
+    #[test]
+    fn example9_statement_energies() {
+        // E(S7*1) = E(FD) + E(RD) = 0.47 pJ; E(S7*2) = E(ID) + E(RD) = 0.36.
+        let t = EnergyTable::table1_45nm();
+        let e1 = t.access(MemoryClass::Fd) + t.access(MemoryClass::Rd);
+        let e2 = t.access(MemoryClass::Id) + t.access(MemoryClass::Rd);
+        assert!((e1 - 0.47).abs() < 1e-12);
+        assert!((e2 - 0.36).abs() < 1e-12);
+    }
+
+    #[test]
+    fn markdown_has_all_rows() {
+        let md = EnergyTable::table1_45nm().to_markdown();
+        assert_eq!(md.lines().count(), 10);
+        assert!(md.contains("1280"));
+    }
+}

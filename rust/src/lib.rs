@@ -1,0 +1,47 @@
+//! # tcpa-energy
+//!
+//! Symbolic polyhedral-based energy analysis for nested loop programs
+//! mapped and scheduled on processor array accelerators (TCPAs).
+//!
+//! Reproduction of: Nirmala, Walter, Hannig, Teich, *"Symbolic
+//! Polyhedral-Based Energy Analysis for Nested Loop Programs"*, CS.AR 2026.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`polyhedral`] — parametric affine expressions, piecewise
+//!   quasi-polynomials, integer sets and both exact (enumeration) and
+//!   symbolic (parametric) lattice-point counting. This is the in-repo
+//!   substitute for ISL/Barvinok.
+//! * [`pra`] — Piecewise Linear/Regular Algorithm IR: iteration spaces,
+//!   quantified statements, dependence vectors, variable classification and
+//!   the reduced dependence graph (RDG).
+//! * [`workloads`] — PolyBench kernels expressed as PRAs plus functional
+//!   semantics used by the simulator and the golden-model check.
+//! * [`tiling`] — symbolic LSGP tiling (Eq. 3–7 of the paper).
+//! * [`schedule`] — symbolic intra/inter-tile schedule vectors and the
+//!   latency formula (Eq. 8).
+//! * [`energy`] — the per-access energy table (Table I), the access-location
+//!   classification `L(x)` and the per-statement energy (Eq. 9/10).
+//! * [`analysis`] — the paper's contribution: the end-to-end symbolic energy
+//!   analysis producing a piecewise quasi-polynomial `E_tot(N, p)` (Eq. 11).
+//! * [`sim`] — cycle-accurate TCPA simulator (the paper's baseline):
+//!   PE array, register files, interconnect, I/O buffers, DMA, counters.
+//! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts
+//!   (the L2/L1 golden numeric model) from `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — CLI driver, validation and DSE orchestration.
+//! * [`report`] — CSV / markdown / ASCII-figure emitters for the paper's
+//!   tables and figures.
+
+pub mod polyhedral;
+pub mod pra;
+pub mod workloads;
+pub mod tiling;
+pub mod schedule;
+pub mod energy;
+pub mod analysis;
+pub mod sim;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod proptest_lite;
+pub mod bench_util;

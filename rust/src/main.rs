@@ -1,0 +1,31 @@
+//! `tcpa-energy` — symbolic polyhedral energy analysis for nested loop
+//! programs on processor arrays. See `tcpa-energy --help` / README.md.
+
+use tcpa_energy::coordinator::run_cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!(
+            "tcpa-energy — symbolic energy analysis for loop nests on \
+             processor arrays\n\n\
+             USAGE:\n  tcpa-energy list\n  \
+             tcpa-energy analyze  --workload NAME --array TxT \
+             [--bounds N,N] [--report]\n  \
+             tcpa-energy simulate --workload NAME --array TxT --bounds N,N\n  \
+             tcpa-energy validate [--workload NAME] [--bounds N,N] \
+             [--array TxT]\n  \
+             tcpa-energy dse      --workload NAME --bounds N,N \
+             [--max-pes P]\n  \
+             tcpa-energy figures  [--out DIR] [--quick]"
+        );
+        return;
+    }
+    match run_cli(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! Parametric affine expressions.
+//!
+//! An [`AffineExpr`] is a linear form `c0 + Σ_i c_i · P_i` over a fixed
+//! [`ParamSpace`] (e.g. `N0, N1, p0, p1` for a 2-deep loop nest). These are
+//! the atoms of everything symbolic in this crate: loop-bound constraints,
+//! chamber guards, and the per-dimension interval bounds whose products form
+//! the piecewise quasi-polynomial volumes of §IV-C of the paper.
+
+use std::fmt;
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// Names of the symbolic parameters an analysis is parametric in.
+///
+/// By convention, a loop nest of depth `n` uses `N0..N{n-1}` (loop bounds)
+/// followed by `p0..p{n-1}` (tile sizes). The processor-array extents
+/// `t0..t{n-1}` are *fixed integers* (the paper analyzes a given array size
+/// and unfolds all `k` constraints over it, cf. footnote 1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpace {
+    names: Vec<String>,
+}
+
+impl ParamSpace {
+    /// Create a parameter space from a list of names. Names must be unique.
+    pub fn new<S: Into<String>>(names: Vec<S>) -> Self {
+        let names: Vec<String> = names.into_iter().map(Into::into).collect();
+        for (i, a) in names.iter().enumerate() {
+            for b in names.iter().skip(i + 1) {
+                assert_ne!(a, b, "duplicate parameter name {a:?}");
+            }
+        }
+        ParamSpace { names }
+    }
+
+    /// The conventional space for an `n`-deep loop nest: `N0..,p0..`.
+    pub fn loop_nest(n: usize) -> Self {
+        let mut names = Vec::with_capacity(2 * n);
+        for i in 0..n {
+            names.push(format!("N{i}"));
+        }
+        for i in 0..n {
+            names.push(format!("p{i}"));
+        }
+        ParamSpace::new(names)
+    }
+
+    /// Number of parameters.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True when the space has no parameters.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Index of the parameter called `name`.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Name of parameter `i`.
+    pub fn name(&self, i: usize) -> &str {
+        &self.names[i]
+    }
+
+    /// All names, in index order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Index of loop bound `N{dim}` in a [`ParamSpace::loop_nest`] space.
+    pub fn n_index(&self, dim: usize) -> usize {
+        self.index_of(&format!("N{dim}"))
+            .unwrap_or_else(|| panic!("no parameter N{dim}"))
+    }
+
+    /// Index of tile size `p{dim}` in a [`ParamSpace::loop_nest`] space.
+    pub fn p_index(&self, dim: usize) -> usize {
+        self.index_of(&format!("p{dim}"))
+            .unwrap_or_else(|| panic!("no parameter p{dim}"))
+    }
+}
+
+/// `konst + Σ coeffs[i] · P_i` with integer coefficients.
+///
+/// The coefficient vector always has exactly `ParamSpace::len()` entries;
+/// expressions from different spaces must not be mixed (checked by length
+/// in debug builds).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AffineExpr {
+    pub coeffs: Vec<i64>,
+    pub konst: i64,
+}
+
+impl AffineExpr {
+    /// The zero expression over a space with `nparams` parameters.
+    pub fn zero(nparams: usize) -> Self {
+        AffineExpr { coeffs: vec![0; nparams], konst: 0 }
+    }
+
+    /// A constant expression.
+    pub fn constant(nparams: usize, c: i64) -> Self {
+        AffineExpr { coeffs: vec![0; nparams], konst: c }
+    }
+
+    /// The expression `P_i` (a single parameter).
+    pub fn param(nparams: usize, i: usize) -> Self {
+        let mut coeffs = vec![0; nparams];
+        coeffs[i] = 1;
+        AffineExpr { coeffs, konst: 0 }
+    }
+
+    /// `coeff · P_i + konst`.
+    pub fn param_scaled(nparams: usize, i: usize, coeff: i64, konst: i64) -> Self {
+        let mut coeffs = vec![0; nparams];
+        coeffs[i] = coeff;
+        AffineExpr { coeffs, konst }
+    }
+
+    /// Number of parameters of the underlying space.
+    pub fn nparams(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// True when all parameter coefficients are zero.
+    pub fn is_const(&self) -> bool {
+        self.coeffs.iter().all(|&c| c == 0)
+    }
+
+    /// The constant value, if [`Self::is_const`].
+    pub fn as_const(&self) -> Option<i64> {
+        if self.is_const() {
+            Some(self.konst)
+        } else {
+            None
+        }
+    }
+
+    /// Evaluate at a concrete parameter point.
+    pub fn eval(&self, params: &[i64]) -> i64 {
+        debug_assert_eq!(params.len(), self.coeffs.len());
+        let mut acc = self.konst as i128;
+        for (c, p) in self.coeffs.iter().zip(params) {
+            acc += (*c as i128) * (*p as i128);
+        }
+        i64::try_from(acc).expect("affine evaluation overflow")
+    }
+
+    /// Add a constant in place, returning self (builder style).
+    pub fn plus(mut self, c: i64) -> Self {
+        self.konst += c;
+        self
+    }
+
+    /// Multiply all coefficients by `s`.
+    pub fn scaled(mut self, s: i64) -> Self {
+        for c in &mut self.coeffs {
+            *c *= s;
+        }
+        self.konst *= s;
+        self
+    }
+
+    /// Divide all coefficients by their (positive) gcd including the
+    /// constant; used to normalize guard constraints. Returns the gcd.
+    pub fn reduce_gcd(&mut self) -> i64 {
+        let mut g = self.konst.unsigned_abs();
+        for &c in &self.coeffs {
+            g = gcd_u64(g, c.unsigned_abs());
+        }
+        if g > 1 {
+            let g = g as i64;
+            self.konst /= g;
+            for c in &mut self.coeffs {
+                *c /= g;
+            }
+            g
+        } else {
+            1
+        }
+    }
+
+    /// Pretty-print against a parameter space.
+    pub fn display<'a>(&'a self, space: &'a ParamSpace) -> AffineDisplay<'a> {
+        AffineDisplay { expr: self, space }
+    }
+}
+
+/// Greatest common divisor of two unsigned values.
+pub fn gcd_u64(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Add for &AffineExpr {
+    type Output = AffineExpr;
+    fn add(self, rhs: &AffineExpr) -> AffineExpr {
+        debug_assert_eq!(self.coeffs.len(), rhs.coeffs.len());
+        AffineExpr {
+            coeffs: self
+                .coeffs
+                .iter()
+                .zip(&rhs.coeffs)
+                .map(|(a, b)| a + b)
+                .collect(),
+            konst: self.konst + rhs.konst,
+        }
+    }
+}
+
+impl Sub for &AffineExpr {
+    type Output = AffineExpr;
+    fn sub(self, rhs: &AffineExpr) -> AffineExpr {
+        debug_assert_eq!(self.coeffs.len(), rhs.coeffs.len());
+        AffineExpr {
+            coeffs: self
+                .coeffs
+                .iter()
+                .zip(&rhs.coeffs)
+                .map(|(a, b)| a - b)
+                .collect(),
+            konst: self.konst - rhs.konst,
+        }
+    }
+}
+
+impl Neg for &AffineExpr {
+    type Output = AffineExpr;
+    fn neg(self) -> AffineExpr {
+        AffineExpr {
+            coeffs: self.coeffs.iter().map(|c| -c).collect(),
+            konst: -self.konst,
+        }
+    }
+}
+
+impl Mul<i64> for &AffineExpr {
+    type Output = AffineExpr;
+    fn mul(self, s: i64) -> AffineExpr {
+        self.clone().scaled(s)
+    }
+}
+
+/// Helper for `{}`-formatting an [`AffineExpr`] with parameter names.
+pub struct AffineDisplay<'a> {
+    expr: &'a AffineExpr,
+    space: &'a ParamSpace,
+}
+
+impl fmt::Display for AffineDisplay<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut wrote = false;
+        for (i, &c) in self.expr.coeffs.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let name = self.space.name(i);
+            if wrote {
+                write!(f, " {} ", if c < 0 { "-" } else { "+" })?;
+            } else if c < 0 {
+                write!(f, "-")?;
+            }
+            let a = c.unsigned_abs();
+            if a == 1 {
+                write!(f, "{name}")?;
+            } else {
+                write!(f, "{a}{name}")?;
+            }
+            wrote = true;
+        }
+        let k = self.expr.konst;
+        if k != 0 || !wrote {
+            if wrote {
+                write!(f, " {} {}", if k < 0 { "-" } else { "+" }, k.abs())?;
+            } else {
+                write!(f, "{k}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space2() -> ParamSpace {
+        ParamSpace::loop_nest(1) // N0, p0
+    }
+
+    #[test]
+    fn loop_nest_space_layout() {
+        let s = ParamSpace::loop_nest(2);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.name(0), "N0");
+        assert_eq!(s.name(1), "N1");
+        assert_eq!(s.name(2), "p0");
+        assert_eq!(s.name(3), "p1");
+        assert_eq!(s.n_index(1), 1);
+        assert_eq!(s.p_index(0), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_names_rejected() {
+        ParamSpace::new(vec!["a", "a"]);
+    }
+
+    #[test]
+    fn eval_basic() {
+        let s = space2();
+        // 2*N0 - 3*p0 + 7
+        let e = &(&AffineExpr::param(s.len(), 0) * 2)
+            - &AffineExpr::param_scaled(s.len(), 1, 3, -7);
+        assert_eq!(e.eval(&[10, 4]), 2 * 10 - 3 * 4 + 7);
+    }
+
+    #[test]
+    fn arithmetic_identities() {
+        let s = space2();
+        let a = AffineExpr::param_scaled(s.len(), 0, 5, 2);
+        let b = AffineExpr::param_scaled(s.len(), 1, -1, 3);
+        let sum = &a + &b;
+        let diff = &sum - &b;
+        assert_eq!(diff, a);
+        let negneg = -&(-&a);
+        assert_eq!(negneg, a);
+    }
+
+    #[test]
+    fn const_detection() {
+        let s = space2();
+        assert!(AffineExpr::constant(s.len(), 5).is_const());
+        assert_eq!(AffineExpr::constant(s.len(), 5).as_const(), Some(5));
+        assert!(!AffineExpr::param(s.len(), 0).is_const());
+        assert_eq!(AffineExpr::param(s.len(), 0).as_const(), None);
+    }
+
+    #[test]
+    fn gcd_reduce() {
+        let s = space2();
+        let mut e = AffineExpr::param_scaled(s.len(), 0, 6, -9);
+        assert_eq!(e.reduce_gcd(), 3);
+        assert_eq!(e, AffineExpr::param_scaled(s.len(), 0, 2, -3));
+        // gcd of zero expr leaves it untouched
+        let mut z = AffineExpr::zero(s.len());
+        assert_eq!(z.reduce_gcd(), 1);
+        assert_eq!(z, AffineExpr::zero(s.len()));
+    }
+
+    #[test]
+    fn display_forms() {
+        let s = ParamSpace::loop_nest(2);
+        let n = s.len();
+        let e = AffineExpr::param_scaled(n, 0, 2, -4); // 2N0 - 4
+        assert_eq!(format!("{}", e.display(&s)), "2N0 - 4");
+        let e2 = -&AffineExpr::param(n, 3); // -p1
+        assert_eq!(format!("{}", e2.display(&s)), "-p1");
+        let z = AffineExpr::zero(n);
+        assert_eq!(format!("{}", z.display(&s)), "0");
+        let c = AffineExpr::constant(n, -3);
+        assert_eq!(format!("{}", c.display(&s)), "-3");
+    }
+}

@@ -1,0 +1,391 @@
+//! Chamber guards: conjunctions of affine constraints over the parameters.
+//!
+//! The symbolic volume of a tiled statement space is piecewise polynomial:
+//! each piece is valid on a *chamber* of the parameter space described by a
+//! [`Guard`] — a conjunction of `expr ≥ 0` constraints (cf. the case
+//! conditions like `2p1 < N1` in Example 9 of the paper). Feasibility and
+//! redundancy of guards are decided by rational Fourier–Motzkin elimination,
+//! which is conservative in the right direction: a rationally infeasible
+//! system has no integer points either.
+
+use std::fmt;
+
+use super::expr::{gcd_u64, AffineExpr, ParamSpace};
+
+/// A single constraint `expr ≥ 0` over the parameters.
+///
+/// Constraints are kept gcd-normalized so syntactic deduplication works.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Constraint(pub AffineExpr);
+
+impl Constraint {
+    /// `expr ≥ 0`, normalized.
+    pub fn ge0(mut expr: AffineExpr) -> Self {
+        // Integer tightening: for a ≥ 0 constraint we may divide the
+        // parameter coefficients by their gcd g and floor the constant:
+        // g·x + k ≥ 0  ⟺  x ≥ -k/g  ⟺  x ≥ ceil(-k/g)  ⟺  x + floor(k/g) ≥ 0.
+        let g = {
+            let mut g: u64 = 0;
+            for &c in &expr.coeffs {
+                g = gcd_u64(g, c.unsigned_abs());
+            }
+            g
+        };
+        if g > 1 {
+            let g = g as i64;
+            for c in &mut expr.coeffs {
+                *c /= g;
+            }
+            expr.konst = expr.konst.div_euclid(g);
+        }
+        Constraint(expr)
+    }
+
+    /// `a ≥ b`, i.e. `a - b ≥ 0`.
+    pub fn ge(a: &AffineExpr, b: &AffineExpr) -> Self {
+        Constraint::ge0(a - b)
+    }
+
+    /// `a > b` over integers, i.e. `a - b - 1 ≥ 0`.
+    pub fn gt(a: &AffineExpr, b: &AffineExpr) -> Self {
+        Constraint::ge0((a - b).plus(-1))
+    }
+
+    /// `a ≤ b`.
+    pub fn le(a: &AffineExpr, b: &AffineExpr) -> Self {
+        Constraint::ge0(b - a)
+    }
+
+    /// `a < b` over integers.
+    pub fn lt(a: &AffineExpr, b: &AffineExpr) -> Self {
+        Constraint::ge0((b - a).plus(-1))
+    }
+
+    /// The negation `¬(expr ≥ 0)` = `-expr - 1 ≥ 0` (integer complement).
+    pub fn negated(&self) -> Self {
+        Constraint::ge0((-&self.0).plus(-1))
+    }
+
+    /// True / false when the constraint is constant.
+    pub fn as_const(&self) -> Option<bool> {
+        self.0.as_const().map(|c| c >= 0)
+    }
+
+    /// Evaluate at a concrete parameter point.
+    pub fn holds(&self, params: &[i64]) -> bool {
+        self.0.eval(params) >= 0
+    }
+
+    /// Pretty-print as `expr >= 0` with parameter names.
+    pub fn display<'a>(&'a self, space: &'a ParamSpace) -> ConstraintDisplay<'a> {
+        ConstraintDisplay { c: self, space }
+    }
+}
+
+/// Formatting helper for [`Constraint`].
+pub struct ConstraintDisplay<'a> {
+    c: &'a Constraint,
+    space: &'a ParamSpace,
+}
+
+impl fmt::Display for ConstraintDisplay<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} >= 0", self.c.0.display(self.space))
+    }
+}
+
+/// A conjunction of constraints describing a parameter-space chamber.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct Guard {
+    /// Sorted, deduplicated constraint list (normal form).
+    pub constraints: Vec<Constraint>,
+}
+
+impl Guard {
+    /// The trivially-true guard.
+    pub fn always() -> Self {
+        Guard { constraints: Vec::new() }
+    }
+
+    /// Build from constraints, normalizing.
+    pub fn new(mut constraints: Vec<Constraint>) -> Self {
+        constraints.retain(|c| c.as_const() != Some(true));
+        constraints.sort();
+        constraints.dedup();
+        Guard { constraints }
+    }
+
+    /// Conjunction with one more constraint.
+    pub fn and(&self, c: Constraint) -> Guard {
+        let mut cs = self.constraints.clone();
+        cs.push(c);
+        Guard::new(cs)
+    }
+
+    /// Conjunction of two guards.
+    pub fn and_guard(&self, other: &Guard) -> Guard {
+        let mut cs = self.constraints.clone();
+        cs.extend(other.constraints.iter().cloned());
+        Guard::new(cs)
+    }
+
+    /// Contains a syntactically-false constraint?
+    pub fn has_false(&self) -> bool {
+        self.constraints.iter().any(|c| c.as_const() == Some(false))
+    }
+
+    /// Evaluate at a concrete parameter point.
+    pub fn holds(&self, params: &[i64]) -> bool {
+        self.constraints.iter().all(|c| c.holds(params))
+    }
+
+    /// Rational feasibility via Fourier–Motzkin. `false` means *certainly*
+    /// empty (also over the integers); `true` means rationally non-empty.
+    pub fn feasible(&self) -> bool {
+        if self.has_false() {
+            return false;
+        }
+        fm_feasible(&self.constraints)
+    }
+
+    /// Remove constraints implied by the rest (within `context`), producing
+    /// a minimal readable guard. A constraint `c` is redundant iff
+    /// `rest ∧ context ∧ ¬c` is infeasible.
+    pub fn simplified(&self, context: &Guard) -> Guard {
+        let mut kept: Vec<Constraint> = self.constraints.clone();
+        let mut i = 0;
+        while i < kept.len() {
+            let c = kept[i].clone();
+            let mut probe: Vec<Constraint> = Vec::with_capacity(
+                kept.len() + context.constraints.len(),
+            );
+            probe.extend(kept.iter().enumerate().filter(|(j, _)| *j != i).map(|(_, x)| x.clone()));
+            probe.extend(context.constraints.iter().cloned());
+            probe.push(c.negated());
+            if !fm_feasible(&probe) {
+                kept.remove(i); // implied: drop
+            } else {
+                i += 1;
+            }
+        }
+        Guard::new(kept)
+    }
+
+    /// Pretty-print as ` a ∧ b ∧ …` using `<=`/`<`-style inequalities.
+    pub fn display<'a>(&'a self, space: &'a ParamSpace) -> GuardDisplay<'a> {
+        GuardDisplay { g: self, space }
+    }
+}
+
+/// Formatting helper for [`Guard`].
+pub struct GuardDisplay<'a> {
+    g: &'a Guard,
+    space: &'a ParamSpace,
+}
+
+impl fmt::Display for GuardDisplay<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.g.constraints.is_empty() {
+            return write!(f, "true");
+        }
+        for (i, c) in self.g.constraints.iter().enumerate() {
+            if i > 0 {
+                write!(f, " and ")?;
+            }
+            write!(f, "{}", c.display(self.space))?;
+        }
+        Ok(())
+    }
+}
+
+/// Rational feasibility of `{x : e_i(x) ≥ 0}` by Fourier–Motzkin
+/// elimination with i128 arithmetic and gcd reduction at every step.
+fn fm_feasible(constraints: &[Constraint]) -> bool {
+    if constraints.is_empty() {
+        return true;
+    }
+    let nparams = constraints[0].0.nparams();
+    // Represent each constraint as (coeffs: Vec<i128>, konst: i128).
+    let mut sys: Vec<(Vec<i128>, i128)> = constraints
+        .iter()
+        .map(|c| {
+            (
+                c.0.coeffs.iter().map(|&x| x as i128).collect(),
+                c.0.konst as i128,
+            )
+        })
+        .collect();
+
+    for var in 0..nparams {
+        let mut lowers: Vec<(Vec<i128>, i128)> = Vec::new(); // coeff > 0
+        let mut uppers: Vec<(Vec<i128>, i128)> = Vec::new(); // coeff < 0
+        let mut rest: Vec<(Vec<i128>, i128)> = Vec::new();
+        for (c, k) in sys.drain(..) {
+            match c[var].signum() {
+                1 => lowers.push((c, k)),
+                -1 => uppers.push((c, k)),
+                _ => rest.push((c, k)),
+            }
+        }
+        // Combine every (lower, upper) pair to eliminate `var`.
+        for (lc, lk) in &lowers {
+            for (uc, uk) in &uppers {
+                let a = lc[var]; // > 0
+                let b = -uc[var]; // > 0
+                // b·lower + a·upper  eliminates var.
+                let mut nc: Vec<i128> = (0..nparams)
+                    .map(|i| b * lc[i] + a * uc[i])
+                    .collect();
+                let mut nk = b * lk + a * uk;
+                debug_assert_eq!(nc[var], 0);
+                // gcd-reduce to keep numbers small
+                let mut g: u128 = nk.unsigned_abs();
+                for &x in &nc {
+                    g = gcd_u128(g, x.unsigned_abs());
+                }
+                if g > 1 {
+                    let g = g as i128;
+                    nk /= g;
+                    for x in &mut nc {
+                        *x /= g;
+                    }
+                }
+                if nc.iter().all(|&x| x == 0) {
+                    if nk < 0 {
+                        return false; // 0 ≥ positive: contradiction
+                    }
+                } else {
+                    rest.push((nc, nk));
+                }
+            }
+        }
+        // Dedup to curb FM blowup.
+        rest.sort();
+        rest.dedup();
+        sys = rest;
+        if sys.is_empty() {
+            return true;
+        }
+    }
+    // All variables eliminated: remaining constraints are constants.
+    sys.iter().all(|(_, k)| *k >= 0)
+}
+
+fn gcd_u128(mut a: u128, mut b: u128) -> u128 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp() -> ParamSpace {
+        ParamSpace::loop_nest(1) // N0, p0
+    }
+
+    fn n0(s: &ParamSpace) -> AffineExpr {
+        AffineExpr::param(s.len(), 0)
+    }
+    fn p0(s: &ParamSpace) -> AffineExpr {
+        AffineExpr::param(s.len(), 1)
+    }
+    fn k(s: &ParamSpace, c: i64) -> AffineExpr {
+        AffineExpr::constant(s.len(), c)
+    }
+
+    #[test]
+    fn constraint_relations() {
+        let s = sp();
+        // N0 > p0 at (5,3): 5-3-1 = 1 >= 0 holds
+        assert!(Constraint::gt(&n0(&s), &p0(&s)).holds(&[5, 3]));
+        assert!(!Constraint::gt(&n0(&s), &p0(&s)).holds(&[3, 3]));
+        assert!(Constraint::le(&p0(&s), &n0(&s)).holds(&[3, 3]));
+        assert!(Constraint::lt(&p0(&s), &n0(&s)).holds(&[4, 3]));
+    }
+
+    #[test]
+    fn negation_is_integer_complement() {
+        let s = sp();
+        let c = Constraint::ge(&n0(&s), &k(&s, 5)); // N0 >= 5
+        let nc = c.negated(); // N0 <= 4
+        for v in 0..10 {
+            assert_eq!(c.holds(&[v, 0]), !nc.holds(&[v, 0]), "v={v}");
+        }
+    }
+
+    #[test]
+    fn guard_normalization_dedups() {
+        let s = sp();
+        let c = Constraint::ge(&n0(&s), &k(&s, 1));
+        let g = Guard::new(vec![c.clone(), c.clone(), Constraint::ge0(k(&s, 7))]);
+        // constant-true dropped, duplicate removed
+        assert_eq!(g.constraints.len(), 1);
+    }
+
+    #[test]
+    fn feasibility_basic() {
+        let s = sp();
+        // N0 >= 5 and N0 <= 3 -> infeasible
+        let g = Guard::new(vec![
+            Constraint::ge(&n0(&s), &k(&s, 5)),
+            Constraint::le(&n0(&s), &k(&s, 3)),
+        ]);
+        assert!(!g.feasible());
+        // N0 >= 5 and N0 <= 7 -> feasible
+        let g2 = Guard::new(vec![
+            Constraint::ge(&n0(&s), &k(&s, 5)),
+            Constraint::le(&n0(&s), &k(&s, 7)),
+        ]);
+        assert!(g2.feasible());
+    }
+
+    #[test]
+    fn feasibility_coupled() {
+        let s = sp();
+        // p0 >= 1, N0 >= 2*p0, N0 <= p0 -> infeasible (needs FM coupling)
+        let two_p0 = &p0(&s) * 2;
+        let g = Guard::new(vec![
+            Constraint::ge(&p0(&s), &k(&s, 1)),
+            Constraint::ge(&n0(&s), &two_p0),
+            Constraint::le(&n0(&s), &p0(&s)),
+        ]);
+        assert!(!g.feasible());
+    }
+
+    #[test]
+    fn integer_tightening_in_ge0() {
+        let s = sp();
+        // 2*N0 - 3 >= 0  ⟺ N0 >= 1.5 ⟺ N0 >= 2 over Z: tightened to N0 - 2 >= 0
+        let c = Constraint::ge0(AffineExpr::param_scaled(s.len(), 0, 2, -3));
+        assert!(!c.holds(&[1, 0]));
+        assert!(c.holds(&[2, 0]));
+        assert_eq!(c.0, AffineExpr::param_scaled(s.len(), 0, 1, -2));
+    }
+
+    #[test]
+    fn simplify_drops_implied() {
+        let s = sp();
+        // context: p0 >= 1. guard: N0 >= 2p0 and N0 >= p0 (latter implied).
+        let ctx = Guard::new(vec![Constraint::ge(&p0(&s), &k(&s, 1))]);
+        let g = Guard::new(vec![
+            Constraint::ge(&n0(&s), &(&p0(&s) * 2)),
+            Constraint::ge(&n0(&s), &p0(&s)),
+        ]);
+        let simp = g.simplified(&ctx);
+        assert_eq!(simp.constraints.len(), 1);
+        assert_eq!(simp.constraints[0], Constraint::ge(&n0(&s), &(&p0(&s) * 2)));
+    }
+
+    #[test]
+    fn guard_display() {
+        let s = sp();
+        let g = Guard::new(vec![Constraint::ge(&n0(&s), &k(&s, 1))]);
+        assert_eq!(format!("{}", g.display(&s)), "N0 - 1 >= 0");
+        assert_eq!(format!("{}", Guard::always().display(&s)), "true");
+    }
+}

@@ -1,0 +1,19 @@
+//! Parametric polyhedral substrate: affine expressions, polynomials,
+//! chamber guards, tiled integer sets, and exact + symbolic lattice-point
+//! counting (the in-repo ISL/Barvinok substitute — see DESIGN.md §4).
+
+pub mod count;
+pub mod expr;
+pub mod guard;
+pub mod piecewise;
+pub mod poly;
+pub mod set;
+pub mod symbolic;
+
+pub use count::{count_bruteforce, count_concrete};
+pub use expr::{AffineExpr, ParamSpace};
+pub use guard::{Constraint, Guard};
+pub use piecewise::{GuardedSum, PiecewiseQPoly};
+pub use poly::Poly;
+pub use set::{k_grid, DimBounds, SetConstraint, SetError, TiledSet, UnfoldedCell};
+pub use symbolic::{count_symbolic, SymbolicOptions};

@@ -1,0 +1,390 @@
+//! Piecewise quasi-polynomials over parameter chambers.
+//!
+//! Two representations are used:
+//!
+//! * [`GuardedSum`] — a *sum* of guarded polynomials: the value at a
+//!   parameter point is the sum of all pieces whose guard holds. This is
+//!   what the symbolic counter naturally produces (one batch of pieces per
+//!   unfolded processor index `k`) and is the cheap-to-evaluate form.
+//! * [`PiecewiseQPoly`] — a *disjoint case expression*, exactly the shape
+//!   the paper prints in Example 9 (`4p0(p1-1) if …, 2N0(p1-1) if …, …`).
+//!   Obtained from a [`GuardedSum`] by chamber decomposition.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::expr::ParamSpace;
+use super::guard::{Constraint, Guard};
+use super::poly::Poly;
+
+/// Additive collection of guarded polynomials: `value(x) = Σ {poly_i(x) :
+/// guard_i(x) holds}`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct GuardedSum {
+    nparams: usize,
+    pub pieces: Vec<(Guard, Poly)>,
+}
+
+impl GuardedSum {
+    /// The zero sum.
+    pub fn zero(nparams: usize) -> Self {
+        GuardedSum { nparams, pieces: Vec::new() }
+    }
+
+    /// A single unconditional polynomial.
+    pub fn unconditional(poly: Poly) -> Self {
+        let nparams = poly.nparams();
+        GuardedSum { nparams, pieces: vec![(Guard::always(), poly)] }
+    }
+
+    /// Number of parameters.
+    pub fn nparams(&self) -> usize {
+        self.nparams
+    }
+
+    /// Add one guarded piece (dropping zero polynomials and infeasible
+    /// guards early).
+    pub fn push(&mut self, guard: Guard, poly: Poly) {
+        if poly.is_zero() || guard.has_false() {
+            return;
+        }
+        self.pieces.push((guard, poly));
+    }
+
+    /// Merge pieces with *identical guards* (cheap syntactic compaction —
+    /// the symbolic counter benefits a lot because many `k`-cells produce
+    /// the same chamber conditions).
+    pub fn compact(&mut self) {
+        // Measured in §Perf: BTreeMap accumulation beats a HashMap variant
+        // here (guard comparison is cheaper than hashing the full
+        // constraint vectors at these sizes).
+        let mut by_guard: BTreeMap<Guard, Poly> = BTreeMap::new();
+        for (g, p) in self.pieces.drain(..) {
+            match by_guard.get_mut(&g) {
+                Some(acc) => {
+                    *acc = acc.add(&p);
+                }
+                None => {
+                    by_guard.insert(g, p);
+                }
+            }
+        }
+        self.pieces = by_guard
+            .into_iter()
+            .filter(|(_, p)| !p.is_zero())
+            .collect();
+    }
+
+    /// Sum of another guarded sum into this one.
+    pub fn add_assign(&mut self, other: &GuardedSum) {
+        debug_assert_eq!(self.nparams, other.nparams);
+        self.pieces.extend(other.pieces.iter().cloned());
+    }
+
+    /// Scale every piece by an integer factor.
+    pub fn scale(&self, c: i128) -> GuardedSum {
+        GuardedSum {
+            nparams: self.nparams,
+            pieces: self
+                .pieces
+                .iter()
+                .map(|(g, p)| (g.clone(), p.scale(c)))
+                .collect(),
+        }
+    }
+
+    /// Evaluate at a concrete parameter point. O(#pieces).
+    pub fn eval(&self, params: &[i64]) -> i128 {
+        let mut acc: i128 = 0;
+        for (g, p) in &self.pieces {
+            if g.holds(params) {
+                acc += p.eval(params);
+            }
+        }
+        acc
+    }
+
+    /// All distinct atomic constraints appearing in any guard.
+    fn atoms(&self) -> Vec<Constraint> {
+        let mut atoms: Vec<Constraint> = self
+            .pieces
+            .iter()
+            .flat_map(|(g, _)| g.constraints.iter().cloned())
+            .collect();
+        atoms.sort();
+        atoms.dedup();
+        atoms
+    }
+
+    /// Disjoint chamber decomposition relative to a `context` guard (the
+    /// global assumptions, e.g. `p_l ≥ 1`, `N_l ≥ 1`, array-size coupling).
+    ///
+    /// Splits the parameter space recursively on each atomic constraint and
+    /// sums the polynomials of satisfied pieces per leaf chamber. Exact but
+    /// worst-case exponential in the number of atoms; `max_chambers` caps
+    /// the output (returns `None` if exceeded — callers fall back to the
+    /// additive form, which is always exact for evaluation).
+    pub fn disjointify(
+        &self,
+        context: &Guard,
+        max_chambers: usize,
+    ) -> Option<PiecewiseQPoly> {
+        let atoms = self.atoms();
+        let mut out: Vec<(Guard, Poly)> = Vec::new();
+        // Worklist of (chamber, atom index, active piece indices).
+        let all: Vec<usize> = (0..self.pieces.len()).collect();
+        let mut stack: Vec<(Guard, usize, Vec<usize>)> =
+            vec![(context.clone(), 0, all)];
+        while let Some((chamber, ai, active)) = stack.pop() {
+            if active.is_empty() {
+                continue; // zero region: omitted (the final `otherwise 0`)
+            }
+            // Find the next atom that is *undecided* for some active piece.
+            let mut next = None;
+            for idx in ai..atoms.len() {
+                let a = &atoms[idx];
+                let relevant = active.iter().any(|&pi| {
+                    self.pieces[pi].0.constraints.contains(a)
+                });
+                if relevant {
+                    // Is it already decided by the chamber?
+                    let with_true = chamber.and(a.clone());
+                    let with_false = chamber.and(a.negated());
+                    let t = with_true.feasible();
+                    let f = with_false.feasible();
+                    if t && f {
+                        next = Some((idx, with_true, with_false));
+                        break;
+                    }
+                    // decided: filter pieces that require the false branch
+                    if t && !f {
+                        continue; // always true here, nothing to split
+                    }
+                    if !t && f {
+                        continue;
+                    }
+                    // both infeasible: chamber itself empty
+                    next = None;
+                    break;
+                }
+            }
+            match next {
+                Some((idx, with_true, with_false)) => {
+                    let a = &atoms[idx];
+                    // True branch: pieces keep; false branch: drop pieces
+                    // whose guard contains `a`.
+                    let keep_true = active.clone();
+                    let keep_false: Vec<usize> = active
+                        .iter()
+                        .copied()
+                        .filter(|&pi| !self.pieces[pi].0.constraints.contains(a))
+                        .collect();
+                    stack.push((with_true, idx + 1, keep_true));
+                    stack.push((with_false, idx + 1, keep_false));
+                    if stack.len() + out.len() > max_chambers * 4 {
+                        return None;
+                    }
+                }
+                None => {
+                    if !chamber.feasible() {
+                        continue;
+                    }
+                    // Leaf: every remaining active piece whose guard is
+                    // implied by the chamber contributes.
+                    let mut acc = Poly::zero(self.nparams);
+                    for &pi in &active {
+                        let (g, p) = &self.pieces[pi];
+                        // All atoms of g must be satisfied in this chamber:
+                        // they are, unless the chamber makes one infeasible.
+                        let ok = g.constraints.iter().all(|c| {
+                            !chamber.and(c.negated()).feasible()
+                                || chamber.constraints.contains(c)
+                        });
+                        if ok {
+                            acc = acc.add(p);
+                        }
+                    }
+                    if !acc.is_zero() {
+                        out.push((chamber.simplified(context), acc));
+                        if out.len() > max_chambers {
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+        // Merge leaves with identical polynomials? Keep simple: group them.
+        Some(PiecewiseQPoly { nparams: self.nparams, cases: out })
+    }
+}
+
+/// A disjoint case expression: at most one case applies per parameter
+/// point (within the decomposition context); value is 0 otherwise.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PiecewiseQPoly {
+    nparams: usize,
+    pub cases: Vec<(Guard, Poly)>,
+}
+
+impl PiecewiseQPoly {
+    /// Evaluate (sums all matching cases; disjointness makes ≤1 match).
+    pub fn eval(&self, params: &[i64]) -> i128 {
+        self.cases
+            .iter()
+            .filter(|(g, _)| g.holds(params))
+            .map(|(_, p)| p.eval(params))
+            .sum()
+    }
+
+    /// Number of cases.
+    pub fn len(&self) -> usize {
+        self.cases.len()
+    }
+
+    /// True when there are no cases (identically zero).
+    pub fn is_empty(&self) -> bool {
+        self.cases.is_empty()
+    }
+
+    /// Pretty-print in the paper's Example-9 style.
+    pub fn display<'a>(&'a self, space: &'a ParamSpace) -> PiecewiseDisplay<'a> {
+        PiecewiseDisplay { pw: self, space }
+    }
+}
+
+/// Formatting helper for [`PiecewiseQPoly`].
+pub struct PiecewiseDisplay<'a> {
+    pw: &'a PiecewiseQPoly,
+    space: &'a ParamSpace,
+}
+
+impl fmt::Display for PiecewiseDisplay<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.pw.cases.is_empty() {
+            return write!(f, "0");
+        }
+        writeln!(f, "{{")?;
+        for (g, p) in &self.pw.cases {
+            writeln!(
+                f,
+                "  {}  if {}",
+                p.display(self.space),
+                g.display(self.space)
+            )?;
+        }
+        writeln!(f, "  0  otherwise")?;
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::expr::AffineExpr;
+
+    fn sp() -> ParamSpace {
+        ParamSpace::loop_nest(1) // N0 p0
+    }
+    fn n0(s: &ParamSpace) -> AffineExpr {
+        AffineExpr::param(s.len(), 0)
+    }
+    fn p0(s: &ParamSpace) -> AffineExpr {
+        AffineExpr::param(s.len(), 1)
+    }
+    fn cst(s: &ParamSpace, c: i64) -> AffineExpr {
+        AffineExpr::constant(s.len(), c)
+    }
+
+    #[test]
+    fn guarded_sum_eval_additive() {
+        let s = sp();
+        let mut gs = GuardedSum::zero(s.len());
+        // piece 1: N0 (if N0 >= 5)
+        gs.push(
+            Guard::new(vec![Constraint::ge(&n0(&s), &cst(&s, 5))]),
+            Poly::from_affine(&n0(&s)),
+        );
+        // piece 2: 2 (always)
+        gs.push(Guard::always(), Poly::constant(s.len(), 2));
+        assert_eq!(gs.eval(&[3, 0]), 2);
+        assert_eq!(gs.eval(&[7, 0]), 9);
+    }
+
+    #[test]
+    fn push_drops_trivial() {
+        let s = sp();
+        let mut gs = GuardedSum::zero(s.len());
+        gs.push(Guard::always(), Poly::zero(s.len()));
+        let false_g = Guard::new(vec![Constraint::ge0(cst(&s, -1))]);
+        gs.push(false_g, Poly::constant(s.len(), 10));
+        assert!(gs.pieces.is_empty());
+    }
+
+    #[test]
+    fn compact_merges_equal_guards() {
+        let s = sp();
+        let g = Guard::new(vec![Constraint::ge(&n0(&s), &cst(&s, 1))]);
+        let mut gs = GuardedSum::zero(s.len());
+        gs.push(g.clone(), Poly::constant(s.len(), 3));
+        gs.push(g.clone(), Poly::constant(s.len(), 4));
+        gs.compact();
+        assert_eq!(gs.pieces.len(), 1);
+        assert_eq!(gs.eval(&[1, 0]), 7);
+    }
+
+    #[test]
+    fn compact_removes_cancelled() {
+        let s = sp();
+        let g = Guard::always();
+        let mut gs = GuardedSum::zero(s.len());
+        gs.push(g.clone(), Poly::constant(s.len(), 3));
+        gs.push(g.clone(), Poly::constant(s.len(), -3));
+        gs.compact();
+        assert!(gs.pieces.is_empty());
+    }
+
+    #[test]
+    fn disjointify_matches_eval() {
+        let s = sp();
+        let ctx = Guard::new(vec![
+            Constraint::ge(&n0(&s), &cst(&s, 1)),
+            Constraint::ge(&p0(&s), &cst(&s, 1)),
+        ]);
+        let mut gs = GuardedSum::zero(s.len());
+        // min(N0, 2p0)-style split: piece A if N0 <= 2p0, piece B if N0 > 2p0
+        let two_p0 = &p0(&s) * 2;
+        gs.push(
+            Guard::new(vec![Constraint::le(&n0(&s), &two_p0)]),
+            Poly::from_affine(&n0(&s)),
+        );
+        gs.push(
+            Guard::new(vec![Constraint::gt(&n0(&s), &two_p0)]),
+            Poly::from_affine(&two_p0),
+        );
+        // plus an unconditional +1
+        gs.push(Guard::always(), Poly::constant(s.len(), 1));
+        let pw = gs.disjointify(&ctx, 64).expect("small case count");
+        for n in 1..10 {
+            for p in 1..6 {
+                assert_eq!(pw.eval(&[n, p]), gs.eval(&[n, p]), "N0={n} p0={p}");
+            }
+        }
+        // Disjoint: every point in context satisfied by at most one case.
+        for n in 1..10 {
+            for p in 1..6 {
+                let matches =
+                    pw.cases.iter().filter(|(g, _)| g.holds(&[n, p])).count();
+                assert!(matches <= 1, "N0={n} p0={p} matched {matches}");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_distributes() {
+        let s = sp();
+        let mut gs = GuardedSum::zero(s.len());
+        gs.push(Guard::always(), Poly::from_affine(&n0(&s)));
+        let doubled = gs.scale(2);
+        assert_eq!(doubled.eval(&[5, 0]), 10);
+    }
+}

@@ -1,0 +1,294 @@
+//! Multivariate polynomials over the symbolic parameters.
+//!
+//! Volumes of the tiled statement spaces are products of per-dimension
+//! interval lengths, each affine in `(N, p)` — so volumes are polynomials of
+//! degree at most the loop depth per chamber (quasi-polynomial across
+//! chambers, see [`super::piecewise`]). Coefficients are `i128`: products of
+//! a few `i64` affine forms stay comfortably inside.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::expr::{AffineExpr, ParamSpace};
+
+/// Exponent vector: `expo[i]` is the power of parameter `P_i`.
+pub type Expo = Vec<u32>;
+
+/// A multivariate polynomial `Σ coeff · Π P_i^{e_i}` over a [`ParamSpace`].
+///
+/// Stored sparsely as a map from exponent vector to coefficient; zero
+/// coefficients are never stored (normal form), so `==` is structural
+/// equality of polynomials.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Poly {
+    nparams: usize,
+    terms: BTreeMap<Expo, i128>,
+}
+
+impl Poly {
+    /// The zero polynomial.
+    pub fn zero(nparams: usize) -> Self {
+        Poly { nparams, terms: BTreeMap::new() }
+    }
+
+    /// A constant polynomial.
+    pub fn constant(nparams: usize, c: i128) -> Self {
+        let mut p = Poly::zero(nparams);
+        if c != 0 {
+            p.terms.insert(vec![0; nparams], c);
+        }
+        p
+    }
+
+    /// Lift an affine expression to a polynomial.
+    pub fn from_affine(e: &AffineExpr) -> Self {
+        let n = e.nparams();
+        let mut p = Poly::zero(n);
+        if e.konst != 0 {
+            p.terms.insert(vec![0; n], e.konst as i128);
+        }
+        for (i, &c) in e.coeffs.iter().enumerate() {
+            if c != 0 {
+                let mut ex = vec![0; n];
+                ex[i] = 1;
+                p.terms.insert(ex, c as i128);
+            }
+        }
+        p
+    }
+
+    /// Number of parameters of the underlying space.
+    pub fn nparams(&self) -> usize {
+        self.nparams
+    }
+
+    /// True when this is the zero polynomial.
+    pub fn is_zero(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// The constant value, when the polynomial has degree 0.
+    pub fn as_const(&self) -> Option<i128> {
+        match self.terms.len() {
+            0 => Some(0),
+            1 => {
+                let (e, &c) = self.terms.iter().next().unwrap();
+                if e.iter().all(|&x| x == 0) {
+                    Some(c)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Total degree (0 for the zero polynomial).
+    pub fn degree(&self) -> u32 {
+        self.terms
+            .keys()
+            .map(|e| e.iter().sum::<u32>())
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn add_term(&mut self, expo: Expo, coeff: i128) {
+        if coeff == 0 {
+            return;
+        }
+        let entry = self.terms.entry(expo).or_insert(0);
+        *entry += coeff;
+        if *entry == 0 {
+            // keep normal form: remove cancelled terms
+            let key: Vec<u32> = self
+                .terms
+                .iter()
+                .find(|(_, &v)| v == 0)
+                .map(|(k, _)| k.clone())
+                .unwrap();
+            self.terms.remove(&key);
+        }
+    }
+
+    /// `self + rhs`.
+    pub fn add(&self, rhs: &Poly) -> Poly {
+        debug_assert_eq!(self.nparams, rhs.nparams);
+        let mut out = self.clone();
+        for (e, &c) in &rhs.terms {
+            out.add_term(e.clone(), c);
+        }
+        out
+    }
+
+    /// `self - rhs`.
+    pub fn sub(&self, rhs: &Poly) -> Poly {
+        debug_assert_eq!(self.nparams, rhs.nparams);
+        let mut out = self.clone();
+        for (e, &c) in &rhs.terms {
+            out.add_term(e.clone(), -c);
+        }
+        out
+    }
+
+    /// `self · rhs`.
+    pub fn mul(&self, rhs: &Poly) -> Poly {
+        debug_assert_eq!(self.nparams, rhs.nparams);
+        let mut out = Poly::zero(self.nparams);
+        for (ea, &ca) in &self.terms {
+            for (eb, &cb) in &rhs.terms {
+                let expo: Expo = ea.iter().zip(eb).map(|(a, b)| a + b).collect();
+                out.add_term(expo, ca.checked_mul(cb).expect("poly coeff overflow"));
+            }
+        }
+        out
+    }
+
+    /// `self · c` for an integer constant.
+    pub fn scale(&self, c: i128) -> Poly {
+        let mut out = Poly::zero(self.nparams);
+        for (e, &v) in &self.terms {
+            out.add_term(e.clone(), v * c);
+        }
+        out
+    }
+
+    /// Evaluate at a concrete parameter point.
+    pub fn eval(&self, params: &[i64]) -> i128 {
+        debug_assert_eq!(params.len(), self.nparams);
+        let mut acc: i128 = 0;
+        for (e, &c) in &self.terms {
+            let mut t = c;
+            for (i, &pow) in e.iter().enumerate() {
+                for _ in 0..pow {
+                    t = t.checked_mul(params[i] as i128).expect("poly eval overflow");
+                }
+            }
+            acc += t;
+        }
+        acc
+    }
+
+    /// Evaluate to f64 (used when combining with energy weights in pJ).
+    pub fn eval_f64(&self, params: &[i64]) -> f64 {
+        self.eval(params) as f64
+    }
+
+    /// Pretty-print against a parameter space.
+    pub fn display<'a>(&'a self, space: &'a ParamSpace) -> PolyDisplay<'a> {
+        PolyDisplay { poly: self, space }
+    }
+}
+
+/// Helper for `{}`-formatting a [`Poly`] with parameter names.
+pub struct PolyDisplay<'a> {
+    poly: &'a Poly,
+    space: &'a ParamSpace,
+}
+
+impl fmt::Display for PolyDisplay<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.poly.terms.is_empty() {
+            return write!(f, "0");
+        }
+        // Print highest-degree terms first for readability.
+        let mut terms: Vec<(&Expo, &i128)> = self.poly.terms.iter().collect();
+        terms.sort_by_key(|(e, _)| std::cmp::Reverse(e.iter().sum::<u32>()));
+        for (idx, (e, &c)) in terms.iter().enumerate() {
+            let is_const_term = e.iter().all(|&x| x == 0);
+            if idx > 0 {
+                write!(f, " {} ", if c < 0 { "-" } else { "+" })?;
+            } else if c < 0 {
+                write!(f, "-")?;
+            }
+            let a = c.unsigned_abs();
+            if a != 1 || is_const_term {
+                write!(f, "{a}")?;
+            }
+            for (i, &pow) in e.iter().enumerate() {
+                if pow == 0 {
+                    continue;
+                }
+                write!(f, "{}", self.space.name(i))?;
+                if pow > 1 {
+                    write!(f, "^{pow}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s() -> ParamSpace {
+        ParamSpace::loop_nest(2) // N0 N1 p0 p1
+    }
+
+    fn aff(coeffs: [i64; 4], k: i64) -> AffineExpr {
+        AffineExpr { coeffs: coeffs.to_vec(), konst: k }
+    }
+
+    #[test]
+    fn from_affine_and_eval() {
+        let e = aff([2, 0, -1, 0], 3); // 2N0 - p0 + 3
+        let p = Poly::from_affine(&e);
+        assert_eq!(p.degree(), 1);
+        assert_eq!(p.eval(&[5, 0, 4, 0]), (2 * 5 - 4 + 3) as i128);
+    }
+
+    #[test]
+    fn mul_matches_eval() {
+        let a = Poly::from_affine(&aff([1, 0, 0, 0], -1)); // N0 - 1
+        let b = Poly::from_affine(&aff([0, 1, 0, -2], 0)); // N1 - 2p1
+        let prod = a.mul(&b);
+        assert_eq!(prod.degree(), 2);
+        let pt = [7, 9, 3, 2];
+        assert_eq!(prod.eval(&pt), a.eval(&pt) * b.eval(&pt));
+    }
+
+    #[test]
+    fn add_sub_cancel_to_zero() {
+        let a = Poly::from_affine(&aff([1, 2, 3, 4], 5));
+        let z = a.sub(&a);
+        assert!(z.is_zero());
+        assert_eq!(z, Poly::zero(4));
+        assert_eq!(a.add(&z), a);
+    }
+
+    #[test]
+    fn normal_form_equality() {
+        // (N0+1)(N0-1) == N0^2 - 1 structurally.
+        let n0 = Poly::from_affine(&aff([1, 0, 0, 0], 0));
+        let lhs = Poly::from_affine(&aff([1, 0, 0, 0], 1))
+            .mul(&Poly::from_affine(&aff([1, 0, 0, 0], -1)));
+        let rhs = n0.mul(&n0).sub(&Poly::constant(4, 1));
+        assert_eq!(lhs, rhs);
+    }
+
+    #[test]
+    fn as_const_paths() {
+        assert_eq!(Poly::zero(4).as_const(), Some(0));
+        assert_eq!(Poly::constant(4, 42).as_const(), Some(42));
+        let n0 = Poly::from_affine(&aff([1, 0, 0, 0], 0));
+        assert_eq!(n0.as_const(), None);
+    }
+
+    #[test]
+    fn display_readable() {
+        let sp = s();
+        let p = Poly::from_affine(&aff([1, 0, 0, 0], 0))
+            .mul(&Poly::from_affine(&aff([0, 1, 0, 0], -2)));
+        // N0·(N1-2) = N0N1 - 2N0
+        assert_eq!(format!("{}", p.display(&sp)), "N0N1 - 2N0");
+        assert_eq!(format!("{}", Poly::zero(4).display(&sp)), "0");
+    }
+
+    #[test]
+    fn scale_and_eval_f64() {
+        let p = Poly::constant(4, 6).scale(-2);
+        assert_eq!(p.as_const(), Some(-12));
+        assert_eq!(p.eval_f64(&[0, 0, 0, 0]), -12.0);
+    }
+}

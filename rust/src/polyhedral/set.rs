@@ -1,0 +1,420 @@
+//! Tiled integer sets: the iteration/condition spaces of statements after
+//! LSGP tiling.
+//!
+//! After tiling (Eq. 3–6 of the paper), every statement is quantified over
+//! the 2n-dimensional space of intra-tile coordinates `j = (j_0..j_{n-1})`
+//! and tile origins `k = (k_0..k_{n-1})`, subject to constraints of the
+//! forms
+//!
+//! * `0 ≤ j_ℓ < p_ℓ` (tile shape, Eq. 3),
+//! * `0 ≤ k_ℓ < t_ℓ` (array extent, Eq. 4; `t_ℓ` fixed integers),
+//! * `0 ≤ j_ℓ + p_ℓ·k_ℓ < N_ℓ` (global iteration-space membership),
+//! * condition-space constraints affine in `i = j + P·k`, and
+//! * `j − d_J − Pγ ∈ J` displacement constraints (Eq. 6).
+//!
+//! The term `p_ℓ·k_ℓ` makes constraints *bilinear* in (variables ×
+//! parameters); we therefore represent each variable coefficient as an
+//! [`AffineExpr`] over the parameters. Substituting a concrete `k` (the
+//! paper's footnote-1 unfolding over the fixed array) collapses everything
+//! back to parameter-affine bounds on each `j_ℓ`, which is what both the
+//! concrete and the symbolic counters consume.
+
+use std::fmt;
+
+use super::expr::AffineExpr;
+
+/// One constraint `Σ_v coeff_v(params)·var_v + konst(params) ≥ 0`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SetConstraint {
+    /// Per-variable coefficient, parametric. Length = `2n` (j vars then k
+    /// vars).
+    pub var_coeffs: Vec<AffineExpr>,
+    /// Constant (parametric) term.
+    pub konst: AffineExpr,
+}
+
+impl SetConstraint {
+    /// A constraint with all-zero coefficients (builder starting point).
+    pub fn zero(nvars: usize, nparams: usize) -> Self {
+        SetConstraint {
+            var_coeffs: vec![AffineExpr::zero(nparams); nvars],
+            konst: AffineExpr::zero(nparams),
+        }
+    }
+}
+
+/// A conjunction of [`SetConstraint`]s over `j`/`k` variables.
+///
+/// Variable layout: indices `0..n` are `j_0..j_{n-1}`, indices `n..2n` are
+/// `k_0..k_{n-1}`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TiledSet {
+    /// Loop depth `n` (the set has `2n` variables).
+    pub ndims: usize,
+    /// Number of symbolic parameters.
+    pub nparams: usize,
+    /// The constraints.
+    pub constraints: Vec<SetConstraint>,
+}
+
+/// Bounds on a single `j` dimension after substituting a concrete `k`:
+/// `max(lowers) ≤ j_ℓ ≤ min(uppers)`, all bounds parameter-affine.
+#[derive(Debug, Clone, Default)]
+pub struct DimBounds {
+    pub lowers: Vec<AffineExpr>,
+    pub uppers: Vec<AffineExpr>,
+}
+
+/// Result of substituting a concrete tile origin `k` into a [`TiledSet`]:
+/// separable per-`j`-dimension bounds plus parameter-only conditions.
+#[derive(Debug, Clone)]
+pub struct UnfoldedCell {
+    /// Per-dimension bounds on `j_0..j_{n-1}`.
+    pub dims: Vec<DimBounds>,
+    /// Constraints involving no variables: must hold for the cell to be
+    /// non-empty (become chamber conditions of the symbolic count).
+    pub param_conds: Vec<AffineExpr>,
+}
+
+/// Error for sets outside the separable class the counter supports.
+#[derive(Debug, thiserror::Error)]
+pub enum SetError {
+    #[error("constraint couples multiple j-variables after k-substitution; \
+             the separable counter only supports the tiled-statement class \
+             (constraint touches j{0} and j{1})")]
+    NonSeparable(usize, usize),
+    #[error("j{0} has parametric coefficient {1:?}; only constant ±1 \
+             coefficients are supported after k-substitution")]
+    NonUnitCoeff(usize, AffineExpr),
+}
+
+impl TiledSet {
+    /// An unconstrained set of loop depth `n`.
+    pub fn universe(ndims: usize, nparams: usize) -> Self {
+        TiledSet { ndims, nparams, constraints: Vec::new() }
+    }
+
+    /// Variable index of `j_ℓ`.
+    pub fn jvar(&self, l: usize) -> usize {
+        debug_assert!(l < self.ndims);
+        l
+    }
+
+    /// Variable index of `k_ℓ`.
+    pub fn kvar(&self, l: usize) -> usize {
+        debug_assert!(l < self.ndims);
+        self.ndims + l
+    }
+
+    fn nvars(&self) -> usize {
+        2 * self.ndims
+    }
+
+    /// Add a raw constraint.
+    pub fn add(&mut self, c: SetConstraint) {
+        debug_assert_eq!(c.var_coeffs.len(), self.nvars());
+        self.constraints.push(c);
+    }
+
+    /// Add `j_ℓ ≥ 0` and `j_ℓ ≤ p_ℓ − 1` (tile shape, Eq. 3), where `p_ℓ`
+    /// is parameter index `p_idx`.
+    pub fn add_tile_bounds(&mut self, l: usize, p_idx: usize) {
+        let nv = self.nvars();
+        let np = self.nparams;
+        // j_l >= 0
+        let mut lo = SetConstraint::zero(nv, np);
+        lo.var_coeffs[self.jvar(l)] = AffineExpr::constant(np, 1);
+        self.add(lo);
+        // -j_l + p_l - 1 >= 0
+        let mut hi = SetConstraint::zero(nv, np);
+        hi.var_coeffs[self.jvar(l)] = AffineExpr::constant(np, -1);
+        hi.konst = AffineExpr::param(np, p_idx).plus(-1);
+        self.add(hi);
+    }
+
+    /// Add `0 ≤ k_ℓ ≤ t_ℓ − 1` (array extent, Eq. 4) with fixed `t_ℓ`.
+    pub fn add_array_bounds(&mut self, l: usize, t_l: i64) {
+        let nv = self.nvars();
+        let np = self.nparams;
+        let mut lo = SetConstraint::zero(nv, np);
+        lo.var_coeffs[self.kvar(l)] = AffineExpr::constant(np, 1);
+        self.add(lo);
+        let mut hi = SetConstraint::zero(nv, np);
+        hi.var_coeffs[self.kvar(l)] = AffineExpr::constant(np, -1);
+        hi.konst = AffineExpr::constant(np, t_l - 1);
+        self.add(hi);
+    }
+
+    /// Add a constraint affine in the *global* iteration vector
+    /// `i = j + P·k`:  `Σ a_ℓ·i_ℓ + c ≥ 0` becomes
+    /// `Σ a_ℓ·j_ℓ + Σ (a_ℓ·p_ℓ)·k_ℓ + c ≥ 0`.
+    ///
+    /// `konst` may itself be parametric (e.g. `N_ℓ − 1` for upper loop
+    /// bounds); `p_idx[ℓ]` gives the parameter index of `p_ℓ`.
+    pub fn add_global_affine(
+        &mut self,
+        a: &[i64],
+        konst: AffineExpr,
+        p_idx: &[usize],
+    ) {
+        debug_assert_eq!(a.len(), self.ndims);
+        let nv = self.nvars();
+        let np = self.nparams;
+        let mut c = SetConstraint::zero(nv, np);
+        for l in 0..self.ndims {
+            if a[l] != 0 {
+                c.var_coeffs[self.jvar(l)] = AffineExpr::constant(np, a[l]);
+                c.var_coeffs[self.kvar(l)] =
+                    AffineExpr::param_scaled(np, p_idx[l], a[l], 0);
+            }
+        }
+        c.konst = konst;
+        self.add(c);
+    }
+
+    /// Add `0 ≤ j_ℓ − off_ℓ ≤ p_ℓ − 1` membership constraints (the
+    /// `j − d_J − Pγ ∈ J` displacement of Eq. 6), where `off` is a
+    /// parameter-affine offset per dimension.
+    pub fn add_shifted_tile_membership(
+        &mut self,
+        l: usize,
+        off: AffineExpr,
+        p_idx: usize,
+    ) {
+        let nv = self.nvars();
+        let np = self.nparams;
+        // j_l - off >= 0
+        let mut lo = SetConstraint::zero(nv, np);
+        lo.var_coeffs[self.jvar(l)] = AffineExpr::constant(np, 1);
+        lo.konst = -&off;
+        self.add(lo);
+        // -(j_l - off) + p_l - 1 >= 0
+        let mut hi = SetConstraint::zero(nv, np);
+        hi.var_coeffs[self.jvar(l)] = AffineExpr::constant(np, -1);
+        hi.konst = (&off + &AffineExpr::param(np, p_idx)).plus(-1);
+        self.add(hi);
+    }
+
+    /// Substitute a concrete tile origin `k`, producing separable bounds on
+    /// each `j` dimension (or an error if the set is outside the supported
+    /// class).
+    pub fn substitute_k(&self, k: &[i64]) -> Result<UnfoldedCell, SetError> {
+        debug_assert_eq!(k.len(), self.ndims);
+        let mut dims = vec![DimBounds::default(); self.ndims];
+        let mut param_conds = Vec::new();
+        'constraints: for c in &self.constraints {
+            // Residual constant after substituting k values.
+            let mut resid = c.konst.clone();
+            for l in 0..self.ndims {
+                let kc = &c.var_coeffs[self.kvar(l)];
+                if k[l] != 0 {
+                    resid = &resid + &(kc * k[l]);
+                } // k[l] == 0: term vanishes regardless of coefficient
+            }
+            // Which j variables remain?
+            let mut touched: Option<usize> = None;
+            for l in 0..self.ndims {
+                let jc = &c.var_coeffs[self.jvar(l)];
+                match jc.as_const() {
+                    Some(0) => continue,
+                    Some(a) if a == 1 || a == -1 => match touched {
+                        None => touched = Some(l),
+                        Some(prev) => {
+                            return Err(SetError::NonSeparable(prev, l))
+                        }
+                    },
+                    _ => {
+                        return Err(SetError::NonUnitCoeff(l, jc.clone()));
+                    }
+                }
+            }
+            match touched {
+                None => {
+                    // Pure parameter condition; skip syntactic tautologies.
+                    if resid.as_const().map(|v| v >= 0) == Some(true) {
+                        continue 'constraints;
+                    }
+                    param_conds.push(resid);
+                }
+                Some(l) => {
+                    let a = c.var_coeffs[self.jvar(l)].as_const().unwrap();
+                    if a == 1 {
+                        // j_l + resid >= 0  →  j_l >= -resid
+                        dims[l].lowers.push(-&resid);
+                    } else {
+                        // -j_l + resid >= 0  →  j_l <= resid
+                        dims[l].uppers.push(resid);
+                    }
+                }
+            }
+        }
+        // Every dimension needs at least one bound on each side to have a
+        // finite count; the tile-shape bounds guarantee this for sets built
+        // through the tiling path. Add trivial j>=0 style guards otherwise?
+        // No: report empty-side dimensions as unbounded by leaving the
+        // lists empty — the counters treat that as an error via panic in
+        // debug; production sets always carry Eq. 3 bounds.
+        Ok(UnfoldedCell { dims, param_conds })
+    }
+
+    /// Brute-force membership test at fully concrete `(j, k, params)` —
+    /// evaluates every constraint. Test oracle only.
+    pub fn contains(&self, j: &[i64], k: &[i64], params: &[i64]) -> bool {
+        self.constraints.iter().all(|c| {
+            let mut acc = c.konst.eval(params) as i128;
+            for l in 0..self.ndims {
+                acc += c.var_coeffs[self.jvar(l)].eval(params) as i128
+                    * j[l] as i128;
+                acc += c.var_coeffs[self.kvar(l)].eval(params) as i128
+                    * k[l] as i128;
+            }
+            acc >= 0
+        })
+    }
+}
+
+impl fmt::Display for TiledSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "TiledSet(n={}, {} constraints)",
+            self.ndims,
+            self.constraints.len()
+        )
+    }
+}
+
+/// Iterate over all tile origins `k ∈ [0,t_0)×…×[0,t_{n-1})`.
+pub fn k_grid(t: &[i64]) -> Vec<Vec<i64>> {
+    let mut out = vec![vec![]];
+    for &tl in t {
+        let mut next = Vec::with_capacity(out.len() * tl as usize);
+        for base in &out {
+            for v in 0..tl {
+                let mut b = base.clone();
+                b.push(v);
+                next.push(b);
+            }
+        }
+        out = next;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::expr::ParamSpace;
+
+    /// Build the tiled GESUMMV-style base space of Example 2:
+    /// n=2, params (N0,N1,p0,p1), array t0=t1=2,
+    /// constraints: 0≤j<p, 0≤k<t, 0≤j+pk<N.
+    fn base_space() -> (ParamSpace, TiledSet) {
+        let sp = ParamSpace::loop_nest(2);
+        let np = sp.len();
+        let mut set = TiledSet::universe(2, np);
+        for l in 0..2 {
+            set.add_tile_bounds(l, sp.p_index(l));
+            set.add_array_bounds(l, 2);
+        }
+        // 0 <= i_l  and  i_l <= N_l - 1
+        for l in 0..2 {
+            let mut a = [0i64; 2];
+            a[l] = 1;
+            set.add_global_affine(
+                &a,
+                AffineExpr::zero(np),
+                &[sp.p_index(0), sp.p_index(1)],
+            );
+            let mut an = [0i64; 2];
+            an[l] = -1;
+            set.add_global_affine(
+                &an,
+                AffineExpr::param(np, sp.n_index(l)).plus(-1),
+                &[sp.p_index(0), sp.p_index(1)],
+            );
+        }
+        (sp, set)
+    }
+
+    #[test]
+    fn k_grid_order_and_size() {
+        let g = k_grid(&[2, 3]);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g[0], vec![0, 0]);
+        assert_eq!(g[5], vec![1, 2]);
+    }
+
+    #[test]
+    fn contains_matches_example2_geometry() {
+        // N0=4, N1=5, p0=2, p1=3 (Fig. 2): iteration (i0,i1)=(3,4) lives in
+        // tile k=(1,1), j=(1,1).
+        let (_, set) = base_space();
+        let params = [4, 5, 2, 3];
+        assert!(set.contains(&[1, 1], &[1, 1], &params));
+        // j out of tile:
+        assert!(!set.contains(&[2, 0], &[0, 0], &params));
+        // i = j + P k = (0, 3+3) = (0,6) out of N1=5:
+        assert!(!set.contains(&[0, 3], &[0, 1], &params));
+    }
+
+    #[test]
+    fn substitute_k_produces_separable_bounds() {
+        let (_, set) = base_space();
+        let cell = set.substitute_k(&[1, 1]).unwrap();
+        assert_eq!(cell.dims.len(), 2);
+        // Each j dim: lowers from j>=0 and 0<=j+pk (k=1: j >= -p), uppers
+        // from j<=p-1 and j+pk<=N-1 (j <= N-1-p).
+        assert_eq!(cell.dims[0].lowers.len(), 2);
+        assert_eq!(cell.dims[0].uppers.len(), 2);
+        // No pure-param conditions for the base space at this k (k-bounds
+        // are constant-true after substitution).
+        assert!(cell.param_conds.is_empty());
+    }
+
+    #[test]
+    fn substitute_k_shifted_membership() {
+        // Add Eq.6-style shifted membership j1 - 1 ∈ [0, p1-1] (the S7*1
+        // displacement of Example 2) and check the extra bounds appear.
+        let (sp, mut set) = base_space();
+        let np = sp.len();
+        set.add_shifted_tile_membership(
+            1,
+            AffineExpr::constant(np, 1),
+            sp.p_index(1),
+        );
+        let cell = set.substitute_k(&[0, 0]).unwrap();
+        assert_eq!(cell.dims[1].lowers.len(), 3); // j1>=0, j1>=-p1k1(=0), j1>=1
+        assert_eq!(cell.dims[1].uppers.len(), 3);
+    }
+
+    #[test]
+    fn non_separable_rejected() {
+        let sp = ParamSpace::loop_nest(2);
+        let np = sp.len();
+        let mut set = TiledSet::universe(2, np);
+        // j0 + j1 >= 0 couples two j variables.
+        let mut c = SetConstraint::zero(4, np);
+        c.var_coeffs[0] = AffineExpr::constant(np, 1);
+        c.var_coeffs[1] = AffineExpr::constant(np, 1);
+        set.add(c);
+        assert!(matches!(
+            set.substitute_k(&[0, 0]),
+            Err(SetError::NonSeparable(0, 1))
+        ));
+    }
+
+    #[test]
+    fn non_unit_coeff_rejected() {
+        let sp = ParamSpace::loop_nest(2);
+        let np = sp.len();
+        let mut set = TiledSet::universe(2, np);
+        let mut c = SetConstraint::zero(4, np);
+        c.var_coeffs[0] = AffineExpr::constant(np, 2);
+        set.add(c);
+        assert!(matches!(
+            set.substitute_k(&[0, 0]),
+            Err(SetError::NonUnitCoeff(0, _))
+        ));
+    }
+}

@@ -1,0 +1,477 @@
+//! Symbolic (parametric) lattice-point counting — the ISL/Barvinok
+//! substitute (§IV-C of the paper, incl. the footnote-1 unfolding).
+//!
+//! For each fixed tile origin `k` in the (fixed-size) processor grid, the
+//! tiled statement space collapses to separable per-dimension bounds
+//! `max(L_ℓ) ≤ j_ℓ ≤ min(U_ℓ)` with every bound *affine in the parameters*
+//! `(N, p)`. The count of a cell is `Π_ℓ max(0, min(U_ℓ) − max(L_ℓ) + 1)` —
+//! resolved into a **piecewise polynomial** by recursively splitting the
+//! parameter space:
+//!
+//! 1. `max`/`min` of affine bounds → tournament splits on sign conditions
+//!    of pairwise differences;
+//! 2. the outer clamp `max(0, len)` → split on `len ≥ 1`, dropping the
+//!    empty branch;
+//! 3. pure-parameter cell conditions → chamber constraints.
+//!
+//! Branches infeasible under the evaluation context (Fourier–Motzkin) are
+//! pruned. The result is a [`GuardedSum`] — exact at every parameter point
+//! of the context, property-tested against the enumeration oracle — which
+//! can be disjointified into the paper's Example-9 case expressions.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use super::expr::AffineExpr;
+use super::guard::{Constraint, Guard};
+use super::piecewise::GuardedSum;
+use super::poly::Poly;
+use super::set::{k_grid, DimBounds, TiledSet};
+
+/// Tunables for the symbolic counter.
+#[derive(Debug, Clone)]
+pub struct SymbolicOptions {
+    /// Abort a single cell's resolution after this many branches
+    /// (safety valve; practical statement spaces stay tiny).
+    pub max_branches_per_cell: usize,
+    /// Run [`GuardedSum::compact`] on the result.
+    pub compact: bool,
+}
+
+impl Default for SymbolicOptions {
+    fn default() -> Self {
+        SymbolicOptions { max_branches_per_cell: 4096, compact: true }
+    }
+}
+
+
+/// Memoized feasibility of `guard ∧ context`. Guards repeat massively
+/// across the unfolded `k` cells (the bounds differ only by constant
+/// shifts that normalize identically), so caching Fourier–Motzkin results
+/// cuts the one-time analysis cost dramatically (§Perf).
+struct FeasCache<'a> {
+    context: &'a Guard,
+    map: HashMap<Guard, bool>,
+}
+
+impl<'a> FeasCache<'a> {
+    fn new(context: &'a Guard) -> Self {
+        FeasCache { context, map: HashMap::new() }
+    }
+
+    fn feasible(&mut self, g: &Guard) -> bool {
+        if g.has_false() {
+            return false;
+        }
+        if let Some(&v) = self.map.get(g) {
+            return v;
+        }
+        let v = g.and_guard(self.context).feasible();
+        self.map.insert(g.clone(), v);
+        v
+    }
+}
+
+/// Count `|set|` symbolically over the parameters, valid within `context`
+/// (the global assumptions, e.g. `N_ℓ ≥ 1 ∧ p_ℓ ≥ 1 ∧ …`).
+pub fn count_symbolic(
+    set: &TiledSet,
+    t: &[i64],
+    context: &Guard,
+    opts: &SymbolicOptions,
+) -> GuardedSum {
+    let mut out = GuardedSum::zero(set.nparams);
+    let cache = RefCell::new(FeasCache::new(context));
+    for k in k_grid(t) {
+        let cell = set
+            .substitute_k(&k)
+            .expect("set outside the separable tiled class");
+        // Cell-level parameter conditions.
+        let mut cell_guard = Guard::always();
+        let mut dead = false;
+        for cond in &cell.param_conds {
+            let c = Constraint::ge0(cond.clone());
+            if c.as_const() == Some(false) {
+                dead = true;
+                break;
+            }
+            cell_guard = cell_guard.and(c);
+        }
+        if dead || !cache.borrow_mut().feasible(&cell_guard) {
+            continue;
+        }
+        resolve_dims(
+            &cell.dims,
+            0,
+            cell_guard,
+            Poly::constant(set.nparams, 1),
+            &cache,
+            opts,
+            &mut out,
+            &mut 0usize,
+        );
+    }
+    if opts.compact {
+        out.compact();
+    }
+    out
+}
+
+/// Recursively resolve dimension bounds into guarded polynomial pieces.
+#[allow(clippy::too_many_arguments)]
+fn resolve_dims(
+    dims: &[DimBounds],
+    d: usize,
+    guard: Guard,
+    acc: Poly,
+    cache: &RefCell<FeasCache<'_>>,
+    opts: &SymbolicOptions,
+    out: &mut GuardedSum,
+    branches: &mut usize,
+) {
+    *branches += 1;
+    assert!(
+        *branches <= opts.max_branches_per_cell,
+        "symbolic counter exceeded {} branches on one cell",
+        opts.max_branches_per_cell
+    );
+    if d == dims.len() {
+        out.push(guard, acc);
+        return;
+    }
+    let db = &dims[d];
+    assert!(
+        !db.lowers.is_empty() && !db.uppers.is_empty(),
+        "dimension {d} lacks a finite bound"
+    );
+    resolve_max(
+        &db.lowers, 0, guard, cache, opts, branches,
+        &mut |lo: AffineExpr, g: Guard, br: &mut usize| {
+            resolve_min(
+                &db.uppers, 0, g, cache, opts, br,
+                &mut |hi: AffineExpr, g2: Guard, br2: &mut usize| {
+                    // len = hi - lo + 1; split on len >= 1 i.e. hi - lo >= 0.
+                    let len = (&hi - &lo).plus(1);
+                    let nonempty = Constraint::ge0((&hi - &lo).clone());
+                    match nonempty.as_const() {
+                        Some(false) => return, // certainly empty
+                        Some(true) => {
+                            let g3 = g2.clone();
+                            let acc2 = acc.mul(&Poly::from_affine(&len));
+                            resolve_dims(
+                                dims, d + 1, g3, acc2, cache, opts, out, br2,
+                            );
+                        }
+                        None => {
+                            // non-empty branch
+                            let g_yes = g2.and(nonempty.clone());
+                            if cache.borrow_mut().feasible(&g_yes) {
+                                let acc2 = acc.mul(&Poly::from_affine(&len));
+                                resolve_dims(
+                                    dims, d + 1, g_yes, acc2, cache, opts,
+                                    out, br2,
+                                );
+                            }
+                            // empty branch contributes 0: dropped.
+                        }
+                    }
+                },
+            );
+        },
+    );
+}
+
+/// Tournament-resolve `max(bounds[i..])` into (winner, guard) pairs.
+fn resolve_max(
+    bounds: &[AffineExpr],
+    _start: usize,
+    guard: Guard,
+    cache: &RefCell<FeasCache<'_>>,
+    opts: &SymbolicOptions,
+    branches: &mut usize,
+    f: &mut dyn FnMut(AffineExpr, Guard, &mut usize),
+) {
+    resolve_extremum(bounds, guard, cache, opts, branches, true, f)
+}
+
+/// Tournament-resolve `min(bounds[i..])`.
+fn resolve_min(
+    bounds: &[AffineExpr],
+    _start: usize,
+    guard: Guard,
+    cache: &RefCell<FeasCache<'_>>,
+    opts: &SymbolicOptions,
+    branches: &mut usize,
+    f: &mut dyn FnMut(AffineExpr, Guard, &mut usize),
+) {
+    resolve_extremum(bounds, guard, cache, opts, branches, false, f)
+}
+
+/// Shared tournament: repeatedly compare the current champion `c` with the
+/// next contender `x`, splitting the chamber on `c ≥ x` (max) or `c ≤ x`
+/// (min). Syntactically-equal bounds and context-decided comparisons do
+/// not split.
+fn resolve_extremum(
+    bounds: &[AffineExpr],
+    guard: Guard,
+    cache: &RefCell<FeasCache<'_>>,
+    opts: &SymbolicOptions,
+    branches: &mut usize,
+    want_max: bool,
+    f: &mut dyn FnMut(AffineExpr, Guard, &mut usize),
+) {
+    // Dedup identical bounds first.
+    let mut uniq: Vec<AffineExpr> = Vec::with_capacity(bounds.len());
+    for b in bounds {
+        if !uniq.contains(b) {
+            uniq.push(b.clone());
+        }
+    }
+    struct Frame {
+        champion: AffineExpr,
+        next: usize,
+        guard: Guard,
+    }
+    let mut stack = vec![Frame { champion: uniq[0].clone(), next: 1, guard }];
+    while let Some(Frame { champion, next, guard }) = stack.pop() {
+        *branches += 1;
+        assert!(
+            *branches <= opts.max_branches_per_cell,
+            "extremum resolution exceeded branch budget"
+        );
+        if next == uniq.len() {
+            f(champion, guard, branches);
+            continue;
+        }
+        let x = &uniq[next];
+        // champion_wins: champion >= x (max) / champion <= x (min)
+        let champion_wins = if want_max {
+            Constraint::ge(&champion, x)
+        } else {
+            Constraint::le(&champion, x)
+        };
+        match champion_wins.as_const() {
+            Some(true) => {
+                stack.push(Frame { champion, next: next + 1, guard });
+            }
+            Some(false) => {
+                stack.push(Frame { champion: x.clone(), next: next + 1, guard });
+            }
+            None => {
+                let g_yes = guard.and(champion_wins.clone());
+                let g_no = guard.and(champion_wins.negated());
+                let yes_ok = cache.borrow_mut().feasible(&g_yes);
+                let no_ok = cache.borrow_mut().feasible(&g_no);
+                match (yes_ok, no_ok) {
+                    (true, true) => {
+                        stack.push(Frame {
+                            champion: champion.clone(),
+                            next: next + 1,
+                            guard: g_yes,
+                        });
+                        stack.push(Frame {
+                            champion: x.clone(),
+                            next: next + 1,
+                            guard: g_no,
+                        });
+                    }
+                    (true, false) => stack.push(Frame {
+                        champion,
+                        next: next + 1,
+                        guard, // decision implied: no new constraint needed
+                    }),
+                    (false, true) => stack.push(Frame {
+                        champion: x.clone(),
+                        next: next + 1,
+                        guard,
+                    }),
+                    (false, false) => {} // dead chamber
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::count::{count_bruteforce, count_concrete};
+    use crate::polyhedral::expr::{AffineExpr, ParamSpace};
+    use crate::polyhedral::set::TiledSet;
+
+    /// Standard evaluation context: N_l >= 1, 1 <= p_l <= N_l.
+    fn context(sp: &ParamSpace, n: usize) -> Guard {
+        let np = sp.len();
+        let one = AffineExpr::constant(np, 1);
+        let mut cs = Vec::new();
+        for l in 0..n {
+            let nl = AffineExpr::param(np, sp.n_index(l));
+            let pl = AffineExpr::param(np, sp.p_index(l));
+            cs.push(Constraint::ge(&nl, &one));
+            cs.push(Constraint::ge(&pl, &one));
+            cs.push(Constraint::le(&pl, &nl));
+        }
+        Guard::new(cs)
+    }
+
+    fn base_space(t: &[i64]) -> (ParamSpace, TiledSet) {
+        let sp = ParamSpace::loop_nest(2);
+        let np = sp.len();
+        let mut set = TiledSet::universe(2, np);
+        let p_idx = [sp.p_index(0), sp.p_index(1)];
+        for l in 0..2 {
+            set.add_tile_bounds(l, p_idx[l]);
+            set.add_array_bounds(l, t[l]);
+            let mut a = [0i64; 2];
+            a[l] = 1;
+            set.add_global_affine(&a, AffineExpr::zero(np), &p_idx);
+            let mut an = [0i64; 2];
+            an[l] = -1;
+            set.add_global_affine(
+                &an,
+                AffineExpr::param(np, sp.n_index(l)).plus(-1),
+                &p_idx,
+            );
+        }
+        (sp, set)
+    }
+
+    #[test]
+    fn symbolic_matches_concrete_on_base_space() {
+        let (sp, set) = base_space(&[2, 2]);
+        let ctx = context(&sp, 2);
+        let sym = count_symbolic(&set, &[2, 2], &ctx, &Default::default());
+        for n0 in 1..8 {
+            for n1 in 1..8 {
+                for p0 in 1..=n0 {
+                    for p1 in 1..=n1 {
+                        let params = [n0, n1, p0, p1];
+                        assert_eq!(
+                            sym.eval(&params),
+                            count_concrete(&set, &[2, 2], &params),
+                            "params={params:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symbolic_is_polynomial_in_exact_cover_chamber() {
+        // With N = t*p exactly, the count must equal N0*N1 — check the
+        // symbolic value over a sweep where p = N/2.
+        let (sp, set) = base_space(&[2, 2]);
+        let ctx = context(&sp, 2);
+        let sym = count_symbolic(&set, &[2, 2], &ctx, &Default::default());
+        for h in 1..10 {
+            let params = [2 * h, 2 * h, h, h];
+            assert_eq!(sym.eval(&params), (4 * h * h) as i128);
+        }
+    }
+
+    #[test]
+    fn symbolic_example9_s7_star_1() {
+        // Example 9: statement S7*1 on a 2x2 array.
+        // Space: base ∧ (j1 + p1 k1 >= 1) ∧ (1 <= j1 <= p1 - 1 + 1 shifted):
+        //   paper writes 0 <= j1 - 1 < p1 i.e. j1 >= 1 ∧ j1 <= p1.
+        // Expected counts: e.g. N=(4,5), p=(2,3) → 12.
+        let (sp, mut set) = base_space(&[2, 2]);
+        let np = sp.len();
+        let p_idx = [sp.p_index(0), sp.p_index(1)];
+        // i1 >= 1  (condition i1 > 0)
+        set.add_global_affine(&[0, 1], AffineExpr::constant(np, -1), &p_idx);
+        // j1 - 1 in [0, p1-1]
+        set.add_shifted_tile_membership(1, AffineExpr::constant(np, 1), p_idx[1]);
+        let ctx = context(&sp, 2);
+        let sym = count_symbolic(&set, &[2, 2], &ctx, &Default::default());
+        assert_eq!(sym.eval(&[4, 5, 2, 3]), 12, "paper Example 9: Vol(S7*1)=12");
+        // And the paper's first chamber: 0<p0 ∧ 2p0<N0 ∧ p1>=2 ∧ 2p1<N1
+        // → 4 p0 (p1 - 1). Try p0=2,N0=8,p1=3,N1=10: 4*2*2 = 16.
+        assert_eq!(sym.eval(&[8, 10, 2, 3]), 16);
+        // Second chamber: 2p0>=N0 → 2 N0 (p1-1): N0=3,p0=2,N1=10,p1=3 → 12.
+        assert_eq!(sym.eval(&[3, 10, 2, 3]), 12);
+        // Agreement with both oracles over a sweep.
+        for n0 in 1..7 {
+            for n1 in 1..7 {
+                for p0 in 1..=n0 {
+                    for p1 in 1..=n1 {
+                        let params = [n0, n1, p0, p1];
+                        let c = count_concrete(&set, &[2, 2], &params);
+                        assert_eq!(sym.eval(&params), c, "params={params:?}");
+                        assert_eq!(
+                            count_bruteforce(&set, &[2, 2], &params),
+                            c,
+                            "params={params:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symbolic_example9_s7_star_2() {
+        // S7*2: inter-tile case. Space: base ∧ i1 >= 1 ∧
+        //   j1 - (1 - p1) ∈ [0, p1-1]  ∧ k1 shifted by -1 in bounds:
+        // the γ=(0,-1) variant reads from tile k1-1, valid when k1-1 >= 0,
+        // i.e. k1 >= 1. Paper: Vol = 4 at N=(4,5), p=(2,3).
+        let (sp, mut set) = base_space(&[2, 2]);
+        let np = sp.len();
+        let p_idx = [sp.p_index(0), sp.p_index(1)];
+        set.add_global_affine(&[0, 1], AffineExpr::constant(np, -1), &p_idx);
+        // j1 - (1 - p1) ∈ [0, p1 - 1]: off = 1 - p1 (affine).
+        let off = (-&AffineExpr::param(np, p_idx[1])).plus(1);
+        set.add_shifted_tile_membership(1, off, p_idx[1]);
+        // k1 >= 1 (source tile exists)
+        let mut c = crate::polyhedral::set::SetConstraint::zero(4, np);
+        c.var_coeffs[set.kvar(1)] = AffineExpr::constant(np, 1);
+        c.konst = AffineExpr::constant(np, -1);
+        set.add(c);
+        let ctx = context(&sp, 2);
+        let sym = count_symbolic(&set, &[2, 2], &ctx, &Default::default());
+        assert_eq!(sym.eval(&[4, 5, 2, 3]), 4, "paper Example 9: Vol(S7*2)=4");
+        // Paper chamber: 0 < p0 < N0/2 → 2 p0; p0 >= N0/2 → N0.
+        assert_eq!(sym.eval(&[8, 10, 2, 3]), 4); // 2*p0 = 4
+        assert_eq!(sym.eval(&[3, 10, 2, 3]), 3); // N0 = 3
+        for n0 in 1..7 {
+            for n1 in 1..7 {
+                for p0 in 1..=n0 {
+                    for p1 in 1..=n1 {
+                        let params = [n0, n1, p0, p1];
+                        assert_eq!(
+                            sym.eval(&params),
+                            count_concrete(&set, &[2, 2], &params),
+                            "params={params:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disjointified_form_matches() {
+        let (sp, set) = base_space(&[2, 2]);
+        let ctx = context(&sp, 2);
+        let sym = count_symbolic(&set, &[2, 2], &ctx, &Default::default());
+        let pw = sym
+            .disjointify(&ctx, 256)
+            .expect("base space should disjointify");
+        assert!(!pw.is_empty());
+        for n0 in (1..9).step_by(2) {
+            for n1 in (1..9).step_by(3) {
+                for p0 in 1..=n0 {
+                    for p1 in 1..=n1 {
+                        let params = [n0, n1, p0, p1];
+                        assert_eq!(
+                            pw.eval(&params),
+                            sym.eval(&params),
+                            "params={params:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

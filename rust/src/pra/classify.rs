@@ -1,0 +1,84 @@
+//! Variable classification (§III-B): *input* variables appear only on the
+//! right-hand side of statements, *output* variables only on the left-hand
+//! side, everything else is *internal*. External tensors referenced through
+//! [`Operand::Tensor`]/[`Lhs::Tensor`] are inputs/outputs by construction.
+
+use std::collections::BTreeMap;
+
+use super::ir::{Lhs, Operand, Pra};
+
+/// Classification of a named variable or tensor within a PRA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarClass {
+    /// Read but never defined inside the iteration space: lives in DRAM and
+    /// streams in through an I/O buffer (first case of the `L(x)` table).
+    Input,
+    /// Defined but never read inside the iteration space: streams out to
+    /// DRAM through an I/O buffer.
+    Output,
+    /// Defined and read inside the iteration space: lives in the PE
+    /// register hierarchy.
+    Internal,
+}
+
+/// Classify every variable and tensor of a PRA.
+pub fn classify(pra: &Pra) -> BTreeMap<String, VarClass> {
+    let mut defined: BTreeMap<&str, bool> = BTreeMap::new();
+    let mut used: BTreeMap<&str, bool> = BTreeMap::new();
+    for s in &pra.statements {
+        match &s.lhs {
+            Lhs::Var(n) => {
+                defined.insert(n, true);
+            }
+            Lhs::Tensor { name, .. } => {
+                defined.insert(name, true);
+            }
+        }
+        for a in &s.args {
+            match a {
+                Operand::Var { name, .. } => {
+                    used.insert(name, true);
+                }
+                Operand::Tensor { name, .. } => {
+                    used.insert(name, true);
+                }
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    for (&name, _) in defined.iter() {
+        let cls = if used.contains_key(name) {
+            VarClass::Internal
+        } else {
+            VarClass::Output
+        };
+        out.insert(name.to_string(), cls);
+    }
+    for (&name, _) in used.iter() {
+        if !defined.contains_key(name) {
+            out.insert(name.to_string(), VarClass::Input);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::gesummv::gesummv;
+
+    #[test]
+    fn gesummv_classification_matches_paper() {
+        // Paper Example 1/5: A, B, X inputs; Y output; x, a, b, sA, sA*,
+        // sB, sB* internal.
+        let pra = gesummv();
+        let cls = classify(&pra);
+        for input in ["A", "B", "X"] {
+            assert_eq!(cls[input], VarClass::Input, "{input}");
+        }
+        assert_eq!(cls["Y"], VarClass::Output);
+        for internal in ["x", "a", "b", "sA", "sA*", "sB", "sB*"] {
+            assert_eq!(cls[internal], VarClass::Internal, "{internal}");
+        }
+    }
+}

@@ -1,0 +1,462 @@
+//! Piecewise Regular Algorithm (PRA) intermediate representation.
+//!
+//! A PRA (§III-B, Eq. 2) describes an `n`-dimensional loop nest as a set of
+//! quantified single-assignment statements
+//!
+//! ```text
+//! S_q : x_q[i] = F_q(…, x_{q,r}[i − d_{q,r}], …)   if i ∈ I_q
+//! ```
+//!
+//! over a rectangular iteration space `I = {i | 0 ≤ i_ℓ < N_ℓ}` with
+//! parametric bounds. Input/output tensors live outside the iteration
+//! space and are accessed through affine index maps (the `P_q i + f_q`
+//! projections of the general PLA form, Eq. 1).
+
+use std::fmt;
+
+use crate::polyhedral::{AffineExpr, ParamSpace};
+
+/// Operation computed by a statement (the `F_q`).
+///
+/// `Copy` marks pure data-transport statements — the memory-statement set
+/// `M` of §IV-A; everything else belongs to the computational set `C`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Identity transport (1 argument).
+    Copy,
+    /// Addition (2 arguments).
+    Add,
+    /// Subtraction (2 arguments).
+    Sub,
+    /// Multiplication (2 arguments).
+    Mul,
+    /// `a + b + c` three-way addition (stencil convenience; counts as two
+    /// adder activations in the energy model).
+    Add3,
+    /// Maximum (2 arguments).
+    Max,
+}
+
+impl Op {
+    /// Number of arguments the operation consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Copy => 1,
+            Op::Add3 => 3,
+            _ => 2,
+        }
+    }
+
+    /// True for pure transport statements (set `M`).
+    pub fn is_copy(&self) -> bool {
+        matches!(self, Op::Copy)
+    }
+
+    /// Apply functionally (used by the cycle-accurate simulator and the
+    /// golden-model comparison).
+    pub fn apply(&self, args: &[f32]) -> f32 {
+        match self {
+            Op::Copy => args[0],
+            Op::Add => args[0] + args[1],
+            Op::Sub => args[0] - args[1],
+            Op::Mul => args[0] * args[1],
+            Op::Add3 => args[0] + args[1] + args[2],
+            Op::Max => args[0].max(args[1]),
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Op::Copy => "copy",
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::Mul => "mul",
+            Op::Add3 => "add3",
+            Op::Max => "max",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Affine index map for an external tensor access: `index = M·i + f`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexMap {
+    /// One row per tensor dimension; each row has `ndims` coefficients.
+    pub rows: Vec<Vec<i64>>,
+    /// Constant offset per tensor dimension.
+    pub offset: Vec<i64>,
+}
+
+impl IndexMap {
+    /// Identity map on the first `rank` iteration dimensions.
+    pub fn identity(rank: usize, ndims: usize) -> Self {
+        let mut rows = Vec::with_capacity(rank);
+        for r in 0..rank {
+            let mut row = vec![0; ndims];
+            row[r] = 1;
+            rows.push(row);
+        }
+        IndexMap { rows, offset: vec![0; rank] }
+    }
+
+    /// Map selecting single iteration dims: `dims[r]` is the iteration
+    /// dimension used for tensor dimension `r`.
+    pub fn select(dims: &[usize], ndims: usize) -> Self {
+        let mut rows = Vec::with_capacity(dims.len());
+        for &d in dims {
+            let mut row = vec![0; ndims];
+            row[d] = 1;
+            rows.push(row);
+        }
+        IndexMap { rows, offset: vec![0; dims.len()] }
+    }
+
+    /// Add a constant offset (builder).
+    pub fn with_offset(mut self, offset: Vec<i64>) -> Self {
+        assert_eq!(offset.len(), self.rows.len());
+        self.offset = offset;
+        self
+    }
+
+    /// Tensor rank.
+    pub fn rank(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Evaluate at a concrete iteration vector.
+    pub fn apply(&self, i: &[i64]) -> Vec<i64> {
+        self.rows
+            .iter()
+            .zip(&self.offset)
+            .map(|(row, off)| {
+                row.iter().zip(i).map(|(a, x)| a * x).sum::<i64>() + off
+            })
+            .collect()
+    }
+}
+
+/// A right-hand-side operand of a statement.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Operand {
+    /// Internal PRA variable `x[i − dep]`; `dep` is the dependence vector
+    /// `d_{q,r}` (all zeros for an intra-iteration read).
+    Var { name: String, dep: Vec<i64> },
+    /// External input tensor read `T[map(i)]`.
+    Tensor { name: String, map: IndexMap },
+}
+
+impl Operand {
+    /// Intra-iteration read of an internal variable.
+    pub fn var0(name: &str, ndims: usize) -> Self {
+        Operand::Var { name: name.into(), dep: vec![0; ndims] }
+    }
+
+    /// Read with a dependence vector.
+    pub fn var(name: &str, dep: Vec<i64>) -> Self {
+        Operand::Var { name: name.into(), dep }
+    }
+
+    /// Input tensor read.
+    pub fn tensor(name: &str, map: IndexMap) -> Self {
+        Operand::Tensor { name: name.into(), map }
+    }
+}
+
+/// Left-hand side of a statement.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Lhs {
+    /// Internal variable `x[i]` (PRA form: identity index, zero offset).
+    Var(String),
+    /// Output tensor write `T[map(i)]`.
+    Tensor { name: String, map: IndexMap },
+}
+
+impl Lhs {
+    /// Name of the written variable/tensor.
+    pub fn name(&self) -> &str {
+        match self {
+            Lhs::Var(n) => n,
+            Lhs::Tensor { name, .. } => name,
+        }
+    }
+}
+
+/// One affine condition `Σ a_ℓ·i_ℓ + konst ≥ 0` of a condition space `I_q`
+/// (the `konst` may be parametric, e.g. `N_1 − 1` for `i_1 = N_1 − 1`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CondConstraint {
+    pub a: Vec<i64>,
+    pub konst: AffineExpr,
+}
+
+impl CondConstraint {
+    /// `i_dim ≥ c`.
+    pub fn ge_const(dim: usize, c: i64, ndims: usize, nparams: usize) -> Self {
+        let mut a = vec![0; ndims];
+        a[dim] = 1;
+        CondConstraint { a, konst: AffineExpr::constant(nparams, -c) }
+    }
+
+    /// `i_dim ≤ c`.
+    pub fn le_const(dim: usize, c: i64, ndims: usize, nparams: usize) -> Self {
+        let mut a = vec![0; ndims];
+        a[dim] = -1;
+        CondConstraint { a, konst: AffineExpr::constant(nparams, c) }
+    }
+
+    /// `i_dim ≥ N_{ndim} − 1 + c` (offsets from the top of a loop bound);
+    /// `n_param` is the parameter index of `N`.
+    pub fn ge_n_plus(
+        dim: usize,
+        n_param: usize,
+        c: i64,
+        ndims: usize,
+        nparams: usize,
+    ) -> Self {
+        let mut a = vec![0; ndims];
+        a[dim] = 1;
+        CondConstraint {
+            a,
+            konst: (-&AffineExpr::param(nparams, n_param)).plus(1 - c),
+        }
+    }
+
+    /// `i_dim ≤ N_{ndim} − 2` (i.e. strictly below the last index).
+    pub fn le_n_minus_2(
+        dim: usize,
+        n_param: usize,
+        ndims: usize,
+        nparams: usize,
+    ) -> Self {
+        let mut a = vec![0; ndims];
+        a[dim] = -1;
+        CondConstraint {
+            a,
+            konst: AffineExpr::param(nparams, n_param).plus(-2),
+        }
+    }
+
+    /// Evaluate at concrete iteration point + parameters.
+    pub fn holds(&self, i: &[i64], params: &[i64]) -> bool {
+        let lin: i64 = self.a.iter().zip(i).map(|(a, x)| a * x).sum();
+        lin + self.konst.eval(params) >= 0
+    }
+}
+
+/// A quantified statement (Eq. 2 plus tensor I/O projections).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Statement {
+    /// Human-readable label, e.g. `"S7"`.
+    pub name: String,
+    pub lhs: Lhs,
+    pub op: Op,
+    pub args: Vec<Operand>,
+    /// Conjunction of conditions forming `I_q` (empty = whole space).
+    pub cond: Vec<CondConstraint>,
+}
+
+impl Statement {
+    /// True for transport statements (set `M` of §IV-A).
+    pub fn is_memory(&self) -> bool {
+        self.op.is_copy()
+    }
+
+    /// Condition-space membership at a concrete iteration point.
+    pub fn active_at(&self, i: &[i64], params: &[i64]) -> bool {
+        self.cond.iter().all(|c| c.holds(i, params))
+    }
+}
+
+/// Declaration of an external tensor with its shape in terms of loop-bound
+/// parameters (each dimension is one `N` parameter index, or a fixed size).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorDecl {
+    pub name: String,
+    /// Per-dimension extent: parameter index into the PRA's [`ParamSpace`].
+    pub shape: Vec<TensorDim>,
+}
+
+/// One tensor dimension extent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorDim {
+    /// Extent is loop-bound parameter with this index.
+    Param(usize),
+    /// Fixed extent.
+    Fixed(i64),
+}
+
+impl TensorDim {
+    /// Concrete extent under the given parameter values.
+    pub fn extent(&self, params: &[i64]) -> i64 {
+        match self {
+            TensorDim::Param(i) => params[*i],
+            TensorDim::Fixed(v) => *v,
+        }
+    }
+}
+
+impl TensorDecl {
+    /// Concrete shape under parameter values.
+    pub fn concrete_shape(&self, params: &[i64]) -> Vec<i64> {
+        self.shape.iter().map(|d| d.extent(params)).collect()
+    }
+
+    /// Number of elements under parameter values.
+    pub fn num_elems(&self, params: &[i64]) -> i64 {
+        self.concrete_shape(params).iter().product()
+    }
+}
+
+/// A full PRA: iteration space `0 ≤ i_ℓ < N_ℓ`, statements, tensors.
+#[derive(Debug, Clone)]
+pub struct Pra {
+    pub name: String,
+    /// Loop depth `n`.
+    pub ndims: usize,
+    /// Parameter space (`N0.., p0..` by convention).
+    pub space: ParamSpace,
+    pub statements: Vec<Statement>,
+    /// External tensors (inputs and outputs).
+    pub tensors: Vec<TensorDecl>,
+}
+
+impl Pra {
+    /// Look up a tensor declaration.
+    pub fn tensor(&self, name: &str) -> Option<&TensorDecl> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// Look up a statement by name.
+    pub fn statement(&self, name: &str) -> Option<&Statement> {
+        self.statements.iter().find(|s| s.name == name)
+    }
+
+    /// Concrete iteration-space volume `Π N_ℓ`.
+    pub fn iter_volume(&self, params: &[i64]) -> i128 {
+        (0..self.ndims)
+            .map(|l| params[self.space.n_index(l)] as i128)
+            .product()
+    }
+
+    /// Iterate all points of the concrete iteration space in lexicographic
+    /// order (used by test oracles; the simulator walks schedule order).
+    pub fn iter_points(&self, params: &[i64]) -> Vec<Vec<i64>> {
+        let bounds: Vec<i64> =
+            (0..self.ndims).map(|l| params[self.space.n_index(l)]).collect();
+        let mut out = vec![vec![]];
+        for &b in &bounds {
+            let mut next = Vec::with_capacity(out.len() * b as usize);
+            for base in &out {
+                for v in 0..b {
+                    let mut x = base.clone();
+                    x.push(v);
+                    next.push(x);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+}
+
+/// A multi-phase workload: a sequence of PRAs executed back to back (e.g.
+/// ATAX = `tmp = A·x` then `y = Aᵀ·tmp`). Energy/latency are additive over
+/// phases; tensors named identically flow from one phase to the next.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub phases: Vec<Pra>,
+}
+
+impl Workload {
+    /// Single-phase wrapper.
+    pub fn single(pra: Pra) -> Self {
+        Workload { name: pra.name.clone(), phases: vec![pra] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_semantics() {
+        assert_eq!(Op::Copy.apply(&[3.5]), 3.5);
+        assert_eq!(Op::Add.apply(&[1.0, 2.0]), 3.0);
+        assert_eq!(Op::Sub.apply(&[1.0, 2.0]), -1.0);
+        assert_eq!(Op::Mul.apply(&[3.0, 2.0]), 6.0);
+        assert_eq!(Op::Add3.apply(&[1.0, 2.0, 4.0]), 7.0);
+        assert_eq!(Op::Max.apply(&[1.0, 2.0]), 2.0);
+        assert_eq!(Op::Copy.arity(), 1);
+        assert_eq!(Op::Add3.arity(), 3);
+        assert_eq!(Op::Mul.arity(), 2);
+        assert!(Op::Copy.is_copy());
+        assert!(!Op::Add.is_copy());
+    }
+
+    #[test]
+    fn index_map_apply() {
+        // X[i1] from a 2-deep nest.
+        let m = IndexMap::select(&[1], 2);
+        assert_eq!(m.apply(&[3, 7]), vec![7]);
+        // A[i0, i2] from a 3-deep nest.
+        let m2 = IndexMap::select(&[0, 2], 3);
+        assert_eq!(m2.apply(&[1, 2, 3]), vec![1, 3]);
+        // stencil offset A[i1 - 1]
+        let m3 = IndexMap::select(&[1], 2).with_offset(vec![-1]);
+        assert_eq!(m3.apply(&[0, 5]), vec![4]);
+        let id = IndexMap::identity(2, 2);
+        assert_eq!(id.apply(&[4, 9]), vec![4, 9]);
+        assert_eq!(id.rank(), 2);
+    }
+
+    #[test]
+    fn cond_constraints() {
+        let nd = 2;
+        let np = 4; // N0 N1 p0 p1
+        // i0 = 0 → (i0 >= 0) ∧ (i0 <= 0)
+        let ge = CondConstraint::ge_const(0, 0, nd, np);
+        let le = CondConstraint::le_const(0, 0, nd, np);
+        assert!(ge.holds(&[0, 3], &[4, 5, 2, 3]));
+        assert!(le.holds(&[0, 3], &[4, 5, 2, 3]));
+        assert!(!le.holds(&[1, 3], &[4, 5, 2, 3]));
+        // i1 = N1 - 1
+        let top = CondConstraint::ge_n_plus(1, 1, 0, nd, np);
+        assert!(top.holds(&[0, 4], &[4, 5, 2, 3]));
+        assert!(!top.holds(&[0, 3], &[4, 5, 2, 3]));
+        // i1 <= N1 - 2
+        let below = CondConstraint::le_n_minus_2(1, 1, nd, np);
+        assert!(below.holds(&[0, 3], &[4, 5, 2, 3]));
+        assert!(!below.holds(&[0, 4], &[4, 5, 2, 3]));
+    }
+
+    #[test]
+    fn tensor_decl_shapes() {
+        let t = TensorDecl {
+            name: "A".into(),
+            shape: vec![TensorDim::Param(0), TensorDim::Param(1)],
+        };
+        assert_eq!(t.concrete_shape(&[4, 5, 2, 3]), vec![4, 5]);
+        assert_eq!(t.num_elems(&[4, 5, 2, 3]), 20);
+        let f = TensorDecl { name: "w".into(), shape: vec![TensorDim::Fixed(3)] };
+        assert_eq!(f.num_elems(&[4, 5, 2, 3]), 3);
+    }
+
+    #[test]
+    fn pra_iter_points() {
+        let pra = Pra {
+            name: "t".into(),
+            ndims: 2,
+            space: ParamSpace::loop_nest(2),
+            statements: vec![],
+            tensors: vec![],
+        };
+        let pts = pra.iter_points(&[2, 3, 1, 1]);
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pra.iter_volume(&[2, 3, 1, 1]), 6);
+        assert_eq!(pts[0], vec![0, 0]);
+        assert_eq!(pts[5], vec![1, 2]);
+    }
+}

@@ -1,0 +1,16 @@
+//! PRA/PLA loop-nest intermediate representation (§III-B of the paper),
+//! variable classification, the reduced dependence graph, and structural
+//! validation.
+
+pub mod classify;
+pub mod ir;
+pub mod rdg;
+pub mod validate;
+
+pub use classify::{classify, VarClass};
+pub use ir::{
+    CondConstraint, IndexMap, Lhs, Op, Operand, Pra, Statement, TensorDecl,
+    TensorDim, Workload,
+};
+pub use rdg::{Rdg, RdgEdge};
+pub use validate::{validate, PraError};

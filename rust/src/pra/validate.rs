@@ -1,0 +1,199 @@
+//! Structural validation of PRAs: catches malformed workload definitions
+//! before they reach tiling, analysis, or simulation.
+
+use std::collections::BTreeSet;
+
+use super::ir::{Lhs, Operand, Pra};
+use super::rdg::Rdg;
+
+/// Validation failure.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum PraError {
+    #[error("statement {0}: op {1} expects {2} args, got {3}")]
+    Arity(String, String, usize, usize),
+    #[error("statement {0}: dependence vector has {1} entries, loop depth is {2}")]
+    DepLen(String, usize, usize),
+    #[error("statement {0}: reads undeclared tensor {1}")]
+    UnknownTensor(String, String),
+    #[error("statement {0}: reads variable {1} that no statement defines")]
+    UndefinedVar(String, String),
+    #[error("statement {0}: condition coefficient vector has {1} entries, loop depth is {2}")]
+    CondLen(String, usize, usize),
+    #[error("intra-iteration dependence cycle (zero-dependence subgraph is cyclic)")]
+    ZeroDepCycle,
+    #[error("statement {0}: dependence vector {1:?} is not lexicographically non-negative; \
+             the lexicographic interpreter cannot execute this PRA")]
+    NonLexPositiveDep(String, Vec<i64>),
+    #[error("duplicate statement name {0}")]
+    DuplicateName(String),
+}
+
+/// Validate a PRA. Returns all detected problems (empty = valid).
+pub fn validate(pra: &Pra) -> Vec<PraError> {
+    let mut errs = Vec::new();
+    let mut names = BTreeSet::new();
+    let defined: BTreeSet<&str> = pra
+        .statements
+        .iter()
+        .filter_map(|s| match &s.lhs {
+            Lhs::Var(n) => Some(n.as_str()),
+            Lhs::Tensor { .. } => None,
+        })
+        .collect();
+    for s in &pra.statements {
+        if !names.insert(s.name.clone()) {
+            errs.push(PraError::DuplicateName(s.name.clone()));
+        }
+        if s.args.len() != s.op.arity() {
+            errs.push(PraError::Arity(
+                s.name.clone(),
+                s.op.to_string(),
+                s.op.arity(),
+                s.args.len(),
+            ));
+        }
+        for a in &s.args {
+            match a {
+                Operand::Var { name, dep } => {
+                    if dep.len() != pra.ndims {
+                        errs.push(PraError::DepLen(
+                            s.name.clone(),
+                            dep.len(),
+                            pra.ndims,
+                        ));
+                    }
+                    if !defined.contains(name.as_str()) {
+                        errs.push(PraError::UndefinedVar(
+                            s.name.clone(),
+                            name.clone(),
+                        ));
+                    }
+                    // Lexicographic positivity: first nonzero must be > 0.
+                    if let Some(&first) = dep.iter().find(|&&d| d != 0) {
+                        if first < 0 {
+                            errs.push(PraError::NonLexPositiveDep(
+                                s.name.clone(),
+                                dep.clone(),
+                            ));
+                        }
+                    }
+                }
+                Operand::Tensor { name, .. } => {
+                    if pra.tensor(name).is_none() {
+                        errs.push(PraError::UnknownTensor(
+                            s.name.clone(),
+                            name.clone(),
+                        ));
+                    }
+                }
+            }
+        }
+        if let Lhs::Tensor { name, .. } = &s.lhs {
+            if pra.tensor(name).is_none() {
+                errs.push(PraError::UnknownTensor(s.name.clone(), name.clone()));
+            }
+        }
+        for c in &s.cond {
+            if c.a.len() != pra.ndims {
+                errs.push(PraError::CondLen(
+                    s.name.clone(),
+                    c.a.len(),
+                    pra.ndims,
+                ));
+            }
+        }
+    }
+    let rdg = Rdg::build(pra);
+    if rdg.intra_iteration_order(pra.statements.len()).is_none() {
+        errs.push(PraError::ZeroDepCycle);
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::ParamSpace;
+    use crate::pra::ir::*;
+
+    #[test]
+    fn all_builtin_workloads_validate() {
+        for wl in crate::workloads::all() {
+            for phase in &wl.phases {
+                let errs = validate(phase);
+                assert!(
+                    errs.is_empty(),
+                    "{} phase {}: {errs:?}",
+                    wl.name,
+                    phase.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bad_arity_detected() {
+        let nd = 1;
+        let pra = Pra {
+            name: "bad".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![Statement {
+                name: "S1".into(),
+                lhs: Lhs::Var("a".into()),
+                op: Op::Add,
+                args: vec![Operand::var0("a", nd)],
+                cond: vec![],
+            }],
+            tensors: vec![],
+        };
+        let errs = validate(&pra);
+        assert!(errs.iter().any(|e| matches!(e, PraError::Arity(..))));
+    }
+
+    #[test]
+    fn undefined_var_and_tensor_detected() {
+        let nd = 1;
+        let pra = Pra {
+            name: "bad".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![Statement {
+                name: "S1".into(),
+                lhs: Lhs::Var("a".into()),
+                op: Op::Add,
+                args: vec![
+                    Operand::var0("ghost", nd),
+                    Operand::tensor("T", IndexMap::identity(1, nd)),
+                ],
+                cond: vec![],
+            }],
+            tensors: vec![],
+        };
+        let errs = validate(&pra);
+        assert!(errs.iter().any(|e| matches!(e, PraError::UndefinedVar(..))));
+        assert!(errs.iter().any(|e| matches!(e, PraError::UnknownTensor(..))));
+    }
+
+    #[test]
+    fn non_lex_positive_dep_detected() {
+        let nd = 2;
+        let pra = Pra {
+            name: "bad".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![Statement {
+                name: "S1".into(),
+                lhs: Lhs::Var("a".into()),
+                op: Op::Copy,
+                args: vec![Operand::var("a", vec![-1, 0])],
+                cond: vec![],
+            }],
+            tensors: vec![],
+        };
+        let errs = validate(&pra);
+        assert!(errs
+            .iter()
+            .any(|e| matches!(e, PraError::NonLexPositiveDep(..))));
+    }
+}

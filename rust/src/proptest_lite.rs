@@ -1,0 +1,120 @@
+//! Minimal property-testing harness (the offline vendor tree has no
+//! proptest). A seeded xorshift generator drives randomized cases; on
+//! failure the seed and the first failing case are reported so runs
+//! reproduce exactly.
+
+/// Deterministic xorshift64* PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Seeded construction (seed 0 is remapped: xorshift state must be
+    /// non-zero).
+    pub fn new(seed: u64) -> Self {
+        Rng(if seed == 0 { 0x9e3779b97f4a7c15 } else { seed })
+    }
+
+    /// Next raw value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo + 1) as u64;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    /// Uniform choice from a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[(self.next_u64() % items.len() as u64) as usize]
+    }
+}
+
+/// Run `cases` randomized property cases. `gen` draws an input from the
+/// RNG; `prop` returns `Err(description)` on failure. Panics with the
+/// seed, case index, and debug-rendered input of the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name} failed (seed {seed}, case {case}):\n\
+                 input: {input:?}\n{msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.i64_in(-3, 5);
+            assert!((-3..=5).contains(&v));
+        }
+        let pick = *r.choose(&[1, 2, 3]);
+        assert!([1, 2, 3].contains(&pick));
+    }
+
+    #[test]
+    fn check_passes_good_property() {
+        check(
+            "sum-commutes",
+            1,
+            100,
+            |r| (r.i64_in(0, 9), r.i64_in(0, 9)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property bad failed")]
+    fn check_reports_failure() {
+        check(
+            "bad",
+            1,
+            10,
+            |r| r.i64_in(0, 9),
+            |&v| {
+                if v < 100 {
+                    Err(format!("v = {v}"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+}

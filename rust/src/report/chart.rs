@@ -1,0 +1,110 @@
+//! ASCII line charts for terminal rendering of the paper's figures
+//! (log-scale aware, multiple series).
+
+/// Render series as an ASCII chart. `series` = (label, points); points are
+/// (x, y). `logy` plots log10(y).
+pub fn ascii_chart(
+    title: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+    logy: bool,
+) -> String {
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let tx = |v: f64| v;
+    let ty = |v: f64| if logy { v.max(1e-12).log10() } else { v };
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().map(|&(x, y)| (tx(x), ty(y))))
+        .collect();
+    if all.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+    let (mut y0, mut y1) = (f64::MAX, f64::MIN);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let m = marks[si % marks.len()];
+        for &(x, y) in pts {
+            let gx = (((tx(x) - x0) / (x1 - x0)) * (width - 1) as f64).round()
+                as usize;
+            let gy = (((ty(y) - y0) / (y1 - y0)) * (height - 1) as f64)
+                .round() as usize;
+            let gy = height - 1 - gy.min(height - 1);
+            grid[gy][gx.min(width - 1)] = m;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let ylab = |v: f64| if logy { format!("1e{v:.1}") } else { format!("{v:.3e}") };
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            ylab(y1)
+        } else if r == height - 1 {
+            ylab(y0)
+        } else {
+            String::new()
+        };
+        out.push_str(&format!("{label:>10} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>10} +{}\n{:>12}{:<.0}{:>width$.0}\n",
+        "",
+        "-".repeat(width),
+        "",
+        x0,
+        x1,
+        width = width - 2
+    ));
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {label}\n", marks[si % marks.len()]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_and_legend() {
+        let s = ascii_chart(
+            "t",
+            &[("lin", vec![(1.0, 1.0), (2.0, 2.0)]), ("quad", vec![(1.0, 1.0), (2.0, 4.0)])],
+            40,
+            10,
+            false,
+        );
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+        assert!(s.contains("lin"));
+        assert!(s.contains("quad"));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let s = ascii_chart("t", &[("e", vec![])], 10, 5, true);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn single_point_no_panic() {
+        let s = ascii_chart("t", &[("p", vec![(1.0, 5.0)])], 10, 5, false);
+        assert!(s.contains('*'));
+    }
+}

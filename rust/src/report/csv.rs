@@ -1,0 +1,109 @@
+//! Minimal CSV/markdown table emitters.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple in-memory table: header plus stringly-typed rows.
+#[derive(Debug, Clone, Default)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    /// Create with a header.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        CsvTable {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header width).
+    pub fn push<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// Render as CSV (quotes cells containing commas).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |cell: &str| {
+            if cell.contains(',') || cell.contains('"') {
+                format!("\"{}\"", cell.replace('"', "\"\""))
+            } else {
+                cell.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Render as a markdown table.
+    pub fn to_markdown(&self) -> String {
+        markdown_table(&self.header, &self.rows)
+    }
+}
+
+/// Render header + rows as a markdown table.
+pub fn markdown_table(header: &[String], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "| {} |", header.join(" | "));
+    let _ = writeln!(
+        out,
+        "|{}|",
+        header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+    );
+    for r in rows {
+        let _ = writeln!(out, "| {} |", r.join(" | "));
+    }
+    out
+}
+
+/// Write a table to `<dir>/<name>.csv`, creating the directory.
+pub fn write_csv(table: &CsvTable, dir: &Path, name: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.csv")), table.to_csv())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.push(vec!["1", "x,y"]);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    fn markdown_render() {
+        let mut t = CsvTable::new(vec!["n", "v"]);
+        t.push(vec!["8", "1.5"]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("| n | v |"));
+        assert!(md.contains("| 8 | 1.5 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut t = CsvTable::new(vec!["a"]);
+        t.push(vec!["1", "2"]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Report emitters: CSV tables, markdown tables, and ASCII line charts for
+//! regenerating the paper's tables and figures (the offline vendor tree
+//! has no plotting or serde crates; these hand-rolled emitters are all the
+//! benches and the `figures` subcommand need).
+
+pub mod chart;
+pub mod csv;
+
+pub use chart::ascii_chart;
+pub use csv::{markdown_table, write_csv, CsvTable};

@@ -1,0 +1,112 @@
+//! Catalog binding each AOT artifact to its workload: input tensor order,
+//! output tensor order, and the loop bounds the artifact was lowered at.
+//! Mirrors `python/compile/model.py::MANIFEST` (checked against
+//! `artifacts/manifest.txt` at load time).
+
+/// Binding between a workload and its AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Workload / artifact name.
+    pub name: &'static str,
+    /// Workload tensor names, in the artifact's positional input order.
+    pub inputs: &'static [&'static str],
+    /// Workload tensor names, in the artifact's tuple output order.
+    pub outputs: &'static [&'static str],
+    /// Loop bounds `N` per phase that reproduce the artifact's shapes.
+    pub bounds: &'static [&'static [i64]],
+}
+
+/// The full artifact catalog.
+pub fn catalog() -> Vec<ArtifactSpec> {
+    vec![
+        ArtifactSpec {
+            name: "gesummv",
+            inputs: &["A", "B", "X"],
+            outputs: &["Y"],
+            bounds: &[&[16, 16]],
+        },
+        ArtifactSpec {
+            name: "gemm",
+            inputs: &["A", "B"],
+            outputs: &["C"],
+            bounds: &[&[16, 16, 16]],
+        },
+        ArtifactSpec {
+            name: "atax",
+            inputs: &["A", "X"],
+            outputs: &["Y", "TMP"],
+            bounds: &[&[16, 16], &[16, 16]],
+        },
+        ArtifactSpec {
+            name: "bicg",
+            inputs: &["A", "P", "R"],
+            outputs: &["Q", "S"],
+            bounds: &[&[16, 16]],
+        },
+        ArtifactSpec {
+            name: "mvt",
+            inputs: &["A", "Y1", "Y2", "X1in", "X2in"],
+            outputs: &["X1", "X2"],
+            bounds: &[&[16, 16]],
+        },
+        ArtifactSpec {
+            name: "syrk",
+            inputs: &["A", "Cin"],
+            outputs: &["C"],
+            bounds: &[&[16, 16, 16]],
+        },
+        ArtifactSpec {
+            name: "k2mm",
+            inputs: &["A", "B", "C"],
+            outputs: &["D", "TMP"],
+            bounds: &[&[16, 16, 16], &[16, 16, 16]],
+        },
+        ArtifactSpec {
+            name: "jacobi1d",
+            inputs: &["Ain"],
+            outputs: &["Aout"],
+            bounds: &[&[4, 32]],
+        },
+        ArtifactSpec {
+            name: "doitgen",
+            inputs: &["A", "C4"],
+            outputs: &["SUM"],
+            bounds: &[&[4, 4, 8, 8]],
+        },
+        ArtifactSpec {
+            name: "gemver",
+            inputs: &["A", "U1", "V1", "U2", "V2", "Y", "Z"],
+            outputs: &["B", "X", "W"],
+            bounds: &[&[16, 16], &[16, 16], &[16, 16]],
+        },
+    ]
+}
+
+/// Look up one artifact spec.
+pub fn spec(name: &str) -> Option<ArtifactSpec> {
+    catalog().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_covers_all_workloads() {
+        let names: Vec<&str> = catalog().iter().map(|s| s.name).collect();
+        for wl in crate::workloads::all() {
+            assert!(names.contains(&wl.name.as_str()), "{}", wl.name);
+        }
+    }
+
+    #[test]
+    fn bounds_match_phase_count() {
+        for s in catalog() {
+            let wl = crate::workloads::by_name(s.name).unwrap();
+            assert_eq!(s.bounds.len(), wl.phases.len(), "{}", s.name);
+            for (b, ph) in s.bounds.iter().zip(&wl.phases) {
+                assert_eq!(b.len(), ph.ndims, "{} {}", s.name, ph.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and execute them from Rust — the L2/L1 golden
+//! numeric model on the L3 hot path, with Python nowhere at runtime.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`; artifacts are
+//! lowered with `return_tuple=True`, so results are always tuples.
+
+pub mod catalog;
+
+pub use catalog::{catalog, ArtifactSpec};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::workloads::Tensor;
+
+/// A loaded PJRT executable with its input/output shape manifest.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Input shapes as lowered (from `artifacts/manifest.txt`).
+    pub input_shapes: Vec<Vec<i64>>,
+}
+
+/// The artifact runtime: a CPU PJRT client plus compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: BTreeMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn new() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, models: BTreeMap::new() })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load(
+        &mut self,
+        name: &str,
+        path: &Path,
+        input_shapes: Vec<Vec<i64>>,
+    ) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.models
+            .insert(name.to_string(), LoadedModel { exe, input_shapes });
+        Ok(())
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.txt` (written by
+    /// `python -m compile.aot`). Returns the loaded names.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| {
+                format!(
+                    "{}/manifest.txt missing — run `make artifacts`",
+                    dir.display()
+                )
+            })?;
+        let mut names = Vec::new();
+        for line in manifest.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (name, shapes) =
+                line.split_once(' ').context("malformed manifest line")?;
+            let input_shapes: Vec<Vec<i64>> = shapes
+                .split(';')
+                .map(|s| {
+                    s.split(',')
+                        .filter(|x| !x.is_empty() && *x != "scalar")
+                        .map(|x| x.parse::<i64>().map_err(Into::into))
+                        .collect::<Result<Vec<i64>>>()
+                })
+                .collect::<Result<_>>()?;
+            self.load(name, &dir.join(format!("{name}.hlo.txt")), input_shapes)?;
+            names.push(name.to_string());
+        }
+        Ok(names)
+    }
+
+    /// True when `name` has been loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    /// Execute a loaded model on input tensors, returning output tensors.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let model = self
+            .models
+            .get(name)
+            .with_context(|| format!("model {name} not loaded"))?;
+        if inputs.len() != model.input_shapes.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                model.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, want) in inputs.iter().zip(&model.input_shapes) {
+            if &t.shape != want {
+                bail!(
+                    "{name}: input shape {:?} does not match artifact {want:?}",
+                    t.shape
+                );
+            }
+            let lit = xla::Literal::vec1(&t.data).reshape(&t.shape)?;
+            literals.push(lit);
+        }
+        let result = model.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // return_tuple=True lowering: unpack the tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = lit.array_shape()?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            let data = lit.to_vec::<f32>()?;
+            out.push(Tensor { shape: dims, data });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_construction() {
+        let rt = Runtime::new().expect("PJRT CPU client");
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+        assert!(!rt.has("nothing"));
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let rt = Runtime::new().unwrap();
+        let err = rt.execute("ghost", &[]).unwrap_err();
+        assert!(err.to_string().contains("not loaded"));
+    }
+}

@@ -1,0 +1,99 @@
+//! Latency evaluation (Eq. 8 of the paper) and the single-iteration
+//! critical chain `L_c`.
+
+use crate::pra::{Pra, Rdg};
+use crate::tiling::TiledPra;
+
+use super::vectors::Schedule;
+
+/// `L_c = max_q(τ_q + w_q)`: the longest chain of intra-iteration
+/// (zero-dependence) statement executions, with unit latency per statement
+/// (`w_q = 1`, as in the paper's Example 3).
+pub fn critical_chain(pra: &Pra) -> i64 {
+    let rdg = Rdg::build(pra);
+    let nq = pra.statements.len();
+    let order = rdg
+        .intra_iteration_order(nq)
+        .expect("PRA has an intra-iteration dependence cycle");
+    // Longest path in node count over zero-dep edges.
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); nq];
+    for e in &rdg.edges {
+        if let Some(from) = e.from {
+            if e.dep.iter().all(|&d| d == 0) && from != e.to {
+                adj[from].push(e.to);
+            }
+        }
+    }
+    let mut depth = vec![1i64; nq];
+    for &q in &order {
+        for &nxt in &adj[q] {
+            depth[nxt] = depth[nxt].max(depth[q] + 1);
+        }
+    }
+    depth.into_iter().max().unwrap_or(0)
+}
+
+/// Global latency `L = λ^J·(p−1) + λ^K·(t−1) + L_c` (Eq. 8) at concrete
+/// parameters.
+pub fn latency(schedule: &Schedule, tiled: &TiledPra, params: &[i64]) -> i64 {
+    let n = tiled.pra.ndims;
+    let lj = schedule.lambda_j_at(params);
+    let lk = schedule.lambda_k_at(params);
+    let mut l = schedule.lc;
+    for dim in 0..n {
+        let p_l = params[tiled.pra.space.p_index(dim)];
+        l += lj[dim] * (p_l - 1);
+        l += lk[dim] * (tiled.mapping.t[dim] - 1);
+    }
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::find_schedule;
+    use crate::tiling::{tile_pra, ArrayMapping};
+    use crate::workloads::gemm::gemm;
+    use crate::workloads::gesummv::gesummv;
+
+    #[test]
+    fn gesummv_critical_chain_is_4() {
+        // Paper Example 3: L_c = 4 (x → a → sA → Y).
+        assert_eq!(critical_chain(&gesummv()), 4);
+    }
+
+    #[test]
+    fn example3_latency_16() {
+        // Paper Example 3: N = 4×5, p = (2,3), t = (2,2), π = 1 → L = 16.
+        let tiled = tile_pra(&gesummv(), &ArrayMapping::new(vec![2, 2]));
+        let s = find_schedule(&tiled, 1).unwrap();
+        assert_eq!(latency(&s, &tiled, &[4, 5, 2, 3]), 16);
+    }
+
+    #[test]
+    fn latency_grows_with_problem_size() {
+        let tiled = tile_pra(&gesummv(), &ArrayMapping::new(vec![2, 2]));
+        let s = find_schedule(&tiled, 1).unwrap();
+        let mut prev = 0;
+        for h in 1..6 {
+            let n = 4 * h;
+            let params = tiled.mapping.params_for(&[n, n]);
+            let l = latency(&s, &tiled, &params);
+            assert!(l > prev, "latency must increase: {l} after {prev}");
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn gemm_latency_dominated_by_reduction() {
+        // GEMM on 2×2×1: the reduction dim stays inside the PE, so latency
+        // scales with N0·N1·N2 / #PEs to first order.
+        let tiled = tile_pra(&gemm(), &ArrayMapping::new(vec![2, 2, 1]));
+        let s = find_schedule(&tiled, 1).unwrap();
+        let params = tiled.mapping.params_for(&[8, 8, 8]);
+        let l = latency(&s, &tiled, &params);
+        // one tile is 4·4·8 = 128 iterations, sequential ⇒ L ≥ 128.
+        assert!(l >= 128, "L = {l}");
+        assert!(l < 4 * 128, "L = {l} should not serialize all tiles");
+    }
+}

@@ -1,0 +1,17 @@
+//! Symbolic LSGP scheduling (§III-D of the paper).
+//!
+//! Iterations inside a tile execute sequentially (initiation interval `π`)
+//! in a lexicographic order given by a dimension permutation; tiles execute
+//! in parallel, offset by the inter-tile schedule vector `λ^K`. Both
+//! vectors are *symbolic* — their entries are (products of) tile-size
+//! parameters — and the global latency follows Eq. 8:
+//!
+//! ```text
+//! L = λ^J·(p−1) + λ^K·(t−1) + L_c
+//! ```
+
+pub mod latency;
+pub mod vectors;
+
+pub use latency::{critical_chain, latency};
+pub use vectors::{find_schedule, Schedule, ScheduleError};

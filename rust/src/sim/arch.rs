@@ -1,0 +1,109 @@
+//! Architecture description of the simulated TCPA — the Rust mirror of the
+//! XML-based architectural description driving the authors' simulator
+//! (§V-A). Captures the array geometry, per-PE register-file sizes,
+//! functional-unit latencies, and I/O buffer capacities.
+
+use crate::tiling::ArrayMapping;
+
+/// Functional-unit latencies in cycles (`w_q` of Eq. 8; the paper's
+/// examples use 1 for every operation).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FuLatencies {
+    pub add: i64,
+    pub mul: i64,
+    pub copy: i64,
+}
+
+impl Default for FuLatencies {
+    fn default() -> Self {
+        FuLatencies { add: 1, mul: 1, copy: 1 }
+    }
+}
+
+/// Register-file sizes per PE (entries per class). The simulator tracks
+/// high-water occupancy against these and reports pressure violations —
+/// mapping decisions that exceed physical register files would not be
+/// realizable on the modeled TCPA.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegFileSizes {
+    /// General-purpose registers (RD).
+    pub rd: usize,
+    /// Feedback registers (FD) — sized like the ALPACA-class arrays'
+    /// feedback FIFOs.
+    pub fd: usize,
+    /// Input registers (ID).
+    pub id: usize,
+    /// Output registers (OD).
+    pub od: usize,
+}
+
+impl Default for RegFileSizes {
+    fn default() -> Self {
+        RegFileSizes { rd: 16, fd: 64, id: 8, od: 8 }
+    }
+}
+
+/// Full architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Array geometry: tiles per loop dimension.
+    pub mapping: ArrayMapping,
+    pub regs: RegFileSizes,
+    pub fu: FuLatencies,
+    /// I/O buffer capacity per array border, in elements.
+    pub iob_capacity: usize,
+    /// Initiation interval the PEs are modulo-scheduled for.
+    pub pi: i64,
+}
+
+impl ArchConfig {
+    /// An array of the given shape with default PE parameters.
+    pub fn with_array(t: Vec<i64>) -> Self {
+        ArchConfig {
+            mapping: ArrayMapping::new(t),
+            regs: RegFileSizes::default(),
+            fu: FuLatencies::default(),
+            iob_capacity: 16 * 1024,
+            pi: 1,
+        }
+    }
+
+    /// The paper's evaluation target: an 8×8 PE grid (for 2-deep nests;
+    /// deeper nests keep extra dimensions PE-local).
+    pub fn array_8x8_for(ndims: usize) -> Self {
+        let mut t = vec![8, 8];
+        while t.len() < ndims {
+            t.push(1);
+        }
+        t.truncate(ndims);
+        Self::with_array(t)
+    }
+
+    /// Number of PEs.
+    pub fn num_pes(&self) -> i64 {
+        self.mapping.num_pes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sizes() {
+        let a = ArchConfig::with_array(vec![2, 2]);
+        assert_eq!(a.num_pes(), 4);
+        assert_eq!(a.regs.rd, 16);
+        assert_eq!(a.fu.mul, 1);
+        assert_eq!(a.pi, 1);
+    }
+
+    #[test]
+    fn array_8x8_pads_depth() {
+        let a = ArchConfig::array_8x8_for(3);
+        assert_eq!(a.mapping.t, vec![8, 8, 1]);
+        assert_eq!(a.num_pes(), 64);
+        let b = ArchConfig::array_8x8_for(2);
+        assert_eq!(b.mapping.t, vec![8, 8]);
+    }
+}

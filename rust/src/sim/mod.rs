@@ -1,0 +1,17 @@
+//! Cycle-accurate TCPA simulator — the paper's validation baseline (§V-A).
+//!
+//! Executes a tiled + scheduled loop nest on a modeled PE array with real
+//! data values, counting every memory access by class and every operation.
+//! Its cost grows with the iteration-space volume — exactly the scaling the
+//! symbolic analysis (Fig. 4) removes — and its counts must equal the
+//! symbolic counts **exactly**.
+
+pub mod arch;
+pub mod counters;
+pub mod engine;
+pub mod stats;
+
+pub use arch::{ArchConfig, FuLatencies, RegFileSizes};
+pub use counters::AccessCounters;
+pub use engine::{simulate, SimResult};
+pub use stats::{IoStats, PeStats, SimStats};

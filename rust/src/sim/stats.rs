@@ -1,0 +1,79 @@
+//! Per-component statistics gathered by the simulation engine: PE activity,
+//! interconnect hop distances, and I/O buffer traffic.
+
+use std::collections::BTreeMap;
+
+/// Per-PE activity counters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PeStats {
+    /// Iterations executed on this PE.
+    pub iterations: i64,
+    /// First / last cycle with an iteration start.
+    pub first_cycle: i64,
+    pub last_cycle: i64,
+    /// Register-file activity.
+    pub rd_reads: i64,
+    pub rd_writes: i64,
+    pub fd_reads: i64,
+    pub id_reads: i64,
+}
+
+impl Default for PeStats {
+    fn default() -> Self {
+        PeStats {
+            iterations: 0,
+            first_cycle: i64::MAX,
+            last_cycle: i64::MIN,
+            rd_reads: 0,
+            rd_writes: 0,
+            fd_reads: 0,
+            id_reads: 0,
+        }
+    }
+}
+
+/// I/O buffer / DMA traffic counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IoStats {
+    /// Elements streamed in from DRAM (through the I/O buffers).
+    pub elements_in: i64,
+    /// Elements streamed out to DRAM.
+    pub elements_out: i64,
+    /// Per-tensor traffic.
+    pub per_tensor_in: BTreeMap<String, i64>,
+    pub per_tensor_out: BTreeMap<String, i64>,
+    /// Streaming high-water estimate (elements per cycle).
+    pub max_per_cycle: usize,
+}
+
+/// Aggregate simulation statistics.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    pub pe: Vec<PeStats>,
+    pub io: IoStats,
+    /// Longest interconnect hop observed (Manhattan distance between
+    /// producer and consumer tiles); 1 on a healthy neighbour-connected
+    /// mapping.
+    pub max_hop: i64,
+    /// Maximum number of PEs starting an iteration in the same cycle.
+    pub max_concurrency: i64,
+    /// Fraction of PE·cycles doing useful work.
+    pub utilization: f64,
+    /// Static feedback-register (FIFO) demand per PE.
+    pub fd_pressure: i64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let p = PeStats::default();
+        assert_eq!(p.iterations, 0);
+        assert!(p.first_cycle > p.last_cycle); // sentinel until first event
+        let s = SimStats::default();
+        assert_eq!(s.max_hop, 0);
+        assert_eq!(s.io.elements_in, 0);
+    }
+}

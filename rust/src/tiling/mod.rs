@@ -1,0 +1,47 @@
+//! Symbolic LSGP tiling (§III-C of the paper, Eq. 3–7).
+//!
+//! The iteration space is partitioned by `P = diag(p_0..p_{n-1})` into
+//! `t_0×…×t_{n-1}` congruent tiles, one per processing element (dimensions
+//! with `t_ℓ = 1` stay inside a single PE, e.g. the reduction dimension of
+//! GEMM on a 2-D array). Every dependence-carrying transport statement is
+//! split per Eq. 6 into one variant per solution `γ` of Eq. 7; variant
+//! `γ = 0` keeps the dependence inside the tile (`d_J = d`), non-zero `γ`
+//! crosses to a neighbour tile (`d_J = d + Pγ`, `d_K = −γ`).
+//!
+//! The module produces, for every (variant of every) statement, the tiled
+//! polyhedral space whose lattice-point count is the statement's execution
+//! volume (Eq. 12/13) — the input of the energy analysis.
+
+pub mod gamma;
+pub mod transform;
+
+pub use gamma::gamma_candidates;
+pub use transform::{tile_pra, ArrayMapping, TiledPra, TiledStmt};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::gesummv::gesummv;
+
+    #[test]
+    fn example2_gesummv_tiling_shape() {
+        // Paper Example 2: 2×2 array. S7 (dep (0,1)) must split into the
+        // two γ solutions {(0,0), (0,−1)}.
+        let pra = gesummv();
+        let tiled = tile_pra(&pra, &ArrayMapping::new(vec![2, 2]));
+        let s7: Vec<&TiledStmt> = tiled
+            .statements
+            .iter()
+            .filter(|s| s.base_name == "S7")
+            .collect();
+        assert_eq!(s7.len(), 2, "S7 splits into γ = (0,0) and (0,−1)");
+        let gammas: Vec<Option<Vec<i64>>> =
+            s7.iter().map(|s| s.gamma.clone()).collect();
+        assert!(gammas.contains(&Some(vec![0, 0])));
+        assert!(gammas.contains(&Some(vec![0, -1])));
+        // d_K = −γ: the (0,−1) variant reads from tile k + (0,−1), i.e.
+        // d_K = (0,1) as in the paper's d*6 = (0, 1−p1, 0, 1).
+        let inter = s7.iter().find(|s| s.gamma == Some(vec![0, -1])).unwrap();
+        assert_eq!(inter.dk, vec![0, 1]);
+    }
+}

@@ -1,0 +1,377 @@
+//! The tiling transformation: PRA statements → tiled statement variants
+//! with their polyhedral spaces (Eq. 5/6) and displacement vectors.
+
+use crate::polyhedral::{
+    AffineExpr, Constraint, Guard, SetConstraint, TiledSet,
+};
+use crate::pra::{Operand, Pra, Statement};
+
+use super::gamma::gamma_candidates;
+
+/// How the loop nest maps onto the processor array: number of tiles per
+/// dimension (= array extent along that dimension; `1` keeps the whole
+/// dimension inside one PE).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayMapping {
+    pub t: Vec<i64>,
+}
+
+impl ArrayMapping {
+    /// Create a mapping; every extent must be ≥ 1.
+    pub fn new(t: Vec<i64>) -> Self {
+        assert!(t.iter().all(|&x| x >= 1), "array extents must be >= 1");
+        ArrayMapping { t }
+    }
+
+    /// Total number of PEs used.
+    pub fn num_pes(&self) -> i64 {
+        self.t.iter().product()
+    }
+
+    /// The exact-cover tile sizes for loop bounds `n`: `p_ℓ = ⌈N_ℓ/t_ℓ⌉`
+    /// (the paper's sizing rule: as many tiles as PEs per dimension).
+    pub fn tile_sizes(&self, n: &[i64]) -> Vec<i64> {
+        n.iter().zip(&self.t).map(|(&nl, &tl)| (nl + tl - 1) / tl).collect()
+    }
+
+    /// Full concrete parameter vector `(N…, p…)` for loop bounds `n` under
+    /// the exact-cover sizing rule.
+    pub fn params_for(&self, n: &[i64]) -> Vec<i64> {
+        let mut v = n.to_vec();
+        v.extend(self.tile_sizes(n));
+        v
+    }
+}
+
+/// One tiled statement variant.
+#[derive(Debug, Clone)]
+pub struct TiledStmt {
+    /// Index of the originating statement in the PRA.
+    pub stmt_index: usize,
+    /// Name of the originating statement (e.g. `"S7"`).
+    pub base_name: String,
+    /// Display name including the variant (e.g. `"S7*2"`).
+    pub name: String,
+    /// `γ` of Eq. 7 for dependence-carrying transports, `None` for
+    /// statements whose arguments all have zero dependence vectors.
+    pub gamma: Option<Vec<i64>>,
+    /// Original dependence vector `d` of the transported variable
+    /// (all-zero when `gamma` is `None`).
+    pub d: Vec<i64>,
+    /// Inter-tile displacement `d_K = −γ` (zero when `gamma` is `None`).
+    pub dk: Vec<i64>,
+    /// Intra-tile displacement `d_J = d + Pγ` as parameter-affine
+    /// expressions (used by the scheduler's causality constraints).
+    pub dj: Vec<AffineExpr>,
+    /// The tiled polyhedral space of Eq. 12/13 whose lattice-point count is
+    /// this variant's execution volume.
+    pub space: TiledSet,
+}
+
+impl TiledStmt {
+    /// True when the variant crosses a tile boundary (`γ ≠ 0`).
+    pub fn is_inter_tile(&self) -> bool {
+        self.dk.iter().any(|&x| x != 0)
+    }
+
+    /// True when the dependence stays inside the tile but crosses
+    /// iterations (`d ≠ 0, γ = 0`).
+    pub fn is_intra_tile_dep(&self) -> bool {
+        !self.is_inter_tile() && self.d.iter().any(|&x| x != 0)
+    }
+}
+
+/// A tiled PRA: all statement variants plus the evaluation context.
+#[derive(Debug, Clone)]
+pub struct TiledPra {
+    pub pra: Pra,
+    pub mapping: ArrayMapping,
+    pub statements: Vec<TiledStmt>,
+    /// Chamber context every analysis result is valid under:
+    /// `N_ℓ ≥ 1 ∧ p_ℓ ≥ max(1, max|d_ℓ|) ∧ p_ℓ ≤ N_ℓ`.
+    pub context: Guard,
+}
+
+impl TiledPra {
+    /// Extend the context with the exact-cover coupling
+    /// `(t_ℓ−1)·p_ℓ < N_ℓ ≤ t_ℓ·p_ℓ` (the sizing rule of the paper's
+    /// experiments). Returns a new context guard.
+    pub fn exact_cover_context(&self) -> Guard {
+        let sp = &self.pra.space;
+        let np = sp.len();
+        let mut g = self.context.clone();
+        for l in 0..self.pra.ndims {
+            let n = AffineExpr::param(np, sp.n_index(l));
+            let p = AffineExpr::param(np, sp.p_index(l));
+            let tl = self.mapping.t[l];
+            // N_l <= t_l * p_l
+            g = g.and(Constraint::ge(&p.clone().scaled(tl), &n));
+            // N_l > (t_l - 1) * p_l
+            g = g.and(Constraint::gt(&n, &p.clone().scaled(tl - 1)));
+        }
+        g
+    }
+}
+
+/// Build the base tiled space (Eq. 3/4 + global membership) for a PRA.
+fn base_space(pra: &Pra, mapping: &ArrayMapping) -> TiledSet {
+    let sp = &pra.space;
+    let np = sp.len();
+    let n = pra.ndims;
+    let p_idx: Vec<usize> = (0..n).map(|l| sp.p_index(l)).collect();
+    let mut set = TiledSet::universe(n, np);
+    for l in 0..n {
+        set.add_tile_bounds(l, p_idx[l]);
+        set.add_array_bounds(l, mapping.t[l]);
+        // 0 ≤ i_l = j_l + p_l·k_l ≤ N_l − 1
+        let mut a = vec![0i64; n];
+        a[l] = 1;
+        set.add_global_affine(&a, AffineExpr::zero(np), &p_idx);
+        let mut an = vec![0i64; n];
+        an[l] = -1;
+        set.add_global_affine(
+            &an,
+            AffineExpr::param(np, sp.n_index(l)).plus(-1),
+            &p_idx,
+        );
+    }
+    set
+}
+
+/// Add a statement's condition space `I_q` to a tiled set.
+fn add_conditions(set: &mut TiledSet, pra: &Pra, stmt: &Statement) {
+    let sp = &pra.space;
+    let p_idx: Vec<usize> =
+        (0..pra.ndims).map(|l| sp.p_index(l)).collect();
+    for c in &stmt.cond {
+        set.add_global_affine(&c.a, c.konst.clone(), &p_idx);
+    }
+}
+
+/// The dependence vector a statement transports, if any: the unique
+/// non-zero `dep` among its arguments. Statements in this codebase carry at
+/// most one (the PRA normal form of §IV-A splits compute from transport).
+fn transported_dep(stmt: &Statement) -> Option<Vec<i64>> {
+    let mut found: Option<Vec<i64>> = None;
+    for a in &stmt.args {
+        if let Operand::Var { dep, .. } = a {
+            if dep.iter().any(|&x| x != 0) {
+                assert!(
+                    found.is_none(),
+                    "statement {} transports more than one non-zero \
+                     dependence; normalize the PRA first",
+                    stmt.name
+                );
+                found = Some(dep.clone());
+            }
+        }
+    }
+    found
+}
+
+/// Tile a PRA onto a processor array (the §III-C transformation).
+pub fn tile_pra(pra: &Pra, mapping: &ArrayMapping) -> TiledPra {
+    assert_eq!(
+        mapping.t.len(),
+        pra.ndims,
+        "mapping rank must equal loop depth"
+    );
+    let sp = &pra.space;
+    let np = sp.len();
+    let n = pra.ndims;
+    let p_idx: Vec<usize> = (0..n).map(|l| sp.p_index(l)).collect();
+
+    let mut statements = Vec::new();
+    let mut dmax = vec![1i64; n];
+    for (qi, stmt) in pra.statements.iter().enumerate() {
+        let dep = transported_dep(stmt);
+        match dep {
+            None => {
+                // Eq. 5: zero-dependence statement — volume from Eq. 12.
+                let mut space = base_space(pra, mapping);
+                add_conditions(&mut space, pra, stmt);
+                statements.push(TiledStmt {
+                    stmt_index: qi,
+                    base_name: stmt.name.clone(),
+                    name: stmt.name.clone(),
+                    gamma: None,
+                    d: vec![0; n],
+                    dk: vec![0; n],
+                    dj: vec![AffineExpr::zero(np); n],
+                    space,
+                });
+            }
+            Some(d) => {
+                for (l, &dl) in d.iter().enumerate() {
+                    dmax[l] = dmax[l].max(dl.abs());
+                }
+                // Eq. 6: one variant per γ of Eq. 7.
+                for (vi, gamma) in gamma_candidates(&d).iter().enumerate() {
+                    let mut space = base_space(pra, mapping);
+                    add_conditions(&mut space, pra, stmt);
+                    // d_J = d + P·γ (affine in p), membership j − d_J ∈ J.
+                    let mut dj = Vec::with_capacity(n);
+                    for l in 0..n {
+                        let off = AffineExpr::param_scaled(
+                            np,
+                            p_idx[l],
+                            gamma[l],
+                            d[l],
+                        );
+                        dj.push(off.clone());
+                        if d[l] != 0 || gamma[l] != 0 {
+                            space.add_shifted_tile_membership(
+                                l,
+                                off,
+                                p_idx[l],
+                            );
+                        }
+                    }
+                    // Source tile must exist: 0 ≤ k_ℓ + γ_ℓ ≤ t_ℓ − 1
+                    // (implied by the condition space for well-formed PRAs,
+                    // kept explicit for physical clarity).
+                    for l in 0..n {
+                        if gamma[l] != 0 {
+                            let mut lo = SetConstraint::zero(2 * n, np);
+                            lo.var_coeffs[space.kvar(l)] =
+                                AffineExpr::constant(np, 1);
+                            lo.konst = AffineExpr::constant(np, gamma[l]);
+                            space.add(lo);
+                            let mut hi = SetConstraint::zero(2 * n, np);
+                            hi.var_coeffs[space.kvar(l)] =
+                                AffineExpr::constant(np, -1);
+                            hi.konst = AffineExpr::constant(
+                                np,
+                                mapping.t[l] - 1 - gamma[l],
+                            );
+                            space.add(hi);
+                        }
+                    }
+                    let dk: Vec<i64> = gamma.iter().map(|&g| -g).collect();
+                    let name = if gamma.iter().all(|&g| g == 0) {
+                        format!("{}*{}", stmt.name, vi + 1)
+                    } else {
+                        format!("{}*{}", stmt.name, vi + 1)
+                    };
+                    statements.push(TiledStmt {
+                        stmt_index: qi,
+                        base_name: stmt.name.clone(),
+                        name,
+                        gamma: Some(gamma.clone()),
+                        d: d.clone(),
+                        dk,
+                        dj,
+                        space,
+                    });
+                }
+            }
+        }
+    }
+
+    // Context: N_ℓ ≥ 1, max(1, max|d_ℓ|) ≤ p_ℓ ≤ N_ℓ.
+    let mut ctx = Vec::new();
+    for l in 0..n {
+        let nl = AffineExpr::param(np, sp.n_index(l));
+        let pl = AffineExpr::param(np, sp.p_index(l));
+        ctx.push(Constraint::ge(&nl, &AffineExpr::constant(np, 1)));
+        ctx.push(Constraint::ge(&pl, &AffineExpr::constant(np, dmax[l])));
+        ctx.push(Constraint::le(&pl, &nl));
+    }
+    TiledPra {
+        pra: pra.clone(),
+        mapping: mapping.clone(),
+        statements,
+        context: Guard::new(ctx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::{count_concrete, count_symbolic, SymbolicOptions};
+    use crate::workloads::gesummv::gesummv;
+
+    #[test]
+    fn mapping_sizing_rule() {
+        let m = ArrayMapping::new(vec![2, 2]);
+        assert_eq!(m.num_pes(), 4);
+        assert_eq!(m.tile_sizes(&[4, 5]), vec![2, 3]);
+        assert_eq!(m.params_for(&[4, 5]), vec![4, 5, 2, 3]);
+    }
+
+    #[test]
+    fn gesummv_variant_counts() {
+        // 5 zero-dep statements (S1,S3,S4,S5,S8,S11 — S1 reads a tensor,
+        // zero dep) and 3 transports (S2,S7,S10) with d=(1,0)/(0,1): two
+        // variants each. S6, S9 have zero-dep args only.
+        let pra = gesummv();
+        let tiled = tile_pra(&pra, &ArrayMapping::new(vec![2, 2]));
+        let zero_dep =
+            tiled.statements.iter().filter(|s| s.gamma.is_none()).count();
+        let variants =
+            tiled.statements.iter().filter(|s| s.gamma.is_some()).count();
+        assert_eq!(zero_dep, 8); // S1 S3 S4 S5 S6 S8 S9 S11
+        assert_eq!(variants, 6); // S2, S7, S10 × 2 γ each
+    }
+
+    #[test]
+    fn example9_volumes_through_tiling_path() {
+        // The full pipeline must reproduce Example 9: Vol(S7*1)=12,
+        // Vol(S7*2)=4 at N=(4,5), p=(2,3) on a 2×2 array.
+        let pra = gesummv();
+        let tiled = tile_pra(&pra, &ArrayMapping::new(vec![2, 2]));
+        let params = [4i64, 5, 2, 3];
+        let s7_intra = tiled
+            .statements
+            .iter()
+            .find(|s| s.base_name == "S7" && !s.is_inter_tile())
+            .unwrap();
+        let s7_inter = tiled
+            .statements
+            .iter()
+            .find(|s| s.base_name == "S7" && s.is_inter_tile())
+            .unwrap();
+        assert_eq!(count_concrete(&s7_intra.space, &[2, 2], &params), 12);
+        assert_eq!(count_concrete(&s7_inter.space, &[2, 2], &params), 4);
+        // And symbolically.
+        let opts = SymbolicOptions::default();
+        let sym1 =
+            count_symbolic(&s7_intra.space, &[2, 2], &tiled.context, &opts);
+        let sym2 =
+            count_symbolic(&s7_inter.space, &[2, 2], &tiled.context, &opts);
+        assert_eq!(sym1.eval(&params), 12);
+        assert_eq!(sym2.eval(&params), 4);
+    }
+
+    #[test]
+    fn total_compute_volume_is_iteration_space() {
+        // Unconditioned compute statements (S3/S4) execute once per
+        // iteration: volume = N0·N1 under exact cover.
+        let pra = gesummv();
+        let tiled = tile_pra(&pra, &ArrayMapping::new(vec![2, 2]));
+        let s3 = tiled
+            .statements
+            .iter()
+            .find(|s| s.base_name == "S3")
+            .unwrap();
+        assert_eq!(count_concrete(&s3.space, &[2, 2], &[4, 5, 2, 3]), 20);
+    }
+
+    #[test]
+    fn intra_plus_inter_covers_dependence() {
+        // For S2 (x-propagation, d=(1,0)): intra + inter variant volumes
+        // must equal the number of iterations with i0 > 0 = (N0−1)·N1.
+        let pra = gesummv();
+        let tiled = tile_pra(&pra, &ArrayMapping::new(vec![2, 2]));
+        for params in [[4i64, 5, 2, 3], [6, 6, 3, 3], [5, 7, 3, 4]] {
+            let total: i128 = tiled
+                .statements
+                .iter()
+                .filter(|s| s.base_name == "S2")
+                .map(|s| count_concrete(&s.space, &[2, 2], &params))
+                .sum();
+            let expect = ((params[0] - 1) * params[1]) as i128;
+            assert_eq!(total, expect, "params={params:?}");
+        }
+    }
+}

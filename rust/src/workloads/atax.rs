@@ -1,0 +1,116 @@
+//! ATAX (PolyBench): `y = Aᵀ(A·x)` as a two-phase workload.
+//!
+//! Phase 1 computes `TMP = A·x` (accumulation along `i1`), phase 2 computes
+//! `Y = Aᵀ·TMP` (accumulation along `i0`). The `TMP` tensor produced by
+//! phase 1 streams back to DRAM and re-enters as an input of phase 2 —
+//! exactly the host-mediated inter-kernel data flow of a TCPA deployment.
+
+use crate::pra::ir::{IndexMap, Lhs, Op, Operand, Pra, Workload};
+
+use super::builder::PraBuilder;
+
+/// Phase 1: `TMP[i0] = Σ_{i1} A[i0,i1]·X[i1]`.
+pub fn atax_phase1() -> Pra {
+    let nd = 2;
+    let mut b = PraBuilder::new("atax_p1", nd);
+    b.tensor("A", &[0, 1]).tensor("X", &[1]).tensor("TMP", &[0]);
+    b.propagate("xx", "X", IndexMap::select(&[1], nd), 0);
+    b.stmt(
+        Lhs::Var("m".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("A", IndexMap::identity(2, nd)),
+            Operand::var0("xx", nd),
+        ],
+        vec![],
+    );
+    b.acc_chain("s", "m", 1);
+    let top = b.eq_top(1);
+    b.stmt(
+        Lhs::Tensor { name: "TMP".into(), map: IndexMap::select(&[0], nd) },
+        Op::Copy,
+        vec![Operand::var0("s", nd)],
+        top,
+    );
+    b.build()
+}
+
+/// Phase 2: `Y[i1] = Σ_{i0} A[i0,i1]·TMP[i0]`.
+pub fn atax_phase2() -> Pra {
+    let nd = 2;
+    let mut b = PraBuilder::new("atax_p2", nd);
+    b.tensor("A", &[0, 1]).tensor("TMP", &[0]).tensor("Y", &[1]);
+    b.propagate("tt", "TMP", IndexMap::select(&[0], nd), 1);
+    b.stmt(
+        Lhs::Var("m".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("A", IndexMap::identity(2, nd)),
+            Operand::var0("tt", nd),
+        ],
+        vec![],
+    );
+    b.acc_chain("s", "m", 0);
+    let top = b.eq_top(0);
+    b.stmt(
+        Lhs::Tensor { name: "Y".into(), map: IndexMap::select(&[1], nd) },
+        Op::Copy,
+        vec![Operand::var0("s", nd)],
+        top,
+    );
+    b.build()
+}
+
+/// The two-phase ATAX workload.
+pub fn atax() -> Workload {
+    Workload { name: "atax".into(), phases: vec![atax_phase1(), atax_phase2()] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pra::validate;
+    use crate::workloads::interp::interpret_workload;
+    use crate::workloads::tensor::synth_inputs;
+
+    #[test]
+    fn phases_validate() {
+        for p in atax().phases {
+            assert!(validate(&p).is_empty(), "{}: {:?}", p.name, validate(&p));
+        }
+    }
+
+    #[test]
+    fn atax_functional() {
+        let wl = atax();
+        let (n0, n1) = (4i64, 3i64);
+        let params = vec![vec![n0, n1, 1, 1], vec![n0, n1, 1, 1]];
+        let inputs = synth_inputs(&[
+            ("A".into(), vec![n0, n1]),
+            ("X".into(), vec![n1]),
+        ]);
+        let out = interpret_workload(&wl, &params, &inputs);
+        let y = &out["Y"];
+        // reference y = A^T (A x)
+        let mut tmp = vec![0.0f32; n0 as usize];
+        for i in 0..n0 {
+            for j in 0..n1 {
+                tmp[i as usize] +=
+                    inputs["A"].get(&[i, j]) * inputs["X"].get(&[j]);
+            }
+        }
+        for j in 0..n1 {
+            let mut acc = 0.0f32;
+            for i in 0..n0 {
+                acc += inputs["A"].get(&[i, j]) * tmp[i as usize];
+            }
+            assert!(
+                (y.get(&[j]) - acc).abs() < 1e-3,
+                "Y[{j}] = {} vs {acc}",
+                y.get(&[j])
+            );
+        }
+        // TMP is also produced (phase-1 output).
+        assert_eq!(out["TMP"].shape, vec![n0]);
+    }
+}

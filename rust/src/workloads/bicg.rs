@@ -1,0 +1,106 @@
+//! BiCG (PolyBench): the two matrix–vector products of the BiCGSTAB
+//! stabilizer, `Q = A·P` and `S = Aᵀ·R`, fused into a *single* 2-deep PRA
+//! that reads `A[i0,i1]` once per iteration and drives two orthogonal
+//! accumulation chains (along `i1` for `Q`, along `i0` for `S`).
+
+use crate::pra::ir::{IndexMap, Lhs, Op, Operand, Pra, Workload};
+
+use super::builder::PraBuilder;
+
+/// Build the fused BiCG PRA.
+pub fn bicg_pra() -> Pra {
+    let nd = 2;
+    let mut b = PraBuilder::new("bicg", nd);
+    b.tensor("A", &[0, 1])
+        .tensor("P", &[1])
+        .tensor("R", &[0])
+        .tensor("Q", &[0])
+        .tensor("S", &[1]);
+    // pp propagates P[i1] along i0; rr propagates R[i0] along i1.
+    b.propagate("pp", "P", IndexMap::select(&[1], nd), 0);
+    b.propagate("rr", "R", IndexMap::select(&[0], nd), 1);
+    // products
+    b.stmt(
+        Lhs::Var("mq".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("A", IndexMap::identity(2, nd)),
+            Operand::var0("pp", nd),
+        ],
+        vec![],
+    );
+    b.stmt(
+        Lhs::Var("ms".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("A", IndexMap::identity(2, nd)),
+            Operand::var0("rr", nd),
+        ],
+        vec![],
+    );
+    // Q chain along i1, S chain along i0.
+    b.acc_chain("sq", "mq", 1);
+    b.acc_chain("ss", "ms", 0);
+    let top1 = b.eq_top(1);
+    b.stmt(
+        Lhs::Tensor { name: "Q".into(), map: IndexMap::select(&[0], nd) },
+        Op::Copy,
+        vec![Operand::var0("sq", nd)],
+        top1,
+    );
+    let top0 = b.eq_top(0);
+    b.stmt(
+        Lhs::Tensor { name: "S".into(), map: IndexMap::select(&[1], nd) },
+        Op::Copy,
+        vec![Operand::var0("ss", nd)],
+        top0,
+    );
+    b.build()
+}
+
+/// Single-phase workload wrapper.
+pub fn bicg() -> Workload {
+    Workload::single(bicg_pra())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pra::validate;
+    use crate::workloads::interp::interpret;
+    use crate::workloads::tensor::synth_inputs;
+
+    #[test]
+    fn validates() {
+        let p = bicg_pra();
+        assert!(validate(&p).is_empty(), "{:?}", validate(&p));
+        assert_eq!(p.statements.len(), 14);
+    }
+
+    #[test]
+    fn bicg_functional() {
+        let pra = bicg_pra();
+        let (n0, n1) = (4i64, 5i64);
+        let params = [n0, n1, 1, 1];
+        let inputs = synth_inputs(&[
+            ("A".into(), vec![n0, n1]),
+            ("P".into(), vec![n1]),
+            ("R".into(), vec![n0]),
+        ]);
+        let out = interpret(&pra, &params, &inputs);
+        for i in 0..n0 {
+            let mut acc = 0.0f32;
+            for j in 0..n1 {
+                acc += inputs["A"].get(&[i, j]) * inputs["P"].get(&[j]);
+            }
+            assert!((out["Q"].get(&[i]) - acc).abs() < 1e-4);
+        }
+        for j in 0..n1 {
+            let mut acc = 0.0f32;
+            for i in 0..n0 {
+                acc += inputs["A"].get(&[i, j]) * inputs["R"].get(&[i]);
+            }
+            assert!((out["S"].get(&[j]) - acc).abs() < 1e-4);
+        }
+    }
+}

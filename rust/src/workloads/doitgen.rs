@@ -1,0 +1,92 @@
+//! DOITGEN (PolyBench): multiresolution-analysis kernel
+//! `SUM[r,q,p] = Σ_s A[r,q,s]·C4[s,p]` — a 4-deep nest `(i0,i1,i2,i3) =
+//! (r, q, p, s)`, the deepest workload in the suite. Mapped with the
+//! leading two dimensions across the array (`t = (t0, t1, 1, 1)`), it
+//! exercises the counters and schedules on loop depth 4.
+
+use crate::pra::ir::{IndexMap, Lhs, Op, Operand, Pra, Workload};
+
+use super::builder::PraBuilder;
+
+/// Build the DOITGEN PRA (4-deep nest).
+pub fn doitgen_pra() -> Pra {
+    let nd = 4;
+    let mut b = PraBuilder::new("doitgen", nd);
+    b.tensor("A", &[0, 1, 3]) // A[r, q, s]
+        .tensor("C4", &[3, 2]) // C4[s, p]
+        .tensor("SUM", &[0, 1, 2]); // SUM[r, q, p]
+    // a[i] propagates A[r,q,s] along the p dimension (i2).
+    b.propagate("a", "A", IndexMap::select(&[0, 1, 3], nd), 2);
+    // c0[i]: C4[s,p] streams in along the r boundary (i0 = 0) and
+    // propagates down the r dimension — one DRAM trip per (q,p,s) slice,
+    // the row-stationary reuse choice of the mapping.
+    b.propagate("c0", "C4", IndexMap::select(&[3, 2], nd), 0);
+    // m = a · c0.
+    b.stmt(
+        Lhs::Var("m".into()),
+        Op::Mul,
+        vec![Operand::var0("a", nd), Operand::var0("c0", nd)],
+        vec![],
+    );
+    // accumulate along s (i3).
+    b.acc_chain("s", "m", 3);
+    let top = b.eq_top(3);
+    b.stmt(
+        Lhs::Tensor {
+            name: "SUM".into(),
+            map: IndexMap::select(&[0, 1, 2], nd),
+        },
+        Op::Copy,
+        vec![Operand::var0("s", nd)],
+        top,
+    );
+    b.build()
+}
+
+/// Single-phase workload wrapper.
+pub fn doitgen() -> Workload {
+    Workload::single(doitgen_pra())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pra::validate;
+    use crate::workloads::interp::interpret;
+    use crate::workloads::tensor::synth_inputs;
+
+    #[test]
+    fn validates() {
+        let p = doitgen_pra();
+        assert!(validate(&p).is_empty(), "{:?}", validate(&p));
+        assert_eq!(p.ndims, 4);
+    }
+
+    #[test]
+    fn doitgen_functional() {
+        let pra = doitgen_pra();
+        let (nr, nq, np_, ns) = (2i64, 3i64, 4i64, 3i64);
+        let params = [nr, nq, np_, ns, 1, 1, 1, 1];
+        let inputs = synth_inputs(&[
+            ("A".into(), vec![nr, nq, ns]),
+            ("C4".into(), vec![ns, np_]),
+        ]);
+        let out = interpret(&pra, &params, &inputs);
+        for r in 0..nr {
+            for q in 0..nq {
+                for p in 0..np_ {
+                    let mut acc = 0.0f32;
+                    for s in 0..ns {
+                        acc += inputs["A"].get(&[r, q, s])
+                            * inputs["C4"].get(&[s, p]);
+                    }
+                    let got = out["SUM"].get(&[r, q, p]);
+                    assert!(
+                        (got - acc).abs() < 1e-4,
+                        "SUM[{r},{q},{p}] {got} vs {acc}"
+                    );
+                }
+            }
+        }
+    }
+}

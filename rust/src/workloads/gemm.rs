@@ -1,0 +1,83 @@
+//! GEMM (PolyBench): `C = A·B` over a 3-deep nest `(i0, i1, i2) =
+//! (row, col, reduction)`, `N0×N1×N2` iterations.
+//!
+//! Systolic PRA shape: `A` values propagate along the column dimension
+//! `i1`, `B` values along the row dimension `i0`, products accumulate
+//! along `i2`. (PolyBench's `alpha/beta` scaling is omitted — scalar
+//! constants do not affect the access-count analysis; see DESIGN.md §6.)
+
+use crate::pra::ir::{IndexMap, Lhs, Op, Operand, Pra};
+
+use super::builder::PraBuilder;
+
+/// Build the GEMM PRA (3-deep nest, params `N0, N1, N2, p0, p1, p2`).
+pub fn gemm() -> Pra {
+    let nd = 3;
+    let mut b = PraBuilder::new("gemm", nd);
+    b.tensor("A", &[0, 2]) // A[N0, N2]
+        .tensor("B", &[2, 1]) // B[N2, N1]
+        .tensor("C", &[0, 1]); // C[N0, N1] (output)
+    // S1, S2: a[i] propagates A[i0, i2] along i1.
+    b.propagate("a", "A", IndexMap::select(&[0, 2], nd), 1);
+    // S3, S4: bb[i] propagates B[i2, i1] along i0.
+    b.propagate("bb", "B", IndexMap::select(&[2, 1], nd), 0);
+    // S5: m = a · bb.
+    b.stmt(
+        Lhs::Var("m".into()),
+        Op::Mul,
+        vec![Operand::var0("a", nd), Operand::var0("bb", nd)],
+        vec![],
+    );
+    // S6–S8: accumulate along i2.
+    b.acc_chain("s", "m", 2);
+    // S9: C[i0, i1] = s at i2 = N2 − 1.
+    let top = b.eq_top(2);
+    b.stmt(
+        Lhs::Tensor { name: "C".into(), map: IndexMap::select(&[0, 1], nd) },
+        Op::Copy,
+        vec![Operand::var0("s", nd)],
+        top,
+    );
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pra::validate;
+    use crate::workloads::interp::interpret;
+    use crate::workloads::tensor::synth_inputs;
+
+    #[test]
+    fn gemm_structure() {
+        let pra = gemm();
+        assert_eq!(pra.statements.len(), 9);
+        assert!(validate(&pra).is_empty(), "{:?}", validate(&pra));
+    }
+
+    #[test]
+    fn gemm_functional() {
+        let pra = gemm();
+        let (n0, n1, n2) = (3i64, 4i64, 5i64);
+        let params = [n0, n1, n2, 1, 1, 1];
+        let inputs = synth_inputs(&[
+            ("A".into(), vec![n0, n2]),
+            ("B".into(), vec![n2, n1]),
+        ]);
+        let out = interpret(&pra, &params, &inputs);
+        let c = &out["C"];
+        for i in 0..n0 {
+            for j in 0..n1 {
+                let mut acc = 0.0f32;
+                for k in 0..n2 {
+                    acc += inputs["A"].get(&[i, k]) * inputs["B"].get(&[k, j]);
+                }
+                assert!(
+                    (c.get(&[i, j]) - acc).abs() < 1e-4,
+                    "C[{i},{j}] = {} vs {acc}",
+                    c.get(&[i, j])
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! GEMVER (PolyBench): the four-phase vector-multiplication / matrix-
+//! addition kernel — the richest multi-phase workload in the suite:
+//!
+//! 1. `B = A + u1·v1ᵀ + u2·v2ᵀ`   (rank-2 update, 2-D)
+//! 2. `X = Bᵀ·Y + Z`              (transposed MV + vector add, 2-D)
+//! 3. `W = B·X`                   (MV, 2-D)
+//!
+//! (PolyBench's α/β scalings are omitted as in GEMM — constant factors do
+//! not change access counts, DESIGN.md §6. The two rank-1 updates fuse
+//! into one pass over A; PolyBench's separate `x = x + z` loop fuses into
+//! phase 2's output statement.) Square: evaluated with `N0 = N1`.
+
+use crate::pra::ir::{IndexMap, Lhs, Op, Operand, Pra, Workload};
+
+use super::builder::PraBuilder;
+
+/// Phase 1: `B[i,j] = A[i,j] + u1[i]·v1[j] + u2[i]·v2[j]`.
+pub fn gemver_phase1() -> Pra {
+    let nd = 2;
+    let mut b = PraBuilder::new("gemver_p1", nd);
+    b.tensor("A", &[0, 1])
+        .tensor("U1", &[0])
+        .tensor("V1", &[1])
+        .tensor("U2", &[0])
+        .tensor("V2", &[1])
+        .tensor("B", &[0, 1]);
+    // Row-constant u vectors propagate along j (i1); column-constant v
+    // vectors propagate along i (i0).
+    b.propagate("u1", "U1", IndexMap::select(&[0], nd), 1);
+    b.propagate("v1", "V1", IndexMap::select(&[1], nd), 0);
+    b.propagate("u2", "U2", IndexMap::select(&[0], nd), 1);
+    b.propagate("v2", "V2", IndexMap::select(&[1], nd), 0);
+    b.stmt(
+        Lhs::Var("r1".into()),
+        Op::Mul,
+        vec![Operand::var0("u1", nd), Operand::var0("v1", nd)],
+        vec![],
+    );
+    b.stmt(
+        Lhs::Var("r2".into()),
+        Op::Mul,
+        vec![Operand::var0("u2", nd), Operand::var0("v2", nd)],
+        vec![],
+    );
+    b.stmt(
+        Lhs::Var("t".into()),
+        Op::Add,
+        vec![Operand::var0("r1", nd), Operand::var0("r2", nd)],
+        vec![],
+    );
+    b.stmt(
+        Lhs::Tensor { name: "B".into(), map: IndexMap::identity(2, nd) },
+        Op::Add,
+        vec![
+            Operand::var0("t", nd),
+            Operand::tensor("A", IndexMap::identity(2, nd)),
+        ],
+        vec![],
+    );
+    b.build()
+}
+
+/// Phase 2: `X[j] = Σ_i B[i,j]·Y[i] + Z[j]` (transposed MV, accumulate
+/// along i0, add `Z` at the output).
+pub fn gemver_phase2() -> Pra {
+    let nd = 2;
+    let mut b = PraBuilder::new("gemver_p2", nd);
+    b.tensor("B", &[0, 1]).tensor("Y", &[0]).tensor("Z", &[1]).tensor("X", &[1]);
+    b.propagate("y", "Y", IndexMap::select(&[0], nd), 1);
+    b.stmt(
+        Lhs::Var("m".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("B", IndexMap::identity(2, nd)),
+            Operand::var0("y", nd),
+        ],
+        vec![],
+    );
+    b.acc_chain("s", "m", 0);
+    let top = b.eq_top(0);
+    b.stmt(
+        Lhs::Tensor { name: "X".into(), map: IndexMap::select(&[1], nd) },
+        Op::Add,
+        vec![
+            Operand::var0("s", nd),
+            Operand::tensor("Z", IndexMap::select(&[1], nd)),
+        ],
+        top,
+    );
+    b.build()
+}
+
+/// Phase 3: `W[i] = Σ_j B[i,j]·X[j]`.
+pub fn gemver_phase3() -> Pra {
+    let nd = 2;
+    let mut b = PraBuilder::new("gemver_p3", nd);
+    b.tensor("B", &[0, 1]).tensor("X", &[1]).tensor("W", &[0]);
+    b.propagate("x", "X", IndexMap::select(&[1], nd), 0);
+    b.stmt(
+        Lhs::Var("m".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("B", IndexMap::identity(2, nd)),
+            Operand::var0("x", nd),
+        ],
+        vec![],
+    );
+    b.acc_chain("s", "m", 1);
+    let top = b.eq_top(1);
+    b.stmt(
+        Lhs::Tensor { name: "W".into(), map: IndexMap::select(&[0], nd) },
+        Op::Copy,
+        vec![Operand::var0("s", nd)],
+        top,
+    );
+    b.build()
+}
+
+/// The three-phase GEMVER workload.
+pub fn gemver() -> Workload {
+    Workload {
+        name: "gemver".into(),
+        phases: vec![gemver_phase1(), gemver_phase2(), gemver_phase3()],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pra::validate;
+    use crate::workloads::interp::interpret_workload;
+    use crate::workloads::tensor::synth_inputs;
+
+    #[test]
+    fn phases_validate() {
+        for p in gemver().phases {
+            assert!(validate(&p).is_empty(), "{}: {:?}", p.name, validate(&p));
+        }
+    }
+
+    #[test]
+    fn gemver_functional() {
+        let wl = gemver();
+        let n = 4i64;
+        let params = vec![vec![n, n, 1, 1]; 3];
+        let inputs = synth_inputs(&[
+            ("A".into(), vec![n, n]),
+            ("U1".into(), vec![n]),
+            ("V1".into(), vec![n]),
+            ("U2".into(), vec![n]),
+            ("V2".into(), vec![n]),
+            ("Y".into(), vec![n]),
+            ("Z".into(), vec![n]),
+        ]);
+        let out = interpret_workload(&wl, &params, &inputs);
+        // reference
+        let g = |t: &str, i: &[i64]| inputs[t].get(i);
+        let mut bmat = vec![vec![0.0f32; n as usize]; n as usize];
+        for i in 0..n {
+            for j in 0..n {
+                bmat[i as usize][j as usize] = g("A", &[i, j])
+                    + g("U1", &[i]) * g("V1", &[j])
+                    + g("U2", &[i]) * g("V2", &[j]);
+            }
+        }
+        let mut x = vec![0.0f32; n as usize];
+        for j in 0..n as usize {
+            for i in 0..n as usize {
+                x[j] += bmat[i][j] * g("Y", &[i as i64]);
+            }
+            x[j] += g("Z", &[j as i64]);
+        }
+        let mut w = vec![0.0f32; n as usize];
+        for i in 0..n as usize {
+            for j in 0..n as usize {
+                w[i] += bmat[i][j] * x[j];
+            }
+        }
+        for i in 0..n {
+            assert!(
+                (out["B"].get(&[i, 0]) - bmat[i as usize][0]).abs() < 1e-4
+            );
+            assert!((out["X"].get(&[i]) - x[i as usize]).abs() < 1e-3);
+            assert!(
+                (out["W"].get(&[i]) - w[i as usize]).abs() < 1e-2,
+                "W[{i}] {} vs {}",
+                out["W"].get(&[i]),
+                w[i as usize]
+            );
+        }
+    }
+}

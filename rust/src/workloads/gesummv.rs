@@ -1,0 +1,122 @@
+//! GESUMMV (PolyBench): `Y = (A + B)·X` as the paper's running example
+//! (Example 1) — scalar sum of two matrix–vector products,
+//! `Y[i0] = Σ_{i1} (A[i0,i1]·X[i1] + B[i0,i1]·X[i1])`.
+//!
+//! The generated statements reproduce the paper's S1–S11 exactly:
+//! X-propagation along `i0` (S1, S2), elementwise products (S3, S4), two
+//! accumulation chains along `i1` (S5–S7, S8–S10), and the output sum at
+//! `i1 = N1 − 1` (S11).
+
+use crate::pra::ir::{IndexMap, Lhs, Op, Operand, Pra};
+
+use super::builder::PraBuilder;
+
+/// Build the GESUMMV PRA (2-deep nest, params `N0, N1, p0, p1`).
+pub fn gesummv() -> Pra {
+    let nd = 2;
+    let mut b = PraBuilder::new("gesummv", nd);
+    b.tensor("A", &[0, 1])
+        .tensor("B", &[0, 1])
+        .tensor("X", &[1])
+        .tensor("Y", &[0]);
+    // S1, S2: x-propagation along i0.
+    b.propagate("x", "X", IndexMap::select(&[1], nd), 0);
+    // S3: a = A ⊙ x, S4: b = B ⊙ x.
+    b.stmt(
+        Lhs::Var("a".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("A", IndexMap::identity(2, nd)),
+            Operand::var0("x", nd),
+        ],
+        vec![],
+    );
+    b.stmt(
+        Lhs::Var("b".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("B", IndexMap::identity(2, nd)),
+            Operand::var0("x", nd),
+        ],
+        vec![],
+    );
+    // S5–S7 and S8–S10: accumulation chains along i1.
+    b.acc_chain("sA", "a", 1);
+    b.acc_chain("sB", "b", 1);
+    // S11: Y[i0] = sA + sB at i1 = N1 − 1.
+    let top = b.eq_top(1);
+    b.stmt(
+        Lhs::Tensor { name: "Y".into(), map: IndexMap::select(&[0], nd) },
+        Op::Add,
+        vec![Operand::var0("sA", nd), Operand::var0("sB", nd)],
+        top,
+    );
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pra::{validate, Op};
+
+    #[test]
+    fn statement_names_and_ops_match_paper() {
+        let pra = gesummv();
+        assert_eq!(pra.statements.len(), 11);
+        let ops: Vec<(&str, Op)> = pra
+            .statements
+            .iter()
+            .map(|s| (s.name.as_str(), s.op))
+            .collect();
+        assert_eq!(
+            ops,
+            vec![
+                ("S1", Op::Copy),
+                ("S2", Op::Copy),
+                ("S3", Op::Mul),
+                ("S4", Op::Mul),
+                ("S5", Op::Copy),
+                ("S6", Op::Add),
+                ("S7", Op::Copy),
+                ("S8", Op::Copy),
+                ("S9", Op::Add),
+                ("S10", Op::Copy),
+                ("S11", Op::Add),
+            ]
+        );
+        assert!(validate(&pra).is_empty());
+    }
+
+    #[test]
+    fn computational_and_memory_sets_match_example4() {
+        // Example 4: C = {S3,S4,S6,S9,S11}, M = {S1,S2,S5,S7,S8,S10}.
+        let pra = gesummv();
+        let c: Vec<&str> = pra
+            .statements
+            .iter()
+            .filter(|s| !s.is_memory())
+            .map(|s| s.name.as_str())
+            .collect();
+        assert_eq!(c, vec!["S3", "S4", "S6", "S9", "S11"]);
+        let m: Vec<&str> = pra
+            .statements
+            .iter()
+            .filter(|s| s.is_memory())
+            .map(|s| s.name.as_str())
+            .collect();
+        assert_eq!(m, vec!["S1", "S2", "S5", "S7", "S8", "S10"]);
+    }
+
+    #[test]
+    fn s7_dependence_vector() {
+        let pra = gesummv();
+        let s7 = pra.statement("S7").unwrap();
+        match &s7.args[0] {
+            crate::pra::Operand::Var { name, dep } => {
+                assert_eq!(name, "sA");
+                assert_eq!(dep, &vec![0, 1]);
+            }
+            _ => panic!("S7 must read sA"),
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Lexicographic functional PRA interpreter — the in-crate golden model.
+//!
+//! Executes a PRA over its concrete iteration space in lexicographic order
+//! (valid because [`crate::pra::validate`] enforces lexicographically
+//! non-negative dependence vectors), producing output tensors. Used to
+//! validate the cycle-accurate simulator's functional results, and itself
+//! validated against the AOT-compiled JAX model through the PJRT runtime.
+
+use std::collections::BTreeMap;
+
+use crate::pra::{Lhs, Operand, Pra, Rdg, Workload};
+
+use super::tensor::{Tensor, TensorEnv};
+
+/// Dense storage for one internal variable over the iteration space.
+struct VarStore {
+    bounds: Vec<i64>,
+    data: Vec<f32>,
+    written: Vec<bool>,
+}
+
+impl VarStore {
+    fn new(bounds: &[i64]) -> Self {
+        let n: i64 = bounds.iter().product();
+        VarStore {
+            bounds: bounds.to_vec(),
+            data: vec![0.0; n as usize],
+            written: vec![false; n as usize],
+        }
+    }
+
+    fn flat(&self, i: &[i64]) -> Option<usize> {
+        let mut off = 0i64;
+        for (&x, &b) in i.iter().zip(&self.bounds) {
+            if x < 0 || x >= b {
+                return None;
+            }
+            off = off * b + x;
+        }
+        Some(off as usize)
+    }
+
+    fn get(&self, i: &[i64], var: &str) -> f32 {
+        let off = self.flat(i).filter(|&o| self.written[o]);
+        match off {
+            Some(o) => self.data[o],
+            None => panic!(
+                "read of {var}[{i:?}] before definition (malformed PRA or schedule)"
+            ),
+        }
+    }
+
+    fn set(&mut self, i: &[i64], v: f32) {
+        let off = self.flat(i).expect("write outside iteration space");
+        self.data[off] = v;
+        self.written[off] = true;
+    }
+}
+
+/// Interpret one PRA phase: read `inputs`, return produced output tensors.
+pub fn interpret(pra: &Pra, params: &[i64], inputs: &TensorEnv) -> TensorEnv {
+    let bounds: Vec<i64> =
+        (0..pra.ndims).map(|l| params[pra.space.n_index(l)]).collect();
+    let rdg = Rdg::build(pra);
+    let order = rdg
+        .intra_iteration_order(pra.statements.len())
+        .expect("PRA has an intra-iteration dependence cycle");
+
+    let mut vars: BTreeMap<&str, VarStore> = BTreeMap::new();
+    let mut outputs: TensorEnv = BTreeMap::new();
+    for s in &pra.statements {
+        match &s.lhs {
+            Lhs::Var(n) => {
+                vars.entry(n).or_insert_with(|| VarStore::new(&bounds));
+            }
+            Lhs::Tensor { name, .. } => {
+                if !outputs.contains_key(name) {
+                    let decl = pra
+                        .tensor(name)
+                        .unwrap_or_else(|| panic!("undeclared tensor {name}"));
+                    outputs.insert(
+                        name.clone(),
+                        Tensor::zeros(decl.concrete_shape(params)),
+                    );
+                }
+            }
+        }
+    }
+
+    // Lexicographic walk with an odometer (avoids materializing the list).
+    let total: i64 = bounds.iter().product();
+    let mut i = vec![0i64; pra.ndims];
+    let mut argbuf: Vec<f32> = Vec::with_capacity(3);
+    for _ in 0..total {
+        for &q in &order {
+            let s = &pra.statements[q];
+            if !s.active_at(&i, params) {
+                continue;
+            }
+            argbuf.clear();
+            for a in &s.args {
+                let v = match a {
+                    Operand::Var { name, dep } => {
+                        let src: Vec<i64> =
+                            i.iter().zip(dep).map(|(x, d)| x - d).collect();
+                        vars[name.as_str()].get(&src, name)
+                    }
+                    Operand::Tensor { name, map } => {
+                        let idx = map.apply(&i);
+                        inputs
+                            .get(name)
+                            .unwrap_or_else(|| panic!("missing input {name}"))
+                            .get(&idx)
+                    }
+                };
+                argbuf.push(v);
+            }
+            let v = s.op.apply(&argbuf);
+            match &s.lhs {
+                Lhs::Var(n) => vars.get_mut(n.as_str()).unwrap().set(&i, v),
+                Lhs::Tensor { name, map } => {
+                    let idx = map.apply(&i);
+                    outputs.get_mut(name).unwrap().set(&idx, v);
+                }
+            }
+        }
+        // odometer, last dim fastest = lexicographic order
+        for d in (0..pra.ndims).rev() {
+            i[d] += 1;
+            if i[d] < bounds[d] {
+                break;
+            }
+            i[d] = 0;
+        }
+    }
+    outputs
+}
+
+/// Interpret a multi-phase workload: each phase's outputs are added to the
+/// environment available to later phases. `params` gives one parameter
+/// vector per phase. Returns the final environment of produced tensors.
+pub fn interpret_workload(
+    wl: &Workload,
+    params: &[Vec<i64>],
+    inputs: &TensorEnv,
+) -> TensorEnv {
+    assert_eq!(params.len(), wl.phases.len());
+    let mut env = inputs.clone();
+    let mut produced: TensorEnv = BTreeMap::new();
+    for (phase, p) in wl.phases.iter().zip(params) {
+        let out = interpret(phase, p, &env);
+        for (k, v) in out {
+            env.insert(k.clone(), v.clone());
+            produced.insert(k, v);
+        }
+    }
+    produced
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::gesummv::gesummv;
+    use crate::workloads::tensor::synth_inputs;
+
+    #[test]
+    fn gesummv_interprets_to_reference() {
+        // Y[i] = Σ_j (A[i,j] + B[i,j]) · X[j]
+        let pra = gesummv();
+        let (n0, n1) = (4i64, 5i64);
+        let params = [n0, n1, 2, 3]; // p unused by interpretation
+        let inputs = synth_inputs(&[
+            ("A".into(), vec![n0, n1]),
+            ("B".into(), vec![n0, n1]),
+            ("X".into(), vec![n1]),
+        ]);
+        let out = interpret(&pra, &params, &inputs);
+        let y = &out["Y"];
+        assert_eq!(y.shape, vec![n0]);
+        for i in 0..n0 {
+            let mut acc_a = 0.0f32;
+            let mut acc_b = 0.0f32;
+            for j in 0..n1 {
+                acc_a += inputs["A"].get(&[i, j]) * inputs["X"].get(&[j]);
+                acc_b += inputs["B"].get(&[i, j]) * inputs["X"].get(&[j]);
+            }
+            let expect = acc_a + acc_b;
+            assert!(
+                (y.get(&[i]) - expect).abs() < 1e-4,
+                "row {i}: {} vs {expect}",
+                y.get(&[i])
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "before definition")]
+    fn uninitialized_read_panics() {
+        use crate::polyhedral::ParamSpace;
+        use crate::pra::ir::*;
+        // Reads a[i0-1] at i0=0 without an init statement.
+        let nd = 1;
+        let pra = Pra {
+            name: "bad".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![Statement {
+                name: "S1".into(),
+                lhs: Lhs::Var("a".into()),
+                op: Op::Copy,
+                args: vec![Operand::var("a", vec![1])],
+                cond: vec![],
+            }],
+            tensors: vec![],
+        };
+        interpret(&pra, &[3, 1], &Default::default());
+    }
+}

@@ -1,0 +1,149 @@
+//! Jacobi-1D (PolyBench stencils): `N0` unscaled relaxation sweeps over a
+//! length-`N1` array, `v[t,i] = v[t−1,i−1] + v[t−1,i] + v[t−1,i+1]`
+//! (boundaries propagate unchanged). The `(1,−1)` dependence vector — the
+//! right-neighbour read — exercises negative intra-tile displacement and
+//! the γ = +1 inter-tile solutions of the tiling transform, which none of
+//! the linear-algebra kernels produce.
+//!
+//! (PolyBench scales by 1/3; a constant scalar factor does not change any
+//! access counts, see DESIGN.md §6. Requires `N1 ≥ 3`.)
+
+use crate::pra::ir::{IndexMap, Lhs, Op, Operand, Pra, Workload};
+
+use super::builder::PraBuilder;
+
+/// Build the Jacobi-1D PRA (2-deep nest: `i0` = time, `i1` = space).
+pub fn jacobi1d_pra() -> Pra {
+    let nd = 2;
+    let mut b = PraBuilder::new("jacobi1d", nd);
+    b.tensor("Ain", &[1]).tensor("Aout", &[1]);
+    // S1: v = Ain[i1] at t = 0.
+    let at_t0 = b.eq_const(0, 0);
+    b.stmt(
+        Lhs::Var("v".into()),
+        Op::Copy,
+        vec![Operand::tensor("Ain", IndexMap::select(&[1], nd))],
+        at_t0,
+    );
+    // Neighbour transports from the previous sweep (t > 0):
+    // S2: l = v[t−1, i−1]   (d = (1, 1)), needs i1 > 0
+    let mut c_l = vec![b.gt_const(0, 0)];
+    c_l.push(b.gt_const(1, 0));
+    b.stmt(
+        Lhs::Var("l".into()),
+        Op::Copy,
+        vec![Operand::var("v", vec![1, 1])],
+        c_l,
+    );
+    // S3: c = v[t−1, i]     (d = (1, 0))
+    b.stmt(
+        Lhs::Var("c".into()),
+        Op::Copy,
+        vec![Operand::var("v", vec![1, 0])],
+        vec![b.gt_const(0, 0)],
+    );
+    // S4: r = v[t−1, i+1]   (d = (1, −1)), needs i1 < N1 − 1
+    let c_r = vec![b.gt_const(0, 0), b.below_top(1)];
+    b.stmt(
+        Lhs::Var("r".into()),
+        Op::Copy,
+        vec![Operand::var("v", vec![1, -1])],
+        c_r,
+    );
+    // S5: v = l + c + r for interior points of sweeps t > 0.
+    let interior = vec![b.gt_const(0, 0), b.gt_const(1, 0), b.below_top(1)];
+    b.stmt(
+        Lhs::Var("v".into()),
+        Op::Add3,
+        vec![
+            Operand::var0("l", nd),
+            Operand::var0("c", nd),
+            Operand::var0("r", nd),
+        ],
+        interior,
+    );
+    // S6/S7: boundary points propagate unchanged.
+    let left = {
+        let mut c = vec![b.gt_const(0, 0)];
+        c.extend(b.eq_const(1, 0));
+        c
+    };
+    b.stmt(Lhs::Var("v".into()), Op::Copy, vec![Operand::var0("c", nd)], left);
+    let right = {
+        let mut c = vec![b.gt_const(0, 0)];
+        c.extend(b.eq_top(1));
+        c
+    };
+    b.stmt(Lhs::Var("v".into()), Op::Copy, vec![Operand::var0("c", nd)], right);
+    // S8: Aout[i1] = v at the final sweep.
+    let last = b.eq_top(0);
+    b.stmt(
+        Lhs::Tensor { name: "Aout".into(), map: IndexMap::select(&[1], nd) },
+        Op::Copy,
+        vec![Operand::var0("v", nd)],
+        last,
+    );
+    b.build()
+}
+
+/// Single-phase workload wrapper.
+pub fn jacobi1d() -> Workload {
+    Workload::single(jacobi1d_pra())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pra::validate;
+    use crate::workloads::interp::interpret;
+    use crate::workloads::tensor::synth_inputs;
+
+    #[test]
+    fn validates() {
+        let p = jacobi1d_pra();
+        assert!(validate(&p).is_empty(), "{:?}", validate(&p));
+        assert_eq!(p.statements.len(), 8);
+    }
+
+    #[test]
+    fn jacobi_functional() {
+        let pra = jacobi1d_pra();
+        let (steps, n) = (3i64, 6i64);
+        let params = [steps, n, 1, 1];
+        let inputs = synth_inputs(&[("Ain".into(), vec![n])]);
+        let out = interpret(&pra, &params, &inputs);
+        // reference sweeps
+        let mut cur: Vec<f32> =
+            (0..n).map(|i| inputs["Ain"].get(&[i])).collect();
+        for _t in 1..steps {
+            let mut nxt = cur.clone();
+            for i in 1..(n - 1) as usize {
+                nxt[i] = cur[i - 1] + cur[i] + cur[i + 1];
+            }
+            cur = nxt;
+        }
+        for i in 0..n {
+            assert!(
+                (out["Aout"].get(&[i]) - cur[i as usize]).abs() < 1e-3,
+                "Aout[{i}] {} vs {}",
+                out["Aout"].get(&[i]),
+                cur[i as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn has_negative_displacement_dep() {
+        // The defining feature vs. the linear-algebra kernels.
+        let pra = jacobi1d_pra();
+        let has = pra.statements.iter().any(|s| {
+            s.args.iter().any(|a| match a {
+                crate::pra::Operand::Var { dep, .. } => {
+                    dep.iter().any(|&d| d < 0)
+                }
+                _ => false,
+            })
+        });
+        assert!(has);
+    }
+}

@@ -1,0 +1,96 @@
+//! 2MM (PolyBench): `D = (A·B)·C` as two GEMM-shaped phases. Phase 1
+//! produces `TMP = A·B`, phase 2 produces `D = TMP·C`. As with ATAX, the
+//! intermediate tensor round-trips through DRAM between kernels.
+//!
+//! Dimension naming (all phases use their own `N0,N1,N2` parameters):
+//! phase 1 runs over `(N0, N1, N2)` with `A[N0,N2]`, `B[N2,N1]`; phase 2
+//! over `(N0, N3, N1)` — rebound to its local `(N0, N1, N2)` — with
+//! `TMP[N0,N1]`, `C[N1,N3]`.
+
+use crate::pra::ir::{IndexMap, Lhs, Op, Operand, Pra, Workload};
+
+use super::builder::PraBuilder;
+
+/// GEMM-shaped phase computing `Out = L·R` with tensor names.
+fn gemm_phase(name: &str, l: &str, r: &str, out: &str) -> Pra {
+    let nd = 3;
+    let mut b = PraBuilder::new(name, nd);
+    b.tensor(l, &[0, 2]).tensor(r, &[2, 1]).tensor(out, &[0, 1]);
+    b.propagate("a", l, IndexMap::select(&[0, 2], nd), 1);
+    b.propagate("bb", r, IndexMap::select(&[2, 1], nd), 0);
+    b.stmt(
+        Lhs::Var("m".into()),
+        Op::Mul,
+        vec![Operand::var0("a", nd), Operand::var0("bb", nd)],
+        vec![],
+    );
+    b.acc_chain("s", "m", 2);
+    let top = b.eq_top(2);
+    b.stmt(
+        Lhs::Tensor { name: out.into(), map: IndexMap::select(&[0, 1], nd) },
+        Op::Copy,
+        vec![Operand::var0("s", nd)],
+        top,
+    );
+    b.build()
+}
+
+/// The two-phase 2MM workload.
+pub fn k2mm() -> Workload {
+    Workload {
+        name: "k2mm".into(),
+        phases: vec![
+            gemm_phase("k2mm_p1", "A", "B", "TMP"),
+            gemm_phase("k2mm_p2", "TMP", "C", "D"),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pra::validate;
+    use crate::workloads::interp::interpret_workload;
+    use crate::workloads::tensor::synth_inputs;
+
+    #[test]
+    fn phases_validate() {
+        for p in k2mm().phases {
+            assert!(validate(&p).is_empty(), "{}: {:?}", p.name, validate(&p));
+        }
+    }
+
+    #[test]
+    fn k2mm_functional() {
+        let wl = k2mm();
+        // D[N0,N3] = A[N0,N1]·B[N1,N3… naming: phase1 (n0,n1,n2)=(2,3,4):
+        // TMP[2,3] = A[2,4]·B[4,3]; phase2 (n0,n1,n2)=(2,5,3):
+        // D[2,5] = TMP[2,3]·C[3,5].
+        let params = vec![vec![2, 3, 4, 1, 1, 1], vec![2, 5, 3, 1, 1, 1]];
+        let inputs = synth_inputs(&[
+            ("A".into(), vec![2, 4]),
+            ("B".into(), vec![4, 3]),
+            ("C".into(), vec![3, 5]),
+        ]);
+        let out = interpret_workload(&wl, &params, &inputs);
+        let d = &out["D"];
+        assert_eq!(d.shape, vec![2, 5]);
+        for i in 0..2i64 {
+            for j in 0..5i64 {
+                let mut acc = 0.0f32;
+                for t in 0..3i64 {
+                    let mut tmp = 0.0f32;
+                    for k in 0..4i64 {
+                        tmp += inputs["A"].get(&[i, k]) * inputs["B"].get(&[k, t]);
+                    }
+                    acc += tmp * inputs["C"].get(&[t, j]);
+                }
+                assert!(
+                    (d.get(&[i, j]) - acc).abs() < 1e-3,
+                    "D[{i},{j}] {} vs {acc}",
+                    d.get(&[i, j])
+                );
+            }
+        }
+    }
+}

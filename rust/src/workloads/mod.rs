@@ -1,0 +1,95 @@
+//! The paper's evaluation workloads (§V): eight PolyBench kernels expressed
+//! as PRAs, plus tensors, synthetic inputs, and a lexicographic functional
+//! interpreter used as the in-crate golden model.
+
+pub mod atax;
+pub mod bicg;
+pub mod builder;
+pub mod doitgen;
+pub mod gemm;
+pub mod gemver;
+pub mod gesummv;
+pub mod interp;
+pub mod jacobi1d;
+pub mod k2mm;
+pub mod mvt;
+pub mod syrk;
+pub mod tensor;
+
+pub use builder::PraBuilder;
+pub use interp::{interpret, interpret_workload};
+pub use tensor::{synth_inputs, synth_value, Tensor, TensorEnv};
+
+use crate::pra::Workload;
+
+use crate::pra::classify::{classify, VarClass};
+
+/// Declarations (name, concrete shape) of the *external* input tensors a
+/// workload needs, given per-phase parameter vectors. Tensors produced by
+/// an earlier phase (e.g. ATAX's `TMP`) are not inputs.
+pub fn workload_input_decls(
+    wl: &Workload,
+    params: &[Vec<i64>],
+) -> Vec<(String, Vec<i64>)> {
+    let mut produced = std::collections::BTreeSet::new();
+    let mut decls: Vec<(String, Vec<i64>)> = Vec::new();
+    for (phase, p) in wl.phases.iter().zip(params) {
+        let cls = classify(phase);
+        for (name, c) in &cls {
+            if *c == VarClass::Input
+                && !produced.contains(name)
+                && !decls.iter().any(|(n, _)| n == name)
+            {
+                let decl = phase
+                    .tensor(name)
+                    .unwrap_or_else(|| panic!("{name} not declared"));
+                decls.push((name.clone(), decl.concrete_shape(p)));
+            }
+            if *c == VarClass::Output {
+                produced.insert(name.clone());
+            }
+        }
+    }
+    decls
+}
+
+/// Synthesize deterministic inputs for a workload.
+pub fn workload_inputs(wl: &Workload, params: &[Vec<i64>]) -> TensorEnv {
+    synth_inputs(&workload_input_decls(wl, params))
+}
+
+
+/// All benchmark workloads: the paper's eight plus the doitgen (4-deep)
+/// and gemver (3-phase) extensions.
+pub fn all() -> Vec<Workload> {
+    vec![
+        Workload::single(gesummv::gesummv()),
+        Workload::single(gemm::gemm()),
+        atax::atax(),
+        bicg::bicg(),
+        mvt::mvt(),
+        syrk::syrk(),
+        k2mm::k2mm(),
+        jacobi1d::jacobi1d(),
+        doitgen::doitgen(),
+        gemver::gemver(),
+    ]
+}
+
+/// Look up a workload by name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    all().into_iter().find(|w| w.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_has_eight() {
+        let names: Vec<String> =
+            super::all().iter().map(|w| w.name.clone()).collect();
+        assert_eq!(names.len(), 10);
+        assert!(super::by_name("gesummv").is_some());
+        assert!(super::by_name("gemm").is_some());
+        assert!(super::by_name("nope").is_none());
+    }
+}

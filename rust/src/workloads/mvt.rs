@@ -1,0 +1,122 @@
+//! MVT (PolyBench): `X1 = X1_in + A·Y1` and `X2 = X2_in + Aᵀ·Y2`, fused
+//! into one 2-deep PRA. Both accumulation chains run along `i1`; the second
+//! product reads `A` transposed (`A[i1, i0]`). The `+ X_in` update happens
+//! in the output statements, which therefore are *computational* output
+//! statements (unlike GESUMMV's copy-out) — exercising the
+//! DRAM+IOb+OD-with-compute case of the energy model.
+
+use crate::pra::ir::{IndexMap, Lhs, Op, Operand, Pra, Workload};
+
+use super::builder::PraBuilder;
+
+/// Build the fused MVT PRA.
+pub fn mvt_pra() -> Pra {
+    let nd = 2;
+    let mut b = PraBuilder::new("mvt", nd);
+    b.tensor("A", &[0, 1])
+        .tensor("Y1", &[1])
+        .tensor("Y2", &[1])
+        .tensor("X1in", &[0])
+        .tensor("X2in", &[0])
+        .tensor("X1", &[0])
+        .tensor("X2", &[0]);
+    // y1/y2 propagate along i0.
+    b.propagate("v1", "Y1", IndexMap::select(&[1], nd), 0);
+    b.propagate("v2", "Y2", IndexMap::select(&[1], nd), 0);
+    // products: m1 = A[i0,i1]·v1, m2 = A[i1,i0]·v2 (transposed read).
+    b.stmt(
+        Lhs::Var("m1".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("A", IndexMap::identity(2, nd)),
+            Operand::var0("v1", nd),
+        ],
+        vec![],
+    );
+    b.stmt(
+        Lhs::Var("m2".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("A", IndexMap::select(&[1, 0], nd)),
+            Operand::var0("v2", nd),
+        ],
+        vec![],
+    );
+    b.acc_chain("s1", "m1", 1);
+    b.acc_chain("s2", "m2", 1);
+    // Outputs at i1 = N1 − 1 add the DRAM-resident inputs X1in/X2in.
+    let top = b.eq_top(1);
+    b.stmt(
+        Lhs::Tensor { name: "X1".into(), map: IndexMap::select(&[0], nd) },
+        Op::Add,
+        vec![
+            Operand::var0("s1", nd),
+            Operand::tensor("X1in", IndexMap::select(&[0], nd)),
+        ],
+        top.clone(),
+    );
+    b.stmt(
+        Lhs::Tensor { name: "X2".into(), map: IndexMap::select(&[0], nd) },
+        Op::Add,
+        vec![
+            Operand::var0("s2", nd),
+            Operand::tensor("X2in", IndexMap::select(&[0], nd)),
+        ],
+        top,
+    );
+    b.build()
+}
+
+/// Single-phase workload wrapper.
+pub fn mvt() -> Workload {
+    Workload::single(mvt_pra())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pra::validate;
+    use crate::workloads::interp::interpret;
+    use crate::workloads::tensor::synth_inputs;
+
+    #[test]
+    fn validates() {
+        let p = mvt_pra();
+        assert!(validate(&p).is_empty(), "{:?}", validate(&p));
+    }
+
+    #[test]
+    fn mvt_functional_square() {
+        // MVT is square in PolyBench (A: N×N); the transposed read A[i1,i0]
+        // requires N0 = N1, so the workload is always evaluated square.
+        let pra = mvt_pra();
+        let n = 4i64;
+        let params = [n, n, 1, 1];
+        let inputs = synth_inputs(&[
+            ("A".into(), vec![n, n]),
+            ("Y1".into(), vec![n]),
+            ("Y2".into(), vec![n]),
+            ("X1in".into(), vec![n]),
+            ("X2in".into(), vec![n]),
+        ]);
+        let out = interpret(&pra, &params, &inputs);
+        for i in 0..n {
+            let mut a1 = inputs["X1in"].get(&[i]);
+            let mut a2 = inputs["X2in"].get(&[i]);
+            for j in 0..n {
+                a1 += inputs["A"].get(&[i, j]) * inputs["Y1"].get(&[j]);
+                a2 += inputs["A"].get(&[j, i]) * inputs["Y2"].get(&[j]);
+            }
+            assert!(
+                (out["X1"].get(&[i]) - a1).abs() < 1e-4,
+                "X1[{i}] {} vs {a1}",
+                out["X1"].get(&[i])
+            );
+            assert!(
+                (out["X2"].get(&[i]) - a2).abs() < 1e-4,
+                "X2[{i}] {} vs {a2}",
+                out["X2"].get(&[i])
+            );
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! SYRK (PolyBench): symmetric rank-k update `C = A·Aᵀ + C_in` over the
+//! full rectangular index set (the triangular-only update of PolyBench is
+//! relaxed to rectangular — see DESIGN.md §6; the access-count structure
+//! per iteration is identical). 3-deep nest `(i0, i1, i2)` with `i0, i1`
+//! indexing `C` (both bounded by the matrix height) and `i2` the reduction.
+//! Evaluated with `N0 = N1`.
+
+use crate::pra::ir::{IndexMap, Lhs, Op, Operand, Pra, Workload};
+
+use super::builder::PraBuilder;
+
+/// Build the SYRK PRA (3-deep nest).
+pub fn syrk_pra() -> Pra {
+    let nd = 3;
+    let mut b = PraBuilder::new("syrk", nd);
+    b.tensor("A", &[0, 2]) // A[N0, N2]
+        .tensor("Cin", &[0, 1])
+        .tensor("C", &[0, 1]);
+    // a[i] propagates A[i0, i2] along i1; at[i] propagates A[i1, i2] along i0.
+    b.propagate("a", "A", IndexMap::select(&[0, 2], nd), 1);
+    b.propagate("at", "A", IndexMap::select(&[1, 2], nd), 0);
+    b.stmt(
+        Lhs::Var("m".into()),
+        Op::Mul,
+        vec![Operand::var0("a", nd), Operand::var0("at", nd)],
+        vec![],
+    );
+    b.acc_chain("s", "m", 2);
+    // C[i0,i1] = s + Cin[i0,i1] at i2 = N2 − 1 (computational output).
+    let top = b.eq_top(2);
+    b.stmt(
+        Lhs::Tensor { name: "C".into(), map: IndexMap::select(&[0, 1], nd) },
+        Op::Add,
+        vec![
+            Operand::var0("s", nd),
+            Operand::tensor("Cin", IndexMap::select(&[0, 1], nd)),
+        ],
+        top,
+    );
+    b.build()
+}
+
+/// Single-phase workload wrapper.
+pub fn syrk() -> Workload {
+    Workload::single(syrk_pra())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pra::validate;
+    use crate::workloads::interp::interpret;
+    use crate::workloads::tensor::synth_inputs;
+
+    #[test]
+    fn validates() {
+        let p = syrk_pra();
+        assert!(validate(&p).is_empty(), "{:?}", validate(&p));
+    }
+
+    #[test]
+    fn syrk_functional() {
+        let pra = syrk_pra();
+        let (n, nk) = (4i64, 3i64);
+        let params = [n, n, nk, 1, 1, 1];
+        let inputs = synth_inputs(&[
+            ("A".into(), vec![n, nk]),
+            ("Cin".into(), vec![n, n]),
+        ]);
+        let out = interpret(&pra, &params, &inputs);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = inputs["Cin"].get(&[i, j]);
+                for k in 0..nk {
+                    acc += inputs["A"].get(&[i, k]) * inputs["A"].get(&[j, k]);
+                }
+                assert!(
+                    (out["C"].get(&[i, j]) - acc).abs() < 1e-4,
+                    "C[{i},{j}] {} vs {acc}",
+                    out["C"].get(&[i, j])
+                );
+            }
+        }
+    }
+}

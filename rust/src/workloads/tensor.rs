@@ -1,0 +1,184 @@
+//! Dense row-major f32 tensors used by the functional interpreter, the
+//! cycle-accurate simulator, and the PJRT golden-model comparison.
+
+use std::collections::BTreeMap;
+
+/// A dense row-major tensor of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<i64>) -> Self {
+        let n: i64 = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n as usize] }
+    }
+
+    /// Build from a function of the index vector.
+    pub fn from_fn(shape: Vec<i64>, mut f: impl FnMut(&[i64]) -> f32) -> Self {
+        let mut t = Tensor::zeros(shape);
+        let mut idx = vec![0i64; t.shape.len()];
+        let n = t.data.len();
+        for flat in 0..n {
+            t.data[flat] = f(&idx);
+            // increment row-major odometer (last dim fastest)
+            for d in (0..idx.len()).rev() {
+                idx[d] += 1;
+                if idx[d] < t.shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        t
+    }
+
+    /// Row-major flat offset of an index vector.
+    pub fn flat(&self, idx: &[i64]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off: i64 = 0;
+        for (d, (&i, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(
+                i >= 0 && i < s,
+                "index {idx:?} out of shape {:?} at dim {d}",
+                self.shape
+            );
+            off = off * s + i;
+        }
+        off as usize
+    }
+
+    /// Read one element.
+    pub fn get(&self, idx: &[i64]) -> f32 {
+        self.data[self.flat(idx)]
+    }
+
+    /// Write one element.
+    pub fn set(&mut self, idx: &[i64], v: f32) {
+        let off = self.flat(idx);
+        self.data[off] = v;
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True for an empty tensor.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Max absolute elementwise difference to another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Allclose with combined absolute/relative tolerance.
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data.iter().zip(&other.data).all(|(a, b)| {
+            (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+        })
+    }
+}
+
+/// Named tensor environment flowing between workload phases.
+pub type TensorEnv = BTreeMap<String, Tensor>;
+
+/// Deterministic pseudo-random input value for tensor `name` at `idx`:
+/// quantized to multiples of 1/8 in [-1, 1] so that f32 accumulation across
+/// differently-ordered reductions stays comparable.
+pub fn synth_value(name: &str, idx: &[i64]) -> f32 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    for &i in idx {
+        h = (h ^ i as u64).wrapping_mul(0x100000001b3);
+    }
+    let q = (h >> 40) % 17; // 0..16
+    (q as f32 - 8.0) / 8.0
+}
+
+/// Build synthetic input tensors for the given (name, shape) pairs.
+pub fn synth_inputs(decls: &[(String, Vec<i64>)]) -> TensorEnv {
+    decls
+        .iter()
+        .map(|(name, shape)| {
+            let t = Tensor::from_fn(shape.clone(), |idx| synth_value(name, idx));
+            (name.clone(), t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_major_layout() {
+        let t = Tensor::from_fn(vec![2, 3], |i| (i[0] * 10 + i[1]) as f32);
+        assert_eq!(t.get(&[0, 0]), 0.0);
+        assert_eq!(t.get(&[0, 2]), 2.0);
+        assert_eq!(t.get(&[1, 0]), 10.0);
+        assert_eq!(t.data, vec![0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut t = Tensor::zeros(vec![4, 4]);
+        t.set(&[3, 1], 7.5);
+        assert_eq!(t.get(&[3, 1]), 7.5);
+        assert_eq!(t.len(), 16);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Tensor::from_fn(vec![3], |i| i[0] as f32);
+        let mut b = a.clone();
+        assert!(a.allclose(&b, 0.0, 0.0));
+        b.set(&[2], 2.0 + 1e-6);
+        assert!(a.allclose(&b, 1e-5, 0.0));
+        assert!(!a.allclose(&b, 1e-8, 0.0));
+        assert!(a.max_abs_diff(&b) > 0.0);
+    }
+
+    #[test]
+    fn synth_deterministic_and_quantized() {
+        let v1 = synth_value("A", &[3, 4]);
+        let v2 = synth_value("A", &[3, 4]);
+        assert_eq!(v1, v2);
+        // Different names give different sequences (17 quantization buckets
+        // mean single-point collisions are expected; compare a run of them).
+        let run_a: Vec<f32> =
+            (0..32).map(|i| synth_value("A", &[i, 0])).collect();
+        let run_b: Vec<f32> =
+            (0..32).map(|i| synth_value("B", &[i, 0])).collect();
+        assert_ne!(run_a, run_b);
+        assert!((-1.0..=1.0).contains(&v1));
+        // quantized to eighths
+        assert_eq!((v1 * 8.0).fract(), 0.0);
+    }
+
+    #[test]
+    fn synth_inputs_env() {
+        let env = synth_inputs(&[
+            ("A".into(), vec![2, 2]),
+            ("x".into(), vec![2]),
+        ]);
+        assert_eq!(env.len(), 2);
+        assert_eq!(env["A"].shape, vec![2, 2]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Failure injection: the framework must *report* broken configurations,
+//! not silently produce numbers.
+
+use tcpa_energy::pra::ir::{Lhs, Op, Operand, Pra, Statement};
+use tcpa_energy::polyhedral::ParamSpace;
+use tcpa_energy::runtime::Runtime;
+use tcpa_energy::schedule::{find_schedule, ScheduleError};
+use tcpa_energy::sim::{simulate, ArchConfig};
+use tcpa_energy::tiling::{tile_pra, ArrayMapping};
+use tcpa_energy::workloads::{self, workload_inputs, Tensor};
+
+/// Undersized feedback register files must be flagged: GEMM with a big
+/// PE-local reduction needs deep FD FIFOs.
+#[test]
+fn undersized_fd_regfile_reported() {
+    let wl = workloads::by_name("gemm").unwrap();
+    let phase = &wl.phases[0];
+    let mapping = ArrayMapping::new(vec![2, 2, 1]);
+    let mut arch = ArchConfig::with_array(vec![2, 2, 1]);
+    arch.regs.fd = 2; // far below the schedule distance of the chains
+    let tiled = tile_pra(phase, &mapping);
+    let schedule = find_schedule(&tiled, 1).unwrap();
+    let params = mapping.params_for(&[8, 8, 8]);
+    let env = workload_inputs(&wl, &[params.clone()]);
+    let res = simulate(phase, &arch, &schedule, &params, &env);
+    assert!(
+        res.violations.iter().any(|v| v.contains("FD pressure")),
+        "expected an FD-pressure violation, got {:?}",
+        res.violations
+    );
+    // ... and a generously sized file is clean.
+    arch.regs.fd = 1 << 20;
+    let res2 = simulate(phase, &arch, &schedule, &params, &env);
+    assert!(res2.violations.is_empty(), "{:?}", res2.violations);
+}
+
+/// A dependence set with no causal lexicographic order must be rejected
+/// by the scheduler (not silently mis-scheduled).
+#[test]
+fn unschedulable_dependences_rejected() {
+    let nd = 2;
+    let pra = Pra {
+        name: "twist".into(),
+        ndims: nd,
+        space: ParamSpace::loop_nest(nd),
+        statements: vec![
+            Statement {
+                name: "S1".into(),
+                lhs: Lhs::Var("a".into()),
+                op: Op::Copy,
+                args: vec![Operand::var("b", vec![1, -1])],
+                cond: vec![],
+            },
+            Statement {
+                name: "S2".into(),
+                lhs: Lhs::Var("b".into()),
+                op: Op::Copy,
+                args: vec![Operand::var("a", vec![-1, 1])],
+                cond: vec![],
+            },
+        ],
+        tensors: vec![],
+    };
+    let tiled = tile_pra(&pra, &ArrayMapping::new(vec![2, 2]));
+    let err = find_schedule(&tiled, 1);
+    assert!(
+        matches!(err, Err(ScheduleError::NoValidPermutation(_))),
+        "{err:?}"
+    );
+}
+
+/// Runtime errors are descriptive: missing artifacts directory, unknown
+/// model, and shape mismatches.
+#[test]
+fn runtime_error_paths() {
+    let mut rt = Runtime::new().unwrap();
+    // Missing manifest points the user at `make artifacts`.
+    let err = rt
+        .load_dir(std::path::Path::new("/nonexistent-dir"))
+        .unwrap_err();
+    assert!(err.to_string().contains("make artifacts"), "{err:#}");
+    // Unknown model.
+    let err = rt.execute("ghost", &[]).unwrap_err();
+    assert!(err.to_string().contains("not loaded"));
+    // Shape mismatch (needs real artifacts).
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.txt").exists() {
+        rt.load_dir(dir).unwrap();
+        let bad = vec![Tensor::zeros(vec![3, 3]); 3];
+        let err = rt.execute("gesummv", &bad).unwrap_err();
+        assert!(
+            err.to_string().contains("does not match artifact"),
+            "{err:#}"
+        );
+        let err2 = rt.execute("gesummv", &[]).unwrap_err();
+        assert!(err2.to_string().contains("expected"), "{err2:#}");
+    }
+}
+
+/// Mappings with a rank different from the loop depth are a programmer
+/// error and panic with a clear message.
+#[test]
+#[should_panic(expected = "mapping rank")]
+fn rank_mismatch_panics() {
+    let wl = workloads::by_name("gemm").unwrap();
+    let _ = tile_pra(&wl.phases[0], &ArrayMapping::new(vec![2, 2]));
+}
+
+/// Zero/negative array extents are rejected at construction.
+#[test]
+#[should_panic(expected = "extents must be >= 1")]
+fn bad_array_extent_panics() {
+    let _ = ArrayMapping::new(vec![2, 0]);
+}

@@ -1,0 +1,302 @@
+//! Randomized property tests (proptest_lite) over the core invariants:
+//!
+//! * the symbolic counter equals the concrete counter equals brute-force
+//!   enumeration on randomized tiled spaces and parameters;
+//! * guard/chamber algebra invariants (negation complement, feasibility
+//!   monotonicity);
+//! * coordinator invariants: schedule causality holds wherever volumes are
+//!   non-zero; energy decomposes over statements; analysis evaluation is
+//!   deterministic.
+
+use tcpa_energy::analysis::SymbolicAnalysis;
+use tcpa_energy::polyhedral::{
+    count_bruteforce, count_concrete, count_symbolic, AffineExpr, Constraint,
+    Guard, ParamSpace, SymbolicOptions, TiledSet,
+};
+use tcpa_energy::proptest_lite::{check, Rng};
+use tcpa_energy::schedule::find_schedule;
+use tcpa_energy::tiling::{tile_pra, ArrayMapping};
+use tcpa_energy::workloads;
+
+/// Build a randomized 2-D tiled space: base space plus a random shifted
+/// membership and/or a random global condition.
+fn random_space(rng: &mut Rng, t: &[i64]) -> TiledSet {
+    let sp = ParamSpace::loop_nest(2);
+    let np = sp.len();
+    let p_idx = [sp.p_index(0), sp.p_index(1)];
+    let mut set = TiledSet::universe(2, np);
+    for l in 0..2 {
+        set.add_tile_bounds(l, p_idx[l]);
+        set.add_array_bounds(l, t[l]);
+        let mut a = [0i64; 2];
+        a[l] = 1;
+        set.add_global_affine(&a, AffineExpr::zero(np), &p_idx);
+        let mut an = [0i64; 2];
+        an[l] = -1;
+        set.add_global_affine(
+            &an,
+            AffineExpr::param(np, sp.n_index(l)).plus(-1),
+            &p_idx,
+        );
+    }
+    // Random extras.
+    if rng.i64_in(0, 1) == 1 {
+        // condition i_l >= c
+        let l = rng.i64_in(0, 1) as usize;
+        let c = rng.i64_in(0, 2);
+        let mut a = [0i64; 2];
+        a[l] = 1;
+        set.add_global_affine(&a, AffineExpr::constant(np, -c), &p_idx);
+    }
+    if rng.i64_in(0, 1) == 1 {
+        // shifted membership j_l - (d + γ p_l) ∈ J
+        let l = rng.i64_in(0, 1) as usize;
+        let d = rng.i64_in(-1, 1);
+        let gamma = if d > 0 {
+            -rng.i64_in(0, 1)
+        } else if d < 0 {
+            rng.i64_in(0, 1)
+        } else {
+            0
+        };
+        let off = AffineExpr::param_scaled(np, p_idx[l], gamma, d);
+        set.add_shifted_tile_membership(l, off, p_idx[l]);
+    }
+    set
+}
+
+fn context2() -> Guard {
+    let sp = ParamSpace::loop_nest(2);
+    let np = sp.len();
+    let one = AffineExpr::constant(np, 1);
+    let mut cs = Vec::new();
+    for l in 0..2 {
+        let n = AffineExpr::param(np, sp.n_index(l));
+        let p = AffineExpr::param(np, sp.p_index(l));
+        cs.push(Constraint::ge(&n, &one));
+        cs.push(Constraint::ge(&p, &one));
+        cs.push(Constraint::le(&p, &n));
+    }
+    Guard::new(cs)
+}
+
+#[test]
+fn prop_symbolic_equals_concrete_equals_bruteforce() {
+    let ctx = context2();
+    check(
+        "count-agreement",
+        0xC0FFEE,
+        60,
+        |rng| {
+            let t = vec![rng.i64_in(1, 3), rng.i64_in(1, 3)];
+            let set = random_space(rng, &t);
+            let n0 = rng.i64_in(1, 7);
+            let n1 = rng.i64_in(1, 7);
+            let p0 = rng.i64_in(1, n0);
+            let p1 = rng.i64_in(1, n1);
+            (t, set, [n0, n1, p0, p1])
+        },
+        |(t, set, params)| {
+            let sym = count_symbolic(set, t, &ctx, &SymbolicOptions::default());
+            let s = sym.eval(params);
+            let c = count_concrete(set, t, params);
+            let b = count_bruteforce(set, t, params);
+            if s != c || c != b {
+                return Err(format!("symbolic {s}, concrete {c}, brute {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_constraint_negation_is_complement() {
+    check(
+        "negation-complement",
+        7,
+        200,
+        |rng| {
+            let coeffs = vec![
+                rng.i64_in(-3, 3),
+                rng.i64_in(-3, 3),
+                rng.i64_in(-3, 3),
+                rng.i64_in(-3, 3),
+            ];
+            let konst = rng.i64_in(-5, 5);
+            let point = vec![
+                rng.i64_in(-4, 4),
+                rng.i64_in(-4, 4),
+                rng.i64_in(-4, 4),
+                rng.i64_in(-4, 4),
+            ];
+            (AffineExpr { coeffs, konst }, point)
+        },
+        |(expr, point)| {
+            let c = Constraint::ge0(expr.clone());
+            let n = c.negated();
+            if c.holds(point) == n.holds(point) {
+                return Err(format!(
+                    "c and ¬c agree at {point:?}: {} {}",
+                    c.holds(point),
+                    n.holds(point)
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_guard_and_is_intersection() {
+    check(
+        "guard-and",
+        99,
+        150,
+        |rng| {
+            let mk = |rng: &mut Rng| AffineExpr {
+                coeffs: vec![
+                    rng.i64_in(-2, 2),
+                    rng.i64_in(-2, 2),
+                    rng.i64_in(-2, 2),
+                    rng.i64_in(-2, 2),
+                ],
+                konst: rng.i64_in(-4, 4),
+            };
+            let a = Constraint::ge0(mk(rng));
+            let b = Constraint::ge0(mk(rng));
+            let point = vec![
+                rng.i64_in(-4, 4),
+                rng.i64_in(-4, 4),
+                rng.i64_in(-4, 4),
+                rng.i64_in(-4, 4),
+            ];
+            (a, b, point)
+        },
+        |(a, b, point)| {
+            let g = Guard::new(vec![a.clone()]).and(b.clone());
+            let expect = a.holds(point) && b.holds(point);
+            if g.holds(point) != expect {
+                return Err("conjunction semantics broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedule_causality_where_volumes_nonzero() {
+    // For random workloads / arrays / sizes: the found schedule satisfies
+    // every causality constraint whose variant actually executes.
+    let wls = workloads::all();
+    check(
+        "schedule-causality",
+        0xBADC0DE,
+        40,
+        |rng| {
+            let wl = rng.choose(&wls).clone();
+            let pi = rng.i64_in(1, 3);
+            let n0 = rng.i64_in(2, 10);
+            let n1 = rng.i64_in(3, 10);
+            let t0 = rng.i64_in(1, 3);
+            let t1 = rng.i64_in(1, 3);
+            (wl, pi, n0, n1, t0, t1)
+        },
+        |(wl, pi, n0, n1, t0, t1)| {
+            for phase in &wl.phases {
+                let mut t = vec![*t0, *t1];
+                while t.len() < phase.ndims {
+                    t.push(1);
+                }
+                t.truncate(phase.ndims);
+                let mapping = ArrayMapping::new(t);
+                let tiled = tile_pra(phase, &mapping);
+                let schedule = find_schedule(&tiled, *pi)
+                    .map_err(|e| format!("{}: {e}", phase.name))?;
+                let mut bounds = vec![*n0, *n1];
+                while bounds.len() < phase.ndims {
+                    bounds.push(*n1);
+                }
+                bounds.truncate(phase.ndims);
+                // square-only workloads
+                if matches!(wl.name.as_str(), "mvt" | "syrk") {
+                    let m = bounds[0].max(bounds[1]);
+                    bounds[0] = m;
+                    bounds[1] = m;
+                }
+                let params = mapping.params_for(&bounds);
+                let v = schedule.verify(&tiled, &params);
+                if !v.is_empty() {
+                    return Err(format!("{}: {v:?}", phase.name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_energy_decomposes_over_statements() {
+    // E_tot == Σ_q Vol_q · E_q for random configurations (Eq. 11 as an
+    // invariant of the evaluator).
+    let wl = workloads::by_name("gesummv").unwrap();
+    let phase = &wl.phases[0];
+    check(
+        "energy-decomposition",
+        0xE4E,
+        30,
+        |rng| {
+            let t0 = rng.i64_in(1, 4);
+            let t1 = rng.i64_in(1, 4);
+            let n0 = rng.i64_in(2, 20);
+            let n1 = rng.i64_in(2, 20);
+            (t0, t1, n0, n1)
+        },
+        |&(t0, t1, n0, n1)| {
+            let mapping = ArrayMapping::new(vec![t0, t1]);
+            let ana = SymbolicAnalysis::analyze(phase, &mapping);
+            let params = mapping.params_for(&[n0, n1]);
+            let total = ana.energy_at(&params).total;
+            let manual: f64 = ana
+                .statements
+                .iter()
+                .map(|s| {
+                    s.volume.eval(&params) as f64 * s.profile.energy(&ana.table)
+                })
+                .sum();
+            if (total - manual).abs() > 1e-6 * manual.abs().max(1.0) {
+                return Err(format!("E_tot {total} != Σ {manual}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_evaluation_deterministic() {
+    let wl = workloads::by_name("bicg").unwrap();
+    let phase = &wl.phases[0];
+    let mapping = ArrayMapping::new(vec![3, 2]);
+    let ana = SymbolicAnalysis::analyze(phase, &mapping);
+    let ana2 = SymbolicAnalysis::analyze(phase, &mapping);
+    check(
+        "evaluation-deterministic",
+        5,
+        50,
+        |rng| {
+            let n0 = rng.i64_in(3, 30);
+            let n1 = rng.i64_in(2, 30);
+            mapping.params_for(&[n0, n1])
+        },
+        |params| {
+            let a = ana.counts_at(params);
+            let b = ana2.counts_at(params);
+            if a != b {
+                return Err("two analyses disagree".into());
+            }
+            if ana.energy_at(params).total != ana.energy_at(params).total {
+                return Err("re-evaluation differs".into());
+            }
+            Ok(())
+        },
+    );
+}

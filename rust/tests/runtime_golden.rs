@@ -1,0 +1,102 @@
+//! Three-layer composition test: the AOT-compiled JAX/Pallas artifacts
+//! (L2/L1), executed from Rust through PJRT (runtime), must numerically
+//! agree with (a) the PRA interpreter and (b) the cycle-accurate
+//! simulator's functional outputs — for every workload in the catalog.
+//!
+//! Requires `make artifacts` (skips with a message otherwise, so plain
+//! `cargo test` stays green in a fresh checkout).
+
+use std::path::Path;
+
+use tcpa_energy::runtime::{catalog, Runtime};
+use tcpa_energy::schedule::find_schedule;
+use tcpa_energy::sim::{simulate, ArchConfig};
+use tcpa_energy::tiling::{tile_pra, ArrayMapping};
+use tcpa_energy::workloads::{
+    self, interpret_workload, workload_inputs, Tensor,
+};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
+        None
+    }
+}
+
+#[test]
+fn pjrt_artifacts_match_interpreter_and_simulator() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new().expect("PJRT CPU client");
+    let loaded = rt.load_dir(dir).expect("loading artifacts");
+    assert_eq!(loaded.len(), 10, "all ten artifacts load");
+
+    for spec in catalog() {
+        let wl = workloads::by_name(spec.name).unwrap();
+        // Exact-cover params at the artifact's lowered bounds, 2×2 array
+        // (padded with t=1 for 3-deep phases).
+        let params: Vec<Vec<i64>> = wl
+            .phases
+            .iter()
+            .zip(spec.bounds)
+            .map(|(ph, b)| {
+                let mut t = vec![2, 2];
+                while t.len() < ph.ndims {
+                    t.push(1);
+                }
+                t.truncate(ph.ndims);
+                ArrayMapping::new(t).params_for(b)
+            })
+            .collect();
+        let env = workload_inputs(&wl, &params);
+
+        // --- PJRT execution of the artifact ---
+        let inputs: Vec<Tensor> =
+            spec.inputs.iter().map(|n| env[*n].clone()).collect();
+        let outs = rt
+            .execute(spec.name, &inputs)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", spec.name));
+        assert_eq!(outs.len(), spec.outputs.len(), "{}", spec.name);
+
+        // --- interpreter golden ---
+        let golden = interpret_workload(&wl, &params, &env);
+        for (tensor_name, pjrt_out) in spec.outputs.iter().zip(&outs) {
+            let want = &golden[*tensor_name];
+            assert_eq!(
+                pjrt_out.shape, want.shape,
+                "{} output {tensor_name}",
+                spec.name
+            );
+            assert!(
+                pjrt_out.allclose(want, 1e-3, 1e-3),
+                "{} output {tensor_name}: max diff {}",
+                spec.name,
+                pjrt_out.max_abs_diff(want)
+            );
+        }
+
+        // --- simulator functional agreement (first phase) ---
+        let phase = &wl.phases[0];
+        let mut t = vec![2, 2];
+        while t.len() < phase.ndims {
+            t.push(1);
+        }
+        t.truncate(phase.ndims);
+        let mapping = ArrayMapping::new(t.clone());
+        let mut arch = ArchConfig::with_array(t);
+        arch.regs.fd = 1 << 20;
+        let tiled = tile_pra(phase, &mapping);
+        let schedule = find_schedule(&tiled, 1).unwrap();
+        let sim = simulate(phase, &arch, &schedule, &params[0], &env);
+        assert!(sim.violations.is_empty(), "{}", spec.name);
+        for (name, tens) in &sim.outputs {
+            assert!(
+                tens.allclose(&golden[name], 1e-3, 1e-3),
+                "{} sim output {name} diverges",
+                spec.name
+            );
+        }
+    }
+}
