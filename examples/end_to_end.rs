@@ -24,16 +24,22 @@ use tcpa_energy::analysis::SymbolicAnalysis;
 use tcpa_energy::runtime::{catalog, Runtime};
 use tcpa_energy::schedule::find_schedule;
 use tcpa_energy::sim::{simulate, ArchConfig};
-use tcpa_energy::tiling::{tile_pra, ArrayMapping};
+use tcpa_energy::tiling::{pad_array, tile_pra, ArrayMapping};
 use tcpa_energy::workloads::{self, workload_inputs, Tensor};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dir = Path::new("artifacts");
-    anyhow::ensure!(
-        dir.join("manifest.txt").exists(),
-        "artifacts/ missing — run `make artifacts` first"
-    );
+    if !dir.join("manifest.txt").exists() {
+        return Err("artifacts/ missing — run `make artifacts` first".into());
+    }
     let mut rt = Runtime::new()?;
+    if rt.is_stub() {
+        return Err(
+            "PJRT backend not built (stub runtime) — rebuild with \
+             `--features pjrt` (see rust/Cargo.toml)"
+                .into(),
+        );
+    }
     let loaded = rt.load_dir(dir)?;
     println!(
         "PJRT platform: {}; loaded {} artifacts\n",
@@ -53,11 +59,7 @@ fn main() -> anyhow::Result<()> {
             .iter()
             .zip(spec.bounds)
             .map(|(ph, b)| {
-                let mut t = vec![2, 2];
-                while t.len() < ph.ndims {
-                    t.push(1);
-                }
-                t.truncate(ph.ndims);
+                let t = pad_array(&[2, 2], ph.ndims);
                 ArrayMapping::new(t).params_for(b)
             })
             .collect();
@@ -72,11 +74,7 @@ fn main() -> anyhow::Result<()> {
 
         // L3: symbolic + simulation on the first phase.
         let phase = &wl.phases[0];
-        let mut t = vec![2, 2];
-        while t.len() < phase.ndims {
-            t.push(1);
-        }
-        t.truncate(phase.ndims);
+        let t = pad_array(&[2, 2], phase.ndims);
         let mapping = ArrayMapping::new(t.clone());
         let ana = SymbolicAnalysis::analyze(phase, &mapping);
         let t1 = Instant::now();
@@ -142,7 +140,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    anyhow::ensure!(all_ok, "some workloads diverged");
+    if !all_ok {
+        return Err("some workloads diverged".into());
+    }
     println!("\nall layers compose: PJRT == simulator, symbolic == simulated");
     Ok(())
 }

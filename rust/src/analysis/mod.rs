@@ -106,6 +106,7 @@ impl SymbolicAnalysis {
 }
 
 /// Multi-phase workload analysis: one [`SymbolicAnalysis`] per phase.
+#[derive(Debug, Clone)]
 pub struct WorkloadAnalysis {
     pub name: String,
     pub phases: Vec<SymbolicAnalysis>,
@@ -132,14 +133,7 @@ impl WorkloadAnalysis {
         let mappings: Vec<ArrayMapping> = wl
             .phases
             .iter()
-            .map(|p| {
-                let mut t = array.to_vec();
-                while t.len() < p.ndims {
-                    t.push(1);
-                }
-                t.truncate(p.ndims);
-                ArrayMapping::new(t)
-            })
+            .map(|p| ArrayMapping::new(crate::tiling::pad_array(array, p.ndims)))
             .collect();
         Self::analyze(wl, &mappings)
     }

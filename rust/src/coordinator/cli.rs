@@ -6,6 +6,9 @@
 //! tcpa-energy simulate --workload gesummv --array 2x2 --bounds 8,8
 //! tcpa-energy validate [--workload NAME] [--bounds 8,8] [--array 2x2]
 //! tcpa-energy dse      --workload gemm --bounds 64,64 [--max-pes 64]
+//!                      [--arrays 1d|2d] [--bounds-sweep 32,64,128]
+//!                      [--tile-scales 1,2] [--policies all|tcpa,no-fd]
+//!                      [--prune-symmetric] [--workers N] [--out DIR]
 //! tcpa-energy figures  [--out results] [--quick]
 //! ```
 
@@ -13,26 +16,55 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::analysis::SymbolicAnalysis;
-use crate::energy::MemoryClass;
-use crate::report::{ascii_chart, write_csv, CsvTable};
+use crate::dse::{explore, DesignSpace, ExploreConfig};
+use crate::energy::{MemoryClass, Policy};
+use crate::report::{
+    ascii_chart, dse_frontier_markdown, write_csv, write_dse_report,
+    CsvTable,
+};
 use crate::schedule::find_schedule;
 use crate::sim::{simulate, ArchConfig};
-use crate::tiling::{tile_pra, ArrayMapping};
+use crate::tiling::{pad_array, tile_pra, ArrayMapping};
 use crate::workloads::{self, workload_inputs};
 
-use super::dse::dse_sweep;
 use super::figures::{fig4_rows, fig5_rows};
 use super::validate::validate_workload;
 
 /// CLI failure.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("usage: {0}")]
     Usage(String),
-    #[error("unknown workload {0}; try `tcpa-energy list`")]
     UnknownWorkload(String),
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Usage(u) => write!(f, "usage: {u}"),
+            CliError::UnknownWorkload(w) => {
+                write!(f, "unknown workload {w}; try `tcpa-energy list`")
+            }
+            CliError::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for CliError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            // Transparent wrapper: Display already forwards to the io
+            // error, so the chain continues at *its* source.
+            CliError::Io(e) => e.source(),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CliError {
+    fn from(e: std::io::Error) -> Self {
+        CliError::Io(e)
+    }
 }
 
 fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
@@ -54,8 +86,17 @@ fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
     out
 }
 
-fn parse_vec(s: &str, sep: char) -> Vec<i64> {
-    s.split(sep).map(|x| x.trim().parse().expect("integer list")).collect()
+fn parse_vec(s: &str, sep: char) -> Result<Vec<i64>, CliError> {
+    s.split(sep)
+        .map(|x| {
+            x.trim().parse().map_err(|_| {
+                CliError::Usage(format!(
+                    "expected a list of integers separated by {sep:?}, \
+                     got {s:?}"
+                ))
+            })
+        })
+        .collect()
 }
 
 /// Run the CLI; returns the process exit code.
@@ -88,14 +129,10 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             let array = parse_vec(
                 flags.get("array").map(String::as_str).unwrap_or("8x8"),
                 'x',
-            );
+            )?;
             for phase in &wl.phases {
-                let mut t = array.clone();
-                while t.len() < phase.ndims {
-                    t.push(1);
-                }
-                t.truncate(phase.ndims);
-                let mapping = ArrayMapping::new(t);
+                let mapping =
+                    ArrayMapping::new(pad_array(&array, phase.ndims));
                 let ana = SymbolicAnalysis::analyze(phase, &mapping);
                 println!(
                     "[{}] symbolic analysis took {:?}",
@@ -105,11 +142,10 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                     println!("{}", ana.report());
                 }
                 if let Some(bounds) = flags.get("bounds") {
-                    let mut b = parse_vec(bounds, ',');
-                    while b.len() < phase.ndims {
-                        b.push(*b.last().unwrap());
-                    }
-                    b.truncate(phase.ndims);
+                    let b = crate::tiling::pad_bounds(
+                        &parse_vec(bounds, ',')?,
+                        phase.ndims,
+                    );
                     let params = ana.params_for(&b);
                     let e = ana.energy_at(&params);
                     let l = ana.latency_at(&params);
@@ -132,35 +168,23 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             let array = parse_vec(
                 flags.get("array").map(String::as_str).unwrap_or("2x2"),
                 'x',
-            );
+            )?;
             let bounds = parse_vec(
                 flags.get("bounds").map(String::as_str).unwrap_or("8,8"),
                 ',',
-            );
+            )?;
             let params_all: Vec<Vec<i64>> = wl
                 .phases
                 .iter()
                 .map(|ph| {
-                    let mut b = bounds.clone();
-                    while b.len() < ph.ndims {
-                        b.push(*b.last().unwrap());
-                    }
-                    b.truncate(ph.ndims);
-                    let mut t = array.clone();
-                    while t.len() < ph.ndims {
-                        t.push(1);
-                    }
-                    t.truncate(ph.ndims);
+                    let b = crate::tiling::pad_bounds(&bounds, ph.ndims);
+                    let t = pad_array(&array, ph.ndims);
                     ArrayMapping::new(t).params_for(&b)
                 })
                 .collect();
             let mut env = workload_inputs(&wl, &params_all);
             for (phase, params) in wl.phases.iter().zip(&params_all) {
-                let mut t = array.clone();
-                while t.len() < phase.ndims {
-                    t.push(1);
-                }
-                t.truncate(phase.ndims);
+                let t = pad_array(&array, phase.ndims);
                 let mapping = ArrayMapping::new(t.clone());
                 let arch = ArchConfig::with_array(t);
                 let tiled = tile_pra(phase, &mapping);
@@ -195,11 +219,11 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             let bounds = parse_vec(
                 flags.get("bounds").map(String::as_str).unwrap_or("8,8"),
                 ',',
-            );
+            )?;
             let array = parse_vec(
                 flags.get("array").map(String::as_str).unwrap_or("2x2"),
                 'x',
-            );
+            )?;
             let wls: Vec<_> = match flags.get("workload") {
                 Some(n) => vec![workloads::by_name(n)
                     .ok_or_else(|| CliError::UnknownWorkload(n.clone()))?],
@@ -237,32 +261,162 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 .ok_or_else(|| CliError::Usage("--workload required".into()))?;
             let wl = workloads::by_name(name)
                 .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?;
-            let bounds = parse_vec(
-                flags.get("bounds").map(String::as_str).unwrap_or("64,64"),
-                ',',
-            );
-            let max_pes: i64 = flags
-                .get("max-pes")
-                .map(|s| s.parse().expect("integer"))
-                .unwrap_or(64);
-            let pts = dse_sweep(&wl, &bounds, max_pes);
+            let max_pes: i64 = match flags.get("max-pes") {
+                Some(s) => s.parse().map_err(|_| {
+                    CliError::Usage(format!(
+                        "--max-pes expects an integer, got {s}"
+                    ))
+                })?,
+                None => 64,
+            };
+            if max_pes < 1 {
+                return Err(CliError::Usage(format!(
+                    "--max-pes must be >= 1, got {max_pes}"
+                )));
+            }
+            let positive = |flag: &str, v: Vec<i64>| {
+                if v.iter().all(|&x| x >= 1) {
+                    Ok(v)
+                } else {
+                    Err(CliError::Usage(format!(
+                        "{flag} expects loop bounds >= 1, got {v:?}"
+                    )))
+                }
+            };
+
+            let mut space = match flags
+                .get("arrays")
+                .map(String::as_str)
+                .unwrap_or("2d")
+            {
+                "1d" => DesignSpace::new().with_arrays_1d(max_pes),
+                "2d" => DesignSpace::new().with_arrays_2d(max_pes),
+                other => {
+                    return Err(CliError::Usage(format!(
+                        "--arrays must be 1d or 2d, got {other}"
+                    )))
+                }
+            };
+            space = match flags.get("bounds-sweep") {
+                Some(s) => {
+                    if flags.contains_key("bounds") {
+                        return Err(CliError::Usage(
+                            "--bounds and --bounds-sweep are mutually \
+                             exclusive"
+                                .into(),
+                        ));
+                    }
+                    space.with_bounds_sweep(
+                        &positive("--bounds-sweep", parse_vec(s, ',')?)?,
+                        2,
+                    )
+                }
+                None => space.with_bounds(positive(
+                    "--bounds",
+                    parse_vec(
+                        flags
+                            .get("bounds")
+                            .map(String::as_str)
+                            .unwrap_or("64,64"),
+                        ',',
+                    )?,
+                )?),
+            };
+            if let Some(s) = flags.get("tile-scales") {
+                let scales = parse_vec(s, ',')?;
+                if scales.is_empty() || scales.iter().any(|&k| k < 1) {
+                    return Err(CliError::Usage(format!(
+                        "--tile-scales expects integers >= 1, got {s}"
+                    )));
+                }
+                space = space.with_tile_scales(scales);
+            }
+            if let Some(s) = flags.get("policies") {
+                let policies: Vec<Policy> = if s == "all" {
+                    Policy::ALL.to_vec()
+                } else {
+                    s.split(',')
+                        .map(|l| {
+                            Policy::ALL
+                                .into_iter()
+                                .find(|p| p.label() == l.trim())
+                                .ok_or_else(|| {
+                                    CliError::Usage(format!(
+                                        "unknown policy {l}; try \
+                                         tcpa,no-fd,no-reuse or `all`"
+                                    ))
+                                })
+                        })
+                        .collect::<Result<_, _>>()?
+                };
+                space = space.with_policies(policies);
+            }
+            if flags.contains_key("prune-symmetric") {
+                space = space.with_symmetry_pruning();
+            }
+            let workers: usize = match flags.get("workers") {
+                Some(s) => s.parse().map_err(|_| {
+                    CliError::Usage(format!(
+                        "--workers expects an integer, got {s}"
+                    ))
+                })?,
+                None => 0,
+            };
+
+            let res = explore(&wl, &space, &ExploreConfig { workers });
             println!(
-                "{:>6} {:>4} {:>16} {:>14} {:>12} {:>16}",
-                "array", "PEs", "energy [pJ]", "DRAM [pJ]", "latency", "EDP"
+                "{}: {} points in {:?} ({} failed; cache {} analyses, \
+                 {:.0}% hit)",
+                res.workload,
+                res.points.len(),
+                res.wall,
+                res.failures.len(),
+                res.cache.entries,
+                res.cache.hit_rate() * 100.0
             );
-            for p in pts.iter().take(16) {
-                println!(
-                    "{:>3}x{:<3} {:>4} {:>16.1} {:>14.1} {:>12} {:>16.3e}",
-                    p.array.0,
-                    p.array.1,
-                    p.pes,
-                    p.energy_pj,
-                    p.dram_pj,
-                    p.latency_cycles,
-                    p.edp
+            for (p, msg) in res.failures.iter().take(8) {
+                eprintln!(
+                    "  failed: {} bounds {:?} ({}, scale {}): {msg}",
+                    p.array_label(),
+                    p.bounds,
+                    p.policy.label(),
+                    p.tile_scale
                 );
             }
-            Ok(0)
+            if res.failures.len() > 8 {
+                eprintln!("  ... and {} more", res.failures.len() - 8);
+            }
+            println!("{}", dse_frontier_markdown(&res));
+            for g in &res.groups {
+                if let Some(k) = g.knee.map(|i| &res.points[i]) {
+                    println!(
+                        "knee [bounds {:?}, {}]: {} ({} PEs, {:.1} pJ, \
+                         {} cycles)",
+                        g.bounds,
+                        g.policy.label(),
+                        k.point.array_label(),
+                        k.pes,
+                        k.energy_pj,
+                        k.latency_cycles
+                    );
+                }
+            }
+            if let Some(out) = flags.get("out") {
+                let dir = Path::new(out);
+                write_dse_report(&res, dir, &format!("dse_{}", res.workload))?;
+                println!(
+                    "full point cloud + frontier → {}/dse_{}_*.csv",
+                    dir.display(),
+                    res.workload
+                );
+            }
+            // Total failure must be loud: empty tables with exit 0 would
+            // read as success to a Makefile or CI step.
+            Ok(if res.points.is_empty() && !res.failures.is_empty() {
+                1
+            } else {
+                0
+            })
         }
         "figures" => {
             let out =
@@ -433,6 +587,57 @@ mod tests {
     fn unknown_workload_errors() {
         let e = run_cli(&s(&["analyze", "--workload", "nope"]));
         assert!(matches!(e, Err(CliError::UnknownWorkload(_))));
+    }
+
+    #[test]
+    fn dse_emits_multi_objective_frontier() {
+        // Acceptance: the dse subcommand runs end to end for the paper's
+        // running example and GEMM, producing a Pareto frontier (the
+        // frontier table is exercised inside run_cli).
+        for wl in ["gesummv", "gemm"] {
+            assert_eq!(
+                run_cli(&s(&[
+                    "dse", "--workload", wl, "--bounds", "16,16",
+                    "--max-pes", "4"
+                ]))
+                .unwrap(),
+                0
+            );
+        }
+    }
+
+    #[test]
+    fn dse_rejects_bad_arrays_flag() {
+        let e = run_cli(&s(&[
+            "dse", "--workload", "gemm", "--arrays", "3d"
+        ]));
+        assert!(matches!(e, Err(CliError::Usage(_))));
+    }
+
+    #[test]
+    fn dse_rejects_bad_flag_values_with_usage_errors() {
+        for bad in [
+            vec!["dse", "--workload", "gemm", "--policies", "bogus"],
+            vec!["dse", "--workload", "gemm", "--tile-scales", "0"],
+            vec!["dse", "--workload", "gemm", "--tile-scales", "1,x"],
+            vec!["dse", "--workload", "gemm", "--workers", "abc"],
+            vec!["dse", "--workload", "gemm", "--max-pes", "abc"],
+            vec!["dse", "--workload", "gemm", "--bounds-sweep", "32,abc"],
+            vec!["dse", "--workload", "gemm", "--bounds", "x,8"],
+            vec![
+                "dse", "--workload", "gemm", "--bounds", "8,8",
+                "--bounds-sweep", "16,32",
+            ],
+            vec!["dse", "--workload", "gemm", "--bounds", "0,8"],
+            vec!["dse", "--workload", "gemm", "--bounds-sweep", "-64"],
+            vec!["dse", "--workload", "gemm", "--max-pes", "0"],
+        ] {
+            let e = run_cli(&s(&bad));
+            assert!(
+                matches!(e, Err(CliError::Usage(_))),
+                "{bad:?} should be a usage error, got {e:?}"
+            );
+        }
     }
 
     #[test]

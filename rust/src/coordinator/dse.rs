@@ -1,13 +1,17 @@
-//! Design-space exploration (§V-B / §VI): because the analysis is
-//! symbolic, sweeping architectural configurations — array shapes, tile
-//! sizes — is a sequence of cheap expression evaluations, enabling the
-//! "rapid comparison of architectural configurations" the paper motivates.
+//! Deprecated shim over the [`crate::dse`] subsystem.
+//!
+//! The original serial double-loop sweep lived here; it re-ran the full
+//! symbolic analysis per design point, could only sweep 2-D shapes, and
+//! ranked by a single scalar (EDP) with a NaN-unsafe `partial_cmp`.
+//! [`dse_sweep`] now delegates to the parallel, cache-backed explorer and
+//! keeps the old signature/ordering so existing callers compile; new code
+//! should use [`crate::dse::DesignSpace`] + [`crate::dse::explore`]
+//! directly and get multi-objective frontiers instead of an EDP sort.
 
-use crate::analysis::WorkloadAnalysis;
-use crate::energy::MemoryClass;
+use crate::dse::{explore, DesignSpace, ExploreConfig};
 use crate::pra::Workload;
 
-/// One evaluated design point.
+/// One evaluated design point (legacy shape: 2-D arrays only).
 #[derive(Debug, Clone)]
 pub struct DsePoint {
     /// 2-D array shape (t0, t1).
@@ -17,63 +21,47 @@ pub struct DsePoint {
     pub dram_pj: f64,
     pub latency_cycles: i64,
     pub edp: f64,
-    /// One-time symbolic analysis cost for this design point.
+    /// One-time symbolic analysis cost for this design point (near zero
+    /// when the explorer's cache already held the shape).
     pub analysis_ms: f64,
 }
 
 /// Sweep 2-D array shapes up to `max_pes` PEs for a workload at fixed loop
-/// bounds; returns points sorted by energy-delay product.
+/// bounds; returns points sorted by energy-delay product (NaN-safe total
+/// order, best first).
+#[deprecated(
+    since = "0.1.0",
+    note = "use `dse::DesignSpace` + `dse::explore` for multi-axis, \
+            multi-objective exploration"
+)]
 pub fn dse_sweep(
     wl: &Workload,
     base_bounds: &[i64],
     max_pes: i64,
 ) -> Vec<DsePoint> {
-    let mut out = Vec::new();
-    for t0 in 1..=max_pes {
-        for t1 in 1..=max_pes {
-            if t0 * t1 > max_pes {
-                continue;
-            }
-            // Skip shapes larger than the problem.
-            let b1 = base_bounds.get(1).copied().unwrap_or(base_bounds[0]);
-            if t0 > base_bounds[0] || t1 > b1 {
-                continue;
-            }
-            let t = vec![t0, t1];
-            let start = std::time::Instant::now();
-            let ana = WorkloadAnalysis::analyze_uniform(wl, &t);
-            let analysis_ms = start.elapsed().as_secs_f64() * 1e3;
-            let params: Vec<Vec<i64>> = ana
-                .phases
-                .iter()
-                .map(|ph| {
-                    let nd = ph.tiled.pra.ndims;
-                    let mut b = base_bounds.to_vec();
-                    while b.len() < nd {
-                        b.push(*base_bounds.last().unwrap());
-                    }
-                    b.truncate(nd);
-                    ph.tiled.mapping.params_for(&b)
-                })
-                .collect();
-            let e = ana.energy_at(&params);
-            let l = ana.latency_at(&params);
-            out.push(DsePoint {
-                array: (t0, t1),
-                pes: t0 * t1,
-                energy_pj: e.total,
-                dram_pj: e.mem_pj.get(&MemoryClass::Dram).copied().unwrap_or(0.0),
-                latency_cycles: l,
-                edp: e.total * l as f64,
-                analysis_ms,
-            });
-        }
-    }
-    out.sort_by(|a, b| a.edp.partial_cmp(&b.edp).unwrap());
+    let space = DesignSpace::new()
+        .with_arrays_2d(max_pes)
+        .with_bounds(base_bounds.to_vec());
+    let res = explore(wl, &space, &ExploreConfig::default());
+    let mut out: Vec<DsePoint> = res
+        .points
+        .iter()
+        .map(|p| DsePoint {
+            array: (p.point.array[0], p.point.array.get(1).copied().unwrap_or(1)),
+            pes: p.pes,
+            energy_pj: p.energy_pj,
+            dram_pj: p.dram_pj,
+            latency_cycles: p.latency_cycles,
+            edp: p.edp,
+            analysis_ms: p.analysis_ms,
+        })
+        .collect();
+    out.sort_by(|a, b| a.edp.total_cmp(&b.edp));
     out
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 
@@ -110,6 +98,30 @@ mod tests {
                 p.array,
                 p.energy_pj
             );
+        }
+    }
+
+    #[test]
+    fn shim_matches_subsystem_results() {
+        // The legacy view and the subsystem must agree point for point.
+        let wl = crate::workloads::by_name("gesummv").unwrap();
+        let pts = dse_sweep(&wl, &[8, 8], 4);
+        let res = explore(
+            &wl,
+            &DesignSpace::new().with_arrays_2d(4).with_bounds(vec![8, 8]),
+            &ExploreConfig::default(),
+        );
+        assert_eq!(pts.len(), res.points.len());
+        for p in &pts {
+            let twin = res
+                .points
+                .iter()
+                .find(|q| {
+                    q.point.array == vec![p.array.0, p.array.1]
+                })
+                .unwrap();
+            assert_eq!(p.energy_pj.to_bits(), twin.energy_pj.to_bits());
+            assert_eq!(p.latency_cycles, twin.latency_cycles);
         }
     }
 }

@@ -8,6 +8,7 @@ pub mod figures;
 pub mod validate;
 
 pub use cli::{run_cli, CliError};
+#[allow(deprecated)]
 pub use dse::{dse_sweep, DsePoint};
 pub use figures::{fig4_rows, fig5_rows, Fig4Row, Fig5Row};
 pub use validate::{validate_workload, ValidationRow};

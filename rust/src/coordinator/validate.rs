@@ -38,26 +38,14 @@ pub fn validate_workload(
         .phases
         .iter()
         .map(|ph| {
-            let mut b = base_bounds.to_vec();
-            while b.len() < ph.ndims {
-                b.push(*base_bounds.last().unwrap());
-            }
-            b.truncate(ph.ndims);
-            let mut t = array.to_vec();
-            while t.len() < ph.ndims {
-                t.push(1);
-            }
-            t.truncate(ph.ndims);
+            let b = crate::tiling::pad_bounds(base_bounds, ph.ndims);
+            let t = crate::tiling::pad_array(array, ph.ndims);
             ArrayMapping::new(t).params_for(&b)
         })
         .collect();
     let mut env = workload_inputs(wl, &params_all);
     for (phase, params) in wl.phases.iter().zip(&params_all) {
-        let mut t = array.to_vec();
-        while t.len() < phase.ndims {
-            t.push(1);
-        }
-        t.truncate(phase.ndims);
+        let t = crate::tiling::pad_array(array, phase.ndims);
         let mapping = ArrayMapping::new(t.clone());
         let ana = SymbolicAnalysis::analyze(phase, &mapping);
         let t0 = std::time::Instant::now();

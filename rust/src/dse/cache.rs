@@ -1,0 +1,305 @@
+//! Memoization of the expensive one-time symbolic pass.
+//!
+//! [`crate::analysis::WorkloadAnalysis::analyze_uniform`] runs tiling,
+//! scheduling and symbolic counting — milliseconds per (workload, array)
+//! pair. Every *evaluation* against the resulting expressions is
+//! microseconds. The cache makes the asymmetry structural: one analysis
+//! per (workload, array) key for the lifetime of the cache, shared
+//! lock-free across reader threads via `Arc`.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Once};
+
+use crate::analysis::WorkloadAnalysis;
+use crate::pra::Workload;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    workload: String,
+    /// Structural fingerprint of the workload definition, so two
+    /// distinct `Workload` values sharing a display name can never
+    /// serve each other's memoized analysis.
+    fingerprint: u64,
+    array: Vec<i64>,
+}
+
+/// Structural fingerprint of a workload definition. The IR has no Hash
+/// derives; its Debug rendering is a faithful structural description.
+/// Computing it walks the whole IR, so hot paths (one lookup per design
+/// point) should compute it once per workload and use
+/// [`AnalysisCache::try_get_or_analyze_keyed`].
+pub fn workload_fingerprint(wl: &Workload) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    format!("{:?}", wl.phases).hash(&mut h);
+    h.finish()
+}
+
+/// One memoized outcome: analyses that *fail* (e.g. no feasible LSGP
+/// schedule for the shape) are cached too, so a sweep never re-runs a
+/// known-bad tiling/scheduling pass per bounds/tile/policy point.
+/// `Pending` marks an analysis some thread is currently running; other
+/// threads block on the condvar instead of duplicating the work.
+#[derive(Debug)]
+enum Slot {
+    Pending,
+    Ready(Arc<WorkloadAnalysis>),
+    Failed(String),
+}
+
+/// Hit/miss counters of an [`AnalysisCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that ran a fresh symbolic analysis.
+    pub misses: u64,
+    /// Distinct (workload, array) keys currently stored.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Hit fraction in `[0, 1]` (0 when empty).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-safe memo table `(workload, array) → Arc<WorkloadAnalysis>`.
+#[derive(Debug, Default)]
+pub struct AnalysisCache {
+    map: Mutex<HashMap<CacheKey, Slot>>,
+    /// Signalled whenever a `Pending` slot resolves.
+    resolved: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "symbolic analysis panicked".to_string()
+    }
+}
+
+thread_local! {
+    /// True while this thread runs an analysis whose panic is memoized —
+    /// the default "thread panicked at ..." stderr trace would be noise.
+    static SUPPRESS_PANIC_TRACE: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Install (once, process-wide) a panic hook that stays silent for
+/// panics this module catches and memoizes, and delegates to the
+/// previously installed hook for every other panic.
+fn install_quiet_hook() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !SUPPRESS_PANIC_TRACE.with(Cell::get) {
+                prev(info);
+            }
+        }));
+    });
+}
+
+impl AnalysisCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The analysis of `wl` on `array`, memoized — including failures,
+    /// returned as `Err(message)`. Returns the outcome and whether it
+    /// was a cache hit. The symbolic pass runs *outside* the lock, so a
+    /// slow analysis never stalls workers evaluating other shapes; a
+    /// cold key is claimed with a `Pending` slot first, so concurrent
+    /// requests for the same shape wait on the condvar instead of
+    /// duplicating the milliseconds-scale pass (same-shape points are
+    /// adjacent in the explorer's queue, making that race the common
+    /// case).
+    pub fn try_get_or_analyze(
+        &self,
+        wl: &Workload,
+        array: &[i64],
+    ) -> (Result<Arc<WorkloadAnalysis>, String>, bool) {
+        self.try_get_or_analyze_keyed(wl, workload_fingerprint(wl), array)
+    }
+
+    /// As [`Self::try_get_or_analyze`] with the workload fingerprint
+    /// precomputed by the caller ([`workload_fingerprint`]) — the hot
+    /// path for sweeps, which would otherwise re-serialize the IR on
+    /// every design point.
+    pub fn try_get_or_analyze_keyed(
+        &self,
+        wl: &Workload,
+        fingerprint: u64,
+        array: &[i64],
+    ) -> (Result<Arc<WorkloadAnalysis>, String>, bool) {
+        let key = CacheKey {
+            workload: wl.name.clone(),
+            fingerprint,
+            array: array.to_vec(),
+        };
+        {
+            let mut map = self.map.lock().unwrap();
+            loop {
+                match map.get(&key) {
+                    Some(Slot::Ready(a)) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return (Ok(Arc::clone(a)), true);
+                    }
+                    Some(Slot::Failed(msg)) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return (Err(msg.clone()), true);
+                    }
+                    Some(Slot::Pending) => {
+                        map = self.resolved.wait(map).unwrap();
+                    }
+                    None => break,
+                }
+            }
+            map.insert(key.clone(), Slot::Pending);
+        }
+        // This thread owns the analysis for `key`; the catch_unwind
+        // guarantees the Pending slot is always resolved.
+        install_quiet_hook();
+        SUPPRESS_PANIC_TRACE.with(|s| s.set(true));
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            WorkloadAnalysis::analyze_uniform(wl, array)
+        }));
+        SUPPRESS_PANIC_TRACE.with(|s| s.set(false));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let (slot, out) = match outcome {
+            Ok(ana) => {
+                let arc = Arc::new(ana);
+                (Slot::Ready(Arc::clone(&arc)), Ok(arc))
+            }
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                (Slot::Failed(msg.clone()), Err(msg))
+            }
+        };
+        self.map.lock().unwrap().insert(key, slot);
+        self.resolved.notify_all();
+        (out, false)
+    }
+
+    /// As [`Self::try_get_or_analyze`], panicking on analysis failure
+    /// (the pre-caching `analyze_uniform` behavior, for callers that
+    /// treat an infeasible shape as a bug).
+    pub fn get_or_analyze(
+        &self,
+        wl: &Workload,
+        array: &[i64],
+    ) -> (Arc<WorkloadAnalysis>, bool) {
+        match self.try_get_or_analyze(wl, array) {
+            (Ok(a), hit) => (a, hit),
+            (Err(msg), _) => panic!(
+                "symbolic analysis of {} on {array:?} failed: {msg}",
+                wl.name
+            ),
+        }
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().unwrap().len(),
+        }
+    }
+
+    /// Drop all cached analyses (counters keep accumulating).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn second_lookup_hits() {
+        let cache = AnalysisCache::new();
+        let wl = workloads::by_name("gesummv").unwrap();
+        let (_, hit0) = cache.get_or_analyze(&wl, &[2, 2]);
+        let (_, hit1) = cache.get_or_analyze(&wl, &[2, 2]);
+        assert!(!hit0);
+        assert!(hit1);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failed_analyses_are_cached_not_rerun() {
+        // The "twist" PRA has no feasible schedule: its analysis panics
+        // in `find_schedule` and must be memoized as a failure.
+        let cache = AnalysisCache::new();
+        let wl = workloads::twist_unschedulable();
+        let (r0, h0) = cache.try_get_or_analyze(&wl, &[2, 2]);
+        let (r1, h1) = cache.try_get_or_analyze(&wl, &[2, 2]);
+        assert!(r0.is_err() && r1.is_err());
+        assert!(!h0);
+        assert!(h1, "the failed analysis must be served from the cache");
+        let s = cache.stats();
+        assert_eq!(
+            s.misses, 1,
+            "the failing pass must run once, not per lookup"
+        );
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn same_name_different_workload_is_not_conflated() {
+        // A Workload that merely *claims* another's name must not be
+        // served its memoized analysis.
+        let cache = AnalysisCache::new();
+        let real = workloads::by_name("gesummv").unwrap();
+        let mut imposter = workloads::by_name("atax").unwrap();
+        imposter.name = "gesummv".into();
+        let (_, h0) = cache.try_get_or_analyze(&real, &[2, 2]);
+        let (_, h1) = cache.try_get_or_analyze(&imposter, &[2, 2]);
+        assert!(!h0);
+        assert!(!h1, "structurally different workload must miss");
+        assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn distinct_arrays_are_distinct_entries() {
+        let cache = AnalysisCache::new();
+        let wl = workloads::by_name("gesummv").unwrap();
+        cache.get_or_analyze(&wl, &[2, 2]);
+        cache.get_or_analyze(&wl, &[2, 3]);
+        assert_eq!(cache.stats().entries, 2);
+        cache.clear();
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn cached_and_fresh_agree_bit_for_bit() {
+        let cache = AnalysisCache::new();
+        let wl = workloads::by_name("gesummv").unwrap();
+        let (cached, _) = cache.get_or_analyze(&wl, &[2, 2]);
+        let fresh = WorkloadAnalysis::analyze_uniform(&wl, &[2, 2]);
+        let params = vec![vec![8i64, 8, 4, 4]];
+        assert_eq!(cached.energy_at(&params), fresh.energy_at(&params));
+        assert_eq!(cached.counts_at(&params), fresh.counts_at(&params));
+        assert_eq!(cached.latency_at(&params), fresh.latency_at(&params));
+    }
+}

@@ -1,0 +1,513 @@
+//! The parallel explorer: evaluate every [`DesignPoint`] of a
+//! [`DesignSpace`] on a `std::thread` worker pool.
+//!
+//! Work distribution is a channel-backed queue (an `mpsc` receiver behind
+//! a mutex that workers pop from), results flow back over a second
+//! channel tagged with the point's enumeration index, and the final
+//! vector is stitched together in that index order — so the output is
+//! byte-identical whether the sweep ran on 1 worker or 32.
+//!
+//! Per point, the expensive symbolic pass is fetched from (or inserted
+//! into) the shared [`AnalysisCache`]; evaluating energy / latency /
+//! counts at the point's bounds, tile scale and policy is then just
+//! expression evaluation — microseconds, which is what makes wide
+//! multi-axis sweeps tractable at all.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::analysis::WorkloadAnalysis;
+use crate::energy::{MemoryClass, Policy};
+use crate::pra::Workload;
+use crate::tiling::pad_bounds;
+
+use super::cache::{
+    panic_message, workload_fingerprint, AnalysisCache, CacheStats,
+};
+use super::pareto::{knee_point, pareto_frontier, Objectives};
+use super::space::{DesignPoint, DesignSpace};
+
+/// Explorer knobs.
+#[derive(Debug, Clone, Default)]
+pub struct ExploreConfig {
+    /// Worker threads; `0` = one per available CPU.
+    pub workers: usize,
+}
+
+impl ExploreConfig {
+    /// A serial (single-worker) configuration.
+    pub fn serial() -> Self {
+        ExploreConfig { workers: 1 }
+    }
+
+    fn effective_workers(&self, jobs: usize) -> usize {
+        let auto = || {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        };
+        let w = if self.workers == 0 { auto() } else { self.workers };
+        w.clamp(1, jobs.max(1))
+    }
+}
+
+/// One evaluated design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvaluatedPoint {
+    /// The configuration that was evaluated.
+    pub point: DesignPoint,
+    /// PEs used.
+    pub pes: i64,
+    /// Total energy `E_tot` in pJ.
+    pub energy_pj: f64,
+    /// DRAM share of the energy, in pJ.
+    pub dram_pj: f64,
+    /// Global latency in cycles.
+    pub latency_cycles: i64,
+    /// Energy-delay product (derived scalar, pJ·cycles).
+    pub edp: f64,
+    /// Wall time spent obtaining the symbolic analysis for this point —
+    /// near zero on a cache hit.
+    pub analysis_ms: f64,
+    /// Whether the symbolic analysis came from the cache.
+    pub cache_hit: bool,
+}
+
+impl EvaluatedPoint {
+    /// The minimized objective vector (energy, latency, PEs, DRAM).
+    pub fn objectives(&self) -> Objectives {
+        Objectives {
+            energy_pj: self.energy_pj,
+            latency_cycles: self.latency_cycles as f64,
+            pes: self.pes as f64,
+            dram_pj: self.dram_pj,
+        }
+    }
+}
+
+/// The Pareto frontier of one *scenario* — one (bounds, policy) pair.
+/// Dominance is only meaningful between points solving the same problem
+/// under the same energy interpretation: pooling scenarios would let the
+/// smallest bounds (cheaper in every objective) dominate every larger
+/// size, and the TCPA policy dominate every ablation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierGroup {
+    /// Loop bounds of this scenario.
+    pub bounds: Vec<i64>,
+    /// Energy policy of this scenario.
+    pub policy: Policy,
+    /// Indices into [`ExploreResult::points`] of the non-dominated
+    /// points, in enumeration order.
+    pub frontier: Vec<usize>,
+    /// Index into [`ExploreResult::points`] of this frontier's knee.
+    pub knee: Option<usize>,
+}
+
+/// Outcome of one exploration.
+#[derive(Debug, Clone)]
+pub struct ExploreResult {
+    /// Workload name.
+    pub workload: String,
+    /// Every surviving point, in deterministic space-enumeration order.
+    pub points: Vec<EvaluatedPoint>,
+    /// One Pareto frontier per (bounds, policy) scenario, in first-seen
+    /// order.
+    pub groups: Vec<FrontierGroup>,
+    /// Union of all per-scenario frontiers (sorted indices into
+    /// [`Self::points`]) — for a single-scenario space this *is* the
+    /// frontier.
+    pub frontier: Vec<usize>,
+    /// Knee of the frontier when the space has exactly one scenario;
+    /// `None` otherwise (each [`FrontierGroup`] carries its own knee).
+    pub knee: Option<usize>,
+    /// Points dropped because their analysis or evaluation failed
+    /// (infeasible schedule etc.), with the failure message — reported,
+    /// never silently absorbed into `points`. In enumeration order.
+    pub failures: Vec<(DesignPoint, String)>,
+    /// Cache counters at the end of the run.
+    pub cache: CacheStats,
+    /// Wall-clock time of the whole exploration.
+    pub wall: Duration,
+}
+
+impl ExploreResult {
+    /// The frontier, resolved to points (enumeration order).
+    pub fn frontier_points(&self) -> Vec<&EvaluatedPoint> {
+        self.frontier.iter().map(|&i| &self.points[i]).collect()
+    }
+
+    /// The knee point, resolved.
+    pub fn knee_point(&self) -> Option<&EvaluatedPoint> {
+        self.knee.map(|i| &self.points[i])
+    }
+
+    /// Points sorted by EDP (NaN-safe total order), best first — the old
+    /// single-scalar ranking, kept as a convenience view.
+    pub fn by_edp(&self) -> Vec<&EvaluatedPoint> {
+        let mut v: Vec<&EvaluatedPoint> = self.points.iter().collect();
+        v.sort_by(|a, b| a.edp.total_cmp(&b.edp));
+        v
+    }
+}
+
+/// Per-phase parameter vectors `(N…, p…)` for `point` against `ana`.
+fn phase_params(ana: &WorkloadAnalysis, point: &DesignPoint) -> Vec<Vec<i64>> {
+    ana.phases
+        .iter()
+        .map(|ph| {
+            let b = pad_bounds(&point.bounds, ph.tiled.pra.ndims);
+            if point.tile_scale == 1 {
+                ph.params_for(&b)
+            } else {
+                // Oversized tiles: p_ℓ = min(N_ℓ, k·⌈N_ℓ/t_ℓ⌉) stays
+                // inside the analysis context 1 ≤ p_ℓ ≤ N_ℓ while
+                // covering the iteration space. `tile_sizes` is the
+                // exact-cover authority `params_for` also uses.
+                let exact = ph.tiled.mapping.tile_sizes(&b);
+                let mut v = b.clone();
+                for (l, &n) in b.iter().enumerate() {
+                    v.push(
+                        (point.tile_scale * exact[l]).min(n).max(exact[l]),
+                    );
+                }
+                v
+            }
+        })
+        .collect()
+}
+
+/// Evaluate one design point against the (cached) symbolic analysis.
+/// `Err` carries the analysis failure message (memoized by the cache, so
+/// a bad shape fails once and cheaply thereafter).
+fn evaluate(
+    wl: &Workload,
+    fingerprint: u64,
+    point: &DesignPoint,
+    cache: &AnalysisCache,
+) -> Result<EvaluatedPoint, String> {
+    let t0 = Instant::now();
+    let (ana, cache_hit) =
+        cache.try_get_or_analyze_keyed(wl, fingerprint, &point.array);
+    let ana = ana?;
+    let analysis_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let params = phase_params(&ana, point);
+    let energy = match point.policy {
+        // The paper's model: the analysis's own fast path (bit-identical
+        // to the pre-subsystem serial sweep).
+        Policy::Tcpa => ana.energy_at(&params),
+        // Architecture ablations reuse the same symbolic volumes.
+        policy => {
+            let mut e = crate::analysis::EnergyBreakdown::default();
+            for (ph, p) in ana.phases.iter().zip(&params) {
+                e.merge(&ph.energy_at_with(p, policy, &ph.table));
+            }
+            e
+        }
+    };
+    let latency_cycles = ana.latency_at(&params);
+    Ok(EvaluatedPoint {
+        pes: point.pes(),
+        energy_pj: energy.total,
+        dram_pj: energy
+            .mem_pj
+            .get(&MemoryClass::Dram)
+            .copied()
+            .unwrap_or(0.0),
+        latency_cycles,
+        edp: energy.total * latency_cycles as f64,
+        analysis_ms,
+        cache_hit,
+        point: point.clone(),
+    })
+}
+
+/// Explore `space` for `wl` with a private, single-use cache.
+pub fn explore(
+    wl: &Workload,
+    space: &DesignSpace,
+    cfg: &ExploreConfig,
+) -> ExploreResult {
+    explore_with_cache(wl, space, cfg, &AnalysisCache::new())
+}
+
+/// Explore `space` for `wl`, sharing `cache` with (and warming it for)
+/// other sweeps — the bounds-sweep fast path.
+pub fn explore_with_cache(
+    wl: &Workload,
+    space: &DesignSpace,
+    cfg: &ExploreConfig,
+    cache: &AnalysisCache,
+) -> ExploreResult {
+    let t0 = Instant::now();
+    let points = space.points();
+    let n = points.len();
+    let workers = cfg.effective_workers(n);
+    // One IR walk for the whole sweep, not one per design point.
+    let fingerprint = workload_fingerprint(wl);
+
+    // Job queue: a channel pre-filled with every (index, point), its
+    // receiver shared behind a mutex so idle workers steal the next job.
+    let (jtx, jrx) = mpsc::channel::<(usize, DesignPoint)>();
+    for job in points.into_iter().enumerate() {
+        jtx.send(job).expect("queue send");
+    }
+    drop(jtx);
+    let jrx = Mutex::new(jrx);
+
+    type PointResult = Result<EvaluatedPoint, (DesignPoint, String)>;
+    let (rtx, rrx) = mpsc::channel::<(usize, PointResult)>();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let rtx = rtx.clone();
+            let jrx = &jrx;
+            s.spawn(move || loop {
+                // Pop under the lock, evaluate outside it.
+                let job = { jrx.lock().unwrap().recv() };
+                let Ok((idx, point)) = job else { break };
+                // Analysis failures surface as Err (memoized, cheap);
+                // catch_unwind additionally guards the evaluation
+                // arithmetic itself.
+                let eval = match catch_unwind(AssertUnwindSafe(|| {
+                    evaluate(wl, fingerprint, &point, cache)
+                })) {
+                    Ok(Ok(e)) => Ok(e),
+                    Ok(Err(msg)) => Err((point, msg)),
+                    Err(payload) => {
+                        Err((point, panic_message(payload.as_ref())))
+                    }
+                };
+                // The queue sender is gone before workers start, so the
+                // only way `send` fails is the collector having hung up —
+                // at which point the result is moot.
+                let _ = rtx.send((idx, eval));
+            });
+        }
+        drop(rtx);
+    });
+
+    // Deterministic ordering: stitch results back by enumeration index.
+    let mut slots: Vec<Option<EvaluatedPoint>> = vec![None; n];
+    let mut failed: Vec<(usize, DesignPoint, String)> = Vec::new();
+    while let Ok((idx, eval)) = rrx.recv() {
+        match eval {
+            Ok(e) => slots[idx] = Some(e),
+            Err((point, msg)) => failed.push((idx, point, msg)),
+        }
+    }
+    failed.sort_by_key(|(idx, _, _)| *idx);
+    let failures: Vec<(DesignPoint, String)> =
+        failed.into_iter().map(|(_, p, m)| (p, m)).collect();
+    let evaluated: Vec<EvaluatedPoint> =
+        slots.into_iter().flatten().collect();
+
+    // Group by scenario, preserving first-seen order, then compute one
+    // frontier + knee per group.
+    let mut groups: Vec<FrontierGroup> = Vec::new();
+    let mut members: Vec<Vec<usize>> = Vec::new();
+    for (i, p) in evaluated.iter().enumerate() {
+        let pos = groups.iter().position(|g| {
+            g.bounds == p.point.bounds && g.policy == p.point.policy
+        });
+        match pos {
+            Some(gi) => members[gi].push(i),
+            None => {
+                groups.push(FrontierGroup {
+                    bounds: p.point.bounds.clone(),
+                    policy: p.point.policy,
+                    frontier: Vec::new(),
+                    knee: None,
+                });
+                members.push(vec![i]);
+            }
+        }
+    }
+    for (g, m) in groups.iter_mut().zip(&members) {
+        let objs: Vec<_> = m
+            .iter()
+            .map(|&i| evaluated[i].objectives().to_array())
+            .collect();
+        let local = pareto_frontier(&objs);
+        g.frontier = local.iter().map(|&k| m[k]).collect();
+        let local_objs: Vec<_> = local.iter().map(|&k| objs[k]).collect();
+        g.knee = knee_point(&local_objs).map(|k| g.frontier[k]);
+    }
+    let mut frontier: Vec<usize> =
+        groups.iter().flat_map(|g| g.frontier.iter().copied()).collect();
+    frontier.sort_unstable();
+    let knee = match groups.as_slice() {
+        [only] => only.knee,
+        _ => None,
+    };
+
+    ExploreResult {
+        workload: wl.name.clone(),
+        points: evaluated,
+        groups,
+        frontier,
+        knee,
+        failures,
+        cache: cache.stats(),
+        wall: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn small_space() -> DesignSpace {
+        DesignSpace::new().with_arrays_2d(4).with_bounds(vec![8, 8])
+    }
+
+    #[test]
+    fn parallel_equals_serial_bit_for_bit() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = small_space();
+        let serial = explore(&wl, &space, &ExploreConfig::serial());
+        let parallel =
+            explore(&wl, &space, &ExploreConfig { workers: 4 });
+        assert_eq!(serial.points.len(), parallel.points.len());
+        for (a, b) in serial.points.iter().zip(&parallel.points) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.latency_cycles, b.latency_cycles);
+        }
+        assert_eq!(serial.frontier, parallel.frontier);
+        assert_eq!(serial.knee, parallel.knee);
+    }
+
+    #[test]
+    fn frontier_beats_edp_only_view() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let res = explore(&wl, &small_space(), &ExploreConfig::default());
+        assert!(res.failures.is_empty(), "failures: {:?}", res.failures);
+        assert!(!res.frontier.is_empty());
+        // The 1×1 array uses the fewest PEs: nothing can dominate it, so
+        // a multi-objective frontier must retain it even though the EDP
+        // sort buries it.
+        let serial_idx = res
+            .points
+            .iter()
+            .position(|p| p.point.array == vec![1, 1])
+            .unwrap();
+        assert!(res.frontier.contains(&serial_idx));
+        // Knee lies on the frontier.
+        let knee = res.knee.unwrap();
+        assert!(res.frontier.contains(&knee));
+    }
+
+    #[test]
+    fn bounds_sweep_reuses_analyses() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let cache = AnalysisCache::new();
+        let warm = DesignSpace::new()
+            .with_arrays_2d(4)
+            .with_bounds(vec![8, 8]);
+        explore_with_cache(&wl, &warm, &ExploreConfig::default(), &cache);
+        let shapes = cache.stats().entries;
+        let sweep = DesignSpace::new()
+            .with_arrays_2d(4)
+            .with_bounds_sweep(&[16, 32, 64], 2);
+        let res =
+            explore_with_cache(&wl, &sweep, &ExploreConfig::default(), &cache);
+        // No new analyses ran: every shape was already cached.
+        assert_eq!(res.cache.entries, shapes);
+        assert!(res.points.iter().all(|p| p.cache_hit));
+    }
+
+    #[test]
+    fn scenario_axes_get_separate_frontiers() {
+        // Pooled dominance would let the N=8 points (cheaper in every
+        // objective at equal shape) erase every N=16 point; per-scenario
+        // grouping must keep a frontier for each bounds vector.
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = DesignSpace::new()
+            .with_arrays_2d(4)
+            .with_bounds_sweep(&[8, 16], 2);
+        let res = explore(&wl, &space, &ExploreConfig::default());
+        assert_eq!(res.groups.len(), 2);
+        for g in &res.groups {
+            assert!(!g.frontier.is_empty(), "{:?} has an empty frontier", g.bounds);
+            let k = g.knee.unwrap();
+            assert!(g.frontier.contains(&k));
+            // Every frontier member belongs to this scenario.
+            for &i in &g.frontier {
+                assert_eq!(res.points[i].point.bounds, g.bounds);
+            }
+        }
+        assert!(res
+            .frontier
+            .iter()
+            .any(|&i| res.points[i].point.bounds == vec![16, 16]));
+        // Multi-scenario result has no single knee.
+        assert_eq!(res.knee, None);
+    }
+
+    #[test]
+    fn policy_axis_orders_architectures() {
+        // Same volumes, pricier interpretations: TCPA ≤ no-FD ≤ no-reuse
+        // at every design point.
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = DesignSpace::new()
+            .with_arrays(vec![vec![2, 2]])
+            .with_bounds(vec![16, 16])
+            .with_policies(Policy::ALL.to_vec());
+        let res = explore(&wl, &space, &ExploreConfig::default());
+        assert_eq!(res.points.len(), 3);
+        // One scenario per policy: the ablations are compared, not
+        // dominated away by the cheaper TCPA interpretation.
+        assert_eq!(res.groups.len(), 3);
+        assert_eq!(res.frontier.len(), 3);
+        let by_policy = |pol: Policy| {
+            res.points
+                .iter()
+                .find(|p| p.point.policy == pol)
+                .unwrap()
+                .energy_pj
+        };
+        let tcpa = by_policy(Policy::Tcpa);
+        let nofd = by_policy(Policy::NoFeedback);
+        let noreuse = by_policy(Policy::NoLocalReuse);
+        assert!(tcpa < nofd, "{tcpa} vs {nofd}");
+        assert!(nofd <= noreuse, "{nofd} vs {noreuse}");
+    }
+
+    #[test]
+    fn failures_carry_point_and_message() {
+        // No causal lexicographic order exists: every point must land in
+        // `failures` with the scheduler's message, not vanish.
+        let wl = workloads::twist_unschedulable();
+        let space = DesignSpace::new()
+            .with_arrays(vec![vec![2, 2]])
+            .with_bounds(vec![8, 8]);
+        let res = explore(&wl, &space, &ExploreConfig::default());
+        assert!(res.points.is_empty());
+        assert_eq!(res.failures.len(), 1);
+        let (p, msg) = &res.failures[0];
+        assert_eq!(p.array, vec![2, 2]);
+        assert!(
+            msg.contains("schedule"),
+            "message should name the scheduling failure: {msg}"
+        );
+        assert!(res.frontier.is_empty() && res.knee.is_none());
+    }
+
+    #[test]
+    fn tile_scale_stays_in_context_and_changes_schedule() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = DesignSpace::new()
+            .with_arrays(vec![vec![2, 2]])
+            .with_bounds(vec![16, 16])
+            .with_tile_scales(vec![1, 2]);
+        let res = explore(&wl, &space, &ExploreConfig::default());
+        assert_eq!(res.points.len(), 2);
+        assert!(res.failures.is_empty(), "failures: {:?}", res.failures);
+        for p in &res.points {
+            assert!(p.energy_pj > 0.0);
+            assert!(p.latency_cycles > 0);
+        }
+    }
+}

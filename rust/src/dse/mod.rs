@@ -1,0 +1,51 @@
+//! Design-space exploration engine (§V-B / §VI).
+//!
+//! The paper's headline use of the symbolic analysis is that comparing
+//! architectural configurations is *cheap*: the expensive tiling /
+//! scheduling / counting pass runs once per (workload, array shape), and
+//! every further query — different loop bounds, tile sizes, or energy
+//! policies — is a handful of expression evaluations. This module turns
+//! that observation into a real exploration subsystem:
+//!
+//! * [`space`] — the **design-space model**: multi-axis spaces over 1-D /
+//!   2-D array shapes, tile-size scales, [`crate::energy::Policy`]
+//!   variants and loop-bound grids, with PE-budget, fits-the-problem and
+//!   opt-in transposition-symmetry pruning.
+//! * [`cache`] — the **analysis cache**: memoizes
+//!   [`crate::analysis::WorkloadAnalysis::analyze_uniform`] per
+//!   (workload, array) key, so bounds/tile/policy sweeps over an
+//!   already-analyzed shape never re-run the symbolic pass — the O(1)
+//!   per-query scalability of Fig. 4, made explicit.
+//! * [`explore`] — the **parallel explorer**: fans design points out over
+//!   a `std::thread` worker pool fed by a channel work queue, with
+//!   results stitched back in deterministic enumeration order.
+//! * [`pareto`] — **multi-objective selection**: (energy, latency,
+//!   PE count, DRAM traffic) non-dominated frontiers and knee-point
+//!   picking, replacing the old single-scalar EDP sort. All float
+//!   orderings use `f64::total_cmp` — a NaN cannot panic the sweep.
+//!
+//! ```no_run
+//! use tcpa_energy::dse::{explore, DesignSpace, ExploreConfig};
+//! let wl = tcpa_energy::workloads::by_name("gemm").unwrap();
+//! let space = DesignSpace::new()
+//!     .with_arrays_2d(64)
+//!     .with_bounds(vec![64, 64, 64]);
+//! let res = explore(&wl, &space, &ExploreConfig::default());
+//! for p in res.frontier_points() {
+//!     println!("{:?} {:.1} pJ {} cyc", p.point.array, p.energy_pj,
+//!              p.latency_cycles);
+//! }
+//! ```
+
+pub mod cache;
+pub mod explore;
+pub mod pareto;
+pub mod space;
+
+pub use cache::{workload_fingerprint, AnalysisCache, CacheStats};
+pub use explore::{
+    explore, explore_with_cache, EvaluatedPoint, ExploreConfig,
+    ExploreResult, FrontierGroup,
+};
+pub use pareto::{dominates, knee_point, pareto_frontier, Objectives};
+pub use space::{DesignPoint, DesignSpace};

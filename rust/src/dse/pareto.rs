@@ -1,0 +1,157 @@
+//! Multi-objective selection: non-dominated (Pareto) frontiers over
+//! (energy, latency, PE count, DRAM traffic) and knee-point picking.
+//!
+//! All comparisons go through `f64::total_cmp`, and NaN objectives are
+//! mapped to `+∞` before comparison — a degenerate design point can never
+//! panic the sweep (the `partial_cmp(..).unwrap()` hazard of the old
+//! EDP sort) nor sneak onto the frontier.
+
+/// Number of objectives tracked per design point.
+pub const NUM_OBJECTIVES: usize = 4;
+
+/// The minimized objective vector of one design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    /// Total energy `E_tot` in pJ.
+    pub energy_pj: f64,
+    /// Global latency in cycles.
+    pub latency_cycles: f64,
+    /// PEs used (silicon-area proxy).
+    pub pes: f64,
+    /// DRAM energy in pJ (off-chip-bandwidth proxy).
+    pub dram_pj: f64,
+}
+
+impl Objectives {
+    /// As a fixed-size vector, NaN replaced by `+∞` (minimization: a NaN
+    /// objective makes the point worst-possible in that dimension).
+    pub fn to_array(self) -> [f64; NUM_OBJECTIVES] {
+        let s = |x: f64| if x.is_nan() { f64::INFINITY } else { x };
+        [
+            s(self.energy_pj),
+            s(self.latency_cycles),
+            s(self.pes),
+            s(self.dram_pj),
+        ]
+    }
+}
+
+/// Does `a` dominate `b` — no worse in every objective, strictly better
+/// in at least one? (Minimization.)
+pub fn dominates(
+    a: &[f64; NUM_OBJECTIVES],
+    b: &[f64; NUM_OBJECTIVES],
+) -> bool {
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b) {
+        match x.total_cmp(y) {
+            std::cmp::Ordering::Greater => return false,
+            std::cmp::Ordering::Less => strictly_better = true,
+            std::cmp::Ordering::Equal => {}
+        }
+    }
+    strictly_better
+}
+
+/// Indices of the non-dominated points of `objs`, in input order.
+/// Duplicate objective vectors all stay on the frontier (they dominate
+/// nothing among themselves).
+pub fn pareto_frontier(objs: &[[f64; NUM_OBJECTIVES]]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&i| !objs.iter().any(|other| dominates(other, &objs[i])))
+        .collect()
+}
+
+/// Knee point of a frontier: each objective is min–max normalized over
+/// the given vectors, and the point closest (Euclidean) to the ideal
+/// corner wins. Returns an index into `objs`, `None` when empty. Ties
+/// break toward the lower index (deterministic).
+pub fn knee_point(objs: &[[f64; NUM_OBJECTIVES]]) -> Option<usize> {
+    if objs.is_empty() {
+        return None;
+    }
+    let mut lo = [f64::INFINITY; NUM_OBJECTIVES];
+    let mut hi = [f64::NEG_INFINITY; NUM_OBJECTIVES];
+    for o in objs {
+        for d in 0..NUM_OBJECTIVES {
+            lo[d] = lo[d].min(o[d]);
+            hi[d] = hi[d].max(o[d]);
+        }
+    }
+    let dist = |o: &[f64; NUM_OBJECTIVES]| -> f64 {
+        let mut sum = 0.0;
+        for d in 0..NUM_OBJECTIVES {
+            let range = hi[d] - lo[d];
+            if range > 0.0 && range.is_finite() {
+                let z = (o[d] - lo[d]) / range;
+                sum += z * z;
+            }
+        }
+        sum
+    };
+    (0..objs.len()).min_by(|&a, &b| dist(&objs[a]).total_cmp(&dist(&objs[b])))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn o(e: f64, l: f64, p: f64, d: f64) -> [f64; NUM_OBJECTIVES] {
+        [e, l, p, d]
+    }
+
+    #[test]
+    fn dominance_basics() {
+        let a = o(1.0, 1.0, 1.0, 1.0);
+        let b = o(2.0, 1.0, 1.0, 1.0);
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        // Equal vectors dominate neither way.
+        let a2 = a;
+        assert!(!dominates(&a, &a2));
+        // Trade-off: incomparable.
+        let c = o(0.5, 2.0, 1.0, 1.0);
+        assert!(!dominates(&a, &c));
+        assert!(!dominates(&c, &a));
+    }
+
+    #[test]
+    fn frontier_drops_dominated() {
+        let objs = vec![
+            o(1.0, 4.0, 1.0, 1.0), // frontier (best energy)
+            o(4.0, 1.0, 1.0, 1.0), // frontier (best latency)
+            o(3.0, 3.0, 1.0, 1.0), // frontier (trade-off)
+            o(4.0, 4.0, 1.0, 1.0), // dominated by all three
+        ];
+        assert_eq!(pareto_frontier(&objs), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn nan_point_never_survives_against_finite() {
+        let objs = vec![
+            Objectives {
+                energy_pj: f64::NAN,
+                latency_cycles: 1.0,
+                pes: 1.0,
+                dram_pj: 1.0,
+            }
+            .to_array(),
+            o(1.0, 1.0, 1.0, 1.0),
+        ];
+        // NaN → +∞ in one objective, equal elsewhere: dominated.
+        assert_eq!(pareto_frontier(&objs), vec![1]);
+    }
+
+    #[test]
+    fn knee_prefers_balanced_point() {
+        let objs = vec![
+            o(0.0, 10.0, 0.0, 0.0),
+            o(1.0, 1.0, 0.0, 0.0), // near-ideal in both active dims
+            o(10.0, 0.0, 0.0, 0.0),
+        ];
+        assert_eq!(knee_point(&objs), Some(1));
+        assert_eq!(knee_point(&[]), None);
+        // Single point is its own knee.
+        assert_eq!(knee_point(&objs[..1]), Some(0));
+    }
+}

@@ -1,0 +1,317 @@
+//! The design-space model: which (array shape, loop bounds, tile scale,
+//! energy policy) combinations a sweep covers, and which of them pruning
+//! removes before any analysis runs.
+
+use crate::energy::Policy;
+
+/// One candidate configuration, prior to evaluation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DesignPoint {
+    /// Array shape `t` (1-D or 2-D here; deeper phases are padded with
+    /// `t = 1` by the analysis, exactly as `analyze_uniform` does).
+    pub array: Vec<i64>,
+    /// Loop bounds `N` (padded per phase with its last entry, the CLI
+    /// convention).
+    pub bounds: Vec<i64>,
+    /// Tile-size scale `k ≥ 1`: per dimension `p_ℓ = min(N_ℓ,
+    /// k·⌈N_ℓ/t_ℓ⌉)`. `k = 1` is the paper's exact-cover sizing rule;
+    /// larger `k` oversizes tiles (fewer active tiles, less inter-tile
+    /// traffic, longer per-PE chains) while staying inside the analysis
+    /// context `1 ≤ p_ℓ ≤ N_ℓ`.
+    pub tile_scale: i64,
+    /// Energy-interpretation policy (architecture ablation).
+    pub policy: Policy,
+}
+
+impl DesignPoint {
+    /// Total PEs this point uses.
+    pub fn pes(&self) -> i64 {
+        self.array.iter().product()
+    }
+
+    /// Compact display label, e.g. `8x4` or `16`.
+    pub fn array_label(&self) -> String {
+        self.array
+            .iter()
+            .map(|t| t.to_string())
+            .collect::<Vec<_>>()
+            .join("x")
+    }
+}
+
+/// A multi-axis design space. Build with the `with_*` methods, then
+/// enumerate concrete points with [`DesignSpace::points`].
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    /// Candidate array shapes.
+    pub arrays: Vec<Vec<i64>>,
+    /// Loop-bound vectors to sweep (the cheap axis: cached analyses are
+    /// reused across every entry).
+    pub bounds_grid: Vec<Vec<i64>>,
+    /// Tile-size scales (see [`DesignPoint::tile_scale`]).
+    pub tile_scales: Vec<i64>,
+    /// Energy policies to compare.
+    pub policies: Vec<Policy>,
+    /// PE budget: shapes with more PEs are pruned.
+    pub max_pes: Option<i64>,
+    /// Prune transposed duplicates `(b,a)` when `(a,b)` is enumerated.
+    /// Exact for workloads whose dependence structure is symmetric under
+    /// the dimension swap (see `dse_properties` tests); for asymmetric
+    /// workloads it is a deliberate approximation — DRAM-dominated energy
+    /// is mapping-invariant, only FD/ID terms shift.
+    pub prune_symmetric: bool,
+}
+
+impl Default for DesignSpace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DesignSpace {
+    /// An empty space: no arrays, no bounds, exact-cover tiles, the
+    /// paper's TCPA policy.
+    pub fn new() -> Self {
+        DesignSpace {
+            arrays: Vec::new(),
+            bounds_grid: Vec::new(),
+            tile_scales: vec![1],
+            policies: vec![Policy::Tcpa],
+            max_pes: None,
+            prune_symmetric: false,
+        }
+    }
+
+    /// All 2-D shapes `(t0, t1)` with `t0·t1 ≤ max_pes`.
+    pub fn with_arrays_2d(mut self, max_pes: i64) -> Self {
+        for t0 in 1..=max_pes {
+            for t1 in 1..=max_pes {
+                if t0 * t1 <= max_pes {
+                    self.arrays.push(vec![t0, t1]);
+                }
+            }
+        }
+        self.max_pes = Some(max_pes);
+        self
+    }
+
+    /// All 1-D shapes `(t0)` with `t0 ≤ max_pes` (linear arrays; deeper
+    /// loop dimensions stay on-PE).
+    pub fn with_arrays_1d(mut self, max_pes: i64) -> Self {
+        for t0 in 1..=max_pes {
+            self.arrays.push(vec![t0]);
+        }
+        self.max_pes = Some(max_pes);
+        self
+    }
+
+    /// Explicit candidate shapes.
+    pub fn with_arrays(mut self, arrays: Vec<Vec<i64>>) -> Self {
+        self.arrays.extend(arrays);
+        self
+    }
+
+    /// A single loop-bound vector.
+    pub fn with_bounds(mut self, bounds: Vec<i64>) -> Self {
+        self.bounds_grid.push(bounds);
+        self
+    }
+
+    /// Several loop-bound vectors (the cache-backed sweep axis).
+    pub fn with_bounds_grid(mut self, grid: Vec<Vec<i64>>) -> Self {
+        self.bounds_grid.extend(grid);
+        self
+    }
+
+    /// Square bound vectors `[n; dims]` for every `n` in `sizes`.
+    pub fn with_bounds_sweep(mut self, sizes: &[i64], dims: usize) -> Self {
+        for &n in sizes {
+            self.bounds_grid.push(vec![n; dims]);
+        }
+        self
+    }
+
+    /// Tile-size scales to sweep (default `[1]`, the exact-cover rule).
+    pub fn with_tile_scales(mut self, scales: Vec<i64>) -> Self {
+        assert!(scales.iter().all(|&k| k >= 1), "tile scales must be >= 1");
+        self.tile_scales = scales;
+        self
+    }
+
+    /// Energy policies to compare (default `[Policy::Tcpa]`).
+    pub fn with_policies(mut self, policies: Vec<Policy>) -> Self {
+        self.policies = policies;
+        self
+    }
+
+    /// PE budget (also set by `with_arrays_2d`/`with_arrays_1d`).
+    pub fn with_max_pes(mut self, max_pes: i64) -> Self {
+        self.max_pes = Some(max_pes);
+        self
+    }
+
+    /// Enable transposition-symmetry pruning (see field docs).
+    pub fn with_symmetry_pruning(mut self) -> Self {
+        self.prune_symmetric = true;
+        self
+    }
+
+    /// Does `array` survive the shape-level pruning rules?
+    fn keep_array(&self, array: &[i64]) -> bool {
+        if let Some(budget) = self.max_pes {
+            if array.iter().product::<i64>() > budget {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Is `array` a transposed duplicate at these `bounds`? True only
+    /// when its canonical mirror (the sorted, non-decreasing shape) is
+    /// enumerated *and* itself fits `bounds` — otherwise pruning would
+    /// silently lose a feasible orientation (e.g. `(4,2)` under bounds
+    /// `(16,2)`, whose mirror `(2,4)` does not fit).
+    fn symmetric_duplicate(&self, array: &[i64], bounds: &[i64]) -> bool {
+        if !self.prune_symmetric {
+            return false;
+        }
+        let mut sorted = array.to_vec();
+        sorted.sort_unstable();
+        sorted != array
+            && self.arrays.contains(&sorted)
+            && Self::fits(&sorted, bounds)
+    }
+
+    /// Does `array` fit the problem `bounds`? (A PE row/column beyond the
+    /// iteration extent would idle entirely — prune, like the original
+    /// serial sweep did.) `bounds` is padded with its last entry.
+    fn fits(array: &[i64], bounds: &[i64]) -> bool {
+        let last = *bounds.last().expect("non-empty bounds");
+        array
+            .iter()
+            .enumerate()
+            .all(|(l, &t)| t <= bounds.get(l).copied().unwrap_or(last))
+    }
+
+    /// Enumerate the concrete design points, pruning applied, in a
+    /// deterministic order (arrays outermost, so consecutive points share
+    /// cached analyses; then bounds, tile scales, policies). An empty
+    /// axis (no arrays, e.g. a zero PE budget, or no bounds) yields an
+    /// empty sweep, matching the old serial `dse_sweep` behavior.
+    pub fn points(&self) -> Vec<DesignPoint> {
+        let mut out = Vec::new();
+        for array in &self.arrays {
+            if !self.keep_array(array) {
+                continue;
+            }
+            for bounds in &self.bounds_grid {
+                if !Self::fits(array, bounds)
+                    || self.symmetric_duplicate(array, bounds)
+                {
+                    continue;
+                }
+                for &tile_scale in &self.tile_scales {
+                    for &policy in &self.policies {
+                        out.push(DesignPoint {
+                            array: array.clone(),
+                            bounds: bounds.clone(),
+                            tile_scale,
+                            policy,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_d_enumeration_respects_budget() {
+        let s = DesignSpace::new()
+            .with_arrays_2d(8)
+            .with_bounds(vec![16, 16]);
+        let pts = s.points();
+        assert!(!pts.is_empty());
+        assert!(pts.iter().all(|p| p.pes() <= 8));
+        // (1,1) through (8,1) and (1,8) present; (3,3) pruned by budget.
+        assert!(pts.iter().any(|p| p.array == vec![1, 1]));
+        assert!(pts.iter().any(|p| p.array == vec![8, 1]));
+        assert!(!pts.iter().any(|p| p.array == vec![3, 3]));
+    }
+
+    #[test]
+    fn symmetry_pruning_keeps_canonical_only() {
+        let s = DesignSpace::new()
+            .with_arrays_2d(8)
+            .with_bounds(vec![16, 16])
+            .with_symmetry_pruning();
+        let pts = s.points();
+        assert!(pts.iter().any(|p| p.array == vec![2, 4]));
+        assert!(!pts.iter().any(|p| p.array == vec![4, 2]));
+        // Squares survive.
+        assert!(pts.iter().any(|p| p.array == vec![2, 2]));
+    }
+
+    #[test]
+    fn symmetry_pruning_keeps_orientation_whose_mirror_does_not_fit() {
+        // Under rectangular bounds (16, 2) the canonical mirror (2,4)
+        // does not fit (4 > 2), so (4,2) must survive the pruning.
+        let s = DesignSpace::new()
+            .with_arrays_2d(8)
+            .with_bounds(vec![16, 2])
+            .with_symmetry_pruning();
+        let pts = s.points();
+        assert!(pts.iter().any(|p| p.array == vec![4, 2]));
+        assert!(!pts.iter().any(|p| p.array == vec![2, 4]));
+    }
+
+    #[test]
+    fn shapes_larger_than_problem_pruned_per_bounds() {
+        let s = DesignSpace::new()
+            .with_arrays_2d(16)
+            .with_bounds_grid(vec![vec![4, 4], vec![16, 16]]);
+        let pts = s.points();
+        // (8,1) fits N=16 but not N=4.
+        assert!(pts
+            .iter()
+            .any(|p| p.array == vec![8, 1] && p.bounds == vec![16, 16]));
+        assert!(!pts
+            .iter()
+            .any(|p| p.array == vec![8, 1] && p.bounds == vec![4, 4]));
+    }
+
+    #[test]
+    fn axes_multiply() {
+        let s = DesignSpace::new()
+            .with_arrays(vec![vec![2, 2]])
+            .with_bounds_sweep(&[8, 16], 2)
+            .with_tile_scales(vec![1, 2])
+            .with_policies(Policy::ALL.to_vec());
+        assert_eq!(s.points().len(), 2 * 2 * 3);
+    }
+
+    #[test]
+    fn empty_axes_yield_empty_sweep() {
+        let s = DesignSpace::new().with_arrays_2d(0).with_bounds(vec![8]);
+        assert!(s.points().is_empty());
+        let s = DesignSpace::new().with_arrays(vec![vec![2]]);
+        assert!(s.points().is_empty(), "no bounds → no points");
+    }
+
+    #[test]
+    fn array_label_formats() {
+        let p = DesignPoint {
+            array: vec![8, 4],
+            bounds: vec![64, 64],
+            tile_scale: 1,
+            policy: Policy::Tcpa,
+        };
+        assert_eq!(p.array_label(), "8x4");
+        assert_eq!(p.pes(), 32);
+    }
+}

@@ -24,13 +24,18 @@
 //!   classification `L(x)` and the per-statement energy (Eq. 9/10).
 //! * [`analysis`] — the paper's contribution: the end-to-end symbolic energy
 //!   analysis producing a piecewise quasi-polynomial `E_tot(N, p)` (Eq. 11).
+//! * [`dse`] — design-space exploration: multi-axis spaces (array shapes,
+//!   tile scales, energy policies, bounds grids), a parallel channel-fed
+//!   explorer, a memoizing analysis cache, and multi-objective Pareto
+//!   frontier / knee-point selection.
 //! * [`sim`] — cycle-accurate TCPA simulator (the paper's baseline):
 //!   PE array, register files, interconnect, I/O buffers, DMA, counters.
 //! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts
-//!   (the L2/L1 golden numeric model) from `artifacts/*.hlo.txt`.
-//! * [`coordinator`] — CLI driver, validation and DSE orchestration.
+//!   (the L2/L1 golden numeric model) from `artifacts/*.hlo.txt`;
+//!   feature-gated (`pjrt`), with a dependency-free stub by default.
+//! * [`coordinator`] — CLI driver, validation and legacy DSE shim.
 //! * [`report`] — CSV / markdown / ASCII-figure emitters for the paper's
-//!   tables and figures.
+//!   tables, figures, and DSE frontiers.
 
 pub mod polyhedral;
 pub mod pra;
@@ -39,6 +44,7 @@ pub mod tiling;
 pub mod schedule;
 pub mod energy;
 pub mod analysis;
+pub mod dse;
 pub mod sim;
 pub mod runtime;
 pub mod coordinator;

@@ -16,7 +16,10 @@ fn main() {
              tcpa-energy validate [--workload NAME] [--bounds N,N] \
              [--array TxT]\n  \
              tcpa-energy dse      --workload NAME --bounds N,N \
-             [--max-pes P]\n  \
+             [--max-pes P] [--arrays 1d|2d]\n                       \
+             [--bounds-sweep N,N,..] [--tile-scales K,K] \
+             [--policies all|tcpa,no-fd,no-reuse]\n                       \
+             [--prune-symmetric] [--workers W] [--out DIR]\n  \
              tcpa-energy figures  [--out DIR] [--quick]"
         );
         return;

@@ -77,16 +77,31 @@ pub struct UnfoldedCell {
 }
 
 /// Error for sets outside the separable class the counter supports.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SetError {
-    #[error("constraint couples multiple j-variables after k-substitution; \
-             the separable counter only supports the tiled-statement class \
-             (constraint touches j{0} and j{1})")]
     NonSeparable(usize, usize),
-    #[error("j{0} has parametric coefficient {1:?}; only constant ±1 \
-             coefficients are supported after k-substitution")]
     NonUnitCoeff(usize, AffineExpr),
 }
+
+impl std::fmt::Display for SetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SetError::NonSeparable(a, b) => write!(
+                f,
+                "constraint couples multiple j-variables after \
+                 k-substitution; the separable counter only supports the \
+                 tiled-statement class (constraint touches j{a} and j{b})"
+            ),
+            SetError::NonUnitCoeff(l, c) => write!(
+                f,
+                "j{l} has parametric coefficient {c:?}; only constant ±1 \
+                 coefficients are supported after k-substitution"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SetError {}
 
 impl TiledSet {
     /// An unconstrained set of loop depth `n`.

@@ -7,26 +7,61 @@ use super::ir::{Lhs, Operand, Pra};
 use super::rdg::Rdg;
 
 /// Validation failure.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum PraError {
-    #[error("statement {0}: op {1} expects {2} args, got {3}")]
     Arity(String, String, usize, usize),
-    #[error("statement {0}: dependence vector has {1} entries, loop depth is {2}")]
     DepLen(String, usize, usize),
-    #[error("statement {0}: reads undeclared tensor {1}")]
     UnknownTensor(String, String),
-    #[error("statement {0}: reads variable {1} that no statement defines")]
     UndefinedVar(String, String),
-    #[error("statement {0}: condition coefficient vector has {1} entries, loop depth is {2}")]
     CondLen(String, usize, usize),
-    #[error("intra-iteration dependence cycle (zero-dependence subgraph is cyclic)")]
     ZeroDepCycle,
-    #[error("statement {0}: dependence vector {1:?} is not lexicographically non-negative; \
-             the lexicographic interpreter cannot execute this PRA")]
     NonLexPositiveDep(String, Vec<i64>),
-    #[error("duplicate statement name {0}")]
     DuplicateName(String),
 }
+
+impl std::fmt::Display for PraError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PraError::Arity(s, op, want, got) => write!(
+                f,
+                "statement {s}: op {op} expects {want} args, got {got}"
+            ),
+            PraError::DepLen(s, got, depth) => write!(
+                f,
+                "statement {s}: dependence vector has {got} entries, loop \
+                 depth is {depth}"
+            ),
+            PraError::UnknownTensor(s, t) => {
+                write!(f, "statement {s}: reads undeclared tensor {t}")
+            }
+            PraError::UndefinedVar(s, v) => write!(
+                f,
+                "statement {s}: reads variable {v} that no statement defines"
+            ),
+            PraError::CondLen(s, got, depth) => write!(
+                f,
+                "statement {s}: condition coefficient vector has {got} \
+                 entries, loop depth is {depth}"
+            ),
+            PraError::ZeroDepCycle => write!(
+                f,
+                "intra-iteration dependence cycle (zero-dependence subgraph \
+                 is cyclic)"
+            ),
+            PraError::NonLexPositiveDep(s, d) => write!(
+                f,
+                "statement {s}: dependence vector {d:?} is not \
+                 lexicographically non-negative; the lexicographic \
+                 interpreter cannot execute this PRA"
+            ),
+            PraError::DuplicateName(s) => {
+                write!(f, "duplicate statement name {s}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PraError {}
 
 /// Validate a PRA. Returns all detected problems (empty = valid).
 pub fn validate(pra: &Pra) -> Vec<PraError> {

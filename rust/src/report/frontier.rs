@@ -1,0 +1,148 @@
+//! CSV / markdown emitters for design-space-exploration results: the
+//! full point cloud and the multi-objective Pareto frontier.
+
+use std::path::Path;
+
+use crate::dse::{EvaluatedPoint, ExploreResult};
+
+use super::csv::{write_csv, CsvTable};
+
+fn fmt_bounds(b: &[i64]) -> String {
+    b.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn point_row(p: &EvaluatedPoint, on_frontier: bool, knee: bool) -> Vec<String> {
+    vec![
+        p.point.array_label(),
+        p.pes.to_string(),
+        fmt_bounds(&p.point.bounds),
+        p.point.tile_scale.to_string(),
+        p.point.policy.label().to_string(),
+        format!("{:.3}", p.energy_pj),
+        format!("{:.3}", p.dram_pj),
+        p.latency_cycles.to_string(),
+        format!("{:.6e}", p.edp),
+        if on_frontier { "yes" } else { "no" }.to_string(),
+        if knee { "knee" } else { "" }.to_string(),
+    ]
+}
+
+const HEADER: [&str; 11] = [
+    "array",
+    "pes",
+    "bounds",
+    "tile_scale",
+    "policy",
+    "energy_pj",
+    "dram_pj",
+    "latency_cycles",
+    "edp",
+    "pareto",
+    "knee",
+];
+
+fn is_knee(res: &ExploreResult, i: usize) -> bool {
+    res.groups.iter().any(|g| g.knee == Some(i))
+}
+
+/// Every evaluated point, frontier membership annotated.
+pub fn dse_points_table(res: &ExploreResult) -> CsvTable {
+    let mut t = CsvTable::new(HEADER.to_vec());
+    for (i, p) in res.points.iter().enumerate() {
+        t.push(point_row(p, res.frontier.contains(&i), is_knee(res, i)));
+    }
+    t
+}
+
+/// Only the non-dominated points, grouped by scenario, in enumeration
+/// order within each group.
+pub fn dse_frontier_table(res: &ExploreResult) -> CsvTable {
+    let mut t = CsvTable::new(HEADER.to_vec());
+    for g in &res.groups {
+        for &i in &g.frontier {
+            t.push(point_row(&res.points[i], true, is_knee(res, i)));
+        }
+    }
+    t
+}
+
+/// Markdown rendering: a run summary plus one frontier table per
+/// (bounds, policy) scenario.
+pub fn dse_frontier_markdown(res: &ExploreResult) -> String {
+    use std::fmt::Write as _;
+    let mut out = format!(
+        "## {} — Pareto frontiers ({} of {} points, {} failed)\n\n\
+         objectives minimized: energy [pJ], latency [cycles], PEs, \
+         DRAM [pJ]\n",
+        res.workload,
+        res.frontier.len(),
+        res.points.len(),
+        res.failures.len(),
+    );
+    for g in &res.groups {
+        let mut t = CsvTable::new(HEADER.to_vec());
+        for &i in &g.frontier {
+            t.push(point_row(&res.points[i], true, is_knee(res, i)));
+        }
+        let _ = write!(
+            out,
+            "\n### bounds {} · policy {}\n\n{}",
+            fmt_bounds(&g.bounds),
+            g.policy.label(),
+            t.to_markdown()
+        );
+    }
+    out
+}
+
+/// Write `<stem>_points.csv`, `<stem>_frontier.csv` and
+/// `<stem>_frontier.md` into `dir`.
+pub fn write_dse_report(
+    res: &ExploreResult,
+    dir: &Path,
+    stem: &str,
+) -> std::io::Result<()> {
+    write_csv(&dse_points_table(res), dir, &format!("{stem}_points"))?;
+    write_csv(&dse_frontier_table(res), dir, &format!("{stem}_frontier"))?;
+    std::fs::write(
+        dir.join(format!("{stem}_frontier.md")),
+        dse_frontier_markdown(res),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{explore, DesignSpace, ExploreConfig};
+    use crate::workloads;
+
+    fn small_result() -> ExploreResult {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = DesignSpace::new()
+            .with_arrays_2d(4)
+            .with_bounds(vec![8, 8]);
+        explore(&wl, &space, &ExploreConfig::default())
+    }
+
+    #[test]
+    fn tables_cover_all_points_and_frontier() {
+        let res = small_result();
+        let all = dse_points_table(&res);
+        assert_eq!(all.rows.len(), res.points.len());
+        let front = dse_frontier_table(&res);
+        assert_eq!(front.rows.len(), res.frontier.len());
+        assert!(front.rows.iter().all(|r| r[9] == "yes"));
+        // Exactly one knee across the full table.
+        let knees =
+            all.rows.iter().filter(|r| r[10] == "knee").count();
+        assert_eq!(knees, 1);
+    }
+
+    #[test]
+    fn markdown_mentions_objectives_and_workload() {
+        let md = dse_frontier_markdown(&small_result());
+        assert!(md.contains("gesummv"));
+        assert!(md.contains("objectives minimized"));
+        assert!(md.contains("| array |"));
+    }
+}

@@ -5,6 +5,11 @@
 
 pub mod chart;
 pub mod csv;
+pub mod frontier;
 
 pub use chart::ascii_chart;
 pub use csv::{markdown_table, write_csv, CsvTable};
+pub use frontier::{
+    dse_frontier_markdown, dse_frontier_table, dse_points_table,
+    write_dse_report,
+};

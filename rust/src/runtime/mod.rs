@@ -2,143 +2,118 @@
 //! (`artifacts/*.hlo.txt`) and execute them from Rust — the L2/L1 golden
 //! numeric model on the L3 hot path, with Python nowhere at runtime.
 //!
-//! Wiring follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`; artifacts are
-//! lowered with `return_tuple=True`, so results are always tuples.
+//! The real backend (`pjrt.rs`, wiring follows /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`) needs the vendored `xla` bindings and is gated behind the
+//! `pjrt` cargo feature. The default build ships `stub.rs`: the same API,
+//! constructible and introspectable, erroring descriptively on `load`/
+//! `execute` so callers and tests degrade gracefully in environments
+//! without the XLA toolchain. Artifacts are lowered with
+//! `return_tuple=True`, so results are always tuples.
 
 pub mod catalog;
 
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
 pub use catalog::{catalog, ArtifactSpec};
 
-use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
+
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
-use crate::workloads::Tensor;
-
-/// A loaded PJRT executable with its input/output shape manifest.
-pub struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
-    /// Input shapes as lowered (from `artifacts/manifest.txt`).
-    pub input_shapes: Vec<Vec<i64>>,
+/// Runtime failure: a message plus an optional source error.
+#[derive(Debug)]
+pub struct RuntimeError {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
-/// The artifact runtime: a CPU PJRT client plus compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    models: BTreeMap<String, LoadedModel>,
+impl RuntimeError {
+    /// A message-only error.
+    pub fn new(msg: impl Into<String>) -> Self {
+        RuntimeError { msg: msg.into(), source: None }
+    }
+
+    /// Wrap a source error with context (the `anyhow::Context` idiom).
+    pub fn with_source(
+        msg: impl Into<String>,
+        source: impl std::error::Error + Send + Sync + 'static,
+    ) -> Self {
+        RuntimeError { msg: msg.into(), source: Some(Box::new(source)) }
+    }
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn new() -> Result<Self> {
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, models: BTreeMap::new() })
-    }
-
-    /// Platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile one HLO-text artifact.
-    pub fn load(
-        &mut self,
-        name: &str,
-        path: &Path,
-        input_shapes: Vec<Vec<i64>>,
-    ) -> Result<()> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        self.models
-            .insert(name.to_string(), LoadedModel { exe, input_shapes });
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)?;
+        // `{:#}` renders the cause chain, as anyhow does.
+        if f.alternate() {
+            if let Some(s) = &self.source {
+                write!(f, ": {s}")?;
+            }
+        }
         Ok(())
     }
+}
 
-    /// Load every artifact listed in `<dir>/manifest.txt` (written by
-    /// `python -m compile.aot`). Returns the loaded names.
-    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
-        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| {
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|s| s as &(dyn std::error::Error))
+    }
+}
+
+/// Runtime result.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Parse `<dir>/manifest.txt` (written by `python -m compile.aot`) into
+/// `(artifact name, input shapes)` entries. Shared by both backends.
+pub(crate) fn parse_manifest(
+    dir: &Path,
+) -> Result<Vec<(String, Vec<Vec<i64>>)>> {
+    let manifest =
+        std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            RuntimeError::with_source(
                 format!(
                     "{}/manifest.txt missing — run `make artifacts`",
                     dir.display()
-                )
-            })?;
-        let mut names = Vec::new();
-        for line in manifest.lines() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            let (name, shapes) =
-                line.split_once(' ').context("malformed manifest line")?;
-            let input_shapes: Vec<Vec<i64>> = shapes
-                .split(';')
-                .map(|s| {
-                    s.split(',')
-                        .filter(|x| !x.is_empty() && *x != "scalar")
-                        .map(|x| x.parse::<i64>().map_err(Into::into))
-                        .collect::<Result<Vec<i64>>>()
-                })
-                .collect::<Result<_>>()?;
-            self.load(name, &dir.join(format!("{name}.hlo.txt")), input_shapes)?;
-            names.push(name.to_string());
+                ),
+                e,
+            )
+        })?;
+    let mut out = Vec::new();
+    for line in manifest.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
         }
-        Ok(names)
+        let (name, shapes) = line
+            .split_once(' ')
+            .ok_or_else(|| RuntimeError::new("malformed manifest line"))?;
+        let input_shapes: Vec<Vec<i64>> = shapes
+            .split(';')
+            .map(|s| {
+                s.split(',')
+                    .filter(|x| !x.is_empty() && *x != "scalar")
+                    .map(|x| {
+                        x.parse::<i64>().map_err(|e| {
+                            RuntimeError::with_source(
+                                format!("bad dimension {x:?} in manifest"),
+                                e,
+                            )
+                        })
+                    })
+                    .collect::<Result<Vec<i64>>>()
+            })
+            .collect::<Result<_>>()?;
+        out.push((name.to_string(), input_shapes));
     }
-
-    /// True when `name` has been loaded.
-    pub fn has(&self, name: &str) -> bool {
-        self.models.contains_key(name)
-    }
-
-    /// Execute a loaded model on input tensors, returning output tensors.
-    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let model = self
-            .models
-            .get(name)
-            .with_context(|| format!("model {name} not loaded"))?;
-        if inputs.len() != model.input_shapes.len() {
-            bail!(
-                "{name}: expected {} inputs, got {}",
-                model.input_shapes.len(),
-                inputs.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (t, want) in inputs.iter().zip(&model.input_shapes) {
-            if &t.shape != want {
-                bail!(
-                    "{name}: input shape {:?} does not match artifact {want:?}",
-                    t.shape
-                );
-            }
-            let lit = xla::Literal::vec1(&t.data).reshape(&t.shape)?;
-            literals.push(lit);
-        }
-        let result = model.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        // return_tuple=True lowering: unpack the tuple.
-        let parts = result.to_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for lit in parts {
-            let shape = lit.array_shape()?;
-            let dims: Vec<i64> = shape.dims().to_vec();
-            let data = lit.to_vec::<f32>()?;
-            out.push(Tensor { shape: dims, data });
-        }
-        Ok(out)
-    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -147,7 +122,7 @@ mod tests {
 
     #[test]
     fn runtime_construction() {
-        let rt = Runtime::new().expect("PJRT CPU client");
+        let rt = Runtime::new().expect("runtime");
         assert!(rt.platform().to_lowercase().contains("cpu"));
         assert!(!rt.has("nothing"));
     }
@@ -157,5 +132,14 @@ mod tests {
         let rt = Runtime::new().unwrap();
         let err = rt.execute("ghost", &[]).unwrap_err();
         assert!(err.to_string().contains("not loaded"));
+    }
+
+    #[test]
+    fn missing_manifest_points_at_make_artifacts() {
+        let mut rt = Runtime::new().unwrap();
+        let err = rt
+            .load_dir(Path::new("/nonexistent-artifacts-dir"))
+            .unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err:#}");
     }
 }

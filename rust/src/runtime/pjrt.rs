@@ -1,0 +1,133 @@
+//! Real PJRT backend (`pjrt` cargo feature): compile and execute the
+//! AOT-lowered HLO artifacts through the vendored `xla` bindings.
+//! Wiring follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::workloads::Tensor;
+
+use super::{parse_manifest, Result, RuntimeError};
+
+/// Map an `xla` backend error into a [`RuntimeError`] with context.
+fn xe<T, E: std::fmt::Debug>(
+    r: std::result::Result<T, E>,
+    msg: impl Into<String>,
+) -> Result<T> {
+    r.map_err(|e| RuntimeError::new(format!("{}: {e:?}", msg.into())))
+}
+
+/// A loaded PJRT executable with its input/output shape manifest.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Input shapes as lowered (from `artifacts/manifest.txt`).
+    pub input_shapes: Vec<Vec<i64>>,
+}
+
+/// The artifact runtime: a CPU PJRT client plus compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: BTreeMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn new() -> Result<Self> {
+        let client = xe(xla::PjRtClient::cpu(), "creating PJRT CPU client")?;
+        Ok(Runtime { client, models: BTreeMap::new() })
+    }
+
+    /// True when this build uses the stub backend — never, here.
+    pub fn is_stub(&self) -> bool {
+        false
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load(
+        &mut self,
+        name: &str,
+        path: &Path,
+        input_shapes: Vec<Vec<i64>>,
+    ) -> Result<()> {
+        let text_path = path
+            .to_str()
+            .ok_or_else(|| RuntimeError::new("non-utf8 path"))?;
+        let proto = xe(
+            xla::HloModuleProto::from_text_file(text_path),
+            format!("parsing {}", path.display()),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = xe(self.client.compile(&comp), format!("compiling {name}"))?;
+        self.models
+            .insert(name.to_string(), LoadedModel { exe, input_shapes });
+        Ok(())
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.txt` (written by
+    /// `python -m compile.aot`). Returns the loaded names.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let entries = parse_manifest(dir)?;
+        let mut names = Vec::new();
+        for (name, input_shapes) in entries {
+            self.load(&name, &dir.join(format!("{name}.hlo.txt")), input_shapes)?;
+            names.push(name);
+        }
+        Ok(names)
+    }
+
+    /// True when `name` has been loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    /// Execute a loaded model on input tensors, returning output tensors.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let model = self
+            .models
+            .get(name)
+            .ok_or_else(|| RuntimeError::new(format!("model {name} not loaded")))?;
+        if inputs.len() != model.input_shapes.len() {
+            return Err(RuntimeError::new(format!(
+                "{name}: expected {} inputs, got {}",
+                model.input_shapes.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, want) in inputs.iter().zip(&model.input_shapes) {
+            if &t.shape != want {
+                return Err(RuntimeError::new(format!(
+                    "{name}: input shape {:?} does not match artifact {want:?}",
+                    t.shape
+                )));
+            }
+            let lit = xe(
+                xla::Literal::vec1(&t.data).reshape(&t.shape),
+                format!("{name}: reshaping input"),
+            )?;
+            literals.push(lit);
+        }
+        let result = xe(
+            xe(model.exe.execute::<xla::Literal>(&literals),
+                format!("{name}: executing"))?[0][0]
+                .to_literal_sync(),
+            format!("{name}: fetching result"),
+        )?;
+        // return_tuple=True lowering: unpack the tuple.
+        let parts = xe(result.to_tuple(), format!("{name}: unpacking tuple"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = xe(lit.array_shape(), format!("{name}: output shape"))?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            let data = xe(lit.to_vec::<f32>(), format!("{name}: output data"))?;
+            out.push(Tensor { shape: dims, data });
+        }
+        Ok(out)
+    }
+}

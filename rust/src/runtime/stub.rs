@@ -1,0 +1,81 @@
+//! Dependency-free stand-in for the PJRT backend (default build, `pjrt`
+//! feature off). Mirrors `pjrt::Runtime`'s API exactly: construction,
+//! platform introspection and manifest parsing work; actually compiling
+//! or executing an artifact reports that the XLA toolchain is absent.
+
+use std::path::Path;
+
+use crate::workloads::Tensor;
+
+use super::{parse_manifest, Result, RuntimeError};
+
+/// The artifact runtime (stub backend). Holds no state: nothing can be
+/// loaded, so `has` is always false and `execute` always errors.
+#[derive(Debug, Default)]
+pub struct Runtime {}
+
+impl Runtime {
+    /// Create the stub runtime (always succeeds).
+    pub fn new() -> Result<Self> {
+        Ok(Runtime::default())
+    }
+
+    /// True when this build uses the stub backend (callers and tests
+    /// use this to skip artifact-execution paths).
+    pub fn is_stub(&self) -> bool {
+        true
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "cpu (stub; rebuild with --features pjrt for XLA execution)".into()
+    }
+
+    /// Compiling an artifact needs the real backend.
+    pub fn load(
+        &mut self,
+        name: &str,
+        path: &Path,
+        _input_shapes: Vec<Vec<i64>>,
+    ) -> Result<()> {
+        Err(RuntimeError::new(format!(
+            "cannot compile {name} ({}): PJRT backend not built — enable \
+             the `pjrt` cargo feature (see Cargo.toml for the required \
+             vendored xla dependency)",
+            path.display()
+        )))
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.txt`. With the stub
+    /// backend this fails on the first artifact (after a successful
+    /// manifest parse) — or earlier, with a `make artifacts` hint, when
+    /// the manifest itself is missing.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let entries = parse_manifest(dir)?;
+        let mut names = Vec::new();
+        for (name, input_shapes) in entries {
+            self.load(
+                &name,
+                &dir.join(format!("{name}.hlo.txt")),
+                input_shapes,
+            )?;
+            names.push(name);
+        }
+        Ok(names)
+    }
+
+    /// True when `name` has been loaded — never, for the stub.
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    /// Executing needs the real backend; unknown models report the same
+    /// error as the PJRT path.
+    pub fn execute(
+        &self,
+        name: &str,
+        _inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        Err(RuntimeError::new(format!("model {name} not loaded")))
+    }
+}

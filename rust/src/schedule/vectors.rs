@@ -42,12 +42,24 @@ pub struct Schedule {
 }
 
 /// Scheduling failure.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ScheduleError {
-    #[error("no lexicographic dimension order satisfies all intra-tile \
-             dependencies: {0:?}")]
     NoValidPermutation(Vec<Vec<i64>>),
 }
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::NoValidPermutation(deps) => write!(
+                f,
+                "no lexicographic dimension order satisfies all intra-tile \
+                 dependencies: {deps:?}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
 
 impl Schedule {
     /// Evaluate `λ^J` at concrete parameters.

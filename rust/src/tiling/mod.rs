@@ -16,7 +16,9 @@ pub mod gamma;
 pub mod transform;
 
 pub use gamma::gamma_candidates;
-pub use transform::{tile_pra, ArrayMapping, TiledPra, TiledStmt};
+pub use transform::{
+    pad_array, pad_bounds, tile_pra, ArrayMapping, TiledPra, TiledStmt,
+};
 
 #[cfg(test)]
 mod tests {

@@ -43,6 +43,32 @@ impl ArrayMapping {
     }
 }
 
+/// Pad an array shape to `ndims` entries with `t = 1` (unmapped deeper
+/// loop dimensions stay inside a single PE) and truncate to `ndims` —
+/// the one convention shared by `analyze_uniform`, the CLI and the
+/// validator.
+pub fn pad_array(array: &[i64], ndims: usize) -> Vec<i64> {
+    let mut t = array.to_vec();
+    while t.len() < ndims {
+        t.push(1);
+    }
+    t.truncate(ndims);
+    t
+}
+
+/// Pad loop bounds to `ndims` entries by replicating the last one and
+/// truncate to `ndims` — [`pad_array`]'s twin for the bounds side,
+/// shared by the CLI, the validator and the DSE explorer.
+pub fn pad_bounds(bounds: &[i64], ndims: usize) -> Vec<i64> {
+    let mut b = bounds.to_vec();
+    let last = *b.last().expect("non-empty bounds");
+    while b.len() < ndims {
+        b.push(last);
+    }
+    b.truncate(ndims);
+    b
+}
+
 /// One tiled statement variant.
 #[derive(Debug, Clone)]
 pub struct TiledStmt {

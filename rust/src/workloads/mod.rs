@@ -58,6 +58,37 @@ pub fn workload_inputs(wl: &Workload, params: &[Vec<i64>]) -> TensorEnv {
     synth_inputs(&workload_input_decls(wl, params))
 }
 
+/// A deliberately *unschedulable* two-statement PRA: its dependence
+/// vectors `(1,−1)` and `(−1,1)` admit no causal lexicographic order,
+/// so `find_schedule` must reject it. A counterexample fixture shared
+/// by the scheduler, DSE-cache and failure-injection tests.
+pub fn twist_unschedulable() -> Workload {
+    use crate::polyhedral::ParamSpace;
+    use crate::pra::ir::{Lhs, Op, Operand, Pra, Statement};
+    Workload::single(Pra {
+        name: "twist".into(),
+        ndims: 2,
+        space: ParamSpace::loop_nest(2),
+        statements: vec![
+            Statement {
+                name: "S1".into(),
+                lhs: Lhs::Var("a".into()),
+                op: Op::Copy,
+                args: vec![Operand::var("b", vec![1, -1])],
+                cond: vec![],
+            },
+            Statement {
+                name: "S2".into(),
+                lhs: Lhs::Var("b".into()),
+                op: Op::Copy,
+                args: vec![Operand::var("a", vec![-1, 1])],
+                cond: vec![],
+            },
+        ],
+        tensors: vec![],
+    })
+}
+
 
 /// All benchmark workloads: the paper's eight plus the doitgen (4-deep)
 /// and gemver (3-phase) extensions.

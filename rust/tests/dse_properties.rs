@@ -1,0 +1,256 @@
+//! Property tests for the `dse` subsystem (via the in-crate
+//! `proptest_lite` harness):
+//!
+//! 1. Pareto frontiers contain no dominated point, and every dropped
+//!    point is dominated by some frontier member.
+//! 2. For a workload whose dependence structure is symmetric under the
+//!    dimension swap, transposed array shapes `(a,b)` / `(b,a)` yield
+//!    bit-identical energy — the soundness condition behind
+//!    `DesignSpace::with_symmetry_pruning`.
+//! 3. Cached and uncached analyses agree bit-for-bit.
+//! 4. Exploration results are deterministic across worker counts.
+
+use tcpa_energy::analysis::WorkloadAnalysis;
+use tcpa_energy::dse::{
+    dominates, explore, pareto_frontier, AnalysisCache, DesignSpace,
+    ExploreConfig,
+};
+use tcpa_energy::pra::ir::{IndexMap, Lhs, Op, Operand};
+use tcpa_energy::pra::{validate, Workload};
+use tcpa_energy::proptest_lite::{check, Rng};
+use tcpa_energy::workloads::{self, PraBuilder};
+
+#[test]
+fn frontier_contains_no_dominated_point_random() {
+    check(
+        "pareto-no-dominated",
+        0xD5E_0001,
+        200,
+        |r: &mut Rng| {
+            let n = r.i64_in(1, 12) as usize;
+            (0..n)
+                .map(|_| {
+                    // Small integer coordinates force plenty of ties and
+                    // duplicates — the degenerate cases.
+                    [
+                        r.i64_in(0, 4) as f64,
+                        r.i64_in(0, 4) as f64,
+                        r.i64_in(0, 4) as f64,
+                        r.i64_in(0, 4) as f64,
+                    ]
+                })
+                .collect::<Vec<[f64; 4]>>()
+        },
+        |objs| {
+            let frontier = pareto_frontier(objs);
+            if frontier.is_empty() {
+                return Err("frontier empty on non-empty input".into());
+            }
+            for &i in &frontier {
+                if let Some(j) =
+                    (0..objs.len()).find(|&j| dominates(&objs[j], &objs[i]))
+                {
+                    return Err(format!(
+                        "frontier point {i} {:?} dominated by {j} {:?}",
+                        objs[i], objs[j]
+                    ));
+                }
+            }
+            for i in 0..objs.len() {
+                if !frontier.contains(&i)
+                    && !frontier
+                        .iter()
+                        .any(|&f| dominates(&objs[f], &objs[i]))
+                {
+                    return Err(format!(
+                        "dropped point {i} {:?} dominated by no frontier \
+                         member",
+                        objs[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A 2-deep PRA that is its own mirror image under the dimension swap:
+/// one propagation + product + accumulation pipeline along each axis.
+/// (GESUMMV is *not* symmetric — one propagation along i0, two chains
+/// along i1 — which is exactly why the pruning soundness property needs
+/// a purpose-built workload.)
+fn sym2d() -> Workload {
+    let nd = 2;
+    let mut b = PraBuilder::new("sym2d", nd);
+    b.tensor("A", &[0, 1])
+        .tensor("B", &[1, 0])
+        .tensor("X", &[1])
+        .tensor("Yv", &[0])
+        .tensor("OutA", &[0])
+        .tensor("OutB", &[1]);
+    // Axis-0 pipeline: X propagates along i0, product, chain along i1.
+    b.propagate("x", "X", IndexMap::select(&[1], nd), 0);
+    // Axis-1 pipeline (mirror): Yv propagates along i1.
+    b.propagate("y", "Yv", IndexMap::select(&[0], nd), 1);
+    b.stmt(
+        Lhs::Var("a".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("A", IndexMap::identity(2, nd)),
+            Operand::var0("x", nd),
+        ],
+        vec![],
+    );
+    b.stmt(
+        Lhs::Var("c".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("B", IndexMap::identity(2, nd)),
+            Operand::var0("y", nd),
+        ],
+        vec![],
+    );
+    b.acc_chain("sa", "a", 1);
+    b.acc_chain("sc", "c", 0);
+    let top1 = b.eq_top(1);
+    b.stmt(
+        Lhs::Tensor { name: "OutA".into(), map: IndexMap::select(&[0], nd) },
+        Op::Copy,
+        vec![Operand::var0("sa", nd)],
+        top1,
+    );
+    let top0 = b.eq_top(0);
+    b.stmt(
+        Lhs::Tensor { name: "OutB".into(), map: IndexMap::select(&[1], nd) },
+        Op::Copy,
+        vec![Operand::var0("sc", nd)],
+        top0,
+    );
+    let pra = b.build();
+    assert!(validate(&pra).is_empty(), "{:?}", validate(&pra));
+    Workload::single(pra)
+}
+
+#[test]
+fn transposed_shapes_identical_energy_on_symmetric_workload() {
+    let wl = sym2d();
+    check(
+        "symmetric-transpose-energy",
+        0xD5E_0002,
+        12,
+        |r: &mut Rng| {
+            let a = r.i64_in(1, 4);
+            let b = r.i64_in(1, 4);
+            let n = 4 * r.i64_in(1, 4);
+            (a, b, n)
+        },
+        |&(a, b, n)| {
+            let ana_ab = WorkloadAnalysis::analyze_uniform(&wl, &[a, b]);
+            let ana_ba = WorkloadAnalysis::analyze_uniform(&wl, &[b, a]);
+            let e_ab =
+                ana_ab.energy_at(&[ana_ab.phases[0].params_for(&[n, n])]);
+            let e_ba =
+                ana_ba.energy_at(&[ana_ba.phases[0].params_for(&[n, n])]);
+            if e_ab.total.to_bits() != e_ba.total.to_bits() {
+                return Err(format!(
+                    "({a},{b}) vs ({b},{a}) at N={n}: {} != {}",
+                    e_ab.total, e_ba.total
+                ));
+            }
+            if e_ab.mem_pj != e_ba.mem_pj {
+                return Err(format!(
+                    "per-class breakdown differs: {:?} vs {:?}",
+                    e_ab.mem_pj, e_ba.mem_pj
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn symmetry_pruning_is_sound_on_symmetric_workload() {
+    // With pruning on, each transposed pair collapses to one point; the
+    // frontier loses no objective value because the mirror's energy is
+    // identical (above) and its PE count trivially so.
+    let wl = sym2d();
+    let full = DesignSpace::new().with_arrays_2d(6).with_bounds(vec![8, 8]);
+    let pruned = DesignSpace::new()
+        .with_arrays_2d(6)
+        .with_bounds(vec![8, 8])
+        .with_symmetry_pruning();
+    assert!(pruned.points().len() < full.points().len());
+    let res_full = explore(&wl, &full, &ExploreConfig::default());
+    let res_pruned = explore(&wl, &pruned, &ExploreConfig::default());
+    let best_full = res_full
+        .points
+        .iter()
+        .map(|p| p.energy_pj)
+        .min_by(f64::total_cmp)
+        .unwrap();
+    let best_pruned = res_pruned
+        .points
+        .iter()
+        .map(|p| p.energy_pj)
+        .min_by(f64::total_cmp)
+        .unwrap();
+    assert_eq!(best_full.to_bits(), best_pruned.to_bits());
+}
+
+#[test]
+fn cached_and_uncached_agree_bit_for_bit() {
+    let wl = workloads::by_name("gesummv").unwrap();
+    let cache = AnalysisCache::new();
+    check(
+        "cache-transparent",
+        0xD5E_0003,
+        10,
+        |r: &mut Rng| {
+            let t0 = r.i64_in(1, 3);
+            let t1 = r.i64_in(1, 3);
+            let n = 4 * r.i64_in(2, 6);
+            (t0, t1, n)
+        },
+        |&(t0, t1, n)| {
+            let (cached, _) = cache.get_or_analyze(&wl, &[t0, t1]);
+            let fresh = WorkloadAnalysis::analyze_uniform(&wl, &[t0, t1]);
+            let params = vec![cached.phases[0].params_for(&[n, n])];
+            let (ec, ef) =
+                (cached.energy_at(&params), fresh.energy_at(&params));
+            if ec.total.to_bits() != ef.total.to_bits() || ec != ef {
+                return Err(format!("energy differs: {ec:?} vs {ef:?}"));
+            }
+            if cached.counts_at(&params) != fresh.counts_at(&params) {
+                return Err("counts differ".into());
+            }
+            if cached.latency_at(&params) != fresh.latency_at(&params) {
+                return Err("latency differs".into());
+            }
+            Ok(())
+        },
+    );
+    // Every shape was looked up once cold, rest of the runs were hits or
+    // new shapes — all entries distinct.
+    assert!(cache.stats().entries <= 9);
+}
+
+#[test]
+fn exploration_deterministic_across_worker_counts() {
+    let wl = workloads::by_name("gesummv").unwrap();
+    let space = DesignSpace::new()
+        .with_arrays_2d(6)
+        .with_bounds_sweep(&[8, 16], 2);
+    let a = explore(&wl, &space, &ExploreConfig { workers: 1 });
+    let b = explore(&wl, &space, &ExploreConfig { workers: 4 });
+    assert_eq!(a.points.len(), b.points.len());
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.point, y.point, "order must not depend on workers");
+        assert_eq!(x.energy_pj.to_bits(), y.energy_pj.to_bits());
+        assert_eq!(x.dram_pj.to_bits(), y.dram_pj.to_bits());
+        assert_eq!(x.latency_cycles, y.latency_cycles);
+        assert_eq!(x.edp.to_bits(), y.edp.to_bits());
+    }
+    assert_eq!(a.frontier, b.frontier);
+    assert_eq!(a.groups, b.groups);
+    assert_eq!(a.knee, b.knee);
+}

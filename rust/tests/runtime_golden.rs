@@ -30,6 +30,13 @@ fn artifacts_dir() -> Option<&'static Path> {
 fn pjrt_artifacts_match_interpreter_and_simulator() {
     let Some(dir) = artifacts_dir() else { return };
     let mut rt = Runtime::new().expect("PJRT CPU client");
+    if rt.is_stub() {
+        eprintln!(
+            "PJRT backend not built (stub runtime) — rebuild with \
+             --features pjrt; skipping"
+        );
+        return;
+    }
     let loaded = rt.load_dir(dir).expect("loading artifacts");
     assert_eq!(loaded.len(), 10, "all ten artifacts load");
 
