@@ -15,6 +15,7 @@
 use tcpa_energy::dse::{
     explore_with_cache, AnalysisCache, DesignSpace, ExploreConfig,
 };
+use tcpa_energy::energy::Backend;
 use tcpa_energy::workloads;
 
 fn main() {
@@ -75,7 +76,45 @@ fn main() {
             100.0 * (best.energy_pj - serial.energy_pj) / serial.energy_pj
         );
     }
-    // Cache effect: the second and third sizes reused every analysis.
+    // Cross-architecture comparison (§VI): pricing a CGRA next to the
+    // TCPA is one more *scenario* on the same cached analyses — operand
+    // transport crosses the shared register file / crossbar instead of
+    // FD/ID registers, and the sweep reports one frontier per backend.
+    let space = DesignSpace::new()
+        .with_arrays_2d(64)
+        .with_bounds(vec![128, 128, 128])
+        .with_backends(vec![Backend::tcpa(), Backend::cgra()]);
+    let res =
+        explore_with_cache(&wl, &space, &ExploreConfig::default(), &cache);
+    println!("\nTCPA vs CGRA at N=128 (same symbolic volumes):");
+    for g in &res.groups {
+        let knee = g.knee.map(|i| &res.points[i]).expect("knee");
+        println!(
+            "  {:8} frontier {:2} points, knee {:>5} — {:.3e} pJ, {} cyc",
+            g.backend.name(),
+            g.frontier.len(),
+            knee.point.array_label(),
+            knee.energy_pj,
+            knee.latency_cycles
+        );
+    }
+    let energy_of = |name: &str, array: &[i64]| {
+        res.points
+            .iter()
+            .find(|p| {
+                p.point.backend.name() == name && p.point.array == array
+            })
+            .map(|p| p.energy_pj)
+            .expect("point")
+    };
+    let (t, c) = (energy_of("tcpa", &[8, 8]), energy_of("cgra", &[8, 8]));
+    println!(
+        "  8x8 array: CGRA transport costs {:+.1}% energy vs TCPA",
+        100.0 * (c - t) / t
+    );
+
+    // Cache effect: every size and backend after the first sweep reused
+    // the same per-shape analyses.
     let s = cache.stats();
     println!(
         "\ntotal symbolic analyses: {} (for {} evaluations — the O(1) \

@@ -12,7 +12,7 @@
 //! Emits `results/ablation_policies.csv`.
 
 use tcpa_energy::analysis::SymbolicAnalysis;
-use tcpa_energy::energy::{EnergyTable, Policy};
+use tcpa_energy::energy::{Backend, EnergyTable, Policy};
 use tcpa_energy::report::{write_csv, CsvTable};
 use tcpa_energy::tiling::ArrayMapping;
 use tcpa_energy::workloads;
@@ -44,13 +44,16 @@ fn main() {
             bounds[0] = 16; // sweeps
         }
         let params = ana.params_for(&bounds);
-        // ... many architectures.
+        // ... many architectures: the legacy policies as Backend
+        // descriptors, retabled per technology node.
         let base = ana
-            .energy_at_with(&params, Policy::Tcpa, &table45)
+            .energy_at_backend(&params, &Policy::Tcpa.backend(&table45))
             .total;
         for (node, table) in [("45nm", &table45), ("7nm", &table7)] {
             for policy in Policy::ALL {
-                let e = ana.energy_at_with(&params, policy, table).total;
+                let e = ana
+                    .energy_at_backend(&params, &policy.backend(table))
+                    .total;
                 println!(
                     "{name:<10} {n:>6} {:<9} {node:>6} {e:>16.3e} {:>9.2}x",
                     policy.label(),
@@ -66,12 +69,32 @@ fn main() {
                 ]);
             }
         }
-        // Shape assertions.
-        let tcpa = ana.energy_at_with(&params, Policy::Tcpa, &table45).total;
-        let nofd =
-            ana.energy_at_with(&params, Policy::NoFeedback, &table45).total;
+        // Shape assertions — including the cross-architecture builtins
+        // (tcpa ≤ systolic ≤ cgra ≤ gpu-sm, pointwise per access).
+        let priced: Vec<f64> = [
+            Backend::tcpa(),
+            Backend::systolic(),
+            Backend::cgra(),
+            Backend::gpu_sm(),
+        ]
+        .iter()
+        .map(|b| ana.energy_at_backend(&params, b).total)
+        .collect();
+        assert!(
+            priced.windows(2).all(|w| w[0] <= w[1]),
+            "{name}: builtin backend chain out of order: {priced:?}"
+        );
+        let tcpa = ana
+            .energy_at_backend(&params, &Policy::Tcpa.backend(&table45))
+            .total;
+        let nofd = ana
+            .energy_at_backend(&params, &Policy::NoFeedback.backend(&table45))
+            .total;
         let noreuse = ana
-            .energy_at_with(&params, Policy::NoLocalReuse, &table45)
+            .energy_at_backend(
+                &params,
+                &Policy::NoLocalReuse.backend(&table45),
+            )
             .total;
         assert!(nofd >= tcpa, "{name}: removing FD can't save energy");
         assert!(noreuse >= nofd, "{name}: removing all reuse is worse still");

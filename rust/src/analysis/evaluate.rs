@@ -1,10 +1,11 @@
 //! Concrete-parameter evaluation of a [`SymbolicAnalysis`]: total energy
-//! (Eq. 11) with per-memory-class breakdown, access/operation counts, and
-//! latency (Eq. 8).
+//! (Eq. 11) with per-memory-class breakdown, access/operation counts,
+//! latency (Eq. 8), and cross-architecture pricing via
+//! [`crate::energy::Backend`] descriptors.
 
 use std::collections::BTreeMap;
 
-use crate::energy::MemoryClass;
+use crate::energy::{Backend, MemoryClass};
 use crate::schedule::latency;
 
 use super::{SymbolicAnalysis, WorkloadAnalysis};
@@ -79,51 +80,77 @@ impl SymbolicAnalysis {
     /// Total energy `E_tot` (Eq. 11) with per-class breakdown, in pJ.
     pub fn energy_at(&self, params: &[i64]) -> EnergyBreakdown {
         let counts = self.counts_at(params);
-        let mut out = EnergyBreakdown::default();
-        for (&c, &n) in &counts.mem {
-            let e = n as f64 * self.table.access(c);
-            out.mem_pj.insert(c, e);
-            out.total += e;
-        }
-        out.compute_pj = counts.adds as f64 * self.table.add_pj
-            + counts.muls as f64 * self.table.mul_pj;
-        out.total += out.compute_pj;
-        out
+        self.price(&counts, &self.table)
     }
 
-
-    /// Total energy under an alternative architecture [`Policy`] and an
-    /// alternative [`crate::energy::EnergyTable`] — reusing the *same*
-    /// symbolic volumes (the §VI "comparison with other loop nest
-    /// accelerator architectures" use case; see `energy::policy`).
-    pub fn energy_at_with(
+    /// Access/operation counts at concrete parameters with every access
+    /// routed through `backend` — the *same* symbolic volumes, a
+    /// different register hierarchy (the §VI "comparison with other loop
+    /// nest accelerator architectures" use case; see `energy::backend`).
+    pub fn counts_at_backend(
         &self,
         params: &[i64],
-        policy: crate::energy::Policy,
-        table: &crate::energy::EnergyTable,
-    ) -> EnergyBreakdown {
-        let mut out = EnergyBreakdown::default();
+        backend: &Backend,
+    ) -> CountsBreakdown {
+        let mut out = CountsBreakdown::default();
         for s in &self.statements {
             let vol = s.volume.eval(params);
             if vol == 0 {
                 continue;
             }
+            out.executions += vol;
+            // Route each access straight into the aggregate map — no
+            // per-statement scratch map on this per-query hot path. The
+            // multiset equals `vol × route_counts(profile)` (exact
+            // integer arithmetic), so identity routing stays bitwise
+            // equal to [`Self::counts_at`].
             for r in s
                 .profile
                 .reads
                 .iter()
                 .chain(std::iter::once(&s.profile.write))
             {
-                for c in policy.memory_classes(*r) {
-                    let e = vol as f64 * table.access(c);
-                    *out.mem_pj.entry(c).or_insert(0.0) += e;
-                    out.total += e;
+                for &c in backend.route(*r) {
+                    *out.mem.entry(c).or_insert(0) += vol;
                 }
             }
-            let op_e = vol as f64 * table.op(s.profile.op);
-            out.compute_pj += op_e;
-            out.total += op_e;
+            out.adds += vol * s.profile.op_counts.0 as i128;
+            out.muls += vol * s.profile.op_counts.1 as i128;
         }
+        out
+    }
+
+    /// Total energy `E_tot` under an alternative architecture
+    /// [`Backend`] — same symbolic volumes, different routing and energy
+    /// table. For [`Backend::tcpa`] this is bit-for-bit identical to
+    /// [`Self::energy_at`] (identical counts, identical summation
+    /// order, identical Table-I values).
+    pub fn energy_at_backend(
+        &self,
+        params: &[i64],
+        backend: &Backend,
+    ) -> EnergyBreakdown {
+        let counts = self.counts_at_backend(params, backend);
+        self.price(&counts, &backend.table)
+    }
+
+    /// Price a counts breakdown against an energy table (the shared
+    /// arithmetic of [`Self::energy_at`] and [`Self::energy_at_backend`],
+    /// kept in one place so the two paths cannot drift bit-wise).
+    fn price(
+        &self,
+        counts: &CountsBreakdown,
+        table: &crate::energy::EnergyTable,
+    ) -> EnergyBreakdown {
+        let mut out = EnergyBreakdown::default();
+        for (&c, &n) in &counts.mem {
+            let e = n as f64 * table.access(c);
+            out.mem_pj.insert(c, e);
+            out.total += e;
+        }
+        out.compute_pj = counts.adds as f64 * table.add_pj
+            + counts.muls as f64 * table.mul_pj;
+        out.total += out.compute_pj;
         out
     }
 
@@ -155,6 +182,35 @@ impl WorkloadAnalysis {
         let mut out = EnergyBreakdown::default();
         for (ph, p) in self.phases.iter().zip(params) {
             out.merge(&ph.energy_at(p));
+        }
+        out
+    }
+
+    /// Counts summed over phases, routed through `backend`.
+    pub fn counts_at_backend(
+        &self,
+        params: &[Vec<i64>],
+        backend: &Backend,
+    ) -> CountsBreakdown {
+        assert_eq!(params.len(), self.phases.len());
+        let mut out = CountsBreakdown::default();
+        for (ph, p) in self.phases.iter().zip(params) {
+            out.merge(&ph.counts_at_backend(p, backend));
+        }
+        out
+    }
+
+    /// Energy summed over phases under an alternative [`Backend`] — one
+    /// symbolic analysis, many architectures.
+    pub fn energy_at_backend(
+        &self,
+        params: &[Vec<i64>],
+        backend: &Backend,
+    ) -> EnergyBreakdown {
+        assert_eq!(params.len(), self.phases.len());
+        let mut out = EnergyBreakdown::default();
+        for (ph, p) in self.phases.iter().zip(params) {
+            out.merge(&ph.energy_at_backend(p, backend));
         }
         out
     }
@@ -219,6 +275,46 @@ mod tests {
         let ratio = c2.mem[&MemoryClass::Dram] as f64
             / c1.mem[&MemoryClass::Dram] as f64;
         assert!((ratio - 4.0).abs() < 0.3, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn tcpa_backend_bit_identical_to_native_path() {
+        let ana = ana22();
+        let tcpa = Backend::tcpa();
+        for n in [[4i64, 5], [16, 16], [40, 24]] {
+            let params = ana.params_for(&n);
+            let native = ana.energy_at(&params);
+            let routed = ana.energy_at_backend(&params, &tcpa);
+            assert_eq!(native.total.to_bits(), routed.total.to_bits());
+            assert_eq!(native, routed);
+            assert_eq!(
+                ana.counts_at(&params),
+                ana.counts_at_backend(&params, &tcpa)
+            );
+        }
+    }
+
+    #[test]
+    fn one_analysis_prices_every_builtin_backend() {
+        // The §VI claim: the symbolic pass ran once (in ana22); pricing
+        // four architectures is pure expression evaluation.
+        let ana = ana22();
+        let params = ana.params_for(&[16, 16]);
+        let total = |name: &str| {
+            ana.energy_at_backend(&params, &Backend::by_name(name).unwrap())
+                .total
+        };
+        let (tcpa, systolic, cgra, gpu) = (
+            total("tcpa"),
+            total("systolic"),
+            total("cgra"),
+            total("gpu-sm"),
+        );
+        // GESUMMV has FD and ID traffic, so the pointwise access-energy
+        // chain becomes strict on totals.
+        assert!(tcpa < systolic, "{tcpa} vs {systolic}");
+        assert!(systolic < cgra, "{systolic} vs {cgra}");
+        assert!(cgra < gpu, "{cgra} vs {gpu}");
     }
 
     #[test]

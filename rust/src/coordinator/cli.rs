@@ -2,22 +2,30 @@
 //!
 //! ```text
 //! tcpa-energy list
+//! tcpa-energy backends
 //! tcpa-energy analyze  --workload gesummv --array 8x8 [--bounds 64,64] [--report]
 //! tcpa-energy simulate --workload gesummv --array 2x2 --bounds 8,8
 //! tcpa-energy validate [--workload NAME] [--bounds 8,8] [--array 2x2]
 //! tcpa-energy dse      --workload gemm --bounds 64,64 [--max-pes 64]
 //!                      [--arrays 1d|2d] [--bounds-sweep 32,64,128]
-//!                      [--tile-scales 1,2] [--policies all|tcpa,no-fd]
+//!                      [--tile-scales 1,2]
+//!                      [--backend all|tcpa,cgra,gpu-sm,systolic]
+//!                      [--policies all|tcpa,no-fd,no-reuse]   (legacy)
 //!                      [--prune-symmetric] [--workers N] [--out DIR]
 //! tcpa-energy figures  [--out results] [--quick]
 //! ```
+//!
+//! `backends` lists the built-in cross-architecture energy backends;
+//! `dse --backend` sweeps them as a first-class axis, emitting one Pareto
+//! frontier per (bounds, backend) scenario from a single symbolic
+//! analysis per array shape.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::analysis::SymbolicAnalysis;
 use crate::dse::{explore, DesignSpace, ExploreConfig};
-use crate::energy::{MemoryClass, Policy};
+use crate::energy::{AccessClass, Backend, MemoryClass, Policy};
 use crate::report::{
     ascii_chart, dse_frontier_markdown, write_csv, write_dse_report,
     CsvTable,
@@ -101,7 +109,8 @@ fn parse_vec(s: &str, sep: char) -> Result<Vec<i64>, CliError> {
 
 /// Run the CLI; returns the process exit code.
 pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
-    let usage = "tcpa-energy <list|analyze|simulate|validate|dse|figures> \
+    let usage = "tcpa-energy \
+                 <list|backends|analyze|simulate|validate|dse|figures> \
                  [flags]";
     let Some(cmd) = args.first() else {
         return Err(CliError::Usage(usage.into()));
@@ -117,6 +126,29 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                     .map(|p| format!("{} ({}D)", p.name, p.ndims))
                     .collect();
                 println!("  {:10} phases: {}", wl.name, phases.join(", "));
+            }
+            Ok(0)
+        }
+        "backends" => {
+            println!(
+                "built-in energy backends (one symbolic analysis prices \
+                 all of them; sweep with `dse --backend ...`):"
+            );
+            for b in Backend::builtins() {
+                println!("\n  {:10} {}", b.name(), b.description());
+                for class in AccessClass::ALL {
+                    let route: Vec<&str> = b
+                        .route(class)
+                        .iter()
+                        .map(|c| c.label())
+                        .collect();
+                    println!(
+                        "    {:10} -> {:16} {:>10.2} pJ/access",
+                        class.label(),
+                        route.join("+"),
+                        b.access_energy(class)
+                    );
+                }
             }
             Ok(0)
         }
@@ -331,6 +363,31 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 }
                 space = space.with_tile_scales(scales);
             }
+            if flags.contains_key("backend") && flags.contains_key("policies")
+            {
+                return Err(CliError::Usage(
+                    "--backend and --policies (legacy) are mutually \
+                     exclusive"
+                        .into(),
+                ));
+            }
+            if let Some(s) = flags.get("backend") {
+                let backends: Vec<Backend> = if s == "all" {
+                    Backend::builtins()
+                } else {
+                    s.split(',')
+                        .map(|l| {
+                            Backend::by_name(l.trim()).ok_or_else(|| {
+                                CliError::Usage(format!(
+                                    "unknown backend {l}; try `tcpa-energy \
+                                     backends` for the list, or `all`"
+                                ))
+                            })
+                        })
+                        .collect::<Result<_, _>>()?
+                };
+                space = space.with_backends(backends);
+            }
             if let Some(s) = flags.get("policies") {
                 let policies: Vec<Policy> = if s == "all" {
                     Policy::ALL.to_vec()
@@ -379,7 +436,7 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                     "  failed: {} bounds {:?} ({}, scale {}): {msg}",
                     p.array_label(),
                     p.bounds,
-                    p.policy.label(),
+                    p.backend.name(),
                     p.tile_scale
                 );
             }
@@ -393,7 +450,7 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                         "knee [bounds {:?}, {}]: {} ({} PEs, {:.1} pJ, \
                          {} cycles)",
                         g.bounds,
-                        g.policy.label(),
+                        g.backend.name(),
                         k.point.array_label(),
                         k.pes,
                         k.energy_pj,
@@ -578,6 +635,26 @@ mod tests {
     }
 
     #[test]
+    fn backends_listing_runs() {
+        assert_eq!(run_cli(&s(&["backends"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn dse_accepts_backend_axis() {
+        for sel in ["all", "tcpa,cgra", "gpu-sm,systolic"] {
+            assert_eq!(
+                run_cli(&s(&[
+                    "dse", "--workload", "gesummv", "--bounds", "8,8",
+                    "--max-pes", "2", "--backend", sel
+                ]))
+                .unwrap(),
+                0,
+                "--backend {sel} should sweep"
+            );
+        }
+    }
+
+    #[test]
     fn unknown_command_errors() {
         assert!(run_cli(&s(&["frobnicate"])).is_err());
         assert!(run_cli(&[]).is_err());
@@ -618,6 +695,11 @@ mod tests {
     fn dse_rejects_bad_flag_values_with_usage_errors() {
         for bad in [
             vec!["dse", "--workload", "gemm", "--policies", "bogus"],
+            vec!["dse", "--workload", "gemm", "--backend", "bogus"],
+            vec![
+                "dse", "--workload", "gemm", "--backend", "tcpa",
+                "--policies", "tcpa",
+            ],
             vec!["dse", "--workload", "gemm", "--tile-scales", "0"],
             vec!["dse", "--workload", "gemm", "--tile-scales", "1,x"],
             vec!["dse", "--workload", "gemm", "--workers", "abc"],

@@ -9,8 +9,8 @@
 //!
 //! Per point, the expensive symbolic pass is fetched from (or inserted
 //! into) the shared [`AnalysisCache`]; evaluating energy / latency /
-//! counts at the point's bounds, tile scale and policy is then just
-//! expression evaluation — microseconds, which is what makes wide
+//! counts at the point's bounds, tile scale and energy backend is then
+//! just expression evaluation — microseconds, which is what makes wide
 //! multi-axis sweeps tractable at all.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -19,7 +19,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::analysis::WorkloadAnalysis;
-use crate::energy::{MemoryClass, Policy};
+use crate::energy::{Backend, MemoryClass};
 use crate::pra::Workload;
 use crate::tiling::pad_bounds;
 
@@ -87,17 +87,17 @@ impl EvaluatedPoint {
     }
 }
 
-/// The Pareto frontier of one *scenario* — one (bounds, policy) pair.
+/// The Pareto frontier of one *scenario* — one (bounds, backend) pair.
 /// Dominance is only meaningful between points solving the same problem
 /// under the same energy interpretation: pooling scenarios would let the
 /// smallest bounds (cheaper in every objective) dominate every larger
-/// size, and the TCPA policy dominate every ablation.
+/// size, and the TCPA backend dominate every pricier architecture.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FrontierGroup {
     /// Loop bounds of this scenario.
     pub bounds: Vec<i64>,
-    /// Energy policy of this scenario.
-    pub policy: Policy,
+    /// Energy backend of this scenario.
+    pub backend: Backend,
     /// Indices into [`ExploreResult::points`] of the non-dominated
     /// points, in enumeration order.
     pub frontier: Vec<usize>,
@@ -112,7 +112,7 @@ pub struct ExploreResult {
     pub workload: String,
     /// Every surviving point, in deterministic space-enumeration order.
     pub points: Vec<EvaluatedPoint>,
-    /// One Pareto frontier per (bounds, policy) scenario, in first-seen
+    /// One Pareto frontier per (bounds, backend) scenario, in first-seen
     /// order.
     pub groups: Vec<FrontierGroup>,
     /// Union of all per-scenario frontiers (sorted indices into
@@ -193,19 +193,10 @@ fn evaluate(
     let ana = ana?;
     let analysis_ms = t0.elapsed().as_secs_f64() * 1e3;
     let params = phase_params(&ana, point);
-    let energy = match point.policy {
-        // The paper's model: the analysis's own fast path (bit-identical
-        // to the pre-subsystem serial sweep).
-        Policy::Tcpa => ana.energy_at(&params),
-        // Architecture ablations reuse the same symbolic volumes.
-        policy => {
-            let mut e = crate::analysis::EnergyBreakdown::default();
-            for (ph, p) in ana.phases.iter().zip(&params) {
-                e.merge(&ph.energy_at_with(p, policy, &ph.table));
-            }
-            e
-        }
-    };
+    // One symbolic analysis, any architecture: routing + pricing through
+    // the point's backend. For the TCPA backend this is bit-identical to
+    // the pre-backend `energy_at` fast path (see `analysis::evaluate`).
+    let energy = ana.energy_at_backend(&params, &point.backend);
     let latency_cycles = ana.latency_at(&params);
     Ok(EvaluatedPoint {
         pes: point.pes(),
@@ -308,14 +299,14 @@ pub fn explore_with_cache(
     let mut members: Vec<Vec<usize>> = Vec::new();
     for (i, p) in evaluated.iter().enumerate() {
         let pos = groups.iter().position(|g| {
-            g.bounds == p.point.bounds && g.policy == p.point.policy
+            g.bounds == p.point.bounds && g.backend == p.point.backend
         });
         match pos {
             Some(gi) => members[gi].push(i),
             None => {
                 groups.push(FrontierGroup {
                     bounds: p.point.bounds.clone(),
-                    policy: p.point.policy,
+                    backend: p.point.backend.clone(),
                     frontier: Vec::new(),
                     knee: None,
                 });
@@ -447,32 +438,59 @@ mod tests {
     }
 
     #[test]
-    fn policy_axis_orders_architectures() {
-        // Same volumes, pricier interpretations: TCPA ≤ no-FD ≤ no-reuse
-        // at every design point.
+    fn backend_axis_orders_architectures() {
+        // Same volumes, pricier interpretations: tcpa ≤ systolic ≤ cgra
+        // ≤ gpu-sm at every design point (pointwise per-access ordering
+        // of the built-in routing tables).
         let wl = workloads::by_name("gesummv").unwrap();
         let space = DesignSpace::new()
             .with_arrays(vec![vec![2, 2]])
             .with_bounds(vec![16, 16])
-            .with_policies(Policy::ALL.to_vec());
+            .with_backends(Backend::builtins());
         let res = explore(&wl, &space, &ExploreConfig::default());
-        assert_eq!(res.points.len(), 3);
-        // One scenario per policy: the ablations are compared, not
-        // dominated away by the cheaper TCPA interpretation.
-        assert_eq!(res.groups.len(), 3);
-        assert_eq!(res.frontier.len(), 3);
-        let by_policy = |pol: Policy| {
+        assert_eq!(res.points.len(), 4);
+        // One scenario per backend: the architectures are compared, not
+        // dominated away by the cheapest interpretation.
+        assert_eq!(res.groups.len(), 4);
+        assert_eq!(res.frontier.len(), 4);
+        let by_backend = |name: &str| {
             res.points
                 .iter()
-                .find(|p| p.point.policy == pol)
+                .find(|p| p.point.backend.name() == name)
                 .unwrap()
                 .energy_pj
         };
-        let tcpa = by_policy(Policy::Tcpa);
-        let nofd = by_policy(Policy::NoFeedback);
-        let noreuse = by_policy(Policy::NoLocalReuse);
-        assert!(tcpa < nofd, "{tcpa} vs {nofd}");
-        assert!(nofd <= noreuse, "{nofd} vs {noreuse}");
+        let (tcpa, systolic, cgra, gpu) = (
+            by_backend("tcpa"),
+            by_backend("systolic"),
+            by_backend("cgra"),
+            by_backend("gpu-sm"),
+        );
+        assert!(tcpa < systolic, "{tcpa} vs {systolic}");
+        assert!(systolic < cgra, "{systolic} vs {cgra}");
+        assert!(cgra < gpu, "{cgra} vs {gpu}");
+    }
+
+    #[test]
+    fn legacy_policy_axis_still_explores() {
+        // The deprecated closed-enum axis rides on the backend machinery.
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = DesignSpace::new()
+            .with_arrays(vec![vec![2, 2]])
+            .with_bounds(vec![16, 16])
+            .with_policies(crate::energy::Policy::ALL.to_vec());
+        let res = explore(&wl, &space, &ExploreConfig::default());
+        assert_eq!(res.points.len(), 3);
+        assert_eq!(res.groups.len(), 3);
+        let by_name = |name: &str| {
+            res.points
+                .iter()
+                .find(|p| p.point.backend.name() == name)
+                .unwrap()
+                .energy_pj
+        };
+        assert!(by_name("tcpa") < by_name("no-fd"));
+        assert!(by_name("no-fd") <= by_name("no-reuse"));
     }
 
     #[test]

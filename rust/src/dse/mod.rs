@@ -4,13 +4,15 @@
 //! architectural configurations is *cheap*: the expensive tiling /
 //! scheduling / counting pass runs once per (workload, array shape), and
 //! every further query — different loop bounds, tile sizes, or energy
-//! policies — is a handful of expression evaluations. This module turns
+//! backends — is a handful of expression evaluations. This module turns
 //! that observation into a real exploration subsystem:
 //!
 //! * [`space`] — the **design-space model**: multi-axis spaces over 1-D /
-//!   2-D array shapes, tile-size scales, [`crate::energy::Policy`]
-//!   variants and loop-bound grids, with PE-budget, fits-the-problem and
-//!   opt-in transposition-symmetry pruning.
+//!   2-D array shapes, tile-size scales, cross-architecture
+//!   [`crate::energy::Backend`] descriptors (TCPA / CGRA / GPU-SM /
+//!   systolic, or custom) and loop-bound grids, with PE-budget,
+//!   fits-the-problem and opt-in transposition-symmetry pruning. Each
+//!   backend is its own comparison scenario with its own Pareto frontier.
 //! * [`cache`] — the **analysis cache**: memoizes
 //!   [`crate::analysis::WorkloadAnalysis::analyze_uniform`] per
 //!   (workload, array) key, so bounds/tile/policy sweeps over an

@@ -1,11 +1,13 @@
 //! The design-space model: which (array shape, loop bounds, tile scale,
-//! energy policy) combinations a sweep covers, and which of them pruning
+//! energy backend) combinations a sweep covers, and which of them pruning
 //! removes before any analysis runs.
 
-use crate::energy::Policy;
+use std::collections::HashSet;
+
+use crate::energy::{Backend, Policy};
 
 /// One candidate configuration, prior to evaluation.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DesignPoint {
     /// Array shape `t` (1-D or 2-D here; deeper phases are padded with
     /// `t = 1` by the analysis, exactly as `analyze_uniform` does).
@@ -19,8 +21,8 @@ pub struct DesignPoint {
     /// traffic, longer per-PE chains) while staying inside the analysis
     /// context `1 ≤ p_ℓ ≤ N_ℓ`.
     pub tile_scale: i64,
-    /// Energy-interpretation policy (architecture ablation).
-    pub policy: Policy,
+    /// Cross-architecture energy backend (routing + energy table).
+    pub backend: Backend,
 }
 
 impl DesignPoint {
@@ -43,15 +45,16 @@ impl DesignPoint {
 /// enumerate concrete points with [`DesignSpace::points`].
 #[derive(Debug, Clone)]
 pub struct DesignSpace {
-    /// Candidate array shapes.
+    /// Candidate array shapes. Duplicates (e.g. from repeated `with_*`
+    /// calls) are skipped once by [`DesignSpace::points`].
     pub arrays: Vec<Vec<i64>>,
     /// Loop-bound vectors to sweep (the cheap axis: cached analyses are
     /// reused across every entry).
     pub bounds_grid: Vec<Vec<i64>>,
     /// Tile-size scales (see [`DesignPoint::tile_scale`]).
     pub tile_scales: Vec<i64>,
-    /// Energy policies to compare.
-    pub policies: Vec<Policy>,
+    /// Energy backends to compare (per-backend Pareto frontiers).
+    pub backends: Vec<Backend>,
     /// PE budget: shapes with more PEs are pruned.
     pub max_pes: Option<i64>,
     /// Prune transposed duplicates `(b,a)` when `(a,b)` is enumerated.
@@ -70,25 +73,25 @@ impl Default for DesignSpace {
 
 impl DesignSpace {
     /// An empty space: no arrays, no bounds, exact-cover tiles, the
-    /// paper's TCPA policy.
+    /// paper's TCPA backend.
     pub fn new() -> Self {
         DesignSpace {
             arrays: Vec::new(),
             bounds_grid: Vec::new(),
             tile_scales: vec![1],
-            policies: vec![Policy::Tcpa],
+            backends: vec![Backend::tcpa()],
             max_pes: None,
             prune_symmetric: false,
         }
     }
 
-    /// All 2-D shapes `(t0, t1)` with `t0·t1 ≤ max_pes`.
+    /// All 2-D shapes `(t0, t1)` with `t0·t1 ≤ max_pes`. The inner loop
+    /// is bounded by `max_pes / t0`, so enumeration is O(budget·log)
+    /// harmonic-sum work instead of the full `max_pes²` grid.
     pub fn with_arrays_2d(mut self, max_pes: i64) -> Self {
         for t0 in 1..=max_pes {
-            for t1 in 1..=max_pes {
-                if t0 * t1 <= max_pes {
-                    self.arrays.push(vec![t0, t1]);
-                }
+            for t1 in 1..=(max_pes / t0) {
+                self.arrays.push(vec![t0, t1]);
             }
         }
         self.max_pes = Some(max_pes);
@@ -138,10 +141,21 @@ impl DesignSpace {
         self
     }
 
-    /// Energy policies to compare (default `[Policy::Tcpa]`).
-    pub fn with_policies(mut self, policies: Vec<Policy>) -> Self {
-        self.policies = policies;
+    /// Energy backends to compare (default `[Backend::tcpa()]`); each
+    /// backend becomes its own comparison scenario with its own Pareto
+    /// frontier.
+    pub fn with_backends(mut self, backends: Vec<Backend>) -> Self {
+        self.backends = backends;
         self
+    }
+
+    /// Legacy [`Policy`] axis, priced against Table I — converts the
+    /// policies into the equivalent [`Backend`] descriptors.
+    pub fn with_policies(self, policies: Vec<Policy>) -> Self {
+        let table = crate::energy::EnergyTable::table1_45nm();
+        self.with_backends(
+            policies.iter().map(|p| p.backend(&table)).collect(),
+        )
     }
 
     /// PE budget (also set by `with_arrays_2d`/`with_arrays_1d`).
@@ -195,13 +209,17 @@ impl DesignSpace {
 
     /// Enumerate the concrete design points, pruning applied, in a
     /// deterministic order (arrays outermost, so consecutive points share
-    /// cached analyses; then bounds, tile scales, policies). An empty
-    /// axis (no arrays, e.g. a zero PE budget, or no bounds) yields an
-    /// empty sweep, matching the old serial `dse_sweep` behavior.
+    /// cached analyses; then bounds, tile scales, backends). Duplicate
+    /// shapes — e.g. pushed by repeated `with_arrays*` calls — are
+    /// enumerated once (first occurrence wins), so the explorer never
+    /// analyzes the same configuration twice. An empty axis (no arrays,
+    /// e.g. a zero PE budget, or no bounds) yields an empty sweep,
+    /// matching the old serial `dse_sweep` behavior.
     pub fn points(&self) -> Vec<DesignPoint> {
         let mut out = Vec::new();
+        let mut seen: HashSet<&[i64]> = HashSet::new();
         for array in &self.arrays {
-            if !self.keep_array(array) {
+            if !seen.insert(array.as_slice()) || !self.keep_array(array) {
                 continue;
             }
             for bounds in &self.bounds_grid {
@@ -211,12 +229,12 @@ impl DesignSpace {
                     continue;
                 }
                 for &tile_scale in &self.tile_scales {
-                    for &policy in &self.policies {
+                    for backend in &self.backends {
                         out.push(DesignPoint {
                             array: array.clone(),
                             bounds: bounds.clone(),
                             tile_scale,
-                            policy,
+                            backend: backend.clone(),
                         });
                     }
                 }
@@ -242,6 +260,43 @@ mod tests {
         assert!(pts.iter().any(|p| p.array == vec![1, 1]));
         assert!(pts.iter().any(|p| p.array == vec![8, 1]));
         assert!(!pts.iter().any(|p| p.array == vec![3, 3]));
+    }
+
+    #[test]
+    fn two_d_enumeration_never_visits_over_budget_shapes() {
+        // The harmonic-sum enumeration must produce exactly the shapes
+        // with t0·t1 ≤ budget — Σ_t0 ⌊budget/t0⌋ of them — without ever
+        // materializing the quadratic grid.
+        for budget in [1i64, 2, 7, 16] {
+            let s = DesignSpace::new().with_arrays_2d(budget);
+            let expect: i64 = (1..=budget).map(|t0| budget / t0).sum();
+            assert_eq!(s.arrays.len() as i64, expect, "budget {budget}");
+            assert!(s
+                .arrays
+                .iter()
+                .all(|a| a[0] * a[1] <= budget));
+        }
+        assert!(DesignSpace::new().with_arrays_2d(0).arrays.is_empty());
+    }
+
+    #[test]
+    fn duplicate_shapes_enumerate_once() {
+        // Repeated with_arrays* calls must not make the explorer analyze
+        // the same configuration twice.
+        let s = DesignSpace::new()
+            .with_arrays(vec![vec![2, 2], vec![4, 1]])
+            .with_arrays(vec![vec![2, 2]])
+            .with_arrays_2d(4)
+            .with_bounds(vec![8, 8]);
+        let pts = s.points();
+        let mut labels: Vec<String> =
+            pts.iter().map(|p| p.array_label()).collect();
+        let before = labels.len();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), before, "duplicate design points emitted");
+        // First occurrence wins: the explicit (2,2) leads the order.
+        assert_eq!(pts[0].array, vec![2, 2]);
     }
 
     #[test]
@@ -291,8 +346,21 @@ mod tests {
             .with_arrays(vec![vec![2, 2]])
             .with_bounds_sweep(&[8, 16], 2)
             .with_tile_scales(vec![1, 2])
+            .with_backends(Backend::builtins());
+        assert_eq!(s.points().len(), 2 * 2 * 4);
+    }
+
+    #[test]
+    fn legacy_policy_axis_maps_to_backends() {
+        let s = DesignSpace::new()
+            .with_arrays(vec![vec![2, 2]])
+            .with_bounds(vec![8, 8])
             .with_policies(Policy::ALL.to_vec());
-        assert_eq!(s.points().len(), 2 * 2 * 3);
+        let pts = s.points();
+        assert_eq!(pts.len(), 3);
+        let names: Vec<&str> =
+            pts.iter().map(|p| p.backend.name()).collect();
+        assert_eq!(names, vec!["tcpa", "no-fd", "no-reuse"]);
     }
 
     #[test]
@@ -309,7 +377,7 @@ mod tests {
             array: vec![8, 4],
             bounds: vec![64, 64],
             tile_scale: 1,
-            policy: Policy::Tcpa,
+            backend: Backend::tcpa(),
         };
         assert_eq!(p.array_label(), "8x4");
         assert_eq!(p.pes(), 32);

@@ -1,0 +1,335 @@
+//! Pluggable cross-architecture energy **backends** (the §VI use case:
+//! "comparisons with other loop nest accelerator architectures").
+//!
+//! A [`Backend`] bundles everything the energy model needs to price a
+//! mapped loop nest on one accelerator family:
+//!
+//! * a **name** (the CLI / report identity),
+//! * an [`EnergyTable`] of per-access and per-operation costs, and
+//! * a **routing table** `AccessClass → [MemoryClass]`: which memory
+//!   structures one access of each class actually touches on that
+//!   architecture.
+//!
+//! The symbolic volumes of a [`crate::analysis::SymbolicAnalysis`] are
+//! *mapping* properties — they do not depend on the register hierarchy.
+//! Only the interpretation of each access changes between architectures,
+//! which is why one symbolic pass prices every backend (cf. the
+//! CGRAs-vs-TCPAs comparison of Walter et al., arXiv:2502.12062, and the
+//! table-driven per-target models of EnergyAnalyzer, arXiv:2305.14968).
+//!
+//! Built-in descriptors, all priced against Table I unless retabled with
+//! [`Backend::with_table`]:
+//!
+//! * [`Backend::tcpa`] — the paper's TCPA register hierarchy, an exact
+//!   Table-I reproduction (identity routing). Bit-for-bit equal to the
+//!   pre-backend `energy_at` fast path.
+//! * [`Backend::cgra`] — a CGRA tile cluster: there are no dedicated
+//!   feedback registers or point-to-point neighbour links; every
+//!   transported operand (PE-local inter-iteration *and* neighbour data)
+//!   is driven through an output port onto the crossbar, staged in the
+//!   shared register file, and read back through an input port
+//!   (`FD/ID → OD + RD + ID`), per arXiv:2502.12062 §IV.
+//! * [`Backend::gpu_sm`] — a GPU-streaming-multiprocessor-like target:
+//!   no feedback registers; transported operands stage through the
+//!   on-chip shared memory (our `IOb` class) with a write + read-back
+//!   round trip into a general-purpose register
+//!   (`FD/ID → IOb + IOb + RD`).
+//! * [`Backend::systolic`] — a pure systolic array: ID-only neighbour
+//!   transport. Values never sit in feedback registers; a PE-local
+//!   inter-iteration value is pumped through the neighbour datapath each
+//!   beat (`FD → OD + ID`); neighbour data lands in an input register
+//!   exactly as on the TCPA.
+//!
+//! With Table-I energies the built-ins are pointwise ordered per access:
+//! `tcpa ≤ systolic ≤ cgra ≤ gpu-sm` — so total energies inherit the
+//! same order at every design point, which the DSE property tests pin.
+//!
+//! Custom architectures are plain values: start from [`Backend::new`]
+//! (identity routing) and override routes/tables:
+//!
+//! ```
+//! use tcpa_energy::energy::{AccessClass, Backend, EnergyTable, MemoryClass};
+//! // A register-poor tile: local reuse spills to the I/O buffer.
+//! let b = Backend::new("reg-poor", EnergyTable::table1_45nm())
+//!     .with_route(
+//!         AccessClass::Fd,
+//!         &[MemoryClass::IOb, MemoryClass::IOb, MemoryClass::Rd],
+//!     );
+//! assert!(b.access_energy(AccessClass::Fd) > 32.0);
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::classify::{AccessClass, AccessProfile};
+use super::table::{EnergyTable, MemoryClass};
+
+/// One accelerator-architecture descriptor: name + energy table +
+/// access-class routing. Identity (for scenario grouping, report columns
+/// and `PartialEq`) is the full value — two backends differing only in
+/// their table are distinct scenarios.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Backend {
+    name: String,
+    /// Per-access / per-operation energies of this architecture.
+    pub table: EnergyTable,
+    /// One-line description (shown by the CLI `backends` listing).
+    description: String,
+    /// `routes[AccessClass::index()]` = memory classes one access of that
+    /// class touches on this architecture.
+    routes: [Vec<MemoryClass>; 5],
+}
+
+impl Backend {
+    /// A backend with identity routing (the TCPA `L(x)` table) and the
+    /// given energy table. Override routes with [`Backend::with_route`].
+    pub fn new(name: impl Into<String>, table: EnergyTable) -> Self {
+        let routes: [Vec<MemoryClass>; 5] = AccessClass::ALL
+            .map(|c| c.memory_classes().to_vec());
+        Backend {
+            name: name.into(),
+            table,
+            description: String::new(),
+            routes,
+        }
+    }
+
+    /// The paper's TCPA register hierarchy — exact Table-I reproduction.
+    pub fn tcpa() -> Self {
+        Backend::new("tcpa", EnergyTable::table1_45nm()).with_description(
+            "TCPA register hierarchy (paper Table I): FD for PE-local \
+             reuse, ID for neighbour data",
+        )
+    }
+
+    /// CGRA tile cluster (arXiv:2502.12062 §IV): all operand transport
+    /// goes through the shared register file / crossbar instead of
+    /// dedicated FD registers or point-to-point ID links.
+    pub fn cgra() -> Self {
+        let xbar: &[MemoryClass] =
+            &[MemoryClass::Od, MemoryClass::Rd, MemoryClass::Id];
+        Backend::new("cgra", EnergyTable::table1_45nm())
+            .with_description(
+                "CGRA: transported operands cross the shared register \
+                 file / crossbar (OD+RD+ID) instead of FD/ID",
+            )
+            .with_route(AccessClass::Fd, xbar)
+            .with_route(AccessClass::Id, xbar)
+    }
+
+    /// GPU-SM-like target: shared-memory staging, no feedback registers.
+    pub fn gpu_sm() -> Self {
+        let smem: &[MemoryClass] =
+            &[MemoryClass::IOb, MemoryClass::IOb, MemoryClass::Rd];
+        Backend::new("gpu-sm", EnergyTable::table1_45nm())
+            .with_description(
+                "GPU-SM-like: transported operands round-trip the shared \
+                 memory (IOb+IOb+RD); no feedback registers",
+            )
+            .with_route(AccessClass::Fd, smem)
+            .with_route(AccessClass::Id, smem)
+    }
+
+    /// Pure systolic array: ID-only neighbour transport; stationary
+    /// values are pumped through the neighbour datapath each beat.
+    pub fn systolic() -> Self {
+        Backend::new("systolic", EnergyTable::table1_45nm())
+            .with_description(
+                "systolic: no feedback registers, PE-local reuse is \
+                 pumped through the neighbour datapath (OD+ID)",
+            )
+            .with_route(
+                AccessClass::Fd,
+                &[MemoryClass::Od, MemoryClass::Id],
+            )
+    }
+
+    /// All built-in backends, in CLI-listing order.
+    pub fn builtins() -> Vec<Backend> {
+        vec![
+            Backend::tcpa(),
+            Backend::cgra(),
+            Backend::gpu_sm(),
+            Backend::systolic(),
+        ]
+    }
+
+    /// Look up a built-in backend by its name.
+    pub fn by_name(name: &str) -> Option<Backend> {
+        Backend::builtins().into_iter().find(|b| b.name == name)
+    }
+
+    /// The backend's identity / report label.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// One-line description for listings.
+    pub fn description(&self) -> &str {
+        &self.description
+    }
+
+    /// Replace the description.
+    pub fn with_description(mut self, d: impl Into<String>) -> Self {
+        self.description = d.into();
+        self
+    }
+
+    /// Replace the energy table (e.g. a technology-scaled projection).
+    pub fn with_table(mut self, table: EnergyTable) -> Self {
+        self.table = table;
+        self
+    }
+
+    /// Override the memory classes one access of `class` touches.
+    pub fn with_route(
+        mut self,
+        class: AccessClass,
+        route: &[MemoryClass],
+    ) -> Self {
+        self.routes[class.index()] = route.to_vec();
+        self
+    }
+
+    /// Memory classes one access of `class` touches on this backend.
+    pub fn route(&self, class: AccessClass) -> &[MemoryClass] {
+        &self.routes[class.index()]
+    }
+
+    /// Energy of one access of `class`, in pJ, under this backend's
+    /// routing and table.
+    pub fn access_energy(&self, class: AccessClass) -> f64 {
+        self.route(class).iter().map(|&c| self.table.access(c)).sum()
+    }
+
+    /// Per-execution memory-access counts of one statement profile, by
+    /// class, routed through this backend. For [`Backend::tcpa`] this
+    /// reproduces [`AccessProfile::mem_counts`] exactly (same
+    /// construction). The per-query analysis path accumulates routes
+    /// directly (`analysis::evaluate::counts_at_backend`) instead of
+    /// materializing this map per statement; this helper is the
+    /// one-statement reference view.
+    pub fn route_counts(
+        &self,
+        profile: &AccessProfile,
+    ) -> BTreeMap<MemoryClass, u32> {
+        let mut counts: BTreeMap<MemoryClass, u32> = BTreeMap::new();
+        for r in profile.reads.iter().chain(std::iter::once(&profile.write))
+        {
+            for &c in self.route(*r) {
+                *counts.entry(c).or_insert(0) += 1;
+            }
+        }
+        counts
+    }
+
+    /// Per-execution energy `E_q` of one statement profile (Eq. 9/10
+    /// with this backend's routing and table), in pJ.
+    pub fn stmt_energy(&self, profile: &AccessProfile) -> f64 {
+        profile
+            .reads
+            .iter()
+            .map(|&r| self.access_energy(r))
+            .sum::<f64>()
+            + self.table.op(profile.op)
+            + self.access_energy(profile.write)
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcpa_routes_are_identity() {
+        let b = Backend::tcpa();
+        for c in AccessClass::ALL {
+            assert_eq!(b.route(c), c.memory_classes());
+            assert_eq!(
+                b.access_energy(c),
+                c.energy(&EnergyTable::table1_45nm())
+            );
+        }
+    }
+
+    #[test]
+    fn builtin_access_energies_pointwise_ordered() {
+        // tcpa ≤ systolic ≤ cgra ≤ gpu-sm per access class — the chain
+        // that makes total energies comparable at every design point.
+        let chain = [
+            Backend::tcpa(),
+            Backend::systolic(),
+            Backend::cgra(),
+            Backend::gpu_sm(),
+        ];
+        for w in chain.windows(2) {
+            for c in AccessClass::ALL {
+                assert!(
+                    w[0].access_energy(c) <= w[1].access_energy(c),
+                    "{} > {} on {c:?}",
+                    w[0].name(),
+                    w[1].name()
+                );
+            }
+        }
+        // Strict where the architectures actually differ.
+        assert!(
+            Backend::systolic().access_energy(AccessClass::Fd)
+                > Backend::tcpa().access_energy(AccessClass::Fd)
+        );
+        assert!(
+            Backend::gpu_sm().access_energy(AccessClass::Id)
+                > Backend::cgra().access_energy(AccessClass::Id)
+        );
+    }
+
+    #[test]
+    fn builtin_names_unique_and_resolvable() {
+        let all = Backend::builtins();
+        assert_eq!(all.len(), 4);
+        for b in &all {
+            assert_eq!(
+                Backend::by_name(b.name()).as_ref(),
+                Some(b),
+                "{} must round-trip through by_name",
+                b.name()
+            );
+            assert!(!b.description().is_empty());
+        }
+        assert!(Backend::by_name("not-a-backend").is_none());
+    }
+
+    #[test]
+    fn route_counts_identity_matches_profile_counts() {
+        use crate::tiling::{tile_pra, ArrayMapping};
+        use crate::workloads::gesummv::gesummv;
+        let pra = gesummv();
+        let tiled = tile_pra(&pra, &ArrayMapping::new(vec![2, 2]));
+        let b = Backend::tcpa();
+        for ts in &tiled.statements {
+            let p = AccessProfile::of(&pra.statements[ts.stmt_index], ts);
+            assert_eq!(b.route_counts(&p), p.mem_counts, "{}", ts.name);
+        }
+    }
+
+    #[test]
+    fn custom_route_and_table_compose() {
+        let scaled = EnergyTable::table1_45nm().scaled(0.3, 0.12);
+        let b = Backend::new("custom", EnergyTable::table1_45nm())
+            .with_route(AccessClass::Fd, &[MemoryClass::Rd, MemoryClass::Rd])
+            .with_table(scaled.clone());
+        assert_eq!(
+            b.route(AccessClass::Fd),
+            &[MemoryClass::Rd, MemoryClass::Rd]
+        );
+        let expect = 2.0 * scaled.access(MemoryClass::Rd);
+        assert!((b.access_energy(AccessClass::Fd) - expect).abs() < 1e-12);
+        assert_eq!(b.to_string(), "custom");
+    }
+}

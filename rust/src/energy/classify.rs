@@ -24,6 +24,33 @@ pub enum AccessClass {
 }
 
 impl AccessClass {
+    /// All access classes, in `L(x)`-table order. The index of a class in
+    /// this array is the routing-table index used by
+    /// [`crate::energy::Backend`].
+    pub const ALL: [AccessClass; 5] = [
+        AccessClass::InputStream,
+        AccessClass::OutputStream,
+        AccessClass::Rd,
+        AccessClass::Fd,
+        AccessClass::Id,
+    ];
+
+    /// Position of this class in [`AccessClass::ALL`].
+    pub fn index(self) -> usize {
+        AccessClass::ALL.iter().position(|&c| c == self).unwrap()
+    }
+
+    /// Short label (for CLI listings).
+    pub fn label(&self) -> &'static str {
+        match self {
+            AccessClass::InputStream => "in-stream",
+            AccessClass::OutputStream => "out-stream",
+            AccessClass::Rd => "RD",
+            AccessClass::Fd => "FD",
+            AccessClass::Id => "ID",
+        }
+    }
+
     /// Memory classes touched by one access of this kind.
     pub fn memory_classes(&self) -> &'static [MemoryClass] {
         match self {

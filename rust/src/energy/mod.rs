@@ -1,11 +1,14 @@
 //! The energy model of §IV-A: Table I per-access/per-operation costs, the
-//! access-location classifier `L(x)`, and per-statement energy profiles
-//! (Eq. 9/10).
+//! access-location classifier `L(x)`, per-statement energy profiles
+//! (Eq. 9/10), and pluggable cross-architecture [`Backend`] descriptors
+//! (§VI comparisons).
 
+pub mod backend;
 pub mod classify;
 pub mod policy;
 pub mod table;
 
+pub use backend::Backend;
 pub use classify::{classify_displacement, AccessClass, AccessProfile};
 pub use policy::Policy;
 pub use table::{EnergyTable, MemoryClass};

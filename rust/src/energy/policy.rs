@@ -20,7 +20,14 @@
 //! properties and stay identical — which is exactly why the symbolic
 //! volumes can be reused across policies (one analysis, many
 //! architectures).
+//!
+//! `Policy` is the **legacy closed enum**; the open-ended successor is
+//! [`crate::energy::Backend`], which additionally bundles a per-target
+//! [`EnergyTable`] and arbitrary routing. [`Policy::backend`] converts a
+//! policy into the equivalent descriptor; new code (the `dse` sweep axis,
+//! the CLI `--backend` flag) speaks backends directly.
 
+use super::backend::Backend;
 use super::classify::AccessClass;
 use super::table::{EnergyTable, MemoryClass};
 
@@ -71,6 +78,31 @@ impl Policy {
             .map(|&c| table.access(c))
             .sum()
     }
+
+    /// The equivalent [`Backend`] descriptor: this policy's routing,
+    /// priced against `table`. `Policy::Tcpa` converts to the built-in
+    /// [`Backend::tcpa`] (retabled), so legacy sweeps land in the same
+    /// scenario group as the new default axis.
+    pub fn backend(&self, table: &EnergyTable) -> Backend {
+        let mut b = match self {
+            // Keep the built-in name/description (retabled) so legacy
+            // sweeps land in the same scenario group as the new axis.
+            Policy::Tcpa => Backend::tcpa().with_table(table.clone()),
+            Policy::NoFeedback => Backend::new(self.label(), table.clone())
+                .with_description(
+                    "legacy policy: FD accesses become IOb round trips",
+                ),
+            Policy::NoLocalReuse => Backend::new(self.label(), table.clone())
+                .with_description(
+                    "legacy policy: FD and neighbour-ID accesses become \
+                     IOb round trips",
+                ),
+        };
+        for class in AccessClass::ALL {
+            b = b.with_route(class, &self.memory_classes(class));
+        }
+        b
+    }
 }
 
 #[cfg(test)]
@@ -108,5 +140,31 @@ mod tests {
                 AccessClass::InputStream.energy(&t)
             );
         }
+    }
+
+    #[test]
+    fn backend_conversion_preserves_routing_and_energies() {
+        for scale in [1.0, 0.3] {
+            let t = EnergyTable::table1_45nm().scaled(scale, scale);
+            for p in Policy::ALL {
+                let b = p.backend(&t);
+                for class in AccessClass::ALL {
+                    assert_eq!(
+                        b.route(class),
+                        p.memory_classes(class).as_slice(),
+                        "{} route for {class:?}",
+                        p.label()
+                    );
+                    assert_eq!(
+                        b.access_energy(class).to_bits(),
+                        p.access_energy(class, &t).to_bits(),
+                        "{} energy for {class:?}",
+                        p.label()
+                    );
+                }
+            }
+        }
+        let t45 = EnergyTable::table1_45nm();
+        assert_eq!(Policy::Tcpa.backend(&t45).name(), "tcpa");
     }
 }

@@ -17,7 +17,7 @@ fn point_row(p: &EvaluatedPoint, on_frontier: bool, knee: bool) -> Vec<String> {
         p.pes.to_string(),
         fmt_bounds(&p.point.bounds),
         p.point.tile_scale.to_string(),
-        p.point.policy.label().to_string(),
+        p.point.backend.name().to_string(),
         format!("{:.3}", p.energy_pj),
         format!("{:.3}", p.dram_pj),
         p.latency_cycles.to_string(),
@@ -32,7 +32,7 @@ const HEADER: [&str; 11] = [
     "pes",
     "bounds",
     "tile_scale",
-    "policy",
+    "backend",
     "energy_pj",
     "dram_pj",
     "latency_cycles",
@@ -67,7 +67,7 @@ pub fn dse_frontier_table(res: &ExploreResult) -> CsvTable {
 }
 
 /// Markdown rendering: a run summary plus one frontier table per
-/// (bounds, policy) scenario.
+/// (bounds, backend) scenario.
 pub fn dse_frontier_markdown(res: &ExploreResult) -> String {
     use std::fmt::Write as _;
     let mut out = format!(
@@ -86,9 +86,9 @@ pub fn dse_frontier_markdown(res: &ExploreResult) -> String {
         }
         let _ = write!(
             out,
-            "\n### bounds {} · policy {}\n\n{}",
+            "\n### bounds {} · backend {}\n\n{}",
             fmt_bounds(&g.bounds),
-            g.policy.label(),
+            g.backend.name(),
             t.to_markdown()
         );
     }

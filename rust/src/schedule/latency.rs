@@ -35,17 +35,22 @@ pub fn critical_chain(pra: &Pra) -> i64 {
 
 /// Global latency `L = λ^J·(p−1) + λ^K·(t−1) + L_c` (Eq. 8) at concrete
 /// parameters.
+///
+/// The sum is computed in `i128` end-to-end (λ entries themselves can
+/// exceed `i64` at large symbolic parameters) and converted once at the
+/// end; a latency beyond `i64` cycles is unrepresentable for every
+/// downstream consumer and fails loudly instead of wrapping.
 pub fn latency(schedule: &Schedule, tiled: &TiledPra, params: &[i64]) -> i64 {
     let n = tiled.pra.ndims;
     let lj = schedule.lambda_j_at(params);
     let lk = schedule.lambda_k_at(params);
-    let mut l = schedule.lc;
+    let mut l = schedule.lc as i128;
     for dim in 0..n {
         let p_l = params[tiled.pra.space.p_index(dim)];
-        l += lj[dim] * (p_l - 1);
-        l += lk[dim] * (tiled.mapping.t[dim] - 1);
+        l += lj[dim] * (p_l as i128 - 1);
+        l += lk[dim] * (tiled.mapping.t[dim] as i128 - 1);
     }
-    l
+    i64::try_from(l).expect("global latency overflows i64 cycles")
 }
 
 #[cfg(test)]

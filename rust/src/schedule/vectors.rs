@@ -63,11 +63,17 @@ impl std::error::Error for ScheduleError {}
 
 impl Schedule {
     /// Evaluate `λ^J` at concrete parameters.
-    pub fn lambda_j_at(&self, params: &[i64]) -> Vec<i64> {
-        self.lambda_j.iter().map(|p| p.eval(params) as i64).collect()
+    ///
+    /// Entries are `i128`: λ^J components are monomials in the tile
+    /// sizes, so at the large symbolic parameters the paper's scalability
+    /// claim is about (e.g. `p = 2³²` in a 3-deep nest) they exceed
+    /// `i64` — the old lossy `as i64` truncation silently wrapped them.
+    pub fn lambda_j_at(&self, params: &[i64]) -> Vec<i128> {
+        self.lambda_j.iter().map(|p| p.eval(params)).collect()
     }
 
-    /// Evaluate `λ^K` at concrete parameters.
+    /// Evaluate `λ^K` at concrete parameters (in `i128`, like
+    /// [`Schedule::lambda_j_at`]).
     ///
     /// Per-dimension base values come from the symbolic candidate lists;
     /// the multi-dimensional (diagonal tile-crossing) constraints in
@@ -77,54 +83,102 @@ impl Schedule {
     /// every bump strictly increases one component and requirements are
     /// finite; lexicographic positivity of the dependencies guarantees a
     /// positive component exists in every lower-bound constraint.
-    pub fn lambda_k_at(&self, params: &[i64]) -> Vec<i64> {
-        let mut lk: Vec<i64> = self
+    ///
+    /// Non-convergence within the round budget is detected on loop
+    /// exit: a residual re-check of every enforceable constraint runs
+    /// and fails a debug assertion if any is still violated. Release
+    /// builds skip the assertion — there, callers that need the
+    /// guarantee must run [`Schedule::verify`], which re-checks the
+    /// full constraint system (including the pure-negative upper-bound
+    /// rows this fixpoint deliberately leaves alone) in every build
+    /// profile.
+    pub fn lambda_k_at(&self, params: &[i64]) -> Vec<i128> {
+        let mut lk: Vec<i128> = self
             .lambda_k
             .iter()
             .map(|cands| {
                 cands
                     .iter()
-                    .map(|c| c.eval(params) as i64)
+                    .map(|c| c.eval(params))
                     .max()
                     .unwrap_or(0)
                     .max(0)
             })
             .collect();
+        // Deficit of one *enforceable* constraint row (a row with some
+        // positive `d_K` component); pure-negative rows are upper
+        // bounds — checked by `verify`, not enforced (or counted as
+        // divergence) here.
+        fn enforceable_deficit(
+            dk: &[i64],
+            req: &Poly,
+            lk: &[i128],
+            params: &[i64],
+        ) -> Option<i128> {
+            let need = req.eval(params);
+            let have: i128 =
+                dk.iter().zip(lk).map(|(&d, l)| d as i128 * l).sum();
+            (have < need && dk.iter().any(|&d| d > 0))
+                .then_some(need - have)
+        }
+        let mut converged = self.extra.is_empty();
         for _round in 0..(4 * self.extra.len() + 4) {
             let mut changed = false;
             for (dk, req) in &self.extra {
-                let need = req.eval(params) as i64;
-                let have: i64 =
-                    dk.iter().zip(&lk).map(|(d, l)| d * l).sum();
-                if have < need {
-                    if let Some(bump) =
-                        (0..dk.len()).rev().find(|&l| dk[l] > 0)
-                    {
-                        lk[bump] += (need - have + dk[bump] - 1) / dk[bump];
-                        changed = true;
-                    }
-                    // pure-negative d_K rows are upper bounds; they are
-                    // checked by `verify`, not enforced here.
+                if let Some(deficit) =
+                    enforceable_deficit(dk, req, &lk, params)
+                {
+                    let bump = (0..dk.len())
+                        .rev()
+                        .find(|&l| dk[l] > 0)
+                        .expect("enforceable row has a positive component");
+                    let d = dk[bump] as i128;
+                    lk[bump] += (deficit + d - 1) / d;
+                    changed = true;
                 }
             }
             if !changed {
+                converged = true;
                 break;
             }
+        }
+        if !converged && cfg!(debug_assertions) {
+            // Round budget exhausted with the last pass still bumping:
+            // the fixpoint may not have settled. Re-check the residuals
+            // instead of trusting the loop bound (debug builds only —
+            // release callers get the always-on re-check via `verify`).
+            let residual: Vec<String> = self
+                .extra
+                .iter()
+                .filter_map(|(dk, req)| {
+                    enforceable_deficit(dk, req, &lk, params).map(
+                        |deficit| format!("λK·{dk:?} short by {deficit}"),
+                    )
+                })
+                .collect();
+            debug_assert!(
+                residual.is_empty(),
+                "λ^K fixpoint did not converge at {params:?}: \
+                 {residual:?} (causality-violating schedule)"
+            );
         }
         lk
     }
 
     /// Start time of iteration `(j, k)` (Eq. of §III-D:
-    /// `t(j,k) = λ^J·j + λ^K·k`).
-    pub fn start_time(&self, j: &[i64], k: &[i64], params: &[i64]) -> i64 {
+    /// `t(j,k) = λ^J·j + λ^K·k`), in `i128` — schedule arithmetic never
+    /// truncates, even at parameters where λ entries exceed `i64`.
+    pub fn start_time(&self, j: &[i64], k: &[i64], params: &[i64]) -> i128 {
         let lj = self.lambda_j_at(params);
         let lk = self.lambda_k_at(params);
-        lj.iter().zip(j).map(|(a, b)| a * b).sum::<i64>()
-            + lk.iter().zip(k).map(|(a, b)| a * b).sum::<i64>()
+        lj.iter().zip(j).map(|(a, &b)| a * b as i128).sum::<i128>()
+            + lk.iter().zip(k).map(|(a, &b)| a * b as i128).sum::<i128>()
     }
 
     /// Check every causality constraint at concrete parameters. Returns
     /// violated constraint descriptions (empty = schedule valid there).
+    /// All arithmetic is `i128`, so a violation can never be masked by
+    /// an intermediate overflow wrapping positive.
     pub fn verify(&self, tiled: &TiledPra, params: &[i64]) -> Vec<String> {
         let mut bad = Vec::new();
         let lj = self.lambda_j_at(params);
@@ -142,14 +196,19 @@ impl Schedule {
             if !feasible {
                 continue;
             }
-            let dj: i64 = st
+            let dj: i128 = st
                 .dj
                 .iter()
                 .zip(&lj)
-                .map(|(e, l)| e.eval(params) * l)
+                .map(|(e, l)| e.eval(params) as i128 * l)
                 .sum();
-            let dk: i64 = st.dk.iter().zip(&lk).map(|(d, l)| d * l).sum();
-            if dj + dk < self.pi {
+            let dk: i128 = st
+                .dk
+                .iter()
+                .zip(&lk)
+                .map(|(&d, l)| d as i128 * l)
+                .sum();
+            if dj + dk < self.pi as i128 {
                 bad.push(format!(
                     "{}: λJ·dJ + λK·dK = {} < π = {} at {params:?}",
                     st.name,
@@ -341,6 +400,61 @@ mod tests {
                 assert!(seen.insert(t), "duplicate start time {t}");
             }
         }
+    }
+
+    #[test]
+    fn schedule_arithmetic_survives_symbolic_scale_parameters() {
+        // Regression: the old path truncated `Poly::eval`'s i128 with
+        // `as i64`. For GEMM's 3-deep nest at p = 2³², λ^J's last entry
+        // is p0·p1 = 2⁶⁴, which wrapped to 0 — a silently causality-
+        // violating schedule at exactly the parameter scales the paper's
+        // scalability claim is about.
+        use crate::workloads::gemm::gemm;
+        let tiled = tile_pra(&gemm(), &ArrayMapping::new(vec![2, 2, 1]));
+        let s = find_schedule(&tiled, 1).unwrap();
+        let n = 1i64 << 32;
+        let params = [n, n, n, n, n, n]; // (N0,N1,N2,p0,p1,p2)
+        let lj = s.lambda_j_at(&params);
+        assert!(lj.iter().all(|&x| x > 0), "λ^J wrapped: {lj:?}");
+        assert_eq!(lj[s.perm[2]], 1i128 << 64, "λ^J = π·Π p exceeds i64");
+        let lk = s.lambda_k_at(&params);
+        assert!(lk.iter().all(|&x| x >= 0), "λ^K wrapped: {lk:?}");
+        // The intra-tile span λ^J·(p−1) is ~2⁹⁶: start times stay exact.
+        let j: Vec<i64> = vec![n - 1; 3];
+        let t0 = s.start_time(&j, &[0, 0, 0], &params);
+        assert!(t0 > i64::MAX as i128, "span must exceed i64: {t0}");
+
+        // GESUMMV's λ^K_1 = p0(p1−1)+1 also exceeds i64 at p = 2³².
+        let tiled2 = tile_pra(&gesummv(), &ArrayMapping::new(vec![2, 2]));
+        let s2 = find_schedule(&tiled2, 1).unwrap();
+        let params2 = [n, n, n, n];
+        let lk2 = s2.lambda_k_at(&params2);
+        let p = n as i128;
+        assert_eq!(lk2, vec![p, p * (p - 1) + 1]);
+        assert!(lk2[1] > i64::MAX as i128);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "fixpoint did not converge")]
+    fn lambda_k_fixpoint_divergence_is_detected() {
+        // Two mutually-antagonistic diagonal constraints: every bump that
+        // satisfies one deepens the other's deficit, so the bounded loop
+        // can never settle. The residual re-check must refuse to return
+        // the causality-violating λ^K silently.
+        let np = 2;
+        let s = Schedule {
+            perm: vec![0, 1],
+            pi: 1,
+            lambda_j: vec![Poly::zero(np), Poly::zero(np)],
+            lambda_k: vec![Vec::new(), Vec::new()],
+            extra: vec![
+                (vec![1, -2], Poly::constant(np, 10)),
+                (vec![-2, 1], Poly::constant(np, 10)),
+            ],
+            lc: 1,
+        };
+        s.lambda_k_at(&[4, 4]);
     }
 
     #[test]

@@ -103,8 +103,19 @@ pub fn simulate(
     let bounds: Vec<i64> =
         (0..n).map(|l| params[pra.space.n_index(l)]).collect();
     let p: Vec<i64> = (0..n).map(|l| params[pra.space.p_index(l)]).collect();
-    let lj = schedule.lambda_j_at(params);
-    let lk = schedule.lambda_k_at(params);
+    // Schedule vectors are i128 (they can exceed i64 at symbolic-scale
+    // parameters); the simulator enumerates iterations, so its parameters
+    // are small by construction and the narrowing is checked, not lossy.
+    let narrow = |v: Vec<i128>| -> Vec<i64> {
+        v.into_iter()
+            .map(|x| {
+                i64::try_from(x)
+                    .expect("schedule vector overflows i64 in simulation")
+            })
+            .collect()
+    };
+    let lj = narrow(schedule.lambda_j_at(params));
+    let lk = narrow(schedule.lambda_k_at(params));
 
     let rdg = Rdg::build(pra);
     let order = rdg

@@ -9,12 +9,16 @@
 //!    `DesignSpace::with_symmetry_pruning`.
 //! 3. Cached and uncached analyses agree bit-for-bit.
 //! 4. Exploration results are deterministic across worker counts.
+//! 5. Every built-in cross-architecture backend yields a sound
+//!    per-scenario Pareto frontier (no dominated member, every dropped
+//!    point dominated by a member, knee on the frontier).
 
 use tcpa_energy::analysis::WorkloadAnalysis;
 use tcpa_energy::dse::{
     dominates, explore, pareto_frontier, AnalysisCache, DesignSpace,
     ExploreConfig,
 };
+use tcpa_energy::energy::Backend;
 use tcpa_energy::pra::ir::{IndexMap, Lhs, Op, Operand};
 use tcpa_energy::pra::{validate, Workload};
 use tcpa_energy::proptest_lite::{check, Rng};
@@ -232,6 +236,60 @@ fn cached_and_uncached_agree_bit_for_bit() {
     // Every shape was looked up once cold, rest of the runs were hits or
     // new shapes — all entries distinct.
     assert!(cache.stats().entries <= 9);
+}
+
+#[test]
+fn builtin_backends_satisfy_frontier_soundness() {
+    // The backend axis multiplies scenarios, not soundness bugs:
+    // within every (bounds, backend) group the frontier must contain no
+    // dominated point, every dropped point must be dominated by some
+    // frontier member, and the knee must sit on the frontier.
+    let wl = workloads::by_name("gesummv").unwrap();
+    let space = DesignSpace::new()
+        .with_arrays_2d(4)
+        .with_bounds_sweep(&[8, 16], 2)
+        .with_backends(Backend::builtins());
+    let res = explore(&wl, &space, &ExploreConfig::default());
+    assert!(res.failures.is_empty(), "failures: {:?}", res.failures);
+    // 2 bounds × 4 backends scenarios.
+    assert_eq!(res.groups.len(), 8);
+    for g in &res.groups {
+        let members: Vec<usize> = res
+            .points
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| {
+                p.point.bounds == g.bounds && p.point.backend == g.backend
+            })
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!members.is_empty());
+        assert!(!g.frontier.is_empty(), "{}: empty frontier", g.backend);
+        let obj = |i: usize| res.points[i].objectives().to_array();
+        for &i in &g.frontier {
+            assert!(
+                g.bounds == res.points[i].point.bounds
+                    && g.backend == res.points[i].point.backend,
+                "frontier member from another scenario"
+            );
+            assert!(
+                !members.iter().any(|&j| dominates(&obj(j), &obj(i))),
+                "{}: dominated point {i} on the frontier",
+                g.backend
+            );
+        }
+        for &i in &members {
+            if !g.frontier.contains(&i) {
+                assert!(
+                    g.frontier.iter().any(|&f| dominates(&obj(f), &obj(i))),
+                    "{}: dropped point {i} dominated by no frontier member",
+                    g.backend
+                );
+            }
+        }
+        let knee = g.knee.expect("non-empty frontier has a knee");
+        assert!(g.frontier.contains(&knee));
+    }
 }
 
 #[test]
