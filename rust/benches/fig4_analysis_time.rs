@@ -5,8 +5,13 @@
 //! constant (< 0.5 s) while the simulation series grows with the N²
 //! iteration-space volume. Counts must agree exactly at every point.
 //!
-//! Emits `results/fig4_analysis_time.csv` and an ASCII rendering.
+//! Emits `results/fig4_analysis_time.csv`, an ASCII rendering, and a
+//! machine-readable section (`fig4_analysis_time`) of
+//! `BENCH_symbolic.json` for cross-PR perf tracking.
 
+use std::fmt::Write as _;
+
+use tcpa_energy::bench_util::{bench_symbolic_json_path, write_bench_section};
 use tcpa_energy::coordinator::fig4_rows;
 use tcpa_energy::report::{ascii_chart, write_csv, CsvTable};
 
@@ -81,5 +86,33 @@ fn main() {
         "speedup at N={}: {:.0}x",
         last.n,
         last.simulation_s / (last.symbolic_eval_s.max(1e-9))
+    );
+
+    // Machine-readable record for the perf trajectory.
+    let mut rows_json = String::from("[");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            rows_json,
+            "{}{{\"n\": {}, \"symbolic_s\": {:.9}, \
+             \"symbolic_eval_s\": {:.9}, \"simulation_s\": {:.9}}}",
+            if i > 0 { ", " } else { "" },
+            r.n,
+            r.symbolic_s,
+            r.symbolic_eval_s,
+            r.simulation_s
+        );
+    }
+    rows_json.push(']');
+    let body = format!(
+        "{{\"rows\": {rows_json}, \"sim_over_eval_speedup_at_max_n\": \
+         {:.1}, \"quick\": {quick}}}",
+        last.simulation_s / (last.symbolic_eval_s.max(1e-9))
+    );
+    let path = bench_symbolic_json_path();
+    write_bench_section(&path, "fig4_analysis_time", &body)
+        .expect("writing BENCH_symbolic.json");
+    println!(
+        "results recorded → {} (section fig4_analysis_time)",
+        path.display()
     );
 }

@@ -3,19 +3,175 @@
 //! per array size — supporting the paper's footnote 1 ("analysis time
 //! remains on the order of 1 minute even for 50×50 arrays"; our
 //! implementation is far below that).
+//!
+//! Also measures the two core PR-3 speedups directly:
+//!
+//! * packed `Poly` arithmetic vs a naive clone-heavy `BTreeMap` reference
+//!   (the pre-packing representation), on a counter-shaped workload;
+//! * symbolic counting with a shared [`SymbolicCtx`] feasibility cache vs
+//!   per-call caches, across all statements of GESUMMV.
+//!
+//! Results are appended to `BENCH_symbolic.json` (section
+//! `volume_counting`) so CI tracks the perf trajectory across PRs.
+//! `--quick` limits the array sweep for CI smoke runs.
 
-use tcpa_energy::bench_util::{bench, time_once};
-use tcpa_energy::polyhedral::{count_concrete, count_symbolic, SymbolicOptions};
+use std::fmt::Write as _;
+
+use tcpa_energy::bench_util::{
+    bench, bench_symbolic_json_path, time_once, write_bench_section,
+};
+use tcpa_energy::polyhedral::{
+    count_concrete, count_symbolic, count_symbolic_in, AffineExpr, Poly,
+    SymbolicCtx, SymbolicOptions,
+};
 use tcpa_energy::tiling::{tile_pra, ArrayMapping};
 use tcpa_energy::workloads::gesummv::gesummv;
 
+/// The pre-packing `Poly`: exponent `Vec<u32>` keys in a `BTreeMap`,
+/// clone-then-mutate ops, per-pair exponent allocation in `mul` — kept
+/// here as the measured baseline (the test-side twin lives in
+/// `tests/packed_diff.rs`).
+mod reference {
+    use std::collections::BTreeMap;
+    use tcpa_energy::polyhedral::AffineExpr;
+
+    #[derive(Clone)]
+    pub struct RefPoly {
+        nparams: usize,
+        terms: BTreeMap<Vec<u32>, i128>,
+    }
+
+    impl RefPoly {
+        pub fn zero(nparams: usize) -> Self {
+            RefPoly { nparams, terms: BTreeMap::new() }
+        }
+
+        pub fn constant(nparams: usize, c: i128) -> Self {
+            let mut p = Self::zero(nparams);
+            if c != 0 {
+                p.terms.insert(vec![0; nparams], c);
+            }
+            p
+        }
+
+        pub fn from_affine(e: &AffineExpr) -> Self {
+            let n = e.nparams();
+            let mut p = Self::zero(n);
+            if e.konst != 0 {
+                p.terms.insert(vec![0; n], e.konst as i128);
+            }
+            for (i, &c) in e.coeffs.iter().enumerate() {
+                if c != 0 {
+                    let mut ex = vec![0; n];
+                    ex[i] = 1;
+                    p.terms.insert(ex, c as i128);
+                }
+            }
+            p
+        }
+
+        fn add_term(&mut self, expo: Vec<u32>, coeff: i128) {
+            if coeff == 0 {
+                return;
+            }
+            let entry = self.terms.entry(expo.clone()).or_insert(0);
+            *entry += coeff;
+            if *entry == 0 {
+                self.terms.remove(&expo);
+            }
+        }
+
+        pub fn add(&self, rhs: &Self) -> Self {
+            let mut out = self.clone();
+            for (e, &c) in &rhs.terms {
+                out.add_term(e.clone(), c);
+            }
+            out
+        }
+
+        pub fn mul(&self, rhs: &Self) -> Self {
+            let mut out = Self::zero(self.nparams);
+            for (ea, &ca) in &self.terms {
+                for (eb, &cb) in &rhs.terms {
+                    let expo: Vec<u32> =
+                        ea.iter().zip(eb).map(|(a, b)| a + b).collect();
+                    out.add_term(expo, ca * cb);
+                }
+            }
+            out
+        }
+
+        pub fn eval(&self, params: &[i64]) -> i128 {
+            let mut acc = 0i128;
+            for (e, &c) in &self.terms {
+                let mut t = c;
+                for (i, &pow) in e.iter().enumerate() {
+                    for _ in 0..pow {
+                        t *= params[i] as i128;
+                    }
+                }
+                acc += t;
+            }
+            acc
+        }
+    }
+}
+
+/// Counter-shaped polynomial workload: per "cell", a product of affine
+/// interval lengths, squared (degree 8), accumulated over all cells —
+/// exactly the op mix of the symbolic counter's hot loop (4 parameters).
+fn cells() -> Vec<Vec<AffineExpr>> {
+    (0..24i64)
+        .map(|c| {
+            vec![
+                AffineExpr { coeffs: vec![1, 0, -c, 0], konst: c + 1 },
+                AffineExpr { coeffs: vec![0, 1, 0, -1], konst: 2 * c + 1 },
+                AffineExpr { coeffs: vec![1, 1, -1, 0], konst: 3 - c },
+                AffineExpr { coeffs: vec![0, -1, 2, 1], konst: c },
+            ]
+        })
+        .collect()
+}
+
+fn packed_workload(cells: &[Vec<AffineExpr>], params: &[i64]) -> i128 {
+    let np = params.len();
+    let mut acc = Poly::zero(np);
+    for fs in cells {
+        let mut prod = Poly::constant(np, 1);
+        for f in fs {
+            prod = prod.mul(&Poly::from_affine(f));
+        }
+        prod.mul_into(&prod.clone(), &mut acc); // acc += prod²
+    }
+    acc.eval(params)
+}
+
+fn reference_workload(cells: &[Vec<AffineExpr>], params: &[i64]) -> i128 {
+    use reference::RefPoly;
+    let np = params.len();
+    let mut acc = RefPoly::zero(np);
+    for fs in cells {
+        let mut prod = RefPoly::constant(np, 1);
+        for f in fs {
+            prod = prod.mul(&RefPoly::from_affine(f));
+        }
+        acc = acc.add(&prod.mul(&prod));
+    }
+    acc.eval(params)
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[i64] =
+        if quick { &[2, 4, 8, 16] } else { &[2, 4, 8, 16, 32, 50] };
+
     println!("symbolic volume computation cost vs array size (GESUMMV S7)\n");
     println!(
         "{:>7} {:>16} {:>14} {:>12} {:>8}",
         "array", "symbolic count", "eval/query", "concrete", "pieces"
     );
-    for t in [2i64, 4, 8, 16, 32, 50] {
+    let mut rows_json = String::from("[");
+    for (ri, &t) in sizes.iter().enumerate() {
         let pra = gesummv();
         let mapping = ArrayMapping::new(vec![t, t]);
         let tiled = tile_pra(&pra, &mapping);
@@ -43,6 +199,16 @@ fn main() {
             conc.median,
             gs.pieces.len()
         );
+        let _ = write!(
+            rows_json,
+            "{}{{\"array\": {t}, \"symbolic_s\": {:.9}, \
+             \"eval_s\": {:.9}, \"concrete_s\": {:.9}, \"pieces\": {}}}",
+            if ri > 0 { ", " } else { "" },
+            analysis_t.as_secs_f64(),
+            eval.median.as_secs_f64(),
+            conc.median.as_secs_f64(),
+            gs.pieces.len()
+        );
         // sanity: symbolic == concrete
         assert_eq!(
             gs.eval(&params),
@@ -55,4 +221,84 @@ fn main() {
             );
         }
     }
+    rows_json.push(']');
+
+    // Packed Poly vs the naive BTreeMap reference on the counter op mix.
+    let cs = cells();
+    let params = [23i64, 17, 3, 2];
+    assert_eq!(
+        packed_workload(&cs, &params),
+        reference_workload(&cs, &params),
+        "packed and reference polynomials must agree exactly"
+    );
+    let packed = bench(3, 30, || packed_workload(&cs, &params));
+    let naive = bench(3, 30, || reference_workload(&cs, &params));
+    let poly_speedup =
+        naive.median.as_secs_f64() / packed.median.as_secs_f64().max(1e-12);
+    println!(
+        "\npacked Poly vs BTreeMap reference (counter op mix): \
+         {:.3?} vs {:.3?} → {poly_speedup:.1}x",
+        packed.median, naive.median
+    );
+    assert!(
+        poly_speedup >= 1.5,
+        "packed Poly must clearly beat the clone-heavy reference \
+         (measured {poly_speedup:.2}x; typical is well above 3x)"
+    );
+
+    // Shared feasibility cache across all statements of one analysis vs
+    // per-call caches.
+    let pra = gesummv();
+    let mapping = ArrayMapping::new(vec![4, 4]);
+    let tiled = tile_pra(&pra, &mapping);
+    let opts = SymbolicOptions::default();
+    let fresh = bench(2, 8, || {
+        tiled
+            .statements
+            .iter()
+            .map(|s| {
+                count_symbolic(&s.space, &mapping.t, &tiled.context, &opts)
+                    .pieces
+                    .len()
+            })
+            .sum::<usize>()
+    });
+    let shared = bench(2, 8, || {
+        let ctx = SymbolicCtx::new(&tiled.context);
+        tiled
+            .statements
+            .iter()
+            .map(|s| {
+                count_symbolic_in(&s.space, &mapping.t, &ctx, &opts)
+                    .pieces
+                    .len()
+            })
+            .sum::<usize>()
+    });
+    let ctx_speedup =
+        fresh.median.as_secs_f64() / shared.median.as_secs_f64().max(1e-12);
+    println!(
+        "shared SymbolicCtx vs per-call caches (GESUMMV, 4x4): \
+         {:.3?} vs {:.3?} → {ctx_speedup:.2}x",
+        shared.median, fresh.median
+    );
+
+    let body = format!(
+        "{{\"rows\": {rows_json}, \
+         \"poly_mul_packed_s\": {:.9}, \"poly_mul_reference_s\": {:.9}, \
+         \"poly_speedup\": {poly_speedup:.3}, \
+         \"ctx_shared_s\": {:.9}, \"ctx_fresh_s\": {:.9}, \
+         \"ctx_speedup\": {ctx_speedup:.3}, \"quick\": {quick}}}",
+        packed.median.as_secs_f64(),
+        naive.median.as_secs_f64(),
+        shared.median.as_secs_f64(),
+        fresh.median.as_secs_f64(),
+    );
+    let path = bench_symbolic_json_path();
+    write_bench_section(&path, "volume_counting", &body)
+        .expect("writing BENCH_symbolic.json");
+    println!(
+        "\nresults recorded → {} (section volume_counting)",
+        path.display()
+    );
 }

@@ -2,6 +2,14 @@
 //! (Eq. 11) with per-memory-class breakdown, access/operation counts,
 //! latency (Eq. 8), and cross-architecture pricing via
 //! [`crate::energy::Backend`] descriptors.
+//!
+//! Every query walks the stored packed piecewise polynomials
+//! (`GuardedSum::eval`: one shared constraint-pool view per sum, Horner
+//! evaluation per piece) — O(#pieces) per statement, independent of the
+//! iteration-space volume. All count aggregation is exact `i128`
+//! arithmetic; floats only appear at the final pricing step, so counts —
+//! and therefore energies — are bit-for-bit reproducible regardless of
+//! piece ordering or cache warmth.
 
 use std::collections::BTreeMap;
 

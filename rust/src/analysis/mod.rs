@@ -15,13 +15,22 @@ pub mod report;
 
 pub use evaluate::{CountsBreakdown, EnergyBreakdown};
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::energy::{AccessProfile, EnergyTable};
-use crate::polyhedral::{count_symbolic, GuardedSum, SymbolicOptions};
+use crate::polyhedral::{
+    count_symbolic_in, FeasPool, GuardedSum, SymbolicOptions,
+};
 use crate::pra::{Pra, Workload};
 use crate::schedule::{find_schedule, Schedule};
 use crate::tiling::{tile_pra, ArrayMapping, TiledPra};
+
+/// Precomputed symbolic volumes keyed by tiled-statement name — the
+/// payload the persistent analysis cache (`dse::persist`) restores so a
+/// warm start skips the lattice-point counting entirely. Entries that are
+/// missing or fail the parameter-count sanity check are recomputed.
+pub type PresetVolumes = HashMap<String, GuardedSum>;
 
 /// One analyzed statement variant: symbolic volume + access profile.
 #[derive(Debug, Clone)]
@@ -56,28 +65,54 @@ impl SymbolicAnalysis {
     }
 
     /// As [`Self::analyze`] with an explicit energy table and initiation
-    /// interval.
+    /// interval (private single-use feasibility pool).
     pub fn analyze_with(
         pra: &Pra,
         mapping: &ArrayMapping,
         table: &EnergyTable,
         pi: i64,
     ) -> Self {
+        Self::analyze_in(pra, mapping, table, pi, &FeasPool::new(), None)
+    }
+
+    /// The full-control entry point: `feas` shares one Fourier–Motzkin
+    /// memo table per parameter context across every statement of this
+    /// analysis — and, when the caller passes a long-lived pool (the DSE
+    /// cache does), across analyses and design points. `preset` supplies
+    /// previously computed volumes by statement name; missing entries
+    /// (or entries whose parameter count disagrees) are recomputed.
+    ///
+    /// The *only* validation applied to a preset entry is the parameter
+    /// count — every array shape of one workload shares it, so a volume
+    /// computed for a different mapping would be accepted silently. The
+    /// caller owns the cache-key discipline: presets must come from an
+    /// analysis of the *same* `(pra, mapping)` pair (the persistent
+    /// `dse::persist::DiskCache` keys its files by exactly that).
+    pub fn analyze_in(
+        pra: &Pra,
+        mapping: &ArrayMapping,
+        table: &EnergyTable,
+        pi: i64,
+        feas: &FeasPool,
+        preset: Option<&PresetVolumes>,
+    ) -> Self {
         let start = Instant::now();
         let tiled = tile_pra(pra, mapping);
         let schedule = find_schedule(&tiled, pi)
             .expect("no feasible LSGP schedule for this PRA");
         let opts = SymbolicOptions::default();
+        let ctx = feas.ctx_for(&tiled.context);
         let statements: Vec<StmtAnalysis> = tiled
             .statements
             .iter()
             .map(|ts| {
-                let volume = count_symbolic(
-                    &ts.space,
-                    &mapping.t,
-                    &tiled.context,
-                    &opts,
-                );
+                let volume = preset
+                    .and_then(|m| m.get(&ts.name))
+                    .filter(|v| v.nparams() == ts.space.nparams)
+                    .cloned()
+                    .unwrap_or_else(|| {
+                        count_symbolic_in(&ts.space, &mapping.t, &ctx, &opts)
+                    });
                 let profile =
                     AccessProfile::of(&pra.statements[ts.stmt_index], ts);
                 StmtAnalysis {
@@ -115,14 +150,38 @@ pub struct WorkloadAnalysis {
 impl WorkloadAnalysis {
     /// Analyze all phases of a workload on per-phase array mappings.
     pub fn analyze(wl: &Workload, mappings: &[ArrayMapping]) -> Self {
+        Self::analyze_pooled(wl, mappings, &FeasPool::new(), None)
+    }
+
+    /// As [`Self::analyze`] with a shared feasibility pool and optional
+    /// per-phase preset volumes (indexed like `wl.phases`).
+    pub fn analyze_pooled(
+        wl: &Workload,
+        mappings: &[ArrayMapping],
+        feas: &FeasPool,
+        preset: Option<&[PresetVolumes]>,
+    ) -> Self {
         assert_eq!(wl.phases.len(), mappings.len());
+        if let Some(pre) = preset {
+            assert_eq!(pre.len(), wl.phases.len());
+        }
         WorkloadAnalysis {
             name: wl.name.clone(),
             phases: wl
                 .phases
                 .iter()
                 .zip(mappings)
-                .map(|(p, m)| SymbolicAnalysis::analyze(p, m))
+                .enumerate()
+                .map(|(i, (p, m))| {
+                    SymbolicAnalysis::analyze_in(
+                        p,
+                        m,
+                        &EnergyTable::default(),
+                        1,
+                        feas,
+                        preset.map(|pre| &pre[i]),
+                    )
+                })
                 .collect(),
         }
     }
@@ -130,12 +189,23 @@ impl WorkloadAnalysis {
     /// Analyze with the same array shape for every phase (extended by
     /// `t = 1` on unmapped dimensions of deeper nests).
     pub fn analyze_uniform(wl: &Workload, array: &[i64]) -> Self {
+        Self::analyze_uniform_in(wl, array, &FeasPool::new(), None)
+    }
+
+    /// As [`Self::analyze_uniform`] with a shared feasibility pool and
+    /// optional preset volumes — the DSE cache's entry point.
+    pub fn analyze_uniform_in(
+        wl: &Workload,
+        array: &[i64],
+        feas: &FeasPool,
+        preset: Option<&[PresetVolumes]>,
+    ) -> Self {
         let mappings: Vec<ArrayMapping> = wl
             .phases
             .iter()
             .map(|p| ArrayMapping::new(crate::tiling::pad_array(array, p.ndims)))
             .collect();
-        Self::analyze(wl, &mappings)
+        Self::analyze_pooled(wl, &mappings, feas, preset)
     }
 }
 

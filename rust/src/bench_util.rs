@@ -1,7 +1,12 @@
 //! Minimal benchmarking harness (the offline vendor tree has no
 //! criterion): warmup + N timed repetitions, reporting min/median/mean.
 //! All `cargo bench` targets are `harness = false` binaries built on this.
+//!
+//! Also hosts the machine-readable results channel: benches append their
+//! numbers as one top-level section of `BENCH_symbolic.json` (see
+//! [`write_bench_section`]), so CI tracks the perf trajectory across PRs.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// Statistics of one benchmark.
@@ -60,6 +65,118 @@ pub fn time_once<T>(f: impl FnOnce() -> T) -> (Duration, T) {
     (t0.elapsed(), v)
 }
 
+/// Where the symbolic benches record machine-readable results:
+/// `$BENCH_SYMBOLIC_JSON` if set, else `BENCH_symbolic.json` in the
+/// current directory (the package root under `cargo bench`).
+pub fn bench_symbolic_json_path() -> PathBuf {
+    std::env::var_os("BENCH_SYMBOLIC_JSON")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_symbolic.json"))
+}
+
+/// Read-modify-write one top-level section of a JSON object file: the
+/// file holds `{"section": value, ...}`; `body` (itself a JSON value)
+/// replaces or appends the named section, preserving the others. An
+/// unreadable or malformed file is treated as empty, so a broken run can
+/// never wedge the results channel.
+pub fn write_bench_section(
+    path: &Path,
+    section: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let mut sections: Vec<(String, String)> =
+        match std::fs::read_to_string(path) {
+            Ok(s) => parse_sections(&s).unwrap_or_default(),
+            Err(_) => Vec::new(),
+        };
+    match sections.iter_mut().find(|(k, _)| k == section) {
+        Some((_, v)) => *v = body.to_string(),
+        None => sections.push((section.to_string(), body.to_string())),
+    }
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in sections.iter().enumerate() {
+        out.push_str(&format!(
+            "  {k:?}: {v}{}\n",
+            if i + 1 < sections.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    std::fs::write(path, out)
+}
+
+/// Minimal tolerant scanner for `{"key": value, ...}` with nested
+/// objects/arrays/strings; returns `None` on anything unexpected.
+fn parse_sections(s: &str) -> Option<Vec<(String, String)>> {
+    let inner = s.trim().strip_prefix('{')?.strip_suffix('}')?;
+    let b = inner.as_bytes();
+    let mut i = 0usize;
+    let mut out = Vec::new();
+    loop {
+        while i < b.len() && (b[i].is_ascii_whitespace() || b[i] == b',') {
+            i += 1;
+        }
+        if i >= b.len() {
+            break;
+        }
+        if b[i] != b'"' {
+            return None;
+        }
+        i += 1;
+        let k0 = i;
+        while i < b.len() && b[i] != b'"' {
+            if b[i] == b'\\' {
+                i += 1;
+            }
+            i += 1;
+        }
+        if i >= b.len() {
+            return None;
+        }
+        let key = String::from_utf8_lossy(&b[k0..i]).into_owned();
+        i += 1;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i >= b.len() || b[i] != b':' {
+            return None;
+        }
+        i += 1;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let v0 = i;
+        let mut depth = 0i32;
+        let mut in_str = false;
+        while i < b.len() {
+            let c = b[i];
+            if in_str {
+                if c == b'\\' {
+                    i += 1;
+                } else if c == b'"' {
+                    in_str = false;
+                }
+            } else {
+                match c {
+                    b'"' => in_str = true,
+                    b'{' | b'[' => depth += 1,
+                    b'}' | b']' => depth -= 1,
+                    b',' if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+        if depth != 0 || in_str {
+            return None;
+        }
+        out.push((
+            key,
+            String::from_utf8_lossy(&b[v0..i]).trim().to_string(),
+        ));
+    }
+    Some(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +194,31 @@ mod tests {
         let (d, v) = time_once(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_sections_merge_and_overwrite() {
+        let path = std::env::temp_dir().join(format!(
+            "tcpa-bench-json-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        write_bench_section(&path, "a", r#"{"x": 1, "s": "v,{}"}"#).unwrap();
+        write_bench_section(&path, "b", "[1, 2, 3]").unwrap();
+        write_bench_section(&path, "a", r#"{"x": 2}"#).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        let sections = parse_sections(&s).unwrap();
+        assert_eq!(sections.len(), 2);
+        assert_eq!(sections[0], ("a".into(), r#"{"x": 2}"#.into()));
+        assert_eq!(sections[1], ("b".into(), "[1, 2, 3]".into()));
+        // Corrupt file degrades to empty, not an error.
+        std::fs::write(&path, "not json").unwrap();
+        write_bench_section(&path, "c", "7").unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            parse_sections(&s).unwrap(),
+            vec![("c".into(), "7".into())]
+        );
+        let _ = std::fs::remove_file(&path);
     }
 }

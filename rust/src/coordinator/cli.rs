@@ -12,6 +12,7 @@
 //!                      [--backend all|tcpa,cgra,gpu-sm,systolic]
 //!                      [--policies all|tcpa,no-fd,no-reuse]   (legacy)
 //!                      [--prune-symmetric] [--workers N] [--out DIR]
+//!                      [--analysis-cache DIR]
 //! tcpa-energy figures  [--out results] [--quick]
 //! ```
 //!
@@ -24,7 +25,9 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::analysis::SymbolicAnalysis;
-use crate::dse::{explore, DesignSpace, ExploreConfig};
+use crate::dse::{
+    explore, explore_with_cache, AnalysisCache, DesignSpace, ExploreConfig,
+};
 use crate::energy::{AccessClass, Backend, MemoryClass, Policy};
 use crate::report::{
     ascii_chart, dse_frontier_markdown, write_csv, write_dse_report,
@@ -420,16 +423,31 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 None => 0,
             };
 
-            let res = explore(&wl, &space, &ExploreConfig { workers });
+            let cfg = ExploreConfig { workers };
+            let res = match flags.get("analysis-cache") {
+                Some(dir) if dir != "true" => {
+                    // Persistent spill: repeated CLI invocations reload the
+                    // one-time symbolic volumes instead of recomputing.
+                    let cache = AnalysisCache::with_disk(dir);
+                    explore_with_cache(&wl, &space, &cfg, &cache)
+                }
+                Some(_) => {
+                    return Err(CliError::Usage(
+                        "--analysis-cache expects a directory".into(),
+                    ))
+                }
+                None => explore(&wl, &space, &cfg),
+            };
             println!(
                 "{}: {} points in {:?} ({} failed; cache {} analyses, \
-                 {:.0}% hit)",
+                 {:.0}% hit, {} from disk)",
                 res.workload,
                 res.points.len(),
                 res.wall,
                 res.failures.len(),
                 res.cache.entries,
-                res.cache.hit_rate() * 100.0
+                res.cache.hit_rate() * 100.0,
+                res.cache.disk_hits
             );
             for (p, msg) in res.failures.iter().take(8) {
                 eprintln!(
@@ -652,6 +670,31 @@ mod tests {
                 "--backend {sel} should sweep"
             );
         }
+    }
+
+    #[test]
+    fn dse_analysis_cache_persists_across_invocations() {
+        let dir = std::env::temp_dir()
+            .join(format!("tcpa-cli-cache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_str().unwrap().to_string();
+        let args = [
+            "dse", "--workload", "gesummv", "--bounds", "8,8",
+            "--max-pes", "2", "--analysis-cache", &dir_s,
+        ];
+        assert_eq!(run_cli(&s(&args)).unwrap(), 0);
+        let spilled = std::fs::read_dir(&dir)
+            .map(|d| d.count())
+            .unwrap_or(0);
+        assert!(spilled > 0, "first run must spill volume files");
+        // Second "process": same directory, fresh in-memory cache.
+        assert_eq!(run_cli(&s(&args)).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+        // Missing directory value is a usage error.
+        let e = run_cli(&s(&[
+            "dse", "--workload", "gemm", "--analysis-cache",
+        ]));
+        assert!(matches!(e, Err(CliError::Usage(_))));
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! into) the shared [`AnalysisCache`]; evaluating energy / latency /
 //! counts at the point's bounds, tile scale and energy backend is then
 //! just expression evaluation — microseconds, which is what makes wide
-//! multi-axis sweeps tractable at all.
+//! multi-axis sweeps tractable at all. Cold analyses within one sweep
+//! additionally share the cache's Fourier–Motzkin feasibility pool, so a
+//! guard proven (in)feasible for one design point is never re-proven for
+//! another point with the same parameter context.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;

@@ -17,7 +17,14 @@
 //!   [`crate::analysis::WorkloadAnalysis::analyze_uniform`] per
 //!   (workload, array) key, so bounds/tile/policy sweeps over an
 //!   already-analyzed shape never re-run the symbolic pass — the O(1)
-//!   per-query scalability of Fig. 4, made explicit.
+//!   per-query scalability of Fig. 4, made explicit. Analyses run against
+//!   one shared Fourier–Motzkin feasibility pool
+//!   ([`crate::polyhedral::FeasPool`]), so design points with the same
+//!   parameter context decide each distinct guard once per sweep.
+//! * [`persist`] — the **persistent spill**: symbolic volumes on disk,
+//!   keyed by (workload fingerprint, array, energy-table fingerprint), so
+//!   repeated CLI invocations reuse the one-time analyses across
+//!   processes (`AnalysisCache::with_disk`, `dse --analysis-cache DIR`).
 //! * [`explore`] — the **parallel explorer**: fans design points out over
 //!   a `std::thread` worker pool fed by a channel work queue, with
 //!   results stitched back in deterministic enumeration order.
@@ -42,6 +49,7 @@
 pub mod cache;
 pub mod explore;
 pub mod pareto;
+pub mod persist;
 pub mod space;
 
 pub use cache::{workload_fingerprint, AnalysisCache, CacheStats};
@@ -50,4 +58,5 @@ pub use explore::{
     ExploreResult, FrontierGroup,
 };
 pub use pareto::{dominates, knee_point, pareto_frontier, Objectives};
+pub use persist::DiskCache;
 pub use space::{DesignPoint, DesignSpace};

@@ -1,0 +1,372 @@
+//! Persistent spill of the analysis cache: symbolic volumes on disk.
+//!
+//! The expensive part of a `WorkloadAnalysis` is the symbolic
+//! lattice-point counting; tiling, scheduling and access classification
+//! are microseconds. [`DiskCache`] therefore persists, per
+//! `(workload, array, energy-table)` key, every statement's
+//! [`GuardedSum`] volume in a small line-oriented text format. A warm CLI
+//! invocation reloads the volumes and re-derives the cheap parts —
+//! producing an analysis **bit-for-bit identical** to a cold run (volumes
+//! are exact integer polynomials; Guard/Poly reconstruction re-interns the
+//! identical canonical constraints).
+//!
+//! Keys embed the workload's structural fingerprint and the energy
+//! table's bit-exact fingerprint, so a stale file can never serve a
+//! changed workload definition or table. Files are advisory: any read,
+//! parse or validation failure falls back to recomputation, and writes go
+//! through a temp-file rename so concurrent processes never observe a
+//! torn file.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::analysis::{PresetVolumes, WorkloadAnalysis};
+use crate::energy::EnergyTable;
+use crate::polyhedral::{AffineExpr, Constraint, Guard, GuardedSum, Poly};
+use crate::pra::Workload;
+
+const MAGIC: &str = "tcpa-analysis-cache v1";
+
+/// On-disk cache of symbolic analysis volumes, one file per
+/// `(workload, array, table)` key under a caller-chosen directory.
+#[derive(Debug, Clone)]
+pub struct DiskCache {
+    dir: PathBuf,
+}
+
+impl DiskCache {
+    /// A cache rooted at `dir` (created lazily on first store).
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        DiskCache { dir: dir.into() }
+    }
+
+    /// The cache directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_for(
+        &self,
+        wl_name: &str,
+        fp: u64,
+        array: &[i64],
+        table: &EnergyTable,
+    ) -> PathBuf {
+        let safe: String = wl_name
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                    c
+                } else {
+                    '_'
+                }
+            })
+            .collect();
+        let shape = array
+            .iter()
+            .map(|t| t.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        let table_fp = table.fingerprint();
+        self.dir
+            .join(format!("{safe}-{fp:016x}-{shape}-{table_fp:016x}.volumes"))
+    }
+
+    /// Load the preset volumes for `(wl, array, table)` if a valid file
+    /// exists. `fp` is the caller's precomputed workload fingerprint;
+    /// `table` must be the energy table the analysis will run under.
+    pub fn load(
+        &self,
+        wl: &Workload,
+        fp: u64,
+        array: &[i64],
+        table: &EnergyTable,
+    ) -> Option<Vec<PresetVolumes>> {
+        let path = self.file_for(&wl.name, fp, array, table);
+        let content = std::fs::read_to_string(path).ok()?;
+        parse(&content, wl, fp, array, table)
+    }
+
+    /// Persist the volumes of `ana` under the `(wl, array, table)` key.
+    /// Errors are returned but callers may ignore them — the cache is
+    /// advisory.
+    pub fn store(
+        &self,
+        wl: &Workload,
+        fp: u64,
+        array: &[i64],
+        table: &EnergyTable,
+        ana: &WorkloadAnalysis,
+    ) -> std::io::Result<()> {
+        // Statement names are the lookup keys within a file; a name the
+        // line format cannot carry round-trip is skipped wholesale.
+        let ok_names = ana.phases.iter().all(|ph| {
+            ph.statements.iter().all(|s| {
+                !s.name.is_empty()
+                    && !s.name.contains(char::is_whitespace)
+            })
+        });
+        if !ok_names {
+            return Ok(());
+        }
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.file_for(&wl.name, fp, array, table);
+        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+        std::fs::write(&tmp, render(wl, fp, array, table, ana))?;
+        std::fs::rename(&tmp, &path)
+    }
+}
+
+fn render(
+    wl: &Workload,
+    fp: u64,
+    array: &[i64],
+    table: &EnergyTable,
+    ana: &WorkloadAnalysis,
+) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{MAGIC}");
+    let _ = writeln!(s, "workload {}", wl.name);
+    let _ = writeln!(s, "fingerprint {fp:016x}");
+    let _ = writeln!(
+        s,
+        "array {}",
+        array.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+    );
+    let _ = writeln!(s, "table {:016x}", table.fingerprint());
+    let _ = writeln!(s, "phases {}", ana.phases.len());
+    for (i, ph) in ana.phases.iter().enumerate() {
+        let _ = writeln!(s, "phase {i} statements {}", ph.statements.len());
+        for st in &ph.statements {
+            let _ = writeln!(
+                s,
+                "stmt {} nparams {} pieces {}",
+                st.name,
+                st.volume.nparams(),
+                st.volume.pieces.len()
+            );
+            for (g, p) in &st.volume.pieces {
+                let cs = g.resolved();
+                let _ = writeln!(s, "guard {}", cs.len());
+                for c in cs {
+                    let _ = writeln!(s, "c {}", render_affine(&c.0));
+                }
+                let terms: Vec<_> = p.terms().collect();
+                let _ = writeln!(s, "poly {}", terms.len());
+                for (e, coeff) in terms {
+                    let _ = writeln!(
+                        s,
+                        "t {};{coeff}",
+                        e.iter()
+                            .map(|x| x.to_string())
+                            .collect::<Vec<_>>()
+                            .join(",")
+                    );
+                }
+            }
+        }
+    }
+    s.push_str("end\n");
+    s
+}
+
+fn render_affine(e: &AffineExpr) -> String {
+    format!(
+        "{};{}",
+        e.coeffs
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(","),
+        e.konst
+    )
+}
+
+fn parse_affine(body: &str, np: usize) -> Option<AffineExpr> {
+    let (coeffs, konst) = body.split_once(';')?;
+    let coeffs: Vec<i64> = coeffs
+        .split(',')
+        .map(|x| x.parse().ok())
+        .collect::<Option<_>>()?;
+    if coeffs.len() != np {
+        return None;
+    }
+    Some(AffineExpr { coeffs, konst: konst.parse().ok()? })
+}
+
+fn parse_term(body: &str, np: usize) -> Option<(Vec<u32>, i128)> {
+    let (expos, coeff) = body.split_once(';')?;
+    let expos: Vec<u32> = expos
+        .split(',')
+        .map(|x| x.parse().ok())
+        .collect::<Option<_>>()?;
+    if expos.len() != np {
+        return None;
+    }
+    // Packed-lane capacity is enforced by `Poly::try_from_terms` — the
+    // single authority on the encoding.
+    Some((expos, coeff.parse().ok()?))
+}
+
+fn parse(
+    content: &str,
+    wl: &Workload,
+    fp: u64,
+    array: &[i64],
+    table: &EnergyTable,
+) -> Option<Vec<PresetVolumes>> {
+    let mut lines = content.lines();
+    if lines.next()? != MAGIC {
+        return None;
+    }
+    if lines.next()? != format!("workload {}", wl.name) {
+        return None;
+    }
+    if lines.next()? != format!("fingerprint {fp:016x}") {
+        return None;
+    }
+    let shape = array
+        .iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    if lines.next()? != format!("array {shape}") {
+        return None;
+    }
+    if lines.next()? != format!("table {:016x}", table.fingerprint()) {
+        return None;
+    }
+    let nphases: usize =
+        lines.next()?.strip_prefix("phases ")?.parse().ok()?;
+    if nphases != wl.phases.len() {
+        return None;
+    }
+    let mut out = Vec::with_capacity(nphases);
+    for ph in 0..nphases {
+        let nstmts: usize = lines
+            .next()?
+            .strip_prefix(&format!("phase {ph} statements "))?
+            .parse()
+            .ok()?;
+        let mut map = PresetVolumes::new();
+        for _ in 0..nstmts {
+            let parts: Vec<&str> = lines.next()?.split(' ').collect();
+            if parts.len() != 6
+                || parts[0] != "stmt"
+                || parts[2] != "nparams"
+                || parts[4] != "pieces"
+            {
+                return None;
+            }
+            let name = parts[1].to_string();
+            let np: usize = parts[3].parse().ok()?;
+            let npieces: usize = parts[5].parse().ok()?;
+            let mut gs = GuardedSum::zero(np);
+            for _ in 0..npieces {
+                let nc: usize =
+                    lines.next()?.strip_prefix("guard ")?.parse().ok()?;
+                let mut cs = Vec::with_capacity(nc);
+                for _ in 0..nc {
+                    let body = lines.next()?.strip_prefix("c ")?;
+                    cs.push(Constraint(parse_affine(body, np)?));
+                }
+                let nt: usize =
+                    lines.next()?.strip_prefix("poly ")?.parse().ok()?;
+                let mut terms = Vec::with_capacity(nt);
+                for _ in 0..nt {
+                    terms.push(parse_term(
+                        lines.next()?.strip_prefix("t ")?,
+                        np,
+                    )?);
+                }
+                // try_from_terms owns the capacity rules: a corrupt file
+                // degrades to recomputation, never a pack-assert panic.
+                gs.push(Guard::new(cs), Poly::try_from_terms(np, terms)?);
+            }
+            map.insert(name, gs);
+        }
+        out.push(map);
+    }
+    (lines.next()? == "end").then_some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::cache::workload_fingerprint;
+    use crate::workloads;
+
+    fn table() -> EnergyTable {
+        EnergyTable::default()
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tcpa-persist-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn volumes_round_trip_bit_for_bit() {
+        let dir = tmp_dir("roundtrip");
+        let cache = DiskCache::new(&dir);
+        let wl = workloads::by_name("gesummv").unwrap();
+        let fp = workload_fingerprint(&wl);
+        let ana = WorkloadAnalysis::analyze_uniform(&wl, &[2, 2]);
+        cache.store(&wl, fp, &[2, 2], &table(), &ana).unwrap();
+        let loaded = cache
+            .load(&wl, fp, &[2, 2], &table())
+            .expect("file just written");
+        assert_eq!(loaded.len(), ana.phases.len());
+        for (ph, m) in ana.phases.iter().zip(&loaded) {
+            assert_eq!(m.len(), ph.statements.len());
+            for st in &ph.statements {
+                assert_eq!(
+                    m.get(&st.name),
+                    Some(&st.volume),
+                    "volume of {} must survive the round trip exactly",
+                    st.name
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_or_corrupt_files_are_ignored() {
+        let dir = tmp_dir("corrupt");
+        let cache = DiskCache::new(&dir);
+        let wl = workloads::by_name("gesummv").unwrap();
+        let fp = workload_fingerprint(&wl);
+        // Nothing stored yet.
+        assert!(cache.load(&wl, fp, &[2, 2], &table()).is_none());
+        // Corrupt payload under the right file name.
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = cache.file_for(&wl.name, fp, &[2, 2], &table());
+        std::fs::write(&path, "tcpa-analysis-cache v1\ngarbage\n").unwrap();
+        assert!(cache.load(&wl, fp, &[2, 2], &table()).is_none());
+        // A different fingerprint (changed workload) must miss too.
+        let ana = WorkloadAnalysis::analyze_uniform(&wl, &[2, 2]);
+        cache.store(&wl, fp, &[2, 2], &table(), &ana).unwrap();
+        assert!(cache
+            .load(&wl, fp.wrapping_add(1), &[2, 2], &table())
+            .is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn distinct_arrays_use_distinct_files() {
+        let dir = tmp_dir("arrays");
+        let cache = DiskCache::new(&dir);
+        let wl = workloads::by_name("gesummv").unwrap();
+        let fp = workload_fingerprint(&wl);
+        let a = cache.file_for(&wl.name, fp, &[2, 2], &table());
+        let b = cache.file_for(&wl.name, fp, &[2, 3], &table());
+        assert_ne!(a, b);
+        // A different energy table is a different key, too.
+        let scaled = table().scaled(0.3, 0.12);
+        let c = cache.file_for(&wl.name, fp, &[2, 2], &scaled);
+        assert_ne!(a, c);
+    }
+}

@@ -131,6 +131,20 @@ impl EnergyTable {
         }
     }
 
+    /// Structural fingerprint over the exact bit patterns of every entry
+    /// — the persistent analysis cache keys files by it, so a cache
+    /// written under one table can never serve another.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        for e in self.access_pj {
+            e.to_bits().hash(&mut h);
+        }
+        self.add_pj.to_bits().hash(&mut h);
+        self.mul_pj.to_bits().hash(&mut h);
+        h.finish()
+    }
+
     /// Render Table I as markdown (for the `figures --table1` output).
     pub fn to_markdown(&self) -> String {
         let mut s = String::new();
@@ -186,6 +200,14 @@ mod tests {
         let e2 = t.access(MemoryClass::Id) + t.access(MemoryClass::Rd);
         assert!((e1 - 0.47).abs() < 1e-12);
         assert!((e2 - 0.36).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_separates_tables() {
+        let a = EnergyTable::table1_45nm();
+        let b = a.scaled(0.3, 0.12);
+        assert_eq!(a.fingerprint(), EnergyTable::default().fingerprint());
+        assert_ne!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

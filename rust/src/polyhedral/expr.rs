@@ -140,11 +140,28 @@ impl AffineExpr {
     /// Evaluate at a concrete parameter point.
     pub fn eval(&self, params: &[i64]) -> i64 {
         debug_assert_eq!(params.len(), self.coeffs.len());
+        i64::try_from(self.eval_i128(params))
+            .expect("affine evaluation overflow")
+    }
+
+    /// Evaluate in `i128` (cannot overflow for `i64` inputs: the sum of
+    /// `n` products of two `i64`s stays far below `i128::MAX`).
+    #[inline]
+    fn eval_i128(&self, params: &[i64]) -> i128 {
         let mut acc = self.konst as i128;
         for (c, p) in self.coeffs.iter().zip(params) {
             acc += (*c as i128) * (*p as i128);
         }
-        i64::try_from(acc).expect("affine evaluation overflow")
+        acc
+    }
+
+    /// Sign-only evaluation: `true` iff the form is ≥ 0 at `params`.
+    /// Guard evaluation uses this — a huge-but-valid value must not panic
+    /// the `i64` narrowing of [`Self::eval`].
+    #[inline]
+    pub fn nonneg_at(&self, params: &[i64]) -> bool {
+        debug_assert_eq!(params.len(), self.coeffs.len());
+        self.eval_i128(params) >= 0
     }
 
     /// Add a constant in place, returning self (builder style).
@@ -318,6 +335,16 @@ mod tests {
         let e = &(&AffineExpr::param(s.len(), 0) * 2)
             - &AffineExpr::param_scaled(s.len(), 1, 3, -7);
         assert_eq!(e.eval(&[10, 4]), 2 * 10 - 3 * 4 + 7);
+    }
+
+    #[test]
+    fn nonneg_at_never_narrows() {
+        let s = space2();
+        // A value far past i64 would panic eval's narrowing; the sign-only
+        // path must stay exact and calm.
+        let e = AffineExpr::param_scaled(s.len(), 0, i64::MAX, 0);
+        assert!(e.nonneg_at(&[i64::MAX, 0]));
+        assert!(!(-&e).nonneg_at(&[i64::MAX, 0]));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Chamber guards: conjunctions of affine constraints over the parameters.
+//! Chamber guards: conjunctions of affine constraints over the parameters,
+//! with **interned** constraints.
 //!
 //! The symbolic volume of a tiled statement space is piecewise polynomial:
 //! each piece is valid on a *chamber* of the parameter space described by a
@@ -7,8 +8,32 @@
 //! redundancy of guards are decided by rational Fourier–Motzkin elimination,
 //! which is conservative in the right direction: a rationally infeasible
 //! system has no integer points either.
+//!
+//! # Interning
+//!
+//! Every [`Constraint`] is canonicalized (gcd-normalized with integer
+//! tightening, see [`Constraint::ge0`]) and interned in the process-wide
+//! [`ConstraintPool`], which maps each distinct constraint to a stable
+//! `u32` id backed by a leaked (`&'static`) allocation. A [`Guard`] is then
+//! just a small **sorted vector of ids** plus a cached constant-falsity
+//! flag:
+//!
+//! * `and` / `and_guard` are O(n) integer merges — no expression clones;
+//! * equality, hashing and ordering are integer operations, which makes
+//!   guards cheap keys for the Fourier–Motzkin feasibility cache
+//!   ([`super::symbolic::SymbolicCtx`]) shared across cells, statements
+//!   and DSE points;
+//! * [`Guard::simplified`]'s probe loop shuffles ids and `&'static`
+//!   references instead of cloning constraint vectors.
+//!
+//! The pool only ever grows (ids are never invalidated); its size is
+//! bounded by the number of *distinct canonical* constraints, which is tiny
+//! in practice — bounds differ by constant shifts that normalize
+//! identically.
 
+use std::collections::HashMap;
 use std::fmt;
+use std::sync::{OnceLock, RwLock, RwLockReadGuard};
 
 use super::expr::{gcd_u64, AffineExpr, ParamSpace};
 
@@ -71,9 +96,10 @@ impl Constraint {
         self.0.as_const().map(|c| c >= 0)
     }
 
-    /// Evaluate at a concrete parameter point.
+    /// Evaluate at a concrete parameter point (sign-only `i128`
+    /// arithmetic — cannot overflow for `i64` parameters).
     pub fn holds(&self, params: &[i64]) -> bool {
-        self.0.eval(params) >= 0
+        self.0.nonneg_at(params)
     }
 
     /// Pretty-print as `expr >= 0` with parameter names.
@@ -94,81 +120,265 @@ impl fmt::Display for ConstraintDisplay<'_> {
     }
 }
 
-/// A conjunction of constraints describing a parameter-space chamber.
+/// Stable id of an interned [`Constraint`].
+pub type ConstraintId = u32;
+
+#[derive(Default)]
+struct PoolInner {
+    ids: HashMap<&'static Constraint, ConstraintId>,
+    items: Vec<&'static Constraint>,
+}
+
+fn pool() -> &'static RwLock<PoolInner> {
+    static POOL: OnceLock<RwLock<PoolInner>> = OnceLock::new();
+    POOL.get_or_init(|| RwLock::new(PoolInner::default()))
+}
+
+/// Read view over the interner. Never hold one across a call that may
+/// intern (interning takes the write lock).
+pub(crate) struct PoolRead(RwLockReadGuard<'static, PoolInner>);
+
+impl PoolRead {
+    pub(crate) fn get(&self, id: ConstraintId) -> &'static Constraint {
+        self.0.items[id as usize]
+    }
+}
+
+/// Acquire a read view of the global pool (cheap, shared).
+pub(crate) fn pool_read() -> PoolRead {
+    PoolRead(pool().read().unwrap())
+}
+
+/// The process-wide constraint interner. Canonical constraints map to
+/// stable `u32` ids; resolved references are `&'static` (the entries are
+/// leaked — the pool is append-only and bounded by the number of distinct
+/// canonical constraints ever built).
+pub struct ConstraintPool;
+
+impl ConstraintPool {
+    /// Intern `c`, returning its stable id. Read-locked fast path for the
+    /// (overwhelmingly common) already-interned case.
+    pub fn intern(c: Constraint) -> ConstraintId {
+        {
+            let inner = pool().read().unwrap();
+            if let Some(&id) = inner.ids.get(&c) {
+                return id;
+            }
+        }
+        let mut inner = pool().write().unwrap();
+        if let Some(&id) = inner.ids.get(&c) {
+            return id; // raced: another thread interned it first
+        }
+        let id = ConstraintId::try_from(inner.items.len())
+            .expect("constraint pool overflow");
+        let leaked: &'static Constraint = Box::leak(Box::new(c));
+        inner.ids.insert(leaked, id);
+        inner.items.push(leaked);
+        id
+    }
+
+    /// Resolve an id to its constraint.
+    pub fn get(id: ConstraintId) -> &'static Constraint {
+        pool_read().get(id)
+    }
+
+    /// Number of distinct constraints interned so far.
+    pub fn len() -> usize {
+        pool().read().unwrap().items.len()
+    }
+}
+
+/// A conjunction of constraints describing a parameter-space chamber,
+/// stored as a sorted, deduplicated vector of interned constraint ids.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
 pub struct Guard {
-    /// Sorted, deduplicated constraint list (normal form).
-    pub constraints: Vec<Constraint>,
+    /// Sorted, deduplicated ids (normal form).
+    ids: Vec<ConstraintId>,
+    /// Whether any member is a constant-false constraint (cached so the
+    /// hot feasibility path needs no pool access).
+    is_false: bool,
 }
 
 impl Guard {
     /// The trivially-true guard.
     pub fn always() -> Self {
-        Guard { constraints: Vec::new() }
+        Guard::default()
     }
 
-    /// Build from constraints, normalizing.
-    pub fn new(mut constraints: Vec<Constraint>) -> Self {
-        constraints.retain(|c| c.as_const() != Some(true));
-        constraints.sort();
-        constraints.dedup();
-        Guard { constraints }
+    /// Build from constraints, normalizing (constant-true members are
+    /// dropped, duplicates merged).
+    pub fn new(constraints: Vec<Constraint>) -> Self {
+        let mut ids = Vec::with_capacity(constraints.len());
+        let mut is_false = false;
+        for c in constraints {
+            match c.as_const() {
+                Some(true) => continue,
+                Some(false) => is_false = true,
+                None => {}
+            }
+            ids.push(ConstraintPool::intern(c));
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        Guard { ids, is_false }
     }
 
     /// Conjunction with one more constraint.
     pub fn and(&self, c: Constraint) -> Guard {
-        let mut cs = self.constraints.clone();
-        cs.push(c);
-        Guard::new(cs)
+        let truth = c.as_const();
+        if truth == Some(true) {
+            return self.clone();
+        }
+        let id = ConstraintPool::intern(c);
+        match self.ids.binary_search(&id) {
+            Ok(_) => self.clone(),
+            Err(pos) => {
+                let mut ids = Vec::with_capacity(self.ids.len() + 1);
+                ids.extend_from_slice(&self.ids[..pos]);
+                ids.push(id);
+                ids.extend_from_slice(&self.ids[pos..]);
+                Guard {
+                    ids,
+                    is_false: self.is_false || truth == Some(false),
+                }
+            }
+        }
     }
 
-    /// Conjunction of two guards.
+    /// Conjunction of two guards: a sorted integer merge, no expression
+    /// traffic at all.
     pub fn and_guard(&self, other: &Guard) -> Guard {
-        let mut cs = self.constraints.clone();
-        cs.extend(other.constraints.iter().cloned());
-        Guard::new(cs)
+        let (a, b) = (&self.ids, &other.ids);
+        let mut ids = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => {
+                    ids.push(a[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    ids.push(b[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    ids.push(a[i]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        ids.extend_from_slice(&a[i..]);
+        ids.extend_from_slice(&b[j..]);
+        Guard { ids, is_false: self.is_false || other.is_false }
+    }
+
+    /// Number of constraints.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// True for the trivially-true guard.
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// The sorted interned ids (crate-internal: chamber decomposition
+    /// works directly on ids).
+    pub(crate) fn ids(&self) -> &[ConstraintId] {
+        &self.ids
+    }
+
+    /// Whether the guard contains the constraint with this id.
+    pub(crate) fn contains_id(&self, id: ConstraintId) -> bool {
+        self.ids.binary_search(&id).is_ok()
+    }
+
+    /// Resolve to the member constraints, in id order.
+    pub fn resolved(&self) -> Vec<&'static Constraint> {
+        let pool = pool_read();
+        self.ids.iter().map(|&id| pool.get(id)).collect()
+    }
+
+    /// Member constraints sorted by content — the canonical cross-process
+    /// order (ids are assigned in interning order, which may vary).
+    pub(crate) fn sort_key(
+        &self,
+        pool: &PoolRead,
+    ) -> Vec<&'static Constraint> {
+        let mut v: Vec<&'static Constraint> =
+            self.ids.iter().map(|&id| pool.get(id)).collect();
+        v.sort_unstable();
+        v
     }
 
     /// Contains a syntactically-false constraint?
     pub fn has_false(&self) -> bool {
-        self.constraints.iter().any(|c| c.as_const() == Some(false))
+        self.is_false
     }
 
     /// Evaluate at a concrete parameter point.
     pub fn holds(&self, params: &[i64]) -> bool {
-        self.constraints.iter().all(|c| c.holds(params))
+        if self.is_false {
+            return false;
+        }
+        let pool = pool_read();
+        self.holds_in(&pool, params)
+    }
+
+    /// As [`Self::holds`] with a caller-held pool view (the batched form
+    /// used by `GuardedSum::eval`, which checks many guards per query).
+    pub(crate) fn holds_in(&self, pool: &PoolRead, params: &[i64]) -> bool {
+        self.ids.iter().all(|&id| pool.get(id).holds(params))
     }
 
     /// Rational feasibility via Fourier–Motzkin. `false` means *certainly*
     /// empty (also over the integers); `true` means rationally non-empty.
     pub fn feasible(&self) -> bool {
-        if self.has_false() {
+        if self.is_false {
             return false;
         }
-        fm_feasible(&self.constraints)
+        fm_feasible(&self.resolved())
     }
 
     /// Remove constraints implied by the rest (within `context`), producing
     /// a minimal readable guard. A constraint `c` is redundant iff
-    /// `rest ∧ context ∧ ¬c` is infeasible.
+    /// `rest ∧ context ∧ ¬c` is infeasible. Probes run in content order,
+    /// so the chosen minimal subset is stable across processes regardless
+    /// of interning order; the loop shuffles ids and `&'static` references
+    /// only — no expression clones.
     pub fn simplified(&self, context: &Guard) -> Guard {
-        let mut kept: Vec<Constraint> = self.constraints.clone();
+        let ctx_refs: Vec<&'static Constraint> = context.resolved();
+        let mut kept: Vec<(ConstraintId, &'static Constraint)> = {
+            let pool = pool_read();
+            let mut v: Vec<(ConstraintId, &'static Constraint)> =
+                self.ids.iter().map(|&id| (id, pool.get(id))).collect();
+            v.sort_by(|a, b| a.1.cmp(b.1));
+            v
+        };
         let mut i = 0;
         while i < kept.len() {
-            let c = kept[i].clone();
-            let mut probe: Vec<Constraint> = Vec::with_capacity(
-                kept.len() + context.constraints.len(),
-            );
-            probe.extend(kept.iter().enumerate().filter(|(j, _)| *j != i).map(|(_, x)| x.clone()));
-            probe.extend(context.constraints.iter().cloned());
-            probe.push(c.negated());
+            let neg = kept[i].1.negated();
+            let mut probe: Vec<&Constraint> = kept
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != i)
+                .map(|(_, &(_, c))| c)
+                .collect();
+            probe.extend(ctx_refs.iter().copied());
+            probe.push(&neg);
             if !fm_feasible(&probe) {
                 kept.remove(i); // implied: drop
             } else {
                 i += 1;
             }
         }
-        Guard::new(kept)
+        let mut ids: Vec<ConstraintId> =
+            kept.iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        let is_false =
+            kept.iter().any(|&(_, c)| c.as_const() == Some(false));
+        Guard { ids, is_false }
     }
 
     /// Pretty-print as ` a ∧ b ∧ …` using `<=`/`<`-style inequalities.
@@ -177,7 +387,8 @@ impl Guard {
     }
 }
 
-/// Formatting helper for [`Guard`].
+/// Formatting helper for [`Guard`]. Prints members in content order
+/// (stable across processes regardless of interning order).
 pub struct GuardDisplay<'a> {
     g: &'a Guard,
     space: &'a ParamSpace,
@@ -185,10 +396,12 @@ pub struct GuardDisplay<'a> {
 
 impl fmt::Display for GuardDisplay<'_> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        if self.g.constraints.is_empty() {
+        if self.g.ids.is_empty() {
             return write!(f, "true");
         }
-        for (i, c) in self.g.constraints.iter().enumerate() {
+        let mut cs = self.g.resolved();
+        cs.sort_unstable();
+        for (i, c) in cs.iter().enumerate() {
             if i > 0 {
                 write!(f, " and ")?;
             }
@@ -200,7 +413,7 @@ impl fmt::Display for GuardDisplay<'_> {
 
 /// Rational feasibility of `{x : e_i(x) ≥ 0}` by Fourier–Motzkin
 /// elimination with i128 arithmetic and gcd reduction at every step.
-fn fm_feasible(constraints: &[Constraint]) -> bool {
+pub(crate) fn fm_feasible(constraints: &[&Constraint]) -> bool {
     if constraints.is_empty() {
         return true;
     }
@@ -319,12 +532,50 @@ mod tests {
     }
 
     #[test]
+    fn interning_dedups_equal_constraints() {
+        let s = sp();
+        let a = ConstraintPool::intern(Constraint::ge(&n0(&s), &k(&s, 3)));
+        let b = ConstraintPool::intern(Constraint::ge(&n0(&s), &k(&s, 3)));
+        assert_eq!(a, b);
+        assert_eq!(
+            *ConstraintPool::get(a),
+            Constraint::ge(&n0(&s), &k(&s, 3))
+        );
+        assert!(ConstraintPool::len() >= 1);
+    }
+
+    #[test]
     fn guard_normalization_dedups() {
         let s = sp();
         let c = Constraint::ge(&n0(&s), &k(&s, 1));
         let g = Guard::new(vec![c.clone(), c.clone(), Constraint::ge0(k(&s, 7))]);
         // constant-true dropped, duplicate removed
-        assert_eq!(g.constraints.len(), 1);
+        assert_eq!(g.len(), 1);
+    }
+
+    #[test]
+    fn guard_equality_is_order_insensitive() {
+        let s = sp();
+        let a = Constraint::ge(&n0(&s), &k(&s, 2));
+        let b = Constraint::ge(&p0(&s), &k(&s, 1));
+        let g1 = Guard::new(vec![a.clone(), b.clone()]);
+        let g2 = Guard::new(vec![b.clone()]).and(a.clone());
+        let g3 = Guard::new(vec![a]).and_guard(&Guard::new(vec![b]));
+        assert_eq!(g1, g2);
+        assert_eq!(g1, g3);
+    }
+
+    #[test]
+    fn has_false_flag_tracks_constant_falsity() {
+        let s = sp();
+        let t = Guard::new(vec![Constraint::ge(&n0(&s), &k(&s, 1))]);
+        assert!(!t.has_false());
+        let f = t.and(Constraint::ge0(k(&s, -3)));
+        assert!(f.has_false());
+        assert!(!f.feasible());
+        assert!(!f.holds(&[5, 5]));
+        // and_guard propagates the flag
+        assert!(t.and_guard(&f).has_false());
     }
 
     #[test]
@@ -377,8 +628,11 @@ mod tests {
             Constraint::ge(&n0(&s), &p0(&s)),
         ]);
         let simp = g.simplified(&ctx);
-        assert_eq!(simp.constraints.len(), 1);
-        assert_eq!(simp.constraints[0], Constraint::ge(&n0(&s), &(&p0(&s) * 2)));
+        assert_eq!(simp.len(), 1);
+        assert_eq!(
+            *simp.resolved()[0],
+            Constraint::ge(&n0(&s), &(&p0(&s) * 2))
+        );
     }
 
     #[test]

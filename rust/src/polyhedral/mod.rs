@@ -12,8 +12,11 @@ pub mod symbolic;
 
 pub use count::{count_bruteforce, count_concrete};
 pub use expr::{AffineExpr, ParamSpace};
-pub use guard::{Constraint, Guard};
+pub use guard::{Constraint, ConstraintId, ConstraintPool, Guard};
 pub use piecewise::{GuardedSum, PiecewiseQPoly};
 pub use poly::Poly;
 pub use set::{k_grid, DimBounds, SetConstraint, SetError, TiledSet, UnfoldedCell};
-pub use symbolic::{count_symbolic, SymbolicOptions};
+pub use symbolic::{
+    count_symbolic, count_symbolic_in, FeasPool, FeasStats, SymbolicCtx,
+    SymbolicOptions,
+};

@@ -9,13 +9,18 @@
 //! * [`PiecewiseQPoly`] — a *disjoint case expression*, exactly the shape
 //!   the paper prints in Example 9 (`4p0(p1-1) if …, 2N0(p1-1) if …, …`).
 //!   Obtained from a [`GuardedSum`] by chamber decomposition.
+//!
+//! Guards are interned id vectors (see [`super::guard`]): merging pieces
+//! hashes small integer keys, and evaluation resolves all guards of a sum
+//! under a single shared pool view.
 
-use std::collections::BTreeMap;
+use std::collections::HashMap;
 use std::fmt;
 
 use super::expr::ParamSpace;
-use super::guard::{Constraint, Guard};
+use super::guard::{self, Constraint, Guard};
 use super::poly::Poly;
+use super::symbolic::SymbolicCtx;
 
 /// Additive collection of guarded polynomials: `value(x) = Σ {poly_i(x) :
 /// guard_i(x) holds}`.
@@ -53,26 +58,31 @@ impl GuardedSum {
 
     /// Merge pieces with *identical guards* (cheap syntactic compaction —
     /// the symbolic counter benefits a lot because many `k`-cells produce
-    /// the same chamber conditions).
+    /// the same chamber conditions). Guards hash as small id vectors, so
+    /// accumulation is a HashMap of integer keys; the result is then
+    /// ordered canonically by constraint *content* so piece order — and
+    /// with it every report — is identical across processes regardless of
+    /// interning order.
     pub fn compact(&mut self) {
-        // Measured in §Perf: BTreeMap accumulation beats a HashMap variant
-        // here (guard comparison is cheaper than hashing the full
-        // constraint vectors at these sizes).
-        let mut by_guard: BTreeMap<Guard, Poly> = BTreeMap::new();
+        let mut by_guard: HashMap<Guard, Poly> = HashMap::new();
         for (g, p) in self.pieces.drain(..) {
-            match by_guard.get_mut(&g) {
-                Some(acc) => {
-                    *acc = acc.add(&p);
+            match by_guard.entry(g) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    e.get_mut().add_assign(&p);
                 }
-                None => {
-                    by_guard.insert(g, p);
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(p);
                 }
             }
         }
-        self.pieces = by_guard
+        let pool = guard::pool_read();
+        let mut keyed: Vec<_> = by_guard
             .into_iter()
             .filter(|(_, p)| !p.is_zero())
+            .map(|(g, p)| (g.sort_key(&pool), g, p))
             .collect();
+        keyed.sort_by(|a, b| a.0.cmp(&b.0));
+        self.pieces = keyed.into_iter().map(|(_, g, p)| (g, p)).collect();
     }
 
     /// Sum of another guarded sum into this one.
@@ -93,27 +103,17 @@ impl GuardedSum {
         }
     }
 
-    /// Evaluate at a concrete parameter point. O(#pieces).
+    /// Evaluate at a concrete parameter point. O(#pieces), one shared
+    /// pool view for every guard of the sum.
     pub fn eval(&self, params: &[i64]) -> i128 {
+        let pool = guard::pool_read();
         let mut acc: i128 = 0;
         for (g, p) in &self.pieces {
-            if g.holds(params) {
+            if g.holds_in(&pool, params) {
                 acc += p.eval(params);
             }
         }
         acc
-    }
-
-    /// All distinct atomic constraints appearing in any guard.
-    fn atoms(&self) -> Vec<Constraint> {
-        let mut atoms: Vec<Constraint> = self
-            .pieces
-            .iter()
-            .flat_map(|(g, _)| g.constraints.iter().cloned())
-            .collect();
-        atoms.sort();
-        atoms.dedup();
-        atoms
     }
 
     /// Disjoint chamber decomposition relative to a `context` guard (the
@@ -123,13 +123,32 @@ impl GuardedSum {
     /// sums the polynomials of satisfied pieces per leaf chamber. Exact but
     /// worst-case exponential in the number of atoms; `max_chambers` caps
     /// the output (returns `None` if exceeded — callers fall back to the
-    /// additive form, which is always exact for evaluation).
+    /// additive form, which is always exact for evaluation). Feasibility
+    /// queries are memoized across the whole decomposition.
     pub fn disjointify(
         &self,
         context: &Guard,
         max_chambers: usize,
     ) -> Option<PiecewiseQPoly> {
-        let atoms = self.atoms();
+        // Distinct atomic constraints over all guards, in canonical
+        // (content) order so the printed case order is process-stable.
+        let atoms: Vec<(u32, &'static Constraint)> = {
+            let pool = guard::pool_read();
+            let mut ids: Vec<u32> = self
+                .pieces
+                .iter()
+                .flat_map(|(g, _)| g.ids().iter().copied())
+                .collect();
+            ids.sort_unstable();
+            ids.dedup();
+            let mut v: Vec<(u32, &'static Constraint)> =
+                ids.into_iter().map(|id| (id, pool.get(id))).collect();
+            v.sort_by(|a, b| a.1.cmp(b.1));
+            v
+        };
+        // Chambers here always include `context` (the stack seeds with
+        // it), so the memo context is trivial.
+        let feas = SymbolicCtx::new(&Guard::always());
         let mut out: Vec<(Guard, Poly)> = Vec::new();
         // Worklist of (chamber, atom index, active piece indices).
         let all: Vec<usize> = (0..self.pieces.len()).collect();
@@ -142,16 +161,16 @@ impl GuardedSum {
             // Find the next atom that is *undecided* for some active piece.
             let mut next = None;
             for idx in ai..atoms.len() {
-                let a = &atoms[idx];
-                let relevant = active.iter().any(|&pi| {
-                    self.pieces[pi].0.constraints.contains(a)
-                });
+                let (aid, a) = atoms[idx];
+                let relevant = active
+                    .iter()
+                    .any(|&pi| self.pieces[pi].0.contains_id(aid));
                 if relevant {
                     // Is it already decided by the chamber?
-                    let with_true = chamber.and(a.clone());
+                    let with_true = chamber.and((*a).clone());
                     let with_false = chamber.and(a.negated());
-                    let t = with_true.feasible();
-                    let f = with_false.feasible();
+                    let t = feas.feasible(&with_true);
+                    let f = feas.feasible(&with_false);
                     if t && f {
                         next = Some((idx, with_true, with_false));
                         break;
@@ -170,14 +189,14 @@ impl GuardedSum {
             }
             match next {
                 Some((idx, with_true, with_false)) => {
-                    let a = &atoms[idx];
+                    let aid = atoms[idx].0;
                     // True branch: pieces keep; false branch: drop pieces
-                    // whose guard contains `a`.
+                    // whose guard contains the atom.
                     let keep_true = active.clone();
                     let keep_false: Vec<usize> = active
                         .iter()
                         .copied()
-                        .filter(|&pi| !self.pieces[pi].0.constraints.contains(a))
+                        .filter(|&pi| !self.pieces[pi].0.contains_id(aid))
                         .collect();
                     stack.push((with_true, idx + 1, keep_true));
                     stack.push((with_false, idx + 1, keep_false));
@@ -186,7 +205,7 @@ impl GuardedSum {
                     }
                 }
                 None => {
-                    if !chamber.feasible() {
+                    if !feas.feasible(&chamber) {
                         continue;
                     }
                     // Leaf: every remaining active piece whose guard is
@@ -196,12 +215,19 @@ impl GuardedSum {
                         let (g, p) = &self.pieces[pi];
                         // All atoms of g must be satisfied in this chamber:
                         // they are, unless the chamber makes one infeasible.
-                        let ok = g.constraints.iter().all(|c| {
-                            !chamber.and(c.negated()).feasible()
-                                || chamber.constraints.contains(c)
+                        let members: Vec<(u32, &'static Constraint)> = {
+                            let pool = guard::pool_read();
+                            g.ids()
+                                .iter()
+                                .map(|&id| (id, pool.get(id)))
+                                .collect()
+                        };
+                        let ok = members.iter().all(|&(id, c)| {
+                            chamber.contains_id(id)
+                                || !feas.feasible(&chamber.and(c.negated()))
                         });
                         if ok {
-                            acc = acc.add(p);
+                            acc.add_assign(p);
                         }
                     }
                     if !acc.is_zero() {
@@ -341,6 +367,25 @@ mod tests {
         gs.push(g.clone(), Poly::constant(s.len(), -3));
         gs.compact();
         assert!(gs.pieces.is_empty());
+    }
+
+    #[test]
+    fn compact_orders_pieces_canonically() {
+        // Piece order after compaction follows constraint content, not
+        // interning order: building the same sum twice with the guards
+        // first seen in opposite orders must yield identical piece lists.
+        let s = sp();
+        let ga = Guard::new(vec![Constraint::ge(&n0(&s), &cst(&s, 7))]);
+        let gb = Guard::new(vec![Constraint::ge(&p0(&s), &cst(&s, 5))]);
+        let mut one = GuardedSum::zero(s.len());
+        one.push(ga.clone(), Poly::constant(s.len(), 1));
+        one.push(gb.clone(), Poly::constant(s.len(), 2));
+        one.compact();
+        let mut two = GuardedSum::zero(s.len());
+        two.push(gb, Poly::constant(s.len(), 2));
+        two.push(ga, Poly::constant(s.len(), 1));
+        two.compact();
+        assert_eq!(one, two);
     }
 
     #[test]

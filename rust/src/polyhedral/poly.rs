@@ -1,41 +1,144 @@
-//! Multivariate polynomials over the symbolic parameters.
+//! Multivariate polynomials over the symbolic parameters — **packed
+//! representation**.
 //!
 //! Volumes of the tiled statement spaces are products of per-dimension
 //! interval lengths, each affine in `(N, p)` — so volumes are polynomials of
 //! degree at most the loop depth per chamber (quasi-polynomial across
 //! chambers, see [`super::piecewise`]). Coefficients are `i128`: products of
 //! a few `i64` affine forms stay comfortably inside.
+//!
+//! # Packed exponent encoding
+//!
+//! A monomial's exponent vector is encoded into a single `u64` key: with
+//! `n ≤ 8` parameters each exponent occupies an 8-bit lane, parameter 0 in
+//! the most significant lane (so ascending key order equals ascending
+//! lexicographic order of exponent vectors — the same normal form the old
+//! `BTreeMap<Vec<u32>, _>` representation had). Spaces with more than 8
+//! parameters fall back gracefully to narrower lanes (`⌊64/n⌋` bits each,
+//! up to 64 parameters); exponents that do not fit a lane panic loudly
+//! rather than silently corrupting a key. Terms live in a `Vec<(u64, i128)>`
+//! sorted by key with no zero coefficients, so
+//!
+//! * `==` stays structural equality of polynomials,
+//! * `add`/`sub` are single-pass sorted merges (one allocation, no
+//!   per-term heap traffic),
+//! * `mul` is a row-merge: for each left term the right-hand terms shifted
+//!   by a lane-wise key addition are merged into the accumulator — the
+//!   inner loop performs **zero allocations** (the old representation
+//!   allocated one exponent `Vec` per term pair),
+//! * `eval` is a recursive multivariate Horner scheme over the sorted key
+//!   order, with every multiplication and addition checked.
+//!
+//! All arithmetic (`add`, `sub`, `mul`, `scale`, `eval`) is overflow-checked
+//! and panics with the same message on `i128` overflow.
 
-use std::collections::BTreeMap;
 use std::fmt;
 
 use super::expr::{AffineExpr, ParamSpace};
 
-/// Exponent vector: `expo[i]` is the power of parameter `P_i`.
+/// Exponent vector (unpacked view): `expo[i]` is the power of parameter
+/// `P_i`. Only used at the edges (construction, iteration, display); the
+/// in-memory representation is the packed `u64` key.
 pub type Expo = Vec<u32>;
+
+/// The one overflow panic message shared by all checked `Poly` arithmetic.
+const OVERFLOW: &str = "poly arithmetic overflow";
+
+/// Bits per exponent lane for a space with `nparams` parameters: 8 for the
+/// common `≤ 8`-parameter loop nests, narrower beyond that.
+#[inline]
+fn lane_bits(nparams: usize) -> u32 {
+    if nparams == 0 {
+        return 64; // constant-only polynomials; no lane is ever shifted
+    }
+    assert!(
+        nparams <= 64,
+        "packed Poly supports at most 64 parameters, got {nparams}"
+    );
+    (64 / nparams as u32).min(8)
+}
+
+/// Largest exponent a lane of `bits` bits can hold.
+#[inline]
+fn lane_max(bits: u32) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+/// Shift of parameter `i`'s lane (parameter 0 is most significant).
+#[inline]
+fn lane_shift(nparams: usize, bits: u32, i: usize) -> u32 {
+    ((nparams - 1 - i) as u32) * bits
+}
+
+/// Pack an exponent vector into a key. Panics if an exponent exceeds the
+/// lane capacity.
+fn pack(nparams: usize, bits: u32, expo: &[u32]) -> u64 {
+    debug_assert_eq!(expo.len(), nparams);
+    let max = lane_max(bits);
+    let mut key = 0u64;
+    for (i, &e) in expo.iter().enumerate() {
+        assert!(
+            e as u64 <= max,
+            "exponent {e} exceeds packed lane capacity {max} \
+             ({nparams} params, {bits}-bit lanes)"
+        );
+        key |= (e as u64) << lane_shift(nparams, bits, i);
+    }
+    key
+}
+
+/// Exponent of parameter `i` in a packed key.
+#[inline]
+fn unpack_lane(key: u64, nparams: usize, bits: u32, i: usize) -> u32 {
+    ((key >> lane_shift(nparams, bits, i)) & lane_max(bits)) as u32
+}
+
+/// Key of the product of two monomials (lane-wise exponent addition),
+/// checked lane by lane so an overflow can never carry silently.
+fn mono_mul(nparams: usize, bits: u32, a: u64, b: u64) -> u64 {
+    let max = lane_max(bits);
+    for i in 0..nparams {
+        let sh = lane_shift(nparams, bits, i);
+        let ea = (a >> sh) & max;
+        let eb = (b >> sh) & max;
+        assert!(
+            ea + eb <= max,
+            "exponent {ea}+{eb} exceeds packed lane capacity {max} \
+             ({nparams} params, {bits}-bit lanes)"
+        );
+    }
+    // No lane overflows, so plain u64 addition IS lane-wise addition.
+    a + b
+}
 
 /// A multivariate polynomial `Σ coeff · Π P_i^{e_i}` over a [`ParamSpace`].
 ///
-/// Stored sparsely as a map from exponent vector to coefficient; zero
+/// Stored sparsely as a key-sorted vector of packed terms; zero
 /// coefficients are never stored (normal form), so `==` is structural
 /// equality of polynomials.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Poly {
     nparams: usize,
-    terms: BTreeMap<Expo, i128>,
+    bits: u32,
+    /// Sorted by packed key; no zero coefficients.
+    terms: Vec<(u64, i128)>,
 }
 
 impl Poly {
     /// The zero polynomial.
     pub fn zero(nparams: usize) -> Self {
-        Poly { nparams, terms: BTreeMap::new() }
+        Poly { nparams, bits: lane_bits(nparams), terms: Vec::new() }
     }
 
     /// A constant polynomial.
     pub fn constant(nparams: usize, c: i128) -> Self {
         let mut p = Poly::zero(nparams);
         if c != 0 {
-            p.terms.insert(vec![0; nparams], c);
+            p.terms.push((0, c));
         }
         p
     }
@@ -45,16 +148,75 @@ impl Poly {
         let n = e.nparams();
         let mut p = Poly::zero(n);
         if e.konst != 0 {
-            p.terms.insert(vec![0; n], e.konst as i128);
+            p.terms.push((0, e.konst as i128));
         }
-        for (i, &c) in e.coeffs.iter().enumerate() {
+        // Parameter i's key is a single bit in its lane; iterating i in
+        // descending index order yields ascending keys (param 0 has the
+        // most significant lane).
+        for i in (0..n).rev() {
+            let c = e.coeffs[i];
             if c != 0 {
-                let mut ex = vec![0; n];
-                ex[i] = 1;
-                p.terms.insert(ex, c as i128);
+                p.terms.push((1u64 << lane_shift(n, p.bits, i), c as i128));
             }
         }
+        debug_assert!(p.terms.windows(2).all(|w| w[0].0 < w[1].0));
         p
+    }
+
+    /// Build from explicit `(exponent vector, coefficient)` terms
+    /// (duplicates are summed, zeros dropped). Used by the persistent
+    /// analysis cache and the differential test oracle.
+    pub fn from_terms<I>(nparams: usize, terms: I) -> Self
+    where
+        I: IntoIterator<Item = (Expo, i128)>,
+    {
+        let mut p = Poly::zero(nparams);
+        for (e, c) in terms {
+            let key = pack(nparams, p.bits, &e);
+            p.add_packed(key, c);
+        }
+        p
+    }
+
+    /// As [`Self::from_terms`], returning `None` instead of panicking
+    /// when the parameter count or an exponent exceeds the packed
+    /// encoding's capacity. This is the single authority on that
+    /// capacity for untrusted inputs — the persistent cache's loading
+    /// path must degrade to recomputation, never panic.
+    pub fn try_from_terms<I>(nparams: usize, terms: I) -> Option<Self>
+    where
+        I: IntoIterator<Item = (Expo, i128)>,
+    {
+        if nparams > 64 {
+            return None;
+        }
+        let mut p = Poly::zero(nparams);
+        let max = lane_max(p.bits);
+        for (e, c) in terms {
+            if e.len() != nparams || e.iter().any(|&x| x as u64 > max) {
+                return None;
+            }
+            p.add_packed(pack(nparams, p.bits, &e), c);
+        }
+        Some(p)
+    }
+
+    /// Iterate terms as `(exponent vector, coefficient)` pairs in key
+    /// (lexicographic) order.
+    pub fn terms(&self) -> impl Iterator<Item = (Expo, i128)> + '_ {
+        self.terms.iter().map(move |&(k, c)| {
+            (
+                (0..self.nparams)
+                    .map(|i| unpack_lane(k, self.nparams, self.bits, i))
+                    .collect(),
+                c,
+            )
+        })
+    }
+
+    /// Number of stored (non-zero) terms.
+    pub fn num_terms(&self) -> usize {
+        self.terms.len()
     }
 
     /// Number of parameters of the underlying space.
@@ -69,16 +231,9 @@ impl Poly {
 
     /// The constant value, when the polynomial has degree 0.
     pub fn as_const(&self) -> Option<i128> {
-        match self.terms.len() {
-            0 => Some(0),
-            1 => {
-                let (e, &c) = self.terms.iter().next().unwrap();
-                if e.iter().all(|&x| x == 0) {
-                    Some(c)
-                } else {
-                    None
-                }
-            }
+        match self.terms.as_slice() {
+            [] => Some(0),
+            [(0, c)] => Some(*c),
             _ => None,
         }
     }
@@ -86,84 +241,238 @@ impl Poly {
     /// Total degree (0 for the zero polynomial).
     pub fn degree(&self) -> u32 {
         self.terms
-            .keys()
-            .map(|e| e.iter().sum::<u32>())
+            .iter()
+            .map(|&(k, _)| {
+                (0..self.nparams)
+                    .map(|i| unpack_lane(k, self.nparams, self.bits, i))
+                    .sum::<u32>()
+            })
             .max()
             .unwrap_or(0)
     }
 
-    fn add_term(&mut self, expo: Expo, coeff: i128) {
+    /// Add `coeff` to the term with packed key `key`, removing the entry
+    /// outright if it cancels to zero (no re-scan).
+    fn add_packed(&mut self, key: u64, coeff: i128) {
         if coeff == 0 {
             return;
         }
-        let entry = self.terms.entry(expo).or_insert(0);
-        *entry += coeff;
-        if *entry == 0 {
-            // keep normal form: remove cancelled terms
-            let key: Vec<u32> = self
-                .terms
-                .iter()
-                .find(|(_, &v)| v == 0)
-                .map(|(k, _)| k.clone())
-                .unwrap();
-            self.terms.remove(&key);
+        match self.terms.binary_search_by_key(&key, |t| t.0) {
+            Ok(i) => {
+                let v = self.terms[i].1.checked_add(coeff).expect(OVERFLOW);
+                if v == 0 {
+                    self.terms.remove(i);
+                } else {
+                    self.terms[i].1 = v;
+                }
+            }
+            Err(i) => self.terms.insert(i, (key, coeff)),
         }
+    }
+
+    /// Single-pass sorted merge `self + sign·rhs`.
+    fn merged(&self, rhs: &Poly, sign: i128) -> Poly {
+        debug_assert_eq!(self.nparams, rhs.nparams);
+        let (a, b) = (&self.terms, &rhs.terms);
+        let mut out: Vec<(u64, i128)> = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            match a[i].0.cmp(&b[j].0) {
+                std::cmp::Ordering::Less => {
+                    out.push(a[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    let c = b[j].1.checked_mul(sign).expect(OVERFLOW);
+                    out.push((b[j].0, c));
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let c = a[i]
+                        .1
+                        .checked_add(
+                            b[j].1.checked_mul(sign).expect(OVERFLOW),
+                        )
+                        .expect(OVERFLOW);
+                    if c != 0 {
+                        out.push((a[i].0, c));
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        for &(k, c) in &b[j..] {
+            out.push((k, c.checked_mul(sign).expect(OVERFLOW)));
+        }
+        Poly { nparams: self.nparams, bits: self.bits, terms: out }
     }
 
     /// `self + rhs`.
     pub fn add(&self, rhs: &Poly) -> Poly {
-        debug_assert_eq!(self.nparams, rhs.nparams);
-        let mut out = self.clone();
-        for (e, &c) in &rhs.terms {
-            out.add_term(e.clone(), c);
-        }
-        out
+        self.merged(rhs, 1)
     }
 
     /// `self - rhs`.
     pub fn sub(&self, rhs: &Poly) -> Poly {
+        self.merged(rhs, -1)
+    }
+
+    /// `self += rhs` in place (binary-search inserts for small `rhs`, one
+    /// sorted merge otherwise).
+    pub fn add_assign(&mut self, rhs: &Poly) {
         debug_assert_eq!(self.nparams, rhs.nparams);
-        let mut out = self.clone();
-        for (e, &c) in &rhs.terms {
-            out.add_term(e.clone(), -c);
+        if rhs.terms.len() <= 4 {
+            for &(k, c) in &rhs.terms {
+                self.add_packed(k, c);
+            }
+        } else {
+            *self = self.merged(rhs, 1);
         }
-        out
+    }
+
+    /// `self -= rhs` in place.
+    pub fn sub_assign(&mut self, rhs: &Poly) {
+        debug_assert_eq!(self.nparams, rhs.nparams);
+        if rhs.terms.len() <= 4 {
+            for &(k, c) in &rhs.terms {
+                self.add_packed(k, c.checked_neg().expect(OVERFLOW));
+            }
+        } else {
+            *self = self.merged(rhs, -1);
+        }
+    }
+
+    /// `out += self · rhs`, allocation-free in the inner loop: each left
+    /// term's product row (right-hand keys shifted by a lane-wise key
+    /// addition, already sorted) is merged with the accumulator in one
+    /// pass, double-buffered through a reused scratch vector.
+    pub fn mul_into(&self, rhs: &Poly, out: &mut Poly) {
+        debug_assert_eq!(self.nparams, rhs.nparams);
+        debug_assert_eq!(self.nparams, out.nparams);
+        if self.is_zero() || rhs.is_zero() {
+            return;
+        }
+        let mut scratch: Vec<(u64, i128)> = Vec::new();
+        for &(ka, ca) in &self.terms {
+            scratch.clear();
+            scratch.reserve(out.terms.len() + rhs.terms.len());
+            let acc = &out.terms;
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < acc.len() && j < rhs.terms.len() {
+                let (kb, cb) = rhs.terms[j];
+                let key = mono_mul(self.nparams, self.bits, ka, kb);
+                match acc[i].0.cmp(&key) {
+                    std::cmp::Ordering::Less => {
+                        scratch.push(acc[i]);
+                        i += 1;
+                    }
+                    std::cmp::Ordering::Greater => {
+                        scratch
+                            .push((key, ca.checked_mul(cb).expect(OVERFLOW)));
+                        j += 1;
+                    }
+                    std::cmp::Ordering::Equal => {
+                        let c = acc[i]
+                            .1
+                            .checked_add(
+                                ca.checked_mul(cb).expect(OVERFLOW),
+                            )
+                            .expect(OVERFLOW);
+                        if c != 0 {
+                            scratch.push((acc[i].0, c));
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+            scratch.extend_from_slice(&acc[i..]);
+            for &(kb, cb) in &rhs.terms[j..] {
+                scratch.push((
+                    mono_mul(self.nparams, self.bits, ka, kb),
+                    ca.checked_mul(cb).expect(OVERFLOW),
+                ));
+            }
+            std::mem::swap(&mut out.terms, &mut scratch);
+        }
     }
 
     /// `self · rhs`.
     pub fn mul(&self, rhs: &Poly) -> Poly {
-        debug_assert_eq!(self.nparams, rhs.nparams);
         let mut out = Poly::zero(self.nparams);
-        for (ea, &ca) in &self.terms {
-            for (eb, &cb) in &rhs.terms {
-                let expo: Expo = ea.iter().zip(eb).map(|(a, b)| a + b).collect();
-                out.add_term(expo, ca.checked_mul(cb).expect("poly coeff overflow"));
-            }
-        }
+        self.mul_into(rhs, &mut out);
         out
     }
 
-    /// `self · c` for an integer constant.
+    /// `self · c` for an integer constant (checked).
     pub fn scale(&self, c: i128) -> Poly {
-        let mut out = Poly::zero(self.nparams);
-        for (e, &v) in &self.terms {
-            out.add_term(e.clone(), v * c);
+        if c == 0 {
+            return Poly::zero(self.nparams);
         }
-        out
+        Poly {
+            nparams: self.nparams,
+            bits: self.bits,
+            terms: self
+                .terms
+                .iter()
+                .map(|&(k, v)| (k, v.checked_mul(c).expect(OVERFLOW)))
+                .collect(),
+        }
     }
 
-    /// Evaluate at a concrete parameter point.
+    /// Evaluate at a concrete parameter point by recursive multivariate
+    /// Horner over the key-sorted terms: `P = Σ_e P0^e · Q_e(P1, …)`
+    /// becomes `(((Q_{e1}·P0^{e1-e2} + Q_{e2})·P0^{e2-e3} + …)·P0^{e_m})`,
+    /// one checked multiplication per exponent step instead of a fresh
+    /// power chain per term.
     pub fn eval(&self, params: &[i64]) -> i128 {
         debug_assert_eq!(params.len(), self.nparams);
+        if self.terms.is_empty() {
+            return 0;
+        }
+        self.horner(&self.terms, 0, params)
+    }
+
+    fn horner(
+        &self,
+        terms: &[(u64, i128)],
+        lane: usize,
+        params: &[i64],
+    ) -> i128 {
+        if lane == self.nparams {
+            // All exponents consumed; keys are unique, so exactly one term.
+            debug_assert_eq!(terms.len(), 1);
+            return terms[0].1;
+        }
+        let x = params[lane] as i128;
         let mut acc: i128 = 0;
-        for (e, &c) in &self.terms {
-            let mut t = c;
-            for (i, &pow) in e.iter().enumerate() {
-                for _ in 0..pow {
-                    t = t.checked_mul(params[i] as i128).expect("poly eval overflow");
-                }
+        let mut prev_e: Option<u32> = None;
+        // Terms within `terms` share all lanes above `lane`, so runs of
+        // equal `lane`-exponents are contiguous; walk them high-to-low.
+        let mut hi = terms.len();
+        while hi > 0 {
+            let e =
+                unpack_lane(terms[hi - 1].0, self.nparams, self.bits, lane);
+            let mut lo = hi - 1;
+            while lo > 0
+                && unpack_lane(terms[lo - 1].0, self.nparams, self.bits, lane)
+                    == e
+            {
+                lo -= 1;
             }
-            acc += t;
+            if let Some(pe) = prev_e {
+                acc = pow_mul(acc, x, pe - e);
+            }
+            acc = acc
+                .checked_add(self.horner(&terms[lo..hi], lane + 1, params))
+                .expect(OVERFLOW);
+            prev_e = Some(e);
+            hi = lo;
+        }
+        if let Some(e) = prev_e {
+            acc = pow_mul(acc, x, e);
         }
         acc
     }
@@ -179,6 +488,14 @@ impl Poly {
     }
 }
 
+/// `acc · x^k`, checked.
+fn pow_mul(mut acc: i128, x: i128, k: u32) -> i128 {
+    for _ in 0..k {
+        acc = acc.checked_mul(x).expect(OVERFLOW);
+    }
+    acc
+}
+
 /// Helper for `{}`-formatting a [`Poly`] with parameter names.
 pub struct PolyDisplay<'a> {
     poly: &'a Poly,
@@ -190,14 +507,15 @@ impl fmt::Display for PolyDisplay<'_> {
         if self.poly.terms.is_empty() {
             return write!(f, "0");
         }
-        // Print highest-degree terms first for readability.
-        let mut terms: Vec<(&Expo, &i128)> = self.poly.terms.iter().collect();
+        // Print highest-degree terms first for readability (stable sort on
+        // the lex-ascending key order, exactly the old normal form).
+        let mut terms: Vec<(Expo, i128)> = self.poly.terms().collect();
         terms.sort_by_key(|(e, _)| std::cmp::Reverse(e.iter().sum::<u32>()));
-        for (idx, (e, &c)) in terms.iter().enumerate() {
+        for (idx, (e, c)) in terms.iter().enumerate() {
             let is_const_term = e.iter().all(|&x| x == 0);
             if idx > 0 {
-                write!(f, " {} ", if c < 0 { "-" } else { "+" })?;
-            } else if c < 0 {
+                write!(f, " {} ", if *c < 0 { "-" } else { "+" })?;
+            } else if *c < 0 {
                 write!(f, "-")?;
             }
             let a = c.unsigned_abs();
@@ -258,6 +576,31 @@ mod tests {
     }
 
     #[test]
+    fn in_place_ops_match_functional_ones() {
+        let a = Poly::from_affine(&aff([1, 0, -2, 0], 3));
+        let b = Poly::from_affine(&aff([0, 2, 0, 1], -1));
+        let mut x = a.clone();
+        x.add_assign(&b);
+        assert_eq!(x, a.add(&b));
+        x.sub_assign(&b);
+        assert_eq!(x, a);
+        let mut acc = a.mul(&b);
+        a.mul_into(&b, &mut acc); // acc = 2·a·b
+        assert_eq!(acc, a.mul(&b).scale(2));
+    }
+
+    #[test]
+    fn cancelled_term_is_removed_outright() {
+        // a + b - b leaves exactly a's terms, no zero-coefficient entries.
+        let a = Poly::from_affine(&aff([1, 0, 0, 0], 0));
+        let b = Poly::from_affine(&aff([0, 1, 0, 0], 7));
+        let mut x = a.add(&b);
+        x.sub_assign(&b);
+        assert_eq!(x.num_terms(), 1);
+        assert_eq!(x, a);
+    }
+
+    #[test]
     fn normal_form_equality() {
         // (N0+1)(N0-1) == N0^2 - 1 structurally.
         let n0 = Poly::from_affine(&aff([1, 0, 0, 0], 0));
@@ -290,5 +633,78 @@ mod tests {
         let p = Poly::constant(4, 6).scale(-2);
         assert_eq!(p.as_const(), Some(-12));
         assert_eq!(p.eval_f64(&[0, 0, 0, 0]), -12.0);
+    }
+
+    #[test]
+    fn terms_round_trip_through_from_terms() {
+        let a = Poly::from_affine(&aff([2, -1, 0, 3], 5))
+            .mul(&Poly::from_affine(&aff([0, 1, 1, 0], -2)));
+        let rebuilt = Poly::from_terms(4, a.terms());
+        assert_eq!(rebuilt, a);
+    }
+
+    #[test]
+    fn try_from_terms_rejects_unpackable_input_without_panicking() {
+        let a = Poly::from_affine(&aff([2, -1, 0, 3], 5));
+        assert_eq!(Poly::try_from_terms(4, a.terms()), Some(a));
+        // Exponent past the 8-bit lane, wrong arity, too many params.
+        assert_eq!(Poly::try_from_terms(4, [(vec![256, 0, 0, 0], 1)]), None);
+        assert_eq!(Poly::try_from_terms(4, [(vec![1, 0], 1)]), None);
+        assert_eq!(
+            Poly::try_from_terms(65, std::iter::empty::<(Expo, i128)>()),
+            None
+        );
+    }
+
+    #[test]
+    fn horner_eval_handles_high_degree_and_large_values() {
+        // p0·p1 monomial at p = 2^32 → 2^64, well past i64 (the schedule
+        // scalability regression relies on this staying exact).
+        let p0 = Poly::from_affine(&aff([0, 0, 1, 0], 0));
+        let p1 = Poly::from_affine(&aff([0, 0, 0, 1], 0));
+        let prod = p0.mul(&p1);
+        let n = 1i64 << 32;
+        assert_eq!(prod.eval(&[0, 0, n, n]), 1i128 << 64);
+        // Degree-4 mixed term with interleaved lower-degree terms.
+        let q = prod.mul(&prod).add(&p0).sub(&Poly::constant(4, 9));
+        let pt = [3, 7, 5, 4];
+        assert_eq!(q.eval(&pt), (5i128 * 4).pow(2) + 5 - 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "poly arithmetic overflow")]
+    fn checked_scale_panics_on_overflow() {
+        Poly::constant(4, i128::MAX).scale(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "poly arithmetic overflow")]
+    fn checked_eval_panics_on_overflow() {
+        // (p0·p1)^2 at 2^32 → 2^128 overflows i128.
+        let p0 = Poly::from_affine(&aff([0, 0, 1, 0], 0));
+        let p1 = Poly::from_affine(&aff([0, 0, 0, 1], 0));
+        let prod = p0.mul(&p1);
+        let sq = prod.mul(&prod);
+        let n = 1i64 << 32;
+        sq.eval(&[0, 0, n, n]);
+    }
+
+    #[test]
+    fn narrow_lane_fallback_beyond_eight_params() {
+        // 10 parameters → 6-bit lanes; arithmetic still exact.
+        let n = 10usize;
+        let mut e1 = AffineExpr::zero(n);
+        e1.coeffs[0] = 1;
+        e1.konst = 1;
+        let mut e2 = AffineExpr::zero(n);
+        e2.coeffs[9] = 2;
+        let a = Poly::from_affine(&e1);
+        let b = Poly::from_affine(&e2);
+        let prod = a.mul(&b); // (P0+1)·2P9
+        let mut pt = vec![0i64; n];
+        pt[0] = 4;
+        pt[9] = 3;
+        assert_eq!(prod.eval(&pt), ((4 + 1) * 2 * 3) as i128);
+        assert_eq!(prod.degree(), 2);
     }
 }

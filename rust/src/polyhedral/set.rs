@@ -218,12 +218,17 @@ impl TiledSet {
         let mut dims = vec![DimBounds::default(); self.ndims];
         let mut param_conds = Vec::new();
         'constraints: for c in &self.constraints {
-            // Residual constant after substituting k values.
+            // Residual constant after substituting k values: fused
+            // multiply-add into one clone (the unfold loop runs per
+            // constraint per k-cell — no temporary expressions here).
             let mut resid = c.konst.clone();
             for l in 0..self.ndims {
-                let kc = &c.var_coeffs[self.kvar(l)];
                 if k[l] != 0 {
-                    resid = &resid + &(kc * k[l]);
+                    let kc = &c.var_coeffs[self.kvar(l)];
+                    for (r, &x) in resid.coeffs.iter_mut().zip(&kc.coeffs) {
+                        *r += x * k[l];
+                    }
+                    resid.konst += kc.konst * k[l];
                 } // k[l] == 0: term vanishes regardless of coefficient
             }
             // Which j variables remain?

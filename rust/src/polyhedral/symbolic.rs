@@ -18,9 +18,22 @@
 //! pruned. The result is a [`GuardedSum`] — exact at every parameter point
 //! of the context, property-tested against the enumeration oracle — which
 //! can be disjointified into the paper's Example-9 case expressions.
+//!
+//! # Feasibility caching
+//!
+//! Guards repeat massively — across the unfolded `k` cells (bounds differ
+//! only by constant shifts that normalize identically), across the
+//! dimensions of one cell, across the statement variants of one analysis,
+//! and across the design points of a DSE sweep that share a parameter
+//! context. [`SymbolicCtx`] memoizes Fourier–Motzkin feasibility per
+//! (interned) guard for one fixed context; [`FeasPool`] hands out one
+//! shared [`SymbolicCtx`] per distinct context so a whole
+//! `WorkloadAnalysis` — and, through `dse::AnalysisCache`, a whole sweep —
+//! runs Fourier–Motzkin **once per distinct guard**.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use super::expr::AffineExpr;
 use super::guard::{Constraint, Guard};
@@ -44,44 +57,139 @@ impl Default for SymbolicOptions {
     }
 }
 
-
-/// Memoized feasibility of `guard ∧ context`. Guards repeat massively
-/// across the unfolded `k` cells (the bounds differ only by constant
-/// shifts that normalize identically), so caching Fourier–Motzkin results
-/// cuts the one-time analysis cost dramatically (§Perf).
-struct FeasCache<'a> {
-    context: &'a Guard,
-    map: HashMap<Guard, bool>,
+/// Hit/miss counters of a [`SymbolicCtx`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FeasStats {
+    /// Queries answered from the memo table.
+    pub hits: u64,
+    /// Queries that ran Fourier–Motzkin.
+    pub misses: u64,
 }
 
-impl<'a> FeasCache<'a> {
-    fn new(context: &'a Guard) -> Self {
-        FeasCache { context, map: HashMap::new() }
+/// Memoized feasibility of `guard ∧ context` for one fixed `context`.
+///
+/// Thread-safe and shareable (`Arc`): the memo table is a mutex-guarded
+/// map keyed by the interned [`Guard`] — integer hashing, no expression
+/// traffic. Fourier–Motzkin runs *outside* the lock; concurrent misses on
+/// the same guard may duplicate a run, which is harmless (same result).
+#[derive(Debug)]
+pub struct SymbolicCtx {
+    context: Guard,
+    memo: Mutex<HashMap<Guard, bool>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SymbolicCtx {
+    /// A fresh feasibility cache for `context`.
+    pub fn new(context: &Guard) -> Self {
+        SymbolicCtx {
+            context: context.clone(),
+            memo: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
     }
 
-    fn feasible(&mut self, g: &Guard) -> bool {
+    /// The context every query is conjoined with.
+    pub fn context(&self) -> &Guard {
+        &self.context
+    }
+
+    /// Memoized feasibility of `g ∧ context`.
+    pub fn feasible(&self, g: &Guard) -> bool {
         if g.has_false() {
             return false;
         }
-        if let Some(&v) = self.map.get(g) {
+        if let Some(&v) = self.memo.lock().unwrap().get(g) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return v;
         }
-        let v = g.and_guard(self.context).feasible();
-        self.map.insert(g.clone(), v);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let v = g.and_guard(&self.context).feasible();
+        self.memo.lock().unwrap().insert(g.clone(), v);
         v
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> FeasStats {
+        FeasStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A pool of [`SymbolicCtx`]s keyed by their context guard, so every
+/// analysis (and every DSE point) with the same parameter context shares
+/// one Fourier–Motzkin memo table.
+#[derive(Debug, Default)]
+pub struct FeasPool {
+    ctxs: Mutex<HashMap<Guard, Arc<SymbolicCtx>>>,
+}
+
+impl FeasPool {
+    /// An empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The shared cache for `context` (created on first request).
+    pub fn ctx_for(&self, context: &Guard) -> Arc<SymbolicCtx> {
+        Arc::clone(
+            self.ctxs
+                .lock()
+                .unwrap()
+                .entry(context.clone())
+                .or_insert_with(|| Arc::new(SymbolicCtx::new(context))),
+        )
+    }
+
+    /// Number of distinct contexts seen.
+    pub fn len(&self) -> usize {
+        self.ctxs.lock().unwrap().len()
+    }
+
+    /// True when no context has been requested yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregate hit/miss counters over all contexts.
+    pub fn stats(&self) -> FeasStats {
+        let ctxs = self.ctxs.lock().unwrap();
+        let mut out = FeasStats::default();
+        for ctx in ctxs.values() {
+            let s = ctx.stats();
+            out.hits += s.hits;
+            out.misses += s.misses;
+        }
+        out
     }
 }
 
 /// Count `|set|` symbolically over the parameters, valid within `context`
-/// (the global assumptions, e.g. `N_ℓ ≥ 1 ∧ p_ℓ ≥ 1 ∧ …`).
+/// (the global assumptions, e.g. `N_ℓ ≥ 1 ∧ p_ℓ ≥ 1 ∧ …`), with a private
+/// single-use feasibility cache. Analyses counting several statement
+/// spaces under one context should use [`count_symbolic_in`] with a shared
+/// [`SymbolicCtx`] instead.
 pub fn count_symbolic(
     set: &TiledSet,
     t: &[i64],
     context: &Guard,
     opts: &SymbolicOptions,
 ) -> GuardedSum {
+    count_symbolic_in(set, t, &SymbolicCtx::new(context), opts)
+}
+
+/// As [`count_symbolic`] against a caller-shared feasibility cache.
+pub fn count_symbolic_in(
+    set: &TiledSet,
+    t: &[i64],
+    ctx: &SymbolicCtx,
+    opts: &SymbolicOptions,
+) -> GuardedSum {
     let mut out = GuardedSum::zero(set.nparams);
-    let cache = RefCell::new(FeasCache::new(context));
     for k in k_grid(t) {
         let cell = set
             .substitute_k(&k)
@@ -97,7 +205,7 @@ pub fn count_symbolic(
             }
             cell_guard = cell_guard.and(c);
         }
-        if dead || !cache.borrow_mut().feasible(&cell_guard) {
+        if dead || !ctx.feasible(&cell_guard) {
             continue;
         }
         resolve_dims(
@@ -105,7 +213,7 @@ pub fn count_symbolic(
             0,
             cell_guard,
             Poly::constant(set.nparams, 1),
-            &cache,
+            ctx,
             opts,
             &mut out,
             &mut 0usize,
@@ -124,7 +232,7 @@ fn resolve_dims(
     d: usize,
     guard: Guard,
     acc: Poly,
-    cache: &RefCell<FeasCache<'_>>,
+    ctx: &SymbolicCtx,
     opts: &SymbolicOptions,
     out: &mut GuardedSum,
     branches: &mut usize,
@@ -144,31 +252,31 @@ fn resolve_dims(
         !db.lowers.is_empty() && !db.uppers.is_empty(),
         "dimension {d} lacks a finite bound"
     );
-    resolve_max(
-        &db.lowers, 0, guard, cache, opts, branches,
+    resolve_extremum(
+        &db.lowers, guard, ctx, opts, branches, true,
         &mut |lo: AffineExpr, g: Guard, br: &mut usize| {
-            resolve_min(
-                &db.uppers, 0, g, cache, opts, br,
+            resolve_extremum(
+                &db.uppers, g, ctx, opts, br, false,
                 &mut |hi: AffineExpr, g2: Guard, br2: &mut usize| {
                     // len = hi - lo + 1; split on len >= 1 i.e. hi - lo >= 0.
                     let len = (&hi - &lo).plus(1);
                     let nonempty = Constraint::ge0((&hi - &lo).clone());
                     match nonempty.as_const() {
-                        Some(false) => return, // certainly empty
+                        Some(false) => (), // certainly empty
                         Some(true) => {
                             let g3 = g2.clone();
                             let acc2 = acc.mul(&Poly::from_affine(&len));
                             resolve_dims(
-                                dims, d + 1, g3, acc2, cache, opts, out, br2,
+                                dims, d + 1, g3, acc2, ctx, opts, out, br2,
                             );
                         }
                         None => {
                             // non-empty branch
                             let g_yes = g2.and(nonempty.clone());
-                            if cache.borrow_mut().feasible(&g_yes) {
+                            if ctx.feasible(&g_yes) {
                                 let acc2 = acc.mul(&Poly::from_affine(&len));
                                 resolve_dims(
-                                    dims, d + 1, g_yes, acc2, cache, opts,
+                                    dims, d + 1, g_yes, acc2, ctx, opts,
                                     out, br2,
                                 );
                             }
@@ -181,40 +289,14 @@ fn resolve_dims(
     );
 }
 
-/// Tournament-resolve `max(bounds[i..])` into (winner, guard) pairs.
-fn resolve_max(
-    bounds: &[AffineExpr],
-    _start: usize,
-    guard: Guard,
-    cache: &RefCell<FeasCache<'_>>,
-    opts: &SymbolicOptions,
-    branches: &mut usize,
-    f: &mut dyn FnMut(AffineExpr, Guard, &mut usize),
-) {
-    resolve_extremum(bounds, guard, cache, opts, branches, true, f)
-}
-
-/// Tournament-resolve `min(bounds[i..])`.
-fn resolve_min(
-    bounds: &[AffineExpr],
-    _start: usize,
-    guard: Guard,
-    cache: &RefCell<FeasCache<'_>>,
-    opts: &SymbolicOptions,
-    branches: &mut usize,
-    f: &mut dyn FnMut(AffineExpr, Guard, &mut usize),
-) {
-    resolve_extremum(bounds, guard, cache, opts, branches, false, f)
-}
-
-/// Shared tournament: repeatedly compare the current champion `c` with the
-/// next contender `x`, splitting the chamber on `c ≥ x` (max) or `c ≤ x`
-/// (min). Syntactically-equal bounds and context-decided comparisons do
-/// not split.
+/// Shared tournament resolving `max(bounds)` (`want_max`) or `min(bounds)`:
+/// repeatedly compare the current champion `c` with the next contender `x`,
+/// splitting the chamber on `c ≥ x` (max) or `c ≤ x` (min). Syntactically-
+/// equal bounds and context-decided comparisons do not split.
 fn resolve_extremum(
     bounds: &[AffineExpr],
     guard: Guard,
-    cache: &RefCell<FeasCache<'_>>,
+    ctx: &SymbolicCtx,
     opts: &SymbolicOptions,
     branches: &mut usize,
     want_max: bool,
@@ -260,8 +342,8 @@ fn resolve_extremum(
             None => {
                 let g_yes = guard.and(champion_wins.clone());
                 let g_no = guard.and(champion_wins.negated());
-                let yes_ok = cache.borrow_mut().feasible(&g_yes);
-                let no_ok = cache.borrow_mut().feasible(&g_no);
+                let yes_ok = ctx.feasible(&g_yes);
+                let no_ok = ctx.feasible(&g_no);
                 match (yes_ok, no_ok) {
                     (true, true) => {
                         stack.push(Frame {
@@ -355,6 +437,50 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn shared_ctx_counts_identically_and_caches_across_calls() {
+        // One SymbolicCtx across two statement spaces: identical results
+        // to private caches, with cross-call memo hits.
+        let (sp, set) = base_space(&[2, 2]);
+        let (_, mut set2) = base_space(&[2, 2]);
+        let np = sp.len();
+        set2.add_global_affine(
+            &[0, 1],
+            AffineExpr::constant(np, -1),
+            &[sp.p_index(0), sp.p_index(1)],
+        );
+        let ctx_guard = context(&sp, 2);
+        let shared = SymbolicCtx::new(&ctx_guard);
+        let opts = SymbolicOptions::default();
+        let a1 = count_symbolic_in(&set, &[2, 2], &shared, &opts);
+        let first = shared.stats();
+        let b1 = count_symbolic_in(&set2, &[2, 2], &shared, &opts);
+        let second = shared.stats();
+        assert_eq!(a1, count_symbolic(&set, &[2, 2], &ctx_guard, &opts));
+        assert_eq!(b1, count_symbolic(&set2, &[2, 2], &ctx_guard, &opts));
+        // The second space re-asks many of the first space's guards.
+        assert!(
+            second.hits > first.hits,
+            "expected cross-call hits: {first:?} → {second:?}"
+        );
+    }
+
+    #[test]
+    fn feas_pool_shares_ctx_per_context() {
+        let (sp, _) = base_space(&[2, 2]);
+        let g = context(&sp, 2);
+        let pool = FeasPool::new();
+        assert!(pool.is_empty());
+        let a = pool.ctx_for(&g);
+        let b = pool.ctx_for(&g);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(pool.len(), 1);
+        let other = Guard::always();
+        let c = pool.ctx_for(&other);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(pool.len(), 2);
     }
 
     #[test]

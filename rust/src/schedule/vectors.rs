@@ -286,10 +286,11 @@ pub fn find_schedule(tiled: &TiledPra, pi: i64) -> Result<Schedule, ScheduleErro
         {
             continue;
         }
-        // required = π − λ^J·d_J
+        // required = π − λ^J·d_J  (accumulated in place: one growing
+        // packed polynomial, no per-term temporaries)
         let mut lj_dj = Poly::zero(np);
         for l in 0..n {
-            lj_dj = lj_dj.add(&lambda_j[l].mul(&Poly::from_affine(&st.dj[l])));
+            lambda_j[l].mul_into(&Poly::from_affine(&st.dj[l]), &mut lj_dj);
         }
         let required = Poly::constant(np, pi as i128).sub(&lj_dj);
         let nonzero: Vec<usize> =
