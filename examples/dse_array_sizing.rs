@@ -6,7 +6,10 @@
 //! analyzed once, then three problem sizes are swept against the cached
 //! expressions. The result is a multi-objective (energy, latency, PEs,
 //! DRAM) Pareto frontier per size instead of a single EDP ranking —
-//! exactly the early-design-stage use the paper motivates.
+//! exactly the early-design-stage use the paper motivates. A final
+//! sweep turns the schedule vector itself into an axis
+//! (`with_schedules`): every feasible `(permutation, λ^J, λ^K)` per
+//! mapping is priced against the same cached analysis.
 //!
 //! ```bash
 //! cargo run --release --example dse_array_sizing
@@ -14,6 +17,7 @@
 
 use tcpa_energy::dse::{
     explore_with_cache, AnalysisCache, DesignSpace, ExploreConfig,
+    SchedulePolicy,
 };
 use tcpa_energy::energy::Backend;
 use tcpa_energy::workloads;
@@ -112,6 +116,46 @@ fn main() {
         "  8x8 array: CGRA transport costs {:+.1}% energy vs TCPA",
         100.0 * (c - t) / t
     );
+
+    // Schedule sweep: `find_schedule` picks one λ per mapping, but a
+    // mapping generally admits several causal dimension orders with the
+    // same energy and different latency. Sweeping them is free — the λ
+    // candidates share each shape's cached analysis — and on asymmetric
+    // mappings a non-default schedule genuinely wins (GESUMMV on a 1×8
+    // column: the swapped order keeps the accumulation offset off the
+    // mapped dimension).
+    let gsv = workloads::by_name("gesummv").unwrap();
+    let sched_cache = AnalysisCache::new();
+    let sched_space = DesignSpace::new()
+        .with_arrays(vec![vec![1, 8], vec![8, 1], vec![4, 4]])
+        .with_bounds(vec![64, 64])
+        .with_schedules(SchedulePolicy::All);
+    let res = explore_with_cache(
+        &gsv,
+        &sched_space,
+        &ExploreConfig::default(),
+        &sched_cache,
+    );
+    println!(
+        "\nGESUMMV schedule sweep at N=64: {} λ candidates from {} \
+         analyses",
+        res.points.len(),
+        sched_cache.stats().misses
+    );
+    println!(
+        "{:>7} {:>14} {:>14} {:>12} {:>7}",
+        "array", "schedule", "E_tot [pJ]", "L [cyc]", "pareto"
+    );
+    for (i, p) in res.points.iter().enumerate() {
+        println!(
+            "{:>7} {:>14} {:>14.3e} {:>12} {:>7}",
+            p.point.array_label(),
+            format!("{} ({})", p.point.schedule.label(), p.schedule_label),
+            p.energy_pj,
+            p.latency_cycles,
+            if res.frontier.contains(&i) { "yes" } else { "" }
+        );
+    }
 
     // Cache effect: every size and backend after the first sweep reused
     // the same per-shape analyses.

@@ -1,0 +1,138 @@
+//! Throughput of the schedule-vector enumerator and the structural
+//! cheapness of the DSE schedule axis.
+//!
+//! Two measurements, appended to `BENCH_symbolic.json` (section
+//! `schedule_enumeration`) for the CI perf trajectory:
+//!
+//! * **candidates/sec** — `schedule::enumerate_schedules` over every
+//!   built-in workload phase on its canonical mapping: full symbolic
+//!   `(permutation, λ^J, λ^K)` construction per causal permutation.
+//! * **shared-analysis reuse ratio** — an all-schedules sweep
+//!   (`DesignSpace::with_schedules(All)`) over shapes × bounds ×
+//!   λ candidates, divided by the number of symbolic analyses it ran:
+//!   how many evaluated design points each one-time analysis served.
+//!   The λ expansion multiplies points, never analyses, so this must
+//!   exceed the points-per-analysis ratio of the single-schedule sweep.
+//!
+//! ```bash
+//! cargo bench --bench schedule_enumeration [-- --quick]
+//! ```
+
+use std::fmt::Write as _;
+
+use tcpa_energy::bench_util::{
+    bench, bench_symbolic_json_path, write_bench_section,
+};
+use tcpa_energy::dse::{
+    explore_with_cache, AnalysisCache, DesignSpace, ExploreConfig,
+    SchedulePolicy,
+};
+use tcpa_energy::schedule::enumerate_schedules;
+use tcpa_energy::tiling::{pad_array, tile_pra, ArrayMapping};
+use tcpa_energy::workloads;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 20 } else { 200 };
+
+    // --- candidates/sec across every built-in workload phase ----------
+    let wls = workloads::all();
+    let tiled_phases: Vec<(String, tcpa_energy::tiling::TiledPra)> = wls
+        .iter()
+        .flat_map(|wl| {
+            wl.phases.iter().map(|ph| {
+                let t = pad_array(&[2, 2], ph.ndims);
+                (ph.name.clone(), tile_pra(ph, &ArrayMapping::new(t)))
+            })
+        })
+        .collect();
+    let counts: Vec<usize> = tiled_phases
+        .iter()
+        .map(|(_, tiled)| enumerate_schedules(tiled, 1, None).len())
+        .collect();
+    let total_candidates: usize = counts.iter().sum();
+    assert!(
+        counts.iter().all(|&c| c >= 1),
+        "every schedulable phase must enumerate at least one candidate"
+    );
+    let stats = bench(2, reps, || {
+        tiled_phases
+            .iter()
+            .map(|(_, tiled)| enumerate_schedules(tiled, 1, None).len())
+            .sum::<usize>()
+    });
+    let cand_per_sec =
+        total_candidates as f64 / stats.median.as_secs_f64().max(1e-12);
+    println!(
+        "enumerate_schedules: {total_candidates} candidates over {} \
+         phases, {} per pass — {cand_per_sec:.0} candidates/sec",
+        tiled_phases.len(),
+        stats.summary()
+    );
+    let mut per_phase_json = String::from("{");
+    for (i, ((name, _), c)) in
+        tiled_phases.iter().zip(&counts).enumerate()
+    {
+        let _ = write!(
+            per_phase_json,
+            "{}{name:?}: {c}",
+            if i > 0 { ", " } else { "" }
+        );
+    }
+    per_phase_json.push('}');
+
+    // --- shared-analysis reuse across λ candidates at fixed shape -----
+    let wl = workloads::by_name("gesummv").unwrap();
+    let sizes: &[i64] = if quick { &[8, 16] } else { &[8, 16, 32, 64] };
+    let space = |policy| {
+        DesignSpace::new()
+            .with_arrays_2d(8)
+            .with_bounds_sweep(sizes, 2)
+            .with_schedules(policy)
+    };
+    let run = |policy| {
+        let cache = AnalysisCache::new();
+        let res = explore_with_cache(
+            &wl,
+            &space(policy),
+            &ExploreConfig::default(),
+            &cache,
+        );
+        assert!(res.failures.is_empty(), "{:?}", res.failures);
+        (res.points.len(), cache.stats().misses.max(1))
+    };
+    let (first_points, first_analyses) = run(SchedulePolicy::First);
+    let (all_points, all_analyses) = run(SchedulePolicy::All);
+    assert_eq!(
+        first_analyses, all_analyses,
+        "the λ axis must never add symbolic analyses"
+    );
+    let first_ratio = first_points as f64 / first_analyses as f64;
+    let all_ratio = all_points as f64 / all_analyses as f64;
+    assert!(
+        all_ratio > first_ratio,
+        "λ expansion must raise points-per-analysis: \
+         {all_ratio:.1} vs {first_ratio:.1}"
+    );
+    println!(
+        "reuse: {all_points} schedule-expanded points from \
+         {all_analyses} analyses ({all_ratio:.1} evals/analysis; \
+         single-schedule sweep: {first_ratio:.1})"
+    );
+
+    let body = format!(
+        "{{\"total_candidates\": {total_candidates}, \
+         \"candidates_per_sec\": {cand_per_sec:.1}, \
+         \"per_phase_candidates\": {per_phase_json}, \
+         \"sweep_points_all\": {all_points}, \
+         \"sweep_points_first\": {first_points}, \
+         \"analyses\": {all_analyses}, \
+         \"reuse_ratio_all\": {all_ratio:.3}, \
+         \"reuse_ratio_first\": {first_ratio:.3}, \
+         \"quick\": {quick}}}"
+    );
+    let path = bench_symbolic_json_path();
+    write_bench_section(&path, "schedule_enumeration", &body)
+        .expect("writing BENCH_symbolic.json");
+    println!("section schedule_enumeration → {}", path.display());
+}

@@ -162,9 +162,26 @@ impl SymbolicAnalysis {
         out
     }
 
-    /// Global latency `L` (Eq. 8) in cycles at concrete parameters.
+    /// Global latency `L` (Eq. 8) in cycles at concrete parameters,
+    /// under the analysis' default schedule ([`find_schedule`]'s pick).
+    ///
+    /// [`find_schedule`]: crate::schedule::find_schedule
     pub fn latency_at(&self, params: &[i64]) -> i64 {
         latency(&self.schedule, &self.tiled, params)
+    }
+
+    /// Global latency under an *alternative* schedule of the same tiled
+    /// mapping (one of [`SymbolicAnalysis::enumerate_schedules`]'s
+    /// candidates). Counts and energies are schedule-invariant — the
+    /// symbolic volumes depend only on the tiling — so swapping the
+    /// schedule re-prices latency alone; this is what lets the DSE
+    /// explorer sweep λ candidates against one shared analysis.
+    pub fn latency_at_with(
+        &self,
+        schedule: &crate::schedule::Schedule,
+        params: &[i64],
+    ) -> i64 {
+        latency(schedule, &self.tiled, params)
     }
 
     /// Energy-delay product in pJ·cycles (a derived DSE metric).

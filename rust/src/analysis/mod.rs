@@ -138,6 +138,21 @@ impl SymbolicAnalysis {
     pub fn params_for(&self, n: &[i64]) -> Vec<i64> {
         self.tiled.mapping.params_for(n)
     }
+
+    /// All feasible schedule candidates of this analysis' tiled mapping
+    /// at its initiation interval, capped at `limit` (`None` = all).
+    /// Candidate 0 is always [`Self::analyze`]'s embedded default
+    /// ([`crate::schedule::find_schedule`]'s pick); the symbolic volumes
+    /// — and therefore counts and energies — are shared by every
+    /// candidate, only latency varies
+    /// ([`SymbolicAnalysis::latency_at_with`]).
+    pub fn enumerate_schedules(&self, limit: Option<usize>) -> Vec<Schedule> {
+        crate::schedule::enumerate_schedules(
+            &self.tiled,
+            self.schedule.pi,
+            limit,
+        )
+    }
 }
 
 /// Multi-phase workload analysis: one [`SymbolicAnalysis`] per phase.

@@ -10,23 +10,31 @@
 //!                      [--arrays 1d|2d] [--bounds-sweep 32,64,128]
 //!                      [--tile-scales 1,2]
 //!                      [--backend all|tcpa,cgra,gpu-sm,systolic]
+//!                      [--schedules all|first|N]
 //!                      [--policies all|tcpa,no-fd,no-reuse]   (legacy)
 //!                      [--prune-symmetric] [--workers N] [--out DIR]
-//!                      [--analysis-cache DIR]
+//!                      [--analysis-cache DIR] [--prune-cache]
 //! tcpa-energy figures  [--out results] [--quick]
 //! ```
 //!
 //! `backends` lists the built-in cross-architecture energy backends;
 //! `dse --backend` sweeps them as a first-class axis, emitting one Pareto
 //! frontier per (bounds, backend) scenario from a single symbolic
-//! analysis per array shape.
+//! analysis per array shape. `dse --schedules all` additionally sweeps
+//! every feasible schedule vector `(permutation, λ^J, λ^K)` per mapping
+//! — latency becomes an explored objective at identical energy, all
+//! candidates priced against the same cached analysis (`first`, the
+//! default, reproduces the single-schedule sweep bit-for-bit; an integer
+//! caps candidates per phase). `--prune-cache` (with `--analysis-cache`)
+//! removes spilled entries whose workload fingerprint went stale.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::analysis::SymbolicAnalysis;
 use crate::dse::{
-    explore, explore_with_cache, AnalysisCache, DesignSpace, ExploreConfig,
+    explore, explore_with_cache, workload_fingerprint, AnalysisCache,
+    DesignSpace, ExploreConfig, SchedulePolicy,
 };
 use crate::energy::{AccessClass, Backend, MemoryClass, Policy};
 use crate::report::{
@@ -366,6 +374,22 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 }
                 space = space.with_tile_scales(scales);
             }
+            if let Some(s) = flags.get("schedules") {
+                let policy = match s.as_str() {
+                    "all" => SchedulePolicy::All,
+                    "first" => SchedulePolicy::First,
+                    n => match n.parse::<usize>() {
+                        Ok(cap) if cap >= 1 => SchedulePolicy::Limit(cap),
+                        _ => {
+                            return Err(CliError::Usage(format!(
+                                "--schedules expects all, first, or a \
+                                 per-phase candidate cap >= 1, got {s}"
+                            )))
+                        }
+                    },
+                };
+                space = space.with_schedules(policy);
+            }
             if flags.contains_key("backend") && flags.contains_key("policies")
             {
                 return Err(CliError::Usage(
@@ -429,11 +453,33 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                     // Persistent spill: repeated CLI invocations reload the
                     // one-time symbolic volumes instead of recomputing.
                     let cache = AnalysisCache::with_disk(dir);
-                    explore_with_cache(&wl, &space, &cfg, &cache)
+                    let res = explore_with_cache(&wl, &space, &cfg, &cache);
+                    if flags.contains_key("prune-cache") {
+                        let live =
+                            [(wl.name.clone(), workload_fingerprint(&wl))];
+                        match cache.prune_disk(&live) {
+                            Ok(0) => {}
+                            Ok(n) => println!(
+                                "pruned {n} stale analysis-cache file(s)"
+                            ),
+                            // Advisory, like the spill itself: a prune
+                            // failure must not fail the sweep.
+                            Err(e) => eprintln!(
+                                "analysis-cache prune failed: {e}"
+                            ),
+                        }
+                    }
+                    res
                 }
                 Some(_) => {
                     return Err(CliError::Usage(
                         "--analysis-cache expects a directory".into(),
+                    ))
+                }
+                None if flags.contains_key("prune-cache") => {
+                    return Err(CliError::Usage(
+                        "--prune-cache requires --analysis-cache DIR"
+                            .into(),
                     ))
                 }
                 None => explore(&wl, &space, &cfg),
@@ -464,9 +510,16 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             println!("{}", dse_frontier_markdown(&res));
             for g in &res.groups {
                 if let Some(k) = g.knee.map(|i| &res.points[i]) {
+                    // Name the schedule only when a non-default candidate
+                    // won — the default pick is implied otherwise.
+                    let sched = if k.point.schedule.is_default() {
+                        String::new()
+                    } else {
+                        format!(", schedule {}", k.schedule_label)
+                    };
                     println!(
                         "knee [bounds {:?}, {}]: {} ({} PEs, {:.1} pJ, \
-                         {} cycles)",
+                         {} cycles{sched})",
                         g.bounds,
                         g.backend.name(),
                         k.point.array_label(),
@@ -670,6 +723,54 @@ mod tests {
                 "--backend {sel} should sweep"
             );
         }
+    }
+
+    #[test]
+    fn dse_accepts_schedule_axis() {
+        for sel in ["all", "first", "2"] {
+            assert_eq!(
+                run_cli(&s(&[
+                    "dse", "--workload", "gesummv", "--bounds", "8,8",
+                    "--max-pes", "2", "--schedules", sel
+                ]))
+                .unwrap(),
+                0,
+                "--schedules {sel} should sweep"
+            );
+        }
+        for bad in ["0", "none", "-1"] {
+            let e = run_cli(&s(&[
+                "dse", "--workload", "gesummv", "--schedules", bad,
+            ]));
+            assert!(
+                matches!(e, Err(CliError::Usage(_))),
+                "--schedules {bad} should be a usage error, got {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dse_prune_cache_requires_and_uses_analysis_cache() {
+        // Without a cache directory the flag is a usage error, not a
+        // silent no-op.
+        let e = run_cli(&s(&[
+            "dse", "--workload", "gesummv", "--bounds", "8,8",
+            "--max-pes", "2", "--prune-cache",
+        ]));
+        assert!(matches!(e, Err(CliError::Usage(_))));
+        // With one, the sweep spills and the prune keeps live entries.
+        let dir = std::env::temp_dir()
+            .join(format!("tcpa-cli-prune-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_str().unwrap().to_string();
+        let args = [
+            "dse", "--workload", "gesummv", "--bounds", "8,8",
+            "--max-pes", "2", "--analysis-cache", &dir_s, "--prune-cache",
+        ];
+        assert_eq!(run_cli(&s(&args)).unwrap(), 0);
+        let live = std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0);
+        assert!(live > 0, "live entries must survive the prune");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -22,6 +22,13 @@ use crate::pra::Workload;
 
 use super::persist::DiskCache;
 
+/// The memo key. Deliberately **schedule-free**: the symbolic volumes —
+/// and therefore every count and energy — depend only on the tiling of
+/// `(workload, array)`, never on which feasible `(λ^J, λ^K)` candidate
+/// executes them, so all schedule-axis candidates of a shape
+/// (`DesignSpace::with_schedules`) share one cached analysis and
+/// re-evaluate latency alone. A schedule dimension would belong in this
+/// key only if schedules ever started changing counts.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct CacheKey {
     workload: String,
@@ -287,6 +294,22 @@ impl AnalysisCache {
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
     }
+
+    /// Prune the persistent spill directory (no-op without one): remove
+    /// files whose workload name matches a `live` entry but whose
+    /// fingerprint matches none — the workload definition changed and
+    /// those volumes can never be loaded again — plus orphaned temp
+    /// files. See [`DiskCache::prune`]. Returns the number of files
+    /// removed.
+    pub fn prune_disk(
+        &self,
+        live: &[(String, u64)],
+    ) -> std::io::Result<usize> {
+        match &self.disk {
+            Some(d) => d.prune(live),
+            None => Ok(0),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -386,6 +409,39 @@ mod tests {
         let (ea, eb) = (a.energy_at(&params), b.energy_at(&params));
         assert_eq!(ea.total.to_bits(), eb.total.to_bits());
         assert_eq!(a.latency_at(&params), b.latency_at(&params));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_disk_reaps_stale_spills_and_noops_without_disk() {
+        // No spill directory: prune is a structural no-op.
+        assert_eq!(
+            AnalysisCache::new().prune_disk(&[("x".into(), 1)]).unwrap(),
+            0
+        );
+        let dir = std::env::temp_dir().join(format!(
+            "tcpa-cache-prune-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let wl = workloads::by_name("gesummv").unwrap();
+        let cache = AnalysisCache::with_disk(&dir);
+        cache.get_or_analyze(&wl, &[2, 2]);
+        let fp = workload_fingerprint(&wl);
+        // Current fingerprint live: nothing to reap.
+        assert_eq!(
+            cache.prune_disk(&[(wl.name.clone(), fp)]).unwrap(),
+            0
+        );
+        // Pretend the workload definition changed: the old spill is
+        // unreachable and must go.
+        assert_eq!(
+            cache
+                .prune_disk(&[(wl.name.clone(), fp.wrapping_add(1))])
+                .unwrap(),
+            1
+        );
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

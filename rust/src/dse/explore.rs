@@ -15,6 +15,17 @@
 //! additionally share the cache's Fourier–Motzkin feasibility pool, so a
 //! guard proven (in)feasible for one design point is never re-proven for
 //! another point with the same parameter context.
+//!
+//! The **schedule axis** ([`DesignSpace::with_schedules`]) is expanded
+//! here rather than in [`DesignSpace::points`]: how many feasible
+//! `(permutation, λ^J, λ^K)` candidates a point has depends on the
+//! workload's dependence structure. Symbolic volumes are
+//! schedule-invariant, so every candidate shares the shape's one cached
+//! analysis — energy is priced once, and each candidate re-evaluates
+//! latency alone (`SymbolicAnalysis::latency_at_with`). Candidates of
+//! one base point compete inside the same (bounds, backend) scenario:
+//! a slower schedule at identical energy/PEs/DRAM is dominated away,
+//! which is how `--schedules all` can only improve the frontier.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
@@ -30,7 +41,9 @@ use super::cache::{
     panic_message, workload_fingerprint, AnalysisCache, CacheStats,
 };
 use super::pareto::{knee_point, pareto_frontier, Objectives};
-use super::space::{DesignPoint, DesignSpace};
+use super::space::{
+    DesignPoint, DesignSpace, ScheduleChoice, SchedulePolicy,
+};
 
 /// Explorer knobs.
 #[derive(Debug, Clone, Default)]
@@ -61,6 +74,11 @@ impl ExploreConfig {
 pub struct EvaluatedPoint {
     /// The configuration that was evaluated.
     pub point: DesignPoint,
+    /// Human-readable schedule description: the per-phase intra-tile
+    /// dimension orders (fastest first), phases joined by `|` — e.g.
+    /// `j0j1` or `j0j1j2|j1j0`. Distinct schedule candidates of one
+    /// shape always render distinctly.
+    pub schedule_label: String,
     /// PEs used.
     pub pes: i64,
     /// Total energy `E_tot` in pJ.
@@ -181,15 +199,22 @@ fn phase_params(ana: &WorkloadAnalysis, point: &DesignPoint) -> Vec<Vec<i64>> {
         .collect()
 }
 
-/// Evaluate one design point against the (cached) symbolic analysis.
-/// `Err` carries the analysis failure message (memoized by the cache, so
-/// a bad shape fails once and cheaply thereafter).
+/// Evaluate one design point against the (cached) symbolic analysis,
+/// expanded into one [`EvaluatedPoint`] per schedule candidate according
+/// to `policy`. `Err` carries the analysis failure message (memoized by
+/// the cache, so a bad shape fails once and cheaply thereafter).
+///
+/// Energy, DRAM traffic and PEs are schedule-invariant and computed once
+/// per base point; only latency (and therefore EDP) is re-evaluated per
+/// candidate — the structural cheapness that makes the schedule a free
+/// axis on top of the cached analysis.
 fn evaluate(
     wl: &Workload,
     fingerprint: u64,
     point: &DesignPoint,
     cache: &AnalysisCache,
-) -> Result<EvaluatedPoint, String> {
+    policy: SchedulePolicy,
+) -> Result<Vec<EvaluatedPoint>, String> {
     let t0 = Instant::now();
     let (ana, cache_hit) =
         cache.try_get_or_analyze_keyed(wl, fingerprint, &point.array);
@@ -200,21 +225,95 @@ fn evaluate(
     // the point's backend. For the TCPA backend this is bit-identical to
     // the pre-backend `energy_at` fast path (see `analysis::evaluate`).
     let energy = ana.energy_at_backend(&params, &point.backend);
-    let latency_cycles = ana.latency_at(&params);
-    Ok(EvaluatedPoint {
-        pes: point.pes(),
-        energy_pj: energy.total,
-        dram_pj: energy
-            .mem_pj
-            .get(&MemoryClass::Dram)
-            .copied()
-            .unwrap_or(0.0),
-        latency_cycles,
-        edp: energy.total * latency_cycles as f64,
-        analysis_ms,
-        cache_hit,
-        point: point.clone(),
-    })
+    let dram_pj = energy
+        .mem_pj
+        .get(&MemoryClass::Dram)
+        .copied()
+        .unwrap_or(0.0);
+    let with_latency = |latency_cycles: i64,
+                        schedule: ScheduleChoice,
+                        schedule_label: String| {
+        EvaluatedPoint {
+            point: DesignPoint { schedule, ..point.clone() },
+            schedule_label,
+            pes: point.pes(),
+            energy_pj: energy.total,
+            dram_pj,
+            latency_cycles,
+            edp: energy.total * latency_cycles as f64,
+            analysis_ms,
+            cache_hit,
+        }
+    };
+    if policy == SchedulePolicy::First {
+        // The pre-axis path, verbatim: the analysis' embedded default
+        // schedule, no enumeration — `--schedules first` stays
+        // bit-identical to the single-schedule explorer.
+        let latency_cycles = ana.latency_at(&params);
+        let label = ana
+            .phases
+            .iter()
+            .map(|ph| ph.schedule.perm_label())
+            .collect::<Vec<_>>()
+            .join("|");
+        return Ok(vec![with_latency(
+            latency_cycles,
+            ScheduleChoice::First,
+            label,
+        )]);
+    }
+    // Enumerate per phase (candidate 0 always exists: the analysis
+    // succeeded, so find_schedule's pick did), then walk the per-phase
+    // cross product in lexicographic index order — deterministic, last
+    // phase fastest.
+    let cands: Vec<Vec<crate::schedule::Schedule>> = ana
+        .phases
+        .iter()
+        .map(|ph| ph.enumerate_schedules(policy.per_phase_cap()))
+        .collect();
+    let counts: Vec<usize> = cands.iter().map(Vec::len).collect();
+    debug_assert!(counts.iter().all(|&c| c >= 1));
+    // Each (phase, candidate) latency once — the combos below only sum
+    // table entries (Σ cᵢ evaluations instead of Π cᵢ · phases).
+    let lat: Vec<Vec<i64>> = ana
+        .phases
+        .iter()
+        .zip(&params)
+        .zip(&cands)
+        .map(|((ph, p), phase_cands)| {
+            phase_cands
+                .iter()
+                .map(|s| ph.latency_at_with(s, p))
+                .collect()
+        })
+        .collect();
+    let total: usize = counts.iter().product();
+    let mut out = Vec::with_capacity(total);
+    for flat in 0..total {
+        let mut rem = flat;
+        let mut idx = vec![0usize; counts.len()];
+        for d in (0..counts.len()).rev() {
+            idx[d] = rem % counts[d];
+            rem /= counts[d];
+        }
+        let latency_cycles: i64 = idx
+            .iter()
+            .enumerate()
+            .map(|(phase, &ci)| lat[phase][ci])
+            .sum();
+        let label = idx
+            .iter()
+            .enumerate()
+            .map(|(phase, &ci)| cands[phase][ci].perm_label())
+            .collect::<Vec<_>>()
+            .join("|");
+        out.push(with_latency(
+            latency_cycles,
+            ScheduleChoice::Indices(idx),
+            label,
+        ));
+    }
+    Ok(out)
 }
 
 /// Explore `space` for `wl` with a private, single-use cache.
@@ -238,6 +337,7 @@ pub fn explore_with_cache(
     let points = space.points();
     let n = points.len();
     let workers = cfg.effective_workers(n);
+    let policy = space.schedules;
     // One IR walk for the whole sweep, not one per design point.
     let fingerprint = workload_fingerprint(wl);
 
@@ -250,7 +350,9 @@ pub fn explore_with_cache(
     drop(jtx);
     let jrx = Mutex::new(jrx);
 
-    type PointResult = Result<EvaluatedPoint, (DesignPoint, String)>;
+    // One base point expands into one evaluated point per schedule
+    // candidate (exactly one under `SchedulePolicy::First`).
+    type PointResult = Result<Vec<EvaluatedPoint>, (DesignPoint, String)>;
     let (rtx, rrx) = mpsc::channel::<(usize, PointResult)>();
     std::thread::scope(|s| {
         for _ in 0..workers {
@@ -264,7 +366,7 @@ pub fn explore_with_cache(
                 // catch_unwind additionally guards the evaluation
                 // arithmetic itself.
                 let eval = match catch_unwind(AssertUnwindSafe(|| {
-                    evaluate(wl, fingerprint, &point, cache)
+                    evaluate(wl, fingerprint, &point, cache, policy)
                 })) {
                     Ok(Ok(e)) => Ok(e),
                     Ok(Err(msg)) => Err((point, msg)),
@@ -281,12 +383,14 @@ pub fn explore_with_cache(
         drop(rtx);
     });
 
-    // Deterministic ordering: stitch results back by enumeration index.
-    let mut slots: Vec<Option<EvaluatedPoint>> = vec![None; n];
+    // Deterministic ordering: stitch results back by base-point
+    // enumeration index, then candidate order within each base point —
+    // byte-identical output regardless of worker count.
+    let mut slots: Vec<Vec<EvaluatedPoint>> = vec![Vec::new(); n];
     let mut failed: Vec<(usize, DesignPoint, String)> = Vec::new();
     while let Ok((idx, eval)) = rrx.recv() {
         match eval {
-            Ok(e) => slots[idx] = Some(e),
+            Ok(e) => slots[idx] = e,
             Err((point, msg)) => failed.push((idx, point, msg)),
         }
     }
@@ -514,6 +618,110 @@ mod tests {
             "message should name the scheduling failure: {msg}"
         );
         assert!(res.frontier.is_empty() && res.knee.is_none());
+    }
+
+    #[test]
+    fn schedule_axis_surfaces_faster_non_default_schedule() {
+        // GESUMMV on a 1×4 array at N = (16,16): the natural dimension
+        // order routes the expensive inter-tile offset along the mapped
+        // dimension (λ^K_1 = 1 + p0·p1 − p0), while the swapped order
+        // needs only λ^K_1 = p1 — genuinely faster at identical energy.
+        // The single-schedule explorer never sees it.
+        let wl = workloads::by_name("gesummv").unwrap();
+        let base = DesignSpace::new()
+            .with_arrays(vec![vec![1, 4]])
+            .with_bounds(vec![16, 16]);
+        let first = explore(&wl, &base, &ExploreConfig::default());
+        let all = explore(
+            &wl,
+            &base.with_schedules(SchedulePolicy::All),
+            &ExploreConfig::default(),
+        );
+        assert_eq!(first.points.len(), 1);
+        assert_eq!(all.points.len(), 2, "two causal permutations");
+        // Energy/PEs/DRAM are schedule-invariant.
+        for p in &all.points {
+            assert_eq!(
+                p.energy_pj.to_bits(),
+                first.points[0].energy_pj.to_bits()
+            );
+            assert_eq!(p.dram_pj.to_bits(), first.points[0].dram_pj.to_bits());
+            assert_eq!(p.pes, first.points[0].pes);
+        }
+        // Candidate 0 is the default pick, identical to --schedules first.
+        assert!(all.points[0].point.schedule.is_default());
+        assert_eq!(
+            all.points[0].latency_cycles,
+            first.points[0].latency_cycles
+        );
+        assert_eq!(all.points[0].schedule_label, "j0j1");
+        assert_eq!(all.points[1].schedule_label, "j1j0");
+        // The swapped schedule wins; the default is dominated away.
+        assert!(
+            all.points[1].latency_cycles < all.points[0].latency_cycles,
+            "swapped order must be faster: {:?}",
+            all.points.iter().map(|p| p.latency_cycles).collect::<Vec<_>>()
+        );
+        assert_eq!(all.frontier, vec![1]);
+    }
+
+    #[test]
+    fn schedule_axis_cross_product_over_phases() {
+        // Multi-phase workloads expand into the per-phase cross product,
+        // in lexicographic index order with deterministic labels.
+        let wl = workloads::by_name("atax").unwrap();
+        let cache = AnalysisCache::new();
+        let (ana, _) = cache.get_or_analyze(&wl, &[2, 2]);
+        let per_phase: Vec<usize> = ana
+            .phases
+            .iter()
+            .map(|ph| ph.enumerate_schedules(None).len())
+            .collect();
+        let expected: usize = per_phase.iter().product();
+        assert!(expected >= 1);
+        let space = DesignSpace::new()
+            .with_arrays(vec![vec![2, 2]])
+            .with_bounds(vec![8, 8])
+            .with_schedules(SchedulePolicy::All);
+        let res = explore_with_cache(
+            &wl,
+            &space,
+            &ExploreConfig::default(),
+            &cache,
+        );
+        assert!(res.failures.is_empty(), "failures: {:?}", res.failures);
+        assert_eq!(res.points.len(), expected);
+        // Choices are distinct and lexicographically ordered.
+        let choices: Vec<Vec<usize>> = res
+            .points
+            .iter()
+            .map(|p| match &p.point.schedule {
+                ScheduleChoice::Indices(ix) => ix.clone(),
+                other => panic!("expected explicit indices, got {other:?}"),
+            })
+            .collect();
+        let mut sorted = choices.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(choices, sorted, "combo order must be lexicographic");
+        assert_eq!(choices[0], vec![0; per_phase.len()]);
+        // Limit(1) collapses back to a single (default) candidate with
+        // the same latency the First policy reports.
+        let limited = explore_with_cache(
+            &wl,
+            &DesignSpace::new()
+                .with_arrays(vec![vec![2, 2]])
+                .with_bounds(vec![8, 8])
+                .with_schedules(SchedulePolicy::Limit(1)),
+            &ExploreConfig::default(),
+            &cache,
+        );
+        assert_eq!(limited.points.len(), 1);
+        assert!(limited.points[0].point.schedule.is_default());
+        assert_eq!(
+            limited.points[0].latency_cycles,
+            res.points[0].latency_cycles
+        );
     }
 
     #[test]

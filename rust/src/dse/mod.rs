@@ -10,9 +10,13 @@
 //! * [`space`] — the **design-space model**: multi-axis spaces over 1-D /
 //!   2-D array shapes, tile-size scales, cross-architecture
 //!   [`crate::energy::Backend`] descriptors (TCPA / CGRA / GPU-SM /
-//!   systolic, or custom) and loop-bound grids, with PE-budget,
-//!   fits-the-problem and opt-in transposition-symmetry pruning. Each
-//!   backend is its own comparison scenario with its own Pareto frontier.
+//!   systolic, or custom), **schedule-vector candidates**
+//!   (`DesignSpace::with_schedules`: every feasible `(permutation, λ^J,
+//!   λ^K)` per mapping instead of `find_schedule`'s single pick — a
+//!   latency/FD-pressure trade-off at fixed shape and identical energy)
+//!   and loop-bound grids, with PE-budget, fits-the-problem and opt-in
+//!   transposition-symmetry pruning. Each backend is its own comparison
+//!   scenario with its own Pareto frontier.
 //! * [`cache`] — the **analysis cache**: memoizes
 //!   [`crate::analysis::WorkloadAnalysis::analyze_uniform`] per
 //!   (workload, array) key, so bounds/tile/policy sweeps over an
@@ -59,4 +63,6 @@ pub use explore::{
 };
 pub use pareto::{dominates, knee_point, pareto_frontier, Objectives};
 pub use persist::DiskCache;
-pub use space::{DesignPoint, DesignSpace};
+pub use space::{
+    DesignPoint, DesignSpace, ScheduleChoice, SchedulePolicy,
+};

@@ -5,6 +5,13 @@
 //! mapped to `+∞` before comparison — a degenerate design point can never
 //! panic the sweep (the `partial_cmp(..).unwrap()` hazard of the old
 //! EDP sort) nor sneak onto the frontier.
+//!
+//! With the schedule axis (`DesignSpace::with_schedules`) latency is a
+//! genuinely explored objective: candidates of one shape agree in
+//! energy, PEs and DRAM and differ **only** in latency, so dominance
+//! alone keeps exactly the fastest schedule(s) of each shape — ties all
+//! survive (equal vectors dominate neither way), which preserves the
+//! determinism guarantees of the explorer's enumeration order.
 
 /// Number of objectives tracked per design point.
 pub const NUM_OBJECTIVES: usize = 4;
@@ -140,6 +147,20 @@ mod tests {
         ];
         // NaN → +∞ in one objective, equal elsewhere: dominated.
         assert_eq!(pareto_frontier(&objs), vec![1]);
+    }
+
+    #[test]
+    fn schedule_variants_resolve_to_fastest_only() {
+        // Schedule candidates of one shape: identical energy/PEs/DRAM,
+        // latency varies. The frontier must keep exactly the fastest —
+        // and keep *all* exact ties, so enumeration order (not float
+        // luck) decides what the reports show.
+        let objs = vec![
+            o(5.0, 40.0, 4.0, 2.0), // default schedule, slow
+            o(5.0, 16.0, 4.0, 2.0), // swapped schedule, fast
+            o(5.0, 16.0, 4.0, 2.0), // distinct candidate, tied latency
+        ];
+        assert_eq!(pareto_frontier(&objs), vec![1, 2]);
     }
 
     #[test]

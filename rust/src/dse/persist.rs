@@ -52,16 +52,7 @@ impl DiskCache {
         array: &[i64],
         table: &EnergyTable,
     ) -> PathBuf {
-        let safe: String = wl_name
-            .chars()
-            .map(|c| {
-                if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
-                    c
-                } else {
-                    '_'
-                }
-            })
-            .collect();
+        let safe = sanitize(wl_name);
         let shape = array
             .iter()
             .map(|t| t.to_string())
@@ -70,6 +61,72 @@ impl DiskCache {
         let table_fp = table.fingerprint();
         self.dir
             .join(format!("{safe}-{fp:016x}-{shape}-{table_fp:016x}.volumes"))
+    }
+
+    /// Remove stale entries: a `.volumes` file is stale when its
+    /// workload name matches some `live` entry's (sanitized) name but
+    /// its fingerprint matches **no** live `(name, fingerprint)` pair —
+    /// i.e. the workload definition changed, so the file can never be
+    /// loaded again (the fingerprint check in [`DiskCache::load`] will
+    /// reject it forever). Because the filename-`sanitize` step is
+    /// lossy (distinct raw names can share a prefix), deletion also
+    /// requires the file's *header* — which records the raw name — to
+    /// name a live workload; a collision or unreadable header keeps the
+    /// file. Orphaned temp files from interrupted writes of live
+    /// workloads (`<key stem>.tmp<pid>`, exactly the writer's naming)
+    /// are removed too. Everything else — other workloads, other tools'
+    /// files, unrecognized names — is **kept**: a shared directory is
+    /// not ours to reap. Returns the number of files removed; a missing
+    /// directory counts as already empty.
+    pub fn prune(&self, live: &[(String, u64)]) -> std::io::Result<usize> {
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(0)
+            }
+            Err(e) => return Err(e),
+        };
+        let sanitized: Vec<(String, u64)> = live
+            .iter()
+            .map(|(n, fp)| (sanitize(n), *fp))
+            .collect();
+        let mut removed = 0;
+        for entry in entries {
+            let entry = entry?;
+            let file_name = entry.file_name();
+            let name = file_name.to_string_lossy();
+            let stale = match name.strip_suffix(".volumes") {
+                Some(stem) => match parse_key_stem(stem) {
+                    Some((wl, fp)) => {
+                        sanitized.iter().any(|(n, _)| *n == wl)
+                            && !sanitized
+                                .iter()
+                                .any(|(n, f)| *n == wl && *f == fp)
+                            && header_names_live_workload(
+                                &entry.path(),
+                                live,
+                            )
+                    }
+                    // Unrecognized name under our extension: keep —
+                    // pruning must never guess.
+                    None => false,
+                },
+                // Temp files are rename sources that never made it; the
+                // writer treats a failed rename as an advisory miss.
+                // Reap only *our* naming — `<key stem>.tmp<digits>` for
+                // a live workload name — so a shared directory's
+                // `notes.tmpl` or another tool's `.tmp` files are never
+                // touched. (A concurrent writer of the same key can
+                // still lose its in-flight temp; it degrades to one
+                // recomputed analysis, by the advisory-store contract.)
+                None => is_orphan_temp(name.as_ref(), &sanitized),
+            };
+            if stale {
+                std::fs::remove_file(entry.path())?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
     }
 
     /// Load the preset volumes for `(wl, array, table)` if a valid file
@@ -115,6 +172,103 @@ impl DiskCache {
         std::fs::write(&tmp, render(wl, fp, array, table, ana))?;
         std::fs::rename(&tmp, &path)
     }
+}
+
+/// Filesystem-safe rendering of a workload name (the filename prefix).
+fn sanitize(wl_name: &str) -> String {
+    wl_name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Is `file_name` an interrupted-write temp file of ours —
+/// `<key stem>.tmp<digits>` (the exact shape `DiskCache::store`
+/// produces) whose key stem parses and names a live (sanitized)
+/// workload? Anything else in the directory is not ours to reap.
+fn is_orphan_temp(file_name: &str, sanitized: &[(String, u64)]) -> bool {
+    let Some((stem, ext)) = file_name.rsplit_once('.') else {
+        return false;
+    };
+    let Some(pid) = ext.strip_prefix("tmp") else {
+        return false;
+    };
+    if pid.is_empty() || !pid.bytes().all(|b| b.is_ascii_digit()) {
+        return false;
+    }
+    match parse_key_stem(stem) {
+        Some((wl, _)) => sanitized.iter().any(|(n, _)| *n == wl),
+        None => false,
+    }
+}
+
+/// Does the `.volumes` file at `path` declare one of the live *raw*
+/// workload names in its header? `sanitize` is lossy, so the filename
+/// prefix alone could attribute a file to the wrong workload; the
+/// header line (`workload <raw name>`) is exact. Only a bounded prefix
+/// is read — volume files can be large, and the header sits in the
+/// first two lines. An unreadable, malformed, or prefix-truncated
+/// header disqualifies — [`DiskCache::prune`] keeps such files.
+fn header_names_live_workload(
+    path: &Path,
+    live: &[(String, u64)],
+) -> bool {
+    use std::io::Read as _;
+    let Ok(mut f) = std::fs::File::open(path) else {
+        return false;
+    };
+    let mut buf = [0u8; 256];
+    let mut len = 0;
+    let eof = loop {
+        match f.read(&mut buf[len..]) {
+            Ok(0) => break true,
+            Ok(n) => {
+                len += n;
+                if len == buf.len() {
+                    break false;
+                }
+            }
+            Err(_) => return false,
+        }
+    };
+    let head = String::from_utf8_lossy(&buf[..len]);
+    let mut lines = head.split('\n');
+    let (l1, l2) = (lines.next(), lines.next());
+    // The name line must be provably complete: either a third segment
+    // follows it within the prefix, or the whole file fit — otherwise a
+    // truncated longer name could false-match a live one.
+    if lines.next().is_none() && !eof {
+        return false;
+    }
+    if l1 != Some(MAGIC) {
+        return false;
+    }
+    match l2.and_then(|l| l.strip_prefix("workload ")) {
+        Some(raw) => live.iter().any(|(n, _)| n.as_str() == raw),
+        None => false,
+    }
+}
+
+/// Recover `(sanitized workload name, fingerprint)` from a `.volumes`
+/// file stem `{safe}-{fp:016x}-{shape}-{table_fp:016x}`. The name may
+/// itself contain `-`, so fields are split from the right; anything that
+/// does not scan as two 16-digit hex fingerprints around a shape returns
+/// `None` (the caller keeps such files).
+fn parse_key_stem(stem: &str) -> Option<(String, u64)> {
+    let is_fp = |s: &str| s.len() == 16 && u64::from_str_radix(s, 16).is_ok();
+    let (rest, table_fp) = stem.rsplit_once('-')?;
+    let (rest, _shape) = rest.rsplit_once('-')?;
+    let (name, fp) = rest.rsplit_once('-')?;
+    if !is_fp(table_fp) || !is_fp(fp) || name.is_empty() {
+        return None;
+    }
+    Some((name.to_string(), u64::from_str_radix(fp, 16).unwrap()))
 }
 
 fn render(
@@ -353,6 +507,100 @@ mod tests {
             .load(&wl, fp.wrapping_add(1), &[2, 2], &table())
             .is_none());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_removes_only_stale_fingerprints_and_temp_files() {
+        let dir = tmp_dir("prune");
+        let cache = DiskCache::new(&dir);
+        let wl = workloads::by_name("gesummv").unwrap();
+        let other = workloads::by_name("gemm").unwrap();
+        let fp = workload_fingerprint(&wl);
+        let other_fp = workload_fingerprint(&other);
+        let ana = WorkloadAnalysis::analyze_uniform(&wl, &[2, 2]);
+        let other_ana = WorkloadAnalysis::analyze_uniform(&other, &[2, 2]);
+        // Live entry, stale entry (old fingerprint of the same
+        // workload), foreign workload entry, and an orphaned temp file.
+        cache.store(&wl, fp, &[2, 2], &table(), &ana).unwrap();
+        cache
+            .store(&wl, fp.wrapping_add(7), &[2, 3], &table(), &ana)
+            .unwrap();
+        cache
+            .store(&other, other_fp, &[2, 2], &table(), &other_ana)
+            .unwrap();
+        // Orphaned temp in the writer's exact naming: key stem + .tmp<pid>.
+        let orphan = dir.join(format!(
+            "gesummv-{:016x}-2x2-{:016x}.tmp99999",
+            1u64, 2u64
+        ));
+        std::fs::write(&orphan, "interrupted").unwrap();
+        // Files we don't recognize must survive any prune: a stray
+        // `.volumes`, another tool's template, and a foreign `.tmp`.
+        let foreign = dir.join("README.volumes");
+        std::fs::write(&foreign, "not ours to reap").unwrap();
+        let template = dir.join("notes.tmpl");
+        std::fs::write(&template, "a template, not a temp file").unwrap();
+        let other_tmp = dir.join("data.tmp12");
+        std::fs::write(&other_tmp, "another tool's temp").unwrap();
+
+        let removed =
+            cache.prune(&[(wl.name.clone(), fp)]).expect("prune");
+        assert_eq!(removed, 2, "stale gesummv entry + orphaned temp file");
+        // Live entry still loads; stale one is gone.
+        assert!(cache.load(&wl, fp, &[2, 2], &table()).is_some());
+        assert!(cache
+            .load(&wl, fp.wrapping_add(7), &[2, 3], &table())
+            .is_none());
+        // gemm was not named in `live`: kept, still loadable.
+        assert!(cache
+            .load(&other, other_fp, &[2, 2], &table())
+            .is_some());
+        assert!(!orphan.exists());
+        assert!(foreign.exists(), "unrecognized names are kept");
+        assert!(template.exists(), ".tmpl is not a temp file");
+        assert!(other_tmp.exists(), "foreign temp naming is kept");
+        // Pruning a missing directory is a clean no-op.
+        let empty = DiskCache::new(dir.join("never-created"));
+        assert_eq!(empty.prune(&[]).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_spares_sanitized_name_collisions() {
+        // "a.b" and "a:b" both sanitize to "a_b" in the filename. A
+        // prune for live "a.b" must not reap "a:b"'s entry even though
+        // the filename prefix and stale-looking fingerprint match — the
+        // file header records the raw name and disambiguates.
+        let dir = tmp_dir("collide");
+        std::fs::create_dir_all(&dir).unwrap();
+        let victim = dir.join(format!(
+            "a_b-{:016x}-2x2-{:016x}.volumes",
+            7u64, 9u64
+        ));
+        std::fs::write(
+            &victim,
+            "tcpa-analysis-cache v1\nworkload a:b\nrest irrelevant\n",
+        )
+        .unwrap();
+        let cache = DiskCache::new(&dir);
+        assert_eq!(cache.prune(&[("a.b".to_string(), 1)]).unwrap(), 0);
+        assert!(victim.exists(), "collision victim must be kept");
+        // The same file under its own live raw name *is* reaped once
+        // its fingerprint goes stale.
+        assert_eq!(cache.prune(&[("a:b".to_string(), 1)]).unwrap(), 1);
+        assert!(!victim.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_stem_parser_handles_dashed_names() {
+        let stem = "my-odd_name-00000000000000ab-2x4-00000000000000cd";
+        assert_eq!(
+            parse_key_stem(stem),
+            Some(("my-odd_name".to_string(), 0xab))
+        );
+        assert_eq!(parse_key_stem("nonsense"), None);
+        assert_eq!(parse_key_stem("a-b-c-d"), None, "non-hex fields");
     }
 
     #[test]

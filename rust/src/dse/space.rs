@@ -1,10 +1,83 @@
 //! The design-space model: which (array shape, loop bounds, tile scale,
-//! energy backend) combinations a sweep covers, and which of them pruning
-//! removes before any analysis runs.
+//! energy backend, schedule vector) combinations a sweep covers, and
+//! which of them pruning removes before any analysis runs.
 
 use std::collections::HashSet;
 
 use crate::energy::{Backend, Policy};
+
+/// How many schedule-vector candidates the explorer evaluates per design
+/// point. The schedule axis is special: its extent depends on the
+/// workload's dependence structure (number of causal dimension
+/// permutations), which the space cannot know — so [`DesignSpace::points`]
+/// emits base points with [`ScheduleChoice::First`] and the explorer
+/// expands each into per-candidate points according to this policy
+/// (`crate::schedule::enumerate_schedules`). Because the symbolic
+/// volumes are schedule-invariant, every candidate of a shape shares the
+/// one cached analysis — the axis costs expression evaluations only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Only the scheduler's default pick (enumeration index 0) — the
+    /// pre-sweep behavior, bit-identical to it.
+    First,
+    /// Every feasible candidate (bounded by `ndims!` per phase).
+    All,
+    /// At most this many candidates per phase, in enumeration order.
+    Limit(usize),
+}
+
+impl SchedulePolicy {
+    /// The per-phase enumeration cap this policy induces (`None` = all).
+    /// `Limit(0)` clamps to 1: "no candidates" would silently erase
+    /// every design point from a sweep, and the fields of
+    /// [`DesignSpace`] are public, so the [`DesignSpace::with_schedules`]
+    /// assert alone cannot guarantee the cap is positive.
+    pub fn per_phase_cap(self) -> Option<usize> {
+        match self {
+            SchedulePolicy::First => Some(1),
+            SchedulePolicy::All => None,
+            SchedulePolicy::Limit(n) => Some(n.max(1)),
+        }
+    }
+}
+
+/// Which schedule candidate a design point uses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScheduleChoice {
+    /// The scheduler's default pick for every phase (candidate 0 of the
+    /// enumeration) — what [`DesignSpace::points`] emits.
+    First,
+    /// Explicit per-phase indices into the enumerated candidate lists
+    /// (`crate::schedule::enumerate_schedules` order), assigned by the
+    /// explorer when a [`SchedulePolicy`] beyond `First` is active.
+    Indices(Vec<usize>),
+}
+
+impl ScheduleChoice {
+    /// Compact display form: `first` for the default pick, else the
+    /// per-phase indices joined by `.` (e.g. `s1` or `s1.0`).
+    pub fn label(&self) -> String {
+        match self {
+            ScheduleChoice::First => "first".to_string(),
+            ScheduleChoice::Indices(ix) => format!(
+                "s{}",
+                ix.iter()
+                    .map(|i| i.to_string())
+                    .collect::<Vec<_>>()
+                    .join(".")
+            ),
+        }
+    }
+
+    /// True when this choice selects the scheduler's default pick —
+    /// either symbolically (`First`) or as explicit all-zero indices.
+    pub fn is_default(&self) -> bool {
+        match self {
+            ScheduleChoice::First => true,
+            ScheduleChoice::Indices(ix) => ix.iter().all(|&i| i == 0),
+        }
+    }
+}
 
 /// One candidate configuration, prior to evaluation.
 #[derive(Debug, Clone, PartialEq)]
@@ -23,6 +96,8 @@ pub struct DesignPoint {
     pub tile_scale: i64,
     /// Cross-architecture energy backend (routing + energy table).
     pub backend: Backend,
+    /// Schedule-vector candidate (see [`ScheduleChoice`]).
+    pub schedule: ScheduleChoice,
 }
 
 impl DesignPoint {
@@ -55,6 +130,9 @@ pub struct DesignSpace {
     pub tile_scales: Vec<i64>,
     /// Energy backends to compare (per-backend Pareto frontiers).
     pub backends: Vec<Backend>,
+    /// Schedule-vector axis policy (see [`SchedulePolicy`]; the explorer
+    /// expands it per point, since its extent is workload-dependent).
+    pub schedules: SchedulePolicy,
     /// PE budget: shapes with more PEs are pruned.
     pub max_pes: Option<i64>,
     /// Prune transposed duplicates `(b,a)` when `(a,b)` is enumerated.
@@ -80,6 +158,7 @@ impl DesignSpace {
             bounds_grid: Vec::new(),
             tile_scales: vec![1],
             backends: vec![Backend::tcpa()],
+            schedules: SchedulePolicy::First,
             max_pes: None,
             prune_symmetric: false,
         }
@@ -158,6 +237,23 @@ impl DesignSpace {
         )
     }
 
+    /// Schedule-vector candidates per design point (default
+    /// [`SchedulePolicy::First`], the pre-sweep single-schedule
+    /// behavior). With `All` or `Limit(n)` the explorer evaluates every
+    /// (capped) feasible `(permutation, λ^J, λ^K)` candidate against the
+    /// shape's one cached analysis — latency becomes a genuinely
+    /// explored objective at identical energy. `Limit(0)` would make
+    /// every point silently vanish from the sweep, so it is rejected
+    /// here (like `with_tile_scales` rejects scale 0).
+    pub fn with_schedules(mut self, policy: SchedulePolicy) -> Self {
+        assert!(
+            !matches!(policy, SchedulePolicy::Limit(0)),
+            "schedule candidate cap must be >= 1"
+        );
+        self.schedules = policy;
+        self
+    }
+
     /// PE budget (also set by `with_arrays_2d`/`with_arrays_1d`).
     pub fn with_max_pes(mut self, max_pes: i64) -> Self {
         self.max_pes = Some(max_pes);
@@ -230,11 +326,16 @@ impl DesignSpace {
                 }
                 for &tile_scale in &self.tile_scales {
                     for backend in &self.backends {
+                        // Schedule axis: emitted as `First` here and
+                        // expanded per point by the explorer — the
+                        // candidate count depends on the workload's
+                        // dependence structure, unknown to the space.
                         out.push(DesignPoint {
                             array: array.clone(),
                             bounds: bounds.clone(),
                             tile_scale,
                             backend: backend.clone(),
+                            schedule: ScheduleChoice::First,
                         });
                     }
                 }
@@ -378,8 +479,40 @@ mod tests {
             bounds: vec![64, 64],
             tile_scale: 1,
             backend: Backend::tcpa(),
+            schedule: ScheduleChoice::First,
         };
         assert_eq!(p.array_label(), "8x4");
         assert_eq!(p.pes(), 32);
+    }
+
+    #[test]
+    fn schedule_choice_labels_and_defaults() {
+        assert_eq!(ScheduleChoice::First.label(), "first");
+        assert_eq!(ScheduleChoice::Indices(vec![1]).label(), "s1");
+        assert_eq!(ScheduleChoice::Indices(vec![1, 0]).label(), "s1.0");
+        assert!(ScheduleChoice::First.is_default());
+        assert!(ScheduleChoice::Indices(vec![0, 0]).is_default());
+        assert!(!ScheduleChoice::Indices(vec![0, 2]).is_default());
+        // Policy → per-phase cap mapping the explorer relies on.
+        assert_eq!(SchedulePolicy::First.per_phase_cap(), Some(1));
+        assert_eq!(SchedulePolicy::All.per_phase_cap(), None);
+        assert_eq!(SchedulePolicy::Limit(3).per_phase_cap(), Some(3));
+        // Limit(0) — reachable through the public `schedules` field
+        // despite with_schedules' assert — clamps instead of silently
+        // erasing every point from the sweep.
+        assert_eq!(SchedulePolicy::Limit(0).per_phase_cap(), Some(1));
+    }
+
+    #[test]
+    fn points_emit_default_schedule_choice() {
+        // The space never expands the schedule axis itself: every base
+        // point carries the default choice regardless of policy.
+        let s = DesignSpace::new()
+            .with_arrays(vec![vec![2, 2]])
+            .with_bounds(vec![8, 8])
+            .with_schedules(SchedulePolicy::All);
+        let pts = s.points();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].schedule, ScheduleChoice::First);
     }
 }

@@ -18,6 +18,11 @@ fn point_row(p: &EvaluatedPoint, on_frontier: bool, knee: bool) -> Vec<String> {
         fmt_bounds(&p.point.bounds),
         p.point.tile_scale.to_string(),
         p.point.backend.name().to_string(),
+        // Schedule candidate: choice id + the intra-tile dimension order
+        // it denotes, e.g. `first (j0j1)` or `s1 (j1j0)`. With the
+        // schedule axis active, rows of one shape differ here and in
+        // latency/EDP alone.
+        format!("{} ({})", p.point.schedule.label(), p.schedule_label),
         format!("{:.3}", p.energy_pj),
         format!("{:.3}", p.dram_pj),
         p.latency_cycles.to_string(),
@@ -27,12 +32,13 @@ fn point_row(p: &EvaluatedPoint, on_frontier: bool, knee: bool) -> Vec<String> {
     ]
 }
 
-const HEADER: [&str; 11] = [
+const HEADER: [&str; 12] = [
     "array",
     "pes",
     "bounds",
     "tile_scale",
     "backend",
+    "schedule",
     "energy_pj",
     "dram_pj",
     "latency_cycles",
@@ -131,11 +137,13 @@ mod tests {
         assert_eq!(all.rows.len(), res.points.len());
         let front = dse_frontier_table(&res);
         assert_eq!(front.rows.len(), res.frontier.len());
-        assert!(front.rows.iter().all(|r| r[9] == "yes"));
+        assert!(front.rows.iter().all(|r| r[10] == "yes"));
         // Exactly one knee across the full table.
         let knees =
-            all.rows.iter().filter(|r| r[10] == "knee").count();
+            all.rows.iter().filter(|r| r[11] == "knee").count();
         assert_eq!(knees, 1);
+        // Default policy: every row shows the scheduler's pick.
+        assert!(all.rows.iter().all(|r| r[5].starts_with("first (")));
     }
 
     #[test]
@@ -144,5 +152,27 @@ mod tests {
         assert!(md.contains("gesummv"));
         assert!(md.contains("objectives minimized"));
         assert!(md.contains("| array |"));
+        assert!(md.contains("| schedule |"));
+    }
+
+    #[test]
+    fn schedule_axis_rows_distinguish_candidates() {
+        use crate::dse::SchedulePolicy;
+        let wl = workloads::by_name("gesummv").unwrap();
+        // 1×4 array: two causal permutations with different latency
+        // (see explore.rs tests), so the sweep emits two rows per
+        // (bounds, backend) differing in the schedule column.
+        let space = DesignSpace::new()
+            .with_arrays(vec![vec![1, 4]])
+            .with_bounds(vec![16, 16])
+            .with_schedules(SchedulePolicy::All);
+        let res = explore(&wl, &space, &ExploreConfig::default());
+        let all = dse_points_table(&res);
+        assert_eq!(all.rows.len(), 2);
+        assert_eq!(all.rows[0][5], "s0 (j0j1)");
+        assert_eq!(all.rows[1][5], "s1 (j1j0)");
+        // Same shape and energy, distinguished by schedule + latency.
+        assert_eq!(all.rows[0][6], all.rows[1][6]);
+        assert_ne!(all.rows[0][8], all.rows[1][8]);
     }
 }

@@ -9,9 +9,15 @@
 //! ```text
 //! L = λ^J·(p−1) + λ^K·(t−1) + L_c
 //! ```
+//!
+//! One mapping generally admits several feasible schedules (one per
+//! causal dimension permutation): [`find_schedule`] picks the first,
+//! [`enumerate_schedules`] yields them all — the DSE schedule axis.
 
 pub mod latency;
 pub mod vectors;
 
 pub use latency::{critical_chain, latency};
-pub use vectors::{find_schedule, Schedule, ScheduleError};
+pub use vectors::{
+    enumerate_schedules, find_schedule, Schedule, ScheduleError,
+};

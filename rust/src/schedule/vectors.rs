@@ -22,6 +22,11 @@ use crate::tiling::TiledPra;
 use super::latency::critical_chain;
 
 /// A symbolic LSGP schedule.
+///
+/// One tiled mapping generally admits *several* feasible schedules — one
+/// per causal dimension permutation — with genuinely different latency /
+/// FD-pressure trade-offs. [`find_schedule`] returns the first (the
+/// pre-enumeration behavior); [`enumerate_schedules`] yields them all.
 #[derive(Debug, Clone)]
 pub struct Schedule {
     /// Intra-tile dimension order, fastest first.
@@ -175,6 +180,15 @@ impl Schedule {
             + lk.iter().zip(k).map(|(a, &b)| a * b as i128).sum::<i128>()
     }
 
+    /// Compact description of the intra-tile walk, fastest dimension
+    /// first — e.g. `j0j1` for the natural order of a 2-deep nest,
+    /// `j1j0` for the space-fastest order Jacobi needs. Distinct
+    /// schedules of one mapping always carry distinct labels (they
+    /// differ exactly in the permutation).
+    pub fn perm_label(&self) -> String {
+        self.perm.iter().map(|d| format!("j{d}")).collect()
+    }
+
     /// Check every causality constraint at concrete parameters. Returns
     /// violated constraint descriptions (empty = schedule valid there).
     /// All arithmetic is `i128`, so a violation can never be masked by
@@ -221,15 +235,9 @@ impl Schedule {
     }
 }
 
-/// Find a symbolic schedule for a tiled PRA (π given; the paper's
-/// experiments use π = 1).
-pub fn find_schedule(tiled: &TiledPra, pi: i64) -> Result<Schedule, ScheduleError> {
-    let n = tiled.pra.ndims;
-    let np = tiled.pra.space.len();
-    let p_idx: Vec<usize> =
-        (0..n).map(|l| tiled.pra.space.p_index(l)).collect();
-
-    // All distinct original dependence vectors.
+/// All distinct non-zero original dependence vectors of a tiled PRA —
+/// the constraint system every causal permutation must satisfy.
+fn dependence_vectors(tiled: &TiledPra) -> Vec<Vec<i64>> {
     let mut deps: Vec<Vec<i64>> = tiled
         .statements
         .iter()
@@ -238,27 +246,43 @@ pub fn find_schedule(tiled: &TiledPra, pi: i64) -> Result<Schedule, ScheduleErro
         .collect();
     deps.sort();
     deps.dedup();
+    deps
+}
 
-    // 1. Choose the dimension permutation (natural order preferred, which
-    //    reproduces the paper's λ^J for GESUMMV).
-    let perm = permutations(n)
-        .into_iter()
-        .find(|perm| {
-            deps.iter().all(|d| {
-                // most significant non-zero (scanning slowest→fastest)
-                for &dim in perm.iter().rev() {
-                    match d[dim].signum() {
-                        1 => return true,
-                        -1 => return false,
-                        _ => continue,
-                    }
-                }
-                true // zero vector (cannot happen: filtered above)
-            })
-        })
-        .ok_or_else(|| ScheduleError::NoValidPermutation(deps.clone()))?;
+/// Is `perm` (fastest dimension first) causal for every dependence —
+/// i.e. is each vector "mixed-radix positive", its most significant
+/// non-zero component (in σ-order) positive? This is exactly intra-tile
+/// causality `λ^J·d ≥ 1` for `|d_ℓ| < p_ℓ`.
+fn perm_is_causal(perm: &[usize], deps: &[Vec<i64>]) -> bool {
+    deps.iter().all(|d| {
+        // most significant non-zero (scanning slowest→fastest)
+        for &dim in perm.iter().rev() {
+            match d[dim].signum() {
+                1 => return true,
+                -1 => return false,
+                _ => continue,
+            }
+        }
+        true // zero vector (cannot happen: filtered by the caller)
+    })
+}
 
-    // 2. λ^J.
+/// Build the schedule a given causal permutation induces: λ^J is forced
+/// by (perm, π), and λ^K is the component-wise least solution of the
+/// inter-tile causality constraints — so per permutation there is
+/// exactly one non-dominated schedule, and enumerating permutations
+/// enumerates the whole useful schedule space at fixed π.
+fn schedule_for_perm(
+    tiled: &TiledPra,
+    pi: i64,
+    perm: Vec<usize>,
+) -> Schedule {
+    let n = tiled.pra.ndims;
+    let np = tiled.pra.space.len();
+    let p_idx: Vec<usize> =
+        (0..n).map(|l| tiled.pra.space.p_index(l)).collect();
+
+    // λ^J: stride π·Π_{r<m} p_{σ(r)} along the permutation.
     let mut lambda_j = vec![Poly::zero(np); n];
     let mut stride = Poly::constant(np, pi as i128);
     for &dim in &perm {
@@ -269,7 +293,7 @@ pub fn find_schedule(tiled: &TiledPra, pi: i64) -> Result<Schedule, ScheduleErro
         stride = stride.mul(&p_l);
     }
 
-    // 3. λ^K candidates from tile-crossing variants.
+    // λ^K candidates from tile-crossing variants.
     let mut lambda_k: Vec<Vec<Poly>> = vec![vec![Poly::zero(np)]; n];
     let mut extra = Vec::new();
     for st in &tiled.statements {
@@ -302,7 +326,64 @@ pub fn find_schedule(tiled: &TiledPra, pi: i64) -> Result<Schedule, ScheduleErro
     }
 
     let lc = critical_chain(&tiled.pra);
-    Ok(Schedule { perm, pi, lambda_j, lambda_k, extra, lc })
+    Schedule { perm, pi, lambda_j, lambda_k, extra, lc }
+}
+
+/// Enumerate every feasible symbolic schedule of a tiled PRA at
+/// initiation interval `pi`, in deterministic order (lexicographic over
+/// the dimension permutations), capped at `limit` candidates (`None` =
+/// all). The first entry is always [`find_schedule`]'s pick; an empty
+/// result means no causal lexicographic order exists.
+///
+/// Candidates differ in their dimension permutation and hence in
+/// `(λ^J, λ^K)` — a latency / FD-pressure trade-off at identical energy,
+/// which is what makes the schedule a design-space axis (see
+/// `dse::DesignSpace::with_schedules`). The count is bounded by
+/// `ndims!`, small for the loop depths PRAs have.
+///
+/// Soundness contract: the construction satisfies intra-tile causality
+/// (the permutation filter) and every *enforceable* inter-tile row
+/// (λ^K candidate lists + the [`Schedule::lambda_k_at`] fixpoint).
+/// Pure-negative `d_K` rows — backward tile crossings — are upper
+/// bounds that only [`Schedule::verify`] checks, exactly as for
+/// [`find_schedule`]'s single pick. `tests/schedule_enum.rs` pins
+/// verify-cleanliness for every candidate of every built-in workload;
+/// callers enumerating *untrusted* PRAs should spot-check candidates
+/// with [`Schedule::verify`] at representative parameters before
+/// trusting their latencies.
+pub fn enumerate_schedules(
+    tiled: &TiledPra,
+    pi: i64,
+    limit: Option<usize>,
+) -> Vec<Schedule> {
+    let cap = limit.unwrap_or(usize::MAX);
+    let mut out = Vec::new();
+    if cap == 0 {
+        return out;
+    }
+    let deps = dependence_vectors(tiled);
+    for perm in permutations(tiled.pra.ndims) {
+        if perm_is_causal(&perm, &deps) {
+            out.push(schedule_for_perm(tiled, pi, perm));
+            if out.len() >= cap {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Find a symbolic schedule for a tiled PRA (π given; the paper's
+/// experiments use π = 1): the first feasible candidate of
+/// [`enumerate_schedules`] — natural dimension order preferred, which
+/// reproduces the paper's λ^J for GESUMMV.
+pub fn find_schedule(tiled: &TiledPra, pi: i64) -> Result<Schedule, ScheduleError> {
+    enumerate_schedules(tiled, pi, Some(1))
+        .into_iter()
+        .next()
+        .ok_or_else(|| {
+            ScheduleError::NoValidPermutation(dependence_vectors(tiled))
+        })
 }
 
 /// All permutations of `0..n` in lexicographic order.
@@ -456,6 +537,60 @@ mod tests {
             lc: 1,
         };
         s.lambda_k_at(&[4, 4]);
+    }
+
+    #[test]
+    fn enumeration_yields_all_causal_permutations_for_gesummv() {
+        // GESUMMV's dependencies (1,0) and (0,1) are causal under either
+        // dimension order: exactly two candidates, natural order first
+        // (= find_schedule's pick), both passing verify.
+        let tiled = tile_pra(&gesummv(), &ArrayMapping::new(vec![2, 2]));
+        let all = enumerate_schedules(&tiled, 1, None);
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].perm, vec![0, 1]);
+        assert_eq!(all[1].perm, vec![1, 0]);
+        assert_eq!(all[0].perm_label(), "j0j1");
+        assert_eq!(all[1].perm_label(), "j1j0");
+        let first = find_schedule(&tiled, 1).unwrap();
+        assert_eq!(all[0].perm, first.perm);
+        let params = [4i64, 5, 2, 3];
+        assert_eq!(all[0].lambda_j_at(&params), first.lambda_j_at(&params));
+        assert_eq!(all[0].lambda_k_at(&params), first.lambda_k_at(&params));
+        for s in &all {
+            assert!(s.verify(&tiled, &params).is_empty(), "{:?}", s.perm);
+        }
+        // The two schedules genuinely differ: λ^J is permuted.
+        assert_ne!(
+            all[0].lambda_j_at(&params),
+            all[1].lambda_j_at(&params)
+        );
+    }
+
+    #[test]
+    fn enumeration_excludes_non_causal_permutations() {
+        // Jacobi's (1,−1) dependence rules out the j0-fastest order:
+        // exactly one candidate survives.
+        let tiled = tile_pra(&jacobi1d_pra(), &ArrayMapping::new(vec![1, 4]));
+        let all = enumerate_schedules(&tiled, 1, None);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].perm, vec![1, 0]);
+    }
+
+    #[test]
+    fn enumeration_cap_and_determinism() {
+        let tiled = tile_pra(&gesummv(), &ArrayMapping::new(vec![2, 2]));
+        assert!(enumerate_schedules(&tiled, 1, Some(0)).is_empty());
+        assert_eq!(enumerate_schedules(&tiled, 1, Some(1)).len(), 1);
+        // Deterministic: repeated enumeration yields the same order.
+        let a: Vec<Vec<usize>> = enumerate_schedules(&tiled, 1, None)
+            .into_iter()
+            .map(|s| s.perm)
+            .collect();
+        let b: Vec<Vec<usize>> = enumerate_schedules(&tiled, 1, None)
+            .into_iter()
+            .map(|s| s.perm)
+            .collect();
+        assert_eq!(a, b);
     }
 
     #[test]

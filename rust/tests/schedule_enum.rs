@@ -1,0 +1,250 @@
+//! Soundness and sim-differential suite for the schedule-vector
+//! enumerator (`schedule::enumerate_schedules`), the DSE schedule axis'
+//! foundation:
+//!
+//! 1. **Constraint soundness** — every enumerated schedule of every
+//!    built-in workload passes `Schedule::verify` at a grid of sampled
+//!    parameter points (several bounds × array shapes × π).
+//! 2. **Default containment** — `find_schedule`'s pick is always
+//!    candidate 0 of the enumeration (same permutation, same evaluated
+//!    λ^J/λ^K), so `--schedules first` can never diverge from the
+//!    single-schedule explorer.
+//! 3. **Determinism** — repeated enumeration (including from concurrent
+//!    threads, the explorer's worker setting) yields identical candidate
+//!    sequences.
+//! 4. **Sim differential** — extending the symbolic==concrete oracle of
+//!    `tests/packed_diff.rs` to the schedule axis: for small concrete
+//!    bounds, *each* enumerated schedule drives the cycle-accurate `sim`
+//!    engine with zero causality violations, its symbolic latency (Eq. 8)
+//!    equals the simulated makespan exactly, the rectangular-span start
+//!    time `λ^J·(p−1) + λ^K·(t−1)` anchors the cycle count, counts stay
+//!    schedule-invariant (equal to the symbolic volumes), and functional
+//!    outputs match the lexicographic interpreter.
+
+use tcpa_energy::analysis::SymbolicAnalysis;
+use tcpa_energy::schedule::{enumerate_schedules, find_schedule, latency};
+use tcpa_energy::sim::{simulate, ArchConfig};
+use tcpa_energy::tiling::{
+    pad_array, pad_bounds, tile_pra, ArrayMapping,
+};
+use tcpa_energy::workloads::{self, interpret, workload_inputs};
+
+/// Array shapes exercised per loop depth: the canonical 2×2-style
+/// mapping plus linear and rectangular orientations (deeper dimensions
+/// stay PE-local, the `analyze_uniform` convention).
+fn shapes_for(ndims: usize) -> Vec<Vec<i64>> {
+    let base: Vec<Vec<i64>> =
+        vec![vec![2, 2], vec![1, 4], vec![4, 1], vec![3, 2]];
+    base.into_iter().map(|t| pad_array(&t, ndims)).collect()
+}
+
+/// Loop-bound vectors per depth (padded with the last entry, the CLI
+/// convention). Kept ≥ 4 so every shape above fits and tiles are
+/// non-degenerate; `mvt`/`syrk` are square-only (the convention the
+/// validation and property suites follow), so rectangles collapse to
+/// their larger square for them.
+fn bounds_for(wl_name: &str, ndims: usize) -> Vec<Vec<i64>> {
+    let mut out = vec![
+        pad_bounds(&[4, 4], ndims),
+        pad_bounds(&[8, 8], ndims),
+        pad_bounds(&[4, 9], ndims),
+        pad_bounds(&[9, 4], ndims),
+    ];
+    if matches!(wl_name, "mvt" | "syrk") {
+        for b in &mut out {
+            let m = b.iter().copied().max().unwrap();
+            b.fill(m);
+        }
+    }
+    out
+}
+
+#[test]
+fn every_enumerated_schedule_verifies_on_every_builtin_workload() {
+    for wl in workloads::all() {
+        for phase in &wl.phases {
+            for shape in shapes_for(phase.ndims) {
+                let mapping = ArrayMapping::new(shape.clone());
+                let tiled = tile_pra(phase, &mapping);
+                for pi in [1i64, 3] {
+                    let all = enumerate_schedules(&tiled, pi, None);
+                    assert!(
+                        !all.is_empty(),
+                        "{}: no candidates on {shape:?}",
+                        phase.name
+                    );
+                    for bounds in bounds_for(&wl.name, phase.ndims) {
+                        let params = mapping.params_for(&bounds);
+                        for (ci, s) in all.iter().enumerate() {
+                            let v = s.verify(&tiled, &params);
+                            assert!(
+                                v.is_empty(),
+                                "{} t={shape:?} π={pi} candidate {ci} \
+                                 (perm {:?}) violates causality at \
+                                 {params:?}: {v:?}",
+                                phase.name,
+                                s.perm
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn find_schedule_pick_is_candidate_zero_everywhere() {
+    for wl in workloads::all() {
+        for phase in &wl.phases {
+            for shape in shapes_for(phase.ndims) {
+                let mapping = ArrayMapping::new(shape.clone());
+                let tiled = tile_pra(phase, &mapping);
+                let first = find_schedule(&tiled, 1)
+                    .unwrap_or_else(|e| {
+                        panic!("{} on {shape:?}: {e}", phase.name)
+                    });
+                let all = enumerate_schedules(&tiled, 1, None);
+                let c0 = &all[0];
+                assert_eq!(c0.perm, first.perm, "{}", phase.name);
+                assert_eq!(c0.pi, first.pi);
+                assert_eq!(c0.lc, first.lc);
+                // Same evaluated vectors at a sample of points — the
+                // observable identity the DSE `first` policy relies on.
+                for bounds in bounds_for(&wl.name, phase.ndims) {
+                    let params = mapping.params_for(&bounds);
+                    assert_eq!(
+                        c0.lambda_j_at(&params),
+                        first.lambda_j_at(&params)
+                    );
+                    assert_eq!(
+                        c0.lambda_k_at(&params),
+                        first.lambda_k_at(&params)
+                    );
+                    assert_eq!(
+                        latency(c0, &tiled, &params),
+                        latency(&first, &tiled, &params)
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// (perm, λ^J, λ^K) evaluated at one parameter point — the observable
+/// identity of one candidate in the determinism checks below.
+type CandidatePrint = (Vec<usize>, Vec<i128>, Vec<i128>);
+
+#[test]
+fn enumeration_is_deterministic_across_runs_and_threads() {
+    let wl = workloads::by_name("gemm").unwrap();
+    let phase = &wl.phases[0];
+    let tiled = tile_pra(phase, &ArrayMapping::new(vec![2, 2, 1]));
+    let fingerprint = |tiled: &tcpa_energy::tiling::TiledPra| -> Vec<CandidatePrint> {
+        let params = [8i64, 8, 8, 4, 4, 8];
+        enumerate_schedules(tiled, 1, None)
+            .into_iter()
+            .map(|s| {
+                (
+                    s.perm.clone(),
+                    s.lambda_j_at(&params),
+                    s.lambda_k_at(&params),
+                )
+            })
+            .collect()
+    };
+    let reference = fingerprint(&tiled);
+    assert!(!reference.is_empty());
+    // Repeated runs.
+    assert_eq!(fingerprint(&tiled), reference);
+    // Concurrent enumeration (the explorer calls this from its worker
+    // pool): every thread must observe the identical sequence.
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| scope.spawn(|| fingerprint(&tiled)))
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), reference);
+        }
+    });
+}
+
+#[test]
+fn sim_differential_validates_every_candidate_on_every_workload() {
+    for wl in workloads::all() {
+        // Small concrete bounds keep the Θ(iterations) simulation cheap;
+        // jacobi1d wants a wider space dimension (its boundary stencil
+        // needs the room — same sizing the figures pipeline uses).
+        let base: Vec<i64> = match wl.name.as_str() {
+            "jacobi1d" => vec![4, 12],
+            _ => vec![8, 8],
+        };
+        let params_all: Vec<Vec<i64>> = wl
+            .phases
+            .iter()
+            .map(|ph| {
+                let b = pad_bounds(&base, ph.ndims);
+                let t = pad_array(&[2, 2], ph.ndims);
+                ArrayMapping::new(t).params_for(&b)
+            })
+            .collect();
+        let mut env = workload_inputs(&wl, &params_all);
+        for (phase, params) in wl.phases.iter().zip(&params_all) {
+            let t = pad_array(&[2, 2], phase.ndims);
+            let mapping = ArrayMapping::new(t.clone());
+            let ana = SymbolicAnalysis::analyze(phase, &mapping);
+            let sym = ana.counts_at(params);
+            let golden = interpret(phase, params, &env);
+            let mut arch = ArchConfig::with_array(t.clone());
+            arch.regs.fd = 1 << 20; // pressure is a separate concern
+            let tiled = tile_pra(phase, &mapping);
+            let all = enumerate_schedules(&tiled, arch.pi, None);
+            assert!(!all.is_empty(), "{}", phase.name);
+            for (ci, s) in all.iter().enumerate() {
+                let tag = format!(
+                    "{} candidate {ci} (perm {:?})",
+                    phase.name, s.perm
+                );
+                let res = simulate(phase, &arch, s, params, &env);
+                // Dynamic causality: no operand may be read before its
+                // producing iteration started — the ground truth the
+                // symbolic constraints stand in for.
+                assert!(
+                    res.violations.is_empty(),
+                    "{tag}: {:?}",
+                    res.violations
+                );
+                // Symbolic latency == simulated makespan, exactly.
+                let l_sym = latency(s, &tiled, params);
+                assert_eq!(res.cycles, l_sym, "{tag}: latency");
+                // Start-time anchor: the final iteration of the
+                // rectangular schedule starts at span = L − L_c.
+                let jmax: Vec<i64> = (0..phase.ndims)
+                    .map(|l| params[phase.space.p_index(l)] - 1)
+                    .collect();
+                let kmax: Vec<i64> =
+                    mapping.t.iter().map(|&x| x - 1).collect();
+                assert_eq!(
+                    s.start_time(&jmax, &kmax, params) + s.lc as i128,
+                    res.cycles as i128,
+                    "{tag}: start-time span"
+                );
+                // Counts are schedule-invariant and exactly symbolic.
+                let diff = res.counters.diff_symbolic(&sym);
+                assert!(diff.is_empty(), "{tag}: {diff:#?}");
+                // Functional ground truth.
+                for (name, tens) in &res.outputs {
+                    assert!(
+                        tens.allclose(&golden[name], 1e-4, 1e-4),
+                        "{tag}: output {name} diverges"
+                    );
+                }
+            }
+            // Later phases consume earlier phases' outputs: feed the
+            // interpreter's (schedule-independent) values forward.
+            for (name, tens) in golden {
+                env.insert(name, tens);
+            }
+        }
+    }
+}
