@@ -6,10 +6,12 @@
 //! analyzed once, then three problem sizes are swept against the cached
 //! expressions. The result is a multi-objective (energy, latency, PEs,
 //! DRAM) Pareto frontier per size instead of a single EDP ranking —
-//! exactly the early-design-stage use the paper motivates. A final
-//! sweep turns the schedule vector itself into an axis
-//! (`with_schedules`): every feasible `(permutation, λ^J, λ^K)` per
-//! mapping is priced against the same cached analysis.
+//! exactly the early-design-stage use the paper motivates. Two further
+//! sweeps turn the schedule vector (`with_schedules`: every feasible
+//! `(permutation, λ^J, λ^K)` per mapping, priced against the same
+//! cached analysis) and the per-phase shape assignment
+//! (`with_phase_shapes`: each GEMVER phase on its own orientation under
+//! the shared PE budget) into axes of their own.
 //!
 //! ```bash
 //! cargo run --release --example dse_array_sizing
@@ -17,7 +19,7 @@
 
 use tcpa_energy::dse::{
     explore_with_cache, AnalysisCache, DesignSpace, ExploreConfig,
-    SchedulePolicy,
+    PhasePolicy, SchedulePolicy,
 };
 use tcpa_energy::energy::Backend;
 use tcpa_energy::workloads;
@@ -151,6 +153,53 @@ fn main() {
             "{:>7} {:>14} {:>14.3e} {:>12} {:>7}",
             p.point.array_label(),
             format!("{} ({})", p.point.schedule.label(), p.schedule_label),
+            p.energy_pj,
+            p.latency_cycles,
+            if res.frontier.contains(&i) { "yes" } else { "" }
+        );
+    }
+
+    // Per-phase heterogeneous mapping: GEMVER's phases accumulate along
+    // different dimensions, so no single orientation suits all three.
+    // `with_phase_shapes(PerPhase)` sweeps every shape combination under
+    // the shared PE budget (phases run sequentially — a combination
+    // costs the max, not the sum, of its phases' PEs), while each
+    // (phase, shape) pair is analyzed exactly once. Composed with the
+    // schedule axis, every assignment competes at its best λ — which is
+    // what lets mixed orientations reach the frontier.
+    let gemver = workloads::by_name("gemver").unwrap();
+    let phase_cache = AnalysisCache::new();
+    let phase_space = DesignSpace::new()
+        .with_arrays(vec![vec![1, 8], vec![8, 1], vec![4, 2], vec![2, 4]])
+        .with_bounds(vec![64, 64])
+        .with_phase_shapes(PhasePolicy::PerPhase)
+        .with_schedules(SchedulePolicy::All);
+    let res = explore_with_cache(
+        &gemver,
+        &phase_space,
+        &ExploreConfig::default(),
+        &phase_cache,
+    );
+    println!(
+        "\nGEMVER per-phase sweep at N=64: {} evaluated points (shape \
+         combinations × λ candidates) from {} phase analyses",
+        res.points.len(),
+        phase_cache.stats().misses
+    );
+    println!(
+        "{:>16} {:>4} {:>14} {:>12} {:>7}",
+        "phases", "PEs", "E_tot [pJ]", "L [cyc]", "pareto"
+    );
+    for (i, p) in res.points.iter().enumerate() {
+        if !res.frontier.contains(&i)
+            && !p.point.phase_shapes.is_uniform()
+        {
+            continue; // keep the table short: frontier + uniform rows
+        }
+        println!(
+            "{:>16} {:>4} {:>14.3e} {:>12} {:>7}",
+            p.point.phase_shapes.label(),
+            p.pes,
             p.energy_pj,
             p.latency_cycles,
             if res.frontier.contains(&i) { "yes" } else { "" }

@@ -190,6 +190,80 @@ impl SymbolicAnalysis {
     }
 }
 
+/// Pair each phase analysis with its parameter vector, panicking — not
+/// silently truncating, as a bare `zip` would — when the lengths
+/// disagree: a dropped phase would quietly omit a whole phase's counts,
+/// energy or latency from the totals.
+fn zip_phases<'a, 'b>(
+    phases: impl IntoIterator<Item = &'a SymbolicAnalysis>,
+    params: &'b [Vec<i64>],
+) -> impl Iterator<Item = (&'a SymbolicAnalysis, &'b Vec<i64>)> {
+    let mut phases = phases.into_iter();
+    let mut n = 0usize;
+    std::iter::from_fn(move || match (phases.next(), params.get(n)) {
+        (Some(ph), Some(p)) => {
+            n += 1;
+            Some((ph, p))
+        }
+        (None, None) => None,
+        (Some(_), None) => {
+            panic!("more phase analyses than parameter vectors ({n} params)")
+        }
+        (None, Some(_)) => panic!(
+            "more parameter vectors ({}) than phase analyses ({n})",
+            params.len()
+        ),
+    })
+}
+
+/// Counts summed over an explicit sequence of per-phase analyses, each
+/// paired with its own parameter vector and routed through `backend` —
+/// the shared aggregation behind [`WorkloadAnalysis::counts_at_backend`]
+/// *and* the DSE explorer's per-phase heterogeneous mappings, where every
+/// phase was analyzed on its own array shape
+/// (`dse::DesignSpace::with_phase_shapes`) and no single
+/// [`WorkloadAnalysis`] exists. Phases execute back to back, so counts
+/// sum; a `phases`/`params` length mismatch panics.
+pub fn counts_at_backend_phases<'a>(
+    phases: impl IntoIterator<Item = &'a SymbolicAnalysis>,
+    params: &[Vec<i64>],
+    backend: &Backend,
+) -> CountsBreakdown {
+    let mut out = CountsBreakdown::default();
+    for (ph, p) in zip_phases(phases, params) {
+        out.merge(&ph.counts_at_backend(p, backend));
+    }
+    out
+}
+
+/// Energy summed over an explicit sequence of per-phase analyses under
+/// `backend` (see [`counts_at_backend_phases`]); merge order is the
+/// phase order, so uniform assignments stay bit-for-bit identical to
+/// [`WorkloadAnalysis::energy_at_backend`] — which delegates here.
+pub fn energy_at_backend_phases<'a>(
+    phases: impl IntoIterator<Item = &'a SymbolicAnalysis>,
+    params: &[Vec<i64>],
+    backend: &Backend,
+) -> EnergyBreakdown {
+    let mut out = EnergyBreakdown::default();
+    for (ph, p) in zip_phases(phases, params) {
+        out.merge(&ph.energy_at_backend(p, backend));
+    }
+    out
+}
+
+/// Latency summed over an explicit sequence of per-phase analyses
+/// (phases execute back to back; see [`counts_at_backend_phases`]).
+/// [`WorkloadAnalysis::latency_at`] delegates here.
+pub fn latency_at_phases<'a>(
+    phases: impl IntoIterator<Item = &'a SymbolicAnalysis>,
+    params: &[Vec<i64>],
+) -> i64 {
+    zip_phases(phases, params)
+        .map(|(ph, p)| ph.latency_at(p))
+        .sum()
+}
+
 impl WorkloadAnalysis {
     /// Counts summed over phases; `params` per phase.
     pub fn counts_at(&self, params: &[Vec<i64>]) -> CountsBreakdown {
@@ -218,11 +292,7 @@ impl WorkloadAnalysis {
         backend: &Backend,
     ) -> CountsBreakdown {
         assert_eq!(params.len(), self.phases.len());
-        let mut out = CountsBreakdown::default();
-        for (ph, p) in self.phases.iter().zip(params) {
-            out.merge(&ph.counts_at_backend(p, backend));
-        }
-        out
+        counts_at_backend_phases(&self.phases, params, backend)
     }
 
     /// Energy summed over phases under an alternative [`Backend`] — one
@@ -233,20 +303,13 @@ impl WorkloadAnalysis {
         backend: &Backend,
     ) -> EnergyBreakdown {
         assert_eq!(params.len(), self.phases.len());
-        let mut out = EnergyBreakdown::default();
-        for (ph, p) in self.phases.iter().zip(params) {
-            out.merge(&ph.energy_at_backend(p, backend));
-        }
-        out
+        energy_at_backend_phases(&self.phases, params, backend)
     }
 
     /// Latency summed over phases (phases execute back to back).
     pub fn latency_at(&self, params: &[Vec<i64>]) -> i64 {
-        self.phases
-            .iter()
-            .zip(params)
-            .map(|(ph, p)| ph.latency_at(p))
-            .sum()
+        assert_eq!(params.len(), self.phases.len());
+        latency_at_phases(&self.phases, params)
     }
 }
 
@@ -340,6 +403,70 @@ mod tests {
         assert!(tcpa < systolic, "{tcpa} vs {systolic}");
         assert!(systolic < cgra, "{systolic} vs {cgra}");
         assert!(cgra < gpu, "{cgra} vs {gpu}");
+    }
+
+    #[test]
+    fn phase_merge_matches_workload_aggregation_and_sums_heterogeneous() {
+        // Uniform delegation: WorkloadAnalysis methods and the free
+        // functions are the same arithmetic, bit for bit.
+        let wl = crate::workloads::by_name("atax").unwrap();
+        let ana = crate::analysis::WorkloadAnalysis::analyze_uniform(
+            &wl,
+            &[2, 2],
+        );
+        let params: Vec<Vec<i64>> =
+            ana.phases.iter().map(|ph| ph.params_for(&[8, 8])).collect();
+        let be = Backend::tcpa();
+        let merged = super::energy_at_backend_phases(&ana.phases, &params, &be);
+        let whole = ana.energy_at_backend(&params, &be);
+        assert_eq!(merged.total.to_bits(), whole.total.to_bits());
+        assert_eq!(merged, whole);
+        assert_eq!(
+            super::latency_at_phases(&ana.phases, &params),
+            ana.latency_at(&params)
+        );
+        // Heterogeneous: each phase analyzed on its own shape; totals are
+        // exactly the per-phase sums (phases run back to back).
+        let p1 = crate::analysis::SymbolicAnalysis::analyze(
+            &wl.phases[0],
+            &ArrayMapping::new(vec![1, 4]),
+        );
+        let p2 = crate::analysis::SymbolicAnalysis::analyze(
+            &wl.phases[1],
+            &ArrayMapping::new(vec![4, 1]),
+        );
+        let hp = vec![p1.params_for(&[8, 8]), p2.params_for(&[8, 8])];
+        let phases = [&p1, &p2];
+        let e = super::energy_at_backend_phases(
+            phases.iter().copied(),
+            &hp,
+            &be,
+        );
+        let want = p1.energy_at_backend(&hp[0], &be).total
+            + p2.energy_at_backend(&hp[1], &be).total;
+        assert_eq!(e.total.to_bits(), want.to_bits());
+        let c = super::counts_at_backend_phases(
+            phases.iter().copied(),
+            &hp,
+            &be,
+        );
+        let mut manual = p1.counts_at_backend(&hp[0], &be);
+        manual.merge(&p2.counts_at_backend(&hp[1], &be));
+        assert_eq!(c, manual);
+        assert_eq!(
+            super::latency_at_phases(phases.iter().copied(), &hp),
+            p1.latency_at(&hp[0]) + p2.latency_at(&hp[1])
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "parameter vectors")]
+    fn phase_merge_rejects_length_mismatch() {
+        // A bare zip would silently drop the unmatched phase and return
+        // a total missing a whole phase's latency.
+        let ana = ana22();
+        let params: Vec<Vec<i64>> = Vec::new();
+        let _ = super::latency_at_phases(std::iter::once(&ana), &params);
     }
 
     #[test]

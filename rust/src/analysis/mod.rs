@@ -13,9 +13,13 @@
 pub mod evaluate;
 pub mod report;
 
-pub use evaluate::{CountsBreakdown, EnergyBreakdown};
+pub use evaluate::{
+    counts_at_backend_phases, energy_at_backend_phases, latency_at_phases,
+    CountsBreakdown, EnergyBreakdown,
+};
 
 use std::collections::HashMap;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use crate::energy::{AccessProfile, EnergyTable};
@@ -56,6 +60,12 @@ pub struct SymbolicAnalysis {
     pub table: EnergyTable,
     /// Wall-clock duration of the symbolic pass (for Fig. 4).
     pub analysis_time: std::time::Duration,
+    /// Lazily memoized *full* schedule-candidate enumeration, so a
+    /// cached analysis shared across design points (the DSE explorer
+    /// holds these behind `Arc`) enumerates once per (workload, shape)
+    /// instead of once per bounds/tile/backend variant. Cloning the
+    /// analysis clones the memo's current contents.
+    schedule_memo: OnceLock<Vec<Schedule>>,
 }
 
 impl SymbolicAnalysis {
@@ -130,6 +140,7 @@ impl SymbolicAnalysis {
             statements,
             table: table.clone(),
             analysis_time: start.elapsed(),
+            schedule_memo: OnceLock::new(),
         }
     }
 
@@ -146,12 +157,32 @@ impl SymbolicAnalysis {
     /// — and therefore counts and energies — are shared by every
     /// candidate, only latency varies
     /// ([`SymbolicAnalysis::latency_at_with`]).
+    ///
+    /// The full enumeration is memoized alongside the analysis (the
+    /// candidate set depends only on the tiled mapping and π, both fixed
+    /// here), so DSE sweeps that revisit one cached analysis across many
+    /// bounds/tile/backend variants enumerate once per (workload, shape);
+    /// a `limit` merely slices the memoized list — enumeration order is
+    /// deterministic, so the prefix equals a capped enumeration.
     pub fn enumerate_schedules(&self, limit: Option<usize>) -> Vec<Schedule> {
-        crate::schedule::enumerate_schedules(
-            &self.tiled,
-            self.schedule.pi,
-            limit,
-        )
+        let all = self.schedule_memo.get_or_init(|| {
+            crate::schedule::enumerate_schedules(
+                &self.tiled,
+                self.schedule.pi,
+                None,
+            )
+        });
+        match limit {
+            Some(n) => all.iter().take(n).cloned().collect(),
+            None => all.clone(),
+        }
+    }
+
+    /// Has [`Self::enumerate_schedules`] populated its memo yet? (Test
+    /// and diagnostics hook — the memo itself is an implementation
+    /// detail.)
+    pub fn schedules_memoized(&self) -> bool {
+        self.schedule_memo.get().is_some()
     }
 }
 
@@ -254,6 +285,35 @@ mod tests {
             (contribution - 7.08).abs() < 1e-9,
             "S7 contribution = {contribution}"
         );
+    }
+
+    #[test]
+    fn schedule_enumeration_is_memoized_and_cap_slices_the_memo() {
+        let ana = SymbolicAnalysis::analyze(
+            &gesummv(),
+            &ArrayMapping::new(vec![1, 4]),
+        );
+        assert!(!ana.schedules_memoized());
+        // A capped request still fills the full memo (enumeration is
+        // cheap, bounded by ndims! permutations) and returns its prefix.
+        let one = ana.enumerate_schedules(Some(1));
+        assert_eq!(one.len(), 1);
+        assert!(ana.schedules_memoized());
+        let all = ana.enumerate_schedules(None);
+        assert!(all.len() >= 2, "1×4 GESUMMV has two causal orders");
+        // Memoized results equal a fresh enumeration, candidate by
+        // candidate (permutation identity is what distinguishes them).
+        let fresh = crate::schedule::enumerate_schedules(
+            &ana.tiled,
+            ana.schedule.pi,
+            None,
+        );
+        assert_eq!(all.len(), fresh.len());
+        for (a, b) in all.iter().zip(&fresh) {
+            assert_eq!(a.perm, b.perm);
+            assert_eq!(a.lc, b.lc);
+        }
+        assert_eq!(one[0].perm, all[0].perm, "cap = prefix of the memo");
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!                      [--tile-scales 1,2]
 //!                      [--backend all|tcpa,cgra,gpu-sm,systolic]
 //!                      [--schedules all|first|N]
+//!                      [--phase-shapes uniform|per-phase]
 //!                      [--policies all|tcpa,no-fd,no-reuse]   (legacy)
 //!                      [--prune-symmetric] [--workers N] [--out DIR]
 //!                      [--analysis-cache DIR] [--prune-cache]
@@ -25,16 +26,22 @@
 //! — latency becomes an explored objective at identical energy, all
 //! candidates priced against the same cached analysis (`first`, the
 //! default, reproduces the single-schedule sweep bit-for-bit; an integer
-//! caps candidates per phase). `--prune-cache` (with `--analysis-cache`)
-//! removes spilled entries whose workload fingerprint went stale.
+//! caps candidates per phase). `dse --phase-shapes per-phase` lets every
+//! phase of a multi-phase workload (ATAX, 2MM, GEMVER) take its
+//! own array shape under the shared PE budget — the sweep covers every
+//! shape combination while analyzing each (phase, shape) pair exactly
+//! once (`uniform`, the default, reproduces the single-shape sweep
+//! bit-for-bit). `--prune-cache` (with `--analysis-cache`) removes
+//! spilled entries whose workload or phase fingerprint went stale.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::analysis::SymbolicAnalysis;
 use crate::dse::{
-    explore, explore_with_cache, workload_fingerprint, AnalysisCache,
-    DesignSpace, ExploreConfig, SchedulePolicy,
+    explore, explore_with_cache, phase_cache_name, phase_fingerprint,
+    workload_fingerprint, AnalysisCache, DesignSpace, ExploreConfig,
+    PhasePolicy, SchedulePolicy,
 };
 use crate::energy::{AccessClass, Backend, MemoryClass, Policy};
 use crate::report::{
@@ -390,6 +397,19 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 };
                 space = space.with_schedules(policy);
             }
+            if let Some(s) = flags.get("phase-shapes") {
+                let policy = match s.as_str() {
+                    "uniform" => PhasePolicy::Uniform,
+                    "per-phase" => PhasePolicy::PerPhase,
+                    other => {
+                        return Err(CliError::Usage(format!(
+                            "--phase-shapes must be uniform or per-phase, \
+                             got {other}"
+                        )))
+                    }
+                };
+                space = space.with_phase_shapes(policy);
+            }
             if flags.contains_key("backend") && flags.contains_key("policies")
             {
                 return Err(CliError::Usage(
@@ -438,6 +458,24 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             if flags.contains_key("prune-symmetric") {
                 space = space.with_symmetry_pruning();
             }
+            if space.phase_policy == PhasePolicy::PerPhase {
+                // Shape combinations grow as shapes^phases; refuse an
+                // explosion loudly (never cap coverage silently) before
+                // any analysis runs.
+                const MAX_PHASE_POINTS: u128 = 20_000;
+                let est = space.phase_point_estimate(wl.phases.len());
+                if est > MAX_PHASE_POINTS {
+                    return Err(CliError::Usage(format!(
+                        "--phase-shapes per-phase on {} ({} phases) would \
+                         enumerate up to {est} design points (shape \
+                         combinations grow as shapes^phases); lower \
+                         --max-pes (e.g. 8) or narrow the other axes to \
+                         at most {MAX_PHASE_POINTS} points",
+                        wl.name,
+                        wl.phases.len()
+                    )));
+                }
+            }
             let workers: usize = match flags.get("workers") {
                 Some(s) => s.parse().map_err(|_| {
                     CliError::Usage(format!(
@@ -455,8 +493,18 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                     let cache = AnalysisCache::with_disk(dir);
                     let res = explore_with_cache(&wl, &space, &cfg, &cache);
                     if flags.contains_key("prune-cache") {
-                        let live =
-                            [(wl.name.clone(), workload_fingerprint(&wl))];
+                        // Live keys: the whole-workload entry plus one
+                        // phase-scoped entry per phase (the per-phase
+                        // axis spills those), each under its own
+                        // structural fingerprint.
+                        let mut live =
+                            vec![(wl.name.clone(), workload_fingerprint(&wl))];
+                        for (i, ph) in wl.phases.iter().enumerate() {
+                            live.push((
+                                phase_cache_name(&wl.name, i),
+                                phase_fingerprint(ph),
+                            ));
+                        }
                         match cache.prune_disk(&live) {
                             Ok(0) => {}
                             Ok(n) => println!(
@@ -511,15 +559,22 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             for g in &res.groups {
                 if let Some(k) = g.knee.map(|i| &res.points[i]) {
                     // Name the schedule only when a non-default candidate
-                    // won — the default pick is implied otherwise.
+                    // won — the default pick is implied otherwise — and
+                    // the phase assignment only when it is genuinely
+                    // heterogeneous.
                     let sched = if k.point.schedule.is_default() {
                         String::new()
                     } else {
                         format!(", schedule {}", k.schedule_label)
                     };
+                    let phases = if k.point.phase_shapes.is_heterogeneous() {
+                        format!(", phases {}", k.point.phase_shapes.label())
+                    } else {
+                        String::new()
+                    };
                     println!(
                         "knee [bounds {:?}, {}]: {} ({} PEs, {:.1} pJ, \
-                         {} cycles{sched})",
+                         {} cycles{sched}{phases})",
                         g.bounds,
                         g.backend.name(),
                         k.point.array_label(),
@@ -750,6 +805,38 @@ mod tests {
     }
 
     #[test]
+    fn dse_accepts_phase_shapes_axis() {
+        // Multi-phase workload, small budget: both policies sweep.
+        for sel in ["uniform", "per-phase"] {
+            assert_eq!(
+                run_cli(&s(&[
+                    "dse", "--workload", "atax", "--bounds", "8,8",
+                    "--max-pes", "4", "--phase-shapes", sel
+                ]))
+                .unwrap(),
+                0,
+                "--phase-shapes {sel} should sweep"
+            );
+        }
+        // Bad value is a usage error.
+        let e = run_cli(&s(&[
+            "dse", "--workload", "atax", "--phase-shapes", "hetero",
+        ]));
+        assert!(matches!(e, Err(CliError::Usage(_))));
+        // Combinatorial explosion is refused loudly, not swept silently:
+        // gemver has 3 phases, so the default --max-pes 64 shape list
+        // (283 shapes) would mean 283³ combinations.
+        let e = run_cli(&s(&[
+            "dse", "--workload", "gemver", "--bounds", "8,8",
+            "--phase-shapes", "per-phase",
+        ]));
+        assert!(
+            matches!(e, Err(CliError::Usage(_))),
+            "oversized per-phase space should be a usage error, got {e:?}"
+        );
+    }
+
+    #[test]
     fn dse_prune_cache_requires_and_uses_analysis_cache() {
         // Without a cache directory the flag is a usage error, not a
         // silent no-op.
@@ -770,6 +857,36 @@ mod tests {
         assert_eq!(run_cli(&s(&args)).unwrap(), 0);
         let live = std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0);
         assert!(live > 0, "live entries must survive the prune");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dse_per_phase_sweep_spills_phase_entries_that_survive_prune() {
+        let dir = std::env::temp_dir().join(format!(
+            "tcpa-cli-phase-cache-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_str().unwrap().to_string();
+        let args = [
+            "dse", "--workload", "atax", "--bounds", "8,8", "--max-pes",
+            "2", "--phase-shapes", "per-phase", "--analysis-cache",
+            &dir_s, "--prune-cache",
+        ];
+        assert_eq!(run_cli(&s(&args)).unwrap(), 0);
+        let files: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        // One file per (phase, shape) pair; the prune (phase names are
+        // listed live) must keep them all.
+        assert!(
+            files.iter().any(|f| f.starts_with("atax_p0-")),
+            "phase-scoped spills expected, got {files:?}"
+        );
+        assert!(files.iter().any(|f| f.starts_with("atax_p1-")));
+        // Second invocation reloads them from disk.
+        assert_eq!(run_cli(&s(&args)).unwrap(), 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

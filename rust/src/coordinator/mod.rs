@@ -11,4 +11,6 @@ pub use cli::{run_cli, CliError};
 #[allow(deprecated)]
 pub use dse::{dse_sweep, DsePoint};
 pub use figures::{fig4_rows, fig5_rows, Fig4Row, Fig5Row};
-pub use validate::{validate_workload, ValidationRow};
+pub use validate::{
+    validate_workload, validate_workload_mapped, ValidationRow,
+};

@@ -27,24 +27,50 @@ pub struct ValidationRow {
     pub functional_ok: bool,
 }
 
-/// Validate one workload at given loop bounds on a given array shape.
+/// Validate one workload at given loop bounds on a given array shape
+/// (the same shape for every phase).
 pub fn validate_workload(
     wl: &Workload,
     base_bounds: &[i64],
     array: &[i64],
 ) -> Vec<ValidationRow> {
+    let arrays: Vec<Vec<i64>> =
+        wl.phases.iter().map(|_| array.to_vec()).collect();
+    validate_workload_mapped(wl, base_bounds, &arrays)
+}
+
+/// Validate one workload with an explicit array shape *per phase* — the
+/// sim differential behind the DSE per-phase heterogeneous mapping axis
+/// (`dse::DesignSpace::with_phase_shapes`): each phase is tiled,
+/// scheduled, symbolically counted **and** cycle-accurately simulated on
+/// its own shape, with intermediate tensors streaming between phases
+/// through the environment exactly as on a uniform array.
+pub fn validate_workload_mapped(
+    wl: &Workload,
+    base_bounds: &[i64],
+    arrays: &[Vec<i64>],
+) -> Vec<ValidationRow> {
+    assert_eq!(
+        arrays.len(),
+        wl.phases.len(),
+        "one array shape per phase of {}",
+        wl.name
+    );
     let mut rows = Vec::new();
     let params_all: Vec<Vec<i64>> = wl
         .phases
         .iter()
-        .map(|ph| {
+        .zip(arrays)
+        .map(|(ph, array)| {
             let b = crate::tiling::pad_bounds(base_bounds, ph.ndims);
             let t = crate::tiling::pad_array(array, ph.ndims);
             ArrayMapping::new(t).params_for(&b)
         })
         .collect();
     let mut env = workload_inputs(wl, &params_all);
-    for (phase, params) in wl.phases.iter().zip(&params_all) {
+    for ((phase, params), array) in
+        wl.phases.iter().zip(&params_all).zip(arrays)
+    {
         let t = crate::tiling::pad_array(array, phase.ndims);
         let mapping = ArrayMapping::new(t.clone());
         let ana = SymbolicAnalysis::analyze(phase, &mapping);
@@ -123,5 +149,26 @@ mod tests {
         let rows = validate_workload(&wl, &[8, 8], &[2, 2]);
         assert_eq!(rows.len(), 2);
         assert!(rows.iter().all(|r| r.exact_match && r.functional_ok));
+    }
+
+    #[test]
+    fn heterogeneous_phase_shapes_validate_exactly() {
+        // Each phase on its own orientation: symbolic counts must match
+        // the cycle-accurate simulator per phase, and the chained
+        // functional outputs must match the interpreter — the sim
+        // differential for the per-phase mapping axis.
+        let wl = crate::workloads::by_name("atax").unwrap();
+        let rows = validate_workload_mapped(
+            &wl,
+            &[8, 8],
+            &[vec![1, 4], vec![4, 1]],
+        );
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].array, vec![1, 4]);
+        assert_eq!(rows[1].array, vec![4, 1]);
+        for r in &rows {
+            assert!(r.exact_match, "{}: {:?}", r.phase, r.counts);
+            assert!(r.functional_ok, "{}: outputs diverge", r.phase);
+        }
     }
 }

@@ -4,8 +4,14 @@
 //! scheduling and symbolic counting — milliseconds per (workload, array)
 //! pair. Every *evaluation* against the resulting expressions is
 //! microseconds. The cache makes the asymmetry structural: one analysis
-//! per (workload, array) key for the lifetime of the cache, shared
-//! lock-free across reader threads via `Arc`.
+//! per (workload, array) key — and, for the per-phase heterogeneous
+//! mapping axis, one single-phase analysis per (workload, phase, array)
+//! key — for the lifetime of the cache, shared lock-free across reader
+//! threads via `Arc`. The per-phase table is what keeps the
+//! combinatorial `shapes^phases` sweep honest: a phase's analysis on a
+//! shape is computed once and reused by *every* combination containing
+//! it, so analysis work scales with distinct (phase, shape) pairs, never
+//! with the number of combinations.
 
 use std::cell::Cell;
 use std::collections::HashMap;
@@ -15,26 +21,42 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Once};
 
-use crate::analysis::WorkloadAnalysis;
+use crate::analysis::{SymbolicAnalysis, WorkloadAnalysis};
 use crate::energy::EnergyTable;
 use crate::polyhedral::FeasPool;
-use crate::pra::Workload;
+use crate::pra::{Pra, Workload};
+use crate::tiling::{pad_array, ArrayMapping};
 
 use super::persist::DiskCache;
 
-/// The memo key. Deliberately **schedule-free**: the symbolic volumes —
-/// and therefore every count and energy — depend only on the tiling of
-/// `(workload, array)`, never on which feasible `(λ^J, λ^K)` candidate
-/// executes them, so all schedule-axis candidates of a shape
-/// (`DesignSpace::with_schedules`) share one cached analysis and
-/// re-evaluate latency alone. A schedule dimension would belong in this
-/// key only if schedules ever started changing counts.
+/// The whole-workload memo key. Deliberately **schedule-free**: the
+/// symbolic volumes — and therefore every count and energy — depend only
+/// on the tiling of `(workload, array)`, never on which feasible
+/// `(λ^J, λ^K)` candidate executes them, so all schedule-axis candidates
+/// of a shape (`DesignSpace::with_schedules`) share one cached analysis
+/// and re-evaluate latency alone. A schedule dimension would belong in
+/// this key only if schedules ever started changing counts.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct CacheKey {
     workload: String,
     /// Structural fingerprint of the workload definition, so two
     /// distinct `Workload` values sharing a display name can never
     /// serve each other's memoized analysis.
+    fingerprint: u64,
+    array: Vec<i64>,
+}
+
+/// The single-phase memo key of the per-phase heterogeneous mapping axis
+/// (`DesignSpace::with_phase_shapes`): one entry per (workload, phase,
+/// shape), shared by every shape combination that assigns `array` to
+/// phase `phase`. Schedule-free for the same reason as [`CacheKey`].
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PhaseKey {
+    workload: String,
+    phase: usize,
+    /// Structural fingerprint of *this phase's* PRA
+    /// ([`phase_fingerprint`]), so editing one phase of a workload never
+    /// invalidates (or worse, mis-serves) its siblings' entries.
     fingerprint: u64,
     array: Vec<i64>,
 }
@@ -50,16 +72,81 @@ pub fn workload_fingerprint(wl: &Workload) -> u64 {
     h.finish()
 }
 
-/// One memoized outcome: analyses that *fail* (e.g. no feasible LSGP
-/// schedule for the shape) are cached too, so a sweep never re-runs a
-/// known-bad tiling/scheduling pass per bounds/tile/policy point.
-/// `Pending` marks an analysis some thread is currently running; other
-/// threads block on the condvar instead of duplicating the work.
+/// Structural fingerprint of one phase's PRA — the per-phase analogue of
+/// [`workload_fingerprint`], keying the single-phase memo and disk
+/// entries. Hot paths should compute it once per (workload, phase) and
+/// use [`AnalysisCache::try_get_or_analyze_phase_keyed`].
+pub fn phase_fingerprint(pra: &Pra) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    format!("{pra:?}").hash(&mut h);
+    h.finish()
+}
+
+/// One memoized slot: `Pending` marks a value some thread is currently
+/// computing; other threads block on the memo's condvar instead of
+/// duplicating the work.
 #[derive(Debug)]
-enum Slot {
+enum Slot<V> {
     Pending,
-    Ready(Arc<WorkloadAnalysis>),
-    Failed(String),
+    Done(V),
+}
+
+/// A blocking memo table: the first requester of a key computes the
+/// value *outside* the lock while concurrent requesters of the same key
+/// wait on the condvar. Analyses that fail are memoized too (the value
+/// is a `Result`), so a sweep never re-runs a known-bad pass.
+///
+/// Invariant: the compute closure must not unwind — callers wrap the
+/// fallible symbolic pass in `catch_unwind` and memoize the failure as a
+/// value. An escaping panic would leave the `Pending` slot unresolved
+/// and deadlock later requesters of the key.
+#[derive(Debug)]
+struct Memo<K, V> {
+    map: Mutex<HashMap<K, Slot<V>>>,
+    /// Signalled whenever a `Pending` slot resolves.
+    resolved: Condvar,
+}
+
+impl<K, V> Default for Memo<K, V> {
+    fn default() -> Self {
+        Memo { map: Mutex::new(HashMap::new()), resolved: Condvar::new() }
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Memo<K, V> {
+    /// The memoized value for `key`, computing it on first request.
+    /// Returns the value and whether it was served from the table (a
+    /// thread that waited out another's `Pending` computation counts as
+    /// served — the work ran once).
+    fn get_or_compute(&self, key: K, compute: impl FnOnce() -> V) -> (V, bool) {
+        {
+            let mut map = self.map.lock().unwrap();
+            loop {
+                match map.get(&key) {
+                    Some(Slot::Done(v)) => return (v.clone(), true),
+                    Some(Slot::Pending) => {
+                        map = self.resolved.wait(map).unwrap();
+                    }
+                    None => break,
+                }
+            }
+            map.insert(key.clone(), Slot::Pending);
+        }
+        // This thread owns the computation for `key`; compute outside
+        // the lock so a slow pass never stalls other keys.
+        let v = compute();
+        self.map.lock().unwrap().insert(key, Slot::Done(v.clone()));
+        self.resolved.notify_all();
+        (v, false)
+    }
+
+    fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
 }
 
 /// Hit/miss counters of an [`AnalysisCache`].
@@ -72,7 +159,9 @@ pub struct CacheStats {
     /// In-memory misses whose symbolic volumes were restored from the
     /// persistent disk cache instead of recomputed.
     pub disk_hits: u64,
-    /// Distinct (workload, array) keys currently stored.
+    /// Distinct analysis keys currently stored: (workload, array) for
+    /// uniform mappings plus (workload, phase, array) for the per-phase
+    /// axis.
     pub entries: usize,
 }
 
@@ -88,12 +177,16 @@ impl CacheStats {
     }
 }
 
-/// Thread-safe memo table `(workload, array) → Arc<WorkloadAnalysis>`.
+/// Thread-safe memo of the one-time symbolic pass:
+/// `(workload, array) → Arc<WorkloadAnalysis>` for uniform mappings,
+/// plus `(workload, phase, array) → Arc<SymbolicAnalysis>` for the
+/// per-phase heterogeneous axis.
 #[derive(Debug, Default)]
 pub struct AnalysisCache {
-    map: Mutex<HashMap<CacheKey, Slot>>,
-    /// Signalled whenever a `Pending` slot resolves.
-    resolved: Condvar,
+    /// Whole-workload analyses under one uniform shape.
+    uniform: Memo<CacheKey, Result<Arc<WorkloadAnalysis>, String>>,
+    /// Single-phase analyses of the per-phase shape axis.
+    phase: Memo<PhaseKey, Result<Arc<SymbolicAnalysis>, String>>,
     /// Shared Fourier–Motzkin feasibility memo: every analysis this cache
     /// runs reuses one `SymbolicCtx` per distinct parameter context, so
     /// guards repeating across statements, phases and design points are
@@ -187,80 +280,166 @@ impl AnalysisCache {
             fingerprint,
             array: array.to_vec(),
         };
-        {
-            let mut map = self.map.lock().unwrap();
-            loop {
-                match map.get(&key) {
-                    Some(Slot::Ready(a)) => {
-                        self.hits.fetch_add(1, Ordering::Relaxed);
-                        return (Ok(Arc::clone(a)), true);
-                    }
-                    Some(Slot::Failed(msg)) => {
-                        self.hits.fetch_add(1, Ordering::Relaxed);
-                        return (Err(msg.clone()), true);
-                    }
-                    Some(Slot::Pending) => {
-                        map = self.resolved.wait(map).unwrap();
-                    }
-                    None => break,
-                }
-            }
-            map.insert(key.clone(), Slot::Pending);
-        }
-        // This thread owns the analysis for `key`; the catch_unwind
-        // guarantees the Pending slot is always resolved.
-        // `analyze_uniform_in` always prices with the default table, so
-        // the disk key uses it too.
-        let table = EnergyTable::default();
-        let preset = self
-            .disk
-            .as_ref()
-            .and_then(|d| d.load(wl, fingerprint, array, &table));
-        install_quiet_hook();
-        SUPPRESS_PANIC_TRACE.with(|s| s.set(true));
-        let outcome = catch_unwind(AssertUnwindSafe(|| {
-            WorkloadAnalysis::analyze_uniform_in(
-                wl,
-                array,
-                &self.feas,
-                preset.as_deref(),
-            )
-        }));
-        SUPPRESS_PANIC_TRACE.with(|s| s.set(false));
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let (slot, out) = match outcome {
-            Ok(ana) => {
-                // A disk hit only counts if the loaded volumes actually
-                // covered every statement — a parseable-but-stale file
-                // (e.g. older format under an unchanged fingerprint)
-                // falls through analyze's per-entry validation and must
-                // be rewritten, not celebrated.
-                let fully_preset = preset.as_ref().is_some_and(|pre| {
-                    ana.phases.len() == pre.len()
-                        && ana.phases.iter().zip(pre).all(|(ph, m)| {
-                            ph.statements.iter().all(|s| {
-                                m.get(&s.name) == Some(&s.volume)
+        let (out, hit) = self.uniform.get_or_compute(key, || {
+            // `analyze_uniform_in` always prices with the default table,
+            // so the disk key uses it too.
+            let table = EnergyTable::default();
+            let preset = self
+                .disk
+                .as_ref()
+                .and_then(|d| d.load(wl, fingerprint, array, &table));
+            // The catch_unwind upholds the Memo no-unwind invariant:
+            // failed analyses resolve the slot as an Err value.
+            install_quiet_hook();
+            SUPPRESS_PANIC_TRACE.with(|s| s.set(true));
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                WorkloadAnalysis::analyze_uniform_in(
+                    wl,
+                    array,
+                    &self.feas,
+                    preset.as_deref(),
+                )
+            }));
+            SUPPRESS_PANIC_TRACE.with(|s| s.set(false));
+            match outcome {
+                Ok(ana) => {
+                    // A disk hit only counts if the loaded volumes
+                    // actually covered every statement — a
+                    // parseable-but-stale file (e.g. older format under
+                    // an unchanged fingerprint) falls through analyze's
+                    // per-entry validation and must be rewritten, not
+                    // celebrated.
+                    let fully_preset = preset.as_ref().is_some_and(|pre| {
+                        ana.phases.len() == pre.len()
+                            && ana.phases.iter().zip(pre).all(|(ph, m)| {
+                                ph.statements.iter().all(|s| {
+                                    m.get(&s.name) == Some(&s.volume)
+                                })
                             })
-                        })
-                });
-                if fully_preset {
-                    self.disk_hits.fetch_add(1, Ordering::Relaxed);
-                } else if let Some(d) = &self.disk {
-                    // Advisory spill: an IO failure must not fail the
-                    // analysis that just succeeded.
-                    let _ = d.store(wl, fingerprint, array, &table, &ana);
+                    });
+                    if fully_preset {
+                        self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    } else if let Some(d) = &self.disk {
+                        // Advisory spill: an IO failure must not fail
+                        // the analysis that just succeeded.
+                        let _ =
+                            d.store(wl, fingerprint, array, &table, &ana);
+                    }
+                    Ok(Arc::new(ana))
                 }
-                let arc = Arc::new(ana);
-                (Slot::Ready(Arc::clone(&arc)), Ok(arc))
+                Err(payload) => Err(panic_message(payload.as_ref())),
             }
-            Err(payload) => {
-                let msg = panic_message(payload.as_ref());
-                (Slot::Failed(msg.clone()), Err(msg))
-            }
+        });
+        self.count(hit);
+        (out, hit)
+    }
+
+    /// The analysis of *one phase* of `wl` on `array`, memoized per
+    /// (workload, phase, shape) — the entry point of the per-phase
+    /// heterogeneous mapping axis (`DesignSpace::with_phase_shapes`).
+    /// Failures are memoized like [`Self::try_get_or_analyze`]'s. The
+    /// analysis is bit-for-bit the phase a uniform
+    /// `WorkloadAnalysis::analyze_uniform` of the same shape would
+    /// produce: same padded mapping, default energy table, π = 1, and
+    /// the cache's shared feasibility pool.
+    pub fn try_get_or_analyze_phase(
+        &self,
+        wl: &Workload,
+        phase: usize,
+        array: &[i64],
+    ) -> (Result<Arc<SymbolicAnalysis>, String>, bool) {
+        self.try_get_or_analyze_phase_keyed(
+            wl,
+            phase_fingerprint(&wl.phases[phase]),
+            phase,
+            array,
+        )
+    }
+
+    /// As [`Self::try_get_or_analyze_phase`] with the phase fingerprint
+    /// precomputed by the caller ([`phase_fingerprint`]) — the hot path
+    /// for per-phase sweeps, which would otherwise re-serialize the
+    /// phase IR on every design point.
+    pub fn try_get_or_analyze_phase_keyed(
+        &self,
+        wl: &Workload,
+        fingerprint: u64,
+        phase: usize,
+        array: &[i64],
+    ) -> (Result<Arc<SymbolicAnalysis>, String>, bool) {
+        assert!(
+            phase < wl.phases.len(),
+            "phase {phase} out of range for {} ({} phases)",
+            wl.name,
+            wl.phases.len()
+        );
+        let pra = &wl.phases[phase];
+        let key = PhaseKey {
+            workload: wl.name.clone(),
+            phase,
+            fingerprint,
+            array: array.to_vec(),
         };
-        self.map.lock().unwrap().insert(key, slot);
-        self.resolved.notify_all();
-        (out, false)
+        let (out, hit) = self.phase.get_or_compute(key, || {
+            let table = EnergyTable::default();
+            let preset = self.disk.as_ref().and_then(|d| {
+                d.load_phase(&wl.name, fingerprint, phase, array, &table)
+            });
+            install_quiet_hook();
+            SUPPRESS_PANIC_TRACE.with(|s| s.set(true));
+            // The mapping construction must sit inside the catch_unwind
+            // too: a degenerate shape (e.g. a zero extent) panics in
+            // `ArrayMapping::new`, and an unwind escaping this closure
+            // would leave the Pending slot unresolved forever (the Memo
+            // no-unwind invariant) — the uniform path builds its
+            // mappings inside `analyze_uniform_in` for the same reason.
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                let mapping =
+                    ArrayMapping::new(pad_array(array, pra.ndims));
+                SymbolicAnalysis::analyze_in(
+                    pra,
+                    &mapping,
+                    &table,
+                    1,
+                    &self.feas,
+                    preset.as_ref(),
+                )
+            }));
+            SUPPRESS_PANIC_TRACE.with(|s| s.set(false));
+            match outcome {
+                Ok(ana) => {
+                    let fully_preset = preset.as_ref().is_some_and(|m| {
+                        ana.statements.iter().all(|s| {
+                            m.get(&s.name) == Some(&s.volume)
+                        })
+                    });
+                    if fully_preset {
+                        self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    } else if let Some(d) = &self.disk {
+                        let _ = d.store_phase(
+                            &wl.name,
+                            fingerprint,
+                            phase,
+                            array,
+                            &table,
+                            &ana,
+                        );
+                    }
+                    Ok(Arc::new(ana))
+                }
+                Err(payload) => Err(panic_message(payload.as_ref())),
+            }
+        });
+        self.count(hit);
+        (out, hit)
+    }
+
+    fn count(&self, hit: bool) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// As [`Self::try_get_or_analyze`], panicking on analysis failure
@@ -280,19 +459,22 @@ impl AnalysisCache {
         }
     }
 
-    /// Current counters.
+    /// Current counters. `entries` counts whole-workload and
+    /// single-phase memo entries together — for a per-phase sweep it is
+    /// exactly the number of distinct (phase, shape) pairs analyzed.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             disk_hits: self.disk_hits.load(Ordering::Relaxed),
-            entries: self.map.lock().unwrap().len(),
+            entries: self.uniform.len() + self.phase.len(),
         }
     }
 
     /// Drop all cached analyses (counters keep accumulating).
     pub fn clear(&self) {
-        self.map.lock().unwrap().clear();
+        self.uniform.clear();
+        self.phase.clear();
     }
 
     /// Prune the persistent spill directory (no-op without one): remove
@@ -442,6 +624,96 @@ mod tests {
             1
         );
         assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn phase_lookups_memoize_per_phase_shape_pair() {
+        let cache = AnalysisCache::new();
+        let wl = workloads::by_name("atax").unwrap();
+        let (a0, h0) = cache.try_get_or_analyze_phase(&wl, 0, &[1, 4]);
+        let (_, h1) = cache.try_get_or_analyze_phase(&wl, 0, &[1, 4]);
+        assert!(!h0 && h1, "second lookup of the pair must hit");
+        // A different phase — or a different shape — is its own entry.
+        let (a1, h2) = cache.try_get_or_analyze_phase(&wl, 1, &[1, 4]);
+        let (_, h3) = cache.try_get_or_analyze_phase(&wl, 0, &[4, 1]);
+        assert!(!h2 && !h3);
+        assert_eq!(cache.stats().entries, 3);
+        // The memoized phase analysis is bit-for-bit the phase of a
+        // uniform whole-workload analysis on the same shape.
+        let uni = WorkloadAnalysis::analyze_uniform(&wl, &[1, 4]);
+        let (p0, p1) = (a0.unwrap(), a1.unwrap());
+        let params0 = p0.params_for(&[8, 8]);
+        let params1 = p1.params_for(&[8, 8]);
+        assert_eq!(
+            p0.energy_at(&params0).total.to_bits(),
+            uni.phases[0].energy_at(&params0).total.to_bits()
+        );
+        assert_eq!(
+            p1.latency_at(&params1),
+            uni.phases[1].latency_at(&params1)
+        );
+        assert_eq!(p0.counts_at(&params0), uni.phases[0].counts_at(&params0));
+    }
+
+    #[test]
+    fn degenerate_phase_shape_fails_once_without_deadlock() {
+        // A zero extent panics in ArrayMapping::new — inside the
+        // catch_unwind, so the failure resolves the Pending slot as a
+        // memoized Err instead of deadlocking later requesters.
+        let cache = AnalysisCache::new();
+        let wl = workloads::by_name("atax").unwrap();
+        let (r0, h0) = cache.try_get_or_analyze_phase(&wl, 0, &[0, 4]);
+        let (r1, h1) = cache.try_get_or_analyze_phase(&wl, 0, &[0, 4]);
+        assert!(r0.is_err() && r1.is_err());
+        assert!(!h0);
+        assert!(h1, "the failure must be served from the memo");
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn phase_fingerprints_distinguish_phases_and_survive_renames() {
+        let wl = workloads::by_name("atax").unwrap();
+        assert_ne!(
+            phase_fingerprint(&wl.phases[0]),
+            phase_fingerprint(&wl.phases[1])
+        );
+        // Same structure → same fingerprint, independent of the
+        // enclosing workload value.
+        let again = workloads::by_name("atax").unwrap();
+        assert_eq!(
+            phase_fingerprint(&wl.phases[0]),
+            phase_fingerprint(&again.phases[0])
+        );
+    }
+
+    #[test]
+    fn phase_disk_spill_reloads_across_cache_instances() {
+        let dir = std::env::temp_dir().join(format!(
+            "tcpa-phase-spill-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let wl = workloads::by_name("atax").unwrap();
+
+        let cold = AnalysisCache::with_disk(&dir);
+        let (a, _) = cold.try_get_or_analyze_phase(&wl, 1, &[2, 2]);
+        let a = a.unwrap();
+        assert_eq!(cold.stats().disk_hits, 0);
+
+        let warm = AnalysisCache::with_disk(&dir);
+        let (b, hit) = warm.try_get_or_analyze_phase(&wl, 1, &[2, 2]);
+        let b = b.unwrap();
+        assert!(!hit, "in-memory cache is cold");
+        assert_eq!(warm.stats().disk_hits, 1, "volumes must come from disk");
+        for (sa, sb) in a.statements.iter().zip(&b.statements) {
+            assert_eq!(sa.volume, sb.volume, "{}", sa.name);
+        }
+        let params = a.params_for(&[8, 8]);
+        assert_eq!(
+            a.energy_at(&params).total.to_bits(),
+            b.energy_at(&params).total.to_bits()
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

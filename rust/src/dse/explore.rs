@@ -26,23 +26,42 @@
 //! one base point compete inside the same (bounds, backend) scenario:
 //! a slower schedule at identical energy/PEs/DRAM is dominated away,
 //! which is how `--schedules all` can only improve the frontier.
+//!
+//! The **per-phase shape axis** ([`DesignSpace::with_phase_shapes`]) is
+//! resolved here for the same reason: its extent depends on the
+//! workload's phase count. Under [`PhasePolicy::PerPhase`] the explorer
+//! enumerates [`DesignSpace::phase_points`] — every shape combination
+//! across the phases — and assembles each point's totals from
+//! *single-phase* analyses cached per (workload, phase, shape)
+//! ([`AnalysisCache::try_get_or_analyze_phase_keyed`]): the
+//! `shapes^phases` combinatorial sweep re-prices sums of per-phase
+//! expressions, while analysis work stays proportional to the distinct
+//! (phase, shape) pairs. Combinations compete inside their (bounds,
+//! backend) scenario, so a heterogeneous assignment survives exactly
+//! when no uniform (or other) assignment matches it everywhere — which
+//! is how `--phase-shapes per-phase` can only improve the frontier.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use crate::analysis::WorkloadAnalysis;
+use crate::analysis::{
+    energy_at_backend_phases, latency_at_phases, SymbolicAnalysis,
+    WorkloadAnalysis,
+};
 use crate::energy::{Backend, MemoryClass};
 use crate::pra::Workload;
 use crate::tiling::pad_bounds;
 
 use super::cache::{
-    panic_message, workload_fingerprint, AnalysisCache, CacheStats,
+    panic_message, phase_fingerprint, workload_fingerprint, AnalysisCache,
+    CacheStats,
 };
 use super::pareto::{knee_point, pareto_frontier, Objectives};
 use super::space::{
-    DesignPoint, DesignSpace, ScheduleChoice, SchedulePolicy,
+    DesignPoint, DesignSpace, PhasePolicy, PhaseShapes, ScheduleChoice,
+    SchedulePolicy,
 };
 
 /// Explorer knobs.
@@ -173,9 +192,13 @@ impl ExploreResult {
     }
 }
 
-/// Per-phase parameter vectors `(N…, p…)` for `point` against `ana`.
-fn phase_params(ana: &WorkloadAnalysis, point: &DesignPoint) -> Vec<Vec<i64>> {
-    ana.phases
+/// Per-phase parameter vectors `(N…, p…)` for `point` against the
+/// resolved phase analyses (uniform or heterogeneous).
+fn phase_params(
+    phases: &[&SymbolicAnalysis],
+    point: &DesignPoint,
+) -> Vec<Vec<i64>> {
+    phases
         .iter()
         .map(|ph| {
             let b = pad_bounds(&point.bounds, ph.tiled.pra.ndims);
@@ -199,32 +222,79 @@ fn phase_params(ana: &WorkloadAnalysis, point: &DesignPoint) -> Vec<Vec<i64>> {
         .collect()
 }
 
-/// Evaluate one design point against the (cached) symbolic analysis,
+/// Evaluate one design point against the (cached) symbolic analyses,
 /// expanded into one [`EvaluatedPoint`] per schedule candidate according
 /// to `policy`. `Err` carries the analysis failure message (memoized by
 /// the cache, so a bad shape fails once and cheaply thereafter).
 ///
+/// A uniform point resolves to the one whole-workload cached analysis of
+/// its `array`; a per-phase point resolves each phase's shape to its own
+/// cached single-phase analysis (`phase_fps` are the precomputed
+/// [`phase_fingerprint`]s, indexed like `wl.phases`) — every shape
+/// combination reuses the per-(phase, shape) entries. Either way the
+/// evaluation below runs over the same resolved `&[&SymbolicAnalysis]`
+/// slice through the same arithmetic
+/// (`analysis::energy_at_backend_phases` & friends, which the uniform
+/// `WorkloadAnalysis` methods delegate to), so uniform points stay
+/// bit-for-bit identical to the pre-axis explorer.
+///
 /// Energy, DRAM traffic and PEs are schedule-invariant and computed once
 /// per base point; only latency (and therefore EDP) is re-evaluated per
 /// candidate — the structural cheapness that makes the schedule a free
-/// axis on top of the cached analysis.
+/// axis on top of the cached analyses.
 fn evaluate(
     wl: &Workload,
     fingerprint: u64,
+    phase_fps: &[u64],
     point: &DesignPoint,
     cache: &AnalysisCache,
     policy: SchedulePolicy,
 ) -> Result<Vec<EvaluatedPoint>, String> {
     let t0 = Instant::now();
-    let (ana, cache_hit) =
-        cache.try_get_or_analyze_keyed(wl, fingerprint, &point.array);
-    let ana = ana?;
+    // Keep-alives for the Arc'd analyses the `phases` slice borrows.
+    let uniform_ana: Option<std::sync::Arc<WorkloadAnalysis>>;
+    let mut phase_anas: Vec<std::sync::Arc<SymbolicAnalysis>> = Vec::new();
+    let cache_hit = match &point.phase_shapes {
+        PhaseShapes::Uniform => {
+            let (ana, hit) =
+                cache.try_get_or_analyze_keyed(wl, fingerprint, &point.array);
+            uniform_ana = Some(ana?);
+            hit
+        }
+        PhaseShapes::PerPhase(shapes) => {
+            assert_eq!(
+                shapes.len(),
+                wl.phases.len(),
+                "one shape per phase of {}",
+                wl.name
+            );
+            uniform_ana = None;
+            let mut all_hit = true;
+            for (i, shape) in shapes.iter().enumerate() {
+                let (ana, hit) = cache.try_get_or_analyze_phase_keyed(
+                    wl,
+                    phase_fps[i],
+                    i,
+                    shape,
+                );
+                all_hit &= hit;
+                phase_anas.push(ana?);
+            }
+            all_hit
+        }
+    };
+    let phases: Vec<&SymbolicAnalysis> = match &uniform_ana {
+        Some(ana) => ana.phases.iter().collect(),
+        None => phase_anas.iter().map(|a| &**a).collect(),
+    };
     let analysis_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let params = phase_params(&ana, point);
-    // One symbolic analysis, any architecture: routing + pricing through
-    // the point's backend. For the TCPA backend this is bit-identical to
-    // the pre-backend `energy_at` fast path (see `analysis::evaluate`).
-    let energy = ana.energy_at_backend(&params, &point.backend);
+    let params = phase_params(&phases, point);
+    // One symbolic analysis per phase, any architecture: routing +
+    // pricing through the point's backend. For the TCPA backend this is
+    // bit-identical to the pre-backend `energy_at` fast path (see
+    // `analysis::evaluate`).
+    let energy =
+        energy_at_backend_phases(phases.iter().copied(), &params, &point.backend);
     let dram_pj = energy
         .mem_pj
         .get(&MemoryClass::Dram)
@@ -246,12 +316,11 @@ fn evaluate(
         }
     };
     if policy == SchedulePolicy::First {
-        // The pre-axis path, verbatim: the analysis' embedded default
-        // schedule, no enumeration — `--schedules first` stays
-        // bit-identical to the single-schedule explorer.
-        let latency_cycles = ana.latency_at(&params);
-        let label = ana
-            .phases
+        // The pre-axis path: each phase's embedded default schedule, no
+        // enumeration — `--schedules first` stays bit-identical to the
+        // single-schedule explorer.
+        let latency_cycles = latency_at_phases(phases.iter().copied(), &params);
+        let label = phases
             .iter()
             .map(|ph| ph.schedule.perm_label())
             .collect::<Vec<_>>()
@@ -266,8 +335,7 @@ fn evaluate(
     // succeeded, so find_schedule's pick did), then walk the per-phase
     // cross product in lexicographic index order — deterministic, last
     // phase fastest.
-    let cands: Vec<Vec<crate::schedule::Schedule>> = ana
-        .phases
+    let cands: Vec<Vec<crate::schedule::Schedule>> = phases
         .iter()
         .map(|ph| ph.enumerate_schedules(policy.per_phase_cap()))
         .collect();
@@ -275,8 +343,7 @@ fn evaluate(
     debug_assert!(counts.iter().all(|&c| c >= 1));
     // Each (phase, candidate) latency once — the combos below only sum
     // table entries (Σ cᵢ evaluations instead of Π cᵢ · phases).
-    let lat: Vec<Vec<i64>> = ana
-        .phases
+    let lat: Vec<Vec<i64>> = phases
         .iter()
         .zip(&params)
         .zip(&cands)
@@ -334,12 +401,19 @@ pub fn explore_with_cache(
     cache: &AnalysisCache,
 ) -> ExploreResult {
     let t0 = Instant::now();
-    let points = space.points();
+    // The per-phase axis needs the workload's phase count, which the
+    // space cannot know — resolve the base-point enumeration here.
+    let points = match space.phase_policy {
+        PhasePolicy::Uniform => space.points(),
+        PhasePolicy::PerPhase => space.phase_points(wl.phases.len()),
+    };
     let n = points.len();
     let workers = cfg.effective_workers(n);
     let policy = space.schedules;
     // One IR walk for the whole sweep, not one per design point.
     let fingerprint = workload_fingerprint(wl);
+    let phase_fps: Vec<u64> =
+        wl.phases.iter().map(phase_fingerprint).collect();
 
     // Job queue: a channel pre-filled with every (index, point), its
     // receiver shared behind a mutex so idle workers steal the next job.
@@ -358,6 +432,7 @@ pub fn explore_with_cache(
         for _ in 0..workers {
             let rtx = rtx.clone();
             let jrx = &jrx;
+            let phase_fps = &phase_fps;
             s.spawn(move || loop {
                 // Pop under the lock, evaluate outside it.
                 let job = { jrx.lock().unwrap().recv() };
@@ -366,7 +441,7 @@ pub fn explore_with_cache(
                 // catch_unwind additionally guards the evaluation
                 // arithmetic itself.
                 let eval = match catch_unwind(AssertUnwindSafe(|| {
-                    evaluate(wl, fingerprint, &point, cache, policy)
+                    evaluate(wl, fingerprint, phase_fps, &point, cache, policy)
                 })) {
                     Ok(Ok(e)) => Ok(e),
                     Ok(Err(msg)) => Err((point, msg)),
@@ -722,6 +797,73 @@ mod tests {
             limited.points[0].latency_cycles,
             res.points[0].latency_cycles
         );
+    }
+
+    #[test]
+    fn per_phase_axis_includes_uniform_diagonal_bit_for_bit() {
+        // The per-phase sweep covers every shape combination, including
+        // the all-equal diagonal — and a diagonal combination, assembled
+        // from single-phase cached analyses, must price exactly like the
+        // uniform point of the same shape (same mappings, same table,
+        // same π, same merge order).
+        let wl = workloads::by_name("atax").unwrap();
+        let base = DesignSpace::new()
+            .with_arrays(vec![vec![1, 2], vec![2, 1]])
+            .with_bounds(vec![8, 8]);
+        let uniform = explore(&wl, &base, &ExploreConfig::default());
+        let per_phase = explore(
+            &wl,
+            &base.clone().with_phase_shapes(PhasePolicy::PerPhase),
+            &ExploreConfig::default(),
+        );
+        assert!(uniform.failures.is_empty() && per_phase.failures.is_empty());
+        assert_eq!(uniform.points.len(), 2);
+        assert_eq!(per_phase.points.len(), 4, "2 shapes × 2 phases");
+        for u in &uniform.points {
+            let shape = &u.point.array;
+            let diag = per_phase
+                .points
+                .iter()
+                .find(|p| {
+                    p.point.phase_shapes
+                        == PhaseShapes::PerPhase(vec![
+                            shape.clone(),
+                            shape.clone(),
+                        ])
+                })
+                .expect("diagonal combination present");
+            assert_eq!(diag.energy_pj.to_bits(), u.energy_pj.to_bits());
+            assert_eq!(diag.dram_pj.to_bits(), u.dram_pj.to_bits());
+            assert_eq!(diag.latency_cycles, u.latency_cycles);
+            assert_eq!(diag.pes, u.pes);
+            assert_eq!(diag.schedule_label, u.schedule_label);
+        }
+    }
+
+    #[test]
+    fn per_phase_analysis_count_scales_with_pairs_not_combinations() {
+        // 3 shapes × 2 phases → 9 combinations per scenario, but only
+        // 6 distinct (phase, shape) pairs may ever be analyzed — the
+        // acceptance condition that keeps the combinatorial axis cheap.
+        let wl = workloads::by_name("atax").unwrap();
+        let cache = AnalysisCache::new();
+        let space = DesignSpace::new()
+            .with_arrays(vec![vec![1, 2], vec![2, 1], vec![2, 2]])
+            .with_bounds_sweep(&[8, 16], 2)
+            .with_phase_shapes(PhasePolicy::PerPhase);
+        let res = explore_with_cache(
+            &wl,
+            &space,
+            &ExploreConfig::default(),
+            &cache,
+        );
+        assert!(res.failures.is_empty(), "failures: {:?}", res.failures);
+        assert_eq!(res.points.len(), 9 * 2, "9 combos × 2 bounds");
+        let s = cache.stats();
+        assert_eq!(s.entries, 6, "2 phases × 3 shapes analyzed");
+        assert_eq!(s.misses, 6);
+        // Every other lookup (2 per point) was served from the memo.
+        assert_eq!(s.hits, 18 * 2 - 6);
     }
 
     #[test]

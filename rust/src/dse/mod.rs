@@ -13,14 +13,24 @@
 //!   systolic, or custom), **schedule-vector candidates**
 //!   (`DesignSpace::with_schedules`: every feasible `(permutation, λ^J,
 //!   λ^K)` per mapping instead of `find_schedule`'s single pick — a
-//!   latency/FD-pressure trade-off at fixed shape and identical energy)
-//!   and loop-bound grids, with PE-budget, fits-the-problem and opt-in
-//!   transposition-symmetry pruning. Each backend is its own comparison
-//!   scenario with its own Pareto frontier.
+//!   latency/FD-pressure trade-off at fixed shape and identical energy),
+//!   **per-phase shape assignments**
+//!   (`DesignSpace::with_phase_shapes(PhasePolicy::PerPhase)`: each
+//!   phase of a multi-phase workload takes its own shape under the
+//!   shared PE budget — phases run sequentially, so a combination costs
+//!   `max`, not `Σ`, of its phases' PEs) and loop-bound grids, with
+//!   PE-budget, fits-the-problem and opt-in transposition-symmetry
+//!   pruning (shape combinations deduplicate up to *global*
+//!   transposition only — mirroring one phase alone changes real
+//!   objectives). Each backend is its own comparison scenario with its
+//!   own Pareto frontier.
 //! * [`cache`] — the **analysis cache**: memoizes
 //!   [`crate::analysis::WorkloadAnalysis::analyze_uniform`] per
-//!   (workload, array) key, so bounds/tile/policy sweeps over an
-//!   already-analyzed shape never re-run the symbolic pass — the O(1)
+//!   (workload, array) key — and single-phase analyses per
+//!   (workload, phase, shape) key for the per-phase axis, so the
+//!   `shapes^phases` combinatorial sweep never re-analyzes a pair two
+//!   combinations share — and bounds/tile/policy sweeps over an
+//!   already-analyzed shape never re-run the symbolic pass: the O(1)
 //!   per-query scalability of Fig. 4, made explicit. Analyses run against
 //!   one shared Fourier–Motzkin feasibility pool
 //!   ([`crate::polyhedral::FeasPool`]), so design points with the same
@@ -56,13 +66,16 @@ pub mod pareto;
 pub mod persist;
 pub mod space;
 
-pub use cache::{workload_fingerprint, AnalysisCache, CacheStats};
+pub use cache::{
+    phase_fingerprint, workload_fingerprint, AnalysisCache, CacheStats,
+};
 pub use explore::{
     explore, explore_with_cache, EvaluatedPoint, ExploreConfig,
     ExploreResult, FrontierGroup,
 };
 pub use pareto::{dominates, knee_point, pareto_frontier, Objectives};
-pub use persist::DiskCache;
+pub use persist::{phase_cache_name, DiskCache};
 pub use space::{
-    DesignPoint, DesignSpace, ScheduleChoice, SchedulePolicy,
+    DesignPoint, DesignSpace, PhasePolicy, PhaseShapes, ScheduleChoice,
+    SchedulePolicy,
 };

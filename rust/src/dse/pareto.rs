@@ -12,6 +12,17 @@
 //! alone keeps exactly the fastest schedule(s) of each shape — ties all
 //! survive (equal vectors dominate neither way), which preserves the
 //! determinism guarantees of the explorer's enumeration order.
+//!
+//! With the per-phase shape axis (`DesignSpace::with_phase_shapes`) all
+//! assignments of one (bounds, backend) scenario compete directly: a
+//! heterogeneous assignment and the uniform diagonal are just points
+//! with different objective vectors. Because the per-phase sweep is a
+//! superset of the uniform one, its frontier weakly dominates the
+//! uniform frontier per scenario — and a heterogeneous assignment whose
+//! phases each take their energy-preferred orientation is the unique
+//! energy minimum at its PE budget, so nothing can dominate it off the
+//! frontier (the phase-shapes column in `report::frontier` is where it
+//! shows up).
 
 /// Number of objectives tracked per design point.
 pub const NUM_OBJECTIVES: usize = 4;
@@ -161,6 +172,22 @@ mod tests {
             o(5.0, 16.0, 4.0, 2.0), // distinct candidate, tied latency
         ];
         assert_eq!(pareto_frontier(&objs), vec![1, 2]);
+    }
+
+    #[test]
+    fn phase_assignments_compete_and_hetero_minimum_survives() {
+        // Per-phase assignments at one PE budget: total energy is the
+        // per-phase sum, so the assignment giving each phase its
+        // preferred orientation (index 2) is the strict energy minimum
+        // and must survive; the strictly worse uniform assignments are
+        // dominated away, while a latency trade-off (index 3) coexists.
+        let objs = vec![
+            o(9.0, 20.0, 4.0, 2.0), // uniform A|A
+            o(8.0, 20.0, 4.0, 2.0), // uniform B|B
+            o(6.0, 20.0, 4.0, 2.0), // hetero A|B: both phases happy
+            o(8.5, 10.0, 4.0, 2.0), // hetero B|A: slower phases, faster λ
+        ];
+        assert_eq!(pareto_frontier(&objs), vec![2, 3]);
     }
 
     #[test]

@@ -20,12 +20,24 @@
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
-use crate::analysis::{PresetVolumes, WorkloadAnalysis};
+use crate::analysis::{PresetVolumes, SymbolicAnalysis, WorkloadAnalysis};
 use crate::energy::EnergyTable;
 use crate::polyhedral::{AffineExpr, Constraint, Guard, GuardedSum, Poly};
 use crate::pra::Workload;
 
 const MAGIC: &str = "tcpa-analysis-cache v1";
+
+/// The phase-scoped cache name of `(workload, phase)` — the key under
+/// which the per-phase heterogeneous axis spills a *single phase's*
+/// volumes. The scoped name is distinct from every plain workload name
+/// in the header line (which records it raw, `#` included), and the
+/// phase fingerprint differs from the workload's, so phase entries can
+/// never serve — or be mistaken for — whole-workload ones. Callers that
+/// prune a shared directory list these as live names alongside the
+/// plain workload name (see `dse::AnalysisCache::prune_disk`).
+pub fn phase_cache_name(wl_name: &str, phase: usize) -> String {
+    format!("{wl_name}#p{phase}")
+}
 
 /// On-disk cache of symbolic analysis volumes, one file per
 /// `(workload, array, table)` key under a caller-chosen directory.
@@ -139,9 +151,41 @@ impl DiskCache {
         array: &[i64],
         table: &EnergyTable,
     ) -> Option<Vec<PresetVolumes>> {
-        let path = self.file_for(&wl.name, fp, array, table);
+        self.load_named(&wl.name, fp, array, table, wl.phases.len())
+    }
+
+    /// Load the preset volumes of *one phase* spilled by
+    /// [`DiskCache::store_phase`]. `fp` is the phase's structural
+    /// fingerprint (`dse::cache::phase_fingerprint`), not the workload's.
+    pub fn load_phase(
+        &self,
+        wl_name: &str,
+        fp: u64,
+        phase: usize,
+        array: &[i64],
+        table: &EnergyTable,
+    ) -> Option<PresetVolumes> {
+        let mut v = self.load_named(
+            &phase_cache_name(wl_name, phase),
+            fp,
+            array,
+            table,
+            1,
+        )?;
+        v.pop()
+    }
+
+    fn load_named(
+        &self,
+        name: &str,
+        fp: u64,
+        array: &[i64],
+        table: &EnergyTable,
+        nphases: usize,
+    ) -> Option<Vec<PresetVolumes>> {
+        let path = self.file_for(name, fp, array, table);
         let content = std::fs::read_to_string(path).ok()?;
-        parse(&content, wl, fp, array, table)
+        parse(&content, name, fp, array, table, nphases)
     }
 
     /// Persist the volumes of `ana` under the `(wl, array, table)` key.
@@ -155,9 +199,44 @@ impl DiskCache {
         table: &EnergyTable,
         ana: &WorkloadAnalysis,
     ) -> std::io::Result<()> {
+        let phases: Vec<&SymbolicAnalysis> = ana.phases.iter().collect();
+        self.store_named(&wl.name, fp, array, table, &phases)
+    }
+
+    /// Persist the volumes of *one phase's* analysis under the
+    /// phase-scoped key (see [`phase_cache_name`]) — the per-phase
+    /// heterogeneous axis spills each (phase, shape) pair individually,
+    /// so editing one phase of a workload leaves its siblings' files
+    /// loadable.
+    pub fn store_phase(
+        &self,
+        wl_name: &str,
+        fp: u64,
+        phase: usize,
+        array: &[i64],
+        table: &EnergyTable,
+        ana: &SymbolicAnalysis,
+    ) -> std::io::Result<()> {
+        self.store_named(
+            &phase_cache_name(wl_name, phase),
+            fp,
+            array,
+            table,
+            &[ana],
+        )
+    }
+
+    fn store_named(
+        &self,
+        name: &str,
+        fp: u64,
+        array: &[i64],
+        table: &EnergyTable,
+        phases: &[&SymbolicAnalysis],
+    ) -> std::io::Result<()> {
         // Statement names are the lookup keys within a file; a name the
         // line format cannot carry round-trip is skipped wholesale.
-        let ok_names = ana.phases.iter().all(|ph| {
+        let ok_names = phases.iter().all(|ph| {
             ph.statements.iter().all(|s| {
                 !s.name.is_empty()
                     && !s.name.contains(char::is_whitespace)
@@ -167,9 +246,9 @@ impl DiskCache {
             return Ok(());
         }
         std::fs::create_dir_all(&self.dir)?;
-        let path = self.file_for(&wl.name, fp, array, table);
+        let path = self.file_for(name, fp, array, table);
         let tmp = path.with_extension(format!("tmp{}", std::process::id()));
-        std::fs::write(&tmp, render(wl, fp, array, table, ana))?;
+        std::fs::write(&tmp, render(name, fp, array, table, phases))?;
         std::fs::rename(&tmp, &path)
     }
 }
@@ -272,15 +351,15 @@ fn parse_key_stem(stem: &str) -> Option<(String, u64)> {
 }
 
 fn render(
-    wl: &Workload,
+    name: &str,
     fp: u64,
     array: &[i64],
     table: &EnergyTable,
-    ana: &WorkloadAnalysis,
+    phases: &[&SymbolicAnalysis],
 ) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "{MAGIC}");
-    let _ = writeln!(s, "workload {}", wl.name);
+    let _ = writeln!(s, "workload {name}");
     let _ = writeln!(s, "fingerprint {fp:016x}");
     let _ = writeln!(
         s,
@@ -288,8 +367,8 @@ fn render(
         array.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
     );
     let _ = writeln!(s, "table {:016x}", table.fingerprint());
-    let _ = writeln!(s, "phases {}", ana.phases.len());
-    for (i, ph) in ana.phases.iter().enumerate() {
+    let _ = writeln!(s, "phases {}", phases.len());
+    for (i, ph) in phases.iter().enumerate() {
         let _ = writeln!(s, "phase {i} statements {}", ph.statements.len());
         for st in &ph.statements {
             let _ = writeln!(
@@ -364,16 +443,17 @@ fn parse_term(body: &str, np: usize) -> Option<(Vec<u32>, i128)> {
 
 fn parse(
     content: &str,
-    wl: &Workload,
+    name: &str,
     fp: u64,
     array: &[i64],
     table: &EnergyTable,
+    expect_phases: usize,
 ) -> Option<Vec<PresetVolumes>> {
     let mut lines = content.lines();
     if lines.next()? != MAGIC {
         return None;
     }
-    if lines.next()? != format!("workload {}", wl.name) {
+    if lines.next()? != format!("workload {name}") {
         return None;
     }
     if lines.next()? != format!("fingerprint {fp:016x}") {
@@ -392,7 +472,7 @@ fn parse(
     }
     let nphases: usize =
         lines.next()?.strip_prefix("phases ")?.parse().ok()?;
-    if nphases != wl.phases.len() {
+    if nphases != expect_phases {
         return None;
     }
     let mut out = Vec::with_capacity(nphases);
@@ -484,6 +564,83 @@ mod tests {
                 );
             }
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn phase_volumes_round_trip_and_never_cross_keys() {
+        use crate::analysis::SymbolicAnalysis;
+        use crate::dse::cache::phase_fingerprint;
+        use crate::tiling::ArrayMapping;
+
+        let dir = tmp_dir("phase-roundtrip");
+        let cache = DiskCache::new(&dir);
+        let wl = workloads::by_name("atax").unwrap();
+        let fp1 = phase_fingerprint(&wl.phases[1]);
+        let ana = SymbolicAnalysis::analyze(
+            &wl.phases[1],
+            &ArrayMapping::new(vec![4, 1]),
+        );
+        cache
+            .store_phase(&wl.name, fp1, 1, &[4, 1], &table(), &ana)
+            .unwrap();
+        let loaded = cache
+            .load_phase(&wl.name, fp1, 1, &[4, 1], &table())
+            .expect("file just written");
+        assert_eq!(loaded.len(), ana.statements.len());
+        for st in &ana.statements {
+            assert_eq!(loaded.get(&st.name), Some(&st.volume), "{}", st.name);
+        }
+        // A phase entry is invisible to the whole-workload key, another
+        // phase index, another fingerprint, and another shape.
+        assert!(cache.load(&wl, fp1, &[4, 1], &table()).is_none());
+        assert!(cache
+            .load_phase(&wl.name, fp1, 0, &[4, 1], &table())
+            .is_none());
+        assert!(cache
+            .load_phase(&wl.name, fp1.wrapping_add(1), 1, &[4, 1], &table())
+            .is_none());
+        assert!(cache
+            .load_phase(&wl.name, fp1, 1, &[1, 4], &table())
+            .is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_reaps_stale_phase_entries_under_their_scoped_names() {
+        use crate::analysis::SymbolicAnalysis;
+        use crate::dse::cache::phase_fingerprint;
+        use crate::tiling::ArrayMapping;
+
+        let dir = tmp_dir("phase-prune");
+        let cache = DiskCache::new(&dir);
+        let wl = workloads::by_name("atax").unwrap();
+        let fp0 = phase_fingerprint(&wl.phases[0]);
+        let ana = SymbolicAnalysis::analyze(
+            &wl.phases[0],
+            &ArrayMapping::new(vec![2, 2]),
+        );
+        cache
+            .store_phase(&wl.name, fp0, 0, &[2, 2], &table(), &ana)
+            .unwrap();
+        cache
+            .store_phase(&wl.name, fp0.wrapping_add(3), 0, &[2, 3], &table(), &ana)
+            .unwrap();
+        let scoped = phase_cache_name(&wl.name, 0);
+        // Pruning with only the plain workload name live keeps the
+        // phase-scoped files — they are a different (conservatively
+        // unrecognized) name.
+        assert_eq!(
+            cache.prune(&[(wl.name.clone(), fp0)]).unwrap(),
+            0,
+            "phase entries are not reaped under the plain name"
+        );
+        // Naming the scoped entry live reaps exactly the stale
+        // fingerprint.
+        assert_eq!(cache.prune(&[(scoped.clone(), fp0)]).unwrap(), 1);
+        assert!(cache
+            .load_phase(&wl.name, fp0, 0, &[2, 2], &table())
+            .is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,10 +1,82 @@
 //! The design-space model: which (array shape, loop bounds, tile scale,
-//! energy backend, schedule vector) combinations a sweep covers, and
-//! which of them pruning removes before any analysis runs.
+//! energy backend, schedule vector, per-phase shape assignment)
+//! combinations a sweep covers, and which of them pruning removes before
+//! any analysis runs.
 
 use std::collections::HashSet;
 
 use crate::energy::{Backend, Policy};
+
+/// Whether a multi-phase workload's phases share one array shape or each
+/// take their own — the per-phase heterogeneous mapping axis.
+///
+/// Multi-phase workloads (ATAX, 2MM, GEMVER) run their phases
+/// sequentially on the same physical array, so nothing forces one shape
+/// on all of them: a phase accumulating along `i1` prefers the transposed
+/// orientation of a phase accumulating along `i0`. `PerPhase` turns the
+/// assignment into a swept axis ([`DesignSpace::phase_points`]); the PE
+/// budget is shared — a combination needs `max` (not `Σ`) of its phases'
+/// PEs, since only one phase occupies the array at a time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PhasePolicy {
+    /// Every phase uses the point's single `array` shape (padded per
+    /// phase) — the pre-axis behavior, bit-for-bit.
+    #[default]
+    Uniform,
+    /// Each phase draws its own shape from the `arrays` axis; the sweep
+    /// covers every combination (including the uniform diagonal).
+    PerPhase,
+}
+
+/// The per-phase shape assignment of one [`DesignPoint`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum PhaseShapes {
+    /// All phases take [`DesignPoint::array`] (padded to each phase's
+    /// depth, exactly as `WorkloadAnalysis::analyze_uniform` does).
+    Uniform,
+    /// Explicit shape per phase, indexed like `Workload::phases` —
+    /// emitted by [`DesignSpace::phase_points`] under
+    /// [`PhasePolicy::PerPhase`].
+    PerPhase(Vec<Vec<i64>>),
+}
+
+impl PhaseShapes {
+    /// Compact display form: `uniform`, or the per-phase shape labels
+    /// joined by `|` (e.g. `1x4|4x1|2x2`), mirroring the schedule
+    /// label convention.
+    pub fn label(&self) -> String {
+        match self {
+            PhaseShapes::Uniform => "uniform".to_string(),
+            PhaseShapes::PerPhase(shapes) => shapes
+                .iter()
+                .map(|s| {
+                    s.iter()
+                        .map(|t| t.to_string())
+                        .collect::<Vec<_>>()
+                        .join("x")
+                })
+                .collect::<Vec<_>>()
+                .join("|"),
+        }
+    }
+
+    /// True when every phase uses one shared shape — either symbolically
+    /// (`Uniform`) or as an explicit all-equal assignment.
+    pub fn is_uniform(&self) -> bool {
+        match self {
+            PhaseShapes::Uniform => true,
+            PhaseShapes::PerPhase(shapes) => {
+                shapes.windows(2).all(|w| w[0] == w[1])
+            }
+        }
+    }
+
+    /// True when at least two phases genuinely differ in shape — the
+    /// assignments only the per-phase axis can reach.
+    pub fn is_heterogeneous(&self) -> bool {
+        !self.is_uniform()
+    }
+}
 
 /// How many schedule-vector candidates the explorer evaluates per design
 /// point. The schedule axis is special: its extent depends on the
@@ -98,12 +170,27 @@ pub struct DesignPoint {
     pub backend: Backend,
     /// Schedule-vector candidate (see [`ScheduleChoice`]).
     pub schedule: ScheduleChoice,
+    /// Per-phase shape assignment (see [`PhaseShapes`]). For `PerPhase`
+    /// points, `array` holds the *provisioned* shape — the phase shape
+    /// with the most PEs (earliest phase among ties) — since phases run
+    /// sequentially and the array is sized for the widest of them.
+    pub phase_shapes: PhaseShapes,
 }
 
 impl DesignPoint {
-    /// Total PEs this point uses.
+    /// Total PEs this point uses: the product of `array`, or — for a
+    /// heterogeneous per-phase assignment — the maximum over the phase
+    /// shapes (phases run back to back on the same array, so the budget
+    /// is `max`, not `Σ`).
     pub fn pes(&self) -> i64 {
-        self.array.iter().product()
+        match &self.phase_shapes {
+            PhaseShapes::Uniform => self.array.iter().product(),
+            PhaseShapes::PerPhase(shapes) => shapes
+                .iter()
+                .map(|s| s.iter().product::<i64>())
+                .max()
+                .unwrap_or_else(|| self.array.iter().product()),
+        }
     }
 
     /// Compact display label, e.g. `8x4` or `16`.
@@ -133,6 +220,11 @@ pub struct DesignSpace {
     /// Schedule-vector axis policy (see [`SchedulePolicy`]; the explorer
     /// expands it per point, since its extent is workload-dependent).
     pub schedules: SchedulePolicy,
+    /// Per-phase shape axis policy (see [`PhasePolicy`]). Like the
+    /// schedule axis, its extent depends on the workload (its phase
+    /// count), so the explorer selects between [`DesignSpace::points`]
+    /// and [`DesignSpace::phase_points`].
+    pub phase_policy: PhasePolicy,
     /// PE budget: shapes with more PEs are pruned.
     pub max_pes: Option<i64>,
     /// Prune transposed duplicates `(b,a)` when `(a,b)` is enumerated.
@@ -159,6 +251,7 @@ impl DesignSpace {
             tile_scales: vec![1],
             backends: vec![Backend::tcpa()],
             schedules: SchedulePolicy::First,
+            phase_policy: PhasePolicy::Uniform,
             max_pes: None,
             prune_symmetric: false,
         }
@@ -254,6 +347,19 @@ impl DesignSpace {
         self
     }
 
+    /// Per-phase shape assignment policy (default [`PhasePolicy::Uniform`],
+    /// the single-shape behavior). With [`PhasePolicy::PerPhase`] the
+    /// explorer enumerates [`DesignSpace::phase_points`] instead of
+    /// [`DesignSpace::points`]: every combination of `arrays` shapes
+    /// across the workload's phases, pruned by the shared PE budget.
+    /// Each distinct (phase, shape) pair is analyzed once and reused
+    /// across all combinations containing it (`dse::AnalysisCache`), so
+    /// the combinatorial sweep multiplies expression evaluations only.
+    pub fn with_phase_shapes(mut self, policy: PhasePolicy) -> Self {
+        self.phase_policy = policy;
+        self
+    }
+
     /// PE budget (also set by `with_arrays_2d`/`with_arrays_1d`).
     pub fn with_max_pes(mut self, max_pes: i64) -> Self {
         self.max_pes = Some(max_pes);
@@ -313,11 +419,7 @@ impl DesignSpace {
     /// matching the old serial `dse_sweep` behavior.
     pub fn points(&self) -> Vec<DesignPoint> {
         let mut out = Vec::new();
-        let mut seen: HashSet<&[i64]> = HashSet::new();
-        for array in &self.arrays {
-            if !seen.insert(array.as_slice()) || !self.keep_array(array) {
-                continue;
-            }
+        for array in self.surviving_shapes() {
             for bounds in &self.bounds_grid {
                 if !Self::fits(array, bounds)
                     || self.symmetric_duplicate(array, bounds)
@@ -336,12 +438,144 @@ impl DesignSpace {
                             tile_scale,
                             backend: backend.clone(),
                             schedule: ScheduleChoice::First,
+                            phase_shapes: PhaseShapes::Uniform,
                         });
                     }
                 }
             }
         }
         out
+    }
+
+    /// The deduplicated, budget-pruned shape list [`Self::points`] and
+    /// [`Self::phase_points`] both draw from (first occurrence wins).
+    fn surviving_shapes(&self) -> Vec<&Vec<i64>> {
+        let mut seen: HashSet<&[i64]> = HashSet::new();
+        self.arrays
+            .iter()
+            .filter(|a| seen.insert(a.as_slice()) && self.keep_array(a))
+            .collect()
+    }
+
+    /// Enumerate the per-phase design points of a workload with
+    /// `nphases` phases — every combination of surviving shapes across
+    /// the phases (shapes^nphases before pruning, including the uniform
+    /// diagonal, so the resulting frontier can only improve on the
+    /// uniform one), in a deterministic order: combinations
+    /// lexicographic by phase (phase 0 outermost), then bounds, tile
+    /// scales, backends as in [`Self::points`].
+    ///
+    /// Pruning: every phase's shape must fit the bounds vector, and
+    /// with symmetry pruning enabled combinations are deduplicated up
+    /// to **global** transposition — mirroring *every* phase's shape at
+    /// once, the only orientation symmetry of the objectives
+    /// ([`Self::symmetric_combo_duplicate`]; transposing a single
+    /// phase's shape genuinely changes per-phase energies, so a
+    /// combination is never dropped just because one phase uses a
+    /// non-canonical orientation). The shared PE budget needs no extra
+    /// rule: phases run sequentially, so a combination uses `max` of
+    /// its phases' PEs, and every surviving shape already respects the
+    /// budget individually.
+    ///
+    /// The combination count grows as `shapes^nphases`; callers should
+    /// check [`Self::phase_point_estimate`] first — this method panics
+    /// (loudly, never truncating silently) if the count overflows.
+    pub fn phase_points(&self, nphases: usize) -> Vec<DesignPoint> {
+        assert!(nphases >= 1, "a workload has at least one phase");
+        let shapes = self.surviving_shapes();
+        let mut out = Vec::new();
+        if shapes.is_empty() {
+            return out;
+        }
+        let total = shapes
+            .len()
+            .checked_pow(nphases as u32)
+            .expect("per-phase combination count overflows; shrink the shape axis");
+        for flat in 0..total {
+            // Odometer: phase 0 is the most significant digit.
+            let mut rem = flat;
+            let mut idx = vec![0usize; nphases];
+            for d in (0..nphases).rev() {
+                idx[d] = rem % shapes.len();
+                rem /= shapes.len();
+            }
+            let combo: Vec<Vec<i64>> =
+                idx.iter().map(|&i| shapes[i].clone()).collect();
+            // Provisioned shape: the widest phase shape (phases execute
+            // sequentially on one array). `rev().max_by_key` resolves
+            // PE-count ties to the earliest phase.
+            let array = combo
+                .iter()
+                .rev()
+                .max_by_key(|s| s.iter().product::<i64>())
+                .expect("nphases >= 1")
+                .clone();
+            for bounds in &self.bounds_grid {
+                if !combo.iter().all(|s| Self::fits(s, bounds))
+                    || self.symmetric_combo_duplicate(&combo, bounds)
+                {
+                    continue;
+                }
+                for &tile_scale in &self.tile_scales {
+                    for backend in &self.backends {
+                        out.push(DesignPoint {
+                            array: array.clone(),
+                            bounds: bounds.clone(),
+                            tile_scale,
+                            backend: backend.clone(),
+                            schedule: ScheduleChoice::First,
+                            phase_shapes: PhaseShapes::PerPhase(
+                                combo.clone(),
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Is `combo` a transposed duplicate at these `bounds`? True only
+    /// when mirroring **every** phase's shape at once — the global
+    /// transposition, the only orientation change that maps a
+    /// combination's objectives onto another's (transposing a single
+    /// phase's shape changes that phase's energy/latency for real, per
+    /// the per-phase axis's whole premise) — yields a lexicographically
+    /// smaller combination whose shapes are all enumerated *and* fit
+    /// the bounds. Like [`Self::symmetric_duplicate`], exact for
+    /// dimension-swap-symmetric workloads and a documented
+    /// approximation otherwise.
+    fn symmetric_combo_duplicate(
+        &self,
+        combo: &[Vec<i64>],
+        bounds: &[i64],
+    ) -> bool {
+        if !self.prune_symmetric {
+            return false;
+        }
+        let mirror: Vec<Vec<i64>> = combo
+            .iter()
+            .map(|s| s.iter().rev().copied().collect())
+            .collect();
+        mirror.as_slice() < combo
+            && mirror
+                .iter()
+                .all(|s| self.arrays.contains(s) && Self::fits(s, bounds))
+    }
+
+    /// Upper bound on the number of points [`Self::phase_points`] would
+    /// emit for `nphases` phases (bounds-fit and symmetry pruning not
+    /// applied) — lets callers refuse a combinatorial explosion with a
+    /// clear message instead of launching an hours-long sweep or
+    /// silently capping coverage.
+    pub fn phase_point_estimate(&self, nphases: usize) -> u128 {
+        let shapes = self.surviving_shapes().len() as u128;
+        shapes
+            .checked_pow(nphases as u32)
+            .unwrap_or(u128::MAX)
+            .saturating_mul(self.bounds_grid.len() as u128)
+            .saturating_mul(self.tile_scales.len() as u128)
+            .saturating_mul(self.backends.len() as u128)
     }
 }
 
@@ -480,9 +714,151 @@ mod tests {
             tile_scale: 1,
             backend: Backend::tcpa(),
             schedule: ScheduleChoice::First,
+            phase_shapes: PhaseShapes::Uniform,
         };
         assert_eq!(p.array_label(), "8x4");
         assert_eq!(p.pes(), 32);
+    }
+
+    #[test]
+    fn phase_shapes_labels_and_pe_budget() {
+        assert_eq!(PhaseShapes::Uniform.label(), "uniform");
+        let hetero =
+            PhaseShapes::PerPhase(vec![vec![1, 4], vec![4, 1], vec![2, 2]]);
+        assert_eq!(hetero.label(), "1x4|4x1|2x2");
+        assert!(hetero.is_heterogeneous());
+        // An all-equal explicit assignment is effectively uniform.
+        let diag = PhaseShapes::PerPhase(vec![vec![2, 2], vec![2, 2]]);
+        assert!(diag.is_uniform() && !diag.is_heterogeneous());
+        assert!(PhaseShapes::Uniform.is_uniform());
+        // Shared budget: sequential phases need max, not Σ, of their PEs.
+        let p = DesignPoint {
+            array: vec![4, 1],
+            bounds: vec![8, 8],
+            tile_scale: 1,
+            backend: Backend::tcpa(),
+            schedule: ScheduleChoice::First,
+            phase_shapes: hetero,
+        };
+        assert_eq!(p.pes(), 4);
+    }
+
+    #[test]
+    fn phase_points_cover_all_combinations_in_lexicographic_order() {
+        let s = DesignSpace::new()
+            .with_arrays(vec![vec![1, 2], vec![2, 1], vec![2, 2]])
+            .with_bounds(vec![8, 8]);
+        let pts = s.phase_points(2);
+        assert_eq!(pts.len(), 9, "3 shapes, 2 phases → 3² combinations");
+        let combos: Vec<Vec<Vec<i64>>> = pts
+            .iter()
+            .map(|p| match &p.phase_shapes {
+                PhaseShapes::PerPhase(c) => c.clone(),
+                other => panic!("expected per-phase shapes, got {other:?}"),
+            })
+            .collect();
+        // Lexicographic by phase, phase 0 outermost; uniform diagonal
+        // included.
+        assert_eq!(combos[0], vec![vec![1, 2], vec![1, 2]]);
+        assert_eq!(combos[1], vec![vec![1, 2], vec![2, 1]]);
+        assert_eq!(combos[3], vec![vec![2, 1], vec![1, 2]]);
+        let mut sorted = combos.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 9, "no duplicate combinations");
+        // The provisioned shape is the widest phase's (max PEs, earliest
+        // phase among ties).
+        let hetero = pts
+            .iter()
+            .find(|p| {
+                p.phase_shapes
+                    == PhaseShapes::PerPhase(vec![vec![1, 2], vec![2, 2]])
+            })
+            .unwrap();
+        assert_eq!(hetero.array, vec![2, 2]);
+        assert_eq!(hetero.pes(), 4);
+        let tied = &pts[1]; // (1,2) then (2,1): both 2 PEs.
+        assert_eq!(tied.array, vec![1, 2], "PE ties resolve to phase 0");
+        // Single-phase per-phase enumeration degenerates to one shape
+        // per point.
+        assert_eq!(s.phase_points(1).len(), 3);
+    }
+
+    #[test]
+    fn phase_points_prune_budget_fits_and_symmetry_phase_wise() {
+        // Budget: (2,2) pruned at max_pes 2 before combining.
+        let s = DesignSpace::new()
+            .with_arrays(vec![vec![1, 2], vec![2, 1], vec![2, 2]])
+            .with_max_pes(2)
+            .with_bounds(vec![8, 8]);
+        assert_eq!(s.phase_points(2).len(), 4);
+        assert_eq!(s.phase_point_estimate(2), 4);
+        // Fits: a phase shape exceeding the bounds removes the whole
+        // combination for those bounds only.
+        let s = DesignSpace::new()
+            .with_arrays(vec![vec![1, 2], vec![4, 1]])
+            .with_bounds_grid(vec![vec![2, 2], vec![8, 8]]);
+        let pts = s.phase_points(2);
+        assert!(pts
+            .iter()
+            .filter(|p| p.bounds == vec![2, 2])
+            .all(|p| p.phase_shapes
+                == PhaseShapes::PerPhase(vec![vec![1, 2], vec![1, 2]])));
+        assert_eq!(
+            pts.iter().filter(|p| p.bounds == vec![8, 8]).count(),
+            4
+        );
+        // Symmetry: combinations deduplicate up to *global*
+        // transposition only — one representative per mirror orbit.
+        // Heterogeneous assignments like (1,2)|(2,1) survive (their
+        // objectives are NOT equal to any uniform combo's; only the
+        // all-phases mirror (2,1)|(1,2) is the duplicate).
+        let s = DesignSpace::new()
+            .with_arrays(vec![vec![1, 2], vec![2, 1]])
+            .with_bounds(vec![8, 8])
+            .with_symmetry_pruning();
+        let combos: Vec<PhaseShapes> = s
+            .phase_points(2)
+            .into_iter()
+            .map(|p| p.phase_shapes)
+            .collect();
+        assert_eq!(
+            combos,
+            vec![
+                PhaseShapes::PerPhase(vec![vec![1, 2], vec![1, 2]]),
+                PhaseShapes::PerPhase(vec![vec![1, 2], vec![2, 1]]),
+            ],
+            "one canonical representative per global-transposition orbit"
+        );
+        // A mirror whose shape does not fit keeps the original: under
+        // bounds (8, 1) the combo (2,1)|(2,1) survives because its
+        // mirror (1,2)|(1,2) does not fit (2 > 1 in dim 1).
+        let s = DesignSpace::new()
+            .with_arrays(vec![vec![1, 2], vec![2, 1]])
+            .with_bounds(vec![8, 1])
+            .with_symmetry_pruning();
+        let pts = s.phase_points(2);
+        assert_eq!(pts.len(), 1);
+        assert_eq!(
+            pts[0].phase_shapes,
+            PhaseShapes::PerPhase(vec![vec![2, 1], vec![2, 1]])
+        );
+    }
+
+    #[test]
+    fn phase_point_estimate_bounds_the_enumeration() {
+        let s = DesignSpace::new()
+            .with_arrays_2d(4)
+            .with_bounds_sweep(&[8, 16], 2)
+            .with_tile_scales(vec![1, 2])
+            .with_backends(Backend::builtins());
+        let est = s.phase_point_estimate(3);
+        assert_eq!(est, 8u128.pow(3) * 2 * 2 * 4);
+        assert!(est >= s.phase_points(3).len() as u128);
+        // Empty shape axis → zero estimate and zero points.
+        let empty = DesignSpace::new().with_bounds(vec![8, 8]);
+        assert_eq!(empty.phase_point_estimate(2), 0);
+        assert!(empty.phase_points(2).is_empty());
     }
 
     #[test]

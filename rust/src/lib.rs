@@ -36,6 +36,20 @@
 //! * [`coordinator`] — CLI driver, validation and legacy DSE shim.
 //! * [`report`] — CSV / markdown / ASCII-figure emitters for the paper's
 //!   tables, figures, and DSE frontiers.
+//!
+//! ## Where the paper lives in the code
+//!
+//! | paper | code |
+//! |-------|------|
+//! | Table I (45 nm access energies) | [`energy::table`], routed per architecture by [`energy::backend`] |
+//! | Eq. 8 (global latency) | [`mod@schedule::latency`] |
+//! | §IV (symbolic lattice-point counting, Eq. 12/13) | [`polyhedral`] |
+//! | §V evaluation flow (Eq. 11 → exploration) | [`analysis`] → [`dse`] |
+//! | §V-A validation oracles | [`sim`] + [`coordinator::validate`] |
+//!
+//! The prose version of this map — with the data-flow diagram and the
+//! caching story — is [`architecture`] (docs/ARCHITECTURE.md in the
+//! repository); the quickstart and CLI tour are [`readme`] (README.md).
 
 pub mod polyhedral;
 pub mod pra;
@@ -51,3 +65,15 @@ pub mod coordinator;
 pub mod report;
 pub mod proptest_lite;
 pub mod bench_util;
+
+/// The repository README, embedded so its quickstart example compiles
+/// as a doc test (`cargo test --doc`) and the rendered docs carry the
+/// CLI tour.
+#[doc = include_str!("../../README.md")]
+pub mod readme {}
+
+/// The paper-structure → code guide (docs/ARCHITECTURE.md), embedded so
+/// its examples compile as doc tests and the map cannot silently drift
+/// from the code it describes.
+#[doc = include_str!("../../docs/ARCHITECTURE.md")]
+pub mod architecture {}

@@ -14,6 +14,11 @@ fn fmt_bounds(b: &[i64]) -> String {
 fn point_row(p: &EvaluatedPoint, on_frontier: bool, knee: bool) -> Vec<String> {
     vec![
         p.point.array_label(),
+        // Per-phase shape assignment: `uniform`, or one shape per phase
+        // joined by `|` (e.g. `1x4|4x1`) under the per-phase axis —
+        // there, `array` shows the provisioned (widest-phase) shape and
+        // this column tells the assignments apart.
+        p.point.phase_shapes.label(),
         p.pes.to_string(),
         fmt_bounds(&p.point.bounds),
         p.point.tile_scale.to_string(),
@@ -32,8 +37,9 @@ fn point_row(p: &EvaluatedPoint, on_frontier: bool, knee: bool) -> Vec<String> {
     ]
 }
 
-const HEADER: [&str; 12] = [
+const HEADER: [&str; 13] = [
     "array",
+    "phases",
     "pes",
     "bounds",
     "tile_scale",
@@ -137,13 +143,15 @@ mod tests {
         assert_eq!(all.rows.len(), res.points.len());
         let front = dse_frontier_table(&res);
         assert_eq!(front.rows.len(), res.frontier.len());
-        assert!(front.rows.iter().all(|r| r[10] == "yes"));
+        assert!(front.rows.iter().all(|r| r[11] == "yes"));
         // Exactly one knee across the full table.
         let knees =
-            all.rows.iter().filter(|r| r[11] == "knee").count();
+            all.rows.iter().filter(|r| r[12] == "knee").count();
         assert_eq!(knees, 1);
-        // Default policy: every row shows the scheduler's pick.
-        assert!(all.rows.iter().all(|r| r[5].starts_with("first (")));
+        // Default policies: every row shows the scheduler's pick and the
+        // uniform shape assignment.
+        assert!(all.rows.iter().all(|r| r[6].starts_with("first (")));
+        assert!(all.rows.iter().all(|r| r[1] == "uniform"));
     }
 
     #[test]
@@ -169,10 +177,42 @@ mod tests {
         let res = explore(&wl, &space, &ExploreConfig::default());
         let all = dse_points_table(&res);
         assert_eq!(all.rows.len(), 2);
-        assert_eq!(all.rows[0][5], "s0 (j0j1)");
-        assert_eq!(all.rows[1][5], "s1 (j1j0)");
+        assert_eq!(all.rows[0][6], "s0 (j0j1)");
+        assert_eq!(all.rows[1][6], "s1 (j1j0)");
         // Same shape and energy, distinguished by schedule + latency.
-        assert_eq!(all.rows[0][6], all.rows[1][6]);
-        assert_ne!(all.rows[0][8], all.rows[1][8]);
+        assert_eq!(all.rows[0][7], all.rows[1][7]);
+        assert_ne!(all.rows[0][9], all.rows[1][9]);
+    }
+
+    #[test]
+    fn phase_axis_rows_show_the_assignment() {
+        use crate::dse::{PhasePolicy, PhaseShapes};
+        let wl = workloads::by_name("atax").unwrap();
+        let space = DesignSpace::new()
+            .with_arrays(vec![vec![1, 2], vec![2, 1]])
+            .with_bounds(vec![8, 8])
+            .with_phase_shapes(PhasePolicy::PerPhase);
+        let res = explore(&wl, &space, &ExploreConfig::default());
+        let all = dse_points_table(&res);
+        assert_eq!(all.rows.len(), 4, "2 shapes × 2 phases");
+        let phases_col: Vec<&str> =
+            all.rows.iter().map(|r| r[1].as_str()).collect();
+        assert_eq!(
+            phases_col,
+            vec!["1x2|1x2", "1x2|2x1", "2x1|1x2", "2x1|2x1"]
+        );
+        // Heterogeneous rows label the provisioned shape in the array
+        // column (PE ties resolve to the earliest phase).
+        let hetero = res
+            .points
+            .iter()
+            .zip(&all.rows)
+            .find(|(p, _)| p.point.phase_shapes.is_heterogeneous())
+            .unwrap();
+        assert!(matches!(
+            hetero.0.point.phase_shapes,
+            PhaseShapes::PerPhase(_)
+        ));
+        assert_eq!(hetero.1[0], hetero.0.point.array_label());
     }
 }

@@ -1,0 +1,143 @@
+//! Link integrity over the repository's Markdown files: every relative
+//! link target (`[text](path)`) must exist on disk, so README /
+//! ARCHITECTURE cross-references never rot silently. External links
+//! (`http(s)://`, `mailto:`), pure anchors (`#...`) and anything inside
+//! fenced code blocks are ignored. CI runs this as the "Markdown link
+//! integrity" step; it also rides along in every plain `cargo test`.
+
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    // rust/ is the manifest dir; the Markdown lives one level up.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf()
+}
+
+/// Every `.md` file under `dir`, skipping VCS and build output.
+fn md_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries {
+        let entry = entry.expect("readable dir entry");
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let path = entry.path();
+        if path.is_dir() {
+            if name.starts_with('.') || name == "target" {
+                continue;
+            }
+            md_files(&path, out);
+        } else if name.ends_with(".md") {
+            out.push(path);
+        }
+    }
+}
+
+/// Relative link targets of one Markdown document with their line
+/// numbers, fenced code blocks stripped first.
+fn relative_links(content: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    // The open fence's marker, so a ``` fence only closes on ``` and a
+    // ~~~ fence only on ~~~ — mixed styles (e.g. showing a literal ```
+    // inside a ~~~ block) must not desynchronize the scanner.
+    let mut fence: Option<&str> = None;
+    for (lineno, line) in content.lines().enumerate() {
+        let trimmed = line.trim_start();
+        let marker = ["```", "~~~"]
+            .into_iter()
+            .find(|m| trimmed.starts_with(m));
+        match (fence, marker) {
+            (None, Some(m)) => {
+                fence = Some(m);
+                continue;
+            }
+            (Some(open), Some(m)) if open == m => {
+                fence = None;
+                continue;
+            }
+            _ => {}
+        }
+        if fence.is_some() {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(start) = rest.find("](") {
+            let tail = &rest[start + 2..];
+            let Some(end) = tail.find(')') else { break };
+            let target = tail[..end].trim();
+            rest = &tail[end + 1..];
+            if target.is_empty()
+                || target.contains("://")
+                || target.starts_with('#')
+                || target.starts_with("mailto:")
+                || target.contains(char::is_whitespace)
+            {
+                continue;
+            }
+            // Drop any fragment: `docs/ARCHITECTURE.md#layout`.
+            let path_part =
+                target.split_once('#').map_or(target, |(p, _)| p);
+            if !path_part.is_empty() {
+                out.push((lineno + 1, path_part.to_string()));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn every_relative_markdown_link_resolves() {
+    let root = repo_root();
+    let mut files = Vec::new();
+    md_files(&root, &mut files);
+    assert!(
+        files.iter().any(|f| f.ends_with("README.md")),
+        "README.md must exist at the repository root"
+    );
+    assert!(
+        files.iter().any(|f| f.ends_with("ARCHITECTURE.md")),
+        "docs/ARCHITECTURE.md must exist"
+    );
+    let mut broken = Vec::new();
+    for file in &files {
+        let content = std::fs::read_to_string(file).expect("readable md");
+        let base = file.parent().expect("md file has a dir");
+        for (line, target) in relative_links(&content) {
+            if !base.join(&target).exists() {
+                broken.push(format!(
+                    "{}:{line}: dead link -> {target}",
+                    file.display()
+                ));
+            }
+        }
+    }
+    assert!(broken.is_empty(), "dead relative links:\n{}", broken.join("\n"));
+}
+
+#[test]
+fn link_scanner_understands_markdown() {
+    let doc = "\
+see [guide](docs/ARCHITECTURE.md#map) and [web](https://example.org)\n\
+```bash\n\
+echo [not a link](nope.md)\n\
+```\n\
+[anchor](#local) [rel](../README.md) [mail](mailto:x@y.z)\n";
+    let links = relative_links(doc);
+    assert_eq!(
+        links,
+        vec![
+            (1, "docs/ARCHITECTURE.md".to_string()),
+            (5, "../README.md".to_string()),
+        ]
+    );
+    // Mixed fence styles stay synchronized: a literal ``` shown inside
+    // a ~~~ fence neither closes it nor exposes the fenced link.
+    let mixed = "~~~\n```\n[inside](dead.md)\n~~~\n[after](../README.md)\n";
+    assert_eq!(
+        relative_links(mixed),
+        vec![(5, "../README.md".to_string())]
+    );
+}

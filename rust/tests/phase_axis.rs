@@ -1,0 +1,434 @@
+//! Properties of the per-phase heterogeneous mapping axis
+//! (`DesignSpace::with_phase_shapes`):
+//!
+//! 1. The per-phase frontier weakly dominates the uniform frontier in
+//!    every (bounds, backend) scenario — the sweep is a superset, so it
+//!    can only improve.
+//! 2. On GEMVER, composed with the schedule axis, a genuinely
+//!    heterogeneous assignment reaches the frontier. The schedule axis
+//!    matters: GEMVER's phases are structural transposes with one
+//!    propagation and one accumulation stream each, so their orientation
+//!    preferences under *optimal* schedules mirror (or tie) — while the
+//!    default candidate-0 schedule's fixed lexicographic dimension order
+//!    penalizes dim-1 tile crossings for every phase alike, aligning
+//!    all preferences on one orientation.
+//! 3. For phases with *opposite stream-count asymmetries* (a
+//!    GESUMMV-like phase and its transpose), heterogeneity is strictly
+//!    optimal in energy — the mechanism in its purest form, pinned on a
+//!    purpose-built workload.
+//! 4. `PhasePolicy::Uniform` (the default) reproduces the pre-axis
+//!    sweep bit-for-bit, pinned by manual recomputation of every point
+//!    from a fresh uniform analysis.
+//! 5. Analysis work scales with distinct (phase, shape) pairs, never
+//!    with the number of shape combinations.
+//! 6. Sim differential: a heterogeneous assignment's explorer energy
+//!    equals the per-phase symbolic totals, which in turn match the
+//!    cycle-accurate simulator exactly (`validate_workload_mapped`).
+//! 7. Exploration with the axis enabled is deterministic across worker
+//!    counts.
+
+use tcpa_energy::analysis::WorkloadAnalysis;
+use tcpa_energy::coordinator::validate::validate_workload_mapped;
+use tcpa_energy::dse::{
+    explore, explore_with_cache, AnalysisCache, DesignSpace,
+    ExploreConfig, PhasePolicy, PhaseShapes, SchedulePolicy,
+};
+use tcpa_energy::energy::Backend;
+use tcpa_energy::pra::ir::{IndexMap, Lhs, Op, Operand};
+use tcpa_energy::pra::{validate, Workload};
+use tcpa_energy::workloads::{self, PraBuilder};
+
+/// The comparison space the axis properties run on: GEMVER (3 phases)
+/// over both 4-PE orientations plus the square, two bounds scenarios.
+fn gemver_space() -> DesignSpace {
+    DesignSpace::new()
+        .with_arrays(vec![vec![1, 4], vec![4, 1], vec![2, 2]])
+        .with_bounds_sweep(&[8, 12], 2)
+}
+
+#[test]
+fn per_phase_frontier_weakly_dominates_uniform_per_scenario() {
+    let wl = workloads::by_name("gemver").unwrap();
+    let uniform = explore(&wl, &gemver_space(), &ExploreConfig::default());
+    let per_phase = explore(
+        &wl,
+        &gemver_space().with_phase_shapes(PhasePolicy::PerPhase),
+        &ExploreConfig::default(),
+    );
+    assert!(uniform.failures.is_empty(), "{:?}", uniform.failures);
+    assert!(per_phase.failures.is_empty(), "{:?}", per_phase.failures);
+    assert_eq!(uniform.points.len(), 3 * 2);
+    assert_eq!(per_phase.points.len(), 27 * 2, "3 shapes ^ 3 phases");
+    for ug in &uniform.groups {
+        let pg = per_phase
+            .groups
+            .iter()
+            .find(|g| g.bounds == ug.bounds && g.backend == ug.backend)
+            .expect("scenario present in both sweeps");
+        for &ui in &ug.frontier {
+            let uo = uniform.points[ui].objectives().to_array();
+            let covered = pg.frontier.iter().any(|&pi| {
+                let po = per_phase.points[pi].objectives().to_array();
+                po.iter().zip(&uo).all(|(p, u)| p <= u)
+            });
+            assert!(
+                covered,
+                "uniform frontier point {:?} ({:?}) has no weakly \
+                 dominating counterpart under per-phase shapes",
+                uniform.points[ui].point.array, ug.bounds
+            );
+        }
+        // The uniform diagonal is enumerated, so the per-phase frontier
+        // can never be worse in any scenario.
+        assert!(!pg.frontier.is_empty());
+    }
+}
+
+#[test]
+fn heterogeneous_assignment_reaches_the_frontier_on_gemver() {
+    // Per-phase shapes composed with the schedule axis: each (phase,
+    // shape) pair is evaluated at its best feasible λ, which restores
+    // the transpose symmetry between GEMVER's phase 2 (accumulates
+    // along i0) and phase 3 (accumulates along i1). Their orientation
+    // preferences then mirror — or tie exactly — and either way some
+    // heterogeneous assignment is non-dominated: with mirrored strict
+    // preferences the phase-wise argmin combination strictly beats both
+    // uniform orientations, and with exact ties nothing dominates
+    // anything, so heterogeneous combinations stand on the frontier
+    // alongside the uniforms.
+    let wl = workloads::by_name("gemver").unwrap();
+    let space = DesignSpace::new()
+        .with_arrays(vec![vec![1, 4], vec![4, 1]])
+        .with_bounds(vec![8, 8])
+        .with_phase_shapes(PhasePolicy::PerPhase)
+        .with_schedules(SchedulePolicy::All);
+    let res = explore(&wl, &space, &ExploreConfig::default());
+    assert!(res.failures.is_empty(), "{:?}", res.failures);
+    // All 2^3 shape combinations are present (× schedule candidates).
+    let combos: std::collections::BTreeSet<String> = res
+        .points
+        .iter()
+        .map(|p| p.point.phase_shapes.label())
+        .collect();
+    assert_eq!(combos.len(), 8, "2 shapes ^ 3 phases: {combos:?}");
+    let hetero_on_frontier = res.frontier.iter().any(|&i| {
+        res.points[i].point.phase_shapes.is_heterogeneous()
+    });
+    assert!(
+        hetero_on_frontier,
+        "a genuinely heterogeneous assignment must reach the frontier; \
+         frontier: {:?}",
+        res.frontier
+            .iter()
+            .map(|&i| {
+                (
+                    res.points[i].point.phase_shapes.label(),
+                    res.points[i].energy_pj,
+                    res.points[i].latency_cycles,
+                )
+            })
+            .collect::<Vec<_>>()
+    );
+    // And the composed frontier weakly dominates the uniform sweep at
+    // the same schedule policy.
+    let uniform = explore(
+        &wl,
+        &DesignSpace::new()
+            .with_arrays(vec![vec![1, 4], vec![4, 1]])
+            .with_bounds(vec![8, 8])
+            .with_schedules(SchedulePolicy::All),
+        &ExploreConfig::default(),
+    );
+    for &ui in &uniform.frontier {
+        let uo = uniform.points[ui].objectives().to_array();
+        assert!(
+            res.frontier.iter().any(|&pi| {
+                let po = res.points[pi].objectives().to_array();
+                po.iter().zip(&uo).all(|(p, u)| p <= u)
+            }),
+            "uniform frontier point must be weakly dominated"
+        );
+    }
+}
+
+/// A two-phase workload whose phases carry *opposite* stream-count
+/// asymmetries: phase A propagates one value along `i0` and drives two
+/// accumulation chains along `i1` (the GESUMMV shape); phase B is its
+/// transpose. Splitting a dimension converts that dimension's streams
+/// from FD to (Table-I-cheaper) ID transport, so phase A's energy
+/// strictly prefers the orientation that splits `i1` (two streams
+/// converted) while phase B strictly prefers the opposite — the uniform
+/// sweep must pay the wrong orientation for one of them.
+fn mirrored_asymmetric() -> Workload {
+    let nd = 2;
+    let mut a = PraBuilder::new("hetero_a", nd);
+    a.tensor("A", &[0, 1])
+        .tensor("B", &[0, 1])
+        .tensor("X", &[1])
+        .tensor("Y", &[0]);
+    a.propagate("x", "X", IndexMap::select(&[1], nd), 0);
+    a.stmt(
+        Lhs::Var("pa".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("A", IndexMap::identity(2, nd)),
+            Operand::var0("x", nd),
+        ],
+        vec![],
+    );
+    a.stmt(
+        Lhs::Var("pb".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("B", IndexMap::identity(2, nd)),
+            Operand::var0("x", nd),
+        ],
+        vec![],
+    );
+    a.acc_chain("sa", "pa", 1);
+    a.acc_chain("sb", "pb", 1);
+    let top1 = a.eq_top(1);
+    a.stmt(
+        Lhs::Tensor { name: "Y".into(), map: IndexMap::select(&[0], nd) },
+        Op::Add,
+        vec![Operand::var0("sa", nd), Operand::var0("sb", nd)],
+        top1,
+    );
+    let pa = a.build();
+    assert!(validate(&pa).is_empty(), "{:?}", validate(&pa));
+
+    let mut b = PraBuilder::new("hetero_b", nd);
+    b.tensor("C", &[0, 1])
+        .tensor("D", &[0, 1])
+        .tensor("W", &[0])
+        .tensor("Z", &[1]);
+    b.propagate("w", "W", IndexMap::select(&[0], nd), 1);
+    b.stmt(
+        Lhs::Var("pc".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("C", IndexMap::identity(2, nd)),
+            Operand::var0("w", nd),
+        ],
+        vec![],
+    );
+    b.stmt(
+        Lhs::Var("pd".into()),
+        Op::Mul,
+        vec![
+            Operand::tensor("D", IndexMap::identity(2, nd)),
+            Operand::var0("w", nd),
+        ],
+        vec![],
+    );
+    b.acc_chain("sc", "pc", 0);
+    b.acc_chain("sd", "pd", 0);
+    let top0 = b.eq_top(0);
+    b.stmt(
+        Lhs::Tensor { name: "Z".into(), map: IndexMap::select(&[1], nd) },
+        Op::Add,
+        vec![Operand::var0("sc", nd), Operand::var0("sd", nd)],
+        top0,
+    );
+    let pb = b.build();
+    assert!(validate(&pb).is_empty(), "{:?}", validate(&pb));
+
+    Workload { name: "mirrored-asym".into(), phases: vec![pa, pb] }
+}
+
+#[test]
+fn opposite_phase_asymmetries_make_heterogeneity_strictly_optimal() {
+    let wl = mirrored_asymmetric();
+    let shapes = [vec![1i64, 4], vec![4i64, 1]];
+    let bounds = [8i64, 8];
+    // Premise, computed not assumed: the phases' energy argmins over
+    // the two orientations differ.
+    let cache = AnalysisCache::new();
+    let energy = |phase: usize, s: &[i64]| {
+        let (ana, _) = cache.try_get_or_analyze_phase(&wl, phase, s);
+        let ana = ana.expect("schedulable");
+        let params = ana.params_for(&bounds);
+        ana.energy_at(&params).total
+    };
+    let argmin = |phase: usize| {
+        let (e0, e1) = (energy(phase, &shapes[0]), energy(phase, &shapes[1]));
+        assert_ne!(
+            e0, e1,
+            "phase {phase}: opposite stream asymmetries must price the \
+             orientations differently ({e0} vs {e1} pJ)"
+        );
+        usize::from(e1 < e0)
+    };
+    let (pref_a, pref_b) = (argmin(0), argmin(1));
+    assert_ne!(
+        pref_a, pref_b,
+        "mirrored phases must prefer opposite orientations"
+    );
+
+    let space = DesignSpace::new()
+        .with_arrays(shapes.to_vec())
+        .with_bounds(bounds.to_vec())
+        .with_phase_shapes(PhasePolicy::PerPhase);
+    let res = explore_with_cache(
+        &wl,
+        &space,
+        &ExploreConfig::default(),
+        &cache,
+    );
+    assert!(res.failures.is_empty(), "{:?}", res.failures);
+    assert_eq!(res.points.len(), 4);
+    let best = PhaseShapes::PerPhase(vec![
+        shapes[pref_a].clone(),
+        shapes[pref_b].clone(),
+    ]);
+    let best_idx = res
+        .points
+        .iter()
+        .position(|p| p.point.phase_shapes == best)
+        .expect("argmin assignment enumerated");
+    assert!(best.is_heterogeneous());
+    // The phase-wise energy argmin is the unique total-energy minimum
+    // (energies sum over phases), so nothing can dominate it …
+    assert!(
+        res.frontier.contains(&best_idx),
+        "the heterogeneous energy minimum must be non-dominated"
+    );
+    // … and it strictly undercuts every uniform assignment.
+    for p in &res.points {
+        if p.point.phase_shapes.is_uniform() {
+            assert!(
+                res.points[best_idx].energy_pj < p.energy_pj,
+                "hetero argmin must undercut uniform {} ({} vs {} pJ)",
+                p.point.phase_shapes.label(),
+                res.points[best_idx].energy_pj,
+                p.energy_pj
+            );
+        }
+    }
+}
+
+#[test]
+fn uniform_policy_reproduces_pre_axis_sweep_bit_for_bit() {
+    // Explicit Uniform changes nothing relative to the default space,
+    // and every emitted point carries exactly the pre-axis arithmetic:
+    // energy from a fresh uniform analysis' backend pricing, latency
+    // from its embedded default schedules.
+    let wl = workloads::by_name("atax").unwrap();
+    let space = DesignSpace::new()
+        .with_arrays(vec![vec![1, 4], vec![4, 1], vec![2, 2]])
+        .with_bounds_sweep(&[8, 16], 2)
+        .with_backends(vec![Backend::tcpa(), Backend::cgra()]);
+    let implicit = explore(&wl, &space, &ExploreConfig::default());
+    let explicit = explore(
+        &wl,
+        &space.clone().with_phase_shapes(PhasePolicy::Uniform),
+        &ExploreConfig::default(),
+    );
+    assert_eq!(implicit.points.len(), explicit.points.len());
+    for (a, b) in implicit.points.iter().zip(&explicit.points) {
+        assert_eq!(a.point, b.point);
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.dram_pj.to_bits(), b.dram_pj.to_bits());
+        assert_eq!(a.latency_cycles, b.latency_cycles);
+        assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+    }
+    assert_eq!(implicit.frontier, explicit.frontier);
+    assert_eq!(implicit.groups, explicit.groups);
+    // Manual recomputation — the pre-axis explorer semantics.
+    for p in &explicit.points {
+        assert_eq!(p.point.phase_shapes, PhaseShapes::Uniform);
+        let ana = WorkloadAnalysis::analyze_uniform(&wl, &p.point.array);
+        let params: Vec<Vec<i64>> = ana
+            .phases
+            .iter()
+            .map(|ph| {
+                ph.params_for(&tcpa_energy::tiling::pad_bounds(
+                    &p.point.bounds,
+                    ph.tiled.pra.ndims,
+                ))
+            })
+            .collect();
+        let energy = ana.energy_at_backend(&params, &p.point.backend);
+        assert_eq!(p.energy_pj.to_bits(), energy.total.to_bits());
+        assert_eq!(p.latency_cycles, ana.latency_at(&params));
+    }
+}
+
+#[test]
+fn analysis_count_scales_with_phase_shape_pairs() {
+    // 27 combinations per scenario, 2 scenarios — but exactly
+    // 3 phases × 3 shapes = 9 symbolic analyses, each reused by every
+    // combination containing it.
+    let wl = workloads::by_name("gemver").unwrap();
+    let cache = AnalysisCache::new();
+    let res = explore_with_cache(
+        &wl,
+        &gemver_space().with_phase_shapes(PhasePolicy::PerPhase),
+        &ExploreConfig::default(),
+        &cache,
+    );
+    assert!(res.failures.is_empty(), "{:?}", res.failures);
+    assert_eq!(res.points.len(), 54);
+    let s = cache.stats();
+    assert_eq!(s.entries, 9, "3 phases × 3 shapes");
+    assert_eq!(s.misses, 9, "analysis count must not track combinations");
+    // 3 phase lookups per base point; all but the 9 cold ones hit.
+    assert_eq!(s.hits, 54 * 3 - 9);
+}
+
+#[test]
+fn heterogeneous_energy_matches_simulator_exactly() {
+    // The sim differential: phase-wise symbolic counts on heterogeneous
+    // shapes match the cycle-accurate simulator exactly, and the
+    // explorer's assembled totals are precisely those phase sums.
+    let wl = workloads::by_name("gemver").unwrap();
+    let shapes = vec![vec![2i64, 2], vec![1i64, 4], vec![4i64, 1]];
+    let rows = validate_workload_mapped(&wl, &[8, 8], &shapes);
+    assert_eq!(rows.len(), 3);
+    for r in &rows {
+        assert!(r.exact_match, "{}: {:?}", r.phase, r.counts);
+        assert!(r.functional_ok, "{}: outputs diverge", r.phase);
+    }
+    let space = DesignSpace::new()
+        .with_arrays(shapes.clone())
+        .with_bounds(vec![8, 8])
+        .with_phase_shapes(PhasePolicy::PerPhase);
+    let res = explore(&wl, &space, &ExploreConfig::default());
+    let point = res
+        .points
+        .iter()
+        .find(|p| p.point.phase_shapes == PhaseShapes::PerPhase(shapes.clone()))
+        .expect("the validated assignment is enumerated");
+    let sym_total: f64 = rows.iter().map(|r| r.energy_sym_pj).sum();
+    assert_eq!(
+        point.energy_pj.to_bits(),
+        sym_total.to_bits(),
+        "explorer totals must be the exact per-phase sums"
+    );
+    let sim_total: f64 = rows.iter().map(|r| r.energy_sim_pj).sum();
+    assert!(
+        (point.energy_pj - sim_total).abs() <= 1e-6 * point.energy_pj,
+        "symbolic {} vs simulated {} pJ",
+        point.energy_pj,
+        sim_total
+    );
+}
+
+#[test]
+fn per_phase_axis_deterministic_across_worker_counts() {
+    let wl = workloads::by_name("gemver").unwrap();
+    let space = gemver_space().with_phase_shapes(PhasePolicy::PerPhase);
+    let a = explore(&wl, &space, &ExploreConfig { workers: 1 });
+    let b = explore(&wl, &space, &ExploreConfig { workers: 4 });
+    assert_eq!(a.points.len(), b.points.len());
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.point, y.point, "order must not depend on workers");
+        assert_eq!(x.energy_pj.to_bits(), y.energy_pj.to_bits());
+        assert_eq!(x.dram_pj.to_bits(), y.dram_pj.to_bits());
+        assert_eq!(x.latency_cycles, y.latency_cycles);
+        assert_eq!(x.edp.to_bits(), y.edp.to_bits());
+    }
+    assert_eq!(a.frontier, b.frontier);
+    assert_eq!(a.groups, b.groups);
+    assert_eq!(a.knee, b.knee);
+}
