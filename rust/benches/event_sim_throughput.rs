@@ -1,0 +1,122 @@
+//! Tick engine vs discrete-event engine throughput across problem sizes.
+//!
+//! The tick engine materializes and sorts the full iteration space —
+//! Θ(I log I) scheduling work and Θ(I) memory for I iterations. The
+//! event engine replaces that with a time-ordered queue holding at most
+//! one pending fire per PE, so its **per-iteration cost is
+//! bounds-independent**: O(#statements + log #PEs), no global sort, no
+//! event materialization. This bench measures both engines on growing
+//! GESUMMV grids and records the trajectory in `BENCH_sim.json`
+//! (section `event_sim_throughput`):
+//!
+//! * iterations/sec for each engine at every size,
+//! * the event engine's ns/iteration — which must stay flat as the
+//!   grid grows 256× (asserted at ≤ 2× drift between the smallest and
+//!   largest size in full runs; `--quick`, the CI smoke, just reports).
+//!
+//! ```bash
+//! cargo bench --bench event_sim_throughput [-- --quick]
+//! ```
+
+use std::fmt::Write as _;
+
+use tcpa_energy::bench_util::{
+    bench_sim_json_path, time_once, write_bench_section,
+};
+use tcpa_energy::schedule::find_schedule;
+use tcpa_energy::sim::{simulate_event, simulate_tick, ArchConfig};
+use tcpa_energy::tiling::tile_pra;
+use tcpa_energy::workloads::{self, workload_inputs};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[i64] =
+        if quick { &[64, 128, 256] } else { &[64, 128, 256, 512, 1024] };
+
+    let wl = workloads::by_name("gesummv").unwrap();
+    let phase = &wl.phases[0];
+    let mut arch = ArchConfig::with_array(vec![8, 8]);
+    arch.regs.fd = 1 << 20;
+    let tiled = tile_pra(phase, &arch.mapping);
+    let schedule = find_schedule(&tiled, arch.pi).unwrap();
+
+    println!("tick vs event engine (GESUMMV, 8x8 array)\n");
+    println!(
+        "{:>6} {:>10} {:>12} {:>12} {:>14} {:>14}",
+        "N", "iters", "tick", "event", "event it/s", "event ns/it"
+    );
+    let mut rows = String::from("[");
+    let mut event_ns: Vec<f64> = Vec::new();
+    for (i, &n) in sizes.iter().enumerate() {
+        let params = arch.mapping.params_for(&[n, n]);
+        let env = workload_inputs(&wl, &[params.clone()]);
+        let (t_tick, tick) =
+            time_once(|| simulate_tick(phase, &arch, &schedule, &params, &env));
+        let (t_event, event) = time_once(|| {
+            simulate_event(phase, &arch, &schedule, &params, &env)
+        });
+        // Throughput numbers for diverging engines would be garbage.
+        assert_eq!(event.cycles, tick.cycles, "engine divergence at N={n}");
+        assert_eq!(event.counters, tick.counters, "counters at N={n}");
+        let iters: i64 = event.stats.pe.iter().map(|p| p.iterations).sum();
+        assert_eq!(iters, n * n);
+        let ns_per_iter =
+            t_event.as_secs_f64() * 1e9 / iters as f64;
+        event_ns.push(ns_per_iter);
+        println!(
+            "{:>6} {:>10} {:>12.3?} {:>12.3?} {:>14.3e} {:>14.1}",
+            n,
+            iters,
+            t_tick,
+            t_event,
+            iters as f64 / t_event.as_secs_f64().max(1e-12),
+            ns_per_iter
+        );
+        let _ = write!(
+            rows,
+            "{}{{\"n\": {n}, \"iters\": {iters}, \
+             \"tick_s\": {:.6}, \"event_s\": {:.6}, \
+             \"tick_iters_per_sec\": {:.1}, \
+             \"event_iters_per_sec\": {:.1}, \
+             \"event_ns_per_iter\": {ns_per_iter:.2}}}",
+            if i > 0 { ", " } else { "" },
+            t_tick.as_secs_f64(),
+            t_event.as_secs_f64(),
+            iters as f64 / t_tick.as_secs_f64().max(1e-12),
+            iters as f64 / t_event.as_secs_f64().max(1e-12),
+        );
+    }
+    rows.push(']');
+
+    // Bounds-independence: the event engine's per-iteration cost must
+    // not grow with the grid. Full runs enforce it; `--quick` (the CI
+    // smoke, noisy shared runners) just reports the ratio.
+    let first = event_ns.first().copied().unwrap();
+    let last = event_ns.last().copied().unwrap();
+    let drift = last / first.max(1e-12);
+    println!(
+        "\nevent ns/iter: {first:.1} @ N={} → {last:.1} @ N={} \
+         ({drift:.2}x)",
+        sizes[0],
+        sizes[sizes.len() - 1]
+    );
+    if !quick {
+        assert!(
+            drift <= 2.0,
+            "event per-iteration cost grew {drift:.2}x from N={} to \
+             N={} — not bounds-independent",
+            sizes[0],
+            sizes[sizes.len() - 1]
+        );
+    }
+
+    let body = format!(
+        "{{\"workload\": \"gesummv\", \"array\": \"8x8\", \
+         \"rows\": {rows}, \"event_ns_per_iter_drift\": {drift:.3}, \
+         \"quick\": {quick}}}"
+    );
+    let path = bench_sim_json_path();
+    write_bench_section(&path, "event_sim_throughput", &body)
+        .expect("writing BENCH_sim.json");
+    println!("section event_sim_throughput → {}", path.display());
+}

@@ -1,14 +1,28 @@
 //! Simulator throughput benchmark: statement-executions per second of the
 //! cycle-accurate engine across problem sizes (the denominator of the
 //! Fig. 4 comparison, and the §Perf optimization target for L3).
+//!
+//! Results land in `BENCH_sim.json` (section `simulator_throughput`),
+//! alongside the tick-vs-event comparison of `event_sim_throughput`.
+//!
+//! ```bash
+//! cargo bench --bench simulator_throughput [-- --quick]
+//! ```
 
-use tcpa_energy::bench_util::time_once;
+use std::fmt::Write as _;
+
+use tcpa_energy::bench_util::{
+    bench_sim_json_path, time_once, write_bench_section,
+};
 use tcpa_energy::schedule::find_schedule;
 use tcpa_energy::sim::{simulate, ArchConfig};
 use tcpa_energy::tiling::{tile_pra, ArrayMapping};
 use tcpa_energy::workloads::{self, workload_inputs};
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[i64] = if quick { &[64, 128] } else { &[64, 128, 256, 512] };
+
     let wl = workloads::by_name("gesummv").unwrap();
     let phase = &wl.phases[0];
     let mapping = ArrayMapping::new(vec![8, 8]);
@@ -19,7 +33,8 @@ fn main() {
         "{:>6} {:>14} {:>12} {:>16}",
         "N", "stmt execs", "wall", "execs/s"
     );
-    for n in [64i64, 128, 256, 512] {
+    let mut rows = String::from("[");
+    for (i, &n) in sizes.iter().enumerate() {
         let params = mapping.params_for(&[n, n]);
         let env = workload_inputs(&wl, &[params.clone()]);
         let mut arch = ArchConfig::with_array(vec![8, 8]);
@@ -27,12 +42,27 @@ fn main() {
         let (t, res) =
             time_once(|| simulate(phase, &arch, &schedule, &params, &env));
         let execs = res.counters.executions;
+        let execs_per_sec = execs as f64 / t.as_secs_f64().max(1e-12);
         println!(
             "{:>6} {:>14} {:>12.3?} {:>16.3e}",
-            n,
-            execs,
-            t,
-            execs as f64 / t.as_secs_f64()
+            n, execs, t, execs_per_sec
+        );
+        let _ = write!(
+            rows,
+            "{}{{\"n\": {n}, \"stmt_execs\": {execs}, \
+             \"wall_s\": {:.6}, \"execs_per_sec\": {execs_per_sec:.1}}}",
+            if i > 0 { ", " } else { "" },
+            t.as_secs_f64(),
         );
     }
+    rows.push(']');
+
+    let body = format!(
+        "{{\"workload\": \"gesummv\", \"array\": \"8x8\", \
+         \"rows\": {rows}, \"quick\": {quick}}}"
+    );
+    let path = bench_sim_json_path();
+    write_bench_section(&path, "simulator_throughput", &body)
+        .expect("writing BENCH_sim.json");
+    println!("section simulator_throughput → {}", path.display());
 }

@@ -3,8 +3,11 @@
 //! All `cargo bench` targets are `harness = false` binaries built on this.
 //!
 //! Also hosts the machine-readable results channel: benches append their
-//! numbers as one top-level section of `BENCH_symbolic.json` (see
+//! numbers as one top-level section of a JSON results file (see
 //! [`write_bench_section`]), so CI tracks the perf trajectory across PRs.
+//! Symbolic-analysis benches write to `BENCH_symbolic.json`
+//! ([`bench_symbolic_json_path`]); simulation benches write to
+//! `BENCH_sim.json` ([`bench_sim_json_path`]).
 
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
@@ -72,6 +75,17 @@ pub fn bench_symbolic_json_path() -> PathBuf {
     std::env::var_os("BENCH_SYMBOLIC_JSON")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("BENCH_symbolic.json"))
+}
+
+/// Where the simulation benches record machine-readable results:
+/// `$BENCH_SIM_JSON` if set, else `BENCH_sim.json` in the current
+/// directory. Kept separate from [`bench_symbolic_json_path`] so the
+/// simulator perf trajectory (tick vs event engine) is its own CI
+/// artifact.
+pub fn bench_sim_json_path() -> PathBuf {
+    std::env::var_os("BENCH_SIM_JSON")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_sim.json"))
 }
 
 /// Read-modify-write one top-level section of a JSON object file: the

@@ -15,6 +15,7 @@
 //!                      [--policies all|tcpa,no-fd,no-reuse]   (legacy)
 //!                      [--prune-symmetric] [--workers N] [--out DIR]
 //!                      [--analysis-cache DIR] [--prune-cache]
+//!                      [--sim-verify-frontier]
 //! tcpa-energy figures  [--out results] [--quick]
 //! ```
 //!
@@ -33,15 +34,19 @@
 //! once (`uniform`, the default, reproduces the single-shape sweep
 //! bit-for-bit). `--prune-cache` (with `--analysis-cache`) removes
 //! spilled entries whose workload or phase fingerprint went stale.
+//! `dse --sim-verify-frontier` re-simulates the Pareto-frontier points on
+//! the discrete-event engine after the sweep — the report gains a
+//! `sim_cycles` column, and any divergence from the symbolic prediction
+//! is printed and escalated to a non-zero exit.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::analysis::SymbolicAnalysis;
 use crate::dse::{
-    explore, explore_with_cache, phase_cache_name, phase_fingerprint,
-    workload_fingerprint, AnalysisCache, DesignSpace, ExploreConfig,
-    PhasePolicy, SchedulePolicy,
+    explore_with_cache, phase_cache_name, phase_fingerprint,
+    sim_verify_frontier, workload_fingerprint, AnalysisCache, DesignSpace,
+    ExploreConfig, PhasePolicy, SchedulePolicy,
 };
 use crate::energy::{AccessClass, Backend, MemoryClass, Policy};
 use crate::report::{
@@ -486,39 +491,12 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             };
 
             let cfg = ExploreConfig { workers };
-            let res = match flags.get("analysis-cache") {
-                Some(dir) if dir != "true" => {
-                    // Persistent spill: repeated CLI invocations reload the
-                    // one-time symbolic volumes instead of recomputing.
-                    let cache = AnalysisCache::with_disk(dir);
-                    let res = explore_with_cache(&wl, &space, &cfg, &cache);
-                    if flags.contains_key("prune-cache") {
-                        // Live keys: the whole-workload entry plus one
-                        // phase-scoped entry per phase (the per-phase
-                        // axis spills those), each under its own
-                        // structural fingerprint.
-                        let mut live =
-                            vec![(wl.name.clone(), workload_fingerprint(&wl))];
-                        for (i, ph) in wl.phases.iter().enumerate() {
-                            live.push((
-                                phase_cache_name(&wl.name, i),
-                                phase_fingerprint(ph),
-                            ));
-                        }
-                        match cache.prune_disk(&live) {
-                            Ok(0) => {}
-                            Ok(n) => println!(
-                                "pruned {n} stale analysis-cache file(s)"
-                            ),
-                            // Advisory, like the spill itself: a prune
-                            // failure must not fail the sweep.
-                            Err(e) => eprintln!(
-                                "analysis-cache prune failed: {e}"
-                            ),
-                        }
-                    }
-                    res
-                }
+            // Persistent spill: repeated CLI invocations reload the
+            // one-time symbolic volumes instead of recomputing. The
+            // in-memory cache exists either way — the sim-verify pass
+            // reuses its analyses after the sweep.
+            let cache = match flags.get("analysis-cache") {
+                Some(dir) if dir != "true" => AnalysisCache::with_disk(dir),
                 Some(_) => {
                     return Err(CliError::Usage(
                         "--analysis-cache expects a directory".into(),
@@ -530,8 +508,66 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                             .into(),
                     ))
                 }
-                None => explore(&wl, &space, &cfg),
+                None => AnalysisCache::new(),
             };
+            let mut res = explore_with_cache(&wl, &space, &cfg, &cache);
+            if flags.contains_key("analysis-cache")
+                && flags.contains_key("prune-cache")
+            {
+                // Live keys: the whole-workload entry plus one
+                // phase-scoped entry per phase (the per-phase
+                // axis spills those), each under its own
+                // structural fingerprint.
+                let mut live =
+                    vec![(wl.name.clone(), workload_fingerprint(&wl))];
+                for (i, ph) in wl.phases.iter().enumerate() {
+                    live.push((
+                        phase_cache_name(&wl.name, i),
+                        phase_fingerprint(ph),
+                    ));
+                }
+                match cache.prune_disk(&live) {
+                    Ok(0) => {}
+                    Ok(n) => println!(
+                        "pruned {n} stale analysis-cache file(s)"
+                    ),
+                    // Advisory, like the spill itself: a prune
+                    // failure must not fail the sweep.
+                    Err(e) => eprintln!(
+                        "analysis-cache prune failed: {e}"
+                    ),
+                }
+            }
+            // Post-sweep confidence pass: re-simulate only the frontier
+            // points on the event engine, annotate the report, escalate
+            // divergence.
+            let mut diverged = 0usize;
+            if flags.contains_key("sim-verify-frontier") {
+                sim_verify_frontier(&wl, &mut res, &cache);
+                for (&i, v) in &res.sim_verify {
+                    if !v.confirmed() {
+                        diverged += 1;
+                        for d in &v.divergences {
+                            eprintln!(
+                                "  sim-verify DIVERGENCE at {} bounds \
+                                 {:?}: {d}",
+                                res.points[i].point.array_label(),
+                                res.points[i].point.bounds
+                            );
+                        }
+                    }
+                }
+                println!(
+                    "sim-verify: {} frontier point(s) simulated on the \
+                     event engine, {}",
+                    res.sim_verify.len(),
+                    if diverged == 0 {
+                        "all confirmed".to_string()
+                    } else {
+                        format!("{diverged} DIVERGED")
+                    }
+                );
+            }
             println!(
                 "{}: {} points in {:?} ({} failed; cache {} analyses, \
                  {:.0}% hit, {} from disk)",
@@ -594,9 +630,13 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 );
             }
             // Total failure must be loud: empty tables with exit 0 would
-            // read as success to a Makefile or CI step.
+            // read as success to a Makefile or CI step — and so must a
+            // sim-verify divergence (exit 2: the sweep itself succeeded,
+            // but its frontier is not to be trusted).
             Ok(if res.points.is_empty() && !res.failures.is_empty() {
                 1
+            } else if diverged > 0 {
+                2
             } else {
                 0
             })
@@ -834,6 +874,88 @@ mod tests {
             matches!(e, Err(CliError::Usage(_))),
             "oversized per-phase space should be a usage error, got {e:?}"
         );
+    }
+
+    #[test]
+    fn dse_sim_verify_frontier_composes_with_axes() {
+        let _env = crate::dse::verify::env_guard();
+        // Plain sweep, then with both the schedule and per-phase axes
+        // active — the verify pass must reconstruct every frontier
+        // point's exact assignment in all cases.
+        assert_eq!(
+            run_cli(&s(&[
+                "dse", "--workload", "gesummv", "--bounds", "16,16",
+                "--max-pes", "4", "--sim-verify-frontier"
+            ]))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&s(&[
+                "dse", "--workload", "atax", "--bounds", "8,8",
+                "--max-pes", "4", "--schedules", "all", "--phase-shapes",
+                "per-phase", "--sim-verify-frontier"
+            ]))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn dse_sim_verify_annotates_the_report_column() {
+        let _env = crate::dse::verify::env_guard();
+        let dir = std::env::temp_dir()
+            .join(format!("tcpa-cli-simverify-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_str().unwrap().to_string();
+        assert_eq!(
+            run_cli(&s(&[
+                "dse", "--workload", "gesummv", "--bounds", "8,8",
+                "--max-pes", "2", "--sim-verify-frontier", "--out", &dir_s,
+            ]))
+            .unwrap(),
+            0
+        );
+        let csv = std::fs::read_to_string(
+            dir.join("dse_gesummv_frontier.csv"),
+        )
+        .unwrap();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert!(header.ends_with(",sim_cycles"), "header: {header}");
+        for line in lines {
+            let cell = line.rsplit(',').next().unwrap();
+            assert!(
+                !cell.is_empty() && cell.chars().all(|c| c.is_ascii_digit()),
+                "frontier row should carry sim-confirmed cycles: {line}"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dse_sim_verify_divergence_is_a_loud_nonzero_exit() {
+        use crate::dse::verify::FORCE_DIVERGE_ENV;
+        let _env = crate::dse::verify::env_guard();
+        std::env::set_var(FORCE_DIVERGE_ENV, "1");
+        let args = [
+            "dse", "--workload", "gesummv", "--bounds", "8,8",
+            "--max-pes", "2",
+        ];
+        let with_flag = {
+            let mut a = args.to_vec();
+            a.push("--sim-verify-frontier");
+            run_cli(&s(&a))
+        };
+        // Without the flag the seam is inert: no verification, exit 0.
+        let without_flag = run_cli(&s(&args));
+        std::env::remove_var(FORCE_DIVERGE_ENV);
+        assert_eq!(
+            with_flag.unwrap(),
+            2,
+            "a sim-verify divergence must be a distinct non-zero exit"
+        );
+        assert_eq!(without_flag.unwrap(), 0);
     }
 
     #[test]

@@ -170,6 +170,11 @@ pub struct ExploreResult {
     pub cache: CacheStats,
     /// Wall-clock time of the whole exploration.
     pub wall: Duration,
+    /// Event-engine verification verdicts for frontier points, keyed by
+    /// index into [`Self::points`]. Empty unless
+    /// [`super::verify::sim_verify_frontier`] ran
+    /// (`dse --sim-verify-frontier`).
+    pub sim_verify: std::collections::BTreeMap<usize, super::verify::SimVerify>,
 }
 
 impl ExploreResult {
@@ -193,8 +198,10 @@ impl ExploreResult {
 }
 
 /// Per-phase parameter vectors `(N…, p…)` for `point` against the
-/// resolved phase analyses (uniform or heterogeneous).
-fn phase_params(
+/// resolved phase analyses (uniform or heterogeneous). Shared with the
+/// frontier verification pass (`super::verify`), which must reconstruct
+/// exactly the parameters the sweep evaluated.
+pub(crate) fn phase_params(
     phases: &[&SymbolicAnalysis],
     point: &DesignPoint,
 ) -> Vec<Vec<i64>> {
@@ -523,6 +530,7 @@ pub fn explore_with_cache(
         failures,
         cache: cache.stats(),
         wall: t0.elapsed(),
+        sim_verify: std::collections::BTreeMap::new(),
     }
 }
 

@@ -46,6 +46,11 @@
 //!   PE count, DRAM traffic) non-dominated frontiers and knee-point
 //!   picking, replacing the old single-scalar EDP sort. All float
 //!   orderings use `f64::total_cmp` — a NaN cannot panic the sweep.
+//! * [`verify`] — the **frontier confidence pass**
+//!   (`dse --sim-verify-frontier`): re-simulate only the Pareto-frontier
+//!   points on the discrete-event engine at their full design bounds and
+//!   annotate the report with sim-confirmed cycles, escalating any
+//!   divergence from the symbolic prediction.
 //!
 //! ```no_run
 //! use tcpa_energy::dse::{explore, DesignSpace, ExploreConfig};
@@ -65,6 +70,7 @@ pub mod explore;
 pub mod pareto;
 pub mod persist;
 pub mod space;
+pub mod verify;
 
 pub use cache::{
     phase_fingerprint, workload_fingerprint, AnalysisCache, CacheStats,
@@ -79,3 +85,4 @@ pub use space::{
     DesignPoint, DesignSpace, PhasePolicy, PhaseShapes, ScheduleChoice,
     SchedulePolicy,
 };
+pub use verify::{sim_verify_frontier, SimVerify};

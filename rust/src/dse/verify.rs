@@ -1,0 +1,289 @@
+//! Post-sweep frontier verification: re-run the Pareto-frontier points
+//! through the discrete-event simulator (`dse --sim-verify-frontier`).
+//!
+//! The sweep itself never simulates — that is the point of the symbolic
+//! analysis. But frontier points are the ones a user acts on, so this
+//! pass buys cheap end-to-end confidence exactly where it matters: each
+//! frontier point is reconstructed (per-phase mapping, schedule
+//! candidate, parameter vectors — the same resolution the explorer used)
+//! and executed on the event engine ([`crate::sim::EngineKind::Event`])
+//! at its *full design bounds*, which the tick engine could not afford.
+//! The report gains a `sim_cycles` column; any disagreement — counter
+//! mismatch against the symbolic volumes, cycle count differing from the
+//! Eq. 8 latency, or a schedule-causality violation — is a divergence
+//! that the CLI escalates to a non-zero exit.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::SymbolicAnalysis;
+use crate::pra::Workload;
+use crate::sim::{simulate, ArchConfig, EngineKind};
+use crate::workloads::workload_inputs;
+
+use super::cache::AnalysisCache;
+use super::explore::{phase_params, ExploreResult};
+use super::space::{PhaseShapes, ScheduleChoice};
+
+/// Verification outcome of one frontier point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimVerify {
+    /// Simulated total cycles (all phases, chained). `-1` when the point
+    /// could not be simulated at all (see `divergences`).
+    pub cycles: i64,
+    /// Human-readable disagreements between simulation and the symbolic
+    /// prediction. Empty = sim-confirmed.
+    pub divergences: Vec<String>,
+}
+
+impl SimVerify {
+    /// True when simulation confirmed the symbolic prediction.
+    pub fn confirmed(&self) -> bool {
+        self.divergences.is_empty()
+    }
+}
+
+/// Test seam: when this environment variable is set (non-empty), every
+/// verified point additionally reports a synthetic divergence — letting
+/// CLI tests exercise the loud-failure path without constructing a real
+/// symbolic/simulation disagreement (the differential suites exist to
+/// prove there isn't one).
+pub const FORCE_DIVERGE_ENV: &str = "TCPA_SIM_VERIFY_FORCE_DIVERGE";
+
+fn forced_divergence() -> Option<String> {
+    match std::env::var_os(FORCE_DIVERGE_ENV) {
+        Some(v) if !v.is_empty() => Some(format!(
+            "injected divergence ({FORCE_DIVERGE_ENV} is set)"
+        )),
+        _ => None,
+    }
+}
+
+/// Serialize tests that read or set [`FORCE_DIVERGE_ENV`]: the
+/// environment is process-global, so the injection test must not race
+/// tests asserting clean verdicts. Poison-tolerant — a panicked holder
+/// must not cascade.
+#[cfg(test)]
+pub(crate) fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Simulate every frontier point of `res` on the event engine and attach
+/// the outcomes to [`ExploreResult::sim_verify`] (keyed by point index).
+/// `cache` is the sweep's analysis cache — every lookup here is a hit,
+/// so the pass costs simulation time only.
+pub fn sim_verify_frontier(
+    wl: &Workload,
+    res: &mut ExploreResult,
+    cache: &AnalysisCache,
+) {
+    let mut out: BTreeMap<usize, SimVerify> = BTreeMap::new();
+    for &pi in &res.frontier {
+        out.insert(pi, verify_point(wl, res, pi, cache));
+    }
+    res.sim_verify = out;
+}
+
+fn verify_point(
+    wl: &Workload,
+    res: &ExploreResult,
+    pi: usize,
+    cache: &AnalysisCache,
+) -> SimVerify {
+    let ep = &res.points[pi];
+    let point = &ep.point;
+    let mut divergences: Vec<String> = Vec::new();
+
+    // Resolve the per-phase analyses exactly as the explorer did.
+    let uniform_ana;
+    let mut phase_anas = Vec::new();
+    match &point.phase_shapes {
+        PhaseShapes::Uniform => {
+            let (ana, _) = cache.try_get_or_analyze(wl, &point.array);
+            match ana {
+                Ok(a) => uniform_ana = Some(a),
+                Err(msg) => {
+                    return SimVerify {
+                        cycles: -1,
+                        divergences: vec![format!(
+                            "analysis unavailable: {msg}"
+                        )],
+                    }
+                }
+            }
+        }
+        PhaseShapes::PerPhase(shapes) => {
+            uniform_ana = None;
+            for (i, shape) in shapes.iter().enumerate() {
+                let (ana, _) = cache.try_get_or_analyze_phase(wl, i, shape);
+                match ana {
+                    Ok(a) => phase_anas.push(a),
+                    Err(msg) => {
+                        return SimVerify {
+                            cycles: -1,
+                            divergences: vec![format!(
+                                "phase {i} analysis unavailable: {msg}"
+                            )],
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let phases: Vec<&SymbolicAnalysis> = match &uniform_ana {
+        Some(ana) => ana.phases.iter().collect(),
+        None => phase_anas.iter().map(|a| &**a).collect(),
+    };
+    let params = phase_params(&phases, point);
+
+    // Chain phases through the tensor environment, as on real hardware.
+    let mut env = workload_inputs(wl, &params);
+    let mut total_cycles = 0i64;
+    for (phase_idx, (ph, p)) in phases.iter().zip(&params).enumerate() {
+        let schedule = match &point.schedule {
+            ScheduleChoice::First => ph.schedule.clone(),
+            ScheduleChoice::Indices(ix) => {
+                let cands = ph.enumerate_schedules(None);
+                match cands.into_iter().nth(ix[phase_idx]) {
+                    Some(s) => s,
+                    None => {
+                        return SimVerify {
+                            cycles: -1,
+                            divergences: vec![format!(
+                                "phase {phase_idx}: schedule candidate \
+                                 {} out of range",
+                                ix[phase_idx]
+                            )],
+                        }
+                    }
+                }
+            }
+        };
+        let mut arch = ArchConfig::with_array(ph.tiled.mapping.t.clone());
+        // The verify pass checks schedule causality and counts, not
+        // register provisioning — FD sizing is a separate design axis.
+        arch.regs.fd = 1 << 20;
+        arch.engine = EngineKind::Event;
+        let sim = simulate(&ph.tiled.pra, &arch, &schedule, p, &env);
+        total_cycles += sim.cycles;
+        for v in &sim.violations {
+            divergences.push(format!("phase {phase_idx}: {v}"));
+        }
+        let sym = ph.counts_at(p);
+        for d in sim.counters.diff_symbolic(&sym) {
+            divergences.push(format!("phase {phase_idx}: {d}"));
+        }
+        for (name, tensor) in sim.outputs {
+            env.insert(name, tensor);
+        }
+    }
+    if total_cycles != ep.latency_cycles {
+        divergences.push(format!(
+            "simulated {total_cycles} cycles != symbolic latency {}",
+            ep.latency_cycles
+        ));
+    }
+    if let Some(msg) = forced_divergence() {
+        divergences.push(msg);
+    }
+    SimVerify { cycles: total_cycles, divergences }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{
+        explore_with_cache, DesignSpace, ExploreConfig, PhasePolicy,
+        SchedulePolicy,
+    };
+    use crate::workloads;
+
+    fn verified(
+        wl_name: &str,
+        space: DesignSpace,
+    ) -> (ExploreResult, usize) {
+        let wl = workloads::by_name(wl_name).unwrap();
+        let cache = AnalysisCache::new();
+        let mut res = explore_with_cache(
+            &wl,
+            &space,
+            &ExploreConfig::default(),
+            &cache,
+        );
+        assert!(res.failures.is_empty(), "failures: {:?}", res.failures);
+        sim_verify_frontier(&wl, &mut res, &cache);
+        let n = res.frontier.len();
+        (res, n)
+    }
+
+    #[test]
+    fn frontier_points_are_sim_confirmed() {
+        let _env = env_guard();
+        let (res, n) = verified(
+            "gesummv",
+            DesignSpace::new().with_arrays_2d(4).with_bounds(vec![8, 8]),
+        );
+        assert!(n > 0);
+        assert_eq!(res.sim_verify.len(), n, "one verdict per frontier point");
+        for (&i, v) in &res.sim_verify {
+            assert!(res.frontier.contains(&i));
+            assert!(v.confirmed(), "point {i} diverged: {:?}", v.divergences);
+            assert_eq!(
+                v.cycles, res.points[i].latency_cycles,
+                "sim-confirmed cycles echo the symbolic latency"
+            );
+        }
+        // Non-frontier points are never simulated.
+        for i in 0..res.points.len() {
+            assert_eq!(
+                res.sim_verify.contains_key(&i),
+                res.frontier.contains(&i)
+            );
+        }
+    }
+
+    #[test]
+    fn composes_with_schedule_and_phase_axes() {
+        // Multi-phase workload, heterogeneous shapes, full schedule
+        // enumeration: the verify pass must reconstruct each frontier
+        // point's exact (shape, schedule) assignment per phase.
+        let _env = env_guard();
+        let (res, n) = verified(
+            "atax",
+            DesignSpace::new()
+                .with_arrays(vec![vec![1, 2], vec![2, 1]])
+                .with_bounds(vec![8, 8])
+                .with_schedules(SchedulePolicy::All)
+                .with_phase_shapes(PhasePolicy::PerPhase),
+        );
+        assert!(n > 0);
+        for (&i, v) in &res.sim_verify {
+            assert!(v.confirmed(), "point {i} diverged: {:?}", v.divergences);
+        }
+        // The axes actually expanded something worth verifying.
+        assert!(res
+            .sim_verify
+            .keys()
+            .any(|&i| !res.points[i].point.schedule.is_default())
+            || res.points.iter().any(|p| matches!(
+                p.point.phase_shapes,
+                crate::dse::PhaseShapes::PerPhase(_)
+            )));
+    }
+
+    #[test]
+    fn oversized_tiles_verify_too() {
+        let _env = env_guard();
+        let (res, n) = verified(
+            "gesummv",
+            DesignSpace::new()
+                .with_arrays(vec![vec![2, 2]])
+                .with_bounds(vec![8, 8])
+                .with_tile_scales(vec![1, 2]),
+        );
+        assert!(n > 0);
+        for v in res.sim_verify.values() {
+            assert!(v.confirmed(), "diverged: {:?}", v.divergences);
+        }
+    }
+}

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use crate::dse::{EvaluatedPoint, ExploreResult};
+use crate::dse::{EvaluatedPoint, ExploreResult, SimVerify};
 
 use super::csv::{write_csv, CsvTable};
 
@@ -11,7 +11,23 @@ fn fmt_bounds(b: &[i64]) -> String {
     b.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
 }
 
-fn point_row(p: &EvaluatedPoint, on_frontier: bool, knee: bool) -> Vec<String> {
+/// The `sim_cycles` cell: empty when the point was not sim-verified,
+/// the event-engine cycle count when confirmed, and a loud marker when
+/// simulation disagreed with the symbolic prediction.
+fn fmt_sim_verify(v: Option<&SimVerify>) -> String {
+    match v {
+        None => String::new(),
+        Some(v) if v.confirmed() => v.cycles.to_string(),
+        Some(v) => format!("{} DIVERGED({})", v.cycles, v.divergences.len()),
+    }
+}
+
+fn point_row(
+    p: &EvaluatedPoint,
+    on_frontier: bool,
+    knee: bool,
+    sim: Option<&SimVerify>,
+) -> Vec<String> {
     vec![
         p.point.array_label(),
         // Per-phase shape assignment: `uniform`, or one shape per phase
@@ -34,10 +50,11 @@ fn point_row(p: &EvaluatedPoint, on_frontier: bool, knee: bool) -> Vec<String> {
         format!("{:.6e}", p.edp),
         if on_frontier { "yes" } else { "no" }.to_string(),
         if knee { "knee" } else { "" }.to_string(),
+        fmt_sim_verify(sim),
     ]
 }
 
-const HEADER: [&str; 13] = [
+const HEADER: [&str; 14] = [
     "array",
     "phases",
     "pes",
@@ -51,6 +68,9 @@ const HEADER: [&str; 13] = [
     "edp",
     "pareto",
     "knee",
+    // Event-engine confirmation (`dse --sim-verify-frontier`); empty
+    // when the verify pass did not run or the point is off-frontier.
+    "sim_cycles",
 ];
 
 fn is_knee(res: &ExploreResult, i: usize) -> bool {
@@ -61,7 +81,12 @@ fn is_knee(res: &ExploreResult, i: usize) -> bool {
 pub fn dse_points_table(res: &ExploreResult) -> CsvTable {
     let mut t = CsvTable::new(HEADER.to_vec());
     for (i, p) in res.points.iter().enumerate() {
-        t.push(point_row(p, res.frontier.contains(&i), is_knee(res, i)));
+        t.push(point_row(
+            p,
+            res.frontier.contains(&i),
+            is_knee(res, i),
+            res.sim_verify.get(&i),
+        ));
     }
     t
 }
@@ -72,7 +97,12 @@ pub fn dse_frontier_table(res: &ExploreResult) -> CsvTable {
     let mut t = CsvTable::new(HEADER.to_vec());
     for g in &res.groups {
         for &i in &g.frontier {
-            t.push(point_row(&res.points[i], true, is_knee(res, i)));
+            t.push(point_row(
+                &res.points[i],
+                true,
+                is_knee(res, i),
+                res.sim_verify.get(&i),
+            ));
         }
     }
     t
@@ -94,7 +124,12 @@ pub fn dse_frontier_markdown(res: &ExploreResult) -> String {
     for g in &res.groups {
         let mut t = CsvTable::new(HEADER.to_vec());
         for &i in &g.frontier {
-            t.push(point_row(&res.points[i], true, is_knee(res, i)));
+            t.push(point_row(
+                &res.points[i],
+                true,
+                is_knee(res, i),
+                res.sim_verify.get(&i),
+            ));
         }
         let _ = write!(
             out,
@@ -152,6 +187,50 @@ mod tests {
         // uniform shape assignment.
         assert!(all.rows.iter().all(|r| r[6].starts_with("first (")));
         assert!(all.rows.iter().all(|r| r[1] == "uniform"));
+    }
+
+    #[test]
+    fn sim_verify_column_annotates_frontier_rows() {
+        use crate::dse::{sim_verify_frontier, AnalysisCache, SimVerify};
+        let _env = crate::dse::verify::env_guard();
+        let wl = workloads::by_name("gesummv").unwrap();
+        let cache = AnalysisCache::new();
+        let space = DesignSpace::new()
+            .with_arrays_2d(4)
+            .with_bounds(vec![8, 8]);
+        let mut res = crate::dse::explore_with_cache(
+            &wl,
+            &space,
+            &ExploreConfig::default(),
+            &cache,
+        );
+        // Before the pass: the column exists but is empty everywhere.
+        let before = dse_points_table(&res);
+        assert_eq!(before.header[13], "sim_cycles");
+        assert!(before.rows.iter().all(|r| r[13].is_empty()));
+        sim_verify_frontier(&wl, &mut res, &cache);
+        let all = dse_points_table(&res);
+        for (i, r) in all.rows.iter().enumerate() {
+            if res.frontier.contains(&i) {
+                assert_eq!(r[13], res.points[i].latency_cycles.to_string());
+            } else {
+                assert!(r[13].is_empty());
+            }
+        }
+        // A divergence renders loudly.
+        let fi = res.frontier[0];
+        res.sim_verify.insert(
+            fi,
+            SimVerify {
+                cycles: 999,
+                divergences: vec!["synthetic".into()],
+            },
+        );
+        let loud = dse_frontier_table(&res);
+        assert!(loud
+            .rows
+            .iter()
+            .any(|r| r[13] == "999 DIVERGED(1)"));
     }
 
     #[test]

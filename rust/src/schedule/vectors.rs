@@ -193,6 +193,11 @@ impl Schedule {
     /// violated constraint descriptions (empty = schedule valid there).
     /// All arithmetic is `i128`, so a violation can never be masked by
     /// an intermediate overflow wrapping positive.
+    ///
+    /// This is a *point* check — valid exactly at `params`. An
+    /// adversarial `λ^K` of too low a polynomial degree can pass it on
+    /// every small grid yet violate causality at larger bounds; use
+    /// [`Schedule::verify_symbolic`] to cover all parameters at once.
     pub fn verify(&self, tiled: &TiledPra, params: &[i64]) -> Vec<String> {
         let mut bad = Vec::new();
         let lj = self.lambda_j_at(params);
@@ -233,6 +238,233 @@ impl Schedule {
         }
         bad
     }
+
+    /// All-parameter causality check — the symbolic analogue of
+    /// [`Schedule::verify`], closing the gap that a point check only
+    /// covers the parameters it is run at. Two tiers:
+    ///
+    /// 1. **Symbolic proof.** Each feasible tile-crossing row demands
+    ///    `λ^J·d_J + λ^K·d_K ≥ π`. Since `λ^K_ℓ` is a pointwise max of
+    ///    candidate polynomials, the row's slack is bounded by a ∃/∀
+    ///    sweep over candidate selections: for dimensions with
+    ///    `d_K[ℓ] > 0` any single candidate lower-bounds the max (one
+    ///    passing selection suffices), while for `d_K[ℓ] < 0` the max is
+    ///    attained by *some* candidate at every point (all selections
+    ///    must pass). Each selected slack polynomial is certified
+    ///    nonnegative over the analysis context chamber
+    ///    ([`TiledPra::context`]: `p_ℓ ≥ max(1, max|d_ℓ|)`) by
+    ///    substituting `p_ℓ = origin_ℓ + q_ℓ` and requiring every
+    ///    coefficient of the shifted polynomial to be `≥ 0` — a
+    ///    sufficient positivity certificate (see [`shifted_nonneg`]).
+    /// 2. **Escalation ladder.** When the proof is inconclusive — a
+    ///    diagonal tile crossing in [`Schedule::extra`] (its fixpoint
+    ///    value has no closed form), a hand-built `λ^K`, or a genuinely
+    ///    sign-mixed slack — fall back to [`Schedule::verify`] on an
+    ///    exact-cover parameter grid with per-dimension tile sizes
+    ///    `{max(2, dmax_ℓ), 8, 27}`. The geometric rungs separate
+    ///    polynomial orders, so a `λ^K` entry of too low a degree (the
+    ///    adversarial shape that fools small-grid point checks) fails by
+    ///    the top rung.
+    ///
+    /// Returns violation descriptions like `verify`; empty means tier 1
+    /// proved every row, or tier 2 found no violation on the ladder —
+    /// weaker than a proof, but strictly stronger than any single-point
+    /// `verify`, and rejection is always sound (a reported violation is
+    /// a real one at the stated parameters).
+    pub fn verify_symbolic(&self, tiled: &TiledPra) -> Vec<String> {
+        if self.extra.is_empty() && self.rows_prove(tiled) {
+            return Vec::new();
+        }
+        let n = tiled.pra.ndims;
+        let dmax: Vec<i64> = (0..n)
+            .map(|l| {
+                tiled
+                    .statements
+                    .iter()
+                    .map(|s| s.d[l].abs())
+                    .max()
+                    .unwrap_or(0)
+                    .max(1)
+            })
+            .collect();
+        self.ladder_verify(tiled, &dmax)
+    }
+
+    /// Tier 1 of [`Schedule::verify_symbolic`]: true iff every feasible
+    /// tile-crossing row's slack carries a positivity certificate on the
+    /// context chamber. A `false` is *inconclusive*, not a violation —
+    /// the caller escalates to the sampling ladder.
+    fn rows_prove(&self, tiled: &TiledPra) -> bool {
+        let sp = &tiled.pra.space;
+        let np = sp.len();
+        let n = tiled.pra.ndims;
+        let zero = Poly::zero(np);
+        'rows: for st in &tiled.statements {
+            let Some(gamma) = &st.gamma else { continue };
+            // Crossings along unmapped dimensions (t_ℓ = 1) never
+            // execute — the same filter the construction applies.
+            if gamma
+                .iter()
+                .enumerate()
+                .any(|(l, &g)| g != 0 && tiled.mapping.t[l] == 1)
+            {
+                continue;
+            }
+            // This variant's feasibility floor: the context chamber
+            // gives `p_ℓ ≥ max(1, |d_ℓ|)`; a dimension the dependence
+            // crosses *inside* the tile (`γ_ℓ = 0, d_ℓ ≠ 0`) further
+            // needs `p_ℓ ≥ |d_ℓ| + 1` for both endpoints to fit, and
+            // the variant's space is empty below that.
+            let mut origin = vec![1i128; np];
+            for l in 0..n {
+                let d = st.d[l].unsigned_abs() as i128;
+                origin[sp.p_index(l)] = if gamma[l] == 0 && st.d[l] != 0 {
+                    d + 1
+                } else {
+                    d.max(1)
+                };
+            }
+            // slack = λ^J·d_J − π + Σ_ℓ d_K[ℓ]·λ^K_ℓ
+            let mut base = Poly::zero(np);
+            for l in 0..n {
+                self.lambda_j[l]
+                    .mul_into(&Poly::from_affine(&st.dj[l]), &mut base);
+            }
+            base.sub_assign(&Poly::constant(np, self.pi as i128));
+            let pos: Vec<usize> =
+                (0..n).filter(|&l| st.dk[l] > 0).collect();
+            let neg: Vec<usize> =
+                (0..n).filter(|&l| st.dk[l] < 0).collect();
+            // λ^K_ℓ = max(0, candidates): the zero polynomial is always
+            // in the selection set.
+            let sel = |l: usize| -> Vec<&Poly> {
+                self.lambda_k[l]
+                    .iter()
+                    .chain(std::iter::once(&zero))
+                    .collect()
+            };
+            let pos_sel: Vec<Vec<&Poly>> =
+                pos.iter().map(|&l| sel(l)).collect();
+            let neg_sel: Vec<Vec<&Poly>> =
+                neg.iter().map(|&l| sel(l)).collect();
+            let count =
+                |s: &[Vec<&Poly>]| -> usize { s.iter().map(|v| v.len()).product() };
+            if count(&pos_sel).saturating_mul(count(&neg_sel)) > 4096 {
+                return false; // degenerate candidate blow-up: sample instead
+            }
+            let neg_combos = cartesian(&neg_sel);
+            for pc in cartesian(&pos_sel) {
+                let mut with_pos = base.clone();
+                for (c, &l) in pc.iter().zip(&pos) {
+                    with_pos.add_assign(&c.scale(st.dk[l] as i128));
+                }
+                let all_neg_ok = neg_combos.iter().all(|nc| {
+                    let mut slack = with_pos.clone();
+                    for (c, &l) in nc.iter().zip(&neg) {
+                        slack.add_assign(&c.scale(st.dk[l] as i128));
+                    }
+                    shifted_nonneg(&slack, &origin)
+                });
+                if all_neg_ok {
+                    continue 'rows;
+                }
+            }
+            return false;
+        }
+        true
+    }
+
+    /// Tier 2 of [`Schedule::verify_symbolic`]: run the point check over
+    /// an exact-cover grid (`N_ℓ = t_ℓ·p_ℓ`) whose per-dimension tile
+    /// sizes grow geometrically past every small grid a point sweep
+    /// would use.
+    fn ladder_verify(&self, tiled: &TiledPra, dmax: &[i64]) -> Vec<String> {
+        let sp = &tiled.pra.space;
+        let np = sp.len();
+        let n = tiled.pra.ndims;
+        let rungs: Vec<Vec<i64>> = (0..n)
+            .map(|l| {
+                let mut v = vec![dmax[l].max(2), 8, 27];
+                v.retain(|&x| x >= dmax[l]);
+                v.sort_unstable();
+                v.dedup();
+                v
+            })
+            .collect();
+        let mut bad = Vec::new();
+        let mut idx = vec![0usize; n];
+        loop {
+            let p: Vec<i64> = (0..n).map(|l| rungs[l][idx[l]]).collect();
+            let mut params = vec![0i64; np];
+            for l in 0..n {
+                params[sp.p_index(l)] = p[l];
+                params[sp.n_index(l)] = p[l] * tiled.mapping.t[l];
+            }
+            for v in self.verify(tiled, &params) {
+                bad.push(format!("[ladder p={p:?}] {v}"));
+            }
+            // Odometer over the rung grid; done when it wraps.
+            let mut l = 0;
+            loop {
+                if l == n {
+                    return bad;
+                }
+                idx[l] += 1;
+                if idx[l] < rungs[l].len() {
+                    break;
+                }
+                idx[l] = 0;
+                l += 1;
+            }
+        }
+    }
+}
+
+/// Positivity certificate: substitute `x_i = origin_i + q_i` and check
+/// that every coefficient of the shifted polynomial is nonnegative —
+/// then the polynomial is `≥ 0` wherever each parameter is at least its
+/// origin. Sufficient, not necessary: a mixed-sign shifted form is
+/// merely inconclusive (the caller falls back to sampling).
+fn shifted_nonneg(poly: &Poly, origin: &[i128]) -> bool {
+    let np = poly.nparams();
+    let mut shifted = Poly::zero(np);
+    for (expo, coeff) in poly.terms() {
+        let mut term = Poly::constant(np, coeff);
+        for (i, &e) in expo.iter().enumerate() {
+            if e == 0 {
+                continue;
+            }
+            let base = Poly::constant(np, origin[i]).add(
+                &Poly::from_affine(&crate::polyhedral::AffineExpr::param(
+                    np, i,
+                )),
+            );
+            for _ in 0..e {
+                term = term.mul(&base);
+            }
+        }
+        shifted.add_assign(&term);
+    }
+    shifted.terms().all(|(_, c)| c >= 0)
+}
+
+/// All selections of one element per list (a single empty selection when
+/// `lists` is empty) — the ∃/∀ sweep of `Schedule::rows_prove`.
+fn cartesian<'a>(lists: &[Vec<&'a Poly>]) -> Vec<Vec<&'a Poly>> {
+    let mut out = vec![Vec::new()];
+    for list in lists {
+        out = out
+            .into_iter()
+            .flat_map(|prefix| {
+                list.iter().map(move |&c| {
+                    let mut v = prefix.clone();
+                    v.push(c);
+                    v
+                })
+            })
+            .collect();
+    }
+    out
 }
 
 /// All distinct non-zero original dependence vectors of a tiled PRA —
@@ -348,9 +580,9 @@ fn schedule_for_perm(
 /// bounds that only [`Schedule::verify`] checks, exactly as for
 /// [`find_schedule`]'s single pick. `tests/schedule_enum.rs` pins
 /// verify-cleanliness for every candidate of every built-in workload;
-/// callers enumerating *untrusted* PRAs should spot-check candidates
-/// with [`Schedule::verify`] at representative parameters before
-/// trusting their latencies.
+/// callers enumerating *untrusted* PRAs should validate candidates with
+/// [`Schedule::verify_symbolic`] — an all-parameter check, unlike the
+/// per-point [`Schedule::verify`] — before trusting their latencies.
 pub fn enumerate_schedules(
     tiled: &TiledPra,
     pi: i64,
@@ -591,6 +823,106 @@ mod tests {
             .map(|s| s.perm)
             .collect();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn adversarial_lambda_k_passes_point_checks_but_fails_symbolic() {
+        // The untrusted-schedule gap: λ^K = (p0, 5p0−4) against the
+        // correct (p0, p0(p1−1)+1). The impostor's second entry is
+        // degree 1 where the true bound is degree 2, yet it dominates
+        // wherever p0(6−p1) ≥ 5 — which contains every square grid a
+        // small point sweep would try (p = (2,2), (3,3), (4,4) all
+        // pass). Only a check that looks past fixed parameters can
+        // reject it.
+        let tiled = tile_pra(&gesummv(), &ArrayMapping::new(vec![2, 2]));
+        let good = find_schedule(&tiled, 1).unwrap();
+        let np = tiled.pra.space.len();
+        let p0 = Poly::from_affine(&crate::polyhedral::AffineExpr::param(
+            np,
+            tiled.pra.space.p_index(0),
+        ));
+        let fake = Schedule {
+            lambda_k: vec![
+                vec![p0.clone()],
+                vec![p0.scale(5).sub(&Poly::constant(np, 4))],
+            ],
+            ..good.clone()
+        };
+        // The point check is fooled at every small square grid...
+        for params in [[4i64, 4, 2, 2], [6, 6, 3, 3], [8, 8, 4, 4]] {
+            assert!(
+                fake.verify(&tiled, &params).is_empty(),
+                "point check unexpectedly rejected {params:?}"
+            );
+        }
+        // ...but at p = (8,8): λ^K_1 = 36 < p0(p1−1)+1 = 57.
+        assert!(!fake.verify(&tiled, &[16, 16, 8, 8]).is_empty());
+        // The symbolic check rejects it without being told where to
+        // look, and still accepts the genuine schedule.
+        let bad = fake.verify_symbolic(&tiled);
+        assert!(!bad.is_empty(), "adversarial λ^K accepted");
+        assert!(bad.iter().any(|v| v.contains("[ladder")), "{bad:?}");
+        assert!(good.verify_symbolic(&tiled).is_empty());
+    }
+
+    #[test]
+    fn gesummv_schedule_is_proven_not_sampled() {
+        // gesummv has no diagonal tile crossings (`extra` is empty), so
+        // tier 1 alone must prove the schedule — without leaning on the
+        // sampling ladder.
+        let tiled = tile_pra(&gesummv(), &ArrayMapping::new(vec![2, 2]));
+        let s = find_schedule(&tiled, 1).unwrap();
+        assert!(s.extra.is_empty());
+        assert!(s.rows_prove(&tiled), "tier-1 certificate failed");
+        assert!(s.verify_symbolic(&tiled).is_empty());
+    }
+
+    #[test]
+    fn verify_symbolic_accepts_all_builtin_schedules() {
+        // Every enumerated candidate of every built-in workload phase
+        // passes the all-parameter check (by proof or by ladder).
+        for wl in crate::workloads::all() {
+            for phase in &wl.phases {
+                let nd = phase.ndims;
+                let t = match nd {
+                    2 => vec![2, 2],
+                    3 => vec![2, 2, 1],
+                    _ => vec![2; nd],
+                };
+                let tiled = tile_pra(phase, &ArrayMapping::new(t));
+                for s in enumerate_schedules(&tiled, 1, None) {
+                    let bad = s.verify_symbolic(&tiled);
+                    assert!(
+                        bad.is_empty(),
+                        "{} {}: {bad:?}",
+                        phase.name,
+                        s.perm_label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shifted_nonneg_certificate_is_sound_and_shifts_the_origin() {
+        // p0·p1 − 1 at origin (1,1): shifted constant term is 0 — the
+        // certificate accepts exactly because the region starts at 1.
+        let np = 2;
+        let p0 = Poly::from_affine(
+            &crate::polyhedral::AffineExpr::param(np, 0),
+        );
+        let p1 = Poly::from_affine(
+            &crate::polyhedral::AffineExpr::param(np, 1),
+        );
+        let prod_minus_1 = p0.mul(&p1).sub(&Poly::constant(np, 1));
+        assert!(shifted_nonneg(&prod_minus_1, &[1, 1]));
+        // p0 − 2 needs origin ≥ 2: inconclusive at 1, certified at 2.
+        let m2 = p0.sub(&Poly::constant(np, 2));
+        assert!(!shifted_nonneg(&m2, &[1, 1]));
+        assert!(shifted_nonneg(&m2, &[2, 1]));
+        // Genuinely negative polynomials never certify anywhere.
+        let neg = Poly::constant(np, -1);
+        assert!(!shifted_nonneg(&neg, &[5, 5]));
     }
 
     #[test]

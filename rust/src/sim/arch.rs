@@ -43,6 +43,21 @@ impl Default for RegFileSizes {
     }
 }
 
+/// Which simulation engine `sim::simulate` dispatches to. Both produce
+/// bit-identical observables (`tests/event_sim_diff.rs`); they differ
+/// only in scaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Materialize-and-sort oracle: Θ(#iterations) memory, global event
+    /// sort. Trustworthy by its simplicity — the small-bounds reference.
+    #[default]
+    Tick,
+    /// Discrete-event engine (`sim::event`): PEs sleep between scheduled
+    /// start times, idle cycles are skipped, per-iteration cost is
+    /// bounds-independent. The one to use at large bounds.
+    Event,
+}
+
 /// Full architecture description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArchConfig {
@@ -54,6 +69,8 @@ pub struct ArchConfig {
     pub iob_capacity: usize,
     /// Initiation interval the PEs are modulo-scheduled for.
     pub pi: i64,
+    /// Simulation engine selection (default [`EngineKind::Tick`]).
+    pub engine: EngineKind,
 }
 
 impl ArchConfig {
@@ -65,6 +82,7 @@ impl ArchConfig {
             fu: FuLatencies::default(),
             iob_capacity: 16 * 1024,
             pi: 1,
+            engine: EngineKind::default(),
         }
     }
 
@@ -96,6 +114,8 @@ mod tests {
         assert_eq!(a.regs.rd, 16);
         assert_eq!(a.fu.mul, 1);
         assert_eq!(a.pi, 1);
+        // the tick oracle stays the default engine
+        assert_eq!(a.engine, EngineKind::Tick);
     }
 
     #[test]

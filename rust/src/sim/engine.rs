@@ -1,32 +1,37 @@
-//! The cycle-accurate simulation engine.
+//! The cycle-accurate tick simulation engine and the engine dispatch.
 //!
-//! Executes a tiled + scheduled loop nest on the modeled PE array: every
-//! iteration `(j, k)` fires at its schedule time `λ^J·j + λ^K·k` on PE `k`;
-//! its statements execute in intra-iteration topological order, moving real
-//! `f32` values through the register hierarchy. Every operand access is
-//! classified **geometrically** (from the source iteration's tile, not from
-//! the analysis' γ-decomposition) and counted — making the exact-match
-//! comparison against the symbolic counts a genuine two-sided validation.
+//! [`simulate_tick`] executes a tiled + scheduled loop nest on the modeled
+//! PE array: every iteration `(j, k)` fires at its schedule time
+//! `λ^J·j + λ^K·k` on PE `k`; its statements execute in intra-iteration
+//! topological order, moving real `f32` values through the register
+//! hierarchy. Every operand access is classified **geometrically** (from
+//! the source iteration's tile, not from the analysis' γ-decomposition)
+//! and counted — making the exact-match comparison against the symbolic
+//! counts a genuine two-sided validation.
 //!
-//! Simulation cost is Θ(#iterations · #statements): this is the scaling the
-//! symbolic analysis removes (Fig. 4 of the paper).
+//! This engine materializes *every* iteration up front and sorts the full
+//! event list — Θ(#iterations · #statements) time and Θ(#iterations)
+//! memory with a global `O(E log E)` sort. That is the scaling the
+//! symbolic analysis removes (Fig. 4 of the paper), and the reason it
+//! stays the **small-bounds oracle**: the discrete-event engine
+//! ([`super::event`]) produces bit-identical results without the global
+//! sort and is the one to use at large bounds. [`simulate`] dispatches on
+//! [`super::arch::EngineKind`].
 //!
 //! §Perf: the inner loop runs on a *precompiled* statement form
-//! ([`ExecStmt`]) with name→index resolution, pre-evaluated condition
-//! constants, flat-index value stores, and zero per-access allocation —
-//! see EXPERIMENTS.md §Perf for the before/after numbers.
+//! (`sim::exec::ExecStmt`) with name→index resolution, pre-evaluated
+//! condition constants, flat-index value stores, and zero per-access
+//! allocation — see EXPERIMENTS.md §Perf for the before/after numbers.
 
-use std::collections::BTreeMap;
-
-use crate::energy::MemoryClass;
 use crate::polyhedral::k_grid;
-use crate::pra::{Lhs, Op, Operand, Pra, Rdg};
+use crate::pra::Pra;
 use crate::schedule::Schedule;
-use crate::workloads::tensor::{Tensor, TensorEnv};
+use crate::workloads::tensor::TensorEnv;
 
-use super::arch::ArchConfig;
+use super::arch::{ArchConfig, EngineKind};
 use super::counters::AccessCounters;
-use super::stats::{IoStats, PeStats, SimStats};
+use super::exec;
+use super::stats::SimStats;
 
 /// Result of a simulation run.
 #[derive(Debug, Clone)]
@@ -46,52 +51,44 @@ pub struct SimResult {
     pub violations: Vec<String>,
 }
 
-/// Precompiled operand.
-enum ExecArg {
-    /// Input tensor read: resolved tensor index + affine map.
-    Tensor { tidx: usize, rows: Vec<Vec<i64>>, offset: Vec<i64> },
-    /// Intra-iteration variable read (RD).
-    VarZero { vidx: usize },
-    /// Dependence-carrying variable read (FD/ID by geometry).
-    VarDep { vidx: usize, dep: Vec<i64> },
+/// Narrow i128 schedule vectors for iteration enumeration. Schedule
+/// arithmetic is i128 (entries can exceed `i64` at symbolic-scale
+/// parameters); the simulators enumerate iterations, so their parameters
+/// are small by construction and the narrowing is checked, not lossy.
+pub(super) fn narrow_lambda(v: Vec<i128>) -> Vec<i64> {
+    v.into_iter()
+        .map(|x| {
+            i64::try_from(x)
+                .expect("schedule vector overflows i64 in simulation")
+        })
+        .collect()
 }
 
-/// Precompiled left-hand side.
-enum ExecLhs {
-    Var { vidx: usize },
-    Tensor { oidx: usize, rows: Vec<Vec<i64>>, offset: Vec<i64> },
-}
-
-/// Precompiled statement: conditions with parameter constants already
-/// folded, operands resolved to indices.
-struct ExecStmt {
-    qi: usize,
-    /// `Σ a·i + c ≥ 0` per condition.
-    conds: Vec<(Vec<i64>, i64)>,
-    op: Op,
-    adds: u32,
-    muls: u32,
-    args: Vec<ExecArg>,
-    lhs: ExecLhs,
-}
-
-#[inline]
-fn apply_map(rows: &[Vec<i64>], offset: &[i64], i: &[i64], out: &mut Vec<i64>) {
-    out.clear();
-    for (row, off) in rows.iter().zip(offset) {
-        let mut v = *off;
-        for (a, x) in row.iter().zip(i) {
-            v += a * x;
-        }
-        out.push(v);
-    }
-}
-
-/// Run the cycle-accurate simulation.
+/// Run the cycle-accurate simulation with the engine selected by
+/// `arch.engine` ([`EngineKind::Tick`] by default; both engines are
+/// bit-identical in every observable — see `tests/event_sim_diff.rs`).
 ///
 /// `params` is the full `(N…, p…)` vector; `inputs` must contain every
 /// input tensor of the PRA.
 pub fn simulate(
+    pra: &Pra,
+    arch: &ArchConfig,
+    schedule: &Schedule,
+    params: &[i64],
+    inputs: &TensorEnv,
+) -> SimResult {
+    match arch.engine {
+        EngineKind::Tick => simulate_tick(pra, arch, schedule, params, inputs),
+        EngineKind::Event => {
+            super::event::simulate_event(pra, arch, schedule, params, inputs)
+        }
+    }
+}
+
+/// Run the exhaustive tick engine (see module docs): materialize every
+/// iteration's `(start, pe, i)` event, sort by `(start, pe)`, fire in
+/// order.
+pub fn simulate_tick(
     pra: &Pra,
     arch: &ArchConfig,
     schedule: &Schedule,
@@ -103,125 +100,17 @@ pub fn simulate(
     let bounds: Vec<i64> =
         (0..n).map(|l| params[pra.space.n_index(l)]).collect();
     let p: Vec<i64> = (0..n).map(|l| params[pra.space.p_index(l)]).collect();
-    // Schedule vectors are i128 (they can exceed i64 at symbolic-scale
-    // parameters); the simulator enumerates iterations, so its parameters
-    // are small by construction and the narrowing is checked, not lossy.
-    let narrow = |v: Vec<i128>| -> Vec<i64> {
-        v.into_iter()
-            .map(|x| {
-                i64::try_from(x)
-                    .expect("schedule vector overflows i64 in simulation")
-            })
-            .collect()
-    };
-    let lj = narrow(schedule.lambda_j_at(params));
-    let lk = narrow(schedule.lambda_k_at(params));
+    let lj = narrow_lambda(schedule.lambda_j_at(params));
+    let lk = narrow_lambda(schedule.lambda_k_at(params));
 
-    let rdg = Rdg::build(pra);
-    let order = rdg
-        .intra_iteration_order(pra.statements.len())
-        .expect("PRA has an intra-iteration dependence cycle");
-
-    // ---- precompile statements (name → index, fold parameters) ---------
-    let mut var_names: Vec<&str> = Vec::new();
-    let var_idx = |name: &str, names: &[&str]| -> usize {
-        // (resolved against pra's statement LHS set built below)
-        names.iter().position(|&x| x == name).unwrap_or_else(|| {
-            panic!("unknown var {name}")
-        })
-    };
-    for s in &pra.statements {
-        if let Lhs::Var(v) = &s.lhs {
-            if !var_names.iter().any(|&x| x == v.as_str()) {
-                var_names.push(v);
-            }
-        }
-    }
-    let in_names: Vec<&String> = inputs.keys().collect();
-    let in_tensors: Vec<&Tensor> = inputs.values().collect();
-    let mut out_names: Vec<String> = Vec::new();
-    let mut outputs_vec: Vec<Tensor> = Vec::new();
-    for s in &pra.statements {
-        if let Lhs::Tensor { name, .. } = &s.lhs {
-            if !out_names.contains(name) {
-                let decl = pra.tensor(name).expect("undeclared output");
-                out_names.push(name.clone());
-                outputs_vec.push(Tensor::zeros(decl.concrete_shape(params)));
-            }
-        }
-    }
-    let exec: Vec<ExecStmt> = order
-        .iter()
-        .map(|&qi| {
-            let s = &pra.statements[qi];
-            let conds = s
-                .cond
-                .iter()
-                .map(|c| (c.a.clone(), c.konst.eval(params)))
-                .collect();
-            let args = s
-                .args
-                .iter()
-                .map(|a| match a {
-                    Operand::Tensor { name, map } => ExecArg::Tensor {
-                        tidx: in_names
-                            .iter()
-                            .position(|x| x.as_str() == name)
-                            .unwrap_or_else(|| {
-                                panic!("missing input {name}")
-                            }),
-                        rows: map.rows.clone(),
-                        offset: map.offset.clone(),
-                    },
-                    Operand::Var { name, dep } => {
-                        let vidx = var_idx(name, &var_names);
-                        if dep.iter().all(|&d| d == 0) {
-                            ExecArg::VarZero { vidx }
-                        } else {
-                            ExecArg::VarDep { vidx, dep: dep.clone() }
-                        }
-                    }
-                })
-                .collect();
-            let lhs = match &s.lhs {
-                Lhs::Var(name) => {
-                    ExecLhs::Var { vidx: var_idx(name, &var_names) }
-                }
-                Lhs::Tensor { name, map } => ExecLhs::Tensor {
-                    oidx: out_names.iter().position(|x| x == name).unwrap(),
-                    rows: map.rows.clone(),
-                    offset: map.offset.clone(),
-                },
-            };
-            let (adds, muls) =
-                crate::energy::EnergyTable::op_activations(s.op);
-            ExecStmt { qi, conds, op: s.op, adds, muls, args, lhs }
-        })
-        .collect();
-
-    // ---- dense value stores (flat-indexed over the iteration space) ----
-    let iter_total: usize = bounds.iter().product::<i64>() as usize;
-    let mut var_data: Vec<Vec<f32>> =
-        vec![vec![0.0; iter_total]; var_names.len()];
-    let mut var_written: Vec<Vec<bool>> =
-        vec![vec![false; iter_total]; var_names.len()];
-    // start time per flat iteration index (for causality checks)
-    let mut start_by_flat: Vec<i64> = vec![i64::MIN; iter_total];
-    let flat_of = |i: &[i64]| -> Option<usize> {
-        let mut off: i64 = 0;
-        for (&x, &b) in i.iter().zip(&bounds) {
-            if x < 0 || x >= b {
-                return None;
-            }
-            off = off * b + x;
-        }
-        Some(off as usize)
-    };
+    let (prog, outputs) = exec::compile(pra, params, inputs);
+    let mut st =
+        exec::RunState::new(&prog, arch, bounds.clone(), p.clone(), outputs);
 
     // ---- enumerate iterations with start times -------------------------
-    // event = (start, pe_flat, k grid index, i)
+    // event = (start, pe_flat, i)
     let kcells = k_grid(t);
-    let mut events: Vec<(i64, usize, usize, Vec<i64>)> = Vec::new();
+    let mut events: Vec<(i64, usize, Vec<i64>)> = Vec::new();
     for (pe_flat, k) in kcells.iter().enumerate() {
         let mut j = vec![0i64; n];
         'tile: loop {
@@ -229,7 +118,7 @@ pub fn simulate(
             if i.iter().zip(&bounds).all(|(&x, &b)| x < b) {
                 let start: i64 =
                     (0..n).map(|l| lj[l] * j[l] + lk[l] * k[l]).sum();
-                events.push((start, pe_flat, pe_flat, i));
+                events.push((start, pe_flat, i));
             }
             for d in (0..n).rev() {
                 j[d] += 1;
@@ -245,236 +134,22 @@ pub fn simulate(
     }
     events.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
 
-    // ---- state ----------------------------------------------------------
-    let num_pes = arch.num_pes() as usize;
-    let mut counters = AccessCounters::default();
-    // flat per-class counters folded into the BTreeMap at the end
-    let mut mem = [0i128; 6]; // RD FD ID OD IOb DR in MemoryClass::ALL order
-    const RD: usize = 0;
-    const FD: usize = 1;
-    const ID: usize = 2;
-    const OD: usize = 3;
-    const IOB: usize = 4;
-    const DR: usize = 5;
-    let mut pe_stats = vec![PeStats::default(); num_pes];
-    let mut per_tensor_in: Vec<i64> = vec![0; in_names.len()];
-    let mut per_tensor_out: Vec<i64> = vec![0; out_names.len()];
-    let mut io = IoStats::default();
-    let mut violations: Vec<String> = Vec::new();
-    let mut max_hop = 0i64;
-    let mut last_start_per_pe = vec![i64::MIN; num_pes];
-    let mut max_start = 0i64;
     // full rectangular schedule span (Eq. 8 without L_c)
-    let span: i64 = (0..n)
-        .map(|l| lj[l] * (p[l] - 1) + lk[l] * (t[l] - 1))
-        .sum();
+    let span = exec::rect_span(&lj, &lk, &p, t);
     let mut starts_per_cycle: Vec<i32> = vec![0; (span + 1) as usize];
-
-    let mut argbuf: Vec<f32> = Vec::with_capacity(3);
-    let mut idxbuf: Vec<i64> = Vec::with_capacity(4);
-    let mut srcbuf: Vec<i64> = vec![0; n];
-    for (start, pe, _, i) in &events {
-        let iflat = flat_of(i).expect("event inside iteration space");
-        start_by_flat[iflat] = *start;
+    let mut max_start = 0i64;
+    for (start, pe, i) in &events {
         max_start = max_start.max(*start);
         starts_per_cycle[*start as usize] += 1;
-        if last_start_per_pe[*pe] != i64::MIN
-            && start - last_start_per_pe[*pe] < arch.pi
-        {
-            violations.push(format!(
-                "PE {pe}: iterations {} cycles apart (π = {})",
-                start - last_start_per_pe[*pe],
-                arch.pi
-            ));
-        }
-        last_start_per_pe[*pe] = *start;
-        let ps = &mut pe_stats[*pe];
-        ps.iterations += 1;
-        ps.first_cycle = ps.first_cycle.min(*start);
-        ps.last_cycle = ps.last_cycle.max(*start);
-        let k = &kcells[*pe];
-
-        'stmts: for es in &exec {
-            // condition check (constants pre-folded)
-            for (a, c) in &es.conds {
-                let mut v = *c;
-                for (av, xv) in a.iter().zip(i) {
-                    v += av * xv;
-                }
-                if v < 0 {
-                    continue 'stmts;
-                }
-            }
-            counters.executions += 1;
-            argbuf.clear();
-            for arg in &es.args {
-                let v = match arg {
-                    ExecArg::Tensor { tidx, rows, offset } => {
-                        mem[DR] += 1;
-                        mem[IOB] += 1;
-                        mem[ID] += 1;
-                        io.elements_in += 1;
-                        per_tensor_in[*tidx] += 1;
-                        apply_map(rows, offset, i, &mut idxbuf);
-                        in_tensors[*tidx].get(&idxbuf)
-                    }
-                    ExecArg::VarZero { vidx } => {
-                        mem[RD] += 1;
-                        pe_stats[*pe].rd_reads += 1;
-                        debug_assert!(var_written[*vidx][iflat]);
-                        var_data[*vidx][iflat]
-                    }
-                    ExecArg::VarDep { vidx, dep } => {
-                        for l in 0..n {
-                            srcbuf[l] = i[l] - dep[l];
-                        }
-                        // geometric classification by source tile
-                        let mut same_tile = true;
-                        let mut hop = 0i64;
-                        for l in 0..n {
-                            let kt = srcbuf[l].div_euclid(p[l]);
-                            if kt != k[l] {
-                                same_tile = false;
-                                hop += (kt - k[l]).abs();
-                            }
-                        }
-                        if same_tile {
-                            mem[FD] += 1;
-                            pe_stats[*pe].fd_reads += 1;
-                        } else {
-                            mem[ID] += 1;
-                            pe_stats[*pe].id_reads += 1;
-                            max_hop = max_hop.max(hop);
-                        }
-                        match flat_of(&srcbuf) {
-                            Some(soff) if var_written[*vidx][soff] => {
-                                // dynamic causality check
-                                let ss = start_by_flat[soff];
-                                if ss != i64::MIN && ss >= *start {
-                                    violations.push(format!(
-                                        "{}@{i:?}: source {srcbuf:?} starts \
-                                         at {ss} >= {start}",
-                                        pra.statements[es.qi].name
-                                    ));
-                                }
-                                var_data[*vidx][soff]
-                            }
-                            _ => {
-                                violations.push(format!(
-                                    "{}@{i:?}: read of {}[{srcbuf:?}] \
-                                     before definition",
-                                    pra.statements[es.qi].name,
-                                    var_names[*vidx]
-                                ));
-                                0.0
-                            }
-                        }
-                    }
-                };
-                argbuf.push(v);
-            }
-            counters.adds += es.adds as i128;
-            counters.muls += es.muls as i128;
-            let value = es.op.apply(&argbuf);
-            match &es.lhs {
-                ExecLhs::Var { vidx } => {
-                    mem[RD] += 1;
-                    pe_stats[*pe].rd_writes += 1;
-                    var_data[*vidx][iflat] = value;
-                    var_written[*vidx][iflat] = true;
-                }
-                ExecLhs::Tensor { oidx, rows, offset } => {
-                    mem[OD] += 1;
-                    mem[IOB] += 1;
-                    mem[DR] += 1;
-                    io.elements_out += 1;
-                    per_tensor_out[*oidx] += 1;
-                    apply_map(rows, offset, i, &mut idxbuf);
-                    outputs_vec[*oidx].set(&idxbuf, value);
-                }
-            }
-        }
-    }
-
-    // fold flat counters into the public map
-    for (slot, &class) in MemoryClass::ALL.iter().enumerate() {
-        if mem[slot] != 0 {
-            counters.touch_n(class, mem[slot]);
-        }
-    }
-    for (name, cnt) in in_names.iter().zip(&per_tensor_in) {
-        if *cnt > 0 {
-            io.per_tensor_in.insert((*name).clone(), *cnt);
-        }
-    }
-    for (name, cnt) in out_names.iter().zip(&per_tensor_out) {
-        if *cnt > 0 {
-            io.per_tensor_out.insert(name.clone(), *cnt);
-        }
-    }
-    let outputs: TensorEnv = out_names
-        .into_iter()
-        .zip(outputs_vec)
-        .collect::<BTreeMap<_, _>>();
-
-    // ---- static FD-pressure check (FIFO depth = schedule distance) -----
-    let mut fd_pressure = 0i64;
-    for s in &pra.statements {
-        for arg in &s.args {
-            if let Operand::Var { dep, .. } = arg {
-                if dep.iter().any(|&d| d != 0) {
-                    let dist: i64 = dep
-                        .iter()
-                        .zip(&lj)
-                        .map(|(&d, &l)| d * l)
-                        .sum::<i64>()
-                        / arch.pi.max(1);
-                    fd_pressure += dist.max(0);
-                }
-            }
-        }
-    }
-    if fd_pressure > arch.regs.fd as i64 {
-        violations.push(format!(
-            "FD pressure {fd_pressure} exceeds register file size {}",
-            arch.regs.fd
-        ));
+        exec::fire(&prog, &mut st, arch, *start, *pe, &kcells[*pe], i);
+        st.commit_streams();
     }
 
     debug_assert!(max_start <= span);
     let cycles = span + schedule.lc;
     let max_concurrency =
         starts_per_cycle.iter().copied().max().unwrap_or(0) as i64;
-    let total_iters: i128 =
-        pe_stats.iter().map(|s| s.iterations as i128).sum();
-    let utilization = if cycles > 0 {
-        total_iters as f64 / (cycles as f64 * num_pes as f64)
-    } else {
-        0.0
-    };
-    io.max_per_cycle = {
-        let max_stream_args = pra
-            .statements
-            .iter()
-            .map(|s| {
-                s.args
-                    .iter()
-                    .filter(|a| matches!(a, Operand::Tensor { .. }))
-                    .count()
-            })
-            .max()
-            .unwrap_or(0);
-        max_concurrency as usize * max_stream_args
-    };
-    let stats = SimStats {
-        pe: pe_stats,
-        io,
-        max_hop,
-        max_concurrency,
-        utilization,
-        fd_pressure,
-    };
-    SimResult { counters, outputs, cycles, stats, violations }
+    exec::finalize(&prog, st, arch, &lj, cycles, max_concurrency)
 }
 
 #[cfg(test)]
@@ -551,5 +226,29 @@ mod tests {
         assert_eq!(res.stats.io.per_tensor_in["B"], 20);
         assert_eq!(res.stats.io.per_tensor_in["X"], 5);
         assert_eq!(res.stats.io.per_tensor_out["Y"], 4);
+    }
+
+    #[test]
+    fn dispatch_selects_the_event_engine() {
+        // `simulate` with `engine: Event` must agree with the tick
+        // default in every observable (full parity in
+        // tests/event_sim_diff.rs — this pins only the dispatch).
+        let pra = gesummv();
+        let mut arch = ArchConfig::with_array(vec![2, 2]);
+        let tiled = tile_pra(&pra, &arch.mapping);
+        let schedule = find_schedule(&tiled, arch.pi).unwrap();
+        let params = arch.mapping.params_for(&[4, 5]);
+        let inputs = synth_inputs(&[
+            ("A".into(), vec![4, 5]),
+            ("B".into(), vec![4, 5]),
+            ("X".into(), vec![5]),
+        ]);
+        let tick = simulate(&pra, &arch, &schedule, &params, &inputs);
+        arch.engine = EngineKind::Event;
+        let event = simulate(&pra, &arch, &schedule, &params, &inputs);
+        assert_eq!(event.counters, tick.counters);
+        assert_eq!(event.cycles, tick.cycles);
+        assert_eq!(event.outputs, tick.outputs);
+        assert_eq!(event.violations, tick.violations);
     }
 }

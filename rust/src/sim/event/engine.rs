@@ -1,0 +1,289 @@
+//! The discrete-event simulation engine.
+//!
+//! PEs *sleep* between their scheduled start times `λ^J·j + λ^K·k`: the
+//! engine never visits an idle cycle. Each PE keeps at most one pending
+//! iteration-fire event in the [`super::queue::TimeQueue`]; popping a
+//! fire executes the iteration through the shared execution core
+//! (`sim::exec`), posts same-cycle stream-arrival / drain events for its
+//! DRAM traffic, and schedules the PE's next in-bounds iteration. Cost is
+//! `O(#statements + log #PEs)` per *executed* iteration — independent of
+//! the loop bounds and of the schedule span, unlike the tick engine's
+//! global materialize-and-sort.
+//!
+//! ## Bit-identical parity with the tick engine
+//!
+//! The tick engine fires events in stable `(start, pe)` order, where the
+//! per-PE insertion order is the lexicographic `j`-odometer. This engine
+//! reproduces that order exactly:
+//!
+//! * `λ^J·j` is injective on the tile `[0, p)` (it is a π-scaled
+//!   mixed-radix encoding along the schedule permutation), so one PE
+//!   never has two iterations at the same start time — the per-PE order
+//!   is fully determined by sorting the shared [`tile_order`] walk, and
+//!   the *stable* sort preserves the odometer order as its (vacuous)
+//!   tie-break, matching the tick engine's stable global sort.
+//! * Across PEs, same-cycle fires pop in PE-index order (the queue's
+//!   `key`), which is exactly the tick engine's `(start, pe)` sort key.
+//! * `tile_order` is `k`-independent (`start = λ^J·j + λ^K·k` separates),
+//!   so all PEs share one sorted walk and per-PE out-of-bounds skipping
+//!   is a cursor advance, never a re-sort.
+
+use crate::polyhedral::k_grid;
+use crate::pra::Pra;
+use crate::schedule::Schedule;
+use crate::workloads::tensor::TensorEnv;
+
+use super::super::arch::ArchConfig;
+use super::super::engine::{narrow_lambda, SimResult};
+use super::super::exec;
+use super::queue::TimeQueue;
+
+/// Typed simulation events. Fires carry the PE whose cursor names the
+/// iteration; stream events carry the tensor lane they account.
+enum Event {
+    /// A PE wakes up and executes its next scheduled iteration.
+    Fire { pe: usize },
+    /// One element of input tensor `tidx` arrives from DRAM through the
+    /// I/O buffers (posted at the consuming iteration's cycle).
+    Arrival { tidx: usize },
+    /// One element of output tensor `oidx` drains to DRAM.
+    Drain { oidx: usize },
+}
+
+/// Queue keys: fires use the PE index (the tick engine's tie-break);
+/// stream events sort after every same-cycle fire.
+const STREAM_KEY: u64 = 1 << 32;
+
+/// The shared intra-tile walk: every `j ∈ [0, p)` with its intra-tile
+/// start offset `λ^J·j`, stably sorted by that offset. `k`-independent,
+/// so one walk serves every PE.
+fn tile_order(n: usize, p: &[i64], lj: &[i64]) -> Vec<(i64, Vec<i64>)> {
+    let cells: usize = p.iter().product::<i64>() as usize;
+    let mut order: Vec<(i64, Vec<i64>)> = Vec::with_capacity(cells);
+    let mut j = vec![0i64; n];
+    'tile: loop {
+        let jstart: i64 = lj.iter().zip(&j).map(|(l, x)| l * x).sum();
+        order.push((jstart, j.clone()));
+        for d in (0..n).rev() {
+            j[d] += 1;
+            if j[d] < p[d] {
+                continue 'tile;
+            }
+            j[d] = 0;
+            if d == 0 {
+                break 'tile;
+            }
+        }
+    }
+    order.sort_by_key(|e| e.0); // stable: odometer order breaks ties
+    order
+}
+
+/// Advance a PE's cursor to its next in-bounds tile cell (`i = j + p∘k`
+/// inside the loop bounds), starting at `idx`. Each cell is visited at
+/// most once per PE over the whole run, so skipping is amortized O(1).
+fn advance(
+    order: &[(i64, Vec<i64>)],
+    k: &[i64],
+    p: &[i64],
+    bounds: &[i64],
+    mut idx: usize,
+) -> Option<usize> {
+    while idx < order.len() {
+        let j = &order[idx].1;
+        let inside = j
+            .iter()
+            .zip(p)
+            .zip(k)
+            .zip(bounds)
+            .all(|(((jl, pl), kl), bl)| jl + pl * kl < *bl);
+        if inside {
+            return Some(idx);
+        }
+        idx += 1;
+    }
+    None
+}
+
+/// Run the discrete-event engine (see module docs). Same contract and
+/// bit-identical observables as [`crate::sim::simulate_tick`].
+pub fn simulate_event(
+    pra: &Pra,
+    arch: &ArchConfig,
+    schedule: &Schedule,
+    params: &[i64],
+    inputs: &TensorEnv,
+) -> SimResult {
+    let n = pra.ndims;
+    let t = &arch.mapping.t;
+    let bounds: Vec<i64> =
+        (0..n).map(|l| params[pra.space.n_index(l)]).collect();
+    let p: Vec<i64> = (0..n).map(|l| params[pra.space.p_index(l)]).collect();
+    let lj = narrow_lambda(schedule.lambda_j_at(params));
+    let lk = narrow_lambda(schedule.lambda_k_at(params));
+
+    let (prog, outputs) = exec::compile(pra, params, inputs);
+    let mut st =
+        exec::RunState::new(&prog, arch, bounds.clone(), p.clone(), outputs);
+
+    let order = tile_order(n, &p, &lj);
+    let kcells = k_grid(t);
+    let kstart: Vec<i64> = kcells
+        .iter()
+        .map(|k| lk.iter().zip(k).map(|(l, x)| l * x).sum())
+        .collect();
+
+    // Seed: one pending fire per PE with any in-bounds work.
+    let num_pes = kcells.len();
+    let mut cursor = vec![0usize; num_pes];
+    let mut q: TimeQueue<Event> = TimeQueue::new();
+    for pe in 0..num_pes {
+        match advance(&order, &kcells[pe], &p, &bounds, 0) {
+            Some(idx) => {
+                cursor[pe] = idx;
+                q.push(
+                    kstart[pe] + order[idx].0,
+                    pe as u64,
+                    Event::Fire { pe },
+                );
+            }
+            None => cursor[pe] = order.len(),
+        }
+    }
+
+    // Concurrency by run-length counting: fires pop in non-decreasing
+    // time (queue invariant 2), so a span-sized histogram — which would
+    // reintroduce Θ(span) cost at exactly the large bounds this engine
+    // exists for — is unnecessary.
+    let mut cur_time = i64::MIN;
+    let mut cur_run = 0i64;
+    let mut max_concurrency = 0i64;
+    let mut max_start = 0i64;
+    let mut ibuf = vec![0i64; n];
+
+    while let Some((time, ev)) = q.pop() {
+        match ev {
+            Event::Fire { pe } => {
+                let (jstart, j) = &order[cursor[pe]];
+                debug_assert_eq!(kstart[pe] + jstart, time);
+                let k = &kcells[pe];
+                ibuf.clear();
+                for ((jl, pl), kl) in j.iter().zip(&p).zip(k) {
+                    ibuf.push(jl + pl * kl);
+                }
+                exec::fire(&prog, &mut st, arch, time, pe, k, &ibuf);
+                max_start = max_start.max(time);
+                if time != cur_time {
+                    cur_time = time;
+                    cur_run = 0;
+                }
+                cur_run += 1;
+                max_concurrency = max_concurrency.max(cur_run);
+                // Same-cycle stream events for this fire's DRAM traffic.
+                for &tidx in &st.stream_in {
+                    q.push(
+                        time,
+                        STREAM_KEY + 2 * tidx as u64,
+                        Event::Arrival { tidx },
+                    );
+                }
+                for &oidx in &st.stream_out {
+                    q.push(
+                        time,
+                        STREAM_KEY + 2 * oidx as u64 + 1,
+                        Event::Drain { oidx },
+                    );
+                }
+                st.stream_in.clear();
+                st.stream_out.clear();
+                // Put this PE back to sleep until its next iteration.
+                match advance(&order, k, &p, &bounds, cursor[pe] + 1) {
+                    Some(idx) => {
+                        cursor[pe] = idx;
+                        q.push(
+                            kstart[pe] + order[idx].0,
+                            pe as u64,
+                            Event::Fire { pe },
+                        );
+                    }
+                    None => cursor[pe] = order.len(),
+                }
+            }
+            Event::Arrival { tidx } => st.stream_arrive(tidx),
+            Event::Drain { oidx } => st.stream_drain(oidx),
+        }
+    }
+
+    let span = exec::rect_span(&lj, &lk, &p, t);
+    debug_assert!(max_start <= span);
+    let cycles = span + schedule.lc;
+    exec::finalize(&prog, st, arch, &lj, cycles, max_concurrency)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{enumerate_schedules, find_schedule};
+    use crate::sim::simulate_tick;
+    use crate::tiling::tile_pra;
+    use crate::workloads::gesummv::gesummv;
+    use crate::workloads::tensor::synth_inputs;
+
+    fn assert_identical(a: &SimResult, b: &SimResult) {
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.outputs, b.outputs);
+        assert_eq!(a.violations, b.violations);
+        assert_eq!(a.stats.pe, b.stats.pe);
+        assert_eq!(a.stats.io, b.stats.io);
+        assert_eq!(a.stats.max_hop, b.stats.max_hop);
+        assert_eq!(a.stats.max_concurrency, b.stats.max_concurrency);
+        assert_eq!(a.stats.fd_pressure, b.stats.fd_pressure);
+        assert_eq!(
+            a.stats.utilization.to_bits(),
+            b.stats.utilization.to_bits()
+        );
+    }
+
+    #[test]
+    fn gesummv_parity_with_tick_engine() {
+        // Ragged bounds (5×7 on 2×2 ⇒ p = (3,4), partial edge tiles)
+        // exercise the cursor's out-of-bounds skipping.
+        let pra = gesummv();
+        let arch = ArchConfig::with_array(vec![2, 2]);
+        let tiled = tile_pra(&pra, &arch.mapping);
+        for bounds in [[4i64, 5], [5, 7], [8, 8]] {
+            let params = arch.mapping.params_for(&bounds);
+            let inputs = synth_inputs(&[
+                ("A".into(), bounds.to_vec()),
+                ("B".into(), bounds.to_vec()),
+                ("X".into(), vec![bounds[1]]),
+            ]);
+            for s in enumerate_schedules(&tiled, arch.pi, None) {
+                let tick = simulate_tick(&pra, &arch, &s, &params, &inputs);
+                let event =
+                    simulate_event(&pra, &arch, &s, &params, &inputs);
+                assert_identical(&event, &tick);
+            }
+        }
+    }
+
+    #[test]
+    fn tile_order_is_injective_and_sorted() {
+        let pra = gesummv();
+        let arch = ArchConfig::with_array(vec![2, 2]);
+        let tiled = tile_pra(&pra, &arch.mapping);
+        let s = find_schedule(&tiled, arch.pi).unwrap();
+        let params = arch.mapping.params_for(&[9, 7]);
+        let p: Vec<i64> =
+            (0..2).map(|l| params[pra.space.p_index(l)]).collect();
+        let lj = narrow_lambda(s.lambda_j_at(&params));
+        let order = tile_order(2, &p, &lj);
+        assert_eq!(order.len(), (p[0] * p[1]) as usize);
+        // Start offsets strictly increase: λ^J·j is injective on [0, p),
+        // the property the parity argument rests on.
+        for w in order.windows(2) {
+            assert!(w[0].0 < w[1].0, "{:?} !< {:?}", w[0], w[1]);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Discrete-event simulation of the PE array.
+//!
+//! The tick engine ([`crate::sim::simulate_tick`]) materializes and sorts
+//! every iteration of the tile schedule — Θ(#iterations) memory and a
+//! global `O(E log E)` sort, which confines differential validation to
+//! toy bounds. This subsystem replaces the global sort with a
+//! time-ordered event queue ([`queue::TimeQueue`]) in which PEs *sleep*
+//! between their scheduled start times `λ^J·j + λ^K·k` and idle cycles
+//! are never visited. Both engines share one execution core
+//! (`sim::exec`), so every observable — `AccessCounters`, `cycles`,
+//! output tensors, violation reports, per-PE stats — is bit-identical by
+//! construction; `tests/event_sim_diff.rs` enforces this over the full
+//! differential grid.
+//!
+//! Select the engine with [`crate::sim::EngineKind`] on
+//! `ArchConfig::engine`; `dse --sim-verify-frontier` uses the event
+//! engine to re-simulate Pareto-frontier points at full design bounds.
+
+mod engine;
+pub mod queue;
+
+pub use engine::simulate_event;
+pub use queue::TimeQueue;

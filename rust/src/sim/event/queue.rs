@@ -1,0 +1,196 @@
+//! The time-ordered event queue: a hand-rolled binary min-heap keyed by
+//! `(time, key, seq)`.
+//!
+//! Invariants the engine relies on:
+//!
+//! 1. **Deterministic total order.** Entries pop in ascending `time`;
+//!    ties break on the caller-supplied `key` (the event's identity — PE
+//!    index for fires, stream lane for arrivals/drains) and then on
+//!    insertion order (`seq`). No two pops are ever order-ambiguous, so a
+//!    simulation run is a pure function of its inputs.
+//! 2. **Monotone pops.** [`TimeQueue::pop`] never returns a time earlier
+//!    than a previously popped one *provided* callers only push at or
+//!    after the current time — the discrete-event contract. The engine
+//!    exploits this to compute concurrency by run-length counting instead
+//!    of a span-sized histogram.
+//! 3. **No capacity coupling to model time.** Memory is proportional to
+//!    the number of *pending* events (≤ one fire per PE + in-flight
+//!    stream events), never to the schedule span — idle cycles cost
+//!    nothing, which is the point of the event-driven engine.
+
+/// One pending entry.
+struct Entry<T> {
+    time: i64,
+    key: u64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> Entry<T> {
+    #[inline]
+    fn rank(&self) -> (i64, u64, u64) {
+        (self.time, self.key, self.seq)
+    }
+}
+
+/// A deterministic binary min-heap of timed events.
+pub struct TimeQueue<T> {
+    heap: Vec<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> Default for TimeQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> TimeQueue<T> {
+    /// An empty queue.
+    pub fn new() -> Self {
+        TimeQueue { heap: Vec::new(), seq: 0 }
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `item` at `time`. `key` breaks same-time ties
+    /// deterministically (lower keys pop first); insertion order breaks
+    /// exact `(time, key)` collisions.
+    pub fn push(&mut self, time: i64, key: u64, item: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, key, seq, item });
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    /// Remove and return the earliest event as `(time, item)`.
+    pub fn pop(&mut self) -> Option<(i64, T)> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let e = self.heap.pop().expect("non-empty heap");
+        if !self.heap.is_empty() {
+            self.sift_down(0);
+        }
+        Some((e.time, e.item))
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<i64> {
+        self.heap.first().map(|e| e.time)
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].rank() < self.heap[parent].rank() {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < n && self.heap[l].rank() < self.heap[smallest].rank() {
+                smallest = l;
+            }
+            if r < n && self.heap[r].rank() < self.heap[smallest].rank() {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = TimeQueue::new();
+        for (t, v) in [(5i64, "e"), (1, "a"), (3, "c"), (2, "b"), (4, "d")] {
+            q.push(t, 0, v);
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.peek_time(), Some(1));
+        let popped: Vec<(i64, &str)> =
+            std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(
+            popped,
+            vec![(1, "a"), (2, "b"), (3, "c"), (4, "d"), (5, "e")]
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_time_breaks_on_key_then_insertion() {
+        let mut q = TimeQueue::new();
+        q.push(7, 2, "key2-first");
+        q.push(7, 1, "key1");
+        q.push(7, 2, "key2-second");
+        q.push(6, 9, "earlier");
+        let popped: Vec<&str> =
+            std::iter::from_fn(|| q.pop()).map(|(_, v)| v).collect();
+        assert_eq!(
+            popped,
+            vec!["earlier", "key1", "key2-first", "key2-second"]
+        );
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_sorted() {
+        let mut q = TimeQueue::new();
+        q.push(10, 0, 10);
+        q.push(2, 0, 2);
+        assert_eq!(q.pop(), Some((2, 2)));
+        // pushes at the current time are allowed (stream events fire in
+        // the same cycle as their producing iteration)
+        q.push(2, 1, 22);
+        q.push(5, 0, 5);
+        assert_eq!(q.pop(), Some((2, 22)));
+        assert_eq!(q.pop(), Some((5, 5)));
+        assert_eq!(q.pop(), Some((10, 10)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn large_random_like_sequence_is_totally_ordered() {
+        // Deterministic pseudo-random times via an LCG; the queue must
+        // produce a non-decreasing time sequence over many entries.
+        let mut q = TimeQueue::new();
+        let mut x: u64 = 0x243f6a8885a308d3;
+        for i in 0..1000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            q.push((x >> 40) as i64, i % 7, i);
+        }
+        let mut last = i64::MIN;
+        let mut count = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+            count += 1;
+        }
+        assert_eq!(count, 1000);
+    }
+}

@@ -1,0 +1,542 @@
+//! Shared execution core of the two simulation engines.
+//!
+//! The exhaustive tick engine ([`super::engine::simulate_tick`]) and the
+//! discrete-event engine ([`super::event::simulate_event`]) execute the
+//! *same* precompiled statement program ([`Program`]) with the same
+//! per-iteration firing semantics and accounting ([`fire`] on a shared
+//! [`RunState`]); they differ only in how the stream of
+//! `(start, pe, iteration)` fire events is produced — global
+//! materialize-and-sort versus a time-ordered event queue. Keeping every
+//! observable side effect here makes the engine differential
+//! (`tests/event_sim_diff.rs`) a test of exactly the scheduling logic.
+//!
+//! I/O streaming is decoupled from firing: a fire records which tensor
+//! elements arrived from / drained to DRAM in [`RunState::stream_in`] /
+//! [`RunState::stream_out`], and the engine decides *when* to account
+//! them — immediately ([`RunState::commit_streams`], the tick engine) or
+//! via stream-arrival / drain events popped from the time queue
+//! ([`RunState::stream_arrive`] / [`RunState::stream_drain`], the event
+//! engine). Both paths are pure sums at the same timestamp, so totals are
+//! identical by construction.
+
+use std::collections::BTreeMap;
+
+use crate::energy::MemoryClass;
+use crate::pra::{Lhs, Op, Operand, Pra, Rdg};
+use crate::workloads::tensor::{Tensor, TensorEnv};
+
+use super::arch::ArchConfig;
+use super::counters::AccessCounters;
+use super::engine::SimResult;
+use super::stats::{IoStats, PeStats, SimStats};
+
+/// Precompiled operand.
+pub(super) enum ExecArg {
+    /// Input tensor read: resolved tensor index + affine map.
+    Tensor { tidx: usize, rows: Vec<Vec<i64>>, offset: Vec<i64> },
+    /// Intra-iteration variable read (RD).
+    VarZero { vidx: usize },
+    /// Dependence-carrying variable read (FD/ID by geometry).
+    VarDep { vidx: usize, dep: Vec<i64> },
+}
+
+/// Precompiled left-hand side.
+pub(super) enum ExecLhs {
+    Var { vidx: usize },
+    Tensor { oidx: usize, rows: Vec<Vec<i64>>, offset: Vec<i64> },
+}
+
+/// Precompiled statement: conditions with parameter constants already
+/// folded, operands resolved to indices.
+pub(super) struct ExecStmt {
+    pub qi: usize,
+    /// `Σ a·i + c ≥ 0` per condition.
+    pub conds: Vec<(Vec<i64>, i64)>,
+    pub op: Op,
+    pub adds: u32,
+    pub muls: u32,
+    pub args: Vec<ExecArg>,
+    pub lhs: ExecLhs,
+}
+
+#[inline]
+pub(super) fn apply_map(
+    rows: &[Vec<i64>],
+    offset: &[i64],
+    i: &[i64],
+    out: &mut Vec<i64>,
+) {
+    out.clear();
+    for (row, off) in rows.iter().zip(offset) {
+        let mut v = *off;
+        for (a, x) in row.iter().zip(i) {
+            v += a * x;
+        }
+        out.push(v);
+    }
+}
+
+/// The precompiled program: statements in intra-iteration topological
+/// order plus the resolved name tables.
+pub(super) struct Program<'a> {
+    pub pra: &'a Pra,
+    pub exec: Vec<ExecStmt>,
+    pub var_names: Vec<&'a str>,
+    pub in_names: Vec<&'a String>,
+    pub in_tensors: Vec<&'a Tensor>,
+    pub out_names: Vec<String>,
+}
+
+/// Precompile a PRA for execution at `params` (name → index resolution,
+/// parameter folding) and allocate the zeroed output tensors.
+pub(super) fn compile<'a>(
+    pra: &'a Pra,
+    params: &[i64],
+    inputs: &'a TensorEnv,
+) -> (Program<'a>, Vec<Tensor>) {
+    let rdg = Rdg::build(pra);
+    let order = rdg
+        .intra_iteration_order(pra.statements.len())
+        .expect("PRA has an intra-iteration dependence cycle");
+
+    let mut var_names: Vec<&str> = Vec::new();
+    let var_idx = |name: &str, names: &[&str]| -> usize {
+        names
+            .iter()
+            .position(|&x| x == name)
+            .unwrap_or_else(|| panic!("unknown var {name}"))
+    };
+    for s in &pra.statements {
+        if let Lhs::Var(v) = &s.lhs {
+            if !var_names.iter().any(|&x| x == v.as_str()) {
+                var_names.push(v);
+            }
+        }
+    }
+    let in_names: Vec<&String> = inputs.keys().collect();
+    let in_tensors: Vec<&Tensor> = inputs.values().collect();
+    let mut out_names: Vec<String> = Vec::new();
+    let mut outputs: Vec<Tensor> = Vec::new();
+    for s in &pra.statements {
+        if let Lhs::Tensor { name, .. } = &s.lhs {
+            if !out_names.contains(name) {
+                let decl = pra.tensor(name).expect("undeclared output");
+                out_names.push(name.clone());
+                outputs.push(Tensor::zeros(decl.concrete_shape(params)));
+            }
+        }
+    }
+    let exec: Vec<ExecStmt> = order
+        .iter()
+        .map(|&qi| {
+            let s = &pra.statements[qi];
+            let conds = s
+                .cond
+                .iter()
+                .map(|c| (c.a.clone(), c.konst.eval(params)))
+                .collect();
+            let args = s
+                .args
+                .iter()
+                .map(|a| match a {
+                    Operand::Tensor { name, map } => ExecArg::Tensor {
+                        tidx: in_names
+                            .iter()
+                            .position(|x| x.as_str() == name)
+                            .unwrap_or_else(|| {
+                                panic!("missing input {name}")
+                            }),
+                        rows: map.rows.clone(),
+                        offset: map.offset.clone(),
+                    },
+                    Operand::Var { name, dep } => {
+                        let vidx = var_idx(name, &var_names);
+                        if dep.iter().all(|&d| d == 0) {
+                            ExecArg::VarZero { vidx }
+                        } else {
+                            ExecArg::VarDep { vidx, dep: dep.clone() }
+                        }
+                    }
+                })
+                .collect();
+            let lhs = match &s.lhs {
+                Lhs::Var(name) => {
+                    ExecLhs::Var { vidx: var_idx(name, &var_names) }
+                }
+                Lhs::Tensor { name, map } => ExecLhs::Tensor {
+                    oidx: out_names.iter().position(|x| x == name).unwrap(),
+                    rows: map.rows.clone(),
+                    offset: map.offset.clone(),
+                },
+            };
+            let (adds, muls) =
+                crate::energy::EnergyTable::op_activations(s.op);
+            ExecStmt { qi, conds, op: s.op, adds, muls, args, lhs }
+        })
+        .collect();
+    (Program { pra, exec, var_names, in_names, in_tensors, out_names }, outputs)
+}
+
+/// Flat per-class counter slots, folded into the public `BTreeMap` by
+/// [`finalize`] (in `MemoryClass::ALL` order).
+pub(super) const RD: usize = 0;
+pub(super) const FD: usize = 1;
+pub(super) const ID: usize = 2;
+pub(super) const OD: usize = 3;
+pub(super) const IOB: usize = 4;
+pub(super) const DR: usize = 5;
+
+/// All mutable state of a simulation run: value stores, counters,
+/// statistics, violations, and scratch buffers. Engine-agnostic — every
+/// observable a [`SimResult`] reports lives here (except the cycle count
+/// and concurrency profile, which each engine derives from its own event
+/// ordering).
+pub(super) struct RunState {
+    n: usize,
+    bounds: Vec<i64>,
+    p: Vec<i64>,
+    pub mem: [i128; 6],
+    pub counters: AccessCounters,
+    pub pe_stats: Vec<PeStats>,
+    pub per_tensor_in: Vec<i64>,
+    pub per_tensor_out: Vec<i64>,
+    pub io: IoStats,
+    pub violations: Vec<String>,
+    pub max_hop: i64,
+    pub last_start_per_pe: Vec<i64>,
+    pub outputs: Vec<Tensor>,
+    /// Tensor input indices streamed in by the most recent [`fire`].
+    pub stream_in: Vec<usize>,
+    /// Output tensor indices streamed out by the most recent [`fire`].
+    pub stream_out: Vec<usize>,
+    var_data: Vec<Vec<f32>>,
+    var_written: Vec<Vec<bool>>,
+    start_by_flat: Vec<i64>,
+    argbuf: Vec<f32>,
+    idxbuf: Vec<i64>,
+    srcbuf: Vec<i64>,
+}
+
+impl RunState {
+    pub(super) fn new(
+        prog: &Program,
+        arch: &ArchConfig,
+        bounds: Vec<i64>,
+        p: Vec<i64>,
+        outputs: Vec<Tensor>,
+    ) -> RunState {
+        let n = bounds.len();
+        let iter_total: usize = bounds.iter().product::<i64>() as usize;
+        let num_pes = arch.num_pes() as usize;
+        RunState {
+            n,
+            bounds,
+            p,
+            mem: [0; 6],
+            counters: AccessCounters::default(),
+            pe_stats: vec![PeStats::default(); num_pes],
+            per_tensor_in: vec![0; prog.in_names.len()],
+            per_tensor_out: vec![0; prog.out_names.len()],
+            io: IoStats::default(),
+            violations: Vec::new(),
+            max_hop: 0,
+            last_start_per_pe: vec![i64::MIN; num_pes],
+            outputs,
+            stream_in: Vec::with_capacity(4),
+            stream_out: Vec::with_capacity(2),
+            var_data: vec![vec![0.0; iter_total]; prog.var_names.len()],
+            var_written: vec![vec![false; iter_total]; prog.var_names.len()],
+            start_by_flat: vec![i64::MIN; iter_total],
+            argbuf: Vec::with_capacity(3),
+            idxbuf: Vec::with_capacity(4),
+            srcbuf: vec![0; n],
+        }
+    }
+
+    fn flat_of(&self, i: &[i64]) -> Option<usize> {
+        let mut off: i64 = 0;
+        for (&x, &b) in i.iter().zip(&self.bounds) {
+            if x < 0 || x >= b {
+                return None;
+            }
+            off = off * b + x;
+        }
+        Some(off as usize)
+    }
+
+    /// Account the most recent fire's tensor traffic immediately (the
+    /// tick engine's in-line streaming path).
+    pub(super) fn commit_streams(&mut self) {
+        let RunState {
+            stream_in, stream_out, io, per_tensor_in, per_tensor_out, ..
+        } = self;
+        for &t in stream_in.iter() {
+            io.elements_in += 1;
+            per_tensor_in[t] += 1;
+        }
+        for &o in stream_out.iter() {
+            io.elements_out += 1;
+            per_tensor_out[o] += 1;
+        }
+        stream_in.clear();
+        stream_out.clear();
+    }
+
+    /// One element of input tensor `tidx` arrived from DRAM (the event
+    /// engine's stream-arrival handler).
+    pub(super) fn stream_arrive(&mut self, tidx: usize) {
+        self.io.elements_in += 1;
+        self.per_tensor_in[tidx] += 1;
+    }
+
+    /// One element of output tensor `oidx` drained to DRAM (the event
+    /// engine's drain handler).
+    pub(super) fn stream_drain(&mut self, oidx: usize) {
+        self.io.elements_out += 1;
+        self.per_tensor_out[oidx] += 1;
+    }
+}
+
+/// Fire iteration `i` on PE `pe` (tile cell `k`) at schedule time
+/// `start`: π-spacing check, then every statement in topological order —
+/// condition predication, operand reads with geometric FD/ID
+/// classification and causality checks, the operation, and the
+/// register/tensor write-back. Tensor traffic is recorded in
+/// `stream_in`/`stream_out` for the engine to account (see module docs).
+pub(super) fn fire(
+    prog: &Program,
+    st: &mut RunState,
+    arch: &ArchConfig,
+    start: i64,
+    pe: usize,
+    k: &[i64],
+    i: &[i64],
+) {
+    let n = st.n;
+    let iflat = st.flat_of(i).expect("event inside iteration space");
+    st.start_by_flat[iflat] = start;
+    st.stream_in.clear();
+    st.stream_out.clear();
+    if st.last_start_per_pe[pe] != i64::MIN
+        && start - st.last_start_per_pe[pe] < arch.pi
+    {
+        st.violations.push(format!(
+            "PE {pe}: iterations {} cycles apart (π = {})",
+            start - st.last_start_per_pe[pe],
+            arch.pi
+        ));
+    }
+    st.last_start_per_pe[pe] = start;
+    let ps = &mut st.pe_stats[pe];
+    ps.iterations += 1;
+    ps.first_cycle = ps.first_cycle.min(start);
+    ps.last_cycle = ps.last_cycle.max(start);
+
+    'stmts: for es in &prog.exec {
+        // condition check (constants pre-folded)
+        for (a, c) in &es.conds {
+            let mut v = *c;
+            for (av, xv) in a.iter().zip(i) {
+                v += av * xv;
+            }
+            if v < 0 {
+                continue 'stmts;
+            }
+        }
+        st.counters.executions += 1;
+        st.argbuf.clear();
+        for arg in &es.args {
+            let v = match arg {
+                ExecArg::Tensor { tidx, rows, offset } => {
+                    st.mem[DR] += 1;
+                    st.mem[IOB] += 1;
+                    st.mem[ID] += 1;
+                    st.stream_in.push(*tidx);
+                    apply_map(rows, offset, i, &mut st.idxbuf);
+                    prog.in_tensors[*tidx].get(&st.idxbuf)
+                }
+                ExecArg::VarZero { vidx } => {
+                    st.mem[RD] += 1;
+                    st.pe_stats[pe].rd_reads += 1;
+                    debug_assert!(st.var_written[*vidx][iflat]);
+                    st.var_data[*vidx][iflat]
+                }
+                ExecArg::VarDep { vidx, dep } => {
+                    for l in 0..n {
+                        st.srcbuf[l] = i[l] - dep[l];
+                    }
+                    // geometric classification by source tile
+                    let mut same_tile = true;
+                    let mut hop = 0i64;
+                    for l in 0..n {
+                        let kt = st.srcbuf[l].div_euclid(st.p[l]);
+                        if kt != k[l] {
+                            same_tile = false;
+                            hop += (kt - k[l]).abs();
+                        }
+                    }
+                    if same_tile {
+                        st.mem[FD] += 1;
+                        st.pe_stats[pe].fd_reads += 1;
+                    } else {
+                        st.mem[ID] += 1;
+                        st.pe_stats[pe].id_reads += 1;
+                        st.max_hop = st.max_hop.max(hop);
+                    }
+                    match st.flat_of(&st.srcbuf) {
+                        Some(soff) if st.var_written[*vidx][soff] => {
+                            // dynamic causality check
+                            let ss = st.start_by_flat[soff];
+                            if ss != i64::MIN && ss >= start {
+                                st.violations.push(format!(
+                                    "{}@{i:?}: source {:?} starts \
+                                     at {ss} >= {start}",
+                                    prog.pra.statements[es.qi].name,
+                                    st.srcbuf
+                                ));
+                            }
+                            st.var_data[*vidx][soff]
+                        }
+                        _ => {
+                            st.violations.push(format!(
+                                "{}@{i:?}: read of {}[{:?}] \
+                                 before definition",
+                                prog.pra.statements[es.qi].name,
+                                prog.var_names[*vidx],
+                                st.srcbuf
+                            ));
+                            0.0
+                        }
+                    }
+                }
+            };
+            st.argbuf.push(v);
+        }
+        st.counters.adds += es.adds as i128;
+        st.counters.muls += es.muls as i128;
+        let value = es.op.apply(&st.argbuf);
+        match &es.lhs {
+            ExecLhs::Var { vidx } => {
+                st.mem[RD] += 1;
+                st.pe_stats[pe].rd_writes += 1;
+                st.var_data[*vidx][iflat] = value;
+                st.var_written[*vidx][iflat] = true;
+            }
+            ExecLhs::Tensor { oidx, rows, offset } => {
+                st.mem[OD] += 1;
+                st.mem[IOB] += 1;
+                st.mem[DR] += 1;
+                st.stream_out.push(*oidx);
+                apply_map(rows, offset, i, &mut st.idxbuf);
+                st.outputs[*oidx].set(&st.idxbuf, value);
+            }
+        }
+    }
+}
+
+/// The full rectangular schedule span `λ^J·(p−1) + λ^K·(t−1)` (Eq. 8
+/// without `L_c`) — both engines' cycle anchor.
+pub(super) fn rect_span(lj: &[i64], lk: &[i64], p: &[i64], t: &[i64]) -> i64 {
+    (0..p.len()).map(|l| lj[l] * (p[l] - 1) + lk[l] * (t[l] - 1)).sum()
+}
+
+/// Fold the run state into a [`SimResult`]: public counter map,
+/// per-tensor traffic, static FD-pressure check, utilization and
+/// streaming high-water derived from `max_concurrency`.
+pub(super) fn finalize(
+    prog: &Program,
+    mut st: RunState,
+    arch: &ArchConfig,
+    lj: &[i64],
+    cycles: i64,
+    max_concurrency: i64,
+) -> SimResult {
+    debug_assert!(
+        st.stream_in.is_empty() && st.stream_out.is_empty(),
+        "engine finished with unaccounted stream traffic"
+    );
+    for (slot, &class) in MemoryClass::ALL.iter().enumerate() {
+        if st.mem[slot] != 0 {
+            st.counters.touch_n(class, st.mem[slot]);
+        }
+    }
+    for (name, cnt) in prog.in_names.iter().zip(&st.per_tensor_in) {
+        if *cnt > 0 {
+            st.io.per_tensor_in.insert((*name).clone(), *cnt);
+        }
+    }
+    for (name, cnt) in prog.out_names.iter().zip(&st.per_tensor_out) {
+        if *cnt > 0 {
+            st.io.per_tensor_out.insert(name.clone(), *cnt);
+        }
+    }
+    let outputs: TensorEnv = prog
+        .out_names
+        .iter()
+        .cloned()
+        .zip(st.outputs)
+        .collect::<BTreeMap<_, _>>();
+
+    // ---- static FD-pressure check (FIFO depth = schedule distance) -----
+    let mut fd_pressure = 0i64;
+    for s in &prog.pra.statements {
+        for arg in &s.args {
+            if let Operand::Var { dep, .. } = arg {
+                if dep.iter().any(|&d| d != 0) {
+                    let dist: i64 = dep
+                        .iter()
+                        .zip(lj)
+                        .map(|(&d, &l)| d * l)
+                        .sum::<i64>()
+                        / arch.pi.max(1);
+                    fd_pressure += dist.max(0);
+                }
+            }
+        }
+    }
+    if fd_pressure > arch.regs.fd as i64 {
+        st.violations.push(format!(
+            "FD pressure {fd_pressure} exceeds register file size {}",
+            arch.regs.fd
+        ));
+    }
+
+    let num_pes = arch.num_pes() as usize;
+    let total_iters: i128 =
+        st.pe_stats.iter().map(|s| s.iterations as i128).sum();
+    let utilization = if cycles > 0 {
+        total_iters as f64 / (cycles as f64 * num_pes as f64)
+    } else {
+        0.0
+    };
+    st.io.max_per_cycle = {
+        let max_stream_args = prog
+            .pra
+            .statements
+            .iter()
+            .map(|s| {
+                s.args
+                    .iter()
+                    .filter(|a| matches!(a, Operand::Tensor { .. }))
+                    .count()
+            })
+            .max()
+            .unwrap_or(0);
+        max_concurrency as usize * max_stream_args
+    };
+    let stats = SimStats {
+        pe: st.pe_stats,
+        io: st.io,
+        max_hop: st.max_hop,
+        max_concurrency,
+        utilization,
+        fd_pressure,
+    };
+    SimResult {
+        counters: st.counters,
+        outputs,
+        cycles,
+        stats,
+        violations: st.violations,
+    }
+}

@@ -9,9 +9,12 @@
 pub mod arch;
 pub mod counters;
 pub mod engine;
+pub mod event;
+mod exec;
 pub mod stats;
 
-pub use arch::{ArchConfig, FuLatencies, RegFileSizes};
+pub use arch::{ArchConfig, EngineKind, FuLatencies, RegFileSizes};
 pub use counters::AccessCounters;
-pub use engine::{simulate, SimResult};
+pub use engine::{simulate, simulate_tick, SimResult};
+pub use event::simulate_event;
 pub use stats::{IoStats, PeStats, SimStats};

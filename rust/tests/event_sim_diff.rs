@@ -1,0 +1,188 @@
+//! Differential suite for the discrete-event simulation engine
+//! (`sim::event`): the tick engine is the oracle.
+//!
+//! 1. **Full-grid parity** — for every built-in workload × array shape ×
+//!    loop-bound vector × enumerated schedule candidate, the event
+//!    engine's result is *bit-identical* to the tick engine's: counters,
+//!    cycles, outputs, violations, per-PE stats, I/O stats, concurrency
+//!    and the utilization float (compared by bits). The two engines
+//!    share the execution core (`sim::exec`) and differ only in how
+//!    events are produced, so any divergence is an ordering bug.
+//! 2. **Per-phase chaining parity** — heterogeneous per-phase mappings
+//!    (the DSE per-phase axis) with phase outputs fed forward, verified
+//!    with the *event* engine's outputs driving the chain.
+//! 3. **Scaling** — the event engine runs at bounds ≥ 100× the parity
+//!    grids (800×800 where the grids stop at 8) and still reproduces
+//!    the symbolic access counts and the Eq. 8 latency exactly. The
+//!    tick engine is deliberately absent here: materializing and
+//!    sorting the full iteration space is what the event engine exists
+//!    to avoid.
+
+use tcpa_energy::analysis::SymbolicAnalysis;
+use tcpa_energy::schedule::{enumerate_schedules, find_schedule, latency};
+use tcpa_energy::sim::{simulate_event, simulate_tick, ArchConfig, SimResult};
+use tcpa_energy::tiling::{pad_array, pad_bounds, tile_pra, ArrayMapping};
+use tcpa_energy::workloads::{self, workload_inputs};
+
+/// Loop-bound vectors per workload (the `schedule_enum` grid);
+/// `mvt`/`syrk` are square-only by repo convention.
+fn bounds_for(wl_name: &str, ndims: usize) -> Vec<Vec<i64>> {
+    let mut out = vec![
+        pad_bounds(&[4, 4], ndims),
+        pad_bounds(&[8, 8], ndims),
+        pad_bounds(&[4, 9], ndims),
+        pad_bounds(&[9, 4], ndims),
+    ];
+    if matches!(wl_name, "mvt" | "syrk") {
+        for b in &mut out {
+            let m = b.iter().copied().max().unwrap();
+            b.fill(m);
+        }
+    }
+    out
+}
+
+/// Bit-identical comparison: every observable of the two engines,
+/// including the float utilization by bit pattern.
+fn assert_identical(tag: &str, event: &SimResult, tick: &SimResult) {
+    assert_eq!(event.counters, tick.counters, "{tag}: counters");
+    assert_eq!(event.cycles, tick.cycles, "{tag}: cycles");
+    assert_eq!(event.outputs, tick.outputs, "{tag}: outputs");
+    assert_eq!(event.violations, tick.violations, "{tag}: violations");
+    assert_eq!(event.stats.pe, tick.stats.pe, "{tag}: pe stats");
+    assert_eq!(event.stats.io, tick.stats.io, "{tag}: io stats");
+    assert_eq!(event.stats.max_hop, tick.stats.max_hop, "{tag}: max_hop");
+    assert_eq!(
+        event.stats.max_concurrency, tick.stats.max_concurrency,
+        "{tag}: max_concurrency"
+    );
+    assert_eq!(
+        event.stats.fd_pressure, tick.stats.fd_pressure,
+        "{tag}: fd_pressure"
+    );
+    assert_eq!(
+        event.stats.utilization.to_bits(),
+        tick.stats.utilization.to_bits(),
+        "{tag}: utilization bits"
+    );
+}
+
+#[test]
+fn event_engine_matches_tick_engine_on_the_full_grid() {
+    for wl in workloads::all() {
+        for shape in [vec![2i64, 2], vec![1, 4], vec![4, 1], vec![3, 2]] {
+            for base in bounds_for(&wl.name, 2) {
+                // Per-phase parameters under one shared shape/bounds
+                // seed, padded to each phase's depth.
+                let params_all: Vec<Vec<i64>> = wl
+                    .phases
+                    .iter()
+                    .map(|ph| {
+                        let b = pad_bounds(&base, ph.ndims);
+                        let t = pad_array(&shape, ph.ndims);
+                        ArrayMapping::new(t).params_for(&b)
+                    })
+                    .collect();
+                let mut env = workload_inputs(&wl, &params_all);
+                for (phase, params) in wl.phases.iter().zip(&params_all) {
+                    let t = pad_array(&shape, phase.ndims);
+                    let mut arch = ArchConfig::with_array(t.clone());
+                    arch.regs.fd = 1 << 20; // pressure is a separate axis
+                    let tiled = tile_pra(phase, &arch.mapping);
+                    for (ci, s) in
+                        enumerate_schedules(&tiled, arch.pi, None)
+                            .iter()
+                            .enumerate()
+                    {
+                        let tag = format!(
+                            "{} t={t:?} bounds={base:?} candidate {ci} \
+                             (perm {:?})",
+                            phase.name, s.perm
+                        );
+                        let tick =
+                            simulate_tick(phase, &arch, s, params, &env);
+                        let event =
+                            simulate_event(phase, &arch, s, params, &env);
+                        assert_identical(&tag, &event, &tick);
+                    }
+                    // Later phases consume earlier phases' outputs.
+                    let s = find_schedule(&tiled, arch.pi).unwrap();
+                    let res = simulate_tick(phase, &arch, &s, params, &env);
+                    for (name, tens) in res.outputs {
+                        env.insert(name, tens);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn per_phase_mappings_chain_identically() {
+    // The DSE per-phase axis: each phase on its own shape, with the
+    // *event* engine's outputs driving the chain — parity must hold on
+    // the chained inputs, not just on phase 0.
+    let wl = workloads::by_name("atax").unwrap();
+    assert!(wl.phases.len() >= 2, "atax is the multi-phase exemplar");
+    let shapes: Vec<Vec<i64>> = vec![vec![1, 2], vec![2, 1]];
+    let params_all: Vec<Vec<i64>> = wl
+        .phases
+        .iter()
+        .enumerate()
+        .map(|(i, ph)| {
+            let b = pad_bounds(&[8, 8], ph.ndims);
+            let t = pad_array(&shapes[i % shapes.len()], ph.ndims);
+            ArrayMapping::new(t).params_for(&b)
+        })
+        .collect();
+    let mut env = workload_inputs(&wl, &params_all);
+    for (i, (phase, params)) in
+        wl.phases.iter().zip(&params_all).enumerate()
+    {
+        let t = pad_array(&shapes[i % shapes.len()], phase.ndims);
+        let mut arch = ArchConfig::with_array(t.clone());
+        arch.regs.fd = 1 << 20;
+        let tiled = tile_pra(phase, &arch.mapping);
+        let s = find_schedule(&tiled, arch.pi).unwrap();
+        let tick = simulate_tick(phase, &arch, &s, params, &env);
+        let event = simulate_event(phase, &arch, &s, params, &env);
+        assert_identical(
+            &format!("{} phase {i} t={t:?}", phase.name),
+            &event,
+            &tick,
+        );
+        for (name, tens) in event.outputs {
+            env.insert(name, tens);
+        }
+    }
+}
+
+#[test]
+fn event_engine_scales_to_hundredfold_bounds() {
+    // 800×800 gesummv on a 2×2 array: 640k iterations, ≥ 100× the
+    // parity grids above. The event engine alone runs it, and both the
+    // §V-A observable (symbolic access counts) and the Eq. 8 latency
+    // hold exactly — the frontier verification pass
+    // (`dse --sim-verify-frontier`) relies on exactly this.
+    let wl = workloads::by_name("gesummv").unwrap();
+    let phase = &wl.phases[0];
+    let bounds = vec![800i64, 800];
+    let mut arch = ArchConfig::with_array(vec![2, 2]);
+    arch.regs.fd = 1 << 20;
+    let params = arch.mapping.params_for(&bounds);
+    let env = workload_inputs(&wl, &[params.clone()]);
+    let mapping = arch.mapping.clone();
+    let tiled = tile_pra(phase, &mapping);
+    let s = find_schedule(&tiled, arch.pi).unwrap();
+
+    let res = simulate_event(phase, &arch, &s, &params, &env);
+
+    assert!(res.violations.is_empty(), "{:?}", res.violations);
+    let ana = SymbolicAnalysis::analyze(phase, &mapping);
+    let diff = res.counters.diff_symbolic(&ana.counts_at(&params));
+    assert!(diff.is_empty(), "{diff:#?}");
+    assert_eq!(res.cycles, latency(&s, &tiled, &params), "Eq. 8 latency");
+    // Iteration volume really is ≥ 100× the grid tests' largest (81).
+    let total: i64 = res.stats.pe.iter().map(|p| p.iterations).sum();
+    assert_eq!(total, 800 * 800);
+}

@@ -94,6 +94,35 @@ fn every_enumerated_schedule_verifies_on_every_builtin_workload() {
 }
 
 #[test]
+fn every_enumerated_schedule_verifies_symbolically() {
+    // The all-parameter analogue of the grid test above: no candidate
+    // relies on the sampled grid being too small to expose it (the
+    // adversarial-λ^K gap closed by `Schedule::verify_symbolic`).
+    for wl in workloads::all() {
+        for phase in &wl.phases {
+            for shape in shapes_for(phase.ndims) {
+                let mapping = ArrayMapping::new(shape.clone());
+                let tiled = tile_pra(phase, &mapping);
+                for pi in [1i64, 3] {
+                    for (ci, s) in
+                        enumerate_schedules(&tiled, pi, None).iter().enumerate()
+                    {
+                        let v = s.verify_symbolic(&tiled);
+                        assert!(
+                            v.is_empty(),
+                            "{} t={shape:?} π={pi} candidate {ci} \
+                             (perm {:?}): {v:?}",
+                            phase.name,
+                            s.perm
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn find_schedule_pick_is_candidate_zero_everywhere() {
     for wl in workloads::all() {
         for phase in &wl.phases {
