@@ -1,0 +1,118 @@
+//! Throughput of the lint front gate, and the property that makes it a
+//! front gate at all: the symbolic proofs cost the same no matter how
+//! large the loop bounds are.
+//!
+//! Two measurements, appended to `BENCH_symbolic.json` (section `lint`)
+//! for the CI perf trajectory:
+//!
+//! * **phases/sec** — full three-pass lint (structural + Fourier–Motzkin
+//!   polyhedral proofs + mapping hazards on a canonical array) over every
+//!   built-in workload phase.
+//! * **bounds-independence ratio** — the same lint with the admissible
+//!   parameter region pinned to a 1× problem (`N_ℓ ≥ 2`) versus a 100×
+//!   problem (`N_ℓ ≥ 200`) via `requires`. A sampling-based checker
+//!   would slow down with the region; the FM emptiness proofs see the
+//!   same constraint systems with different constants, so the ratio must
+//!   stay near 1 (asserted ≤ 3× to absorb timer noise).
+//!
+//! ```bash
+//! cargo bench --bench lint_throughput [-- --quick]
+//! ```
+
+use tcpa_energy::bench_util::{
+    bench, bench_symbolic_json_path, write_bench_section,
+};
+use tcpa_energy::lint::{lint_workload, LintOptions};
+use tcpa_energy::polyhedral::{AffineExpr, Constraint};
+use tcpa_energy::pra::Workload;
+use tcpa_energy::workloads;
+
+/// Pin every loop bound to at least `n_min` via `requires` — same
+/// constraint system shape at every scale, only the constants move.
+fn with_min_bounds(wl: &Workload, n_min: i64) -> Workload {
+    let mut wl = wl.clone();
+    for phase in &mut wl.phases {
+        let np = phase.space.len();
+        for l in 0..phase.ndims {
+            let idx = phase.space.n_index(l);
+            phase
+                .requires
+                .push(Constraint::ge0(AffineExpr::param(np, idx).plus(-n_min)));
+        }
+    }
+    wl
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 5 } else { 40 };
+
+    let opts = LintOptions { array: Some(vec![2, 2]), ..Default::default() };
+    let wls = workloads::all();
+    let phases: usize = wls.iter().map(|w| w.phases.len()).sum();
+
+    // Sanity outside the timed region: every builtin is deny-clean with
+    // all three passes running, at both scales.
+    for scale in [2i64, 200] {
+        for wl in &wls {
+            for rep in lint_workload(&with_min_bounds(wl, scale), &opts) {
+                assert!(
+                    !rep.has_deny(),
+                    "scale {scale}, {}:\n{}",
+                    rep.pra,
+                    rep.render()
+                );
+            }
+        }
+    }
+
+    let lint_all = |wls: &[Workload]| -> usize {
+        wls.iter()
+            .flat_map(|wl| lint_workload(wl, &opts))
+            .map(|rep| rep.findings.len())
+            .sum()
+    };
+
+    let stats = bench(2, reps, || lint_all(&wls));
+    let per_sec = phases as f64 / stats.median.as_secs_f64().max(1e-12);
+    println!(
+        "lint: {phases} phases, three passes each, {} per sweep — \
+         {per_sec:.0} phases/sec",
+        stats.summary()
+    );
+
+    let small: Vec<Workload> =
+        wls.iter().map(|w| with_min_bounds(w, 2)).collect();
+    let large: Vec<Workload> =
+        wls.iter().map(|w| with_min_bounds(w, 200)).collect();
+    let t_small = bench(2, reps, || lint_all(&small));
+    let t_large = bench(2, reps, || lint_all(&large));
+    let ratio = t_large.median.as_secs_f64()
+        / t_small.median.as_secs_f64().max(1e-12);
+    println!(
+        "bounds-independence: 1× {:?} vs 100× {:?} (ratio {ratio:.2})",
+        t_small.median, t_large.median
+    );
+    assert!(
+        ratio <= 3.0,
+        "lint cost must not scale with loop bounds: 100×/1× ratio \
+         {ratio:.2}"
+    );
+
+    let body = format!(
+        "{{\"phases\": {phases}, \
+         \"phases_per_sec\": {per_sec:.1}, \
+         \"median_us\": {:.1}, \
+         \"median_us_bounds_1x\": {:.1}, \
+         \"median_us_bounds_100x\": {:.1}, \
+         \"bounds_ratio\": {ratio:.3}, \
+         \"quick\": {quick}}}",
+        stats.median.as_secs_f64() * 1e6,
+        t_small.median.as_secs_f64() * 1e6,
+        t_large.median.as_secs_f64() * 1e6,
+    );
+    let path = bench_symbolic_json_path();
+    write_bench_section(&path, "lint", &body)
+        .expect("writing BENCH_symbolic.json");
+    println!("section lint → {}", path.display());
+}

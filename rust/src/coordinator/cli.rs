@@ -17,6 +17,9 @@
 //!                      [--analysis-cache DIR] [--prune-cache]
 //!                      [--sim-verify-frontier]
 //! tcpa-energy figures  [--out results] [--quick]
+//! tcpa-energy lint     --workload NAME | --all-builtins
+//!                      [--array TxT] [--pi N] [--json] [--json-out FILE]
+//!                      [--deny warnings]
 //! ```
 //!
 //! `backends` lists the built-in cross-architecture energy backends;
@@ -38,6 +41,13 @@
 //! the discrete-event engine after the sweep — the report gains a
 //! `sim_cycles` column, and any divergence from the symbolic prediction
 //! is printed and escalated to a non-zero exit.
+//!
+//! `lint` runs the [`crate::lint`] static-analysis engine (structural +
+//! symbolic polyhedral passes; add `--array` for the mapping/schedule
+//! pass) and exits non-zero on deny-level findings — or on any finding
+//! under `--deny warnings`. `analyze` and `dse` preflight their workload
+//! through the same engine: deny findings are a hard error, warnings go
+//! to stderr, and `--no-lint` restores the old behavior bit-for-bit.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -66,6 +76,9 @@ use super::validate::validate_workload;
 pub enum CliError {
     Usage(String),
     UnknownWorkload(String),
+    /// The preflight lint gate found deny-level findings (`analyze`/`dse`
+    /// refuse to run; `--no-lint` bypasses).
+    Lint(String),
     Io(std::io::Error),
 }
 
@@ -76,6 +89,7 @@ impl std::fmt::Display for CliError {
             CliError::UnknownWorkload(w) => {
                 write!(f, "unknown workload {w}; try `tcpa-energy list`")
             }
+            CliError::Lint(m) => write!(f, "lint: {m}"),
             CliError::Io(e) => e.fmt(f),
         }
     }
@@ -130,10 +144,52 @@ fn parse_vec(s: &str, sep: char) -> Result<Vec<i64>, CliError> {
         .collect()
 }
 
+/// Preflight lint gate shared by `analyze` and `dse`: deny-level
+/// findings abort the run, warnings go to stderr, `--no-lint` skips the
+/// gate entirely (restoring the pre-lint behavior bit-for-bit). The
+/// mapping pass is deliberately not run here — mapping hazards depend on
+/// the design point, which these commands sweep or choose later.
+fn lint_preflight(
+    wl: &crate::pra::Workload,
+    flags: &BTreeMap<String, String>,
+) -> Result<(), CliError> {
+    if flags.contains_key("no-lint") {
+        return Ok(());
+    }
+    let opts = crate::lint::LintOptions::default();
+    for rep in crate::lint::lint_workload(wl, &opts) {
+        for f in &rep.findings {
+            if f.code.severity() == crate::lint::Severity::Warn {
+                eprintln!("lint warning [{}]: {f}", rep.pra);
+            }
+        }
+        if rep.has_deny() {
+            let denies: Vec<String> = rep
+                .findings
+                .iter()
+                .filter(|f| {
+                    f.code.severity() == crate::lint::Severity::Deny
+                })
+                .map(|f| format!("  {f}"))
+                .collect();
+            return Err(CliError::Lint(format!(
+                "workload phase {} has {} deny-level finding(s):\n{}\n\
+                 run `tcpa-energy lint --workload {}` for the full \
+                 report, or pass --no-lint to bypass the gate",
+                rep.pra,
+                denies.len(),
+                denies.join("\n"),
+                wl.name
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Run the CLI; returns the process exit code.
 pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
     let usage = "tcpa-energy \
-                 <list|backends|analyze|simulate|validate|dse|figures> \
+                 <list|backends|analyze|simulate|validate|dse|figures|lint> \
                  [flags]";
     let Some(cmd) = args.first() else {
         return Err(CliError::Usage(usage.into()));
@@ -181,6 +237,7 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 .ok_or_else(|| CliError::Usage("--workload required".into()))?;
             let wl = workloads::by_name(name)
                 .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?;
+            lint_preflight(&wl, &flags)?;
             let array = parse_vec(
                 flags.get("array").map(String::as_str).unwrap_or("8x8"),
                 'x',
@@ -316,6 +373,7 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 .ok_or_else(|| CliError::Usage("--workload required".into()))?;
             let wl = workloads::by_name(name)
                 .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?;
+            lint_preflight(&wl, &flags)?;
             let max_pes: i64 = match flags.get("max-pes") {
                 Some(s) => s.parse().map_err(|_| {
                     CliError::Usage(format!(
@@ -567,6 +625,38 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                         format!("{diverged} DIVERGED")
                     }
                 );
+                // Annotate each verified frontier shape with its static
+                // mapping-hazard lint status: the dynamic (event-engine)
+                // and static (FM/schedule-proof) verdicts side by side.
+                let shapes: std::collections::BTreeSet<Vec<i64>> = res
+                    .sim_verify
+                    .keys()
+                    .map(|&i| res.points[i].point.array.clone())
+                    .collect();
+                for shape in shapes {
+                    let lopts = crate::lint::LintOptions {
+                        array: Some(shape.clone()),
+                        ..Default::default()
+                    };
+                    let reps = crate::lint::lint_workload(&wl, &lopts);
+                    let deny: usize =
+                        reps.iter().map(|r| r.deny_count()).sum();
+                    let warn: usize =
+                        reps.iter().map(|r| r.warn_count()).sum();
+                    let label = shape
+                        .iter()
+                        .map(|x| x.to_string())
+                        .collect::<Vec<_>>()
+                        .join("x");
+                    println!(
+                        "  lint [{label}]: {}",
+                        if deny == 0 && warn == 0 {
+                            "clean".to_string()
+                        } else {
+                            format!("{deny} deny, {warn} warn")
+                        }
+                    );
+                }
             }
             println!(
                 "{}: {} points in {:?} ({} failed; cache {} analyses, \
@@ -647,6 +737,74 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             let quick = flags.contains_key("quick");
             run_figures(Path::new(out), quick)?;
             Ok(0)
+        }
+        "lint" => {
+            let deny_warnings = match flags.get("deny").map(String::as_str)
+            {
+                None => false,
+                Some("warnings") => true,
+                Some(other) => {
+                    return Err(CliError::Usage(format!(
+                        "--deny expects `warnings`, got {other}"
+                    )))
+                }
+            };
+            let mut opts = crate::lint::LintOptions::default();
+            if let Some(a) = flags.get("array") {
+                opts.array = Some(parse_vec(a, 'x')?);
+            }
+            if let Some(p) = flags.get("pi") {
+                opts.pi = p.parse().map_err(|_| {
+                    CliError::Usage(format!(
+                        "--pi expects an integer, got {p}"
+                    ))
+                })?;
+            }
+            let wls: Vec<_> = if flags.contains_key("all-builtins") {
+                workloads::all()
+            } else {
+                let name = flags.get("workload").ok_or_else(|| {
+                    CliError::Usage(
+                        "lint needs --workload NAME or --all-builtins"
+                            .into(),
+                    )
+                })?;
+                vec![workloads::by_name(name)
+                    .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?]
+            };
+            let reports: Vec<crate::lint::LintReport> = wls
+                .iter()
+                .flat_map(|wl| crate::lint::lint_workload(wl, &opts))
+                .collect();
+            let json_doc = format!(
+                "[{}]",
+                reports
+                    .iter()
+                    .map(|r| r.to_json())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+            if flags.contains_key("json") {
+                println!("{json_doc}");
+            } else {
+                for rep in &reports {
+                    print!("{}", rep.render());
+                }
+                let deny: usize =
+                    reports.iter().map(|r| r.deny_count()).sum();
+                let warn: usize =
+                    reports.iter().map(|r| r.warn_count()).sum();
+                println!(
+                    "lint: {} phase report(s), {deny} deny, {warn} warn",
+                    reports.len()
+                );
+            }
+            if let Some(path) = flags.get("json-out") {
+                std::fs::write(path, &json_doc)?;
+            }
+            let clean =
+                reports.iter().all(|r| r.is_clean(deny_warnings));
+            Ok(if clean { 0 } else { 1 })
         }
         other => Err(CliError::Usage(format!("unknown command {other}; {usage}"))),
     }
@@ -1119,6 +1277,82 @@ mod tests {
             run_cli(&s(&[
                 "validate", "--workload", "gesummv", "--bounds", "8,8",
                 "--array", "2x2"
+            ]))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn lint_clean_builtins_exit_zero() {
+        // Every builtin is clean even under --deny warnings, with and
+        // without the mapping pass.
+        assert_eq!(
+            run_cli(&s(&["lint", "--all-builtins", "--deny", "warnings"]))
+                .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&s(&[
+                "lint", "--workload", "gesummv", "--array", "2x2",
+                "--deny", "warnings", "--json"
+            ]))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn lint_flag_validation() {
+        let e = run_cli(&s(&["lint"]));
+        assert!(matches!(e, Err(CliError::Usage(_))), "{e:?}");
+        let e = run_cli(&s(&["lint", "--workload", "nope"]));
+        assert!(matches!(e, Err(CliError::UnknownWorkload(_))), "{e:?}");
+        let e = run_cli(&s(&[
+            "lint", "--workload", "gemm", "--deny", "everything",
+        ]));
+        assert!(matches!(e, Err(CliError::Usage(_))), "{e:?}");
+        let e = run_cli(&s(&[
+            "lint", "--workload", "gemm", "--pi", "abc",
+        ]));
+        assert!(matches!(e, Err(CliError::Usage(_))), "{e:?}");
+    }
+
+    #[test]
+    fn lint_json_out_writes_machine_report() {
+        let path = std::env::temp_dir()
+            .join(format!("tcpa-lint-{}.json", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        assert_eq!(
+            run_cli(&s(&[
+                "lint", "--workload", "gemm", "--json-out", &path_s,
+            ]))
+            .unwrap(),
+            0
+        );
+        let doc = std::fs::read_to_string(&path).unwrap();
+        assert!(doc.starts_with('[') && doc.ends_with(']'), "{doc}");
+        assert!(doc.contains("\"pra\":\"gemm\""), "{doc}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn preflight_gate_blocks_nothing_for_clean_workloads() {
+        // The gate is on by default and all builtins pass it — the
+        // analyze path above already proves that. --no-lint must also
+        // run cleanly (bit-for-bit the old behavior).
+        assert_eq!(
+            run_cli(&s(&[
+                "analyze", "--workload", "gesummv", "--array", "2x2",
+                "--no-lint"
+            ]))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&s(&[
+                "dse", "--workload", "gesummv", "--bounds", "8,8",
+                "--max-pes", "2", "--no-lint"
             ]))
             .unwrap(),
             0

@@ -56,6 +56,12 @@ pub fn validate_workload_mapped(
         "one array shape per phase of {}",
         wl.name
     );
+    // Shared structural gate: the same helper the workload builders run
+    // at construction time, so hand-built phases reaching the validator
+    // directly fail with the identical report.
+    for phase in &wl.phases {
+        crate::pra::assert_valid(phase);
+    }
     let mut rows = Vec::new();
     let params_all: Vec<Vec<i64>> = wl
         .phases

@@ -15,6 +15,11 @@
 //! * [`pra`] — Piecewise Linear/Regular Algorithm IR: iteration spaces,
 //!   quantified statements, dependence vectors, variable classification and
 //!   the reduced dependence graph (RDG).
+//! * [`lint`] — multi-pass static verification over the PRA IR and an
+//!   optional array mapping: structural well-formedness, symbolic
+//!   Fourier–Motzkin proofs (bounds safety, dependence coverage,
+//!   reachability) and mapping/schedule hazards, with stable lint codes
+//!   and a machine-readable report. `analyze`/`dse` preflight through it.
 //! * [`workloads`] — PolyBench kernels expressed as PRAs plus functional
 //!   semantics used by the simulator and the golden-model check.
 //! * [`tiling`] — symbolic LSGP tiling (Eq. 3–7 of the paper).
@@ -46,6 +51,7 @@
 //! | §IV (symbolic lattice-point counting, Eq. 12/13) | [`polyhedral`] |
 //! | §V evaluation flow (Eq. 11 → exploration) | [`analysis`] → [`dse`] |
 //! | §V-A validation oracles | [`sim`] + [`coordinator::validate`] |
+//! | §III-B well-formedness side conditions (proved, not sampled) | [`lint`] (`tcpa-energy lint`) |
 //!
 //! The prose version of this map — with the data-flow diagram and the
 //! caching story — is [`architecture`] (docs/ARCHITECTURE.md in the
@@ -53,6 +59,7 @@
 
 pub mod polyhedral;
 pub mod pra;
+pub mod lint;
 pub mod workloads;
 pub mod tiling;
 pub mod schedule;

@@ -1,0 +1,316 @@
+//! Mapping pass: hazards of one PRA under a concrete array mapping
+//! (`L200`–`L202`). Skipped unless the lint invocation names an array
+//! shape ([`LintOptions::array`]); the other two passes are
+//! mapping-independent.
+//!
+//! * **`L200` causality** — [`crate::schedule::find_schedule`] must find
+//!   a feasible schedule vector for the tiled PRA at the given `π`, and
+//!   [`crate::schedule::Schedule::verify_symbolic`] must certify it (the
+//!   positivity-certificate / escalation-ladder proof, not a point
+//!   check).
+//! * **`L201` write–write conflicts** — two statements writing the same
+//!   destination on overlapping iterations execute in the same cycle on
+//!   the same PE; the overlap check is the same Fourier–Motzkin
+//!   emptiness proof the polyhedral pass uses, under the context
+//!   `N_ℓ ≥ 2` (single-trip dimensions collapse every boundary case
+//!   onto one point; a PRA that genuinely needs `N_ℓ = 1` should say so
+//!   via `requires`).
+//! * **`L202` FD pressure** — the static FIFO-depth formula the
+//!   simulator enforces at run time
+//!   (`Σ max(0, ⌊d·λ^J/π⌋)` over all carried reads), evaluated on the
+//!   exact-cover rungs `N_ℓ = t_ℓ·{2, 8}`, against
+//!   [`LintOptions::fd_budget`].
+//!
+//! The pass assumes the PRA's parameter space is the standard
+//! `loop_nest` layout (`N0.. , p0..`), which is what the tiling
+//! transform itself requires.
+
+use crate::pra::{Lhs, Operand, Pra};
+use crate::schedule::find_schedule;
+use crate::tiling::{pad_array, tile_pra, ArrayMapping};
+
+use super::polyhedral::FmCtx;
+use super::{Finding, LintCode, LintOptions};
+
+pub(super) fn run(pra: &Pra, opts: &LintOptions, out: &mut Vec<Finding>) {
+    let Some(array) = &opts.array else { return };
+    let t = pad_array(array, pra.ndims);
+    let label = t
+        .iter()
+        .map(|x| x.to_string())
+        .collect::<Vec<_>>()
+        .join("x");
+    let mapping = ArrayMapping::new(t);
+    let tiled = tile_pra(pra, &mapping);
+
+    let schedule = match find_schedule(&tiled, opts.pi) {
+        Err(e) => {
+            out.push(Finding::new(
+                LintCode::L200,
+                None,
+                format!("array {label}, π = {}: {e}", opts.pi),
+            ));
+            None
+        }
+        Ok(s) => {
+            let fails = s.verify_symbolic(&tiled);
+            if fails.is_empty() {
+                Some(s)
+            } else {
+                out.push(Finding::new(
+                    LintCode::L200,
+                    None,
+                    format!(
+                        "array {label}, schedule {}: symbolic causality \
+                         verification failed: {}",
+                        s.perm_label(),
+                        fails.join("; ")
+                    ),
+                ));
+                None
+            }
+        }
+    };
+
+    write_write_conflicts(pra, &label, out);
+
+    if let Some(schedule) = &schedule {
+        fd_pressure(pra, opts, &mapping, schedule, &label, out);
+    }
+}
+
+/// `L201`: two writers of one destination on overlapping iterations.
+fn write_write_conflicts(pra: &Pra, label: &str, out: &mut Vec<Finding>) {
+    let ctx = FmCtx::new(pra);
+    let base = ctx.context(2);
+    let zero = vec![0i64; pra.ndims];
+    let space = ctx.in_space(&zero);
+    for (i, s1) in pra.statements.iter().enumerate() {
+        for s2 in &pra.statements[i + 1..] {
+            let same_dest = match (&s1.lhs, &s2.lhs) {
+                (Lhs::Var(a), Lhs::Var(b)) => a == b,
+                (
+                    Lhs::Tensor { name: a, map: ma },
+                    Lhs::Tensor { name: b, map: mb },
+                ) => a == b && ma == mb,
+                _ => false,
+            };
+            if !same_dest {
+                continue;
+            }
+            let c1 = ctx.conds(s1, &zero);
+            let c2 = ctx.conds(s2, &zero);
+            if ctx.feasible(&[&c1, &c2, &space, &base]) {
+                out.push(Finding::new(
+                    LintCode::L201,
+                    Some(&s1.name),
+                    format!(
+                        "statements {} and {} both write {} on \
+                         overlapping iterations — same cycle, same PE \
+                         under array {label}",
+                        s1.name,
+                        s2.name,
+                        s1.lhs.name(),
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// `L202`: the simulator's static FIFO-depth formula, checked on the
+/// exact-cover ladder before any simulation runs.
+fn fd_pressure(
+    pra: &Pra,
+    opts: &LintOptions,
+    mapping: &ArrayMapping,
+    schedule: &crate::schedule::Schedule,
+    label: &str,
+    out: &mut Vec<Finding>,
+) {
+    for rung in [2i64, 8] {
+        let bounds: Vec<i64> =
+            mapping.t.iter().map(|&tl| tl * rung).collect();
+        let params = mapping.params_for(&bounds);
+        let lj = schedule.lambda_j_at(&params);
+        let mut fd = 0i128;
+        for s in &pra.statements {
+            for arg in &s.args {
+                let Operand::Var { dep, .. } = arg else { continue };
+                if dep.iter().all(|&d| d == 0) {
+                    continue;
+                }
+                let dist: i128 = dep
+                    .iter()
+                    .zip(&lj)
+                    .map(|(&d, &l)| d as i128 * l)
+                    .sum::<i128>()
+                    / i128::from(opts.pi.max(1));
+                fd += dist.max(0);
+            }
+        }
+        if fd > opts.fd_budget as i128 {
+            out.push(Finding::new(
+                LintCode::L202,
+                None,
+                format!(
+                    "array {label}: FD pressure {fd} exceeds the \
+                     register budget {} at tile size {rung} (bounds \
+                     {bounds:?}, schedule {})",
+                    opts.fd_budget,
+                    schedule.perm_label(),
+                ),
+            ));
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::ParamSpace;
+    use crate::pra::{
+        CondConstraint, IndexMap, Op, Statement, TensorDecl, TensorDim,
+    };
+
+    fn opts(array: &[i64]) -> LintOptions {
+        LintOptions { array: Some(array.to_vec()), ..Default::default() }
+    }
+
+    fn lint(pra: &Pra, o: &LintOptions) -> Vec<Finding> {
+        let mut out = Vec::new();
+        run(pra, o, &mut out);
+        out
+    }
+
+    #[test]
+    fn skipped_without_array() {
+        let wl = crate::workloads::by_name("gemm").unwrap();
+        let f = lint(&wl.phases[0], &LintOptions::default());
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn builtins_map_clean_of_deny_findings() {
+        // Deny-clean, not warning-free: the `L202` FD ladder legitimately
+        // warns on deep kernels at large tile sizes (the validator works
+        // around the same pressure by widening `regs.fd` before it
+        // simulates) — that is a capacity advisory, not a defect.
+        for wl in crate::workloads::all() {
+            for phase in &wl.phases {
+                let shape: Vec<i64> = match phase.ndims {
+                    2 => vec![2, 2],
+                    3 => vec![2, 2, 1],
+                    n => vec![2; n],
+                };
+                let f = lint(phase, &opts(&shape));
+                assert!(
+                    f.iter().all(|x| x.code.severity()
+                        != crate::lint::Severity::Deny),
+                    "{} / {}: {f:?}",
+                    wl.name,
+                    phase.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn acausal_pra_is_l200() {
+        let wl = crate::workloads::twist_unschedulable();
+        let f = lint(&wl.phases[0], &opts(&[2, 2]));
+        assert!(
+            f.iter().any(|x| x.code == LintCode::L200),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn overlapping_writers_are_l201() {
+        // Two unconditional writers of the same variable.
+        let nd = 1;
+        let mk = |name: &str| Statement {
+            name: name.into(),
+            lhs: Lhs::Var("a".into()),
+            op: Op::Copy,
+            args: vec![Operand::tensor("T", IndexMap::identity(1, nd))],
+            cond: vec![],
+        };
+        let pra = Pra {
+            name: "ww".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![mk("S1"), mk("S2")],
+            tensors: vec![TensorDecl {
+                name: "T".into(),
+                shape: vec![TensorDim::Param(0)],
+            }],
+            requires: vec![],
+        };
+        let f = lint(&pra, &opts(&[2]));
+        assert!(
+            f.iter().any(|x| x.code == LintCode::L201),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn disjoint_writers_are_clean() {
+        // The propagate idiom: writer at i0 = 0, writer at i0 ≥ 1.
+        let nd = 1;
+        let np = 2;
+        let pra = Pra {
+            name: "prop".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![
+                Statement {
+                    name: "S1".into(),
+                    lhs: Lhs::Var("a".into()),
+                    op: Op::Copy,
+                    args: vec![Operand::tensor(
+                        "T",
+                        IndexMap::identity(1, nd),
+                    )],
+                    cond: vec![
+                        CondConstraint::ge_const(0, 0, nd, np),
+                        CondConstraint::le_const(0, 0, nd, np),
+                    ],
+                },
+                Statement {
+                    name: "S2".into(),
+                    lhs: Lhs::Var("a".into()),
+                    op: Op::Copy,
+                    args: vec![Operand::var("a", vec![1])],
+                    cond: vec![CondConstraint::ge_const(0, 1, nd, np)],
+                },
+            ],
+            tensors: vec![TensorDecl {
+                name: "T".into(),
+                shape: vec![TensorDim::Param(0)],
+            }],
+            requires: vec![],
+        };
+        let f = lint(&pra, &opts(&[2]));
+        assert!(
+            f.iter().all(|x| x.code != LintCode::L201),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn tiny_fd_budget_is_l202() {
+        let wl = crate::workloads::by_name("gemm").unwrap();
+        let o = LintOptions {
+            array: Some(vec![8, 8]),
+            fd_budget: 0,
+            ..Default::default()
+        };
+        let f = lint(&wl.phases[0], &o);
+        assert!(
+            f.iter().any(|x| x.code == LintCode::L202),
+            "{f:?}"
+        );
+    }
+}

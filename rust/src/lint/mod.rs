@@ -1,0 +1,503 @@
+//! Multi-pass static analysis ("lint") over the PRA IR and, optionally,
+//! an array mapping — the front gate of the pipeline: `analyze` and `dse`
+//! refuse workloads with deny-level findings before any tiling, counting,
+//! or simulation runs (see `tcpa-energy lint` and the `--no-lint` escape
+//! hatch in [`crate::coordinator::cli`]).
+//!
+//! Three passes, each one file, registered in [`PASSES`]:
+//!
+//! * **structural** ([`structural`]) — shape-level well-formedness,
+//!   absorbing [`crate::pra::validate`] (duplicate names, arities,
+//!   dependence/condition/access-function dimensions, undefined reads,
+//!   zero-dependence cycles) and extending it with dataflow hygiene
+//!   (reduction shape, unused iteration dimensions, dead tensors, dead
+//!   statements).
+//! * **polyhedral** ([`polyhedral`]) — *symbolic proofs* via
+//!   Fourier–Motzkin over the combined iteration+parameter space:
+//!   bounds-safety of every tensor access for **all** parameter values
+//!   (emptiness of the violation polyhedron), dependence coverage
+//!   (every read `v[i − d]` lands on some producer of `v`), and
+//!   guard satisfiability (unreachable-statement warnings). No grid
+//!   sampling anywhere — see [`polyhedral::FmCtx`].
+//! * **mapping** ([`mapping`]) — hazards of a concrete array mapping:
+//!   schedule causality ([`crate::schedule::Schedule::verify_symbolic`]),
+//!   write-write conflicts (two statements assigning one variable at a
+//!   jointly feasible iteration point execute in the same cycle on the
+//!   same PE), and out-of-budget feed-forward register pressure. Runs
+//!   only when [`LintOptions::array`] is set.
+//!
+//! Lint codes are stable: `L0xx` structural, `L1xx` polyhedral, `L2xx`
+//! mapping/schedule. Adding a lint means adding a [`LintCode`] variant
+//! and emitting it from (or adding) a pass file — the registry, report,
+//! JSON, and CLI pick it up unchanged.
+
+use crate::pra::{Pra, Workload};
+
+pub mod mapping;
+pub mod polyhedral;
+pub mod structural;
+
+/// How bad a finding is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but not disqualifying; printed, never fatal unless
+    /// `--deny warnings`.
+    Warn,
+    /// The workload (or mapping) is wrong: `analyze`/`dse` refuse it.
+    Deny,
+}
+
+impl Severity {
+    /// Lowercase label used in reports and JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// Stable lint codes. `L0xx` structural, `L1xx` polyhedral, `L2xx`
+/// mapping/schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LintCode {
+    /// Duplicate statement name.
+    L001,
+    /// Operator arity mismatch.
+    L002,
+    /// Tensor access function malformed (rank / row width / offset
+    /// length).
+    L003,
+    /// Dependence or condition coefficient vector has the wrong length.
+    L004,
+    /// Read of an undefined variable or undeclared tensor.
+    L005,
+    /// Dependence structure unexecutable: non-lex-positive dependence
+    /// vector or zero-dependence cycle.
+    L006,
+    /// Malformed reduction: a statement folds two or more reads of its
+    /// own left-hand variable.
+    L007,
+    /// Iteration dimension unused by every access, dependence, and
+    /// condition.
+    L008,
+    /// Declared tensor never read or written.
+    L009,
+    /// Statement defines a variable no statement reads.
+    L010,
+    /// Tensor access provably out of bounds for some admissible
+    /// parameters.
+    L100,
+    /// Uncovered dependence: a read `v[i − d]` can land where no
+    /// producer of `v` is active (or outside the iteration space).
+    L101,
+    /// Unreachable statement: its guard is infeasible for every
+    /// admissible parameter value.
+    L102,
+    /// Acausal schedule: no feasible schedule exists for the mapping,
+    /// or the symbolic causality check rejects it.
+    L200,
+    /// Write-write conflict: two statements assign one variable at a
+    /// jointly feasible iteration point (same cycle, same PE).
+    L201,
+    /// Feed-forward register pressure exceeds the FD budget.
+    L202,
+}
+
+impl LintCode {
+    /// Every code, in report order.
+    pub const ALL: [LintCode; 16] = [
+        LintCode::L001,
+        LintCode::L002,
+        LintCode::L003,
+        LintCode::L004,
+        LintCode::L005,
+        LintCode::L006,
+        LintCode::L007,
+        LintCode::L008,
+        LintCode::L009,
+        LintCode::L010,
+        LintCode::L100,
+        LintCode::L101,
+        LintCode::L102,
+        LintCode::L200,
+        LintCode::L201,
+        LintCode::L202,
+    ];
+
+    /// Stable textual code, e.g. `"L100"`.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LintCode::L001 => "L001",
+            LintCode::L002 => "L002",
+            LintCode::L003 => "L003",
+            LintCode::L004 => "L004",
+            LintCode::L005 => "L005",
+            LintCode::L006 => "L006",
+            LintCode::L007 => "L007",
+            LintCode::L008 => "L008",
+            LintCode::L009 => "L009",
+            LintCode::L010 => "L010",
+            LintCode::L100 => "L100",
+            LintCode::L101 => "L101",
+            LintCode::L102 => "L102",
+            LintCode::L200 => "L200",
+            LintCode::L201 => "L201",
+            LintCode::L202 => "L202",
+        }
+    }
+
+    /// Short human title.
+    pub fn title(&self) -> &'static str {
+        match self {
+            LintCode::L001 => "duplicate statement name",
+            LintCode::L002 => "operator arity mismatch",
+            LintCode::L003 => "malformed tensor access function",
+            LintCode::L004 => "dependence/condition vector length",
+            LintCode::L005 => "undefined variable or tensor",
+            LintCode::L006 => "unexecutable dependence structure",
+            LintCode::L007 => "malformed reduction",
+            LintCode::L008 => "unused iteration dimension",
+            LintCode::L009 => "dead tensor",
+            LintCode::L010 => "dead statement",
+            LintCode::L100 => "out-of-bounds tensor access",
+            LintCode::L101 => "uncovered dependence",
+            LintCode::L102 => "unreachable statement",
+            LintCode::L200 => "acausal schedule",
+            LintCode::L201 => "write-write conflict",
+            LintCode::L202 => "FD register pressure over budget",
+        }
+    }
+
+    /// Severity of this code.
+    pub fn severity(&self) -> Severity {
+        match self {
+            LintCode::L008
+            | LintCode::L009
+            | LintCode::L010
+            | LintCode::L102
+            | LintCode::L202 => Severity::Warn,
+            _ => Severity::Deny,
+        }
+    }
+}
+
+impl std::fmt::Display for LintCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub code: LintCode,
+    /// Statement the finding anchors to, when there is one.
+    pub statement: Option<String>,
+    pub message: String,
+}
+
+impl Finding {
+    pub(crate) fn new(
+        code: LintCode,
+        statement: Option<&str>,
+        message: String,
+    ) -> Self {
+        Finding { code, statement: statement.map(str::to_string), message }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} [{}] {}",
+            self.code,
+            self.code.severity().label(),
+            self.code.title()
+        )?;
+        if let Some(s) = &self.statement {
+            write!(f, " ({s})")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// Lint configuration.
+#[derive(Debug, Clone)]
+pub struct LintOptions {
+    /// Array shape `t`. `Some` enables the mapping pass; the shape is
+    /// padded with trailing `1`s to each phase's loop depth, exactly as
+    /// the analyze/dse paths pad theirs.
+    pub array: Option<Vec<i64>>,
+    /// Initiation interval for the schedule pass.
+    pub pi: i64,
+    /// Feed-forward register budget (default: the simulator's
+    /// [`crate::sim::ArchConfig`] FD size).
+    pub fd_budget: usize,
+}
+
+impl Default for LintOptions {
+    fn default() -> Self {
+        LintOptions {
+            array: None,
+            pi: 1,
+            fd_budget: crate::sim::RegFileSizes::default().fd,
+        }
+    }
+}
+
+/// Outcome of one pass over one PRA.
+#[derive(Debug, Clone)]
+pub struct PassOutcome {
+    pub name: &'static str,
+    /// `false` when the pass was skipped (no mapping given, or
+    /// structural findings made later passes unsafe to run).
+    pub ran: bool,
+    pub findings: usize,
+}
+
+/// One registered pass. New lints are one file each: write the pass
+/// function, add a row here.
+struct Pass {
+    name: &'static str,
+    /// Needs [`LintOptions::array`].
+    needs_mapping: bool,
+    run: fn(&Pra, &LintOptions, &mut Vec<Finding>),
+}
+
+/// The pass registry, in execution order.
+const PASSES: [Pass; 3] = [
+    Pass { name: "structural", needs_mapping: false, run: structural::run },
+    Pass { name: "polyhedral", needs_mapping: false, run: polyhedral::run },
+    Pass { name: "mapping", needs_mapping: true, run: mapping::run },
+];
+
+/// Structural codes whose presence makes later passes unsafe (their
+/// shape invariants — vector lengths, declared tensors — no longer
+/// hold, so polyhedral/mapping analysis could index out of range).
+fn blocks_later_passes(code: LintCode) -> bool {
+    matches!(
+        code,
+        LintCode::L002 | LintCode::L003 | LintCode::L004 | LintCode::L005
+    )
+}
+
+/// Lint report for one PRA: findings plus which passes ran.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    /// PRA (phase) name.
+    pub pra: String,
+    pub findings: Vec<Finding>,
+    pub passes: Vec<PassOutcome>,
+}
+
+impl LintReport {
+    /// Any deny-level finding?
+    pub fn has_deny(&self) -> bool {
+        self.findings.iter().any(|f| f.code.severity() == Severity::Deny)
+    }
+
+    /// Number of deny-level findings.
+    pub fn deny_count(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.code.severity() == Severity::Deny)
+            .count()
+    }
+
+    /// Number of warn-level findings.
+    pub fn warn_count(&self) -> usize {
+        self.findings.len() - self.deny_count()
+    }
+
+    /// Clean under the given policy (`deny_warnings` promotes warnings).
+    pub fn is_clean(&self, deny_warnings: bool) -> bool {
+        if deny_warnings {
+            self.findings.is_empty()
+        } else {
+            !self.has_deny()
+        }
+    }
+
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "lint {}: {} deny, {} warn",
+            self.pra,
+            self.deny_count(),
+            self.warn_count()
+        );
+        for p in &self.passes {
+            let _ = writeln!(
+                out,
+                "  pass {:10} {}",
+                p.name,
+                if p.ran {
+                    format!("{} finding(s)", p.findings)
+                } else {
+                    "skipped".to_string()
+                }
+            );
+        }
+        for f in &self.findings {
+            let _ = writeln!(out, "  {f}");
+        }
+        out
+    }
+
+    /// Machine-readable JSON (hand-rolled like every artifact emitter in
+    /// this vendor-free tree).
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"pra\":\"{}\",\"deny\":{},\"warn\":{},\"passes\":[",
+            json_escape(&self.pra),
+            self.deny_count(),
+            self.warn_count()
+        );
+        for (i, p) in self.passes.iter().enumerate() {
+            let _ = write!(
+                out,
+                "{}{{\"name\":\"{}\",\"ran\":{},\"findings\":{}}}",
+                if i > 0 { "," } else { "" },
+                p.name,
+                p.ran,
+                p.findings
+            );
+        }
+        let _ = write!(out, "],\"findings\":[");
+        for (i, f) in self.findings.iter().enumerate() {
+            let _ = write!(
+                out,
+                "{}{{\"code\":\"{}\",\"severity\":\"{}\",\
+                 \"statement\":{},\"message\":\"{}\"}}",
+                if i > 0 { "," } else { "" },
+                f.code,
+                f.code.severity().label(),
+                match &f.statement {
+                    Some(s) => format!("\"{}\"", json_escape(s)),
+                    None => "null".to_string(),
+                },
+                json_escape(&f.message)
+            );
+        }
+        let _ = write!(out, "]}}");
+        out
+    }
+}
+
+/// Escape a string for embedding in a JSON literal.
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Run every applicable pass over one PRA.
+pub fn lint_pra(pra: &Pra, opts: &LintOptions) -> LintReport {
+    let mut findings = Vec::new();
+    let mut passes = Vec::new();
+    let mut blocked = false;
+    for pass in &PASSES {
+        let skip = (pass.needs_mapping && opts.array.is_none())
+            || (blocked && pass.name != "structural");
+        if skip {
+            passes.push(PassOutcome { name: pass.name, ran: false, findings: 0 });
+            continue;
+        }
+        let before = findings.len();
+        (pass.run)(pra, opts, &mut findings);
+        passes.push(PassOutcome {
+            name: pass.name,
+            ran: true,
+            findings: findings.len() - before,
+        });
+        if findings[before..].iter().any(|f| blocks_later_passes(f.code)) {
+            blocked = true;
+        }
+    }
+    // Deterministic order regardless of pass internals.
+    findings.sort_by(|a, b| {
+        (a.code, &a.statement, &a.message).cmp(&(
+            b.code,
+            &b.statement,
+            &b.message,
+        ))
+    });
+    LintReport { pra: pra.name.clone(), findings, passes }
+}
+
+/// Lint every phase of a workload (one report per phase).
+pub fn lint_workload(wl: &Workload, opts: &LintOptions) -> Vec<LintReport> {
+    wl.phases.iter().map(|p| lint_pra(p, opts)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_table_is_consistent() {
+        for c in LintCode::ALL {
+            assert_eq!(format!("{c}"), c.as_str());
+            assert!(!c.title().is_empty());
+        }
+        assert_eq!(LintCode::L100.severity(), Severity::Deny);
+        assert_eq!(LintCode::L102.severity(), Severity::Warn);
+        assert!(Severity::Warn < Severity::Deny);
+    }
+
+    #[test]
+    fn builtin_workloads_lint_clean_without_mapping() {
+        let opts = LintOptions::default();
+        for wl in crate::workloads::all() {
+            for rep in lint_workload(&wl, &opts) {
+                assert!(
+                    rep.findings.is_empty(),
+                    "{}: {}",
+                    rep.pra,
+                    rep.render()
+                );
+                // Without a mapping the first two passes run, the
+                // mapping pass is recorded skipped.
+                assert!(rep.passes[0].ran && rep.passes[1].ran);
+                assert!(!rep.passes[2].ran);
+            }
+        }
+    }
+
+    #[test]
+    fn json_report_is_well_formed() {
+        let wl = crate::workloads::by_name("gesummv").unwrap();
+        let rep = lint_pra(&wl.phases[0], &LintOptions::default());
+        let j = rep.to_json();
+        assert!(j.starts_with("{\"pra\":\"gesummv\""), "{j}");
+        assert!(j.contains("\"deny\":0"));
+        assert!(j.contains("\"passes\":["));
+        assert!(j.ends_with("]}"));
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,560 @@
+//! Polyhedral pass: symbolic proofs over the combined iteration +
+//! parameter space (`L100`–`L102`).
+//!
+//! Every obligation is phrased as the *emptiness of a violation
+//! polyhedron* and discharged by Fourier–Motzkin elimination
+//! ([`crate::polyhedral::guard`]'s `fm_feasible`) with the iteration
+//! variables `i0..` prepended to the PRA's parameter space — so one
+//! elimination covers **all** parameter values at once; nothing here
+//! samples a bounds grid. FM decides *rational* feasibility: a
+//! "feasible" answer may lack integer points, which errs toward
+//! reporting (safe for deny lints), while "infeasible" is a proof of
+//! integer emptiness (what `L102` needs before calling a statement
+//! unreachable).
+//!
+//! The obligations:
+//!
+//! * **`L100` bounds safety** — for each tensor access row `m_r(i)` with
+//!   declared extent `e_r(N)`, the sets
+//!   `{cond ∧ i ∈ space ∧ requires ∧ m_r(i) < 0}` and
+//!   `{… ∧ m_r(i) ≥ e_r}` must both be empty.
+//! * **`L101` dependence coverage** — a read `v[i − d]` must land inside
+//!   the iteration space *and* inside some producer's condition space.
+//!   The complement of the producers' union is expanded piecewise: one
+//!   negated condition constraint per producer (cross product), each
+//!   piece checked empty.
+//! * **`L102` reachability** — `{cond ∧ space ∧ requires}` integer-empty
+//!   means the statement never executes: a warning.
+
+use crate::polyhedral::guard::fm_feasible;
+use crate::polyhedral::{AffineExpr, Constraint, ParamSpace};
+use crate::pra::{
+    CondConstraint, IndexMap, Lhs, Operand, Pra, Statement, TensorDim,
+};
+
+use super::{Finding, LintCode, LintOptions};
+
+/// Cross products of producer-condition negations larger than this are
+/// not expanded; the read is then *reported* as unproven (`L101` is a
+/// deny lint — conservatism must point toward rejection, never toward
+/// silently skipping a proof).
+const MAX_COVERAGE_PIECES: usize = 4096;
+
+/// Combined-space Fourier–Motzkin context: variables
+/// `i0..i{n−1}, N0.., p0..` — the iteration vector ahead of the PRA's
+/// own parameters, so statement conditions, access functions, and the
+/// PRA's `requires` preconditions all embed as plain [`Constraint`]s
+/// over one space.
+pub(crate) struct FmCtx {
+    nd: usize,
+    total: usize,
+    /// The combined space (for rendering constraints in messages).
+    pub(crate) space: ParamSpace,
+    /// Combined index of each loop bound `N_ℓ`.
+    n_idx: Vec<usize>,
+    /// The PRA's parameter preconditions, lifted into the combined
+    /// space.
+    requires: Vec<Constraint>,
+}
+
+impl FmCtx {
+    pub(crate) fn new(pra: &Pra) -> Self {
+        let nd = pra.ndims;
+        let np = pra.space.len();
+        let total = nd + np;
+        let mut names: Vec<String> =
+            (0..nd).map(|l| format!("i{l}")).collect();
+        names.extend(pra.space.names().iter().cloned());
+        let space = ParamSpace::new(names);
+        let n_idx = (0..nd).map(|l| nd + pra.space.n_index(l)).collect();
+        let requires = pra
+            .requires
+            .iter()
+            .map(|c| {
+                let mut coeffs = vec![0i64; total];
+                coeffs[nd..].copy_from_slice(&c.0.coeffs);
+                Constraint::ge0(AffineExpr { coeffs, konst: c.0.konst })
+            })
+            .collect();
+        FmCtx { nd, total, space, n_idx, requires }
+    }
+
+    /// Parameter context: every loop bound at least `n_min`, plus the
+    /// PRA's declared `requires` preconditions.
+    pub(crate) fn context(&self, n_min: i64) -> Vec<Constraint> {
+        let mut cs: Vec<Constraint> = self
+            .n_idx
+            .iter()
+            .map(|&ni| {
+                Constraint::ge0(AffineExpr::param_scaled(
+                    self.total,
+                    ni,
+                    1,
+                    -n_min,
+                ))
+            })
+            .collect();
+        cs.extend(self.requires.iter().cloned());
+        cs
+    }
+
+    /// A statement condition `Σ a_ℓ·i_ℓ + konst(params) ≥ 0`, evaluated
+    /// at the shifted point `i − shift`.
+    pub(crate) fn cond(
+        &self,
+        c: &CondConstraint,
+        shift: &[i64],
+    ) -> Constraint {
+        let mut coeffs = vec![0i64; self.total];
+        coeffs[..self.nd].copy_from_slice(&c.a);
+        coeffs[self.nd..].copy_from_slice(&c.konst.coeffs);
+        let adj: i64 = c.a.iter().zip(shift).map(|(a, s)| a * s).sum();
+        Constraint::ge0(AffineExpr { coeffs, konst: c.konst.konst - adj })
+    }
+
+    /// All of a statement's conditions at the point `i − shift`.
+    pub(crate) fn conds(
+        &self,
+        s: &Statement,
+        shift: &[i64],
+    ) -> Vec<Constraint> {
+        s.cond.iter().map(|c| self.cond(c, shift)).collect()
+    }
+
+    /// `i − shift` inside the rectangular iteration space:
+    /// `0 ≤ i_ℓ − shift_ℓ ≤ N_ℓ − 1` for every dimension.
+    pub(crate) fn in_space(&self, shift: &[i64]) -> Vec<Constraint> {
+        let mut cs = Vec::with_capacity(2 * self.nd);
+        for l in 0..self.nd {
+            cs.push(Constraint::ge0(AffineExpr::param_scaled(
+                self.total,
+                l,
+                1,
+                -shift[l],
+            )));
+            let mut coeffs = vec![0i64; self.total];
+            coeffs[l] = -1;
+            coeffs[self.n_idx[l]] = 1;
+            cs.push(Constraint::ge0(AffineExpr {
+                coeffs,
+                konst: shift[l] - 1,
+            }));
+        }
+        cs
+    }
+
+    /// The `2n` half-spaces whose union is "`i − shift` outside the
+    /// iteration space", each with a label for the finding message.
+    pub(crate) fn out_of_space_pieces(
+        &self,
+        shift: &[i64],
+    ) -> Vec<(String, Constraint)> {
+        let mut out = Vec::with_capacity(2 * self.nd);
+        for l in 0..self.nd {
+            out.push((
+                format!("below 0 in dimension {l}"),
+                Constraint::ge0(AffineExpr::param_scaled(
+                    self.total,
+                    l,
+                    -1,
+                    shift[l] - 1,
+                )),
+            ));
+            let mut coeffs = vec![0i64; self.total];
+            coeffs[l] = 1;
+            coeffs[self.n_idx[l]] = -1;
+            out.push((
+                format!("at or above N{l} in dimension {l}"),
+                Constraint::ge0(AffineExpr { coeffs, konst: -shift[l] }),
+            ));
+        }
+        out
+    }
+
+    /// One access-function row `Σ row_ℓ·i_ℓ + off` as a combined-space
+    /// expression.
+    pub(crate) fn access_expr(&self, row: &[i64], off: i64) -> AffineExpr {
+        let mut coeffs = vec![0i64; self.total];
+        coeffs[..self.nd].copy_from_slice(row);
+        AffineExpr { coeffs, konst: off }
+    }
+
+    /// Declared extent of one tensor dimension.
+    pub(crate) fn extent_expr(&self, dim: &TensorDim) -> AffineExpr {
+        match dim {
+            TensorDim::Param(i) => {
+                AffineExpr::param(self.total, self.nd + i)
+            }
+            TensorDim::Fixed(v) => AffineExpr::constant(self.total, *v),
+        }
+    }
+
+    /// Rational feasibility of the conjunction of all given constraint
+    /// sets (`true` may still be integer-empty; `false` is a proof of
+    /// emptiness).
+    pub(crate) fn feasible(&self, sets: &[&[Constraint]]) -> bool {
+        let refs: Vec<&Constraint> =
+            sets.iter().flat_map(|s| s.iter()).collect();
+        fm_feasible(&refs)
+    }
+}
+
+pub(super) fn run(pra: &Pra, _opts: &LintOptions, out: &mut Vec<Finding>) {
+    let ctx = FmCtx::new(pra);
+    let base = ctx.context(1);
+    let zero = vec![0i64; pra.ndims];
+    let space_here = ctx.in_space(&zero);
+    for s in &pra.statements {
+        let conds = ctx.conds(s, &zero);
+        bounds_safety(pra, &ctx, &base, &space_here, s, &conds, out);
+        dependence_coverage(pra, &ctx, &base, &space_here, s, &conds, out);
+        reachability(&ctx, &base, &space_here, s, &conds, out);
+    }
+}
+
+/// `L100` for every tensor access of one statement.
+fn bounds_safety(
+    pra: &Pra,
+    ctx: &FmCtx,
+    base: &[Constraint],
+    space_here: &[Constraint],
+    s: &Statement,
+    conds: &[Constraint],
+    out: &mut Vec<Finding>,
+) {
+    let mut accesses: Vec<(&str, &IndexMap)> = s
+        .args
+        .iter()
+        .filter_map(|a| match a {
+            Operand::Tensor { name, map } => Some((name.as_str(), map)),
+            Operand::Var { .. } => None,
+        })
+        .collect();
+    if let Lhs::Tensor { name, map } = &s.lhs {
+        accesses.push((name.as_str(), map));
+    }
+    for (tensor, map) in accesses {
+        // Declared and rank-consistent: guaranteed by the structural
+        // pass (L003/L005 block this pass otherwise).
+        let decl = pra.tensor(tensor).expect("structural pass gated");
+        for (r, (row, off)) in
+            map.rows.iter().zip(&map.offset).enumerate()
+        {
+            let acc = ctx.access_expr(row, *off);
+            let ext = ctx.extent_expr(&decl.shape[r]);
+            let low = Constraint::ge0((-&acc).plus(-1));
+            let high = Constraint::ge0(&acc - &ext);
+            for (kind, viol) in
+                [("below 0", low), ("at or above its extent", high)]
+            {
+                if ctx.feasible(&[
+                    conds,
+                    space_here,
+                    base,
+                    std::slice::from_ref(&viol),
+                ]) {
+                    out.push(Finding::new(
+                        LintCode::L100,
+                        Some(&s.name),
+                        format!(
+                            "access {tensor}[dim {r}] can index {kind} \
+                             for admissible parameters (violation \
+                             region {} is non-empty)",
+                            viol.display(&ctx.space)
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// `L101` for every variable read of one statement.
+fn dependence_coverage(
+    pra: &Pra,
+    ctx: &FmCtx,
+    base: &[Constraint],
+    space_here: &[Constraint],
+    s: &Statement,
+    conds: &[Constraint],
+    out: &mut Vec<Finding>,
+) {
+    for arg in &s.args {
+        let Operand::Var { name, dep } = arg else { continue };
+        // 1) The read point i − d can leave the iteration space.
+        let mut reported = false;
+        for (label, piece) in ctx.out_of_space_pieces(dep) {
+            if reported {
+                break;
+            }
+            if ctx.feasible(&[
+                conds,
+                space_here,
+                base,
+                std::slice::from_ref(&piece),
+            ]) {
+                out.push(Finding::new(
+                    LintCode::L101,
+                    Some(&s.name),
+                    format!(
+                        "read {name}[i − {dep:?}] can land {label}, \
+                         outside the iteration space"
+                    ),
+                ));
+                reported = true;
+            }
+        }
+        if reported {
+            continue;
+        }
+        // 2) Inside the space, some producer of `name` must be active
+        //    at i − d. Producers exist (L005 gates this pass), and an
+        //    unconditioned producer covers everything.
+        let producers: Vec<&Statement> = pra
+            .statements
+            .iter()
+            .filter(|p| matches!(&p.lhs, Lhs::Var(v) if v == name))
+            .collect();
+        if producers.iter().any(|p| p.cond.is_empty()) {
+            continue;
+        }
+        let pieces: usize = producers
+            .iter()
+            .map(|p| p.cond.len())
+            .try_fold(1usize, |a, b| a.checked_mul(b))
+            .unwrap_or(usize::MAX);
+        if pieces > MAX_COVERAGE_PIECES {
+            out.push(Finding::new(
+                LintCode::L101,
+                Some(&s.name),
+                format!(
+                    "coverage of read {name}[i − {dep:?}] needs {pieces} \
+                     condition pieces (> {MAX_COVERAGE_PIECES}); \
+                     refusing to assume it is covered"
+                ),
+            ));
+            continue;
+        }
+        let space_there = ctx.in_space(dep);
+        // Negated condition constraints per producer, at the read point.
+        let negs: Vec<Vec<Constraint>> = producers
+            .iter()
+            .map(|p| {
+                p.cond.iter().map(|c| ctx.cond(c, dep).negated()).collect()
+            })
+            .collect();
+        // Cross product: one negated constraint per producer per piece.
+        let mut sel = vec![0usize; negs.len()];
+        'pieces: loop {
+            let piece: Vec<Constraint> = sel
+                .iter()
+                .zip(&negs)
+                .map(|(&k, n)| n[k].clone())
+                .collect();
+            if ctx.feasible(&[
+                conds,
+                space_here,
+                &space_there,
+                base,
+                &piece,
+            ]) {
+                out.push(Finding::new(
+                    LintCode::L101,
+                    Some(&s.name),
+                    format!(
+                        "read {name}[i − {dep:?}] can land where no \
+                         producer of {name} is active (uncovered piece: \
+                         {})",
+                        piece
+                            .iter()
+                            .map(|c| c.display(&ctx.space).to_string())
+                            .collect::<Vec<_>>()
+                            .join(" ∧ ")
+                    ),
+                ));
+                break 'pieces;
+            }
+            // Odometer over the selections; done when it wraps.
+            let mut j = 0;
+            loop {
+                if j == sel.len() {
+                    break 'pieces;
+                }
+                sel[j] += 1;
+                if sel[j] < negs[j].len() {
+                    break;
+                }
+                sel[j] = 0;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// `L102`: guard infeasible for every admissible parameter value.
+fn reachability(
+    ctx: &FmCtx,
+    base: &[Constraint],
+    space_here: &[Constraint],
+    s: &Statement,
+    conds: &[Constraint],
+    out: &mut Vec<Finding>,
+) {
+    if !ctx.feasible(&[conds, space_here, base]) {
+        out.push(Finding::new(
+            LintCode::L102,
+            Some(&s.name),
+            "condition space is empty for every admissible parameter \
+             value; the statement never executes"
+                .into(),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::ParamSpace;
+    use crate::pra::{Op, Statement, TensorDecl};
+
+    fn lint(pra: &Pra) -> Vec<Finding> {
+        let mut out = Vec::new();
+        run(pra, &LintOptions::default(), &mut out);
+        out
+    }
+
+    /// A 2-deep PRA reading `T[i1, i0]` (transposed) without declaring
+    /// squareness: provably out of bounds at e.g. `N1 > N0` — but only
+    /// symbolically, no concrete bounds ever exhibit it here.
+    fn transposed(requires_square: bool) -> Pra {
+        let nd = 2;
+        let mut pra = Pra {
+            name: "tr".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![Statement {
+                name: "S1".into(),
+                lhs: Lhs::Var("a".into()),
+                op: Op::Copy,
+                args: vec![Operand::tensor(
+                    "T",
+                    IndexMap::select(&[1, 0], nd),
+                )],
+                cond: vec![],
+            }],
+            tensors: vec![TensorDecl {
+                name: "T".into(),
+                shape: vec![TensorDim::Param(0), TensorDim::Param(1)],
+            }],
+            requires: vec![],
+        };
+        if requires_square {
+            let np = pra.space.len();
+            let n0 = AffineExpr::param(np, pra.space.n_index(0));
+            let n1 = AffineExpr::param(np, pra.space.n_index(1));
+            pra.requires.push(Constraint::ge(&n0, &n1));
+            pra.requires.push(Constraint::le(&n0, &n1));
+        }
+        pra
+    }
+
+    #[test]
+    fn transposed_access_oob_without_squareness() {
+        let f = lint(&transposed(false));
+        assert!(
+            f.iter().any(|x| x.code == LintCode::L100),
+            "transposed access must be L100 without N0 = N1: {f:?}"
+        );
+    }
+
+    #[test]
+    fn requires_precondition_discharges_the_proof() {
+        let f = lint(&transposed(true));
+        assert!(
+            f.iter().all(|x| x.code != LintCode::L100),
+            "N0 = N1 makes the transposed access safe: {f:?}"
+        );
+    }
+
+    #[test]
+    fn uncovered_read_is_l101() {
+        // b reads a[i − (1,0)] everywhere, but a is only produced at
+        // i0 = 0 — every read with i0 ≥ 2 lands where no producer ran.
+        let nd = 2;
+        let np = 2 * nd;
+        let at0 = vec![
+            CondConstraint::ge_const(0, 0, nd, np),
+            CondConstraint::le_const(0, 0, nd, np),
+        ];
+        let pra = Pra {
+            name: "unc".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![
+                Statement {
+                    name: "S1".into(),
+                    lhs: Lhs::Var("a".into()),
+                    op: Op::Copy,
+                    args: vec![Operand::tensor(
+                        "T",
+                        IndexMap::select(&[1], nd),
+                    )],
+                    cond: at0,
+                },
+                Statement {
+                    name: "S2".into(),
+                    lhs: Lhs::Var("b".into()),
+                    op: Op::Copy,
+                    args: vec![Operand::var("a", vec![1, 0])],
+                    cond: vec![CondConstraint::ge_const(0, 1, nd, np)],
+                },
+            ],
+            tensors: vec![TensorDecl {
+                name: "T".into(),
+                shape: vec![TensorDim::Param(1)],
+            }],
+            requires: vec![],
+        };
+        let f = lint(&pra);
+        assert!(
+            f.iter()
+                .any(|x| x.code == LintCode::L101
+                    && x.statement.as_deref() == Some("S2")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn contradictory_guard_is_l102() {
+        let nd = 1;
+        let np = 2;
+        let pra = Pra {
+            name: "unr".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![Statement {
+                name: "S1".into(),
+                lhs: Lhs::Var("a".into()),
+                op: Op::Copy,
+                args: vec![Operand::tensor(
+                    "T",
+                    IndexMap::identity(1, nd),
+                )],
+                // i0 ≥ 2 ∧ i0 ≤ 1: empty for every N.
+                cond: vec![
+                    CondConstraint::ge_const(0, 2, nd, np),
+                    CondConstraint::le_const(0, 1, nd, np),
+                ],
+            }],
+            tensors: vec![TensorDecl {
+                name: "T".into(),
+                shape: vec![TensorDim::Param(0)],
+            }],
+            requires: vec![],
+        };
+        let f = lint(&pra);
+        assert!(f.iter().any(|x| x.code == LintCode::L102), "{f:?}");
+        // An empty statement's accesses are vacuously safe: no L100.
+        assert!(f.iter().all(|x| x.code != LintCode::L100), "{f:?}");
+    }
+}

@@ -1,0 +1,266 @@
+//! Structural pass: shape-level well-formedness (`L001`–`L010`).
+//!
+//! The deny half absorbs [`crate::pra::validate`] — every [`PraError`]
+//! maps onto a stable lint code, so the panic-helper
+//! [`crate::pra::assert_valid`] (trusted construction paths) and this
+//! pass (untrusted input) report the same defects. The warn half adds
+//! dataflow hygiene the validator never had: malformed reductions,
+//! unused iteration dimensions, dead tensors, dead statements.
+
+use crate::pra::{Lhs, Operand, Pra, PraError};
+
+use super::{Finding, LintCode, LintOptions};
+
+/// Map a validator error onto its lint code.
+fn code_of(e: &PraError) -> LintCode {
+    match e {
+        PraError::DuplicateName(..) => LintCode::L001,
+        PraError::Arity(..) => LintCode::L002,
+        PraError::AccessRank(..)
+        | PraError::AccessDims(..)
+        | PraError::AccessOffset(..) => LintCode::L003,
+        PraError::DepLen(..) | PraError::CondLen(..) => LintCode::L004,
+        PraError::UndefinedVar(..) | PraError::UnknownTensor(..) => {
+            LintCode::L005
+        }
+        PraError::ZeroDepCycle | PraError::NonLexPositiveDep(..) => {
+            LintCode::L006
+        }
+    }
+}
+
+/// Statement a validator error anchors to, when it names one.
+fn statement_of(e: &PraError) -> Option<&str> {
+    match e {
+        PraError::Arity(s, ..)
+        | PraError::DepLen(s, ..)
+        | PraError::UnknownTensor(s, ..)
+        | PraError::UndefinedVar(s, ..)
+        | PraError::CondLen(s, ..)
+        | PraError::NonLexPositiveDep(s, ..)
+        | PraError::DuplicateName(s)
+        | PraError::AccessRank(s, ..)
+        | PraError::AccessDims(s, ..)
+        | PraError::AccessOffset(s, ..) => Some(s),
+        PraError::ZeroDepCycle => None,
+    }
+}
+
+pub(super) fn run(pra: &Pra, _opts: &LintOptions, out: &mut Vec<Finding>) {
+    let errs = crate::pra::validate(pra);
+    let mut shapes_ok = true;
+    for e in &errs {
+        let code = code_of(e);
+        if super::blocks_later_passes(code) {
+            shapes_ok = false;
+        }
+        out.push(Finding::new(code, statement_of(e), e.to_string()));
+    }
+    // The hygiene warns index into dependence vectors, access rows and
+    // condition coefficients — only safe once the shape checks passed.
+    if !shapes_ok {
+        return;
+    }
+    reduction_shape(pra, out);
+    unused_dims(pra, out);
+    dead_tensors(pra, out);
+    dead_statements(pra, out);
+}
+
+/// `L007`: a reduction folds exactly one previous value of its own
+/// variable; two or more self-reads in one statement cannot be realized
+/// as a single-assignment accumulation chain. (A zero-dependence
+/// self-read is already `L006` via the zero-dependence cycle check.)
+fn reduction_shape(pra: &Pra, out: &mut Vec<Finding>) {
+    for s in &pra.statements {
+        let Lhs::Var(lhs) = &s.lhs else { continue };
+        let self_reads = s
+            .args
+            .iter()
+            .filter(
+                |a| matches!(a, Operand::Var { name, .. } if name == lhs),
+            )
+            .count();
+        if self_reads >= 2 {
+            out.push(Finding::new(
+                LintCode::L007,
+                Some(&s.name),
+                format!(
+                    "statement folds {self_reads} reads of its own \
+                     variable {lhs}; a single-assignment reduction may \
+                     fold at most one"
+                ),
+            ));
+        }
+    }
+}
+
+/// `L008`: an iteration dimension no access function, dependence vector,
+/// or condition mentions — the loop only replicates work.
+fn unused_dims(pra: &Pra, out: &mut Vec<Finding>) {
+    for l in 0..pra.ndims {
+        let map_uses =
+            |m: &crate::pra::IndexMap| m.rows.iter().any(|r| r[l] != 0);
+        let used = pra.statements.iter().any(|s| {
+            s.args.iter().any(|a| match a {
+                Operand::Var { dep, .. } => dep[l] != 0,
+                Operand::Tensor { map, .. } => map_uses(map),
+            }) || matches!(&s.lhs, Lhs::Tensor { map, .. } if map_uses(map))
+                || s.cond.iter().any(|c| c.a[l] != 0)
+        });
+        if !used {
+            out.push(Finding::new(
+                LintCode::L008,
+                None,
+                format!(
+                    "iteration dimension i{l} is unused by every access, \
+                     dependence, and condition"
+                ),
+            ));
+        }
+    }
+}
+
+/// `L009`: a declared tensor nothing reads or writes.
+fn dead_tensors(pra: &Pra, out: &mut Vec<Finding>) {
+    for t in &pra.tensors {
+        let used = pra.statements.iter().any(|s| {
+            s.args.iter().any(
+                |a| matches!(a, Operand::Tensor { name, .. } if *name == t.name),
+            ) || matches!(&s.lhs, Lhs::Tensor { name, .. } if *name == t.name)
+        });
+        if !used {
+            out.push(Finding::new(
+                LintCode::L009,
+                None,
+                format!("tensor {} is declared but never accessed", t.name),
+            ));
+        }
+    }
+}
+
+/// `L010`: a statement defining a variable no statement reads (tensor
+/// writes are outputs and never dead). Statements whose variable is read
+/// only by themselves (a self-sustaining propagation nothing consumes)
+/// are dead too.
+fn dead_statements(pra: &Pra, out: &mut Vec<Finding>) {
+    for s in &pra.statements {
+        let Lhs::Var(v) = &s.lhs else { continue };
+        let read_elsewhere = pra.statements.iter().any(|c| {
+            c.name != s.name
+                && c.args.iter().any(
+                    |a| matches!(a, Operand::Var { name, .. } if name == v),
+                )
+        });
+        if !read_elsewhere {
+            out.push(Finding::new(
+                LintCode::L010,
+                Some(&s.name),
+                format!("defines {v}, which no other statement reads"),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::ParamSpace;
+    use crate::pra::{IndexMap, Op, Statement, TensorDecl, TensorDim};
+
+    fn base(nd: usize) -> Pra {
+        Pra {
+            name: "t".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![],
+            tensors: vec![],
+            requires: vec![],
+        }
+    }
+
+    fn lint(pra: &Pra) -> Vec<Finding> {
+        let mut out = Vec::new();
+        run(pra, &LintOptions::default(), &mut out);
+        out
+    }
+
+    #[test]
+    fn validator_errors_get_codes() {
+        let mut pra = base(1);
+        pra.statements.push(Statement {
+            name: "S1".into(),
+            lhs: Lhs::Var("a".into()),
+            op: Op::Add, // arity 2, one arg → L002
+            args: vec![Operand::var0("ghost", 1)], // undefined → L005
+            cond: vec![],
+        });
+        let f = lint(&pra);
+        assert!(f.iter().any(|x| x.code == LintCode::L002), "{f:?}");
+        assert!(f.iter().any(|x| x.code == LintCode::L005), "{f:?}");
+        // Shape errors present → hygiene warns suppressed.
+        assert!(f.iter().all(|x| x.code != LintCode::L010));
+    }
+
+    #[test]
+    fn double_self_read_is_l007() {
+        let mut pra = base(1);
+        pra.statements.push(Statement {
+            name: "S1".into(),
+            lhs: Lhs::Var("a".into()),
+            op: Op::Add,
+            args: vec![
+                Operand::var("a", vec![1]),
+                Operand::var("a", vec![1]),
+            ],
+            cond: vec![],
+        });
+        // Consume `a` so L010 does not fire alongside.
+        pra.statements.push(Statement {
+            name: "S2".into(),
+            lhs: Lhs::Tensor {
+                name: "T".into(),
+                map: IndexMap::identity(1, 1),
+            },
+            op: Op::Copy,
+            args: vec![Operand::var0("a", 1)],
+            cond: vec![],
+        });
+        pra.tensors.push(TensorDecl {
+            name: "T".into(),
+            shape: vec![TensorDim::Param(0)],
+        });
+        let f = lint(&pra);
+        assert_eq!(
+            f.iter().filter(|x| x.code == LintCode::L007).count(),
+            1,
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn hygiene_warns_fire() {
+        let mut pra = base(2);
+        // S1 defines a variable nobody reads (L010), uses only i0
+        // (i1 unused → L008); tensor D declared, never touched (L009).
+        pra.statements.push(Statement {
+            name: "S1".into(),
+            lhs: Lhs::Var("a".into()),
+            op: Op::Copy,
+            args: vec![Operand::tensor("T", IndexMap::select(&[0], 2))],
+            cond: vec![],
+        });
+        pra.tensors.push(TensorDecl {
+            name: "T".into(),
+            shape: vec![TensorDim::Param(0)],
+        });
+        pra.tensors.push(TensorDecl {
+            name: "D".into(),
+            shape: vec![TensorDim::Param(0)],
+        });
+        let f = lint(&pra);
+        for code in [LintCode::L008, LintCode::L009, LintCode::L010] {
+            assert!(f.iter().any(|x| x.code == code), "{code}: {f:?}");
+        }
+    }
+}

@@ -20,7 +20,12 @@ fn main() {
              [--bounds-sweep N,N,..] [--tile-scales K,K] \
              [--policies all|tcpa,no-fd,no-reuse]\n                       \
              [--prune-symmetric] [--workers W] [--out DIR]\n  \
-             tcpa-energy figures  [--out DIR] [--quick]"
+             tcpa-energy figures  [--out DIR] [--quick]\n  \
+             tcpa-energy lint     --workload NAME | --all-builtins \
+             [--array TxT] [--pi N]\n                       \
+             [--json] [--json-out FILE] [--deny warnings]\n\n\
+             `analyze` and `dse` lint their workload first; deny-level \
+             findings abort\nthe run (bypass with --no-lint)."
         );
         return;
     }

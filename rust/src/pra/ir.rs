@@ -14,7 +14,7 @@
 
 use std::fmt;
 
-use crate::polyhedral::{AffineExpr, ParamSpace};
+use crate::polyhedral::{AffineExpr, Constraint, ParamSpace};
 
 /// Operation computed by a statement (the `F_q`).
 ///
@@ -320,6 +320,13 @@ pub struct Pra {
     pub statements: Vec<Statement>,
     /// External tensors (inputs and outputs).
     pub tensors: Vec<TensorDecl>,
+    /// Parameter preconditions the kernel assumes, as constraints over
+    /// [`Pra::space`] (e.g. squareness `N0 = N1` for transposed-access
+    /// kernels like MVT/SYRK). Static verification ([`crate::lint`])
+    /// proves its polyhedral obligations *under* these constraints; they
+    /// are also checked at concrete parameters via
+    /// [`Pra::requires_hold`]. Empty = valid for all parameter values.
+    pub requires: Vec<Constraint>,
 }
 
 impl Pra {
@@ -331,6 +338,12 @@ impl Pra {
     /// Look up a statement by name.
     pub fn statement(&self, name: &str) -> Option<&Statement> {
         self.statements.iter().find(|s| s.name == name)
+    }
+
+    /// True when every declared parameter precondition holds at the
+    /// given concrete parameter values.
+    pub fn requires_hold(&self, params: &[i64]) -> bool {
+        self.requires.iter().all(|c| c.holds(params))
     }
 
     /// Concrete iteration-space volume `Π N_ℓ`.
@@ -452,6 +465,7 @@ mod tests {
             space: ParamSpace::loop_nest(2),
             statements: vec![],
             tensors: vec![],
+            requires: vec![],
         };
         let pts = pra.iter_points(&[2, 3, 1, 1]);
         assert_eq!(pts.len(), 6);

@@ -13,4 +13,4 @@ pub use ir::{
     TensorDim, Workload,
 };
 pub use rdg::{Rdg, RdgEdge};
-pub use validate::{validate, PraError};
+pub use validate::{assert_valid, validate, PraError};

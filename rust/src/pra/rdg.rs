@@ -223,6 +223,7 @@ mod tests {
                 },
             ],
             tensors: vec![],
+            requires: vec![],
         };
         let rdg = Rdg::build(&pra);
         assert!(rdg.intra_iteration_order(2).is_none());

@@ -3,7 +3,7 @@
 
 use std::collections::BTreeSet;
 
-use super::ir::{Lhs, Operand, Pra};
+use super::ir::{IndexMap, Lhs, Operand, Pra};
 use super::rdg::Rdg;
 
 /// Validation failure.
@@ -17,6 +17,16 @@ pub enum PraError {
     ZeroDepCycle,
     NonLexPositiveDep(String, Vec<i64>),
     DuplicateName(String),
+    /// Tensor access function has a different rank than the declared
+    /// tensor shape: (statement, tensor, access rank, declared rank).
+    AccessRank(String, String, usize, usize),
+    /// A row of a tensor access function has the wrong number of
+    /// iteration-space coefficients: (statement, tensor, row width,
+    /// loop depth).
+    AccessDims(String, String, usize, usize),
+    /// Tensor access offset vector length differs from the access rank:
+    /// (statement, tensor, offset length, access rank).
+    AccessOffset(String, String, usize, usize),
 }
 
 impl std::fmt::Display for PraError {
@@ -57,11 +67,72 @@ impl std::fmt::Display for PraError {
             PraError::DuplicateName(s) => {
                 write!(f, "duplicate statement name {s}")
             }
+            PraError::AccessRank(s, t, got, want) => write!(
+                f,
+                "statement {s}: access to tensor {t} has rank {got}, \
+                 declared shape has rank {want}"
+            ),
+            PraError::AccessDims(s, t, got, depth) => write!(
+                f,
+                "statement {s}: access row for tensor {t} has {got} \
+                 coefficients, loop depth is {depth}"
+            ),
+            PraError::AccessOffset(s, t, got, rank) => write!(
+                f,
+                "statement {s}: access offset for tensor {t} has {got} \
+                 entries, access rank is {rank}"
+            ),
         }
     }
 }
 
 impl std::error::Error for PraError {}
+
+/// Check a tensor access function against the declared tensor shape and
+/// the loop depth (the satellite of lint code `L003`: a malformed
+/// `IndexMap` used to flow silently into classification and counting).
+fn check_access(
+    errs: &mut Vec<PraError>,
+    pra: &Pra,
+    stmt: &str,
+    tensor: &str,
+    map: &IndexMap,
+) {
+    match pra.tensor(tensor) {
+        None => errs.push(PraError::UnknownTensor(
+            stmt.to_string(),
+            tensor.to_string(),
+        )),
+        Some(decl) => {
+            if map.rank() != decl.shape.len() {
+                errs.push(PraError::AccessRank(
+                    stmt.to_string(),
+                    tensor.to_string(),
+                    map.rank(),
+                    decl.shape.len(),
+                ));
+            }
+        }
+    }
+    for row in &map.rows {
+        if row.len() != pra.ndims {
+            errs.push(PraError::AccessDims(
+                stmt.to_string(),
+                tensor.to_string(),
+                row.len(),
+                pra.ndims,
+            ));
+        }
+    }
+    if map.offset.len() != map.rows.len() {
+        errs.push(PraError::AccessOffset(
+            stmt.to_string(),
+            tensor.to_string(),
+            map.offset.len(),
+            map.rows.len(),
+        ));
+    }
+}
 
 /// Validate a PRA. Returns all detected problems (empty = valid).
 pub fn validate(pra: &Pra) -> Vec<PraError> {
@@ -113,20 +184,13 @@ pub fn validate(pra: &Pra) -> Vec<PraError> {
                         }
                     }
                 }
-                Operand::Tensor { name, .. } => {
-                    if pra.tensor(name).is_none() {
-                        errs.push(PraError::UnknownTensor(
-                            s.name.clone(),
-                            name.clone(),
-                        ));
-                    }
+                Operand::Tensor { name, map } => {
+                    check_access(&mut errs, pra, &s.name, name, map);
                 }
             }
         }
-        if let Lhs::Tensor { name, .. } = &s.lhs {
-            if pra.tensor(name).is_none() {
-                errs.push(PraError::UnknownTensor(s.name.clone(), name.clone()));
-            }
+        if let Lhs::Tensor { name, map } = &s.lhs {
+            check_access(&mut errs, pra, &s.name, name, map);
         }
         for c in &s.cond {
             if c.a.len() != pra.ndims {
@@ -145,6 +209,27 @@ pub fn validate(pra: &Pra) -> Vec<PraError> {
     errs
 }
 
+/// Panic with a readable report unless the PRA is structurally valid.
+///
+/// This is the one shared gate all trusted construction paths funnel
+/// through: [`crate::workloads::PraBuilder::build`] calls it on every
+/// builtin workload, and `coordinator::validate_workload` calls it on
+/// its input. Untrusted input should instead go through the non-fatal
+/// [`crate::lint`] engine, whose structural pass reports the same
+/// findings with stable lint codes.
+pub fn assert_valid(pra: &Pra) {
+    let errs = validate(pra);
+    assert!(
+        errs.is_empty(),
+        "PRA {:?} failed structural validation:\n  {}",
+        pra.name,
+        errs.iter()
+            .map(|e| e.to_string())
+            .collect::<Vec<_>>()
+            .join("\n  ")
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,15 +238,11 @@ mod tests {
 
     #[test]
     fn all_builtin_workloads_validate() {
+        // The builders already assert this on construction; running the
+        // shared helper here keeps the failure message pinned.
         for wl in crate::workloads::all() {
             for phase in &wl.phases {
-                let errs = validate(phase);
-                assert!(
-                    errs.is_empty(),
-                    "{} phase {}: {errs:?}",
-                    wl.name,
-                    phase.name
-                );
+                assert_valid(phase);
             }
         }
     }
@@ -181,6 +262,7 @@ mod tests {
                 cond: vec![],
             }],
             tensors: vec![],
+            requires: vec![],
         };
         let errs = validate(&pra);
         assert!(errs.iter().any(|e| matches!(e, PraError::Arity(..))));
@@ -204,6 +286,7 @@ mod tests {
                 cond: vec![],
             }],
             tensors: vec![],
+            requires: vec![],
         };
         let errs = validate(&pra);
         assert!(errs.iter().any(|e| matches!(e, PraError::UndefinedVar(..))));
@@ -225,10 +308,97 @@ mod tests {
                 cond: vec![],
             }],
             tensors: vec![],
+            requires: vec![],
         };
         let errs = validate(&pra);
         assert!(errs
             .iter()
             .any(|e| matches!(e, PraError::NonLexPositiveDep(..))));
+    }
+
+    #[test]
+    fn malformed_access_functions_detected() {
+        let nd = 2;
+        let pra = Pra {
+            name: "bad".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![
+                Statement {
+                    name: "S1".into(),
+                    // Rank-1 access to a rank-2 tensor.
+                    lhs: Lhs::Var("a".into()),
+                    op: Op::Copy,
+                    args: vec![Operand::tensor(
+                        "T",
+                        IndexMap::select(&[0], nd),
+                    )],
+                    cond: vec![],
+                },
+                Statement {
+                    name: "S2".into(),
+                    // Access row with 1 coefficient in a 2-deep nest, and
+                    // an offset vector longer than the access rank.
+                    lhs: Lhs::Var("b".into()),
+                    op: Op::Copy,
+                    args: vec![Operand::Tensor {
+                        name: "T".into(),
+                        map: IndexMap {
+                            rows: vec![vec![1], vec![0, 1]],
+                            offset: vec![0, 0, 0],
+                        },
+                    }],
+                    cond: vec![],
+                },
+            ],
+            tensors: vec![TensorDecl {
+                name: "T".into(),
+                shape: vec![TensorDim::Param(0), TensorDim::Param(1)],
+            }],
+            requires: vec![],
+        };
+        let errs = validate(&pra);
+        assert!(
+            errs.iter().any(|e| matches!(
+                e,
+                PraError::AccessRank(s, t, 1, 2) if s == "S1" && t == "T"
+            )),
+            "{errs:?}"
+        );
+        assert!(
+            errs.iter().any(|e| matches!(
+                e,
+                PraError::AccessDims(s, _, 1, 2) if s == "S2"
+            )),
+            "{errs:?}"
+        );
+        assert!(
+            errs.iter().any(|e| matches!(
+                e,
+                PraError::AccessOffset(s, _, 3, 2) if s == "S2"
+            )),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "failed structural validation")]
+    fn assert_valid_panics_on_malformed() {
+        let nd = 1;
+        let pra = Pra {
+            name: "bad".into(),
+            ndims: nd,
+            space: ParamSpace::loop_nest(nd),
+            statements: vec![Statement {
+                name: "S1".into(),
+                lhs: Lhs::Var("a".into()),
+                op: Op::Add,
+                args: vec![Operand::var0("a", nd)],
+                cond: vec![],
+            }],
+            tensors: vec![],
+            requires: vec![],
+        };
+        assert_valid(&pra);
     }
 }

@@ -8,7 +8,7 @@
 //! triples with consistent naming so the eight benchmark PRAs stay terse
 //! and uniform.
 
-use crate::polyhedral::ParamSpace;
+use crate::polyhedral::{AffineExpr, Constraint, ParamSpace};
 use crate::pra::ir::{
     CondConstraint, IndexMap, Lhs, Op, Operand, Pra, Statement, TensorDecl,
     TensorDim,
@@ -21,6 +21,7 @@ pub struct PraBuilder {
     space: ParamSpace,
     statements: Vec<Statement>,
     tensors: Vec<TensorDecl>,
+    requires: Vec<Constraint>,
     next_stmt: usize,
 }
 
@@ -34,6 +35,7 @@ impl PraBuilder {
             space: ParamSpace::loop_nest(ndims),
             statements: Vec::new(),
             tensors: Vec::new(),
+            requires: Vec::new(),
             next_stmt: 1,
         }
     }
@@ -113,6 +115,29 @@ impl PraBuilder {
         d
     }
 
+    /// Declare the precondition `N_d0 = N_d1` (e.g. for transposed
+    /// accesses like MVT's `A[i1, i0]`, which stay in bounds only on
+    /// square problems). Recorded in [`Pra::requires`]; the lint
+    /// engine's bounds-safety proofs run under these constraints.
+    pub fn require_equal_bounds(&mut self, d0: usize, d1: usize) -> &mut Self {
+        let np = self.nparams();
+        let a = AffineExpr::param(np, self.space.n_index(d0));
+        let b = AffineExpr::param(np, self.space.n_index(d1));
+        self.requires.push(Constraint::ge(&a, &b));
+        self.requires.push(Constraint::le(&a, &b));
+        self
+    }
+
+    /// Declare the precondition `N_dim ≥ min` (e.g. a stencil needing at
+    /// least three spatial points).
+    pub fn require_min_bound(&mut self, dim: usize, min: i64) -> &mut Self {
+        let np = self.nparams();
+        let n = AffineExpr::param(np, self.space.n_index(dim));
+        self.requires
+            .push(Constraint::ge(&n, &AffineExpr::constant(np, min)));
+        self
+    }
+
     /// Broadcast-by-propagation: two statements defining `var` everywhere:
     ///
     /// ```text
@@ -172,14 +197,26 @@ impl PraBuilder {
         self
     }
 
-    /// Finish.
+    /// Finish, asserting structural validity: every builtin-workload
+    /// constructor funnels through this single check (the shared helper
+    /// behind [`crate::pra::assert_valid`]), so no builder-made PRA
+    /// reaches tiling, analysis, or simulation malformed. Tests that
+    /// need a deliberately broken PRA use [`Self::build_unchecked`].
     pub fn build(self) -> Pra {
+        let pra = self.build_unchecked();
+        crate::pra::assert_valid(&pra);
+        pra
+    }
+
+    /// Finish without the structural validation of [`Self::build`].
+    pub fn build_unchecked(self) -> Pra {
         Pra {
             name: self.name,
             ndims: self.ndims,
             space: self.space,
             statements: self.statements,
             tensors: self.tensors,
+            requires: self.requires,
         }
     }
 }

@@ -212,6 +212,7 @@ mod tests {
                 cond: vec![],
             }],
             tensors: vec![],
+            requires: vec![],
         };
         interpret(&pra, &[3, 1], &Default::default());
     }

@@ -16,6 +16,8 @@ use super::builder::PraBuilder;
 pub fn jacobi1d_pra() -> Pra {
     let nd = 2;
     let mut b = PraBuilder::new("jacobi1d", nd);
+    // The three-point stencil needs at least three spatial points.
+    b.require_min_bound(1, 3);
     b.tensor("Ain", &[1]).tensor("Aout", &[1]);
     // S1: v = Ain[i1] at t = 0.
     let at_t0 = b.eq_const(0, 0);

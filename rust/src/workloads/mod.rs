@@ -86,6 +86,7 @@ pub fn twist_unschedulable() -> Workload {
             },
         ],
         tensors: vec![],
+        requires: vec![],
     })
 }
 

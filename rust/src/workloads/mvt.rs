@@ -13,6 +13,8 @@ use super::builder::PraBuilder;
 pub fn mvt_pra() -> Pra {
     let nd = 2;
     let mut b = PraBuilder::new("mvt", nd);
+    // The transposed read A[i1, i0] is in bounds only on square problems.
+    b.require_equal_bounds(0, 1);
     b.tensor("A", &[0, 1])
         .tensor("Y1", &[1])
         .tensor("Y2", &[1])

@@ -13,6 +13,9 @@ use super::builder::PraBuilder;
 pub fn syrk_pra() -> Pra {
     let nd = 3;
     let mut b = PraBuilder::new("syrk", nd);
+    // The transposed propagation reads A[i1, i2]: in bounds only for
+    // N1 = N0 (C is square).
+    b.require_equal_bounds(0, 1);
     b.tensor("A", &[0, 2]) // A[N0, N2]
         .tensor("Cin", &[0, 1])
         .tensor("C", &[0, 1]);

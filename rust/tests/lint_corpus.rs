@@ -1,0 +1,356 @@
+//! Adversarial lint corpus: one deliberately broken workload per
+//! documented lint code, each asserting that lint rejects it with
+//! exactly that code — plus the clean sweep over every builtin.
+//!
+//! The corpus is the contract behind the stable code table in
+//! `tcpa_energy::lint`: a code is only "documented" if a workload in
+//! here provably triggers it.
+
+use tcpa_energy::lint::{lint_pra, LintCode, LintOptions, Severity};
+use tcpa_energy::polyhedral::ParamSpace;
+use tcpa_energy::pra::{
+    CondConstraint, IndexMap, Lhs, Op, Operand, Pra, Statement, TensorDecl,
+    TensorDim,
+};
+
+/// Minimal valid scaffold: one rank-1 tensor `T` of extent `N0`.
+fn base(nd: usize) -> Pra {
+    Pra {
+        name: "corpus".into(),
+        ndims: nd,
+        space: ParamSpace::loop_nest(nd),
+        statements: vec![],
+        tensors: vec![TensorDecl {
+            name: "T".into(),
+            shape: vec![TensorDim::Param(0)],
+        }],
+        requires: vec![],
+    }
+}
+
+fn copy_stmt(
+    name: &str,
+    lhs: Lhs,
+    args: Vec<Operand>,
+    cond: Vec<CondConstraint>,
+) -> Statement {
+    Statement { name: name.into(), lhs, op: Op::Copy, args, cond }
+}
+
+/// Assert the exact code fires, and that the report's severity gating
+/// matches the code table.
+fn assert_code(pra: &Pra, opts: &LintOptions, code: LintCode) {
+    let rep = lint_pra(pra, opts);
+    assert!(
+        rep.findings.iter().any(|f| f.code == code),
+        "expected {code} in report for {}:\n{}",
+        pra.name,
+        rep.render()
+    );
+    match code.severity() {
+        Severity::Deny => assert!(rep.has_deny(), "{code} must deny"),
+        Severity::Warn => {
+            assert!(!rep.is_clean(true), "{code} must fail --deny warnings")
+        }
+    }
+}
+
+#[test]
+fn l001_duplicate_statement_name() {
+    let mut pra = base(1);
+    let s = copy_stmt(
+        "S1",
+        Lhs::Var("a".into()),
+        vec![Operand::tensor("T", IndexMap::identity(1, 1))],
+        vec![],
+    );
+    pra.statements.push(s.clone());
+    pra.statements.push(s);
+    assert_code(&pra, &LintOptions::default(), LintCode::L001);
+}
+
+#[test]
+fn l002_arity_mismatch() {
+    let mut pra = base(1);
+    pra.statements.push(Statement {
+        name: "S1".into(),
+        lhs: Lhs::Var("a".into()),
+        op: Op::Add, // needs 2 args
+        args: vec![Operand::tensor("T", IndexMap::identity(1, 1))],
+        cond: vec![],
+    });
+    assert_code(&pra, &LintOptions::default(), LintCode::L002);
+}
+
+#[test]
+fn l003_wrong_rank_access() {
+    // Rank-2 access to the rank-1 tensor T.
+    let mut pra = base(2);
+    pra.statements.push(copy_stmt(
+        "S1",
+        Lhs::Var("a".into()),
+        vec![Operand::tensor("T", IndexMap::identity(2, 2))],
+        vec![],
+    ));
+    assert_code(&pra, &LintOptions::default(), LintCode::L003);
+}
+
+#[test]
+fn l004_wrong_dependence_vector_length() {
+    let mut pra = base(2);
+    pra.statements.push(copy_stmt(
+        "S1",
+        Lhs::Var("a".into()),
+        // 1-entry dependence vector in a 2-deep nest.
+        vec![Operand::var("a", vec![1])],
+        vec![],
+    ));
+    assert_code(&pra, &LintOptions::default(), LintCode::L004);
+}
+
+#[test]
+fn l005_undefined_variable() {
+    let mut pra = base(1);
+    pra.statements.push(copy_stmt(
+        "S1",
+        Lhs::Var("a".into()),
+        vec![Operand::var0("ghost", 1)],
+        vec![],
+    ));
+    assert_code(&pra, &LintOptions::default(), LintCode::L005);
+}
+
+#[test]
+fn l006_non_lex_positive_dependence() {
+    let mut pra = base(2);
+    pra.statements.push(copy_stmt(
+        "S1",
+        Lhs::Var("a".into()),
+        vec![Operand::var("a", vec![-1, 0])],
+        vec![],
+    ));
+    assert_code(&pra, &LintOptions::default(), LintCode::L006);
+}
+
+#[test]
+fn l007_double_self_read_reduction() {
+    let mut pra = base(1);
+    pra.statements.push(Statement {
+        name: "S1".into(),
+        lhs: Lhs::Var("a".into()),
+        op: Op::Add,
+        args: vec![
+            Operand::var("a", vec![1]),
+            Operand::var("a", vec![1]),
+        ],
+        cond: vec![],
+    });
+    assert_code(&pra, &LintOptions::default(), LintCode::L007);
+}
+
+#[test]
+fn l008_unused_iteration_dimension() {
+    let mut pra = base(2);
+    // Only i0 is ever used; i1 exists to replicate work.
+    pra.statements.push(copy_stmt(
+        "S1",
+        Lhs::Tensor { name: "T".into(), map: IndexMap::select(&[0], 2) },
+        vec![Operand::tensor("T", IndexMap::select(&[0], 2))],
+        vec![],
+    ));
+    assert_code(&pra, &LintOptions::default(), LintCode::L008);
+}
+
+#[test]
+fn l009_dead_tensor() {
+    let mut pra = base(1);
+    pra.tensors.push(TensorDecl {
+        name: "Unused".into(),
+        shape: vec![TensorDim::Param(0)],
+    });
+    pra.statements.push(copy_stmt(
+        "S1",
+        Lhs::Tensor { name: "T".into(), map: IndexMap::identity(1, 1) },
+        vec![Operand::tensor("T", IndexMap::identity(1, 1))],
+        vec![],
+    ));
+    assert_code(&pra, &LintOptions::default(), LintCode::L009);
+}
+
+#[test]
+fn l010_dead_statement() {
+    let mut pra = base(1);
+    pra.statements.push(copy_stmt(
+        "S1",
+        Lhs::Var("a".into()),
+        vec![Operand::tensor("T", IndexMap::identity(1, 1))],
+        vec![],
+    ));
+    assert_code(&pra, &LintOptions::default(), LintCode::L010);
+}
+
+#[test]
+fn l100_symbolically_provable_oob_access() {
+    // T[i0 + 1] over 0 ≤ i0 < N0 against extent N0: out of bounds at
+    // the top iteration for EVERY parameter value — but no concrete
+    // sampling is involved; the violation polyhedron
+    // {0 ≤ i0 ≤ N0−1 ∧ i0+1 ≥ N0} is non-empty symbolically.
+    let mut pra = base(1);
+    pra.statements.push(copy_stmt(
+        "S1",
+        Lhs::Var("a".into()),
+        vec![Operand::tensor(
+            "T",
+            IndexMap::identity(1, 1).with_offset(vec![1]),
+        )],
+        vec![],
+    ));
+    let rep = lint_pra(&pra, &LintOptions::default());
+    assert_code(&pra, &LintOptions::default(), LintCode::L100);
+    // The finding anchors to the statement.
+    assert!(rep
+        .findings
+        .iter()
+        .any(|f| f.code == LintCode::L100
+            && f.statement.as_deref() == Some("S1")));
+}
+
+#[test]
+fn l101_inconsistent_dependence_vector() {
+    // Producer covers only i0 = 0, but the consumer's dependence vector
+    // reaches back one step from every i0 ≥ 1 — reads at i0 ≥ 2 land
+    // where no producer was active.
+    let nd = 1;
+    let np = 2;
+    let mut pra = base(nd);
+    pra.statements.push(copy_stmt(
+        "S1",
+        Lhs::Var("a".into()),
+        vec![Operand::tensor("T", IndexMap::identity(1, nd))],
+        vec![
+            CondConstraint::ge_const(0, 0, nd, np),
+            CondConstraint::le_const(0, 0, nd, np),
+        ],
+    ));
+    pra.statements.push(copy_stmt(
+        "S2",
+        Lhs::Var("b".into()),
+        vec![Operand::var("a", vec![1])],
+        vec![CondConstraint::ge_const(0, 1, nd, np)],
+    ));
+    assert_code(&pra, &LintOptions::default(), LintCode::L101);
+}
+
+#[test]
+fn l102_unreachable_statement() {
+    let nd = 1;
+    let np = 2;
+    let mut pra = base(nd);
+    pra.statements.push(copy_stmt(
+        "S1",
+        Lhs::Tensor { name: "T".into(), map: IndexMap::identity(1, nd) },
+        vec![Operand::tensor("T", IndexMap::identity(1, nd))],
+        // i0 ≥ 2 ∧ i0 ≤ 1: empty for every N0.
+        vec![
+            CondConstraint::ge_const(0, 2, nd, np),
+            CondConstraint::le_const(0, 1, nd, np),
+        ],
+    ));
+    assert_code(&pra, &LintOptions::default(), LintCode::L102);
+}
+
+#[test]
+fn l200_acausal_schedule() {
+    // The shared counterexample fixture: dependence vectors (1,−1) and
+    // (−1,1) admit no causal lexicographic order, so the mapping pass
+    // must reject every array shape.
+    let wl = tcpa_energy::workloads::twist_unschedulable();
+    let opts = LintOptions {
+        array: Some(vec![2, 2]),
+        ..LintOptions::default()
+    };
+    assert_code(&wl.phases[0], &opts, LintCode::L200);
+}
+
+#[test]
+fn l201_write_write_conflict() {
+    let mut pra = base(1);
+    for name in ["S1", "S2"] {
+        pra.statements.push(copy_stmt(
+            name,
+            Lhs::Var("a".into()),
+            vec![Operand::tensor("T", IndexMap::identity(1, 1))],
+            vec![],
+        ));
+    }
+    let opts = LintOptions {
+        array: Some(vec![2]),
+        ..LintOptions::default()
+    };
+    assert_code(&pra, &opts, LintCode::L201);
+}
+
+#[test]
+fn l202_fd_pressure_over_budget() {
+    let wl = tcpa_energy::workloads::by_name("gemm").unwrap();
+    let opts = LintOptions {
+        array: Some(vec![2, 2]),
+        fd_budget: 0,
+        ..LintOptions::default()
+    };
+    assert_code(&wl.phases[0], &opts, LintCode::L202);
+}
+
+/// The clean sweep: every builtin workload, on a representative array
+/// shape with the first (candidate-0) schedule, has no deny-level
+/// finding — all three passes running. Warnings are allowed (the `L202`
+/// FD ladder legitimately advises on deep kernels at large tile sizes);
+/// deny findings are not.
+#[test]
+fn clean_sweep_all_builtins_all_passes() {
+    for wl in tcpa_energy::workloads::all() {
+        for phase in &wl.phases {
+            let shape: Vec<i64> = match phase.ndims {
+                2 => vec![2, 2],
+                3 => vec![2, 2, 1],
+                n => vec![2; n],
+            };
+            let opts = LintOptions {
+                array: Some(shape.clone()),
+                ..LintOptions::default()
+            };
+            let rep = lint_pra(phase, &opts);
+            assert!(
+                rep.passes.iter().all(|p| p.ran),
+                "{} / {}: every pass must run, got {:?}",
+                wl.name,
+                phase.name,
+                rep.passes
+            );
+            assert!(
+                !rep.has_deny(),
+                "{} / {} at {shape:?} must be deny-clean:\n{}",
+                wl.name,
+                phase.name,
+                rep.render()
+            );
+        }
+    }
+}
+
+/// Without a mapping, builtins are fully clean — not even warnings.
+#[test]
+fn clean_sweep_without_mapping_is_warning_free() {
+    for wl in tcpa_energy::workloads::all() {
+        for rep in
+            tcpa_energy::lint::lint_workload(&wl, &LintOptions::default())
+        {
+            assert!(
+                rep.is_clean(true),
+                "{}:\n{}",
+                rep.pra,
+                rep.render()
+            );
+        }
+    }
+}
