@@ -1,0 +1,119 @@
+//! Overhead of checkpoint journalling on an already-analyzed sweep.
+//!
+//! The checkpoint journal (`dse --checkpoint`) is only free if nobody
+//! notices it: the records are written batched through tmp+rename off
+//! the hot path, so a cached sweep — the worst case, where per-point
+//! work is microseconds of expression evaluation rather than
+//! milliseconds of symbolic analysis — must cost nearly the same with
+//! and without the journal. This bench times the same cached sweep
+//! plain vs journalled and appends a `journal` section to
+//! `BENCH_symbolic.json` for the CI perf trajectory.
+//!
+//! Acceptance (full runs only; `--quick` is the CI smoke and just
+//! reports): journalling adds ≤ 5% to the cached sweep's median.
+//!
+//! ```bash
+//! cargo bench --bench journal_overhead [-- --quick]
+//! ```
+
+use tcpa_energy::bench_util::{
+    bench, bench_symbolic_json_path, write_bench_section,
+};
+use tcpa_energy::dse::{
+    explore_controlled, AnalysisCache, DesignSpace, ExploreConfig,
+    ExploreControl,
+};
+use tcpa_energy::workloads;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 5 } else { 30 };
+
+    let wl = workloads::by_name("gesummv").unwrap();
+    let sizes: &[i64] = &[16, 32, 64, 128];
+    let space = DesignSpace::new()
+        .with_arrays_2d(16)
+        .with_bounds_sweep(sizes, 2);
+    let cfg = ExploreConfig::default();
+    let cache = AnalysisCache::new();
+
+    // Warm the cache outside the timed region: afterwards every point
+    // is a pure evaluation, the regime where journal I/O could matter.
+    let warm = explore_controlled(
+        &wl,
+        &space,
+        &cfg,
+        &cache,
+        &ExploreControl::default(),
+    )
+    .unwrap();
+    let n = warm.points.len();
+
+    let plain = bench(2, reps, || {
+        let res = explore_controlled(
+            &wl,
+            &space,
+            &cfg,
+            &cache,
+            &ExploreControl::default(),
+        )
+        .unwrap();
+        assert!(res.points.iter().all(|p| p.cache_hit));
+        res.points.len()
+    });
+
+    let journal = std::env::temp_dir().join(format!(
+        "tcpa-journal-overhead-{}.journal",
+        std::process::id()
+    ));
+    let ctl = ExploreControl {
+        checkpoint: Some(journal.clone()),
+        ..Default::default()
+    };
+    let journalled = bench(2, reps, || {
+        let res =
+            explore_controlled(&wl, &space, &cfg, &cache, &ctl).unwrap();
+        assert!(res.points.iter().all(|p| p.cache_hit));
+        res.points.len()
+    });
+    assert!(journal.exists(), "the sweep must have written its journal");
+    let journal_bytes =
+        std::fs::metadata(&journal).map_or(0, |m| m.len());
+    let _ = std::fs::remove_file(&journal);
+
+    let ratio = journalled.median.as_secs_f64()
+        / plain.median.as_secs_f64().max(1e-12);
+    println!(
+        "cached sweep, plain     : {n:4} points, {}",
+        plain.summary()
+    );
+    println!(
+        "cached sweep, journalled: {n:4} points, {} \
+         ({journal_bytes} journal bytes)",
+        journalled.summary()
+    );
+    println!("journalling overhead: {:.2}% ", (ratio - 1.0) * 100.0);
+    if !quick {
+        assert!(
+            ratio <= 1.05,
+            "acceptance: checkpointing must add <= 5% to a cached \
+             sweep, got {:.2}%",
+            (ratio - 1.0) * 100.0
+        );
+    }
+
+    let body = format!(
+        "{{\"points\": {n}, \
+         \"median_us_plain\": {:.1}, \
+         \"median_us_journalled\": {:.1}, \
+         \"journal_bytes\": {journal_bytes}, \
+         \"overhead_ratio\": {ratio:.4}, \
+         \"quick\": {quick}}}",
+        plain.median.as_secs_f64() * 1e6,
+        journalled.median.as_secs_f64() * 1e6,
+    );
+    let path = bench_symbolic_json_path();
+    write_bench_section(&path, "journal", &body)
+        .expect("writing BENCH_symbolic.json");
+    println!("section journal → {}", path.display());
+}

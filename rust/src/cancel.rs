@@ -1,0 +1,275 @@
+//! Cooperative cancellation for long-running sweeps.
+//!
+//! A [`CancelToken`] is a cloneable handle shared between the party
+//! that requests a stop (CLI signal handler, deadline watchdog, a
+//! future `dse serve` request scope) and the workers that honor it.
+//! Cancellation is *cooperative*: nothing is killed, workers observe
+//! [`CancelToken::cancelled`] between design points and inside the
+//! Fourier–Motzkin feasibility loop, finish or abandon the point at
+//! hand, and drain.
+//!
+//! Three sources can trip a token, and the *first* one wins (a
+//! deadline expiring while a SIGINT drain is in progress must not
+//! relabel the interrupt):
+//!
+//! - [`CancelToken::cancel`] / [`CancelToken::cancel_with`] —
+//!   programmatic (tests, fault injection, a serving layer).
+//! - [`CancelToken::set_deadline_in`] — a wall-clock budget
+//!   (`dse --deadline SECS`), checked lazily on every
+//!   [`CancelToken::cancelled`] call.
+//! - [`CancelToken::watch_sigint`] — Ctrl-C. The handler only sets an
+//!   atomic flag (async-signal-safe); a second Ctrl-C exits
+//!   immediately with the conventional `130` for users who insist.
+//!
+//! The token lives at the crate root (not under `dse`) because the
+//! polyhedral core honors it too — `polyhedral::symbolic` checks a
+//! thread-local guard seeded from this token so a pathological FM
+//! blow-up cannot wedge a worker past its per-point timeout.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Why a run stopped early. Ordered by precedence of *arrival*, not
+/// severity: whichever source trips the token first is the reason the
+/// partial report carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelReason {
+    /// `cancel()` was called programmatically.
+    Explicit,
+    /// The wall-clock budget (`--deadline`) expired.
+    Deadline,
+    /// SIGINT (Ctrl-C) was received.
+    Interrupt,
+}
+
+impl CancelReason {
+    /// Human-readable label used in partial-frontier reports and the
+    /// CLI summary line.
+    pub fn label(self) -> &'static str {
+        match self {
+            CancelReason::Explicit => "cancelled",
+            CancelReason::Deadline => "deadline exceeded",
+            CancelReason::Interrupt => "interrupted (SIGINT)",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            CancelReason::Explicit => 1,
+            CancelReason::Deadline => 2,
+            CancelReason::Interrupt => 3,
+        }
+    }
+
+    fn from_code(code: u8) -> Option<Self> {
+        match code {
+            1 => Some(CancelReason::Explicit),
+            2 => Some(CancelReason::Deadline),
+            3 => Some(CancelReason::Interrupt),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// The cancelled bit; once set it never clears.
+    flag: AtomicBool,
+    /// `CancelReason::code`, 0 while untripped. First writer wins via
+    /// compare-exchange.
+    reason: AtomicU8,
+    /// Wall-clock budget; set at most once.
+    deadline: OnceLock<Instant>,
+    /// Whether `cancelled()` should consult the process-wide SIGINT
+    /// flag. Opt-in so library embedders are unaffected.
+    watch_sigint: AtomicBool,
+}
+
+/// Cloneable cooperative-cancellation handle; all clones share state.
+/// `Default` yields a token that never trips on its own.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl CancelToken {
+    /// A fresh, untripped token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Trip the token programmatically ([`CancelReason::Explicit`]).
+    pub fn cancel(&self) {
+        self.cancel_with(CancelReason::Explicit);
+    }
+
+    /// Trip the token with an explicit reason. The first reason to
+    /// arrive sticks; later calls only (re)assert the flag.
+    pub fn cancel_with(&self, reason: CancelReason) {
+        let _ = self.inner.reason.compare_exchange(
+            0,
+            reason.code(),
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+        self.inner.flag.store(true, Ordering::Release);
+    }
+
+    /// Arm a wall-clock budget: `cancelled()` reports
+    /// [`CancelReason::Deadline`] once `timeout` has elapsed from now.
+    /// Only the first call takes effect.
+    pub fn set_deadline_in(&self, timeout: Duration) {
+        let _ = self.inner.deadline.set(Instant::now() + timeout);
+    }
+
+    /// The absolute deadline, if one was armed.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.inner.deadline.get().copied()
+    }
+
+    /// Install the process-wide SIGINT handler (idempotent) and make
+    /// this token observe it.
+    pub fn watch_sigint(&self) {
+        sigint::install();
+        self.inner.watch_sigint.store(true, Ordering::Release);
+    }
+
+    /// Has the token tripped? Checks the explicit flag, then lazily
+    /// consults the SIGINT flag and the armed deadline, latching
+    /// whichever fired so every later call agrees on the reason.
+    pub fn cancelled(&self) -> Option<CancelReason> {
+        if !self.inner.flag.load(Ordering::Acquire) {
+            if self.inner.watch_sigint.load(Ordering::Acquire)
+                && sigint::seen()
+            {
+                self.cancel_with(CancelReason::Interrupt);
+            } else if let Some(&at) = self.inner.deadline.get() {
+                if Instant::now() >= at {
+                    self.cancel_with(CancelReason::Deadline);
+                }
+            }
+        }
+        if self.inner.flag.load(Ordering::Acquire) {
+            CancelReason::from_code(self.inner.reason.load(Ordering::Acquire))
+        } else {
+            None
+        }
+    }
+
+    /// `cancelled().is_some()` without the reason.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled().is_some()
+    }
+
+    /// Flag-only fast path: has some party already *latched* the
+    /// token? Unlike [`CancelToken::cancelled`] this never consults
+    /// the clock or the SIGINT flag — it is a single relaxed atomic
+    /// load, cheap enough for the innermost Fourier–Motzkin loop to
+    /// call on every iteration (with the full check amortized to every
+    /// Nth call; see `polyhedral::symbolic::check_point_guard`).
+    pub fn tripped(&self) -> bool {
+        self.inner.flag.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(unix)]
+mod sigint {
+    //! Dependency-free SIGINT latch: `libc::signal` declared by hand
+    //! (the vendor tree is empty), handler body restricted to
+    //! async-signal-safe operations (one atomic swap, `_exit`).
+
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Once;
+
+    static SEEN: AtomicBool = AtomicBool::new(false);
+    static INSTALL: Once = Once::new();
+
+    const SIGINT: i32 = 2;
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        fn _exit(code: i32) -> !;
+    }
+
+    extern "C" fn on_sigint(_sig: i32) {
+        if SEEN.swap(true, Ordering::SeqCst) {
+            // Second Ctrl-C: the user insists; conventional 128+2.
+            unsafe { _exit(130) };
+        }
+    }
+
+    pub fn install() {
+        INSTALL.call_once(|| unsafe {
+            signal(SIGINT, on_sigint);
+        });
+    }
+
+    pub fn seen() -> bool {
+        SEEN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sigint {
+    //! No-op fallback: tokens still honor explicit cancellation and
+    //! deadlines; Ctrl-C falls back to the platform default.
+    pub fn install() {}
+    pub fn seen() -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_token_never_trips() {
+        let t = CancelToken::new();
+        assert_eq!(t.cancelled(), None);
+        assert!(!t.is_cancelled());
+        assert!(!t.tripped());
+    }
+
+    #[test]
+    fn clones_share_state_and_first_reason_wins() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        u.cancel_with(CancelReason::Deadline);
+        assert!(t.tripped(), "flag-only fast path sees the latch");
+        assert_eq!(t.cancelled(), Some(CancelReason::Deadline));
+        // A later, different reason does not overwrite the first.
+        t.cancel_with(CancelReason::Interrupt);
+        assert_eq!(t.cancelled(), Some(CancelReason::Deadline));
+        assert_eq!(u.cancelled(), Some(CancelReason::Deadline));
+    }
+
+    #[test]
+    fn expired_deadline_trips_with_deadline_reason() {
+        let t = CancelToken::new();
+        t.set_deadline_in(Duration::ZERO);
+        assert_eq!(t.cancelled(), Some(CancelReason::Deadline));
+        assert!(t.deadline().is_some());
+    }
+
+    #[test]
+    fn future_deadline_does_not_trip_early() {
+        let t = CancelToken::new();
+        t.set_deadline_in(Duration::from_secs(3600));
+        assert_eq!(t.cancelled(), None);
+        // Only the first deadline call takes effect.
+        t.set_deadline_in(Duration::ZERO);
+        assert_eq!(t.cancelled(), None);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(CancelReason::Explicit.label(), "cancelled");
+        assert_eq!(CancelReason::Deadline.label(), "deadline exceeded");
+        assert_eq!(
+            CancelReason::Interrupt.label(),
+            "interrupted (SIGINT)"
+        );
+    }
+}

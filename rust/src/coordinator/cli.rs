@@ -16,6 +16,8 @@
 //!                      [--prune-symmetric] [--workers N] [--out DIR]
 //!                      [--analysis-cache DIR] [--prune-cache]
 //!                      [--sim-verify-frontier]
+//!                      [--checkpoint FILE] [--resume] [--deadline SECS]
+//!                      [--point-timeout SECS] [--progress]
 //! tcpa-energy figures  [--out results] [--quick]
 //! tcpa-energy lint     --workload NAME | --all-builtins
 //!                      [--array TxT] [--pi N] [--json] [--json-out FILE]
@@ -42,6 +44,17 @@
 //! `sim_cycles` column, and any divergence from the symbolic prediction
 //! is printed and escalated to a non-zero exit.
 //!
+//! Long sweeps are interruptible and resumable: `--checkpoint FILE`
+//! journals every completed point (checksummed, atomic-rename batches),
+//! `--resume` replays the journal bit-for-bit and evaluates only the
+//! remainder, `--deadline SECS` bounds the wall clock,
+//! `--point-timeout SECS` bounds any single point's analysis, and
+//! Ctrl-C drains in-flight workers, flushes the journal and reports a
+//! frontier explicitly marked `partial (k/n points)`. Exit codes:
+//! `0` success, `1` every point failed, `2` error (stale journal,
+//! sim-verify divergence, I/O), `3` partial result (cancelled —
+//! deadline, SIGINT, or injected; the strongest signal wins).
+//!
 //! `lint` runs the [`crate::lint`] static-analysis engine (structural +
 //! symbolic polyhedral passes; add `--array` for the mapping/schedule
 //! pass) and exits non-zero on deny-level findings — or on any finding
@@ -51,12 +64,13 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::time::Duration;
 
 use crate::analysis::SymbolicAnalysis;
 use crate::dse::{
-    explore_with_cache, phase_cache_name, phase_fingerprint,
+    explore_controlled, phase_cache_name, phase_fingerprint,
     sim_verify_frontier, workload_fingerprint, AnalysisCache, DesignSpace,
-    ExploreConfig, PhasePolicy, SchedulePolicy,
+    ExploreConfig, ExploreControl, FaultPlan, PhasePolicy, SchedulePolicy,
 };
 use crate::energy::{AccessClass, Backend, MemoryClass, Policy};
 use crate::report::{
@@ -79,6 +93,10 @@ pub enum CliError {
     /// The preflight lint gate found deny-level findings (`analyze`/`dse`
     /// refuse to run; `--no-lint` bypasses).
     Lint(String),
+    /// A checkpoint-journal problem that must stop the run before any
+    /// analysis: stale fingerprints (the workload or space changed
+    /// under the journal) or a quarantined corrupt header.
+    Checkpoint(String),
     Io(std::io::Error),
 }
 
@@ -90,6 +108,7 @@ impl std::fmt::Display for CliError {
                 write!(f, "unknown workload {w}; try `tcpa-energy list`")
             }
             CliError::Lint(m) => write!(f, "lint: {m}"),
+            CliError::Checkpoint(m) => write!(f, "checkpoint: {m}"),
             CliError::Io(e) => e.fmt(f),
         }
     }
@@ -524,17 +543,27 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             if space.phase_policy == PhasePolicy::PerPhase {
                 // Shape combinations grow as shapes^phases; refuse an
                 // explosion loudly (never cap coverage silently) before
-                // any analysis runs.
+                // any analysis runs — unless the user already bounded
+                // the sweep (`--checkpoint` makes an interrupted run
+                // resumable, `--deadline` bounds the wall clock), in
+                // which case a big space is their informed choice.
                 const MAX_PHASE_POINTS: u128 = 20_000;
                 let est = space.phase_point_estimate(wl.phases.len());
-                if est > MAX_PHASE_POINTS {
+                let bounded = flags.contains_key("checkpoint")
+                    || flags.contains_key("deadline");
+                if est > MAX_PHASE_POINTS && !bounded {
                     return Err(CliError::Usage(format!(
-                        "--phase-shapes per-phase on {} ({} phases) would \
-                         enumerate up to {est} design points (shape \
-                         combinations grow as shapes^phases); lower \
-                         --max-pes (e.g. 8) or narrow the other axes to \
-                         at most {MAX_PHASE_POINTS} points",
+                        "--phase-shapes per-phase with --max-pes \
+                         {max_pes} on {} would enumerate up to {est} \
+                         design points ({} shapes ^ {} phases, over the \
+                         {MAX_PHASE_POINTS}-point cap); lower --max-pes \
+                         (e.g. 8) or narrow the other axes — or keep the \
+                         space and make the sweep interruptible with \
+                         --checkpoint FILE (resumable journal) and/or \
+                         --deadline SECS (bounded wall clock), which \
+                         lift this cap",
                         wl.name,
+                        space.arrays.len(),
                         wl.phases.len()
                     )));
                 }
@@ -549,6 +578,72 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             };
 
             let cfg = ExploreConfig { workers };
+            // Robustness controls: checkpoint journal, resume, wall
+            // clock and per-point budgets, Ctrl-C draining.
+            let parse_secs =
+                |flag: &str, v: &str| -> Result<Duration, CliError> {
+                    match v.parse::<f64>() {
+                        Ok(x) if x > 0.0 && x.is_finite() => {
+                            Ok(Duration::from_secs_f64(x))
+                        }
+                        _ => Err(CliError::Usage(format!(
+                            "{flag} expects a positive number of \
+                             seconds, got {v}"
+                        ))),
+                    }
+                };
+            let checkpoint = match flags.get("checkpoint") {
+                Some(p) if p != "true" => {
+                    Some(std::path::PathBuf::from(p))
+                }
+                Some(_) => {
+                    return Err(CliError::Usage(
+                        "--checkpoint expects a journal file path"
+                            .into(),
+                    ))
+                }
+                None => None,
+            };
+            let resume = flags.contains_key("resume");
+            if resume && checkpoint.is_none() {
+                return Err(CliError::Usage(
+                    "--resume requires --checkpoint FILE (the journal \
+                     to replay)"
+                        .into(),
+                ));
+            }
+            let deadline = flags
+                .get("deadline")
+                .map(|v| parse_secs("--deadline", v))
+                .transpose()?;
+            let point_timeout = flags
+                .get("point-timeout")
+                .map(|v| parse_secs("--point-timeout", v))
+                .transpose()?;
+            let mut ctl = ExploreControl {
+                checkpoint,
+                resume,
+                point_timeout,
+                faults: FaultPlan::from_env(),
+                ..ExploreControl::default()
+            };
+            if let Some(d) = deadline {
+                ctl.cancel.set_deadline_in(d);
+            }
+            if ctl.checkpoint.is_some()
+                || deadline.is_some()
+                || point_timeout.is_some()
+            {
+                // Ctrl-C drains in-flight workers, flushes the journal
+                // and reports a partial frontier instead of losing the
+                // run (a second Ctrl-C exits immediately).
+                ctl.cancel.watch_sigint();
+            }
+            if flags.contains_key("progress") {
+                ctl.progress = Some(Box::new(|done, total| {
+                    eprintln!("progress: {done}/{total} points");
+                }));
+            }
             // Persistent spill: repeated CLI invocations reload the
             // one-time symbolic volumes instead of recomputing. The
             // in-memory cache exists either way — the sim-verify pass
@@ -568,7 +663,12 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 }
                 None => AnalysisCache::new(),
             };
-            let mut res = explore_with_cache(&wl, &space, &cfg, &cache);
+            let mut res =
+                explore_controlled(&wl, &space, &cfg, &cache, &ctl)
+                    .map_err(CliError::Checkpoint)?;
+            for w in &res.warnings {
+                eprintln!("warning: {w}");
+            }
             if flags.contains_key("analysis-cache")
                 && flags.contains_key("prune-cache")
             {
@@ -600,7 +700,14 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             // points on the event engine, annotate the report, escalate
             // divergence.
             let mut diverged = 0usize;
-            if flags.contains_key("sim-verify-frontier") {
+            if flags.contains_key("sim-verify-frontier")
+                && res.cancelled.is_some()
+            {
+                eprintln!(
+                    "sim-verify skipped: the sweep was cancelled and \
+                     the partial frontier is not final"
+                );
+            } else if flags.contains_key("sim-verify-frontier") {
                 sim_verify_frontier(&wl, &mut res, &cache);
                 for (&i, v) in &res.sim_verify {
                     if !v.confirmed() {
@@ -659,16 +766,34 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 }
             }
             println!(
-                "{}: {} points in {:?} ({} failed; cache {} analyses, \
-                 {:.0}% hit, {} from disk)",
+                "{}: {} points in {:?} ({} failed, {} replayed from \
+                 journal; cache {} analyses, {:.0}% hit, {} from disk)",
                 res.workload,
                 res.points.len(),
                 res.wall,
                 res.failures.len(),
+                res.replayed,
                 res.cache.entries,
                 res.cache.hit_rate() * 100.0,
                 res.cache.disk_hits
             );
+            if let Some(reason) = res.cancelled {
+                let hint = match &ctl.checkpoint {
+                    Some(p) => format!(
+                        "; resume with --checkpoint {} --resume",
+                        p.display()
+                    ),
+                    None => "; add --checkpoint FILE to make \
+                             interrupted sweeps resumable"
+                        .to_string(),
+                };
+                println!(
+                    "partial ({}/{} points): {}{hint}",
+                    res.completed,
+                    res.total,
+                    reason.label()
+                );
+            }
             for (p, msg) in res.failures.iter().take(8) {
                 eprintln!(
                     "  failed: {} bounds {:?} ({}, scale {}): {msg}",
@@ -722,8 +847,12 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             // Total failure must be loud: empty tables with exit 0 would
             // read as success to a Makefile or CI step — and so must a
             // sim-verify divergence (exit 2: the sweep itself succeeded,
-            // but its frontier is not to be trusted).
-            Ok(if res.points.is_empty() && !res.failures.is_empty() {
+            // but its frontier is not to be trusted). A cancelled sweep
+            // is the documented partial-result code 3, taking precedence:
+            // an incomplete run says nothing final about failure totals.
+            Ok(if res.cancelled.is_some() {
+                3
+            } else if res.points.is_empty() && !res.failures.is_empty() {
                 1
             } else if diverged > 0 {
                 2
@@ -1334,6 +1463,79 @@ mod tests {
         assert!(doc.starts_with('[') && doc.ends_with(']'), "{doc}");
         assert!(doc.contains("\"pra\":\"gemm\""), "{doc}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn dse_phase_explosion_refusal_names_flags_and_mitigation() {
+        let e = run_cli(&s(&[
+            "dse", "--workload", "gemver", "--bounds", "8,8",
+            "--phase-shapes", "per-phase",
+        ]));
+        let Err(CliError::Usage(msg)) = e else {
+            panic!("expected a usage error, got {e:?}");
+        };
+        assert!(msg.contains("--phase-shapes per-phase"), "{msg}");
+        assert!(msg.contains("--max-pes 64"), "{msg}");
+        assert!(msg.contains("--checkpoint"), "{msg}");
+        assert!(msg.contains("--deadline"), "{msg}");
+    }
+
+    #[test]
+    fn dse_checkpoint_flag_validation() {
+        // --resume needs the journal path; bare --checkpoint has none.
+        for bad in [
+            vec!["dse", "--workload", "gesummv", "--resume"],
+            vec!["dse", "--workload", "gesummv", "--checkpoint"],
+            vec!["dse", "--workload", "gesummv", "--deadline", "0"],
+            vec!["dse", "--workload", "gesummv", "--deadline", "abc"],
+            vec!["dse", "--workload", "gesummv", "--point-timeout", "-1"],
+            vec![
+                "dse", "--workload", "gesummv", "--point-timeout", "inf",
+            ],
+        ] {
+            let e = run_cli(&s(&bad));
+            assert!(
+                matches!(e, Err(CliError::Usage(_))),
+                "{bad:?} should be a usage error, got {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dse_checkpoint_writes_then_resume_replays() {
+        let dir = std::env::temp_dir().join(format!(
+            "tcpa-cli-checkpoint-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let j = dir.join("sweep.journal");
+        let j_s = j.to_str().unwrap().to_string();
+        let args = [
+            "dse", "--workload", "gesummv", "--bounds", "8,8",
+            "--max-pes", "2", "--checkpoint", &j_s,
+        ];
+        assert_eq!(run_cli(&s(&args)).unwrap(), 0);
+        assert!(j.exists(), "journal must be flushed on completion");
+        // Resuming a complete journal replays every point and still
+        // succeeds (fresh in-memory cache; zero analyses needed).
+        let mut again = args.to_vec();
+        again.push("--resume");
+        assert_eq!(run_cli(&s(&again)).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dse_injected_deadline_exits_with_the_partial_code() {
+        let _env = crate::dse::verify::env_guard();
+        std::env::set_var(crate::dse::FAULT_DEADLINE_AFTER_ENV, "1");
+        let code = run_cli(&s(&[
+            "dse", "--workload", "gesummv", "--bounds", "8,8",
+            "--max-pes", "4", "--deadline", "3600",
+        ]))
+        .unwrap();
+        std::env::remove_var(crate::dse::FAULT_DEADLINE_AFTER_ENV);
+        assert_eq!(code, 3, "cancelled sweeps exit with the partial code");
     }
 
     #[test]

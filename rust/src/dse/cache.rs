@@ -240,7 +240,12 @@ impl AnalysisCache {
     /// invocations share the one-time analyses across processes (keyed by
     /// workload fingerprint, array shape and energy-table fingerprint).
     pub fn with_disk(dir: impl Into<PathBuf>) -> Self {
-        AnalysisCache { disk: Some(DiskCache::new(dir)), ..Self::default() }
+        let disk = DiskCache::new(dir);
+        // Startup hygiene: interrupted-write temps from a crashed
+        // prior process never accumulate. Best-effort, like the spill
+        // itself.
+        let _ = disk.reap_temps();
+        AnalysisCache { disk: Some(disk), ..Self::default() }
     }
 
     /// The shared feasibility pool (for diagnostics and benches).

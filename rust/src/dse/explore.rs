@@ -40,8 +40,32 @@
 //! backend) scenario, so a heterogeneous assignment survives exactly
 //! when no uniform (or other) assignment matches it everywhere — which
 //! is how `--phase-shapes per-phase` can only improve the frontier.
+//!
+//! **Interruption and resume** ([`explore_controlled`]): the collector
+//! runs *inside* the worker scope and commits results strictly in
+//! enumeration order through a reorder buffer; each committed point is
+//! appended to the optional checkpoint journal
+//! ([`super::journal`]) and reported through the progress callback.
+//! When the [`CancelToken`] trips (SIGINT, `--deadline`, or a caller),
+//! the commit cursor *freezes*: whatever contiguous prefix of the
+//! enumeration was committed is exactly what the journal and the
+//! partial [`ExploreResult`] contain — which is why a cancelled serial
+//! run and a cancelled 32-worker run flush byte-identical journals,
+//! and why resuming from any of them reproduces the uninterrupted
+//! frontier bit-for-bit. Workers observe the token between points, and
+//! a thread-local [`PointGuard`] threads it (plus the per-point
+//! timeout) into the Fourier–Motzkin feasibility loop so a single
+//! pathological point cannot wedge a worker. A cancelled in-flight
+//! point unwinds with [`POINT_CANCELLED_PANIC`]; the cache memoizes
+//! that as a failure for its shape — harmless for the run at hand (it
+//! is ending, and the result is discarded uncommitted), but an
+//! in-memory [`AnalysisCache`] that survived a cancellation should not
+//! be handed to a fresh sweep: the interrupted shapes stay memoized as
+//! failures. Resuming in a new process (the CLI path) is unaffected.
 
+use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -50,13 +74,19 @@ use crate::analysis::{
     energy_at_backend_phases, latency_at_phases, SymbolicAnalysis,
     WorkloadAnalysis,
 };
+use crate::cancel::{CancelReason, CancelToken};
 use crate::energy::{Backend, MemoryClass};
+use crate::polyhedral::{set_point_guard, PointGuard, POINT_CANCELLED_PANIC};
 use crate::pra::Workload;
 use crate::tiling::pad_bounds;
 
 use super::cache::{
     panic_message, phase_fingerprint, workload_fingerprint, AnalysisCache,
     CacheStats,
+};
+use super::journal::{
+    self, JournalHeader, JournalLoad, JournalRecord, JournalWriter,
+    ReplayedCandidate,
 };
 use super::pareto::{knee_point, pareto_frontier, Objectives};
 use super::space::{
@@ -86,6 +116,90 @@ impl ExploreConfig {
         let w = if self.workers == 0 { auto() } else { self.workers };
         w.clamp(1, jobs.max(1))
     }
+}
+
+/// Kill the sweep's process after `N` committed points
+/// (`std::process::abort` right after a journal flush) — the
+/// crash-recovery fixture of `tests/resume_faults.rs`.
+pub const FAULT_KILL_AFTER_ENV: &str = "TCPA_DSE_FAULT_KILL_AFTER";
+/// Trip the cancel token with [`CancelReason::Deadline`] after `N`
+/// committed points — a deterministic stand-in for a wall-clock
+/// deadline, so tests can pin *exactly* which prefix survives.
+pub const FAULT_DEADLINE_AFTER_ENV: &str = "TCPA_DSE_FAULT_DEADLINE_AFTER";
+/// Any value: make every journal flush fail without touching the
+/// filesystem — the sweep must complete and only warn.
+pub const FAULT_JOURNAL_WRITE_ENV: &str = "TCPA_DSE_FAULT_JOURNAL_WRITE";
+/// Override the journal flush batch size (default 32). `1` flushes
+/// every point — what the crash-recovery tests use so an aborted
+/// process leaves a maximal journal.
+pub const JOURNAL_BATCH_ENV: &str = "TCPA_DSE_JOURNAL_BATCH";
+
+/// Deterministic fault injection, in the style of
+/// `TCPA_SIM_VERIFY_FORCE_DIVERGE`: inert by default, armed through
+/// environment hooks (or directly, in unit tests) so the resume
+/// machinery can be exercised end-to-end through the real binary.
+/// Counters trigger on **newly committed** points only — replayed
+/// records don't count, so `--resume` under the same hooks makes
+/// progress instead of re-dying at the same index.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Cancel (as if `--deadline` expired) after this many commits.
+    pub deadline_after_points: Option<usize>,
+    /// Abort the process after this many commits (journal flushed
+    /// first — the crash the journal is designed to survive is the
+    /// *uncontrolled* one, injected right after the flush).
+    pub kill_after_points: Option<usize>,
+    /// Fail every journal flush.
+    pub fail_journal_flush: bool,
+    /// Journal flush batch size override.
+    pub journal_batch: Option<usize>,
+}
+
+impl FaultPlan {
+    /// Read the `TCPA_DSE_FAULT_*` / `TCPA_DSE_JOURNAL_BATCH` hooks.
+    /// Unparsable values are ignored (inert), like the sim-verify
+    /// hooks.
+    pub fn from_env() -> Self {
+        let count = |key: &str| {
+            std::env::var(key).ok().and_then(|v| v.parse::<usize>().ok())
+        };
+        FaultPlan {
+            deadline_after_points: count(FAULT_DEADLINE_AFTER_ENV),
+            kill_after_points: count(FAULT_KILL_AFTER_ENV),
+            fail_journal_flush: std::env::var(FAULT_JOURNAL_WRITE_ENV)
+                .is_ok(),
+            journal_batch: count(JOURNAL_BATCH_ENV),
+        }
+    }
+}
+
+/// Runtime controls of one [`explore_controlled`] call: cancellation,
+/// per-point timeout, checkpoint journal, progress reporting and
+/// fault injection. `Default` is a fully inert control block —
+/// [`explore_with_cache`] passes exactly that, so the uncontrolled
+/// entry points stay bit-identical to the pre-robustness explorer.
+#[derive(Default)]
+pub struct ExploreControl {
+    /// Cooperative stop: checked between points by the workers and
+    /// the commit loop, and inside the symbolic core via the
+    /// per-point guard. Arm deadlines / SIGINT on this token.
+    pub cancel: CancelToken,
+    /// Per-point wall-clock budget: a point whose *cold* symbolic
+    /// analysis exceeds it unwinds and is recorded as a failure
+    /// (cache hits never consult it — they do no symbolic work).
+    pub point_timeout: Option<Duration>,
+    /// Journal file (`dse --checkpoint FILE`).
+    pub checkpoint: Option<PathBuf>,
+    /// Replay completed points from `checkpoint` before evaluating
+    /// (`dse --resume`).
+    pub resume: bool,
+    /// Called with `(completed, total)` once before evaluation starts
+    /// (counting replayed points) and after every commit. Must be
+    /// cheap; runs on the collector thread.
+    #[allow(clippy::type_complexity)]
+    pub progress: Option<Box<dyn Fn(usize, usize) + Send + Sync>>,
+    /// Deterministic fault injection (tests; inert by default).
+    pub faults: FaultPlan,
 }
 
 /// One evaluated design point.
@@ -175,6 +289,23 @@ pub struct ExploreResult {
     /// [`super::verify::sim_verify_frontier`] ran
     /// (`dse --sim-verify-frontier`).
     pub sim_verify: std::collections::BTreeMap<usize, super::verify::SimVerify>,
+    /// Design points with a known outcome (evaluated, failed, or
+    /// replayed from the journal). Equals [`Self::total`] on an
+    /// uncancelled run.
+    pub completed: usize,
+    /// Total enumerated design points of this sweep.
+    pub total: usize,
+    /// How many of [`Self::completed`] were replayed from the journal
+    /// rather than evaluated this run.
+    pub replayed: usize,
+    /// Why the sweep stopped early; `None` on a complete run (a
+    /// deadline expiring *after* the last commit is still complete —
+    /// nothing was lost).
+    pub cancelled: Option<CancelReason>,
+    /// Non-fatal incidents: journal records dropped on load, journal
+    /// write failures. The sweep's numbers are unaffected; callers
+    /// should surface these to the user.
+    pub warnings: Vec<String>,
 }
 
 impl ExploreResult {
@@ -400,13 +531,48 @@ pub fn explore(
 }
 
 /// Explore `space` for `wl`, sharing `cache` with (and warming it for)
-/// other sweeps — the bounds-sweep fast path.
+/// other sweeps — the bounds-sweep fast path. Runs uncontrolled: no
+/// cancellation, journal, timeout or faults
+/// ([`ExploreControl::default`]), bit-identical to the pre-robustness
+/// explorer.
 pub fn explore_with_cache(
     wl: &Workload,
     space: &DesignSpace,
     cfg: &ExploreConfig,
     cache: &AnalysisCache,
 ) -> ExploreResult {
+    explore_controlled(wl, space, cfg, cache, &ExploreControl::default())
+        .expect("uncontrolled exploration cannot fail")
+}
+
+/// The controlled explorer — everything [`explore_with_cache`] does,
+/// plus cooperative cancellation, per-point timeouts,
+/// checkpoint/resume and fault injection per `ctl`. This is the
+/// explorer-as-a-library shape `dse serve` and `dse --shard` sit on.
+///
+/// `Err` is reserved for *setup* refusals — a stale or corrupt
+/// checkpoint journal ([`super::journal::load`]), or `resume` without
+/// a checkpoint path. Once evaluation starts every problem is in the
+/// result itself: point failures in [`ExploreResult::failures`],
+/// interruption in [`ExploreResult::cancelled`], non-fatal incidents
+/// in [`ExploreResult::warnings`].
+pub fn explore_controlled(
+    wl: &Workload,
+    space: &DesignSpace,
+    cfg: &ExploreConfig,
+    cache: &AnalysisCache,
+    ctl: &ExploreControl,
+) -> Result<ExploreResult, String> {
+    fn warn_once(warnings: &mut Vec<String>, warned: &mut bool, e: String) {
+        if !*warned {
+            warnings.push(format!(
+                "checkpoint journal write failed: {e}; the sweep \
+                 continues without durable checkpoints"
+            ));
+            *warned = true;
+        }
+    }
+
     let t0 = Instant::now();
     // The per-phase axis needs the workload's phase count, which the
     // space cannot know — resolve the base-point enumeration here.
@@ -415,17 +581,77 @@ pub fn explore_with_cache(
         PhasePolicy::PerPhase => space.phase_points(wl.phases.len()),
     };
     let n = points.len();
-    let workers = cfg.effective_workers(n);
     let policy = space.schedules;
     // One IR walk for the whole sweep, not one per design point.
     let fingerprint = workload_fingerprint(wl);
     let phase_fps: Vec<u64> =
         wl.phases.iter().map(phase_fingerprint).collect();
 
-    // Job queue: a channel pre-filled with every (index, point), its
-    // receiver shared behind a mutex so idle workers steal the next job.
+    let mut warnings: Vec<String> = Vec::new();
+    let mut journal_warned = false;
+    // Resume: load the replayable prefix. Stale/corrupt journals are
+    // loud errors (see `journal::load`); per-record damage degrades
+    // to warnings and re-evaluation.
+    let header =
+        ctl.checkpoint.as_ref().map(|_| JournalHeader::new(wl, space, n));
+    let mut replayed: BTreeMap<usize, JournalRecord> = BTreeMap::new();
+    if ctl.resume {
+        let (Some(path), Some(h)) = (&ctl.checkpoint, &header) else {
+            return Err(
+                "resume requires a checkpoint journal path".to_string()
+            );
+        };
+        match journal::load(path, h)? {
+            JournalLoad::Absent => {}
+            JournalLoad::Replayed { records, warnings: w } => {
+                warnings.extend(w);
+                replayed = records;
+            }
+        }
+    }
+    // Open the journal writer (reaping orphan temps) and flush
+    // immediately: the rewrite re-seeds the replayed records — healing
+    // any truncated tail — and stamps a fresh run's header on disk
+    // before evaluation can crash.
+    let mut writer = match (&ctl.checkpoint, &header) {
+        (Some(path), Some(h)) => {
+            let batch = ctl.faults.journal_batch.unwrap_or(32);
+            let mut w = JournalWriter::create(path, h, batch);
+            w.set_fail_flush(ctl.faults.fail_journal_flush);
+            Some(w)
+        }
+        _ => None,
+    };
+    if let Some(w) = writer.as_mut() {
+        let mut seed = Ok(());
+        for (idx, rec) in &replayed {
+            if let Err(e) = w.append(*idx, rec) {
+                seed = Err(e);
+            }
+        }
+        if let Err(e) = w.flush() {
+            seed = Err(e);
+        }
+        if let Err(e) = seed {
+            warn_once(&mut warnings, &mut journal_warned, e);
+        }
+    }
+
+    // Job queue: a channel pre-filled with every not-yet-replayed
+    // (index, point), its receiver shared behind a mutex so idle
+    // workers steal the next job.
+    let jobs: Vec<(usize, DesignPoint)> = points
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !replayed.contains_key(i))
+        .map(|(i, p)| (i, p.clone()))
+        .collect();
+    let workers = cfg.effective_workers(jobs.len());
+    if let Some(p) = &ctl.progress {
+        p(replayed.len(), n);
+    }
     let (jtx, jrx) = mpsc::channel::<(usize, DesignPoint)>();
-    for job in points.into_iter().enumerate() {
+    for job in jobs {
         jtx.send(job).expect("queue send");
     }
     drop(jtx);
@@ -433,47 +659,188 @@ pub fn explore_with_cache(
 
     // One base point expands into one evaluated point per schedule
     // candidate (exactly one under `SchedulePolicy::First`).
-    type PointResult = Result<Vec<EvaluatedPoint>, (DesignPoint, String)>;
-    let (rtx, rrx) = mpsc::channel::<(usize, PointResult)>();
+    enum Outcome {
+        Ok(Vec<EvaluatedPoint>),
+        Fail(DesignPoint, String),
+        // The worker abandoned the point because the token tripped
+        // (pre-check, or the guard unwound the symbolic pass).
+        Aborted,
+    }
+    let (rtx, rrx) = mpsc::channel::<(usize, Outcome)>();
+
+    let mut slots: Vec<Vec<EvaluatedPoint>> = vec![Vec::new(); n];
+    let mut failed: Vec<(usize, DesignPoint, String)> = Vec::new();
+    let mut committed = 0usize;
+
     std::thread::scope(|s| {
         for _ in 0..workers {
             let rtx = rtx.clone();
             let jrx = &jrx;
             let phase_fps = &phase_fps;
+            let cancel = ctl.cancel.clone();
+            let point_timeout = ctl.point_timeout;
             s.spawn(move || loop {
                 // Pop under the lock, evaluate outside it.
                 let job = { jrx.lock().unwrap().recv() };
                 let Ok((idx, point)) = job else { break };
+                // Between-points cancellation: drain the queue fast,
+                // reporting each skipped point as aborted.
+                if cancel.is_cancelled() {
+                    let _ = rtx.send((idx, Outcome::Aborted));
+                    continue;
+                }
+                // The thread-local guard threads the token and the
+                // per-point timeout into the symbolic core (the FM
+                // feasibility loop polls it) for this point only.
+                set_point_guard(Some(PointGuard::new(
+                    cancel.clone(),
+                    point_timeout,
+                )));
+                let eval = catch_unwind(AssertUnwindSafe(|| {
+                    evaluate(
+                        wl, fingerprint, phase_fps, &point, cache, policy,
+                    )
+                }));
+                set_point_guard(None);
                 // Analysis failures surface as Err (memoized, cheap);
                 // catch_unwind additionally guards the evaluation
-                // arithmetic itself.
-                let eval = match catch_unwind(AssertUnwindSafe(|| {
-                    evaluate(wl, fingerprint, phase_fps, &point, cache, policy)
-                })) {
-                    Ok(Ok(e)) => Ok(e),
-                    Ok(Err(msg)) => Err((point, msg)),
+                // arithmetic itself. A guard unwind inside the cached
+                // analysis closure is memoized and rethrown as an Err
+                // carrying the panic constant: a cancellation is not
+                // a point failure, a timeout is.
+                let out = match eval {
+                    Ok(Ok(e)) => Outcome::Ok(e),
+                    Ok(Err(msg)) => {
+                        if msg.contains(POINT_CANCELLED_PANIC) {
+                            Outcome::Aborted
+                        } else {
+                            Outcome::Fail(point, msg)
+                        }
+                    }
                     Err(payload) => {
-                        Err((point, panic_message(payload.as_ref())))
+                        let msg = panic_message(payload.as_ref());
+                        if msg.contains(POINT_CANCELLED_PANIC) {
+                            Outcome::Aborted
+                        } else {
+                            Outcome::Fail(point, msg)
+                        }
                     }
                 };
                 // The queue sender is gone before workers start, so the
                 // only way `send` fails is the collector having hung up —
                 // at which point the result is moot.
-                let _ = rtx.send((idx, eval));
+                let _ = rtx.send((idx, out));
             });
         }
         drop(rtx);
+
+        // The collector runs INSIDE the scope: results are committed
+        // strictly in enumeration order through a reorder buffer, and
+        // the cursor *freezes* at the first abort or cancellation.
+        // The committed contiguous prefix is the entire observable
+        // outcome — journal, partial report, progress — which is what
+        // makes a cancelled sweep independent of worker count and
+        // arrival order (a cancelled serial run and a cancelled
+        // 32-worker run flush byte-identical journals).
+        let mut buffer: BTreeMap<usize, Outcome> = BTreeMap::new();
+        let mut frozen = false;
+        let mut cursor = 0usize;
+        while cursor < n && replayed.contains_key(&cursor) {
+            cursor += 1;
+        }
+        while let Ok((idx, out)) = rrx.recv() {
+            if frozen {
+                continue; // drain in-flight results, discard
+            }
+            buffer.insert(idx, out);
+            while let Some(out) = buffer.remove(&cursor) {
+                match out {
+                    Outcome::Aborted => {
+                        frozen = true;
+                        break;
+                    }
+                    Outcome::Ok(evals) => {
+                        if let Some(w) = writer.as_mut() {
+                            let rec = JournalRecord::Ok(
+                                evals
+                                    .iter()
+                                    .map(ReplayedCandidate::of)
+                                    .collect(),
+                            );
+                            if let Err(e) = w.append(cursor, &rec) {
+                                warn_once(
+                                    &mut warnings,
+                                    &mut journal_warned,
+                                    e,
+                                );
+                            }
+                        }
+                        slots[cursor] = evals;
+                    }
+                    Outcome::Fail(point, msg) => {
+                        if let Some(w) = writer.as_mut() {
+                            let rec = JournalRecord::Fail(msg.clone());
+                            if let Err(e) = w.append(cursor, &rec) {
+                                warn_once(
+                                    &mut warnings,
+                                    &mut journal_warned,
+                                    e,
+                                );
+                            }
+                        }
+                        failed.push((cursor, point, msg));
+                    }
+                }
+                committed += 1;
+                cursor += 1;
+                while cursor < n && replayed.contains_key(&cursor) {
+                    cursor += 1;
+                }
+                if let Some(p) = &ctl.progress {
+                    p(replayed.len() + committed, n);
+                }
+                // Fault hooks count *newly committed* points, so a
+                // resumed run under the same hooks makes progress.
+                if ctl.faults.kill_after_points == Some(committed) {
+                    if let Some(w) = writer.as_mut() {
+                        let _ = w.flush();
+                    }
+                    // The uncontrolled crash the journal must
+                    // survive: no unwinding, no destructors.
+                    std::process::abort();
+                }
+                if ctl.faults.deadline_after_points == Some(committed) {
+                    ctl.cancel.cancel_with(CancelReason::Deadline);
+                }
+                if ctl.cancel.is_cancelled() {
+                    frozen = true;
+                    break;
+                }
+            }
+        }
     });
 
-    // Deterministic ordering: stitch results back by base-point
-    // enumeration index, then candidate order within each base point —
-    // byte-identical output regardless of worker count.
-    let mut slots: Vec<Vec<EvaluatedPoint>> = vec![Vec::new(); n];
-    let mut failed: Vec<(usize, DesignPoint, String)> = Vec::new();
-    while let Ok((idx, eval)) = rrx.recv() {
-        match eval {
-            Ok(e) => slots[idx] = e,
-            Err((point, msg)) => failed.push((idx, point, msg)),
+    // Flush the tail batch (and, on cancellation, the final partial
+    // state).
+    if let Some(w) = writer.as_mut() {
+        if let Err(e) = w.flush() {
+            warn_once(&mut warnings, &mut journal_warned, e);
+        }
+    }
+
+    // Stitch the replayed prefix back in at its original indices —
+    // bit-for-bit, the journal stores every reported f64 as its bits.
+    for (idx, rec) in &replayed {
+        match rec {
+            JournalRecord::Ok(cands) => {
+                slots[*idx] = cands
+                    .iter()
+                    .map(|c| c.to_evaluated(&points[*idx]))
+                    .collect();
+            }
+            JournalRecord::Fail(msg) => {
+                failed.push((*idx, points[*idx].clone(), msg.clone()));
+            }
         }
     }
     failed.sort_by_key(|(idx, _, _)| *idx);
@@ -521,7 +888,13 @@ pub fn explore_with_cache(
         _ => None,
     };
 
-    ExploreResult {
+    let completed = replayed.len() + committed;
+    // A deadline that fires after the last commit lost nothing: the
+    // run is complete, not cancelled.
+    let cancelled =
+        if completed < n { ctl.cancel.cancelled() } else { None };
+
+    Ok(ExploreResult {
         workload: wl.name.clone(),
         points: evaluated,
         groups,
@@ -531,7 +904,12 @@ pub fn explore_with_cache(
         cache: cache.stats(),
         wall: t0.elapsed(),
         sim_verify: std::collections::BTreeMap::new(),
-    }
+        completed,
+        total: n,
+        replayed: replayed.len(),
+        cancelled,
+        warnings,
+    })
 }
 
 #[cfg(test)]
@@ -887,6 +1265,308 @@ mod tests {
         for p in &res.points {
             assert!(p.energy_pj > 0.0);
             assert!(p.latency_cycles > 0);
+        }
+    }
+
+    fn journal_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tcpa-explore-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn uncontrolled_runs_report_complete_uncancelled_state() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let res = explore(&wl, &small_space(), &ExploreConfig::default());
+        assert_eq!(res.completed, res.total);
+        assert_eq!(res.total, res.points.len() + res.failures.len());
+        assert_eq!(res.replayed, 0);
+        assert_eq!(res.cancelled, None);
+        assert!(res.warnings.is_empty());
+    }
+
+    #[test]
+    fn cancelled_serial_and_parallel_runs_flush_identical_journals() {
+        // The commit-cursor freeze: whatever contiguous prefix was
+        // committed when the (injected, deterministic) deadline fired
+        // is the whole outcome — independent of worker count.
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = small_space();
+        let dir = journal_dir("cancel-det");
+        let run = |workers: usize, tag: &str| {
+            let path = dir.join(format!("{tag}.journal"));
+            let ctl = ExploreControl {
+                checkpoint: Some(path.clone()),
+                faults: FaultPlan {
+                    deadline_after_points: Some(3),
+                    journal_batch: Some(1),
+                    ..FaultPlan::default()
+                },
+                ..ExploreControl::default()
+            };
+            let res = explore_controlled(
+                &wl,
+                &space,
+                &ExploreConfig { workers },
+                &AnalysisCache::new(),
+                &ctl,
+            )
+            .unwrap();
+            (res, std::fs::read(&path).unwrap())
+        };
+        let (serial, js) = run(1, "serial");
+        let (parallel, jp) = run(4, "parallel");
+        assert_eq!(serial.completed, 3);
+        assert_eq!(parallel.completed, 3);
+        assert_eq!(
+            serial.cancelled,
+            Some(crate::cancel::CancelReason::Deadline)
+        );
+        assert_eq!(parallel.cancelled, serial.cancelled);
+        assert_eq!(js, jp, "journal bytes depend on worker count");
+        // The partial result is exactly the committed prefix.
+        assert_eq!(serial.points.len(), 3);
+        assert_eq!(parallel.points.len(), 3);
+        for (a, b) in serial.points.iter().zip(&parallel.points) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.latency_cycles, b.latency_cycles);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interrupted_then_resumed_matches_uninterrupted_bit_for_bit() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = small_space();
+        let baseline = explore(&wl, &space, &ExploreConfig::serial());
+        assert!(baseline.failures.is_empty());
+        let n = baseline.points.len();
+        let dir = journal_dir("resume");
+        let path = dir.join("sweep.journal");
+        let interrupted_ctl = ExploreControl {
+            checkpoint: Some(path.clone()),
+            faults: FaultPlan {
+                deadline_after_points: Some(3),
+                journal_batch: Some(1),
+                ..FaultPlan::default()
+            },
+            ..ExploreControl::default()
+        };
+        let interrupted = explore_controlled(
+            &wl,
+            &space,
+            &ExploreConfig { workers: 4 },
+            &AnalysisCache::new(),
+            &interrupted_ctl,
+        )
+        .unwrap();
+        assert_eq!(interrupted.completed, 3);
+        assert!(interrupted.cancelled.is_some());
+        // Resume with a fresh cache and a progress probe.
+        let seen =
+            std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let probe = seen.clone();
+        let resume_ctl = ExploreControl {
+            checkpoint: Some(path.clone()),
+            resume: true,
+            progress: Some(Box::new(move |done, total| {
+                probe.lock().unwrap().push((done, total));
+            })),
+            ..ExploreControl::default()
+        };
+        let resumed = explore_controlled(
+            &wl,
+            &space,
+            &ExploreConfig::serial(),
+            &AnalysisCache::new(),
+            &resume_ctl,
+        )
+        .unwrap();
+        assert_eq!(resumed.cancelled, None);
+        assert_eq!(resumed.replayed, 3);
+        assert_eq!(resumed.completed, resumed.total);
+        assert_eq!(resumed.points.len(), n);
+        for (a, b) in resumed.points.iter().zip(&baseline.points) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.schedule_label, b.schedule_label);
+            assert_eq!(a.pes, b.pes);
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.dram_pj.to_bits(), b.dram_pj.to_bits());
+            assert_eq!(a.latency_cycles, b.latency_cycles);
+            assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+        }
+        assert_eq!(resumed.frontier, baseline.frontier);
+        assert_eq!(resumed.knee, baseline.knee);
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.first(), Some(&(3, n)), "{seen:?}");
+        assert_eq!(seen.last(), Some(&(n, n)), "{seen:?}");
+        assert!(seen.windows(2).all(|w| w[0].0 < w[1].0), "{seen:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pre_cancelled_token_commits_nothing() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let ctl = ExploreControl::default();
+        ctl.cancel.cancel();
+        let res = explore_controlled(
+            &wl,
+            &small_space(),
+            &ExploreConfig { workers: 2 },
+            &AnalysisCache::new(),
+            &ctl,
+        )
+        .unwrap();
+        assert_eq!(res.completed, 0);
+        assert!(res.points.is_empty() && res.failures.is_empty());
+        assert_eq!(
+            res.cancelled,
+            Some(crate::cancel::CancelReason::Explicit)
+        );
+        assert!(res.frontier.is_empty() && res.knee.is_none());
+    }
+
+    #[test]
+    fn journalled_failures_replay_without_reanalysis() {
+        let wl = workloads::twist_unschedulable();
+        let space = DesignSpace::new()
+            .with_arrays(vec![vec![2, 2]])
+            .with_bounds(vec![8, 8]);
+        let dir = journal_dir("fail-replay");
+        let path = dir.join("sweep.journal");
+        let ctl = ExploreControl {
+            checkpoint: Some(path.clone()),
+            ..ExploreControl::default()
+        };
+        let first = explore_controlled(
+            &wl,
+            &space,
+            &ExploreConfig::serial(),
+            &AnalysisCache::new(),
+            &ctl,
+        )
+        .unwrap();
+        assert_eq!(first.failures.len(), 1);
+        assert_eq!(first.cancelled, None, "a failure is not cancellation");
+        let resume_ctl = ExploreControl {
+            checkpoint: Some(path.clone()),
+            resume: true,
+            ..ExploreControl::default()
+        };
+        let cache = AnalysisCache::new();
+        let second = explore_controlled(
+            &wl,
+            &space,
+            &ExploreConfig::serial(),
+            &cache,
+            &resume_ctl,
+        )
+        .unwrap();
+        assert_eq!(second.replayed, 1);
+        assert_eq!(second.failures.len(), 1);
+        assert_eq!(second.failures[0].1, first.failures[0].1);
+        assert_eq!(cache.stats().misses, 0, "nothing re-analyzed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_journal_writes_warn_once_and_do_not_stop_the_sweep() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let dir = journal_dir("wfail");
+        let path = dir.join("sweep.journal");
+        let ctl = ExploreControl {
+            checkpoint: Some(path.clone()),
+            faults: FaultPlan {
+                fail_journal_flush: true,
+                journal_batch: Some(1),
+                ..FaultPlan::default()
+            },
+            ..ExploreControl::default()
+        };
+        let res = explore_controlled(
+            &wl,
+            &small_space(),
+            &ExploreConfig::serial(),
+            &AnalysisCache::new(),
+            &ctl,
+        )
+        .unwrap();
+        assert_eq!(res.cancelled, None);
+        assert_eq!(res.completed, res.total);
+        assert_eq!(res.warnings.len(), 1, "warn once: {:?}", res.warnings);
+        assert!(res.warnings[0].contains("journal write failed"));
+        assert!(!path.exists(), "no torn file may be left behind");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_with_stale_journal_is_refused() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let dir = journal_dir("stale-resume");
+        let path = dir.join("sweep.journal");
+        let narrow = DesignSpace::new()
+            .with_arrays(vec![vec![1, 2]])
+            .with_bounds(vec![8, 8]);
+        let ctl = ExploreControl {
+            checkpoint: Some(path.clone()),
+            ..ExploreControl::default()
+        };
+        explore_controlled(
+            &wl,
+            &narrow,
+            &ExploreConfig::serial(),
+            &AnalysisCache::new(),
+            &ctl,
+        )
+        .unwrap();
+        let resume_ctl = ExploreControl {
+            checkpoint: Some(path.clone()),
+            resume: true,
+            ..ExploreControl::default()
+        };
+        let err = explore_controlled(
+            &wl,
+            &small_space(),
+            &ExploreConfig::serial(),
+            &AnalysisCache::new(),
+            &resume_ctl,
+        )
+        .unwrap_err();
+        assert!(err.contains("stale"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fault_plan_reads_env_hooks() {
+        let _env = crate::dse::verify::env_guard();
+        let keys = [
+            FAULT_KILL_AFTER_ENV,
+            FAULT_DEADLINE_AFTER_ENV,
+            FAULT_JOURNAL_WRITE_ENV,
+            JOURNAL_BATCH_ENV,
+        ];
+        for k in keys {
+            std::env::remove_var(k);
+        }
+        let inert = FaultPlan::from_env();
+        assert_eq!(inert.deadline_after_points, None);
+        assert_eq!(inert.kill_after_points, None);
+        assert!(!inert.fail_journal_flush);
+        assert_eq!(inert.journal_batch, None);
+        std::env::set_var(FAULT_KILL_AFTER_ENV, "5");
+        std::env::set_var(FAULT_DEADLINE_AFTER_ENV, "junk");
+        std::env::set_var(FAULT_JOURNAL_WRITE_ENV, "1");
+        std::env::set_var(JOURNAL_BATCH_ENV, "1");
+        let armed = FaultPlan::from_env();
+        assert_eq!(armed.kill_after_points, Some(5));
+        assert_eq!(armed.deadline_after_points, None, "junk is inert");
+        assert!(armed.fail_journal_flush);
+        assert_eq!(armed.journal_batch, Some(1));
+        for k in keys {
+            std::env::remove_var(k);
         }
     }
 }

@@ -1,0 +1,873 @@
+//! Checkpoint journal: crash-tolerant persistence of completed
+//! design points.
+//!
+//! A sweep with `--checkpoint FILE` records every *committed* point —
+//! its full candidate list or its failure message — in a small
+//! line-oriented text file, flushed in batches through the same
+//! tmp-file + atomic-rename discipline as [`crate::dse::persist`]. A
+//! later `--resume` run replays the journal **bit-for-bit** (all
+//! `f64`s travel as `to_bits()` hex, so replayed energies and EDPs
+//! are exactly the originals; see [`ReplayedCandidate`] for the two
+//! volatile timing fields that are deliberately excluded) and
+//! evaluates only the remainder.
+//!
+//! Robustness contract, in decreasing order of trust:
+//!
+//! - **Stale journal** (header parses but its workload fingerprint,
+//!   space fingerprint or point count disagree with the resuming
+//!   sweep): rejected **loudly** with the mismatching field named.
+//!   Replaying points of an edited workload would silently fabricate
+//!   a frontier; the file is left in place for inspection.
+//! - **Corrupt header** (magic or fields don't scan): the file is
+//!   quarantined to `FILE.corrupt` — never silently ignored, never
+//!   replayed — and the error says so.
+//! - **Corrupt record** (checksum mismatch): that single point is
+//!   skipped with a warning and re-evaluated; its neighbors replay.
+//! - **Truncated tail** (the crash landed mid-write): the partial
+//!   line is dropped with a warning; every complete record replays.
+//!
+//! The header binds a journal to one `(workload, space)` pair via
+//! [`crate::dse::cache::workload_fingerprint`] and
+//! [`space_fingerprint`]; record indices are positions in the
+//! deterministic `DesignSpace` enumeration, which is what makes
+//! replay-by-index sound.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::dse::cache::workload_fingerprint;
+use crate::dse::explore::EvaluatedPoint;
+use crate::dse::space::{DesignPoint, DesignSpace, ScheduleChoice};
+use crate::pra::Workload;
+
+/// First line of every journal; bump the version on format changes so
+/// old files are quarantined, not misparsed.
+pub const MAGIC: &str = "tcpa-dse-journal v1";
+
+/// Deterministic structural fingerprint of a [`DesignSpace`] — the
+/// same derive-`Debug`-and-hash idiom as
+/// [`crate::dse::cache::workload_fingerprint`], and like it **not**
+/// stable across compiler releases; ideal for "is this the same
+/// space?" checks within one binary, which is all resume needs.
+pub fn space_fingerprint(space: &DesignSpace) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h = DefaultHasher::new();
+    format!("{space:?}").hash(&mut h);
+    h.finish()
+}
+
+/// The identity block at the top of a journal file. A resume run
+/// recomputes its own header and requires an exact match before
+/// replaying anything.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalHeader {
+    /// Raw workload name (display only; the fingerprint is the check).
+    pub workload: String,
+    /// `workload_fingerprint` of the sweep's workload.
+    pub workload_fp: u64,
+    /// [`space_fingerprint`] of the sweep's design space.
+    pub space_fp: u64,
+    /// Total number of enumerated design points (`k/n` denominators
+    /// and the record-index upper bound).
+    pub points: usize,
+}
+
+impl JournalHeader {
+    /// The header binding `(wl, space)` with `points` enumerated
+    /// design points.
+    pub fn new(wl: &Workload, space: &DesignSpace, points: usize) -> Self {
+        JournalHeader {
+            workload: wl.name.clone(),
+            workload_fp: workload_fingerprint(wl),
+            space_fp: space_fingerprint(space),
+            points,
+        }
+    }
+
+    fn render(&self) -> String {
+        format!(
+            "{MAGIC}\nworkload {}\nworkload_fp {:016x}\n\
+             space_fp {:016x}\npoints {}\n",
+            self.workload, self.workload_fp, self.space_fp, self.points
+        )
+    }
+
+    /// Parse the five header lines; `None` means *corrupt* (the
+    /// caller quarantines), not *stale* (that is a field-level
+    /// mismatch diagnosed separately).
+    fn parse(lines: &mut std::str::Lines) -> Option<Self> {
+        if lines.next()? != MAGIC {
+            return None;
+        }
+        let workload = lines.next()?.strip_prefix("workload ")?.to_string();
+        let workload_fp = u64::from_str_radix(
+            lines.next()?.strip_prefix("workload_fp ")?,
+            16,
+        )
+        .ok()?;
+        let space_fp = u64::from_str_radix(
+            lines.next()?.strip_prefix("space_fp ")?,
+            16,
+        )
+        .ok()?;
+        let points: usize =
+            lines.next()?.strip_prefix("points ")?.parse().ok()?;
+        Some(JournalHeader { workload, workload_fp, space_fp, points })
+    }
+
+    /// First field (name, value-in-file, value-expected) that
+    /// disagrees with `expected`, for the loud stale-journal error.
+    fn mismatch(
+        &self,
+        expected: &JournalHeader,
+    ) -> Option<(&'static str, String, String)> {
+        if self.workload_fp != expected.workload_fp {
+            Some((
+                "workload_fp",
+                format!("{:016x}", self.workload_fp),
+                format!("{:016x}", expected.workload_fp),
+            ))
+        } else if self.space_fp != expected.space_fp {
+            Some((
+                "space_fp",
+                format!("{:016x}", self.space_fp),
+                format!("{:016x}", expected.space_fp),
+            ))
+        } else if self.points != expected.points {
+            Some((
+                "points",
+                self.points.to_string(),
+                expected.points.to_string(),
+            ))
+        } else if self.workload != expected.workload {
+            Some((
+                "workload",
+                self.workload.clone(),
+                expected.workload.clone(),
+            ))
+        } else {
+            None
+        }
+    }
+}
+
+/// One schedule candidate of a completed point, with every *stable*
+/// field an [`EvaluatedPoint`] carries beyond the design point itself.
+/// `f64`s round-trip through `to_bits`, so replay is bit-for-bit.
+///
+/// The two volatile fields — `analysis_ms` and `cache_hit` — are
+/// deliberately **not** journalled: they are wall-clock noise that
+/// would make the journal bytes depend on worker count and machine
+/// load (the explorer pins that a cancelled serial run and a
+/// cancelled 4-worker run flush *identical* journals), and no report
+/// emits them. Replay restores them as `0.0` / `true`: a replayed
+/// point genuinely cost no analysis time this run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayedCandidate {
+    /// Which enumerated schedule the candidate used.
+    pub schedule: ScheduleChoice,
+    /// Display label of the schedule (stored, not recomputed, so a
+    /// future label tweak cannot desync replayed reports).
+    pub schedule_label: String,
+    /// Provisioned PE count.
+    pub pes: i64,
+    /// Total energy \[pJ\].
+    pub energy_pj: f64,
+    /// DRAM share of the energy \[pJ\].
+    pub dram_pj: f64,
+    /// Latency \[cycles\].
+    pub latency_cycles: i64,
+    /// Energy–delay product.
+    pub edp: f64,
+}
+
+impl ReplayedCandidate {
+    /// Capture the journalled fields of one evaluated candidate.
+    pub fn of(ep: &EvaluatedPoint) -> Self {
+        ReplayedCandidate {
+            schedule: ep.point.schedule.clone(),
+            schedule_label: ep.schedule_label.clone(),
+            pes: ep.pes,
+            energy_pj: ep.energy_pj,
+            dram_pj: ep.dram_pj,
+            latency_cycles: ep.latency_cycles,
+            edp: ep.edp,
+        }
+    }
+
+    /// Reconstruct the [`EvaluatedPoint`]: the re-enumerated `base`
+    /// design point (identical by the fingerprint check) with the
+    /// journalled schedule choice and metrics restored.
+    pub fn to_evaluated(&self, base: &DesignPoint) -> EvaluatedPoint {
+        let mut point = base.clone();
+        point.schedule = self.schedule.clone();
+        EvaluatedPoint {
+            point,
+            schedule_label: self.schedule_label.clone(),
+            pes: self.pes,
+            energy_pj: self.energy_pj,
+            dram_pj: self.dram_pj,
+            latency_cycles: self.latency_cycles,
+            edp: self.edp,
+            analysis_ms: 0.0,
+            cache_hit: true,
+        }
+    }
+}
+
+/// The journalled outcome of one design point: every schedule
+/// candidate it produced, or the failure message the sweep reported.
+/// Failures are journalled too — resuming must not retry a
+/// deterministic failure, and the failure list is part of the report.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalRecord {
+    /// The point evaluated; all candidates in enumeration order.
+    Ok(Vec<ReplayedCandidate>),
+    /// The point failed with this message.
+    Fail(String),
+}
+
+/// Result of [`load`]: nothing to replay, or the surviving records.
+#[derive(Debug)]
+pub enum JournalLoad {
+    /// No journal file exists (fresh sweep, or a corrupt one was just
+    /// quarantined by an earlier run).
+    Absent,
+    /// A valid journal for this exact `(workload, space)`.
+    Replayed {
+        /// Surviving records by design-point index.
+        records: BTreeMap<usize, JournalRecord>,
+        /// Per-record recovery notes (corrupt record skipped,
+        /// truncated tail dropped, out-of-range index ignored).
+        warnings: Vec<String>,
+    },
+}
+
+/// Load and verify the journal at `path` against `expected`.
+///
+/// Errors are *loud* conditions the caller must surface: a stale
+/// header (file left in place, mismatching field named) or a corrupt
+/// header (file quarantined to `path.corrupt`). Per-record damage is
+/// not an error — survivors replay and the damage is reported in
+/// [`JournalLoad::Replayed`]'s `warnings`.
+pub fn load(
+    path: &Path,
+    expected: &JournalHeader,
+) -> Result<JournalLoad, String> {
+    let content = match std::fs::read_to_string(path) {
+        Ok(c) => c,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(JournalLoad::Absent)
+        }
+        Err(e) => {
+            return Err(format!(
+                "cannot read checkpoint journal {}: {e}",
+                path.display()
+            ))
+        }
+    };
+    let mut lines = content.lines();
+    let Some(header) = JournalHeader::parse(&mut lines) else {
+        let to = quarantine(path);
+        return Err(format!(
+            "checkpoint journal {} has a corrupt header; {to}",
+            path.display()
+        ));
+    };
+    if let Some((field, found, want)) = header.mismatch(expected) {
+        return Err(format!(
+            "checkpoint journal {} is stale: {field} is {found} but this \
+             sweep has {want} (the workload or design space changed since \
+             the journal was written); delete the file or pass a fresh \
+             --checkpoint path",
+            path.display()
+        ));
+    }
+    let mut records = BTreeMap::new();
+    let mut warnings = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        match parse_record(line) {
+            Some((idx, rec)) if idx < expected.points => {
+                records.insert(idx, rec);
+            }
+            Some((idx, _)) => warnings.push(format!(
+                "checkpoint journal {}: record for point {idx} is beyond \
+                 the {}-point space; ignored",
+                path.display(),
+                expected.points
+            )),
+            None => warnings.push(format!(
+                "checkpoint journal {}: dropped a corrupt or truncated \
+                 record line ({} bytes); the point will be re-evaluated",
+                path.display(),
+                line.len()
+            )),
+        }
+    }
+    Ok(JournalLoad::Replayed { records, warnings })
+}
+
+/// Rename a damaged journal to `<path>.corrupt` so it is preserved
+/// for inspection but never re-read. Returns a human-readable note.
+fn quarantine(path: &Path) -> String {
+    let to = PathBuf::from(format!("{}.corrupt", path.display()));
+    match std::fs::rename(path, &to) {
+        Ok(()) => format!("quarantined to {}", to.display()),
+        Err(e) => format!(
+            "quarantine to {} failed ({e}); delete the file by hand",
+            to.display()
+        ),
+    }
+}
+
+/// Batched journal writer. Records accumulate in memory (keyed and
+/// re-rendered deterministically, so serial and parallel sweeps that
+/// commit the same prefix flush byte-identical files) and every
+/// `batch` appends — or an explicit [`JournalWriter::flush`] — rewrite
+/// the file through a `*.tmp<pid>` sibling and an atomic rename. A
+/// reader therefore never observes a torn file, and an interrupted
+/// write leaves only a temp that the next [`JournalWriter::create`]
+/// reaps.
+#[derive(Debug)]
+pub struct JournalWriter {
+    path: PathBuf,
+    header: JournalHeader,
+    records: BTreeMap<usize, String>,
+    batch: usize,
+    pending: usize,
+    fail_flush: bool,
+}
+
+impl JournalWriter {
+    /// A writer for `path`, reaping any `path.tmp<digits>` orphans an
+    /// interrupted predecessor left behind. Nothing is written until
+    /// the first flush. `batch == 0` clamps to 1 (flush every point).
+    pub fn create(
+        path: impl Into<PathBuf>,
+        header: &JournalHeader,
+        batch: usize,
+    ) -> Self {
+        let path = path.into();
+        reap_orphan_temps(&path);
+        JournalWriter {
+            path,
+            header: header.clone(),
+            records: BTreeMap::new(),
+            batch: batch.max(1),
+            pending: 0,
+            fail_flush: false,
+        }
+    }
+
+    /// The journal file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Fault injection: make every subsequent flush fail without
+    /// touching the filesystem (`TCPA_DSE_FAULT_JOURNAL_WRITE`).
+    pub fn set_fail_flush(&mut self, fail: bool) {
+        self.fail_flush = fail;
+    }
+
+    /// Record the outcome of point `idx`; flushes when the batch
+    /// fills. A failed flush keeps the record buffered — the journal
+    /// is advisory, and a later flush retries the whole state.
+    pub fn append(
+        &mut self,
+        idx: usize,
+        rec: &JournalRecord,
+    ) -> Result<(), String> {
+        self.records.insert(idx, render_record(idx, rec));
+        self.pending += 1;
+        if self.pending >= self.batch {
+            self.flush()
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Rewrite the journal file with everything recorded so far.
+    pub fn flush(&mut self) -> Result<(), String> {
+        if self.fail_flush {
+            return Err("injected journal write failure \
+                        (TCPA_DSE_FAULT_JOURNAL_WRITE)"
+                .to_string());
+        }
+        let mut body = self.header.render();
+        for line in self.records.values() {
+            body.push_str(line);
+            body.push('\n');
+        }
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| {
+                    format!("create {}: {e}", dir.display())
+                })?;
+            }
+        }
+        let tmp = PathBuf::from(format!(
+            "{}.tmp{}",
+            self.path.display(),
+            std::process::id()
+        ));
+        std::fs::write(&tmp, &body)
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path).map_err(|e| {
+            format!(
+                "rename {} -> {}: {e}",
+                tmp.display(),
+                self.path.display()
+            )
+        })?;
+        self.pending = 0;
+        Ok(())
+    }
+}
+
+/// Remove `<journal>.tmp<digits>` siblings — rename sources whose
+/// writer died mid-flush. Only the exact naming of
+/// [`JournalWriter::flush`] is touched.
+fn reap_orphan_temps(path: &Path) {
+    let Some(dir) = path.parent() else { return };
+    let dir = if dir.as_os_str().is_empty() {
+        Path::new(".")
+    } else {
+        dir
+    };
+    let Some(stem) = path.file_name().map(|n| n.to_string_lossy()) else {
+        return;
+    };
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(rest) = name.strip_prefix(stem.as_ref()) else {
+            continue;
+        };
+        let Some(pid) = rest.strip_prefix(".tmp") else { continue };
+        if !pid.is_empty() && pid.bytes().all(|b| b.is_ascii_digit()) {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+// ---- record line format -------------------------------------------------
+//
+//   r <idx> ok <ncand> {<sched> <label> <pes> <e> <d> <lat> <edp>}*
+//       c <fnv64>
+//   r <idx> fail <escaped message> c <fnv64>
+//
+// where <sched> is `first` or `i<comma-joined indices>`, <label> and
+// the failure message are whitespace-escaped single tokens, every f64
+// is its to_bits() as 16 hex digits, and <fnv64> is FNV-1a 64 of the
+// record body (everything before " c ").
+
+fn render_record(idx: usize, rec: &JournalRecord) -> String {
+    let mut s = String::new();
+    match rec {
+        JournalRecord::Ok(cands) => {
+            let _ = write!(s, "r {idx} ok {}", cands.len());
+            for c in cands {
+                let sched = match &c.schedule {
+                    ScheduleChoice::First => "first".to_string(),
+                    ScheduleChoice::Indices(ix) => format!(
+                        "i{}",
+                        ix.iter()
+                            .map(|x| x.to_string())
+                            .collect::<Vec<_>>()
+                            .join(",")
+                    ),
+                };
+                let _ = write!(
+                    s,
+                    " {sched} {} {} {:016x} {:016x} {} {:016x}",
+                    escape(&c.schedule_label),
+                    c.pes,
+                    c.energy_pj.to_bits(),
+                    c.dram_pj.to_bits(),
+                    c.latency_cycles,
+                    c.edp.to_bits()
+                );
+            }
+        }
+        JournalRecord::Fail(msg) => {
+            let _ = write!(s, "r {idx} fail {}", escape(msg));
+        }
+    }
+    let sum = fnv1a64(&s);
+    let _ = write!(s, " c {sum:016x}");
+    s
+}
+
+fn parse_record(line: &str) -> Option<(usize, JournalRecord)> {
+    let (body, sum) = line.rsplit_once(" c ")?;
+    if u64::from_str_radix(sum, 16).ok()? != fnv1a64(body) {
+        return None;
+    }
+    let rest = body.strip_prefix("r ")?;
+    let (idx, rest) = rest.split_once(' ')?;
+    let idx: usize = idx.parse().ok()?;
+    if let Some(msg) = rest.strip_prefix("fail ") {
+        return Some((idx, JournalRecord::Fail(unescape(msg)?)));
+    }
+    let counted = rest.strip_prefix("ok ")?;
+    let mut tok = counted.split(' ');
+    let ncand: usize = tok.next()?.parse().ok()?;
+    let mut cands = Vec::with_capacity(ncand);
+    for _ in 0..ncand {
+        let sched = tok.next()?;
+        let schedule = if sched == "first" {
+            ScheduleChoice::First
+        } else {
+            let ix = sched.strip_prefix('i')?;
+            let ix: Vec<usize> = if ix.is_empty() {
+                Vec::new()
+            } else {
+                ix.split(',')
+                    .map(|x| x.parse().ok())
+                    .collect::<Option<_>>()?
+            };
+            ScheduleChoice::Indices(ix)
+        };
+        cands.push(ReplayedCandidate {
+            schedule,
+            schedule_label: unescape(tok.next()?)?,
+            pes: tok.next()?.parse().ok()?,
+            energy_pj: f64::from_bits(
+                u64::from_str_radix(tok.next()?, 16).ok()?,
+            ),
+            dram_pj: f64::from_bits(
+                u64::from_str_radix(tok.next()?, 16).ok()?,
+            ),
+            latency_cycles: tok.next()?.parse().ok()?,
+            edp: f64::from_bits(u64::from_str_radix(tok.next()?, 16).ok()?),
+        });
+    }
+    if tok.next().is_some() {
+        return None;
+    }
+    Some((idx, JournalRecord::Ok(cands)))
+}
+
+/// Escape a string into a single whitespace-free token: `\\` for a
+/// backslash, `\n` for a newline, `\s` for a space, `\z` for the
+/// empty string (a record field must occupy a token).
+fn escape(s: &str) -> String {
+    if s.is_empty() {
+        return "\\z".to_string();
+    }
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            ' ' => out.push_str("\\s"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn unescape(s: &str) -> Option<String> {
+    if s == "\\z" {
+        return Some(String::new());
+    }
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(ch) = chars.next() {
+        if ch != '\\' {
+            out.push(ch);
+            continue;
+        }
+        match chars.next()? {
+            '\\' => out.push('\\'),
+            'n' => out.push('\n'),
+            's' => out.push(' '),
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+/// FNV-1a 64: tiny, dependency-free, and plenty to catch torn or
+/// bit-rotted record lines (this is corruption *detection*, not
+/// authentication).
+fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tcpa-journal-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn small_setup() -> (Workload, DesignSpace, Vec<DesignPoint>) {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = DesignSpace::new()
+            .with_arrays(vec![vec![1, 2], vec![2, 1], vec![2, 2]])
+            .with_bounds(vec![8, 8]);
+        let points = space.points();
+        (wl, space, points)
+    }
+
+    fn sample_records(points: &[DesignPoint]) -> Vec<(usize, JournalRecord)> {
+        let cand = |sched: ScheduleChoice, e: f64| ReplayedCandidate {
+            schedule: sched,
+            schedule_label: "first".to_string(),
+            pes: 4,
+            energy_pj: e,
+            dram_pj: e * 0.25,
+            latency_cycles: 123,
+            edp: e * 123.0,
+        };
+        assert!(points.len() >= 3, "space must have a few points");
+        vec![
+            (
+                0,
+                JournalRecord::Ok(vec![
+                    cand(ScheduleChoice::First, 0.1 + 0.2),
+                    cand(
+                        ScheduleChoice::Indices(vec![1, 0]),
+                        f64::MIN_POSITIVE,
+                    ),
+                ]),
+            ),
+            (
+                1,
+                JournalRecord::Fail(
+                    "evaluation panicked: index 3\\4 out of bounds\n(second \
+                     line)"
+                        .to_string(),
+                ),
+            ),
+            (2, JournalRecord::Ok(vec![cand(ScheduleChoice::First, -1e300)])),
+        ]
+    }
+
+    #[test]
+    fn journal_round_trips_bit_for_bit() {
+        let dir = tmp_dir("roundtrip");
+        let path = dir.join("sweep.journal");
+        let (wl, space, points) = small_setup();
+        let header = JournalHeader::new(&wl, &space, points.len());
+        let recs = sample_records(&points);
+        let mut w = JournalWriter::create(&path, &header, 2);
+        for (idx, rec) in &recs {
+            w.append(*idx, rec).unwrap();
+        }
+        w.flush().unwrap();
+        match load(&path, &header).unwrap() {
+            JournalLoad::Replayed { records, warnings } => {
+                assert!(warnings.is_empty(), "{warnings:?}");
+                assert_eq!(records.len(), recs.len());
+                for (idx, rec) in &recs {
+                    assert_eq!(records.get(idx), Some(rec), "point {idx}");
+                }
+            }
+            JournalLoad::Absent => panic!("journal was just written"),
+        }
+        // A replayed candidate restores the original EvaluatedPoint
+        // exactly, including the schedule choice on the base point.
+        let JournalRecord::Ok(cands) = &recs[0].1 else { unreachable!() };
+        let ep = cands[1].to_evaluated(&points[0]);
+        assert_eq!(
+            ep.point.schedule,
+            ScheduleChoice::Indices(vec![1, 0])
+        );
+        assert_eq!(ep.energy_pj.to_bits(), f64::MIN_POSITIVE.to_bits());
+        assert_eq!(ep.analysis_ms, 0.0, "replay costs no analysis time");
+        assert!(ep.cache_hit, "a replayed point is a cache hit");
+        assert_eq!(ReplayedCandidate::of(&ep), cands[1]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_journal_is_absent_and_batching_defers_writes() {
+        let dir = tmp_dir("absent");
+        let path = dir.join("sweep.journal");
+        let (wl, space, points) = small_setup();
+        let header = JournalHeader::new(&wl, &space, points.len());
+        assert!(matches!(
+            load(&path, &header).unwrap(),
+            JournalLoad::Absent
+        ));
+        let recs = sample_records(&points);
+        let mut w = JournalWriter::create(&path, &header, 64);
+        w.append(recs[0].0, &recs[0].1).unwrap();
+        assert!(!path.exists(), "batch of 64 defers the first write");
+        w.flush().unwrap();
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_header_is_rejected_loudly_and_left_in_place() {
+        let dir = tmp_dir("stale");
+        let path = dir.join("sweep.journal");
+        let (wl, space, points) = small_setup();
+        let header = JournalHeader::new(&wl, &space, points.len());
+        let mut w = JournalWriter::create(&path, &header, 1);
+        w.flush().unwrap();
+        // Same workload, different space: the space_fp must be named.
+        let other = DesignSpace::new()
+            .with_arrays(vec![vec![4, 4]])
+            .with_bounds(vec![16, 16]);
+        let expected = JournalHeader::new(&wl, &other, points.len());
+        let err = load(&path, &expected).unwrap_err();
+        assert!(err.contains("stale"), "{err}");
+        assert!(err.contains("space_fp"), "{err}");
+        assert!(path.exists(), "stale journals are kept for inspection");
+        // A different workload is caught by its fingerprint.
+        let gemm = workloads::by_name("gemm").unwrap();
+        let expected = JournalHeader::new(&gemm, &space, points.len());
+        let err = load(&path, &expected).unwrap_err();
+        assert!(err.contains("workload_fp"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_header_is_quarantined_not_replayed() {
+        let dir = tmp_dir("quarantine");
+        let path = dir.join("sweep.journal");
+        let (wl, space, points) = small_setup();
+        let header = JournalHeader::new(&wl, &space, points.len());
+        std::fs::write(&path, "not a journal at all\n").unwrap();
+        let err = load(&path, &header).unwrap_err();
+        assert!(err.contains("corrupt header"), "{err}");
+        assert!(err.contains("quarantined"), "{err}");
+        let corrupt = PathBuf::from(format!("{}.corrupt", path.display()));
+        assert!(corrupt.exists(), "file moved aside for inspection");
+        assert!(!path.exists());
+        // The rerun then starts fresh instead of failing forever.
+        assert!(matches!(
+            load(&path, &header).unwrap(),
+            JournalLoad::Absent
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_tail_recovers_every_complete_record() {
+        let dir = tmp_dir("truncate");
+        let path = dir.join("sweep.journal");
+        let (wl, space, points) = small_setup();
+        let header = JournalHeader::new(&wl, &space, points.len());
+        let recs = sample_records(&points);
+        let mut w = JournalWriter::create(&path, &header, 1);
+        for (idx, rec) in &recs {
+            w.append(*idx, rec).unwrap();
+        }
+        // Chop the file mid-way through the final record line, the
+        // signature of a crash during a non-atomic write (or a torn
+        // copy of the journal itself).
+        let content = std::fs::read_to_string(&path).unwrap();
+        let cut = content.trim_end().len() - 7;
+        std::fs::write(&path, &content[..cut]).unwrap();
+        match load(&path, &header).unwrap() {
+            JournalLoad::Replayed { records, warnings } => {
+                assert_eq!(records.len(), recs.len() - 1);
+                assert!(records.contains_key(&0));
+                assert!(records.contains_key(&1));
+                assert!(!records.contains_key(&2), "tail record dropped");
+                assert_eq!(warnings.len(), 1, "{warnings:?}");
+                assert!(
+                    warnings[0].contains("truncated"),
+                    "{warnings:?}"
+                );
+            }
+            JournalLoad::Absent => panic!("header is intact"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_corrupt_record_is_skipped_with_warning() {
+        let dir = tmp_dir("corrupt-record");
+        let path = dir.join("sweep.journal");
+        let (wl, space, points) = small_setup();
+        let header = JournalHeader::new(&wl, &space, points.len());
+        let recs = sample_records(&points);
+        let mut w = JournalWriter::create(&path, &header, 1);
+        for (idx, rec) in &recs {
+            w.append(*idx, rec).unwrap();
+        }
+        // Flip one metric byte inside record 0's body; its checksum
+        // no longer matches, so exactly that point is re-evaluated.
+        let content = std::fs::read_to_string(&path).unwrap();
+        let line = content
+            .lines()
+            .find(|l| l.starts_with("r 0 "))
+            .unwrap()
+            .to_string();
+        let bad = if line.contains('7') {
+            line.replacen('7', "8", 1)
+        } else {
+            line.replacen('0', "9", 1)
+        };
+        std::fs::write(&path, content.replace(&line, &bad)).unwrap();
+        match load(&path, &header).unwrap() {
+            JournalLoad::Replayed { records, warnings } => {
+                assert!(!records.contains_key(&0), "corrupt record gone");
+                assert!(records.contains_key(&1));
+                assert!(records.contains_key(&2));
+                assert_eq!(warnings.len(), 1, "{warnings:?}");
+            }
+            JournalLoad::Absent => panic!("header is intact"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn create_reaps_only_our_orphan_temps() {
+        let dir = tmp_dir("reap");
+        let path = dir.join("sweep.journal");
+        let orphan = dir.join("sweep.journal.tmp4242");
+        let foreign = dir.join("other.tmp12");
+        let suffixed = dir.join("sweep.journal.tmpX");
+        std::fs::write(&orphan, "interrupted flush").unwrap();
+        std::fs::write(&foreign, "another tool's temp").unwrap();
+        std::fs::write(&suffixed, "not our pid naming").unwrap();
+        let (wl, space, points) = small_setup();
+        let header = JournalHeader::new(&wl, &space, points.len());
+        let _w = JournalWriter::create(&path, &header, 1);
+        assert!(!orphan.exists(), "our orphan temp is reaped");
+        assert!(foreign.exists(), "foreign temps are kept");
+        assert!(suffixed.exists(), "non-digit suffixes are kept");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprints_separate_spaces_and_escaping_round_trips() {
+        let (_, space, _) = small_setup();
+        let other = space.clone().with_bounds(vec![16, 16]);
+        assert_ne!(space_fingerprint(&space), space_fingerprint(&other));
+        assert_eq!(space_fingerprint(&space), space_fingerprint(&space));
+        for s in ["", " ", "a b", "a\\b", "line\nbreak", "\\z", "\\"] {
+            assert_eq!(
+                unescape(&escape(s)).as_deref(),
+                Some(s),
+                "escape round trip of {s:?}"
+            );
+        }
+        assert_eq!(unescape("\\q"), None, "unknown escape is corrupt");
+    }
+}

@@ -41,7 +41,19 @@
 //!   processes (`AnalysisCache::with_disk`, `dse --analysis-cache DIR`).
 //! * [`explore`] — the **parallel explorer**: fans design points out over
 //!   a `std::thread` worker pool fed by a channel work queue, with
-//!   results stitched back in deterministic enumeration order.
+//!   results stitched back in deterministic enumeration order. The
+//!   controlled entry point ([`explore_controlled`] /
+//!   [`ExploreControl`]) adds cooperative cancellation
+//!   ([`crate::cancel::CancelToken`]: SIGINT, `--deadline`, per-point
+//!   timeouts), progress callbacks, deterministic fault injection and
+//!   partial results — the explorer-as-a-library shape that `dse
+//!   serve` and sharded sweeps will sit on.
+//! * [`journal`] — the **checkpoint journal**: an append-only,
+//!   checksummed, line-oriented record of completed points
+//!   (`dse --checkpoint FILE`), fingerprint-locked to its (workload,
+//!   space), tolerant of truncated tails, quarantining corrupt
+//!   headers — `--resume` replays completed points bit-for-bit and
+//!   evaluates only the remainder.
 //! * [`pareto`] — **multi-objective selection**: (energy, latency,
 //!   PE count, DRAM traffic) non-dominated frontiers and knee-point
 //!   picking, replacing the old single-scalar EDP sort. All float
@@ -67,6 +79,7 @@
 
 pub mod cache;
 pub mod explore;
+pub mod journal;
 pub mod pareto;
 pub mod persist;
 pub mod space;
@@ -76,8 +89,14 @@ pub use cache::{
     phase_fingerprint, workload_fingerprint, AnalysisCache, CacheStats,
 };
 pub use explore::{
-    explore, explore_with_cache, EvaluatedPoint, ExploreConfig,
-    ExploreResult, FrontierGroup,
+    explore, explore_controlled, explore_with_cache, EvaluatedPoint,
+    ExploreConfig, ExploreControl, ExploreResult, FaultPlan,
+    FrontierGroup, FAULT_DEADLINE_AFTER_ENV, FAULT_JOURNAL_WRITE_ENV,
+    FAULT_KILL_AFTER_ENV, JOURNAL_BATCH_ENV,
+};
+pub use journal::{
+    space_fingerprint, JournalHeader, JournalLoad, JournalRecord,
+    JournalWriter, ReplayedCandidate,
 };
 pub use pareto::{dominates, knee_point, pareto_frontier, Objectives};
 pub use persist::{phase_cache_name, DiskCache};

@@ -86,9 +86,12 @@ impl DiskCache {
     /// name a live workload; a collision or unreadable header keeps the
     /// file. Orphaned temp files from interrupted writes of live
     /// workloads (`<key stem>.tmp<pid>`, exactly the writer's naming)
-    /// are removed too. Everything else — other workloads, other tools'
-    /// files, unrecognized names — is **kept**: a shared directory is
-    /// not ours to reap. Returns the number of files removed; a missing
+    /// are removed too, as is checkpoint-journal debris parked in the
+    /// cache directory (`*.tmp<digits>` / `*.corrupt` whose content
+    /// begins with the journal magic — see [`is_journal_debris`]).
+    /// Everything else — other workloads, other tools' files,
+    /// unrecognized names — is **kept**: a shared directory is not ours
+    /// to reap. Returns the number of files removed; a missing
     /// directory counts as already empty.
     pub fn prune(&self, live: &[(String, u64)]) -> std::io::Result<usize> {
         let entries = match std::fs::read_dir(&self.dir) {
@@ -131,9 +134,49 @@ impl DiskCache {
                 // touched. (A concurrent writer of the same key can
                 // still lose its in-flight temp; it degrades to one
                 // recomputed analysis, by the advisory-store contract.)
-                None => is_orphan_temp(name.as_ref(), &sanitized),
+                None => {
+                    is_orphan_temp(name.as_ref(), &sanitized)
+                        || is_journal_debris(
+                            name.as_ref(),
+                            &entry.path(),
+                        )
+                }
             };
             if stale {
+                std::fs::remove_file(entry.path())?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Best-effort startup cleanup: remove interrupted-write temp
+    /// files — `<key stem>.tmp<digits>` where the stem parses as one
+    /// of our keys — without needing the live-workload list that
+    /// [`DiskCache::prune`] requires. A concurrent writer's in-flight
+    /// temp can be lost; by the advisory-store contract that degrades
+    /// to one recomputed analysis. Foreign names are kept. Returns the
+    /// number of files removed; a missing directory counts as empty.
+    pub fn reap_temps(&self) -> std::io::Result<usize> {
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(0)
+            }
+            Err(e) => return Err(e),
+        };
+        let mut removed = 0;
+        for entry in entries {
+            let entry = entry?;
+            let file_name = entry.file_name();
+            let name = file_name.to_string_lossy();
+            let Some((stem, ext)) = name.rsplit_once('.') else {
+                continue;
+            };
+            let tmpish = ext.strip_prefix("tmp").is_some_and(|p| {
+                !p.is_empty() && p.bytes().all(|b| b.is_ascii_digit())
+            });
+            if tmpish && parse_key_stem(stem).is_some() {
                 std::fs::remove_file(entry.path())?;
                 removed += 1;
             }
@@ -285,6 +328,45 @@ fn is_orphan_temp(file_name: &str, sanitized: &[(String, u64)]) -> bool {
         Some((wl, _)) => sanitized.iter().any(|(n, _)| *n == wl),
         None => false,
     }
+}
+
+/// Is `file_name` checkpoint-journal debris — an interrupted-write
+/// temp (`*.tmp<digits>`, the journal writer's naming) or a
+/// quarantined corrupt journal (`*.corrupt`)? The name shapes alone
+/// are too generic to reap on sight in a shared directory, so the
+/// file's first line must additionally prove provenance by carrying
+/// the journal magic. Live journals (no debris suffix) are never
+/// touched.
+fn is_journal_debris(file_name: &str, path: &Path) -> bool {
+    let Some((_, ext)) = file_name.rsplit_once('.') else {
+        return false;
+    };
+    let tmpish = ext.strip_prefix("tmp").is_some_and(|pid| {
+        !pid.is_empty() && pid.bytes().all(|b| b.is_ascii_digit())
+    });
+    if !tmpish && ext != "corrupt" {
+        return false;
+    }
+    first_line_is(path, crate::dse::journal::MAGIC)
+}
+
+/// Does the file at `path` begin with exactly `magic` followed by a
+/// newline? Only `magic.len() + 1` bytes are read.
+fn first_line_is(path: &Path, magic: &str) -> bool {
+    use std::io::Read as _;
+    let Ok(mut f) = std::fs::File::open(path) else {
+        return false;
+    };
+    let mut buf = vec![0u8; magic.len() + 1];
+    let mut len = 0;
+    while len < buf.len() {
+        match f.read(&mut buf[len..]) {
+            Ok(0) => break,
+            Ok(n) => len += n,
+            Err(_) => return false,
+        }
+    }
+    buf[..len] == *format!("{magic}\n").as_bytes()
 }
 
 /// Does the `.volumes` file at `path` declare one of the live *raw*
@@ -746,6 +828,54 @@ mod tests {
         // its fingerprint goes stale.
         assert_eq!(cache.prune(&[("a:b".to_string(), 1)]).unwrap(), 1);
         assert!(!victim.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reap_temps_cleans_interrupted_writes_without_a_live_list() {
+        let dir = tmp_dir("reap-temps");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ours = dir.join(format!(
+            "gesummv-{:016x}-2x2-{:016x}.tmp4321",
+            3u64, 4u64
+        ));
+        std::fs::write(&ours, "interrupted").unwrap();
+        let alien = dir.join("data.tmp12");
+        std::fs::write(&alien, "another tool's temp").unwrap();
+        let cache = DiskCache::new(&dir);
+        assert_eq!(cache.reap_temps().unwrap(), 1);
+        assert!(!ours.exists());
+        assert!(alien.exists(), "foreign temp naming is kept");
+        let missing = DiskCache::new(dir.join("never-created"));
+        assert_eq!(missing.reap_temps().unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_reaps_journal_debris_by_content_sniff() {
+        let dir = tmp_dir("journal-debris");
+        std::fs::create_dir_all(&dir).unwrap();
+        let magic = crate::dse::journal::MAGIC;
+        let jtmp = dir.join("sweep.journal.tmp4242");
+        std::fs::write(&jtmp, format!("{magic}\nworkload x\n")).unwrap();
+        let jcorrupt = dir.join("sweep.journal.corrupt");
+        std::fs::write(&jcorrupt, format!("{magic}\nworkload x\n"))
+            .unwrap();
+        // The same name shapes without journal content are not ours.
+        let alien_tmp = dir.join("other.tmp7");
+        std::fs::write(&alien_tmp, "not a journal").unwrap();
+        let alien_corrupt = dir.join("report.corrupt");
+        std::fs::write(&alien_corrupt, "someone else's quarantine")
+            .unwrap();
+        // A live journal (no debris suffix) is never touched.
+        let live = dir.join("sweep.journal");
+        std::fs::write(&live, format!("{magic}\nworkload x\n")).unwrap();
+        let cache = DiskCache::new(&dir);
+        assert_eq!(cache.prune(&[]).unwrap(), 2);
+        assert!(!jtmp.exists() && !jcorrupt.exists());
+        assert!(alien_tmp.exists(), "content sniff protects foreign tmp");
+        assert!(alien_corrupt.exists(), "foreign .corrupt is kept");
+        assert!(live.exists(), "live journals are kept");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -31,8 +31,12 @@
 //!   analysis producing a piecewise quasi-polynomial `E_tot(N, p)` (Eq. 11).
 //! * [`dse`] — design-space exploration: multi-axis spaces (array shapes,
 //!   tile scales, energy policies, bounds grids), a parallel channel-fed
-//!   explorer, a memoizing analysis cache, and multi-objective Pareto
+//!   explorer with cooperative cancellation and checkpoint/resume
+//!   journals, a memoizing analysis cache, and multi-objective Pareto
 //!   frontier / knee-point selection.
+//! * [`cancel`] — cooperative cancellation tokens (SIGINT, wall-clock
+//!   deadlines, programmatic) honored between design points and inside
+//!   the Fourier–Motzkin loops.
 //! * [`sim`] — cycle-accurate TCPA simulator (the paper's baseline):
 //!   PE array, register files, interconnect, I/O buffers, DMA, counters.
 //! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts
@@ -65,6 +69,7 @@ pub mod tiling;
 pub mod schedule;
 pub mod energy;
 pub mod analysis;
+pub mod cancel;
 pub mod dse;
 pub mod sim;
 pub mod runtime;

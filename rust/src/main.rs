@@ -19,13 +19,20 @@ fn main() {
              [--max-pes P] [--arrays 1d|2d]\n                       \
              [--bounds-sweep N,N,..] [--tile-scales K,K] \
              [--policies all|tcpa,no-fd,no-reuse]\n                       \
-             [--prune-symmetric] [--workers W] [--out DIR]\n  \
+             [--prune-symmetric] [--workers W] [--out DIR]\n                       \
+             [--checkpoint FILE] [--resume] [--deadline SECS]\n                       \
+             [--point-timeout SECS] [--progress]\n  \
              tcpa-energy figures  [--out DIR] [--quick]\n  \
              tcpa-energy lint     --workload NAME | --all-builtins \
              [--array TxT] [--pi N]\n                       \
              [--json] [--json-out FILE] [--deny warnings]\n\n\
              `analyze` and `dse` lint their workload first; deny-level \
-             findings abort\nthe run (bypass with --no-lint)."
+             findings abort\nthe run (bypass with --no-lint).\n\n\
+             Long sweeps: --checkpoint journals completed points, \
+             --resume replays them\nbit-for-bit, --deadline/--point-timeout \
+             bound the clock, Ctrl-C drains and\nflushes. `dse` exit \
+             codes: 0 ok, 1 all points failed, 2 error, 3 partial\n\
+             (cancelled; frontier marked `partial (k/n points)`)."
         );
         return;
     }

@@ -17,6 +17,7 @@ pub use piecewise::{GuardedSum, PiecewiseQPoly};
 pub use poly::Poly;
 pub use set::{k_grid, DimBounds, SetConstraint, SetError, TiledSet, UnfoldedCell};
 pub use symbolic::{
-    count_symbolic, count_symbolic_in, FeasPool, FeasStats, SymbolicCtx,
-    SymbolicOptions,
+    check_point_guard, count_symbolic, count_symbolic_in, set_point_guard,
+    FeasPool, FeasStats, PointGuard, SymbolicCtx, SymbolicOptions,
+    POINT_CANCELLED_PANIC, POINT_TIMEOUT_PANIC,
 };

@@ -31,15 +31,103 @@
 //! `WorkloadAnalysis` — and, through `dse::AnalysisCache`, a whole sweep —
 //! runs Fourier–Motzkin **once per distinct guard**.
 
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::expr::AffineExpr;
 use super::guard::{Constraint, Guard};
 use super::piecewise::GuardedSum;
 use super::poly::Poly;
 use super::set::{k_grid, DimBounds, TiledSet};
+use crate::cancel::CancelToken;
+
+/// Panic payload raised by [`check_point_guard`] when the installed
+/// guard's [`CancelToken`] has tripped. Callers that `catch_unwind`
+/// an analysis (the DSE cache does) classify the abort by this
+/// substring — it must stay stable.
+pub const POINT_CANCELLED_PANIC: &str = "tcpa: point cancelled";
+
+/// Panic payload raised by [`check_point_guard`] when the installed
+/// guard's per-point timeout has elapsed. Stable, like
+/// [`POINT_CANCELLED_PANIC`].
+pub const POINT_TIMEOUT_PANIC: &str = "tcpa: point timeout";
+
+/// Per-thread cooperative abort guard for one design-point analysis.
+///
+/// The DSE worker installs one via [`set_point_guard`] around each
+/// `evaluate` call; the Fourier–Motzkin hot loops call
+/// [`check_point_guard`] so a pathological chamber blow-up cannot
+/// wedge a worker past its `--point-timeout` or keep it busy after
+/// the sweep was cancelled. Aborting is done by panicking with a
+/// stable payload ([`POINT_CANCELLED_PANIC`] /
+/// [`POINT_TIMEOUT_PANIC`]) that the worker's `catch_unwind` layer
+/// turns back into a classified outcome.
+#[derive(Debug, Clone)]
+pub struct PointGuard {
+    cancel: CancelToken,
+    timeout_at: Option<Instant>,
+}
+
+impl PointGuard {
+    /// A guard observing `cancel`, with an optional per-point budget
+    /// measured from now.
+    pub fn new(cancel: CancelToken, timeout: Option<Duration>) -> Self {
+        PointGuard {
+            cancel,
+            timeout_at: timeout.map(|t| Instant::now() + t),
+        }
+    }
+}
+
+thread_local! {
+    static POINT_GUARD: RefCell<Option<PointGuard>> =
+        const { RefCell::new(None) };
+    static GUARD_TICK: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Install (`Some`) or clear (`None`) the calling thread's point
+/// guard. With no guard installed [`check_point_guard`] is a no-op,
+/// so library users outside the DSE pool pay one thread-local read.
+pub fn set_point_guard(guard: Option<PointGuard>) {
+    GUARD_TICK.with(|t| t.set(0));
+    POINT_GUARD.with(|g| *g.borrow_mut() = guard);
+}
+
+/// Cooperative abort point for the symbolic/Fourier–Motzkin loops.
+///
+/// Cheap by construction: every call does one flag-only
+/// [`CancelToken::tripped`] load; the clock (deadline, SIGINT latch,
+/// per-point timeout) is consulted on the first call after the guard
+/// is installed and every 64th call thereafter, so even a count that
+/// finishes in a handful of branches observes an expired timeout.
+pub fn check_point_guard() {
+    POINT_GUARD.with(|slot| {
+        let g = slot.borrow();
+        let Some(g) = g.as_ref() else { return };
+        if g.cancel.tripped() {
+            panic!("{POINT_CANCELLED_PANIC}");
+        }
+        let tick = GUARD_TICK.with(|t| {
+            let v = t.get().wrapping_add(1);
+            t.set(v);
+            v
+        });
+        if tick % 64 != 1 {
+            return;
+        }
+        if g.cancel.is_cancelled() {
+            panic!("{POINT_CANCELLED_PANIC}");
+        }
+        if let Some(at) = g.timeout_at {
+            if Instant::now() >= at {
+                panic!("{POINT_TIMEOUT_PANIC}");
+            }
+        }
+    });
+}
 
 /// Tunables for the symbolic counter.
 #[derive(Debug, Clone)]
@@ -98,6 +186,7 @@ impl SymbolicCtx {
 
     /// Memoized feasibility of `g ∧ context`.
     pub fn feasible(&self, g: &Guard) -> bool {
+        check_point_guard();
         if g.has_false() {
             return false;
         }
@@ -237,6 +326,7 @@ fn resolve_dims(
     out: &mut GuardedSum,
     branches: &mut usize,
 ) {
+    check_point_guard();
     *branches += 1;
     assert!(
         *branches <= opts.max_branches_per_cell,
@@ -316,6 +406,7 @@ fn resolve_extremum(
     }
     let mut stack = vec![Frame { champion: uniq[0].clone(), next: 1, guard }];
     while let Some(Frame { champion, next, guard }) = stack.pop() {
+        check_point_guard();
         *branches += 1;
         assert!(
             *branches <= opts.max_branches_per_cell,
@@ -599,5 +690,76 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn point_guard_aborts_cancelled_counts_and_clears() {
+        let (sp, set) = base_space(&[2, 2]);
+        let ctx = context(&sp, 2);
+        // A pre-cancelled guard aborts the count with the stable
+        // payload the DSE worker classifies on.
+        let token = CancelToken::new();
+        token.cancel();
+        set_point_guard(Some(PointGuard::new(token.clone(), None)));
+        let err = std::panic::catch_unwind(|| {
+            count_symbolic(&set, &[2, 2], &ctx, &Default::default())
+        })
+        .expect_err("cancelled count must abort");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| {
+                err.downcast_ref::<&str>().map(|s| s.to_string())
+            })
+            .unwrap_or_default();
+        assert!(
+            msg.contains(POINT_CANCELLED_PANIC),
+            "unexpected payload: {msg}"
+        );
+        // Clearing the guard restores normal operation on the same
+        // thread even though the token stays tripped.
+        set_point_guard(None);
+        let sym =
+            count_symbolic(&set, &[2, 2], &ctx, &Default::default());
+        assert_eq!(sym.eval(&[4, 4, 2, 2]), {
+            count_concrete(&set, &[2, 2], &[4, 4, 2, 2])
+        });
+        // An untripped guard with no timeout never fires.
+        set_point_guard(Some(PointGuard::new(
+            CancelToken::new(),
+            None,
+        )));
+        let again =
+            count_symbolic(&set, &[2, 2], &ctx, &Default::default());
+        set_point_guard(None);
+        assert_eq!(again.eval(&[4, 4, 2, 2]), sym.eval(&[4, 4, 2, 2]));
+    }
+
+    #[test]
+    fn point_timeout_uses_the_amortized_clock_path() {
+        let (sp, set) = base_space(&[2, 2]);
+        let ctx = context(&sp, 2);
+        // An already-expired timeout fires on the every-64th-call slow
+        // path; the counting loops make far more than 64 guard calls.
+        set_point_guard(Some(PointGuard::new(
+            CancelToken::new(),
+            Some(std::time::Duration::ZERO),
+        )));
+        let err = std::panic::catch_unwind(|| {
+            count_symbolic(&set, &[2, 2], &ctx, &Default::default())
+        });
+        set_point_guard(None);
+        let err = err.expect_err("expired timeout must abort");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| {
+                err.downcast_ref::<&str>().map(|s| s.to_string())
+            })
+            .unwrap_or_default();
+        assert!(
+            msg.contains(POINT_TIMEOUT_PANIC),
+            "unexpected payload: {msg}"
+        );
     }
 }

@@ -112,8 +112,20 @@ pub fn dse_frontier_table(res: &ExploreResult) -> CsvTable {
 /// (bounds, backend) scenario.
 pub fn dse_frontier_markdown(res: &ExploreResult) -> String {
     use std::fmt::Write as _;
+    // A cancelled sweep's frontier only covers the committed prefix —
+    // say so in the header, loudly, before anyone trusts the tables.
+    let partial = match res.cancelled {
+        Some(reason) => format!(
+            " — partial ({}/{} points): {}",
+            res.completed,
+            res.total,
+            reason.label()
+        ),
+        None => String::new(),
+    };
     let mut out = format!(
-        "## {} — Pareto frontiers ({} of {} points, {} failed)\n\n\
+        "## {} — Pareto frontiers ({} of {} points, {} failed)\
+         {partial}\n\n\
          objectives minimized: energy [pJ], latency [cycles], PEs, \
          DRAM [pJ]\n",
         res.workload,
@@ -240,6 +252,23 @@ mod tests {
         assert!(md.contains("objectives minimized"));
         assert!(md.contains("| array |"));
         assert!(md.contains("| schedule |"));
+        assert!(
+            !md.contains("partial ("),
+            "a complete sweep must not be marked partial"
+        );
+    }
+
+    #[test]
+    fn markdown_marks_cancelled_sweeps_partial_in_the_header() {
+        let mut res = small_result();
+        res.cancelled = Some(crate::cancel::CancelReason::Deadline);
+        res.completed = 3;
+        res.total = 8;
+        let md = dse_frontier_markdown(&res);
+        assert!(
+            md.contains("partial (3/8 points): deadline exceeded"),
+            "{md}"
+        );
     }
 
     #[test]

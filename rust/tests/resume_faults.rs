@@ -1,0 +1,269 @@
+//! Fault-injection matrix for interruptible, resumable DSE sweeps.
+//!
+//! Each test interrupts a checkpointed `dse` sweep with one injected
+//! fault (worker kill, journal write failure, mid-record truncation,
+//! checksum corruption, deadline firing), resumes it in a fresh
+//! process, and proves the resumed run reproduces the uninterrupted
+//! sweep's report **bit-for-bit**. The injection hooks are the
+//! `TCPA_DSE_FAULT_*` environment variables read by
+//! `dse::FaultPlan::from_env` — deterministic (they fire at fixed
+//! committed-point counts), so every run of this suite exercises the
+//! same interleaving.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+const BIN: &str = env!("CARGO_BIN_EXE_tcpa-energy");
+
+const KILL_AFTER: &str = "TCPA_DSE_FAULT_KILL_AFTER";
+const DEADLINE_AFTER: &str = "TCPA_DSE_FAULT_DEADLINE_AFTER";
+const JOURNAL_WRITE: &str = "TCPA_DSE_FAULT_JOURNAL_WRITE";
+const JOURNAL_BATCH: &str = "TCPA_DSE_JOURNAL_BATCH";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("tcpa-resume-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run `tcpa-energy dse --workload gesummv --bounds 8,8 --max-pes 4
+/// --workers 2 <extra>` with the given env hooks.
+fn dse(extra: &[&str], envs: &[(&str, &str)]) -> Output {
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "dse", "--workload", "gesummv", "--bounds", "8,8", "--max-pes",
+        "4", "--workers", "2",
+    ]);
+    cmd.args(extra);
+    // Never inherit hooks from the harness environment.
+    for k in [KILL_AFTER, DEADLINE_AFTER, JOURNAL_WRITE, JOURNAL_BATCH] {
+        cmd.env_remove(k);
+    }
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.output().expect("spawn tcpa-energy")
+}
+
+/// The three report files `--out` writes, as raw bytes.
+fn report_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    ["dse_gesummv_points.csv", "dse_gesummv_frontier.csv",
+     "dse_gesummv_frontier.md"]
+        .iter()
+        .map(|f| (f.to_string(), std::fs::read(dir.join(f)).unwrap()))
+        .collect()
+}
+
+/// Uninterrupted sweep into `dir`; returns its report bytes.
+fn baseline(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let out = dse(&["--out", dir.to_str().unwrap()], &[]);
+    assert!(out.status.success(), "baseline failed: {out:?}");
+    report_bytes(dir)
+}
+
+fn assert_reports_identical(
+    base: &[(String, Vec<u8>)],
+    dir: &Path,
+    what: &str,
+) {
+    for ((name, want), (_, got)) in
+        base.iter().zip(report_bytes(dir).iter())
+    {
+        assert_eq!(
+            want, got,
+            "{what}: {name} must be bit-identical to the \
+             uninterrupted sweep"
+        );
+    }
+}
+
+#[test]
+fn worker_kill_then_resume_reproduces_the_frontier() {
+    let dir = tmp_dir("kill");
+    let base = baseline(&dir.join("base"));
+    let journal = dir.join("sweep.journal");
+    let j = journal.to_str().unwrap();
+    // Kill the process (abort, no cleanup) after 3 committed points.
+    let killed = dse(
+        &["--checkpoint", j],
+        &[(KILL_AFTER, "3"), (JOURNAL_BATCH, "1")],
+    );
+    assert!(
+        !killed.status.success(),
+        "the injected kill must tear the process down"
+    );
+    assert!(journal.exists(), "the journal survives the kill");
+    // Resume in a fresh process: replay the journal, finish the rest.
+    let out_dir = dir.join("resumed");
+    let resumed = dse(
+        &["--checkpoint", j, "--resume", "--out",
+          out_dir.to_str().unwrap()],
+        &[],
+    );
+    assert!(resumed.status.success(), "{resumed:?}");
+    let stdout = String::from_utf8_lossy(&resumed.stdout);
+    assert!(
+        stdout.contains("3 replayed from journal"),
+        "resume must replay the committed prefix: {stdout}"
+    );
+    assert_reports_identical(&base, &out_dir, "kill+resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn journal_write_failure_degrades_to_an_unjournaled_sweep() {
+    let dir = tmp_dir("wfail");
+    let base = baseline(&dir.join("base"));
+    let journal = dir.join("sweep.journal");
+    let out_dir = dir.join("out");
+    let out = dse(
+        &["--checkpoint", journal.to_str().unwrap(), "--out",
+          out_dir.to_str().unwrap()],
+        &[(JOURNAL_WRITE, "1"), (JOURNAL_BATCH, "1")],
+    );
+    assert!(
+        out.status.success(),
+        "a failing journal must not fail the sweep: {out:?}"
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("journal write failed"),
+        "the degradation must be loud: {stderr}"
+    );
+    assert!(!journal.exists(), "no torn journal file is left behind");
+    assert_reports_identical(&base, &out_dir, "journal-write failure");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_tail_resumes_to_the_identical_frontier() {
+    let dir = tmp_dir("truncate");
+    let base = baseline(&dir.join("base"));
+    let journal = dir.join("sweep.journal");
+    let j = journal.to_str().unwrap();
+    // Full checkpointed run, then tear 10 bytes off the journal tail —
+    // a mid-record truncation, as a crash during a batch write would
+    // leave (the writer goes through tmp+rename, so this simulates
+    // filesystem-level damage, the worst case).
+    assert!(dse(&["--checkpoint", j], &[]).status.success());
+    let bytes = std::fs::read(&journal).unwrap();
+    assert!(bytes.len() > 10);
+    std::fs::write(&journal, &bytes[..bytes.len() - 10]).unwrap();
+    let out_dir = dir.join("resumed");
+    let resumed = dse(
+        &["--checkpoint", j, "--resume", "--out",
+          out_dir.to_str().unwrap()],
+        &[],
+    );
+    assert!(resumed.status.success(), "{resumed:?}");
+    let stderr = String::from_utf8_lossy(&resumed.stderr);
+    assert!(
+        stderr.contains("truncated"),
+        "dropping the torn tail must warn: {stderr}"
+    );
+    assert_reports_identical(&base, &out_dir, "truncated tail");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checksum_corrupt_record_is_skipped_and_recomputed() {
+    let dir = tmp_dir("corrupt");
+    let base = baseline(&dir.join("base"));
+    let journal = dir.join("sweep.journal");
+    let j = journal.to_str().unwrap();
+    assert!(dse(&["--checkpoint", j], &[]).status.success());
+    // Flip the last checksum character of the first record line.
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let mut lines: Vec<String> =
+        text.lines().map(str::to_string).collect();
+    let rec = lines
+        .iter_mut()
+        .find(|l| l.starts_with("r "))
+        .expect("journal has records");
+    let last = rec.pop().unwrap();
+    rec.push(if last == '0' { '1' } else { '0' });
+    std::fs::write(&journal, lines.join("\n") + "\n").unwrap();
+    let out_dir = dir.join("resumed");
+    let resumed = dse(
+        &["--checkpoint", j, "--resume", "--out",
+          out_dir.to_str().unwrap()],
+        &[],
+    );
+    assert!(resumed.status.success(), "{resumed:?}");
+    let stderr = String::from_utf8_lossy(&resumed.stderr);
+    assert!(
+        stderr.contains("corrupt"),
+        "skipping a corrupt record must warn: {stderr}"
+    );
+    assert_reports_identical(&base, &out_dir, "checksum corruption");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deadline_cancellation_reports_partial_and_resumes_bit_for_bit() {
+    let dir = tmp_dir("deadline");
+    let base = baseline(&dir.join("base"));
+    let journal = dir.join("sweep.journal");
+    let j = journal.to_str().unwrap();
+    // The injected hook fires the (armed) deadline after exactly 3
+    // committed points — deterministic, unlike a real clock.
+    let cancelled = dse(
+        &["--checkpoint", j, "--deadline", "3600"],
+        &[(DEADLINE_AFTER, "3"), (JOURNAL_BATCH, "1")],
+    );
+    assert_eq!(
+        cancelled.status.code(),
+        Some(3),
+        "cancelled sweeps exit with the documented partial code: \
+         {cancelled:?}"
+    );
+    let stdout = String::from_utf8_lossy(&cancelled.stdout);
+    assert!(
+        stdout.contains("partial (3/"),
+        "the frontier must be marked partial: {stdout}"
+    );
+    assert!(
+        stdout.contains("deadline exceeded"),
+        "the cancellation reason must be named: {stdout}"
+    );
+    let out_dir = dir.join("resumed");
+    let resumed = dse(
+        &["--checkpoint", j, "--resume", "--out",
+          out_dir.to_str().unwrap()],
+        &[],
+    );
+    assert!(resumed.status.success(), "{resumed:?}");
+    assert_reports_identical(&base, &out_dir, "deadline+resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_journal_is_rejected_with_a_distinct_error() {
+    let dir = tmp_dir("stale");
+    let journal = dir.join("sweep.journal");
+    let j = journal.to_str().unwrap();
+    // Journal a sweep at one bounds vector, then try to resume a
+    // sweep over different bounds: the space fingerprint differs and
+    // replaying would silently mix incompatible results.
+    let mut first = Command::new(BIN);
+    first.args([
+        "dse", "--workload", "gesummv", "--bounds", "16,16",
+        "--max-pes", "4", "--checkpoint", j,
+    ]);
+    assert!(first.output().unwrap().status.success());
+    let clash = dse(&["--checkpoint", j, "--resume"], &[]);
+    assert_eq!(
+        clash.status.code(),
+        Some(2),
+        "a stale journal is a hard error: {clash:?}"
+    );
+    let stderr = String::from_utf8_lossy(&clash.stderr);
+    assert!(stderr.contains("stale"), "{stderr}");
+    assert!(
+        journal.exists(),
+        "a stale (but intact) journal is left in place for the user"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
