@@ -1,0 +1,32 @@
+# ATAX (PolyBench): y = Aᵀ(A·x) as a two-phase workload — the phase
+# blocks mirror the builtin's atax_p1/atax_p2 split (pinned
+# bit-identical by rust/tests/text_frontend.rs). TMP produced by phase
+# 1 re-enters as an input of phase 2.
+
+workload atax
+
+phase atax_p1 {
+  loop i0 in 0..N0
+  loop i1 in 0..N1
+  tensor A[N0, N1]
+  tensor X[N1]
+  tensor TMP[N0]
+
+  propagate xx = X[i1] along i0
+  stmt: m[i0, i1] = A[i0, i1] * xx[i0, i1]
+  reduce s = m along i1
+  stmt: TMP[i0] = s[i0, i1] if i1 >= N1 - 1
+}
+
+phase atax_p2 {
+  loop i0 in 0..N0
+  loop i1 in 0..N1
+  tensor A[N0, N1]
+  tensor TMP[N0]
+  tensor Y[N1]
+
+  propagate tt = TMP[i0] along i1
+  stmt: m[i0, i1] = A[i0, i1] * tt[i0, i1]
+  reduce s = m along i0
+  stmt: Y[i1] = s[i0, i1] if i0 >= N0 - 1
+}

@@ -1,0 +1,13 @@
+# Elementwise 2-D sum C = A + B — a workload that exists only as text,
+# no Rust constructor. Demonstrates the minimal shape of the format:
+# loops, tensors, one statement; no propagation or reduction chains.
+# Passes `lint --deny warnings` (CI parses and lints every file here).
+
+workload axpy2d
+loop i0 in 0..N0
+loop i1 in 0..N1
+tensor A[N0, N1]
+tensor B[N0, N1]
+tensor C[N0, N1]
+
+stmt: C[i0, i1] = A[i0, i1] + B[i0, i1]

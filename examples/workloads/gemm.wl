@@ -1,0 +1,19 @@
+# GEMM (PolyBench): C = A·B over a 3-deep nest (row, col, reduction).
+# Textual rendition of the builtin `gemm` constructor (pinned
+# bit-identical by rust/tests/text_frontend.rs): A propagates along the
+# column dimension i1, B along the row dimension i0, products
+# accumulate along i2.
+
+workload gemm
+loop i0 in 0..N0
+loop i1 in 0..N1
+loop i2 in 0..N2
+tensor A[N0, N2]
+tensor B[N2, N1]
+tensor C[N0, N1]
+
+propagate a = A[i0, i2] along i1
+propagate bb = B[i2, i1] along i0
+stmt: m[i0, i1, i2] = a[i0, i1, i2] * bb[i0, i1, i2]
+reduce s = m along i2
+stmt: C[i0, i1] = s[i0, i1, i2] if i2 >= N2 - 1

@@ -1,0 +1,21 @@
+# GESUMMV (PolyBench): Y = (A + B)·X — the paper's running example.
+# Textual rendition of the builtin `gesummv` constructor; pinned
+# bit-identical (fingerprint, statement count, DSE frontier) by
+# rust/tests/text_frontend.rs. The sugar lines expand to the paper's
+# S1–S11 exactly: propagate → S1/S2, the two products → S3/S4, each
+# reduce → a three-statement accumulation chain (S5–S7, S8–S10).
+
+workload gesummv
+loop i0 in 0..N0
+loop i1 in 0..N1
+tensor A[N0, N1]
+tensor B[N0, N1]
+tensor X[N1]
+tensor Y[N0]
+
+propagate x = X[i1] along i0
+stmt: a[i0, i1] = A[i0, i1] * x[i0, i1]
+stmt: b[i0, i1] = B[i0, i1] * x[i0, i1]
+reduce sA = a along i1
+reduce sB = b along i1
+stmt: Y[i0] = sA[i0, i1] + sB[i0, i1] if i1 >= N1 - 1

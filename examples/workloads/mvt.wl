@@ -1,0 +1,26 @@
+# MVT (PolyBench): X1 = X1in + A·Y1 and X2 = X2in + Aᵀ·Y2, fused into
+# one 2-deep PRA (pinned bit-identical to the builtin by
+# rust/tests/text_frontend.rs). The transposed read A[i1, i0] is in
+# bounds only on square problems — the `requires` line declares that
+# precondition, and the lint engine proves bounds-safety under it.
+
+workload mvt
+loop i0 in 0..N0
+loop i1 in 0..N1
+requires N0 == N1
+tensor A[N0, N1]
+tensor Y1[N1]
+tensor Y2[N1]
+tensor X1in[N0]
+tensor X2in[N0]
+tensor X1[N0]
+tensor X2[N0]
+
+propagate v1 = Y1[i1] along i0
+propagate v2 = Y2[i1] along i0
+stmt: m1[i0, i1] = A[i0, i1] * v1[i0, i1]
+stmt: m2[i0, i1] = A[i1, i0] * v2[i0, i1]
+reduce s1 = m1 along i1
+reduce s2 = m2 along i1
+stmt: X1[i0] = s1[i0, i1] + X1in[i0] if i1 >= N1 - 1
+stmt: X2[i0] = s2[i0, i1] + X2in[i0] if i1 >= N1 - 1

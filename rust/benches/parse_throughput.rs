@@ -1,0 +1,127 @@
+//! Throughput of the textual workload frontend (`workloads::text`), and
+//! the property that makes `--workload-file` safe to put in front of
+//! every command: parsing + linting an untrusted file costs the same no
+//! matter how large the declared problem is.
+//!
+//! Two measurements, appended to `BENCH_symbolic.json` (section
+//! `frontend`) for the CI perf trajectory:
+//!
+//! * **files/sec** — lex + parse + lower + full lint over the whole
+//!   `examples/workloads/` corpus (sources read once, outside the timed
+//!   region).
+//! * **bounds-independence ratio** — every builtin rendered to text with
+//!   its admissible region pinned to a 1× problem (`N_ℓ ≥ 2`) versus a
+//!   100× problem (`N_ℓ ≥ 200`) via `requires`, then parsed + linted.
+//!   The text differs only in constants and the symbolic proofs see the
+//!   same constraint systems, so the ratio must stay near 1 (asserted
+//!   ≤ 3× to absorb timer noise).
+//!
+//! ```bash
+//! cargo bench --bench parse_throughput [-- --quick]
+//! ```
+
+use tcpa_energy::bench_util::{
+    bench, bench_symbolic_json_path, write_bench_section,
+};
+use tcpa_energy::lint::{lint_workload, LintOptions};
+use tcpa_energy::polyhedral::{AffineExpr, Constraint};
+use tcpa_energy::pra::Workload;
+use tcpa_energy::workloads::{self, text};
+
+/// Pin every loop bound to at least `n_min` via `requires` — the
+/// rendered text keeps its shape at every scale, only constants move.
+fn with_min_bounds(wl: &Workload, n_min: i64) -> Workload {
+    let mut wl = wl.clone();
+    for phase in &mut wl.phases {
+        let np = phase.space.len();
+        for l in 0..phase.ndims {
+            let idx = phase.space.n_index(l);
+            phase
+                .requires
+                .push(Constraint::ge0(AffineExpr::param(np, idx).plus(-n_min)));
+        }
+    }
+    wl
+}
+
+/// Parse + lint one source; returns the finding count (kept live so the
+/// work is not optimized away).
+fn parse_and_lint(src: &str, opts: &LintOptions) -> usize {
+    let wl = text::parse_workload(src).expect("corpus source must parse");
+    lint_workload(&wl, opts).iter().map(|r| r.findings.len()).sum()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 5 } else { 40 };
+    let opts = LintOptions::default();
+
+    // The on-disk corpus, read once.
+    let dir = format!(
+        "{}/../examples/workloads",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let mut corpus: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(&dir).expect("examples/workloads") {
+        let path = entry.expect("corpus entry").path();
+        if path.extension().and_then(|e| e.to_str()) == Some("wl") {
+            corpus.push(std::fs::read_to_string(&path).expect("corpus read"));
+        }
+    }
+    assert!(corpus.len() >= 5, "corpus too small: {}", corpus.len());
+
+    let files = corpus.len();
+    let stats = bench(2, reps, || {
+        corpus.iter().map(|s| parse_and_lint(s, &opts)).sum::<usize>()
+    });
+    let per_sec = files as f64 / stats.median.as_secs_f64().max(1e-12);
+    println!(
+        "frontend: {files} corpus files, parse+lint each, {} per sweep \
+         — {per_sec:.0} files/sec",
+        stats.summary()
+    );
+
+    // Bounds-independence: identical text shapes, constants 100× apart.
+    let render_all = |n_min: i64| -> Vec<String> {
+        workloads::all()
+            .iter()
+            .map(|w| text::render_workload(&with_min_bounds(w, n_min)))
+            .collect()
+    };
+    let small = render_all(2);
+    let large = render_all(200);
+    let t_small = bench(2, reps, || {
+        small.iter().map(|s| parse_and_lint(s, &opts)).sum::<usize>()
+    });
+    let t_large = bench(2, reps, || {
+        large.iter().map(|s| parse_and_lint(s, &opts)).sum::<usize>()
+    });
+    let ratio = t_large.median.as_secs_f64()
+        / t_small.median.as_secs_f64().max(1e-12);
+    println!(
+        "bounds-independence: 1× {:?} vs 100× {:?} (ratio {ratio:.2})",
+        t_small.median, t_large.median
+    );
+    assert!(
+        ratio <= 3.0,
+        "parse+lint cost must not scale with loop bounds: 100×/1× \
+         ratio {ratio:.2}"
+    );
+
+    let body = format!(
+        "{{\"corpus_files\": {files}, \
+         \"files_per_sec\": {per_sec:.1}, \
+         \"median_us\": {:.1}, \
+         \"median_us_bounds_1x\": {:.1}, \
+         \"median_us_bounds_100x\": {:.1}, \
+         \"bounds_ratio\": {ratio:.3}, \
+         \"quick\": {quick}}}",
+        stats.median.as_secs_f64() * 1e6,
+        t_small.median.as_secs_f64() * 1e6,
+        t_large.median.as_secs_f64() * 1e6,
+    );
+    let path = bench_symbolic_json_path();
+    write_bench_section(&path, "frontend", &body)
+        .expect("writing BENCH_symbolic.json");
+    println!("section frontend → {}", path.display());
+}

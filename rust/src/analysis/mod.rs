@@ -66,6 +66,15 @@ pub struct SymbolicAnalysis {
     /// instead of once per bounds/tile/backend variant. Cloning the
     /// analysis clones the memo's current contents.
     schedule_memo: OnceLock<Vec<Schedule>>,
+    /// Lazily memoized symbolic causality proof of the embedded default
+    /// schedule ([`Schedule::verify_symbolic`]; empty = proved for all
+    /// parameter values). Untrusted-input paths (`--workload-file`)
+    /// consult this before trusting a mapping; builtins skip it.
+    default_proof_memo: OnceLock<Vec<String>>,
+    /// Lazily memoized causality proofs for *every* enumerated schedule
+    /// candidate, index-aligned with the full
+    /// [`Self::enumerate_schedules`] list.
+    candidate_proof_memo: OnceLock<Vec<Vec<String>>>,
 }
 
 impl SymbolicAnalysis {
@@ -141,6 +150,8 @@ impl SymbolicAnalysis {
             table: table.clone(),
             analysis_time: start.elapsed(),
             schedule_memo: OnceLock::new(),
+            default_proof_memo: OnceLock::new(),
+            candidate_proof_memo: OnceLock::new(),
         }
     }
 
@@ -183,6 +194,31 @@ impl SymbolicAnalysis {
     /// detail.)
     pub fn schedules_memoized(&self) -> bool {
         self.schedule_memo.get().is_some()
+    }
+
+    /// Symbolic causality proof of the embedded default schedule:
+    /// empty = proved for all parameter values, otherwise the list of
+    /// unprovable constraints ([`Schedule::verify_symbolic`]). Memoized
+    /// alongside the analysis, so a cached analysis shared across
+    /// design points proves its default schedule once.
+    pub fn verify_default_schedule(&self) -> &[String] {
+        self.default_proof_memo
+            .get_or_init(|| self.schedule.verify_symbolic(&self.tiled))
+    }
+
+    /// Causality proofs for every enumerated schedule candidate,
+    /// index-aligned with the full (uncapped)
+    /// [`Self::enumerate_schedules`] list; an empty inner list means
+    /// that candidate is proved for all parameter values. A capped
+    /// enumeration is a prefix of the memo, so callers index by
+    /// candidate position.
+    pub fn verify_enumerated_schedules(&self) -> &[Vec<String>] {
+        self.candidate_proof_memo.get_or_init(|| {
+            self.enumerate_schedules(None)
+                .iter()
+                .map(|s| s.verify_symbolic(&self.tiled))
+                .collect()
+        })
     }
 }
 

@@ -7,6 +7,8 @@
 //! tcpa-energy simulate --workload gesummv --array 2x2 --bounds 8,8
 //! tcpa-energy validate [--workload NAME] [--bounds 8,8] [--array 2x2]
 //! tcpa-energy dse      --workload gemm --bounds 64,64 [--max-pes 64]
+//!                      (analyze/simulate/dse/lint also accept
+//!                       --workload-file FILE.wl instead of --workload)
 //!                      [--arrays 1d|2d] [--bounds-sweep 32,64,128]
 //!                      [--tile-scales 1,2]
 //!                      [--backend all|tcpa,cgra,gpu-sm,systolic]
@@ -19,7 +21,8 @@
 //!                      [--checkpoint FILE] [--resume] [--deadline SECS]
 //!                      [--point-timeout SECS] [--progress]
 //! tcpa-energy figures  [--out results] [--quick]
-//! tcpa-energy lint     --workload NAME | --all-builtins
+//! tcpa-energy lint     --workload NAME | --workload-file FILE.wl |
+//!                      --all-builtins
 //!                      [--array TxT] [--pi N] [--json] [--json-out FILE]
 //!                      [--deny warnings]
 //! ```
@@ -58,9 +61,19 @@
 //! `lint` runs the [`crate::lint`] static-analysis engine (structural +
 //! symbolic polyhedral passes; add `--array` for the mapping/schedule
 //! pass) and exits non-zero on deny-level findings — or on any finding
-//! under `--deny warnings`. `analyze` and `dse` preflight their workload
-//! through the same engine: deny findings are a hard error, warnings go
-//! to stderr, and `--no-lint` restores the old behavior bit-for-bit.
+//! under `--deny warnings`. `analyze`, `simulate` and `dse` preflight
+//! their workload through the same engine: deny findings are a hard
+//! error, warnings go to stderr, and `--no-lint` restores the old
+//! behavior bit-for-bit.
+//!
+//! `--workload-file FILE.wl` (mutually exclusive with `--workload`)
+//! reads a textual loop-nest description ([`crate::workloads::text`],
+//! grammar in the README) instead of a builtin. Parsed workloads are
+//! untrusted input: malformed files fail with `path:line:col`
+//! diagnostics (exit 2, never a panic), every parsed workload passes
+//! through the same lint deny gate, and schedule causality is
+//! additionally *proved* symbolically — `simulate` verifies the chosen
+//! schedule, `dse` verifies every priced candidate.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -90,8 +103,16 @@ use super::validate::validate_workload;
 pub enum CliError {
     Usage(String),
     UnknownWorkload(String),
-    /// The preflight lint gate found deny-level findings (`analyze`/`dse`
-    /// refuse to run; `--no-lint` bypasses).
+    /// A `--workload-file` input failed to parse or lower. The message is
+    /// `path:line:col: description` — stable, grep-able diagnostics for
+    /// untrusted textual workloads.
+    Parse(String),
+    /// No causal LSGP schedule exists for a phase (or, for textual
+    /// workloads, the schedule's symbolic causality proof failed); the
+    /// message names the phase and the initiation interval π.
+    Schedule(String),
+    /// The preflight lint gate found deny-level findings
+    /// (`analyze`/`simulate`/`dse` refuse to run; `--no-lint` bypasses).
     Lint(String),
     /// A checkpoint-journal problem that must stop the run before any
     /// analysis: stale fingerprints (the workload or space changed
@@ -107,6 +128,8 @@ impl std::fmt::Display for CliError {
             CliError::UnknownWorkload(w) => {
                 write!(f, "unknown workload {w}; try `tcpa-energy list`")
             }
+            CliError::Parse(m) => write!(f, "parse error: {m}"),
+            CliError::Schedule(m) => write!(f, "schedule: {m}"),
             CliError::Lint(m) => write!(f, "lint: {m}"),
             CliError::Checkpoint(m) => write!(f, "checkpoint: {m}"),
             CliError::Io(e) => e.fmt(f),
@@ -205,6 +228,43 @@ fn lint_preflight(
     Ok(())
 }
 
+/// Resolve the workload under analysis from `--workload NAME` (builtin
+/// registry) or `--workload-file PATH` (textual frontend,
+/// [`crate::workloads::text`]). The two are mutually exclusive. Returns
+/// the workload plus a `from_file` marker — commands harden the
+/// untrusted-input path further on that signal (schedule causality
+/// proofs, pre-checked schedulability) while builtins keep the exact
+/// pre-frontend behavior.
+fn workload_from_flags(
+    flags: &BTreeMap<String, String>,
+) -> Result<(crate::pra::Workload, bool), CliError> {
+    match (flags.get("workload"), flags.get("workload-file")) {
+        (Some(_), Some(_)) => Err(CliError::Usage(
+            "--workload and --workload-file are mutually exclusive".into(),
+        )),
+        (Some(name), None) => {
+            let wl = workloads::by_name(name)
+                .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?;
+            Ok((wl, false))
+        }
+        (None, Some(path)) => {
+            // `parse_flags` maps a value-less flag to "true".
+            if path == "true" {
+                return Err(CliError::Usage(
+                    "--workload-file requires a path".into(),
+                ));
+            }
+            let src = std::fs::read_to_string(path)?;
+            let wl = workloads::text::parse_workload(&src)
+                .map_err(|e| CliError::Parse(format!("{path}:{e}")))?;
+            Ok((wl, true))
+        }
+        (None, None) => Err(CliError::Usage(
+            "--workload NAME or --workload-file PATH required".into(),
+        )),
+    }
+}
+
 /// Run the CLI; returns the process exit code.
 pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
     let usage = "tcpa-energy \
@@ -251,11 +311,7 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             Ok(0)
         }
         "analyze" => {
-            let name = flags
-                .get("workload")
-                .ok_or_else(|| CliError::Usage("--workload required".into()))?;
-            let wl = workloads::by_name(name)
-                .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?;
+            let (wl, from_file) = workload_from_flags(&flags)?;
             lint_preflight(&wl, &flags)?;
             let array = parse_vec(
                 flags.get("array").map(String::as_str).unwrap_or("8x8"),
@@ -264,6 +320,19 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             for phase in &wl.phases {
                 let mapping =
                     ArrayMapping::new(pad_array(&array, phase.ndims));
+                if from_file {
+                    // Untrusted input: `SymbolicAnalysis::analyze` panics
+                    // on an unschedulable PRA (an invariant violation for
+                    // builtins); pre-check so a textual workload fails
+                    // with a diagnostic instead.
+                    let tiled = tile_pra(phase, &mapping);
+                    find_schedule(&tiled, 1).map_err(|e| {
+                        CliError::Schedule(format!(
+                            "no causal schedule for phase {} at pi=1: {e}",
+                            phase.name
+                        ))
+                    })?;
+                }
                 let ana = SymbolicAnalysis::analyze(phase, &mapping);
                 println!(
                     "[{}] symbolic analysis took {:?}",
@@ -291,11 +360,11 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             Ok(0)
         }
         "simulate" => {
-            let name = flags
-                .get("workload")
-                .ok_or_else(|| CliError::Usage("--workload required".into()))?;
-            let wl = workloads::by_name(name)
-                .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?;
+            let (wl, from_file) = workload_from_flags(&flags)?;
+            // The same deny gate as `analyze`/`dse` — the discrete-event
+            // engine trusts IR invariants the linter proves, so an
+            // unvetted workload must not reach it (`--no-lint` bypasses).
+            lint_preflight(&wl, &flags)?;
             let array = parse_vec(
                 flags.get("array").map(String::as_str).unwrap_or("2x2"),
                 'x',
@@ -319,7 +388,32 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 let mapping = ArrayMapping::new(t.clone());
                 let arch = ArchConfig::with_array(t);
                 let tiled = tile_pra(phase, &mapping);
-                let schedule = find_schedule(&tiled, arch.pi).unwrap();
+                // Unschedulable phases are a user-facing refusal (exit 2
+                // via `main`), not a panic: a workload can carry
+                // dependence vectors no LSGP permutation satisfies.
+                let schedule =
+                    find_schedule(&tiled, arch.pi).map_err(|e| {
+                        CliError::Schedule(format!(
+                            "no causal schedule for phase {} at pi={}: {e}",
+                            phase.name, arch.pi
+                        ))
+                    })?;
+                if from_file {
+                    // Textual workloads additionally prove the chosen
+                    // schedule's causality symbolically (for all
+                    // parameter values), not just constructively.
+                    let fails = schedule.verify_symbolic(&tiled);
+                    if !fails.is_empty() {
+                        return Err(CliError::Schedule(format!(
+                            "causality proof failed for phase {} at \
+                             pi={} (schedule {}): {}",
+                            phase.name,
+                            arch.pi,
+                            schedule.perm_label(),
+                            fails.join("; ")
+                        )));
+                    }
+                }
                 let res = simulate(phase, &arch, &schedule, params, &env);
                 println!("[{}] {} cycles", phase.name, res.cycles);
                 println!(
@@ -387,11 +481,7 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             Ok(if all_ok { 0 } else { 1 })
         }
         "dse" => {
-            let name = flags
-                .get("workload")
-                .ok_or_else(|| CliError::Usage("--workload required".into()))?;
-            let wl = workloads::by_name(name)
-                .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?;
+            let (wl, from_file) = workload_from_flags(&flags)?;
             lint_preflight(&wl, &flags)?;
             let max_pes: i64 = match flags.get("max-pes") {
                 Some(s) => s.parse().map_err(|_| {
@@ -539,6 +629,15 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
             }
             if flags.contains_key("prune-symmetric") {
                 space = space.with_symmetry_pruning();
+            }
+            if from_file {
+                // Textual workloads are untrusted: every schedule the
+                // sweep prices — the embedded default under
+                // `--schedules first`, every enumerated candidate
+                // otherwise — must carry a symbolic causality proof
+                // ([`crate::schedule::Schedule::verify_symbolic`]).
+                // An unprovable schedule fails the point, not the run.
+                space = space.with_schedule_verification();
             }
             if space.phase_policy == PhasePolicy::PerPhase {
                 // Shape combinations grow as shapes^phases; refuse an
@@ -890,16 +989,26 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 })?;
             }
             let wls: Vec<_> = if flags.contains_key("all-builtins") {
-                workloads::all()
-            } else {
-                let name = flags.get("workload").ok_or_else(|| {
-                    CliError::Usage(
-                        "lint needs --workload NAME or --all-builtins"
+                if flags.contains_key("workload")
+                    || flags.contains_key("workload-file")
+                {
+                    return Err(CliError::Usage(
+                        "--all-builtins excludes --workload and \
+                         --workload-file"
                             .into(),
-                    )
-                })?;
-                vec![workloads::by_name(name)
-                    .ok_or_else(|| CliError::UnknownWorkload(name.clone()))?]
+                    ));
+                }
+                workloads::all()
+            } else if flags.contains_key("workload")
+                || flags.contains_key("workload-file")
+            {
+                vec![workload_from_flags(&flags)?.0]
+            } else {
+                return Err(CliError::Usage(
+                    "lint needs --workload NAME, --workload-file PATH, \
+                     or --all-builtins"
+                        .into(),
+                ));
             };
             let reports: Vec<crate::lint::LintReport> = wls
                 .iter()
@@ -1559,5 +1668,132 @@ mod tests {
             .unwrap(),
             0
         );
+    }
+
+    const GESUMMV_WL: &str = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/workloads/gesummv.wl"
+    );
+
+    #[test]
+    fn workload_file_flag_validation() {
+        // --workload and --workload-file are mutually exclusive; the
+        // file flag needs a path; one of the two is required.
+        for bad in [
+            vec![
+                "analyze", "--workload", "gesummv", "--workload-file",
+                GESUMMV_WL,
+            ],
+            vec!["analyze", "--workload-file"],
+            vec!["analyze"],
+            vec!["simulate"],
+            vec!["dse"],
+            vec![
+                "lint", "--all-builtins", "--workload-file", GESUMMV_WL,
+            ],
+        ] {
+            let e = run_cli(&s(&bad));
+            assert!(
+                matches!(e, Err(CliError::Usage(_))),
+                "{bad:?} should be a usage error, got {e:?}"
+            );
+        }
+        // A missing file is an I/O error carrying the OS diagnostic.
+        let e = run_cli(&s(&["analyze", "--workload-file", "/no/such.wl"]));
+        assert!(matches!(e, Err(CliError::Io(_))), "{e:?}");
+    }
+
+    #[test]
+    fn workload_file_runs_the_analysis_commands() {
+        assert_eq!(
+            run_cli(&s(&[
+                "lint", "--workload-file", GESUMMV_WL, "--deny",
+                "warnings",
+            ]))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&s(&[
+                "analyze", "--workload-file", GESUMMV_WL, "--array",
+                "2x2", "--bounds", "8,8",
+            ]))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&s(&[
+                "simulate", "--workload-file", GESUMMV_WL, "--array",
+                "2x2", "--bounds", "8,8",
+            ]))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&s(&[
+                "dse", "--workload-file", GESUMMV_WL, "--bounds", "8,8",
+                "--max-pes", "2",
+            ]))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn workload_file_parse_errors_carry_path_line_and_column() {
+        let path = std::env::temp_dir()
+            .join(format!("tcpa-cli-parse-{}.wl", std::process::id()));
+        std::fs::write(
+            &path,
+            "workload broken\nloop i0 in 0..N0\nloop i1 in 0..N1*N1\n",
+        )
+        .unwrap();
+        let e = run_cli(&s(&[
+            "analyze",
+            "--workload-file",
+            path.to_str().unwrap(),
+        ]));
+        let Err(CliError::Parse(msg)) = e else {
+            panic!("expected a parse error, got {e:?}");
+        };
+        // `path:line:col: description` — stable, grep-able anchor.
+        assert!(
+            msg.contains(&format!("{}:3:", path.display())),
+            "diagnostic should name file and line: {msg}"
+        );
+        assert!(msg.contains("non-affine"), "{msg}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn simulate_gates_on_lint_and_reports_unschedulable_without_panic() {
+        // twist's dependence vectors admit no causal order: the lint
+        // gate refuses it (L006 is deny-level), and under --no-lint the
+        // scheduler's refusal surfaces as a CliError naming the phase
+        // and π — the old code path panicked on unwrap.
+        let wl = workloads::twist_unschedulable();
+        let text = workloads::text::render_workload(&wl);
+        let path = std::env::temp_dir()
+            .join(format!("tcpa-cli-twist-{}.wl", std::process::id()));
+        std::fs::write(&path, text).unwrap();
+        let path_s = path.to_str().unwrap().to_string();
+        let gated = run_cli(&s(&[
+            "simulate", "--workload-file", &path_s, "--array", "2x2",
+            "--bounds", "8,8",
+        ]));
+        assert!(
+            matches!(gated, Err(CliError::Lint(_))),
+            "simulate must run the deny gate, got {gated:?}"
+        );
+        let bypassed = run_cli(&s(&[
+            "simulate", "--workload-file", &path_s, "--array", "2x2",
+            "--bounds", "8,8", "--no-lint",
+        ]));
+        let Err(CliError::Schedule(msg)) = bypassed else {
+            panic!("expected a schedule error, got {bypassed:?}");
+        };
+        assert!(msg.contains("twist"), "{msg}");
+        assert!(msg.contains("pi="), "{msg}");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -387,6 +387,7 @@ fn evaluate(
     point: &DesignPoint,
     cache: &AnalysisCache,
     policy: SchedulePolicy,
+    verify: bool,
 ) -> Result<Vec<EvaluatedPoint>, String> {
     let t0 = Instant::now();
     // Keep-alives for the Arc'd analyses the `phases` slice borrows.
@@ -457,6 +458,25 @@ fn evaluate(
         // The pre-axis path: each phase's embedded default schedule, no
         // enumeration — `--schedules first` stays bit-identical to the
         // single-schedule explorer.
+        if verify {
+            // Untrusted-input hardening: the default schedule must carry
+            // a symbolic causality proof, not just the constructive
+            // argument from `find_schedule`. Memoized per analysis, so
+            // the sweep pays for each (phase, shape) once.
+            for ph in &phases {
+                let fails = ph.verify_default_schedule();
+                if !fails.is_empty() {
+                    return Err(format!(
+                        "schedule causality proof failed for phase `{}` \
+                         (pi={}, schedule {}): {}",
+                        ph.tiled.pra.name,
+                        ph.schedule.pi,
+                        ph.schedule.perm_label(),
+                        fails.join("; "),
+                    ));
+                }
+            }
+        }
         let latency_cycles = latency_at_phases(phases.iter().copied(), &params);
         let label = phases
             .iter()
@@ -479,6 +499,30 @@ fn evaluate(
         .collect();
     let counts: Vec<usize> = cands.iter().map(Vec::len).collect();
     debug_assert!(counts.iter().all(|&c| c >= 1));
+    if verify {
+        // Untrusted-input hardening: prove causality symbolically for
+        // every candidate offered to the cross product. The capped
+        // enumeration is a prefix of the full memoized one, so the
+        // index-aligned proof list covers it. Memoized per analysis —
+        // each (phase, shape) proves its candidates once per sweep.
+        for (ph, phase_cands) in phases.iter().zip(&cands) {
+            let proofs = ph.verify_enumerated_schedules();
+            for (ci, (cand, fails)) in
+                phase_cands.iter().zip(proofs).enumerate()
+            {
+                if !fails.is_empty() {
+                    return Err(format!(
+                        "schedule causality proof failed for phase `{}` \
+                         candidate #{ci} (pi={}, schedule {}): {}",
+                        ph.tiled.pra.name,
+                        cand.pi,
+                        cand.perm_label(),
+                        fails.join("; "),
+                    ));
+                }
+            }
+        }
+    }
     // Each (phase, candidate) latency once — the combos below only sum
     // table entries (Σ cᵢ evaluations instead of Π cᵢ · phases).
     let lat: Vec<Vec<i64>> = phases
@@ -582,6 +626,7 @@ pub fn explore_controlled(
     };
     let n = points.len();
     let policy = space.schedules;
+    let verify = space.verify_schedules;
     // One IR walk for the whole sweep, not one per design point.
     let fingerprint = workload_fingerprint(wl);
     let phase_fps: Vec<u64> =
@@ -699,6 +744,7 @@ pub fn explore_controlled(
                 let eval = catch_unwind(AssertUnwindSafe(|| {
                     evaluate(
                         wl, fingerprint, phase_fps, &point, cache, policy,
+                        verify,
                     )
                 }));
                 set_point_guard(None);

@@ -233,6 +233,12 @@ pub struct DesignSpace {
     /// workloads it is a deliberate approximation — DRAM-dominated energy
     /// is mapping-invariant, only FD/ID terms shift.
     pub prune_symmetric: bool,
+    /// Prove every evaluated schedule causally correct for all
+    /// parameter values (`Schedule::verify_symbolic`) before pricing a
+    /// point; unprovable candidates fail the point loudly. Off by
+    /// default — builtins carry their own test coverage — and switched
+    /// on for untrusted input (`dse --workload-file`).
+    pub verify_schedules: bool,
 }
 
 impl Default for DesignSpace {
@@ -254,6 +260,7 @@ impl DesignSpace {
             phase_policy: PhasePolicy::Uniform,
             max_pes: None,
             prune_symmetric: false,
+            verify_schedules: false,
         }
     }
 
@@ -369,6 +376,16 @@ impl DesignSpace {
     /// Enable transposition-symmetry pruning (see field docs).
     pub fn with_symmetry_pruning(mut self) -> Self {
         self.prune_symmetric = true;
+        self
+    }
+
+    /// Require a symbolic causality proof for every evaluated schedule
+    /// (default and enumerated candidates alike) before a point is
+    /// priced; see [`DesignSpace::verify_schedules`]. The proofs are
+    /// memoized on the cached analysis, so the cost is once per
+    /// (workload, shape), not per point.
+    pub fn with_schedule_verification(mut self) -> Self {
+        self.verify_schedules = true;
         self
     }
 

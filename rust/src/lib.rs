@@ -22,6 +22,11 @@
 //!   and a machine-readable report. `analyze`/`dse` preflight through it.
 //! * [`workloads`] — PolyBench kernels expressed as PRAs plus functional
 //!   semantics used by the simulator and the golden-model check.
+//! * [`workloads::text`] — the textual workload frontend behind
+//!   `--workload-file`: a dependency-free lexer/parser/lowering pipeline
+//!   for a PolyBench-style loop-nest format (`examples/workloads/*.wl`),
+//!   with line/column diagnostics and a renderer whose round-trip is
+//!   fingerprint-exact.
 //! * [`tiling`] — symbolic LSGP tiling (Eq. 3–7 of the paper).
 //! * [`schedule`] — symbolic intra/inter-tile schedule vectors and the
 //!   latency formula (Eq. 8).

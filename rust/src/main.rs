@@ -23,11 +23,18 @@ fn main() {
              [--checkpoint FILE] [--resume] [--deadline SECS]\n                       \
              [--point-timeout SECS] [--progress]\n  \
              tcpa-energy figures  [--out DIR] [--quick]\n  \
-             tcpa-energy lint     --workload NAME | --all-builtins \
-             [--array TxT] [--pi N]\n                       \
+             tcpa-energy lint     --workload NAME | --workload-file F | \
+             --all-builtins\n                       \
+             [--array TxT] [--pi N] \
              [--json] [--json-out FILE] [--deny warnings]\n\n\
-             `analyze` and `dse` lint their workload first; deny-level \
-             findings abort\nthe run (bypass with --no-lint).\n\n\
+             analyze/simulate/dse/lint also accept --workload-file F.wl — \
+             a textual\nloop-nest description (grammar in README.md) \
+             instead of a builtin name.\nParsed files are untrusted: \
+             malformed input fails with file:line:col\ndiagnostics, and \
+             every parsed workload passes the lint deny gate plus\n\
+             symbolic schedule-causality proofs.\n\n\
+             `analyze`, `simulate` and `dse` lint their workload first; \
+             deny-level\nfindings abort the run (bypass with --no-lint).\n\n\
              Long sweeps: --checkpoint journals completed points, \
              --resume replays them\nbit-for-bit, --deadline/--point-timeout \
              bound the clock, Ctrl-C drains and\nflushes. `dse` exit \

@@ -55,6 +55,23 @@ impl PraBuilder {
         self
     }
 
+    /// Declare an external tensor with explicit dimension descriptors —
+    /// the general form behind [`Self::tensor`], used by the text
+    /// frontend where a dimension may be a fixed integer.
+    pub fn tensor_decl(&mut self, name: &str, shape: Vec<TensorDim>) -> &mut Self {
+        self.tensors.push(TensorDecl { name: name.into(), shape });
+        self
+    }
+
+    /// Record a raw precondition over the bound parameters (the general
+    /// form behind [`Self::require_equal_bounds`] /
+    /// [`Self::require_min_bound`], used by the text frontend's
+    /// `requires` lines).
+    pub fn require(&mut self, c: Constraint) -> &mut Self {
+        self.requires.push(c);
+        self
+    }
+
     fn fresh_name(&mut self) -> String {
         let n = format!("S{}", self.next_stmt);
         self.next_stmt += 1;
@@ -71,6 +88,28 @@ impl PraBuilder {
     ) -> &mut Self {
         let name = self.fresh_name();
         self.statements.push(Statement { name, lhs, op, args, cond });
+        self
+    }
+
+    /// Append a raw statement with an explicit name. The auto-naming
+    /// counter of [`Self::stmt`] is *not* advanced: an explicit `S3`
+    /// followed by enough auto-named statements collides, which the
+    /// text frontend reports as a duplicate-name diagnostic.
+    pub fn named_stmt(
+        &mut self,
+        name: &str,
+        lhs: Lhs,
+        op: Op,
+        args: Vec<Operand>,
+        cond: Vec<CondConstraint>,
+    ) -> &mut Self {
+        self.statements.push(Statement {
+            name: name.into(),
+            lhs,
+            op,
+            args,
+            cond,
+        });
         self
     }
 

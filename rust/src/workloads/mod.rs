@@ -15,6 +15,7 @@ pub mod k2mm;
 pub mod mvt;
 pub mod syrk;
 pub mod tensor;
+pub mod text;
 
 pub use builder::PraBuilder;
 pub use interp::{interpret, interpret_workload};

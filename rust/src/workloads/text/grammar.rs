@@ -1,0 +1,697 @@
+//! Grammar layer of the textual workload format: positioned tokens →
+//! AST. Purely syntactic — name resolution, rank checks and the
+//! lowering to PRA IR live in [`super::semantics`].
+//!
+//! The format is line-oriented; one directive per line. Keywords are
+//! contextual identifiers. The full grammar (also reproduced in the
+//! README's "Bring your own workload" section):
+//!
+//! ```text
+//! file      := 'workload' NAME NL (phase+ | item+)
+//! phase     := 'phase' NAME '{' NL item+ '}' NL
+//! item      := loop | tensor | requires | stmt | propagate | reduce
+//! loop      := 'loop' ITER 'in' '0' '..' BOUND NL
+//! tensor    := 'tensor' NAME '[' dim (',' dim)* ']' NL
+//! dim       := BOUND | INT
+//! requires  := 'requires' aff cmp aff NL
+//! stmt      := 'stmt' [NAME] ':' access '=' rhs ['if' cond (',' cond)*] NL
+//! rhs       := access | access '+' access ['+' access]
+//!            | access '-' access | access '*' access
+//!            | 'max' '(' access ',' access ')'
+//! access    := NAME '[' aff (',' aff)* ']'
+//! cond      := aff cmp aff
+//! cmp       := '==' | '>=' | '<=' | '>' | '<'
+//! aff       := ['-'] term (('+'|'-') term)*
+//! term      := INT ['*' IDENT] | IDENT
+//! propagate := 'propagate' VAR '=' access 'along' ITER NL
+//! reduce    := 'reduce' VAR '=' VAR 'along' ITER NL
+//! ```
+//!
+//! `#` starts a comment; blank lines are free. Products of two
+//! identifiers (`N0*N0`) are rejected here with a `non-affine
+//! expression` diagnostic — every index, bound and condition must stay
+//! affine for the polyhedral machinery to apply.
+
+use super::literals::{lex, ParseError, Pos, Tok, Token};
+
+/// A parsed workload file.
+#[derive(Debug, Clone)]
+pub struct Ast {
+    pub name: String,
+    pub name_pos: Pos,
+    pub phases: Vec<PhaseAst>,
+}
+
+/// One phase block (or the whole file in single-phase shorthand, in
+/// which case the phase inherits the workload name).
+#[derive(Debug, Clone)]
+pub struct PhaseAst {
+    pub name: String,
+    pub pos: Pos,
+    pub items: Vec<Item>,
+}
+
+/// One `coeff · ident` term of an affine expression (`ident = None`
+/// for the constant part).
+#[derive(Debug, Clone)]
+pub struct Term {
+    pub coeff: i64,
+    pub ident: Option<(String, Pos)>,
+}
+
+/// A (syntactically) affine expression: a sum of terms.
+#[derive(Debug, Clone)]
+pub struct AffAst {
+    pub pos: Pos,
+    pub terms: Vec<Term>,
+}
+
+/// Comparison operator of a `requires` line or an `if` condition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Eq,
+    Ge,
+    Le,
+    Gt,
+    Lt,
+}
+
+/// An indexed access `name[aff, …]` (tensor or internal variable —
+/// resolved by the semantic layer).
+#[derive(Debug, Clone)]
+pub struct AccessAst {
+    pub name: String,
+    pub pos: Pos,
+    pub indices: Vec<AffAst>,
+}
+
+/// One `if` condition `aff cmp aff`.
+#[derive(Debug, Clone)]
+pub struct CondAst {
+    pub lhs: AffAst,
+    pub cmp: Cmp,
+    pub rhs: AffAst,
+    pub pos: Pos,
+}
+
+/// Statement operator, derived from the shape of the right-hand side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RhsOp {
+    Copy,
+    Add,
+    Sub,
+    Mul,
+    Add3,
+    Max,
+}
+
+/// One directive.
+#[derive(Debug, Clone)]
+pub enum Item {
+    Loop {
+        iter: String,
+        iter_pos: Pos,
+        bound: AffAst,
+        pos: Pos,
+    },
+    Tensor {
+        name: String,
+        pos: Pos,
+        dims: Vec<AffAst>,
+    },
+    Requires {
+        lhs: AffAst,
+        cmp: Cmp,
+        rhs: AffAst,
+        pos: Pos,
+    },
+    Stmt {
+        /// Explicit statement name; `None` auto-assigns `S1, S2, …` in
+        /// file order (matching [`crate::workloads::PraBuilder`]).
+        name: Option<String>,
+        name_pos: Pos,
+        lhs: AccessAst,
+        op: RhsOp,
+        args: Vec<AccessAst>,
+        cond: Vec<CondAst>,
+        pos: Pos,
+    },
+    Propagate {
+        var: String,
+        var_pos: Pos,
+        tensor: AccessAst,
+        along: String,
+        along_pos: Pos,
+        pos: Pos,
+    },
+    Reduce {
+        var: String,
+        var_pos: Pos,
+        term: String,
+        term_pos: Pos,
+        along: String,
+        along_pos: Pos,
+        pos: Pos,
+    },
+}
+
+/// Parse source text into an [`Ast`].
+pub fn parse(src: &str) -> Result<Ast, ParseError> {
+    let tokens = lex(src)?;
+    let mut p = Parser { tokens, at: 0 };
+    p.file()
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    at: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        // The token stream always ends with a synthetic Newline; treat
+        // anything past it as more newlines so peeks never panic.
+        self.tokens
+            .get(self.at)
+            .map(|t| &t.tok)
+            .unwrap_or(&Tok::Newline)
+    }
+
+    fn pos(&self) -> Pos {
+        self.tokens
+            .get(self.at)
+            .or_else(|| self.tokens.last())
+            .map(|t| t.pos)
+            .unwrap_or(Pos { line: 1, col: 1 })
+    }
+
+    fn at_eof(&self) -> bool {
+        self.at >= self.tokens.len()
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.peek().clone();
+        self.at += 1;
+        t
+    }
+
+    fn expect(&mut self, want: &Tok, ctx: &str) -> Result<Pos, ParseError> {
+        let pos = self.pos();
+        if self.peek() == want {
+            self.bump();
+            Ok(pos)
+        } else {
+            Err(ParseError::at(
+                pos,
+                format!(
+                    "expected {} {ctx}, found {}",
+                    want.describe(),
+                    self.peek().describe()
+                ),
+            ))
+        }
+    }
+
+    fn expect_ident(&mut self, ctx: &str) -> Result<(String, Pos), ParseError> {
+        let pos = self.pos();
+        match self.peek().clone() {
+            Tok::Ident(s) => {
+                self.bump();
+                Ok((s, pos))
+            }
+            other => Err(ParseError::at(
+                pos,
+                format!("expected a name {ctx}, found {}", other.describe()),
+            )),
+        }
+    }
+
+    /// The contextual keyword `kw` (lexed as an identifier).
+    fn expect_keyword(&mut self, kw: &str) -> Result<Pos, ParseError> {
+        let pos = self.pos();
+        match self.peek() {
+            Tok::Ident(s) if s == kw => {
+                self.bump();
+                Ok(pos)
+            }
+            other => Err(ParseError::at(
+                pos,
+                format!("expected `{kw}`, found {}", other.describe()),
+            )),
+        }
+    }
+
+    fn skip_newlines(&mut self) {
+        while !self.at_eof() && *self.peek() == Tok::Newline {
+            self.bump();
+        }
+    }
+
+    fn end_of_line(&mut self, ctx: &str) -> Result<(), ParseError> {
+        self.expect(&Tok::Newline, ctx)?;
+        Ok(())
+    }
+
+    fn file(&mut self) -> Result<Ast, ParseError> {
+        self.skip_newlines();
+        self.expect_keyword("workload").map_err(|e| {
+            ParseError {
+                message: format!(
+                    "{} (a workload file starts with `workload NAME`)",
+                    e.message
+                ),
+                ..e
+            }
+        })?;
+        let (name, name_pos) = self.expect_ident("after `workload`")?;
+        self.end_of_line("after the workload header")?;
+        self.skip_newlines();
+        let mut phases = Vec::new();
+        if matches!(self.peek(), Tok::Ident(s) if s == "phase") {
+            // Multi-phase form: every item lives in a phase block.
+            while !self.at_eof() {
+                if *self.peek() == Tok::Newline {
+                    self.bump();
+                    continue;
+                }
+                phases.push(self.phase_block()?);
+            }
+        } else if !self.at_eof() {
+            // Single-phase shorthand: top-level items, phase = workload.
+            let items = self.items_until(None, name_pos)?;
+            phases.push(PhaseAst { name: name.clone(), pos: name_pos, items });
+        }
+        Ok(Ast { name, name_pos, phases })
+    }
+
+    fn phase_block(&mut self) -> Result<PhaseAst, ParseError> {
+        self.expect_keyword("phase")?;
+        let (name, pos) = self.expect_ident("after `phase`")?;
+        let open = self.expect(&Tok::LBrace, "to open the phase block")?;
+        self.end_of_line("after `{`")?;
+        let items = self.items_until(Some((open, name.clone())), pos)?;
+        self.end_of_line("after `}`")?;
+        Ok(PhaseAst { name, pos, items })
+    }
+
+    /// Items until `}` (inside a block) or end of file (flat form).
+    /// `block` carries the opening-brace position for the unterminated
+    /// diagnostic.
+    fn items_until(
+        &mut self,
+        block: Option<(Pos, String)>,
+        _phase_pos: Pos,
+    ) -> Result<Vec<Item>, ParseError> {
+        let mut items = Vec::new();
+        loop {
+            if *self.peek() == Tok::Newline && !self.at_eof() {
+                self.bump();
+                continue;
+            }
+            match (&block, self.peek()) {
+                (Some(_), Tok::RBrace) => {
+                    self.bump();
+                    return Ok(items);
+                }
+                (Some((open, name)), _) if self.at_eof() => {
+                    return Err(ParseError::at(
+                        *open,
+                        format!(
+                            "unterminated phase block `{name}` (no closing \
+                             `}}` before end of file)"
+                        ),
+                    ));
+                }
+                (None, _) if self.at_eof() => return Ok(items),
+                _ => items.push(self.item()?),
+            }
+        }
+    }
+
+    fn item(&mut self) -> Result<Item, ParseError> {
+        let pos = self.pos();
+        let kw = match self.peek() {
+            Tok::Ident(s) => s.clone(),
+            other => {
+                return Err(ParseError::at(
+                    pos,
+                    format!(
+                        "expected a directive (loop, tensor, requires, \
+                         stmt, propagate, reduce), found {}",
+                        other.describe()
+                    ),
+                ))
+            }
+        };
+        match kw.as_str() {
+            "loop" => self.loop_item(pos),
+            "tensor" => self.tensor_item(pos),
+            "requires" => self.requires_item(pos),
+            "stmt" => self.stmt_item(pos),
+            "propagate" => self.propagate_item(pos),
+            "reduce" => self.reduce_item(pos),
+            "phase" => Err(ParseError::at(
+                pos,
+                "`phase` blocks cannot be mixed with top-level items \
+                 (move every item into a phase block)",
+            )),
+            other => Err(ParseError::at(
+                pos,
+                format!(
+                    "unknown directive `{other}`; expected loop, tensor, \
+                     requires, stmt, propagate, or reduce"
+                ),
+            )),
+        }
+    }
+
+    fn loop_item(&mut self, pos: Pos) -> Result<Item, ParseError> {
+        self.expect_keyword("loop")?;
+        let (iter, iter_pos) = self.expect_ident("for the loop iterator")?;
+        self.expect_keyword("in")?;
+        let zero = self.pos();
+        match self.bump() {
+            Tok::Int(0) => {}
+            other => {
+                return Err(ParseError::at(
+                    zero,
+                    format!(
+                        "loop ranges start at 0 (`loop {iter} in 0..N`), \
+                         found {}",
+                        other.describe()
+                    ),
+                ))
+            }
+        }
+        self.expect(&Tok::DotDot, "in the loop range")?;
+        let bound = self.aff()?;
+        self.end_of_line("after the loop bound")?;
+        Ok(Item::Loop { iter, iter_pos, bound, pos })
+    }
+
+    fn tensor_item(&mut self, pos: Pos) -> Result<Item, ParseError> {
+        self.expect_keyword("tensor")?;
+        let (name, _) = self.expect_ident("for the tensor")?;
+        self.expect(&Tok::LBracket, "to open the tensor shape")?;
+        let mut dims = vec![self.aff()?];
+        while *self.peek() == Tok::Comma {
+            self.bump();
+            dims.push(self.aff()?);
+        }
+        self.expect(&Tok::RBracket, "to close the tensor shape")?;
+        self.end_of_line("after the tensor declaration")?;
+        Ok(Item::Tensor { name, pos, dims })
+    }
+
+    fn requires_item(&mut self, pos: Pos) -> Result<Item, ParseError> {
+        self.expect_keyword("requires")?;
+        let lhs = self.aff()?;
+        let cmp = self.cmp()?;
+        let rhs = self.aff()?;
+        self.end_of_line("after the requires constraint")?;
+        Ok(Item::Requires { lhs, cmp, rhs, pos })
+    }
+
+    fn stmt_item(&mut self, pos: Pos) -> Result<Item, ParseError> {
+        self.expect_keyword("stmt")?;
+        let name_pos = self.pos();
+        let name = match self.peek().clone() {
+            Tok::Ident(s) => {
+                self.bump();
+                Some(s)
+            }
+            _ => None,
+        };
+        self.expect(&Tok::Colon, "after `stmt` (statement names are \
+                                  optional: `stmt:` auto-names S1, S2, …)")?;
+        let lhs = self.access()?;
+        self.expect(&Tok::Assign, "between the target and the expression")?;
+        let (op, args) = self.rhs()?;
+        let mut cond = Vec::new();
+        if matches!(self.peek(), Tok::Ident(s) if s == "if") {
+            self.bump();
+            cond.push(self.cond()?);
+            while *self.peek() == Tok::Comma {
+                self.bump();
+                cond.push(self.cond()?);
+            }
+        }
+        self.end_of_line("after the statement")?;
+        Ok(Item::Stmt { name, name_pos, lhs, op, args, cond, pos })
+    }
+
+    fn propagate_item(&mut self, pos: Pos) -> Result<Item, ParseError> {
+        self.expect_keyword("propagate")?;
+        let (var, var_pos) = self.expect_ident("for the propagated value")?;
+        self.expect(&Tok::Assign, "in the propagate directive")?;
+        let tensor = self.access()?;
+        self.expect_keyword("along")?;
+        let (along, along_pos) = self.expect_ident("after `along`")?;
+        self.end_of_line("after the propagate directive")?;
+        Ok(Item::Propagate { var, var_pos, tensor, along, along_pos, pos })
+    }
+
+    fn reduce_item(&mut self, pos: Pos) -> Result<Item, ParseError> {
+        self.expect_keyword("reduce")?;
+        let (var, var_pos) = self.expect_ident("for the reduction result")?;
+        self.expect(&Tok::Assign, "in the reduce directive")?;
+        let (term, term_pos) = self.expect_ident("for the reduced term")?;
+        self.expect_keyword("along")?;
+        let (along, along_pos) = self.expect_ident("after `along`")?;
+        self.end_of_line("after the reduce directive")?;
+        Ok(Item::Reduce { var, var_pos, term, term_pos, along, along_pos, pos })
+    }
+
+    fn cmp(&mut self) -> Result<Cmp, ParseError> {
+        let pos = self.pos();
+        let c = match self.peek() {
+            Tok::EqEq => Cmp::Eq,
+            Tok::Ge => Cmp::Ge,
+            Tok::Le => Cmp::Le,
+            Tok::Gt => Cmp::Gt,
+            Tok::Lt => Cmp::Lt,
+            Tok::Assign => {
+                return Err(ParseError::at(
+                    pos,
+                    "comparisons use `==` (a single `=` is assignment)",
+                ))
+            }
+            other => {
+                return Err(ParseError::at(
+                    pos,
+                    format!(
+                        "expected a comparison (==, >=, <=, >, <), \
+                         found {}",
+                        other.describe()
+                    ),
+                ))
+            }
+        };
+        self.bump();
+        Ok(c)
+    }
+
+    fn cond(&mut self) -> Result<CondAst, ParseError> {
+        let pos = self.pos();
+        let lhs = self.aff()?;
+        let cmp = self.cmp()?;
+        let rhs = self.aff()?;
+        Ok(CondAst { lhs, cmp, rhs, pos })
+    }
+
+    /// `name[aff, …]` — every statement operand is indexed; bare names
+    /// appear only in the `propagate`/`reduce` sugar.
+    fn access(&mut self) -> Result<AccessAst, ParseError> {
+        let (name, pos) = self.expect_ident("for an indexed access")?;
+        self.expect(
+            &Tok::LBracket,
+            "to open the index list (every statement operand is indexed, \
+             e.g. `x[i0, i1]`)",
+        )?;
+        let mut indices = vec![self.aff()?];
+        while *self.peek() == Tok::Comma {
+            self.bump();
+            indices.push(self.aff()?);
+        }
+        self.expect(&Tok::RBracket, "to close the index list")?;
+        Ok(AccessAst { name, pos, indices })
+    }
+
+    /// Statement right-hand side: 1–3 accesses joined by one operator
+    /// kind, or `max(a, b)`.
+    fn rhs(&mut self) -> Result<(RhsOp, Vec<AccessAst>), ParseError> {
+        if matches!(self.peek(), Tok::Ident(s) if s == "max")
+            && self.tokens.get(self.at + 1).map(|t| &t.tok)
+                == Some(&Tok::LParen)
+        {
+            self.bump();
+            self.bump();
+            let a = self.access()?;
+            self.expect(&Tok::Comma, "between the max operands")?;
+            let b = self.access()?;
+            self.expect(&Tok::RParen, "to close max(…)")?;
+            return Ok((RhsOp::Max, vec![a, b]));
+        }
+        let first = self.access()?;
+        match self.peek().clone() {
+            Tok::Plus => {
+                self.bump();
+                let second = self.access()?;
+                if *self.peek() == Tok::Plus {
+                    self.bump();
+                    let third = self.access()?;
+                    if *self.peek() == Tok::Plus {
+                        return Err(ParseError::at(
+                            self.pos(),
+                            "at most three addends per statement (PRA \
+                             operators are unary/binary/ternary); split \
+                             the sum across statements",
+                        ));
+                    }
+                    Ok((RhsOp::Add3, vec![first, second, third]))
+                } else {
+                    Ok((RhsOp::Add, vec![first, second]))
+                }
+            }
+            Tok::Minus => {
+                self.bump();
+                let second = self.access()?;
+                Ok((RhsOp::Sub, vec![first, second]))
+            }
+            Tok::Star => {
+                self.bump();
+                let second = self.access()?;
+                Ok((RhsOp::Mul, vec![first, second]))
+            }
+            _ => Ok((RhsOp::Copy, vec![first])),
+        }
+    }
+
+    /// An affine expression. Products of two identifiers are rejected
+    /// here — the diagnostic every non-affine bound/index/condition
+    /// funnels through.
+    fn aff(&mut self) -> Result<AffAst, ParseError> {
+        let pos = self.pos();
+        let mut terms = Vec::new();
+        let mut sign = 1i64;
+        if *self.peek() == Tok::Minus {
+            self.bump();
+            sign = -1;
+        }
+        loop {
+            let tpos = self.pos();
+            match self.peek().clone() {
+                Tok::Int(v) => {
+                    self.bump();
+                    if *self.peek() == Tok::Star {
+                        self.bump();
+                        let (name, npos) =
+                            self.expect_ident("after `*` in a coefficient \
+                                               term")?;
+                        terms.push(Term {
+                            coeff: sign * v,
+                            ident: Some((name, npos)),
+                        });
+                    } else {
+                        terms.push(Term { coeff: sign * v, ident: None });
+                    }
+                }
+                Tok::Ident(name) => {
+                    self.bump();
+                    if *self.peek() == Tok::Star {
+                        return Err(ParseError::at(
+                            self.pos(),
+                            format!(
+                                "non-affine expression: product with \
+                                 `{name}` (only integer coefficients may \
+                                 multiply a name, e.g. `2*{name}`)"
+                            ),
+                        ));
+                    }
+                    terms.push(Term { coeff: sign, ident: Some((name, tpos)) });
+                }
+                other => {
+                    return Err(ParseError::at(
+                        tpos,
+                        format!(
+                            "expected an affine term (integer or name), \
+                             found {}",
+                            other.describe()
+                        ),
+                    ))
+                }
+            }
+            match self.peek() {
+                Tok::Plus => {
+                    self.bump();
+                    sign = 1;
+                }
+                Tok::Minus => {
+                    self.bump();
+                    sign = -1;
+                }
+                _ => break,
+            }
+        }
+        Ok(AffAst { pos, terms })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_and_phased_forms_parse() {
+        let flat = parse(
+            "workload w\nloop i0 in 0..N0\nstmt: y[i0] = x[i0]\n",
+        )
+        .unwrap();
+        assert_eq!(flat.name, "w");
+        assert_eq!(flat.phases.len(), 1);
+        assert_eq!(flat.phases[0].name, "w");
+        assert_eq!(flat.phases[0].items.len(), 2);
+
+        let phased = parse(
+            "workload two\nphase a {\n loop i0 in 0..N0\n}\n\
+             phase b {\n loop i0 in 0..N0\n}\n",
+        )
+        .unwrap();
+        assert_eq!(phased.phases.len(), 2);
+        assert_eq!(phased.phases[1].name, "b");
+    }
+
+    #[test]
+    fn unterminated_block_points_at_the_open_brace() {
+        let e = parse("workload w\nphase p {\n loop i0 in 0..N0\n")
+            .unwrap_err();
+        assert!(e.message.starts_with("unterminated phase block"), "{e}");
+        assert_eq!((e.line, e.col), (2, 9));
+    }
+
+    #[test]
+    fn non_affine_products_are_rejected_at_the_star() {
+        let e =
+            parse("workload w\nloop i0 in 0..N0*N0\n").unwrap_err();
+        assert!(e.message.starts_with("non-affine expression"), "{e}");
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn rhs_shapes_map_to_operators() {
+        let src = "workload w\nloop i0 in 0..N0\n\
+                   stmt: a[i0] = b[i0]\n\
+                   stmt: c[i0] = a[i0] + b[i0] + a[i0]\n\
+                   stmt: d[i0] = max(a[i0], c[i0])\n";
+        let ast = parse(src).unwrap();
+        let ops: Vec<RhsOp> = ast.phases[0]
+            .items
+            .iter()
+            .filter_map(|i| match i {
+                Item::Stmt { op, .. } => Some(*op),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ops, vec![RhsOp::Copy, RhsOp::Add3, RhsOp::Max]);
+    }
+}

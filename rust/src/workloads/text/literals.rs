@@ -1,0 +1,308 @@
+//! Lexical layer of the textual workload format: raw source text →
+//! positioned tokens.
+//!
+//! Hand-rolled (the crate is dependency-free) and deliberately small:
+//! identifiers, integer literals, punctuation, comparison operators, the
+//! range marker `..`, `#` line comments, and explicit newline tokens —
+//! the format is line-oriented, so the parser treats `Newline` as a
+//! directive terminator. Every token carries a 1-based [`Pos`]; every
+//! diagnostic of the frontend (this layer, [`super::grammar`],
+//! [`super::semantics`]) is a [`ParseError`] anchored to one.
+//!
+//! One wrinkle: accumulation chains name their carry variable with a
+//! trailing star (`sA*`, see
+//! [`crate::workloads::PraBuilder::acc_chain`]), and rendered builtins
+//! must round-trip. A `*` is glued onto an identifier only when it is
+//! followed immediately by `[` (an access like `sA*[i0, i1]`); in every
+//! other position — `a * b`, `2*N0` — it lexes as the multiplication
+//! token.
+
+use std::fmt;
+
+/// A 1-based source position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pos {
+    pub line: usize,
+    pub col: usize,
+}
+
+/// A positioned diagnostic from any layer of the text frontend.
+///
+/// `Display` renders `LINE:COL: MESSAGE`; callers that know the file
+/// name prepend it (`file.wl:3:7: unknown parameter \`M\``).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub col: usize,
+    pub message: String,
+}
+
+impl ParseError {
+    /// A diagnostic anchored at `pos`.
+    pub fn at(pos: Pos, message: impl Into<String>) -> Self {
+        ParseError { line: pos.line, col: pos.col, message: message.into() }
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}", self.line, self.col, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Token kinds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// `[A-Za-z_][A-Za-z0-9_]*`, optionally with a glued trailing `*`
+    /// (see the module docs). Keywords (`workload`, `loop`, `stmt`, …)
+    /// are contextual: they lex as identifiers and the grammar decides.
+    Ident(String),
+    /// Non-negative integer literal (signs are grammar-level).
+    Int(i64),
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    LParen,
+    RParen,
+    Comma,
+    Colon,
+    Plus,
+    Minus,
+    Star,
+    /// `=` (assignment in statements).
+    Assign,
+    /// `==`
+    EqEq,
+    /// `<=`
+    Le,
+    /// `>=`
+    Ge,
+    /// `<`
+    Lt,
+    /// `>`
+    Gt,
+    /// `..`
+    DotDot,
+    /// End of a source line (comments collapse into it). The lexer also
+    /// emits one synthetic trailing `Newline` so every directive —
+    /// including the last line of an unterminated file — has a
+    /// terminator.
+    Newline,
+}
+
+impl Tok {
+    /// Short description for diagnostics, e.g. ``identifier `loop` ``.
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("identifier `{s}`"),
+            Tok::Int(v) => format!("integer `{v}`"),
+            Tok::LBrace => "`{`".into(),
+            Tok::RBrace => "`}`".into(),
+            Tok::LBracket => "`[`".into(),
+            Tok::RBracket => "`]`".into(),
+            Tok::LParen => "`(`".into(),
+            Tok::RParen => "`)`".into(),
+            Tok::Comma => "`,`".into(),
+            Tok::Colon => "`:`".into(),
+            Tok::Plus => "`+`".into(),
+            Tok::Minus => "`-`".into(),
+            Tok::Star => "`*`".into(),
+            Tok::Assign => "`=`".into(),
+            Tok::EqEq => "`==`".into(),
+            Tok::Le => "`<=`".into(),
+            Tok::Ge => "`>=`".into(),
+            Tok::Lt => "`<`".into(),
+            Tok::Gt => "`>`".into(),
+            Tok::DotDot => "`..`".into(),
+            Tok::Newline => "end of line".into(),
+        }
+    }
+}
+
+/// A token with its source position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub tok: Tok,
+    pub pos: Pos,
+}
+
+/// Tokenize `src`. The only lexical errors are unexpected characters,
+/// stray `.` (only `..` exists), and out-of-range integer literals.
+pub fn lex(src: &str) -> Result<Vec<Token>, ParseError> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut col = 1usize;
+    while i < chars.len() {
+        let pos = Pos { line, col };
+        let c = chars[i];
+        match c {
+            ' ' | '\t' | '\r' => {
+                i += 1;
+                col += 1;
+            }
+            '#' => {
+                while i < chars.len() && chars[i] != '\n' {
+                    i += 1;
+                    col += 1;
+                }
+            }
+            '\n' => {
+                out.push(Token { tok: Tok::Newline, pos });
+                i += 1;
+                line += 1;
+                col = 1;
+            }
+            'A'..='Z' | 'a'..='z' | '_' => {
+                let start = i;
+                while i < chars.len()
+                    && (chars[i].is_ascii_alphanumeric() || chars[i] == '_')
+                {
+                    i += 1;
+                    col += 1;
+                }
+                // Glue a trailing `*` only before `[` (star-named
+                // accumulation carries like `sA*[…]`; see module docs).
+                if i + 1 < chars.len()
+                    && chars[i] == '*'
+                    && chars[i + 1] == '['
+                {
+                    i += 1;
+                    col += 1;
+                }
+                let name: String = chars[start..i].iter().collect();
+                out.push(Token { tok: Tok::Ident(name), pos });
+            }
+            '0'..='9' => {
+                let start = i;
+                while i < chars.len() && chars[i].is_ascii_digit() {
+                    i += 1;
+                    col += 1;
+                }
+                let text: String = chars[start..i].iter().collect();
+                let v: i64 = text.parse().map_err(|_| {
+                    ParseError::at(
+                        pos,
+                        format!("integer literal `{text}` out of range"),
+                    )
+                })?;
+                out.push(Token { tok: Tok::Int(v), pos });
+            }
+            '=' => {
+                if chars.get(i + 1) == Some(&'=') {
+                    out.push(Token { tok: Tok::EqEq, pos });
+                    i += 2;
+                    col += 2;
+                } else {
+                    out.push(Token { tok: Tok::Assign, pos });
+                    i += 1;
+                    col += 1;
+                }
+            }
+            '<' => {
+                if chars.get(i + 1) == Some(&'=') {
+                    out.push(Token { tok: Tok::Le, pos });
+                    i += 2;
+                    col += 2;
+                } else {
+                    out.push(Token { tok: Tok::Lt, pos });
+                    i += 1;
+                    col += 1;
+                }
+            }
+            '>' => {
+                if chars.get(i + 1) == Some(&'=') {
+                    out.push(Token { tok: Tok::Ge, pos });
+                    i += 2;
+                    col += 2;
+                } else {
+                    out.push(Token { tok: Tok::Gt, pos });
+                    i += 1;
+                    col += 1;
+                }
+            }
+            '.' => {
+                if chars.get(i + 1) == Some(&'.') {
+                    out.push(Token { tok: Tok::DotDot, pos });
+                    i += 2;
+                    col += 2;
+                } else {
+                    return Err(ParseError::at(
+                        pos,
+                        "unexpected character `.` (ranges are written \
+                         `0..N`)",
+                    ));
+                }
+            }
+            _ => {
+                let tok = match c {
+                    '{' => Tok::LBrace,
+                    '}' => Tok::RBrace,
+                    '[' => Tok::LBracket,
+                    ']' => Tok::RBracket,
+                    '(' => Tok::LParen,
+                    ')' => Tok::RParen,
+                    ',' => Tok::Comma,
+                    ':' => Tok::Colon,
+                    '+' => Tok::Plus,
+                    '-' => Tok::Minus,
+                    '*' => Tok::Star,
+                    other => {
+                        return Err(ParseError::at(
+                            pos,
+                            format!("unexpected character `{other}`"),
+                        ))
+                    }
+                };
+                out.push(Token { tok, pos });
+                i += 1;
+                col += 1;
+            }
+        }
+    }
+    // Synthetic terminator so the last directive always ends cleanly.
+    out.push(Token { tok: Tok::Newline, pos: Pos { line, col } });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn positions_are_one_based_and_comments_collapse() {
+        let toks = lex("loop i0 in 0..N0  # bound\nstmt:").unwrap();
+        assert_eq!(toks[0].tok, Tok::Ident("loop".into()));
+        assert_eq!(toks[0].pos, Pos { line: 1, col: 1 });
+        assert_eq!(toks[3].tok, Tok::Int(0));
+        assert_eq!(toks[4].tok, Tok::DotDot);
+        assert_eq!(toks[5].tok, Tok::Ident("N0".into()));
+        assert_eq!(toks[6].tok, Tok::Newline);
+        let stmt = &toks[7];
+        assert_eq!(stmt.tok, Tok::Ident("stmt".into()));
+        assert_eq!(stmt.pos, Pos { line: 2, col: 1 });
+        // Synthetic trailing newline even without one in the source.
+        assert_eq!(toks.last().unwrap().tok, Tok::Newline);
+    }
+
+    #[test]
+    fn star_glues_onto_identifiers_only_before_brackets() {
+        let toks = lex("sA*[i0] = a * b").unwrap();
+        assert_eq!(toks[0].tok, Tok::Ident("sA*".into()));
+        assert_eq!(toks[1].tok, Tok::LBracket);
+        let stars: Vec<_> =
+            toks.iter().filter(|t| t.tok == Tok::Star).collect();
+        assert_eq!(stars.len(), 1, "spaced `*` stays multiplication");
+    }
+
+    #[test]
+    fn lexical_errors_carry_line_and_column() {
+        let e = lex("loop i0 in 0..N0\n  x = $y\n").unwrap_err();
+        assert_eq!((e.line, e.col), (2, 7));
+        assert!(e.message.contains("unexpected character"), "{e}");
+    }
+}

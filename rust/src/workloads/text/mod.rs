@@ -1,0 +1,393 @@
+//! Textual workload frontend: parse PolyBench-style loop-nest
+//! descriptions into [`Workload`]s at runtime (`--workload-file` on the
+//! CLI) instead of adding Rust constructors for every scenario.
+//!
+//! Three layers, each with its own diagnostics anchored to a
+//! line/column [`Pos`]:
+//!
+//! 1. [`literals`] — lexer: source text → positioned tokens;
+//! 2. [`grammar`] — parser: tokens → AST (purely syntactic);
+//! 3. [`semantics`] — lowering: AST → PRA IR via
+//!    [`crate::workloads::PraBuilder`], bit-identical to the builtin
+//!    Rust constructors so parsed workloads share fingerprint-keyed
+//!    cache entries (memory and disk) with them for free.
+//!
+//! The frontend validates *names, shapes, and affine-ness* only. Deep
+//! validation of untrusted input — bounds-safety, dependence coverage,
+//! guard satisfiability, schedule causality — is deliberately left to
+//! the existing [`crate::lint`] deny gate and
+//! `Schedule::verify_symbolic`, which the CLI applies to every parsed
+//! workload.
+//!
+//! # Format by example
+//!
+//! ```text
+//! # gesummv: y = A·x + B·x  (flat form: one phase named `gesummv`)
+//! workload gesummv
+//! loop i0 in 0..N0
+//! loop i1 in 0..N1
+//! tensor A[N0, N1]
+//! tensor X[N1]
+//! tensor Y[N0]
+//! requires N0 >= 1
+//! propagate x = X[i1] along i0
+//! stmt: a[i0, i1] = A[i0, i1] * x[i0, i1]
+//! reduce sA = a along i1
+//! stmt: Y[i0] = sA[i0, i1] if i1 >= N1 - 1
+//! ```
+//!
+//! Multi-phase workloads wrap items in `phase NAME { … }` blocks. The
+//! full grammar lives in the [`grammar`] module docs (and the README's
+//! "Bring your own workload" section). `propagate` and `reduce` are
+//! sugar for the broadcast/accumulation statement chains of
+//! [`PraBuilder::propagate`] / [`PraBuilder::acc_chain`]; anonymous
+//! `stmt:` lines share the same `S1, S2, …` auto-naming counter.
+//!
+//! [`PraBuilder::propagate`]: crate::workloads::PraBuilder::propagate
+//! [`PraBuilder::acc_chain`]: crate::workloads::PraBuilder::acc_chain
+//!
+//! # Round-tripping
+//!
+//! [`render_workload`] prints any [`Workload`] — builtin or parsed — in
+//! this format with canonical iterator/bound names (`i0…`, `N0…`) and
+//! explicit statement names; [`parse_workload`] re-parses the rendition
+//! to an identical fingerprint (property-tested over every builtin).
+//!
+//! ```
+//! use tcpa_energy::dse::workload_fingerprint;
+//! use tcpa_energy::workloads::{self, text};
+//!
+//! let wl = text::parse_workload(
+//!     "workload axpy\n\
+//!      loop i0 in 0..N0\n\
+//!      tensor X[N0]\n\
+//!      tensor Y[N0]\n\
+//!      stmt: Y[i0] = X[i0] + Y[i0]\n",
+//! ).unwrap();
+//! assert_eq!(wl.phases[0].statements.len(), 1);
+//!
+//! // Renditions of builtins re-parse to the same fingerprint.
+//! let gesummv = workloads::by_name("gesummv").unwrap();
+//! let back = text::parse_workload(&text::render_workload(&gesummv)).unwrap();
+//! assert_eq!(
+//!     workload_fingerprint(&back),
+//!     workload_fingerprint(&gesummv),
+//! );
+//! ```
+//!
+//! Errors implement `Display` as `LINE:COL: message`:
+//!
+//! ```
+//! use tcpa_energy::workloads::text::parse_workload;
+//!
+//! let err = parse_workload(
+//!     "workload bad\nloop i0 in 0..N0*N0\n",
+//! ).unwrap_err();
+//! assert_eq!(err.line, 2);
+//! assert!(err.message.starts_with("non-affine expression"));
+//! ```
+
+pub mod grammar;
+pub mod literals;
+pub mod semantics;
+
+pub use literals::{ParseError, Pos};
+
+use crate::polyhedral::{AffineExpr, ParamSpace};
+use crate::pra::ir::{
+    CondConstraint, Lhs, Op, Operand, Pra, Statement, TensorDim, Workload,
+};
+
+/// Parse a textual workload description into a [`Workload`].
+///
+/// This is frontend validation only (lexical, syntactic, name/rank
+/// resolution); callers analysing untrusted input must still route the
+/// result through the [`crate::lint`] gate, as every CLI path does.
+pub fn parse_workload(src: &str) -> Result<Workload, ParseError> {
+    semantics::lower(&grammar::parse(src)?)
+}
+
+/// Render a [`Workload`] in the textual format, such that
+/// [`parse_workload`] reconstructs it bit-identically (same
+/// fingerprint). Iterators and bounds get the canonical `i0…` / `N0…`
+/// names; every statement is named explicitly.
+pub fn render_workload(wl: &Workload) -> String {
+    let flat = wl.phases.len() == 1 && wl.phases[0].name == wl.name;
+    let mut out = format!("workload {}\n", wl.name);
+    for ph in &wl.phases {
+        if flat {
+            render_phase(&mut out, ph, "");
+        } else {
+            out.push_str(&format!("phase {} {{\n", ph.name));
+            render_phase(&mut out, ph, "  ");
+            out.push_str("}\n");
+        }
+    }
+    out
+}
+
+fn render_phase(out: &mut String, pra: &Pra, ind: &str) {
+    for l in 0..pra.ndims {
+        out.push_str(&format!(
+            "{ind}loop i{l} in 0..{}\n",
+            pra.space.name(l)
+        ));
+    }
+    let mut r = 0;
+    while r < pra.requires.len() {
+        // `==` preconditions are stored as a `[≥, ≤]` pair; fold them
+        // back for readability (the pair re-expands on parse).
+        let e = &pra.requires[r].0;
+        let paired = pra
+            .requires
+            .get(r + 1)
+            .map(|n| n.0 == -e)
+            .unwrap_or(false);
+        let (lhs, rhs) = split_params(e, &pra.space);
+        if paired {
+            out.push_str(&format!("{ind}requires {lhs} == {rhs}\n"));
+            r += 2;
+        } else if e.coeffs.iter().any(|&c| c > 0) {
+            out.push_str(&format!("{ind}requires {lhs} >= {rhs}\n"));
+            r += 1;
+        } else {
+            let neg = -e;
+            out.push_str(&format!(
+                "{ind}requires {} <= {}\n",
+                params_str(
+                    &AffineExpr { coeffs: neg.coeffs.clone(), konst: 0 },
+                    &pra.space
+                ),
+                aff_str(Vec::new(), e.konst),
+            ));
+            r += 1;
+        }
+    }
+    for t in &pra.tensors {
+        let dims: Vec<String> = t
+            .shape
+            .iter()
+            .map(|d| match d {
+                TensorDim::Param(l) => pra.space.name(*l).to_string(),
+                TensorDim::Fixed(v) => v.to_string(),
+            })
+            .collect();
+        out.push_str(&format!(
+            "{ind}tensor {}[{}]\n",
+            t.name,
+            dims.join(", ")
+        ));
+    }
+    for s in &pra.statements {
+        out.push_str(&format!("{ind}{}\n", stmt_str(s, pra)));
+    }
+}
+
+fn stmt_str(s: &Statement, pra: &Pra) -> String {
+    let lhs = match &s.lhs {
+        Lhs::Var(v) => var_str(v, &vec![0; pra.ndims]),
+        Lhs::Tensor { name, map } => {
+            let idx: Vec<String> = map
+                .rows
+                .iter()
+                .zip(&map.offset)
+                .map(|(row, &off)| aff_str(iter_terms(row), off))
+                .collect();
+            format!("{name}[{}]", idx.join(", "))
+        }
+    };
+    let args: Vec<String> = s
+        .args
+        .iter()
+        .map(|a| match a {
+            Operand::Var { name, dep } => var_str(name, dep),
+            Operand::Tensor { name, map } => {
+                let idx: Vec<String> = map
+                    .rows
+                    .iter()
+                    .zip(&map.offset)
+                    .map(|(row, &off)| aff_str(iter_terms(row), off))
+                    .collect();
+                format!("{name}[{}]", idx.join(", "))
+            }
+        })
+        .collect();
+    let rhs = match s.op {
+        Op::Copy => args[0].clone(),
+        Op::Add | Op::Add3 => args.join(" + "),
+        Op::Sub => args.join(" - "),
+        Op::Mul => args.join(" * "),
+        Op::Max => format!("max({}, {})", args[0], args[1]),
+    };
+    let mut line = format!("stmt {}: {lhs} = {rhs}", s.name);
+    if !s.cond.is_empty() {
+        line.push_str(&format!(" if {}", conds_str(&s.cond, &pra.space)));
+    }
+    line
+}
+
+fn conds_str(cond: &[CondConstraint], space: &ParamSpace) -> String {
+    let mut parts = Vec::new();
+    let mut i = 0;
+    while i < cond.len() {
+        let c = &cond[i];
+        // An equality lowered to `[≥, ≤]`: fold back to `==`.
+        let paired = cond
+            .get(i + 1)
+            .map(|n| {
+                n.a.iter().zip(&c.a).all(|(x, y)| *x == -y)
+                    && n.konst == -&c.konst
+            })
+            .unwrap_or(false);
+        if paired {
+            parts.push(format!(
+                "{} == {}",
+                aff_str(iter_terms(&c.a), 0),
+                params_str(&-&c.konst, space),
+            ));
+            i += 2;
+        } else if c.a.iter().any(|&x| x > 0) {
+            parts.push(format!(
+                "{} >= {}",
+                aff_str(iter_terms(&c.a), 0),
+                params_str(&-&c.konst, space),
+            ));
+            i += 1;
+        } else {
+            let neg: Vec<i64> = c.a.iter().map(|x| -x).collect();
+            parts.push(format!(
+                "{} <= {}",
+                aff_str(iter_terms(&neg), 0),
+                params_str(&c.konst, space),
+            ));
+            i += 1;
+        }
+    }
+    parts.join(", ")
+}
+
+/// Internal-variable access: dependence `d` renders as `iℓ - d`.
+fn var_str(name: &str, dep: &[i64]) -> String {
+    let idx: Vec<String> = dep
+        .iter()
+        .enumerate()
+        .map(|(l, &d)| {
+            if d == 0 {
+                format!("i{l}")
+            } else if d > 0 {
+                format!("i{l} - {d}")
+            } else {
+                format!("i{l} + {}", -d)
+            }
+        })
+        .collect();
+    format!("{name}[{}]", idx.join(", "))
+}
+
+fn iter_terms(a: &[i64]) -> Vec<(i64, String)> {
+    a.iter()
+        .enumerate()
+        .filter(|(_, &c)| c != 0)
+        .map(|(l, &c)| (c, format!("i{l}")))
+        .collect()
+}
+
+fn params_str(e: &AffineExpr, space: &ParamSpace) -> String {
+    let terms: Vec<(i64, String)> = e
+        .coeffs
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c != 0)
+        .map(|(k, &c)| (c, space.name(k).to_string()))
+        .collect();
+    aff_str(terms, e.konst)
+}
+
+/// Split `e ≥ 0` (or `= 0`) into a comparison's two sides: positive
+/// coefficients stay left, negated negative coefficients and the
+/// negated constant go right — `P − Q + k` prints as `P ⋈ Q − k`.
+fn split_params(e: &AffineExpr, space: &ParamSpace) -> (String, String) {
+    let pos = AffineExpr {
+        coeffs: e.coeffs.iter().map(|&c| c.max(0)).collect(),
+        konst: 0,
+    };
+    let neg = AffineExpr {
+        coeffs: e.coeffs.iter().map(|&c| (-c).max(0)).collect(),
+        konst: -e.konst,
+    };
+    (params_str(&pos, space), params_str(&neg, space))
+}
+
+/// Render an affine sum of named terms plus a constant; empty → `0`.
+fn aff_str(terms: Vec<(i64, String)>, konst: i64) -> String {
+    let mut out = String::new();
+    for (c, name) in terms {
+        if out.is_empty() {
+            out = match c {
+                1 => name,
+                -1 => format!("-{name}"),
+                c => format!("{c}*{name}"),
+            };
+        } else {
+            let (sign, m) = if c < 0 { (" - ", -c) } else { (" + ", c) };
+            out.push_str(sign);
+            if m == 1 {
+                out.push_str(&name);
+            } else {
+                out.push_str(&format!("{m}*{name}"));
+            }
+        }
+    }
+    if out.is_empty() {
+        konst.to_string()
+    } else if konst > 0 {
+        format!("{out} + {konst}")
+    } else if konst < 0 {
+        format!("{out} - {}", -konst)
+    } else {
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::workload_fingerprint;
+    use crate::workloads;
+
+    #[test]
+    fn gesummv_rendition_round_trips_bit_identically() {
+        let builtin = workloads::by_name("gesummv").unwrap();
+        let text = render_workload(&builtin);
+        let back = parse_workload(&text).unwrap();
+        assert_eq!(
+            workload_fingerprint(&back),
+            workload_fingerprint(&builtin),
+            "render → parse must reconstruct the exact IR:\n{text}"
+        );
+    }
+
+    #[test]
+    fn multi_phase_rendition_round_trips() {
+        let builtin = workloads::by_name("atax").unwrap();
+        let text = render_workload(&builtin);
+        assert!(text.contains("phase atax_p1 {"), "{text}");
+        let back = parse_workload(&text).unwrap();
+        assert_eq!(
+            workload_fingerprint(&back),
+            workload_fingerprint(&builtin)
+        );
+    }
+
+    #[test]
+    fn requires_pairs_fold_to_equality() {
+        let builtin = workloads::by_name("mvt").unwrap();
+        let text = render_workload(&builtin);
+        assert!(text.contains("requires N0 == N1"), "{text}");
+        let back = parse_workload(&text).unwrap();
+        assert_eq!(
+            workload_fingerprint(&back),
+            workload_fingerprint(&builtin)
+        );
+    }
+}

@@ -1,0 +1,653 @@
+//! Semantic layer of the textual workload format: AST → PRA IR.
+//!
+//! Name resolution, rank checking, and the lowering rules that make a
+//! parsed file *bit-identical* to the equivalent
+//! [`crate::workloads::PraBuilder`] construction — the workload
+//! fingerprint hashes the IR's `Debug` form, so textual renditions of
+//! builtins share cache entries with their Rust constructors only if
+//! the lowered constraints match coefficient for coefficient. The
+//! invariants that guarantee this:
+//!
+//! - the parameter space is always the canonical
+//!   [`crate::polyhedral::ParamSpace::loop_nest`] space; surface bound
+//!   names map positionally (the bound of the ℓ-th `loop` line is
+//!   parameter ℓ, whatever it is called in the file);
+//! - `if` conditions lower `lhs cmp rhs` to the exact
+//!   [`CondConstraint`] forms the builder sugar produces (`==` becomes
+//!   the `[≥, ≤]` pair in that order, matching `eq_const`);
+//! - `requires` lines lower through [`Constraint::ge`]/[`le`]/… whose
+//!   gcd-normalisation is idempotent, and `==` again expands ≥-then-≤
+//!   (matching `require_equal_bounds`);
+//! - `propagate`/`reduce` reuse the builder sugar itself, so the
+//!   generated statement triples and auto-assigned names line up.
+//!
+//! Deliberately *not* validated here: deep structural and polyhedral
+//! properties (bounds-safety, dependence coverage, guard
+//! satisfiability). Those are the lint engine's job — the frontend
+//! lowers via [`PraBuilder::build_unchecked`] and the CLI routes every
+//! parsed workload through the `lint_pra` deny gate, which reports
+//! stable L-codes instead of panicking.
+//!
+//! [`Constraint::ge`]: crate::polyhedral::Constraint::ge
+//! [`le`]: crate::polyhedral::Constraint::le
+
+use std::collections::{HashMap, HashSet};
+
+use super::grammar::{AccessAst, AffAst, Ast, Cmp, Item, PhaseAst, RhsOp};
+use super::literals::{ParseError, Pos};
+use crate::polyhedral::{AffineExpr, Constraint};
+use crate::pra::ir::{
+    CondConstraint, IndexMap, Lhs, Op, Operand, Pra, TensorDim, Workload,
+};
+use crate::workloads::PraBuilder;
+
+/// Maximum loop depth accepted from untrusted input (builtins use ≤ 3;
+/// the polyhedral machinery is exponential in depth).
+const MAX_NDIMS: usize = 8;
+
+/// Lower a parsed [`Ast`] to a [`Workload`].
+pub fn lower(ast: &Ast) -> Result<Workload, ParseError> {
+    if ast.phases.is_empty() {
+        return Err(ParseError::at(
+            ast.name_pos,
+            format!("workload `{}` has no phases (declare loops and \
+                     statements, or phase blocks)", ast.name),
+        ));
+    }
+    let mut seen_phases = HashSet::new();
+    let mut phases = Vec::with_capacity(ast.phases.len());
+    for ph in &ast.phases {
+        if !seen_phases.insert(ph.name.clone()) {
+            return Err(ParseError::at(
+                ph.pos,
+                format!("duplicate phase name `{}`", ph.name),
+            ));
+        }
+        phases.push(lower_phase(ph)?);
+    }
+    Ok(Workload { name: ast.name.clone(), phases })
+}
+
+/// Per-phase name environment: loop iterators, bound parameters, tensor
+/// shapes.
+struct Env {
+    ndims: usize,
+    nparams: usize,
+    /// iterator name → loop dimension.
+    iters: HashMap<String, usize>,
+    /// surface bound name → loop dimension (= parameter index).
+    bounds: HashMap<String, usize>,
+    /// tensor name → declared shape.
+    tensors: HashMap<String, Vec<TensorDim>>,
+}
+
+fn lower_phase(ph: &PhaseAst) -> Result<Pra, ParseError> {
+    // Pass 1: loops (fixing dimensions in file order) and tensor
+    // declarations, so later items resolve names regardless of order.
+    let mut env = Env {
+        ndims: 0,
+        nparams: 0,
+        iters: HashMap::new(),
+        bounds: HashMap::new(),
+        tensors: HashMap::new(),
+    };
+    let mut tensor_items: Vec<(&str, Vec<TensorDim>)> = Vec::new();
+    for item in &ph.items {
+        match item {
+            Item::Loop { iter, iter_pos, bound, pos: _ } => {
+                let dim = env.iters.len();
+                if dim >= MAX_NDIMS {
+                    return Err(ParseError::at(
+                        *iter_pos,
+                        format!("too many loops (max {MAX_NDIMS})"),
+                    ));
+                }
+                if env.iters.contains_key(iter) {
+                    return Err(ParseError::at(
+                        *iter_pos,
+                        format!("duplicate loop iterator `{iter}`"),
+                    ));
+                }
+                let bname = single_fresh_name(bound, &env)?;
+                env.iters.insert(iter.clone(), dim);
+                env.bounds.insert(bname, dim);
+            }
+            Item::Tensor { name, pos, dims } => {
+                if env.tensors.contains_key(name) {
+                    return Err(ParseError::at(
+                        *pos,
+                        format!("duplicate tensor `{name}`"),
+                    ));
+                }
+                // Shapes are resolved in pass 1b below, once every
+                // loop (and hence every bound name) is known.
+                tensor_items.push((name, Vec::new()));
+                env.tensors.insert(name.clone(), Vec::new());
+                let _ = dims;
+            }
+            _ => {}
+        }
+    }
+    env.ndims = env.iters.len();
+    env.nparams = 2 * env.ndims;
+    if env.ndims == 0 {
+        return Err(ParseError::at(
+            ph.pos,
+            format!("phase `{}` declares no loops", ph.name),
+        ));
+    }
+
+    // Pass 1b: resolve tensor shapes (bounds are all known now).
+    let mut t_at = 0usize;
+    for item in &ph.items {
+        if let Item::Tensor { name, dims, .. } = item {
+            let shape: Vec<TensorDim> = dims
+                .iter()
+                .map(|d| tensor_dim(d, &env))
+                .collect::<Result<_, _>>()?;
+            env.tensors.insert(name.clone(), shape.clone());
+            tensor_items[t_at].1 = shape;
+            t_at += 1;
+        }
+    }
+
+    let mut b = PraBuilder::new(&ph.name, env.ndims);
+    for (name, shape) in tensor_items {
+        b.tensor_decl(name, shape);
+    }
+
+    // Pass 2: requires and statements, in file order. `auto` mirrors
+    // the builder's S1, S2, … counter (advanced by anonymous `stmt`,
+    // `propagate` ×2, `reduce` ×3 — never by explicit names) so
+    // duplicate names are caught here with a position instead of
+    // surfacing later as an unanchored lint finding.
+    let mut auto = 1usize;
+    let mut names: HashSet<String> = HashSet::new();
+    let mut defined: HashSet<String> = HashSet::new();
+    let mut var_reads: Vec<(String, Pos)> = Vec::new();
+    let mut claim = |name: String, pos: Pos, names: &mut HashSet<String>| {
+        if names.insert(name.clone()) {
+            Ok(())
+        } else {
+            Err(ParseError::at(
+                pos,
+                format!("duplicate statement name `{name}`"),
+            ))
+        }
+    };
+    for item in &ph.items {
+        match item {
+            Item::Loop { .. } | Item::Tensor { .. } => {}
+            Item::Requires { lhs, cmp, rhs, pos: _ } => {
+                let l = aff_over_params(lhs, &env)?;
+                let r = aff_over_params(rhs, &env)?;
+                match cmp {
+                    Cmp::Eq => {
+                        b.require(Constraint::ge(&l, &r));
+                        b.require(Constraint::le(&l, &r));
+                    }
+                    Cmp::Ge => {
+                        b.require(Constraint::ge(&l, &r));
+                    }
+                    Cmp::Le => {
+                        b.require(Constraint::le(&l, &r));
+                    }
+                    Cmp::Gt => {
+                        b.require(Constraint::gt(&l, &r));
+                    }
+                    Cmp::Lt => {
+                        b.require(Constraint::lt(&l, &r));
+                    }
+                }
+            }
+            Item::Stmt { name, name_pos, lhs, op, args, cond, pos: _ } => {
+                let lowered_lhs = lower_lhs(lhs, &env)?;
+                if let Lhs::Var(v) = &lowered_lhs {
+                    defined.insert(v.clone());
+                }
+                let op = match op {
+                    RhsOp::Copy => Op::Copy,
+                    RhsOp::Add => Op::Add,
+                    RhsOp::Sub => Op::Sub,
+                    RhsOp::Mul => Op::Mul,
+                    RhsOp::Add3 => Op::Add3,
+                    RhsOp::Max => Op::Max,
+                };
+                let args: Vec<Operand> = args
+                    .iter()
+                    .map(|a| lower_operand(a, &env, &mut var_reads))
+                    .collect::<Result<_, _>>()?;
+                let cond: Vec<CondConstraint> = {
+                    let mut cs = Vec::new();
+                    for c in cond {
+                        lower_cond(c, &env, &mut cs)?;
+                    }
+                    cs
+                };
+                match name {
+                    Some(n) => {
+                        claim(n.clone(), *name_pos, &mut names)?;
+                        b.named_stmt(n, lowered_lhs, op, args, cond);
+                    }
+                    None => {
+                        claim(format!("S{auto}"), *name_pos, &mut names)?;
+                        auto += 1;
+                        b.stmt(lowered_lhs, op, args, cond);
+                    }
+                }
+            }
+            Item::Propagate { var, var_pos, tensor, along, along_pos, pos: _ } => {
+                let dim = iter_dim(along, *along_pos, &env)?;
+                if !env.tensors.contains_key(&tensor.name) {
+                    return Err(ParseError::at(
+                        tensor.pos,
+                        format!(
+                            "unknown tensor `{}` (propagate broadcasts a \
+                             declared input tensor)",
+                            tensor.name
+                        ),
+                    ));
+                }
+                let map = tensor_map(tensor, &env)?;
+                for k in 0..2 {
+                    claim(format!("S{}", auto + k), *var_pos, &mut names)?;
+                }
+                auto += 2;
+                defined.insert(var.clone());
+                b.propagate(var, &tensor.name, map, dim);
+            }
+            Item::Reduce { var, var_pos, term, term_pos, along, along_pos, pos: _ } => {
+                let dim = iter_dim(along, *along_pos, &env)?;
+                for k in 0..3 {
+                    claim(format!("S{}", auto + k), *var_pos, &mut names)?;
+                }
+                auto += 3;
+                defined.insert(var.clone());
+                defined.insert(format!("{var}*"));
+                var_reads.push((term.clone(), *term_pos));
+                b.acc_chain(var, term, dim);
+            }
+        }
+    }
+
+    // Post-pass: every internal-variable read must have a defining
+    // statement somewhere in the phase (single-assignment semantics are
+    // order-free, so this runs after all items).
+    for (name, pos) in &var_reads {
+        if !defined.contains(name) {
+            return Err(ParseError::at(
+                *pos,
+                format!(
+                    "dangling dependence: variable `{name}` is read but \
+                     never defined"
+                ),
+            ));
+        }
+    }
+
+    // Structural validity beyond this point is the lint gate's job.
+    Ok(b.build_unchecked())
+}
+
+/// A loop bound: exactly one fresh bare name with coefficient 1.
+fn single_fresh_name(aff: &AffAst, env: &Env) -> Result<String, ParseError> {
+    if let [t] = aff.terms.as_slice() {
+        if let (1, Some((name, pos))) = (t.coeff, &t.ident) {
+            if env.iters.contains_key(name) || env.bounds.contains_key(name) {
+                return Err(ParseError::at(
+                    *pos,
+                    format!("loop bound `{name}` is already in use"),
+                ));
+            }
+            return Ok(name.clone());
+        }
+    }
+    Err(ParseError::at(
+        aff.pos,
+        "loop bound must be a single fresh parameter name (e.g. \
+         `loop i0 in 0..N0`)",
+    ))
+}
+
+fn iter_dim(name: &str, pos: Pos, env: &Env) -> Result<usize, ParseError> {
+    env.iters.get(name).copied().ok_or_else(|| {
+        ParseError::at(pos, format!("unknown loop iterator `{name}`"))
+    })
+}
+
+/// One tensor dimension: a fixed integer or a single loop-bound name.
+fn tensor_dim(aff: &AffAst, env: &Env) -> Result<TensorDim, ParseError> {
+    if let [t] = aff.terms.as_slice() {
+        match (&t.ident, t.coeff) {
+            (None, c) => return Ok(TensorDim::Fixed(c)),
+            (Some((name, pos)), 1) => {
+                if let Some(&dim) = env.bounds.get(name) {
+                    return Ok(TensorDim::Param(dim));
+                }
+                if env.iters.contains_key(name) {
+                    return Err(ParseError::at(
+                        *pos,
+                        format!(
+                            "tensor dimensions must be a loop bound or a \
+                             fixed integer, not the iterator `{name}`"
+                        ),
+                    ));
+                }
+                return Err(ParseError::at(
+                    *pos,
+                    format!("unknown parameter `{name}`"),
+                ));
+            }
+            _ => {}
+        }
+    }
+    Err(ParseError::at(
+        aff.pos,
+        "tensor dimensions must be a loop bound or a fixed integer",
+    ))
+}
+
+/// An affine expression over *parameters only* (`requires` lines).
+fn aff_over_params(aff: &AffAst, env: &Env) -> Result<AffineExpr, ParseError> {
+    let mut e = AffineExpr::zero(env.nparams);
+    for t in &aff.terms {
+        match &t.ident {
+            None => e.konst += t.coeff,
+            Some((name, pos)) => {
+                if let Some(&dim) = env.bounds.get(name) {
+                    e.coeffs[dim] += t.coeff;
+                } else if env.iters.contains_key(name) {
+                    return Err(ParseError::at(
+                        *pos,
+                        format!(
+                            "loop iterator `{name}` cannot appear in a \
+                             `requires` constraint (parameters only)"
+                        ),
+                    ));
+                } else {
+                    return Err(ParseError::at(
+                        *pos,
+                        format!("unknown parameter `{name}`"),
+                    ));
+                }
+            }
+        }
+    }
+    Ok(e)
+}
+
+/// Split an affine expression into iterator coefficients and a
+/// parametric remainder: `Σ a_ℓ·i_ℓ + (Σ c_k·N_k + konst)`.
+fn aff_split(
+    aff: &AffAst,
+    env: &Env,
+) -> Result<(Vec<i64>, AffineExpr), ParseError> {
+    let mut a = vec![0i64; env.ndims];
+    let mut e = AffineExpr::zero(env.nparams);
+    for t in &aff.terms {
+        match &t.ident {
+            None => e.konst += t.coeff,
+            Some((name, pos)) => {
+                if let Some(&dim) = env.iters.get(name) {
+                    a[dim] += t.coeff;
+                } else if let Some(&dim) = env.bounds.get(name) {
+                    e.coeffs[dim] += t.coeff;
+                } else {
+                    return Err(ParseError::at(
+                        *pos,
+                        format!("unknown parameter `{name}`"),
+                    ));
+                }
+            }
+        }
+    }
+    Ok((a, e))
+}
+
+/// Lower `lhs cmp rhs` into [`CondConstraint`]s, appending to `out`.
+///
+/// With `D = lhs − rhs` split as `a·i + p`, the forms are exactly what
+/// the builder sugar emits: `≥` → `{a, p}`; `>` → `{a, p − 1}`;
+/// `≤` → `{−a, −p}`; `<` → `{−a, −p − 1}`; `==` → the `≥` pair then
+/// the `≤` pair (matching `eq_const`).
+fn lower_cond(
+    c: &super::grammar::CondAst,
+    env: &Env,
+    out: &mut Vec<CondConstraint>,
+) -> Result<(), ParseError> {
+    let (la, le) = aff_split(&c.lhs, env)?;
+    let (ra, re) = aff_split(&c.rhs, env)?;
+    let a: Vec<i64> = la.iter().zip(&ra).map(|(x, y)| x - y).collect();
+    let p = &le - &re;
+    let neg_a: Vec<i64> = a.iter().map(|x| -x).collect();
+    match c.cmp {
+        Cmp::Ge => out.push(CondConstraint { a, konst: p }),
+        Cmp::Gt => out.push(CondConstraint { a, konst: p.plus(-1) }),
+        Cmp::Le => out.push(CondConstraint { a: neg_a, konst: -&p }),
+        Cmp::Lt => {
+            out.push(CondConstraint { a: neg_a, konst: (-&p).plus(-1) })
+        }
+        Cmp::Eq => {
+            out.push(CondConstraint { a, konst: p.clone() });
+            out.push(CondConstraint { a: neg_a, konst: -&p });
+        }
+    }
+    Ok(())
+}
+
+/// Lower a tensor access into an [`IndexMap`], rank-checked against the
+/// declaration. Indices may mix iterators and integer offsets but not
+/// bound parameters (a tensor extent is parametric; an *index* into it
+/// must be an affine function of iterators alone).
+fn tensor_map(acc: &AccessAst, env: &Env) -> Result<IndexMap, ParseError> {
+    let shape = &env.tensors[&acc.name];
+    if acc.indices.len() != shape.len() {
+        return Err(ParseError::at(
+            acc.pos,
+            format!(
+                "rank mismatch: tensor `{}` has rank {} but the access \
+                 has {} indices",
+                acc.name,
+                shape.len(),
+                acc.indices.len()
+            ),
+        ));
+    }
+    let mut rows = Vec::with_capacity(acc.indices.len());
+    let mut offset = Vec::with_capacity(acc.indices.len());
+    for idx in &acc.indices {
+        let (row, p) = aff_split(idx, env)?;
+        if p.coeffs.iter().any(|&c| c != 0) {
+            return Err(ParseError::at(
+                idx.pos,
+                format!(
+                    "tensor index into `{}` may not involve a bound \
+                     parameter",
+                    acc.name
+                ),
+            ));
+        }
+        rows.push(row);
+        offset.push(p.konst);
+    }
+    Ok(IndexMap { rows, offset })
+}
+
+/// Lower an internal-variable read `x[i0 − d0, i1 − d1, …]` into its
+/// dependence vector: index ℓ must be iterator ℓ minus a constant.
+fn var_dep(acc: &AccessAst, env: &Env) -> Result<Vec<i64>, ParseError> {
+    let shape_err = || {
+        ParseError::at(
+            acc.pos,
+            format!(
+                "internal-variable reads must be of the form `i - d` per \
+                 dimension (`{0}[i0, i1]` or `{0}[i0 - 1, i1]`), with \
+                 all {1} iterators in order",
+                acc.name, env.ndims
+            ),
+        )
+    };
+    if acc.indices.len() != env.ndims {
+        return Err(shape_err());
+    }
+    let mut dep = Vec::with_capacity(env.ndims);
+    for (l, idx) in acc.indices.iter().enumerate() {
+        let (row, p) = aff_split(idx, env)?;
+        let unit =
+            row.iter().enumerate().all(|(k, &c)| c == i64::from(k == l));
+        if !unit || p.coeffs.iter().any(|&c| c != 0) {
+            return Err(shape_err());
+        }
+        dep.push(-p.konst);
+    }
+    Ok(dep)
+}
+
+fn lower_operand(
+    acc: &AccessAst,
+    env: &Env,
+    var_reads: &mut Vec<(String, Pos)>,
+) -> Result<Operand, ParseError> {
+    if env.tensors.contains_key(&acc.name) {
+        Ok(Operand::Tensor {
+            name: acc.name.clone(),
+            map: tensor_map(acc, env)?,
+        })
+    } else {
+        var_reads.push((acc.name.clone(), acc.pos));
+        Ok(Operand::Var { name: acc.name.clone(), dep: var_dep(acc, env)? })
+    }
+}
+
+fn lower_lhs(acc: &AccessAst, env: &Env) -> Result<Lhs, ParseError> {
+    if env.tensors.contains_key(&acc.name) {
+        Ok(Lhs::Tensor { name: acc.name.clone(), map: tensor_map(acc, env)? })
+    } else {
+        let dep = var_dep(acc, env)?;
+        if dep.iter().any(|&d| d != 0) {
+            return Err(ParseError::at(
+                acc.pos,
+                format!(
+                    "internal-variable writes must use the identity index \
+                     `{}[i0, i1, …]` (PRA single-assignment form)",
+                    acc.name
+                ),
+            ));
+        }
+        Ok(Lhs::Var(acc.name.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::grammar::parse;
+    use super::*;
+
+    fn lower_src(src: &str) -> Result<Workload, ParseError> {
+        lower(&parse(src).unwrap())
+    }
+
+    #[test]
+    fn elementwise_lowering_matches_builder() {
+        let wl = lower_src(
+            "workload axpy\n\
+             loop i0 in 0..N0\n\
+             tensor A[N0]\n\
+             tensor B[N0]\n\
+             tensor C[N0]\n\
+             stmt: C[i0] = A[i0] + B[i0]\n",
+        )
+        .unwrap();
+        let pra = &wl.phases[0];
+        assert_eq!(pra.ndims, 1);
+        assert_eq!(pra.statements.len(), 1);
+        assert_eq!(pra.statements[0].name, "S1");
+        assert_eq!(pra.statements[0].op, Op::Add);
+        assert!(matches!(&pra.statements[0].lhs, Lhs::Tensor { name, .. }
+                         if name == "C"));
+    }
+
+    #[test]
+    fn conditions_match_builder_sugar() {
+        // `if i0 == 0` / `if i0 > 0` / `if i1 >= N1 - 1` /
+        // `if i1 <= N1 - 2` against eq_const / gt_const / eq_top /
+        // below_top — the bit-identity the fingerprint depends on.
+        let wl = lower_src(
+            "workload c\n\
+             loop i0 in 0..N0\n\
+             loop i1 in 0..N1\n\
+             tensor T[N0, N1]\n\
+             stmt: x[i0, i1] = T[i0, i1] if i0 == 0\n\
+             stmt: x[i0, i1] = x[i0 - 1, i1] if i0 > 0\n\
+             stmt: T[i0, i1] = x[i0, i1] if i1 >= N1 - 1\n\
+             stmt: y[i0, i1] = x[i0, i1] if i1 <= N1 - 2\n",
+        )
+        .unwrap();
+        let b = PraBuilder::new("c", 2);
+        let s = &wl.phases[0].statements;
+        assert_eq!(s[0].cond, b.eq_const(0, 0));
+        assert_eq!(s[1].cond, vec![b.gt_const(0, 0)]);
+        assert_eq!(s[2].cond, b.eq_top(1));
+        assert_eq!(s[3].cond, vec![b.below_top(1)]);
+        assert_eq!(
+            s[1].args,
+            vec![Operand::var("x", vec![1, 0])],
+            "i0 - 1 is the unit dependence along dim 0"
+        );
+    }
+
+    #[test]
+    fn diagnostics_are_anchored() {
+        let cases: &[(&str, &str, usize)] = &[
+            (
+                "workload w\nloop i0 in 0..N0\nrequires M >= 3\n",
+                "unknown parameter `M`",
+                3,
+            ),
+            (
+                "workload w\nloop i0 in 0..N0\ntensor A[N0, 4]\n\
+                 stmt: x[i0] = A[i0]\n",
+                "rank mismatch: tensor `A` has rank 2 but the access \
+                 has 1 indices",
+                4,
+            ),
+            (
+                "workload w\nloop i0 in 0..N0\n\
+                 stmt S1: x[i0] = y[i0]\nstmt S1: z[i0] = x[i0]\n",
+                "duplicate statement name `S1`",
+                4,
+            ),
+            (
+                "workload w\nloop i0 in 0..N0\nstmt: x[i0] = ghost[i0]\n",
+                "dangling dependence: variable `ghost` is read but never \
+                 defined",
+                3,
+            ),
+        ];
+        for (src, want, line) in cases {
+            let e = lower_src(src).unwrap_err();
+            assert!(e.message.starts_with(want), "{src:?} → {e}");
+            assert_eq!(e.line, *line, "{src:?} → {e}");
+        }
+    }
+
+    #[test]
+    fn anonymous_and_sugar_naming_mirrors_the_builder() {
+        // propagate (2 names) + anonymous (1) + reduce (3) + explicit:
+        // explicit `S4` collides with the reduce's auto-assigned range.
+        let e = lower_src(
+            "workload w\n\
+             loop i0 in 0..N0\nloop i1 in 0..N1\n\
+             tensor X[N1]\n\
+             propagate x = X[i1] along i0\n\
+             stmt: m[i0, i1] = x[i0, i1]\n\
+             reduce s = m along i1\n\
+             stmt S4: q[i0, i1] = s[i0, i1]\n",
+        )
+        .unwrap_err();
+        assert!(
+            e.message.starts_with("duplicate statement name `S4`"),
+            "{e}"
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! Contract tests for the textual workload frontend
+//! (`tcpa_energy::workloads::text`).
+//!
+//! Three layers of contract:
+//!
+//! 1. **Pinned corpus** — the textual renditions under
+//!    `examples/workloads/` lower to workloads *bit-identical* to their
+//!    Rust builtin constructors: same fingerprint (the cache key — so
+//!    parsed inputs share memoized and disk-cached analyses), same
+//!    statement counts, and the same DSE Pareto frontier.
+//! 2. **Round-trip** — every builtin rendered to text re-parses to the
+//!    identical fingerprint, pinning the renderer and the parser to the
+//!    same IR encoding.
+//! 3. **Adversarial corpus** — malformed input fails with a
+//!    line/column-anchored diagnostic whose message prefix is stable
+//!    (scripts may grep it), and never panics.
+
+use tcpa_energy::dse::{explore, workload_fingerprint, DesignSpace, ExploreConfig};
+use tcpa_energy::lint::{lint_workload, LintOptions};
+use tcpa_energy::workloads::{self, text};
+
+fn corpus_path(file: &str) -> String {
+    format!(
+        "{}/../examples/workloads/{file}",
+        env!("CARGO_MANIFEST_DIR")
+    )
+}
+
+fn parse_corpus(file: &str) -> tcpa_energy::pra::Workload {
+    let src = std::fs::read_to_string(corpus_path(file))
+        .unwrap_or_else(|e| panic!("reading {file}: {e}"));
+    text::parse_workload(&src)
+        .unwrap_or_else(|e| panic!("parsing {file}: {e}"))
+}
+
+/// The corpus files that mirror a builtin constructor, pinned
+/// bit-identical: equal fingerprints mean equal `Debug` encodings of
+/// the whole IR — names, statements, access maps, guards, requires.
+#[test]
+fn corpus_files_are_bit_identical_to_their_builtins() {
+    for file in ["gesummv.wl", "gemm.wl", "atax.wl", "mvt.wl"] {
+        let parsed = parse_corpus(file);
+        let builtin = workloads::by_name(&parsed.name)
+            .unwrap_or_else(|| panic!("{file} names no builtin"));
+        assert_eq!(
+            parsed.phases.len(),
+            builtin.phases.len(),
+            "{file}: phase count"
+        );
+        for (p, b) in parsed.phases.iter().zip(&builtin.phases) {
+            assert_eq!(p.name, b.name, "{file}: phase name");
+            assert_eq!(
+                p.statements.len(),
+                b.statements.len(),
+                "{file}: statement count in {}",
+                p.name
+            );
+        }
+        assert_eq!(
+            workload_fingerprint(&parsed),
+            workload_fingerprint(&builtin),
+            "{file}: fingerprint differs from builtin `{}`",
+            parsed.name
+        );
+    }
+}
+
+/// Every file in the corpus — including the text-only ones with no
+/// builtin twin — parses and survives the strictest lint gate. CI runs
+/// the same sweep through the CLI; this is the in-tree witness.
+#[test]
+fn whole_corpus_is_lint_clean_under_deny_warnings() {
+    let dir = corpus_path("");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("corpus dir") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("wl") {
+            continue;
+        }
+        seen += 1;
+        let src = std::fs::read_to_string(&path).unwrap();
+        let wl = text::parse_workload(&src)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        for rep in lint_workload(&wl, &LintOptions::default()) {
+            assert!(
+                rep.is_clean(true),
+                "{} phase {} must pass --deny warnings:\n{}",
+                path.display(),
+                rep.pra,
+                rep.render()
+            );
+        }
+    }
+    assert!(seen >= 5, "corpus unexpectedly small: {seen} files");
+}
+
+/// The acceptance bit: a DSE sweep over the parsed file and over the
+/// builtin produce the same frontier, point for point — identical
+/// energy, latency, PEs and schedule labels in the same order. The
+/// parsed run additionally proves schedule causality per candidate
+/// (the untrusted-input hardening the CLI switches on for
+/// `--workload-file`) without perturbing the result.
+#[test]
+fn dse_frontier_of_parsed_gesummv_matches_builtin() {
+    let parsed = parse_corpus("gesummv.wl");
+    let builtin = workloads::by_name("gesummv").unwrap();
+    let space = DesignSpace::new()
+        .with_arrays_2d(4)
+        .with_bounds(vec![8, 8]);
+    let cfg = ExploreConfig { workers: 0 };
+    let res_b = explore(&builtin, &space, &cfg);
+    let res_p = explore(
+        &parsed,
+        &space.clone().with_schedule_verification(),
+        &cfg,
+    );
+    assert!(res_b.failures.is_empty(), "{:?}", res_b.failures);
+    assert!(res_p.failures.is_empty(), "{:?}", res_p.failures);
+    assert_eq!(res_p.frontier, res_b.frontier, "frontier indices");
+    assert_eq!(res_p.points.len(), res_b.points.len());
+    for (p, b) in res_p.points.iter().zip(&res_b.points) {
+        assert_eq!(
+            format!("{:?}", p.point),
+            format!("{:?}", b.point),
+            "design point"
+        );
+        assert_eq!(p.schedule_label, b.schedule_label);
+        assert_eq!(p.pes, b.pes);
+        assert_eq!(p.energy_pj, b.energy_pj);
+        assert_eq!(p.latency_cycles, b.latency_cycles);
+        assert_eq!(p.edp, b.edp);
+    }
+}
+
+/// Renderer ↔ parser closure over the whole builtin registry, plus the
+/// unschedulable counterexample fixture (structure the lint gate
+/// rejects must still round-trip — the frontend reports, it does not
+/// silently repair).
+#[test]
+fn every_builtin_round_trips_through_text() {
+    let mut wls = workloads::all();
+    wls.push(workloads::twist_unschedulable());
+    for wl in wls {
+        let src = text::render_workload(&wl);
+        let back = text::parse_workload(&src).unwrap_or_else(|e| {
+            panic!("{} failed to re-parse: {e}\n--- rendered:\n{src}", wl.name)
+        });
+        assert_eq!(
+            workload_fingerprint(&back),
+            workload_fingerprint(&wl),
+            "{} round-trip fingerprint\n--- rendered:\n{src}",
+            wl.name
+        );
+    }
+}
+
+/// One adversarial input per documented diagnostic family: the error is
+/// anchored at the exact line and column, and its message prefix is
+/// stable.
+#[test]
+fn adversarial_corpus_pins_positions_and_message_prefixes() {
+    // (source, line, col, expected message prefix)
+    let cases: &[(&str, usize, usize, &str)] = &[
+        // Unknown parameter: M is neither a loop bound nor declared.
+        (
+            "workload w\nloop i0 in 0..N0\ntensor T[N0]\n\
+             stmt: T[i0] = T[i0 + M]\n",
+            4,
+            1,
+            "unknown parameter `M`",
+        ),
+        // Non-affine loop bound.
+        (
+            "workload w\nloop i0 in 0..N0\nloop i1 in 0..N1*N1\n",
+            3,
+            17,
+            "non-affine expression",
+        ),
+        // Rank mismatch: T is rank 1, accessed rank 2.
+        (
+            "workload w\nloop i0 in 0..N0\nloop i1 in 0..N1\n\
+             tensor T[N0]\nstmt: T[i0] = T[i0, i1]\n",
+            5,
+            15,
+            "rank mismatch: tensor `T`",
+        ),
+        // Duplicate statement name.
+        (
+            "workload w\nloop i0 in 0..N0\ntensor T[N0]\n\
+             stmt S1: T[i0] = T[i0]\nstmt S1: a[i0] = T[i0]\n",
+            5,
+            6,
+            "duplicate statement name `S1`",
+        ),
+        // Dangling dependence: `z` is read but never defined.
+        (
+            "workload w\nloop i0 in 0..N0\ntensor T[N0]\n\
+             stmt: T[i0] = z[i0]\n",
+            4,
+            15,
+            "dangling dependence: variable `z`",
+        ),
+        // Unterminated phase block.
+        (
+            "workload w\nphase p1 {\n  loop i0 in 0..N0\n",
+            2,
+            10,
+            "unterminated phase block `p1`",
+        ),
+    ];
+    for (src, line, col, prefix) in cases {
+        let e = text::parse_workload(src)
+            .expect_err(&format!("must reject:\n{src}"));
+        assert!(
+            e.message.starts_with(prefix),
+            "message {:?} should start with {prefix:?} for:\n{src}",
+            e.message
+        );
+        assert_eq!(
+            (e.line, e.col),
+            (*line, *col),
+            "position of {prefix:?} in:\n{src}\ngot: {e}"
+        );
+    }
+}
