@@ -1,0 +1,112 @@
+//! Beam search vs the exhaustive oracle just under the refusal cap.
+//!
+//! `dse --strategy beam` exists for exactly one regime: per-phase shape
+//! spaces too big to enumerate comfortably but too interesting to
+//! refuse. This bench pits the default-budget beam against the
+//! exhaustive sweep on the largest gemver per-phase space *under* the
+//! CLI's 20 000-point cap (27 shapes ^ 3 phases = 19 683 combinations;
+//! `--quick` shrinks to 8 ^ 3 = 512 for the CI smoke), recording
+//! points evaluated, wall clock, and the beam's knee-energy regret in
+//! a `strategy` section of `BENCH_symbolic.json`.
+//!
+//! Acceptance (full runs only; `--quick` just reports): the beam
+//! evaluates strictly fewer points than the oracle and its knee stays
+//! within 5% energy of the oracle's knee.
+//!
+//! ```bash
+//! cargo bench --bench strategy_search [-- --quick]
+//! ```
+
+use tcpa_energy::bench_util::{
+    bench_symbolic_json_path, time_once, write_bench_section,
+};
+use tcpa_energy::dse::{
+    explore_with_cache, AnalysisCache, DesignSpace, ExploreConfig,
+    ExploreResult, PhasePolicy, Strategy, DEFAULT_BEAM_WIDTH,
+};
+use tcpa_energy::workloads;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // 27 shapes ^ 3 phases = 19 683 — the largest per-phase gemver
+    // space under the CLI's 20 000-point exhaustive cap.
+    let max_pes = if quick { 4 } else { 10 };
+
+    let wl = workloads::by_name("gemver").unwrap();
+    let space = DesignSpace::new()
+        .with_arrays_2d(max_pes)
+        .with_bounds(vec![32, 32])
+        .with_phase_shapes(PhasePolicy::PerPhase);
+    let cfg = ExploreConfig::default();
+
+    // One shared cache: the per-(phase, shape) analyses are paid once,
+    // so both strategies race on search + evaluation, not on symbolic
+    // analysis.
+    let cache = AnalysisCache::new();
+    let (wall_ex, oracle) = time_once(|| {
+        explore_with_cache(&wl, &space, &cfg, &cache)
+    });
+    let beam_space =
+        space.clone().with_strategy(Strategy::beam(DEFAULT_BEAM_WIDTH));
+    let (wall_beam, beam) = time_once(|| {
+        explore_with_cache(&wl, &beam_space, &cfg, &cache)
+    });
+
+    let knee_e = |r: &ExploreResult| {
+        r.knee.map(|i| r.points[i].energy_pj).unwrap_or(f64::NAN)
+    };
+    let regret = knee_e(&beam) / knee_e(&oracle);
+    let min_e = |r: &ExploreResult| {
+        r.points
+            .iter()
+            .map(|p| p.energy_pj)
+            .fold(f64::INFINITY, f64::min)
+    };
+
+    println!(
+        "exhaustive: {:5} points in {wall_ex:?} (knee {:.1} pJ)",
+        oracle.points.len(),
+        knee_e(&oracle)
+    );
+    println!(
+        "beam      : {:5} points in {wall_beam:?} (knee {:.1} pJ, \
+         regret {:.4})",
+        beam.points.len(),
+        knee_e(&beam),
+        regret
+    );
+    println!(
+        "energy minimum: beam {:.1} pJ vs exhaustive {:.1} pJ",
+        min_e(&beam),
+        min_e(&oracle)
+    );
+    if !quick {
+        assert!(
+            beam.points.len() < oracle.points.len(),
+            "acceptance: the beam must evaluate strictly fewer points \
+             ({} vs {})",
+            beam.points.len(),
+            oracle.points.len()
+        );
+        assert!(
+            regret <= 1.05,
+            "acceptance: beam knee regret must stay within 5%, got \
+             {regret:.4}"
+        );
+    }
+
+    let body = format!(
+        "{{\"workload\": \"gemver\", \"max_pes\": {max_pes}, \
+         \"points_exhaustive\": {}, \"points_beam\": {}, \
+         \"wall_ms_exhaustive\": {:.1}, \"wall_ms_beam\": {:.1}, \
+         \"knee_regret\": {regret:.4}, \"quick\": {quick}}}",
+        oracle.points.len(),
+        beam.points.len(),
+        wall_ex.as_secs_f64() * 1e3,
+        wall_beam.as_secs_f64() * 1e3,
+    );
+    let path = bench_symbolic_json_path();
+    write_bench_section(&path, "strategy", &body)
+        .expect("writing BENCH_symbolic.json");
+    println!("section strategy → {}", path.display());
+}

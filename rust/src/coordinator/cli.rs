@@ -20,6 +20,9 @@
 //!                      [--sim-verify-frontier]
 //!                      [--checkpoint FILE] [--resume] [--deadline SECS]
 //!                      [--point-timeout SECS] [--progress]
+//!                      [--strategy exhaustive|beam[:W]] [--shard i/n]
+//! tcpa-energy dse merge --workload gemm <same space flags as the sweeps>
+//!                      --shards a.journal,b.journal,... [--out DIR]
 //! tcpa-energy figures  [--out results] [--quick]
 //! tcpa-energy lint     --workload NAME | --workload-file FILE.wl |
 //!                      --all-builtins
@@ -58,6 +61,20 @@
 //! sim-verify divergence, I/O), `3` partial result (cancelled —
 //! deadline, SIGINT, or injected; the strongest signal wins).
 //!
+//! Big sweeps also scale *across* the points axis: `--strategy beam[:W]`
+//! replaces the exhaustive enumeration (the default, and always the
+//! oracle) with a deterministic Pareto-guided beam over the shape /
+//! phase-shape axis ([`crate::dse::Strategy`]) — an anytime answer whose
+//! report is explicitly marked heuristic — and `--shard i/n` runs the
+//! `i`-th round-robin slice of the canonical enumeration
+//! ([`crate::dse::Shard`]), journaling it with `--checkpoint`;
+//! `dse merge --shards a.journal,b.journal,...` (with the *same*
+//! workload and space flags) folds the finished slices into a report
+//! byte-identical to the unsharded run, failing loudly on a missing,
+//! duplicated, or stale shard. The two compose with the per-phase cap:
+//! `--strategy beam` and a per-shard slice under the cap both lift the
+//! 20 000-point refusal.
+//!
 //! `lint` runs the [`crate::lint`] static-analysis engine (structural +
 //! symbolic polyhedral passes; add `--array` for the mapping/schedule
 //! pass) and exits non-zero on deny-level findings — or on any finding
@@ -81,9 +98,10 @@ use std::time::Duration;
 
 use crate::analysis::SymbolicAnalysis;
 use crate::dse::{
-    explore_controlled, phase_cache_name, phase_fingerprint,
+    explore_controlled, merge_shards, phase_cache_name, phase_fingerprint,
     sim_verify_frontier, workload_fingerprint, AnalysisCache, DesignSpace,
-    ExploreConfig, ExploreControl, FaultPlan, PhasePolicy, SchedulePolicy,
+    ExploreConfig, ExploreControl, ExploreResult, FaultPlan, PhasePolicy,
+    SchedulePolicy, Shard, Strategy,
 };
 use crate::energy::{AccessClass, Backend, MemoryClass, Policy};
 use crate::report::{
@@ -262,6 +280,38 @@ fn workload_from_flags(
         (None, None) => Err(CliError::Usage(
             "--workload NAME or --workload-file PATH required".into(),
         )),
+    }
+}
+
+/// Per-scenario knee summary shared by `dse` sweeps and `dse merge`.
+fn print_knees(res: &ExploreResult) {
+    for g in &res.groups {
+        if let Some(k) = g.knee.map(|i| &res.points[i]) {
+            // Name the schedule only when a non-default candidate
+            // won — the default pick is implied otherwise — and
+            // the phase assignment only when it is genuinely
+            // heterogeneous.
+            let sched = if k.point.schedule.is_default() {
+                String::new()
+            } else {
+                format!(", schedule {}", k.schedule_label)
+            };
+            let phases = if k.point.phase_shapes.is_heterogeneous() {
+                format!(", phases {}", k.point.phase_shapes.label())
+            } else {
+                String::new()
+            };
+            println!(
+                "knee [bounds {:?}, {}]: {} ({} PEs, {:.1} pJ, \
+                 {} cycles{sched}{phases})",
+                g.bounds,
+                g.backend.name(),
+                k.point.array_label(),
+                k.pes,
+                k.energy_pj,
+                k.latency_cycles
+            );
+        }
     }
 }
 
@@ -639,28 +689,144 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 // An unprovable schedule fails the point, not the run.
                 space = space.with_schedule_verification();
             }
-            if space.phase_policy == PhasePolicy::PerPhase {
+            if let Some(sflag) = flags.get("strategy") {
+                space = space.with_strategy(
+                    Strategy::parse(sflag).map_err(CliError::Usage)?,
+                );
+            }
+            let shard = match flags.get("shard") {
+                Some(v) => Shard::parse(v)
+                    .map_err(|e| CliError::Usage(format!("--shard: {e}")))?,
+                None => Shard::solo(),
+            };
+            if !space.strategy.is_exhaustive() && !shard.is_solo() {
+                return Err(CliError::Usage(
+                    "--shard partitions the canonical exhaustive \
+                     enumeration; it cannot combine with --strategy \
+                     beam (a heuristic subset has no stable global \
+                     indices to split)"
+                        .into(),
+                ));
+            }
+            if args.get(1).map(String::as_str) == Some("merge") {
+                // `dse merge`: fold finished per-shard journals into
+                // the full report. No analysis runs here, so the
+                // interruptibility and explosion-refusal machinery
+                // below does not apply — but the workload and space
+                // flags must match the shard runs exactly (the
+                // journals are fingerprint-locked to them).
+                if flags.contains_key("shard") {
+                    return Err(CliError::Usage(
+                        "--shard names one slice of a sweep; `dse \
+                         merge` folds finished slices and takes \
+                         --shards a.journal,b.journal,... instead"
+                            .into(),
+                    ));
+                }
+                for banned in
+                    ["checkpoint", "resume", "sim-verify-frontier"]
+                {
+                    if flags.contains_key(banned) {
+                        return Err(CliError::Usage(format!(
+                            "--{banned} applies to a sweep, not to \
+                             `dse merge` (merge only replays finished \
+                             shard journals)"
+                        )));
+                    }
+                }
+                let list = flags.get("shards").ok_or_else(|| {
+                    CliError::Usage(
+                        "dse merge requires --shards \
+                         a.journal,b.journal,... (one finished \
+                         journal per shard, any order)"
+                            .into(),
+                    )
+                })?;
+                let paths: Vec<std::path::PathBuf> = list
+                    .split(',')
+                    .map(|p| std::path::PathBuf::from(p.trim()))
+                    .collect();
+                let res = merge_shards(&wl, &space, &paths)
+                    .map_err(CliError::Checkpoint)?;
+                println!(
+                    "{}: {} points merged from {} shard journal(s) \
+                     ({} failed)",
+                    res.workload,
+                    res.points.len(),
+                    paths.len(),
+                    res.failures.len()
+                );
+                for (p, msg) in res.failures.iter().take(8) {
+                    eprintln!(
+                        "  failed: {} bounds {:?} ({}, scale {}): {msg}",
+                        p.array_label(),
+                        p.bounds,
+                        p.backend.name(),
+                        p.tile_scale
+                    );
+                }
+                if res.failures.len() > 8 {
+                    eprintln!(
+                        "  ... and {} more",
+                        res.failures.len() - 8
+                    );
+                }
+                println!("{}", dse_frontier_markdown(&res));
+                print_knees(&res);
+                if let Some(out) = flags.get("out") {
+                    let dir = Path::new(out);
+                    write_dse_report(
+                        &res,
+                        dir,
+                        &format!("dse_{}", res.workload),
+                    )?;
+                    println!(
+                        "full point cloud + frontier → {}/dse_{}_*.csv",
+                        dir.display(),
+                        res.workload
+                    );
+                }
+                return Ok(
+                    if res.points.is_empty() && !res.failures.is_empty()
+                    {
+                        1
+                    } else {
+                        0
+                    },
+                );
+            }
+            if space.phase_policy == PhasePolicy::PerPhase
+                && space.strategy.is_exhaustive()
+            {
                 // Shape combinations grow as shapes^phases; refuse an
                 // explosion loudly (never cap coverage silently) before
                 // any analysis runs — unless the user already bounded
-                // the sweep (`--checkpoint` makes an interrupted run
-                // resumable, `--deadline` bounds the wall clock), in
-                // which case a big space is their informed choice.
+                // the sweep: `--checkpoint` makes an interrupted run
+                // resumable, `--deadline` bounds the wall clock,
+                // `--strategy beam` bounds the points evaluated (so
+                // the gate is skipped above), and a `--shard i/n` run
+                // is judged on its own slice, since the enumeration
+                // is split n ways across processes or machines.
                 const MAX_PHASE_POINTS: u128 = 20_000;
                 let est = space.phase_point_estimate(wl.phases.len());
+                let slice = (est + shard.count as u128 - 1)
+                    / shard.count as u128;
                 let bounded = flags.contains_key("checkpoint")
                     || flags.contains_key("deadline");
-                if est > MAX_PHASE_POINTS && !bounded {
+                if slice > MAX_PHASE_POINTS && !bounded {
                     return Err(CliError::Usage(format!(
                         "--phase-shapes per-phase with --max-pes \
                          {max_pes} on {} would enumerate up to {est} \
                          design points ({} shapes ^ {} phases, over the \
                          {MAX_PHASE_POINTS}-point cap); lower --max-pes \
-                         (e.g. 8) or narrow the other axes — or keep the \
-                         space and make the sweep interruptible with \
-                         --checkpoint FILE (resumable journal) and/or \
-                         --deadline SECS (bounded wall clock), which \
-                         lift this cap",
+                         (e.g. 8) or narrow the other axes — or keep \
+                         the space and bound the sweep, which lifts \
+                         this cap: --checkpoint FILE (resumable \
+                         journal) and/or --deadline SECS (bounded wall \
+                         clock), --strategy beam (anytime Pareto-beam \
+                         search; exhaustive stays the oracle), or \
+                         --shard i/n slices folded by `dse merge` \
+                         (split the enumeration across machines)",
                         wl.name,
                         space.arrays.len(),
                         wl.phases.len()
@@ -723,6 +889,7 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 checkpoint,
                 resume,
                 point_timeout,
+                shard,
                 faults: FaultPlan::from_env(),
                 ..ExploreControl::default()
             };
@@ -876,6 +1043,15 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 res.cache.hit_rate() * 100.0,
                 res.cache.disk_hits
             );
+            if let Some(sh) = res.shard {
+                println!(
+                    "shard {}: this run owns {} point(s) of the full \
+                     enumeration; fold finished shards with \
+                     `tcpa-energy dse merge --shards ...`",
+                    sh.label(),
+                    res.total
+                );
+            }
             if let Some(reason) = res.cancelled {
                 let hint = match &ctl.checkpoint {
                     Some(p) => format!(
@@ -906,34 +1082,7 @@ pub fn run_cli(args: &[String]) -> Result<i32, CliError> {
                 eprintln!("  ... and {} more", res.failures.len() - 8);
             }
             println!("{}", dse_frontier_markdown(&res));
-            for g in &res.groups {
-                if let Some(k) = g.knee.map(|i| &res.points[i]) {
-                    // Name the schedule only when a non-default candidate
-                    // won — the default pick is implied otherwise — and
-                    // the phase assignment only when it is genuinely
-                    // heterogeneous.
-                    let sched = if k.point.schedule.is_default() {
-                        String::new()
-                    } else {
-                        format!(", schedule {}", k.schedule_label)
-                    };
-                    let phases = if k.point.phase_shapes.is_heterogeneous() {
-                        format!(", phases {}", k.point.phase_shapes.label())
-                    } else {
-                        String::new()
-                    };
-                    println!(
-                        "knee [bounds {:?}, {}]: {} ({} PEs, {:.1} pJ, \
-                         {} cycles{sched}{phases})",
-                        g.bounds,
-                        g.backend.name(),
-                        k.point.array_label(),
-                        k.pes,
-                        k.energy_pj,
-                        k.latency_cycles
-                    );
-                }
-            }
+            print_knees(&res);
             if let Some(out) = flags.get("out") {
                 let dir = Path::new(out);
                 write_dse_report(&res, dir, &format!("dse_{}", res.workload))?;
@@ -1587,6 +1736,165 @@ mod tests {
         assert!(msg.contains("--max-pes 64"), "{msg}");
         assert!(msg.contains("--checkpoint"), "{msg}");
         assert!(msg.contains("--deadline"), "{msg}");
+        // PR 10: the refusal names every mitigation, including the
+        // heuristic strategy and the sharded split.
+        assert!(msg.contains("--strategy beam"), "{msg}");
+        assert!(msg.contains("--shard"), "{msg}");
+        assert!(msg.contains("dse merge"), "{msg}");
+    }
+
+    #[test]
+    fn dse_beam_strategy_and_small_shard_slices_lift_the_refusal() {
+        // gemver at --max-pes 12 enumerates 35^3 = 42 875 per-phase
+        // combinations — over the cap, so exhaustive refuses...
+        let e = run_cli(&s(&[
+            "dse", "--workload", "gemver", "--bounds", "8,8",
+            "--max-pes", "12", "--phase-shapes", "per-phase",
+        ]));
+        assert!(
+            matches!(e, Err(CliError::Usage(_))),
+            "35^3 combos must trip the exhaustive cap: {e:?}"
+        );
+        // ...but a beam search is budget-bounded, so the same space
+        // sweeps (the report is marked heuristic).
+        assert_eq!(
+            run_cli(&s(&[
+                "dse", "--workload", "gemver", "--bounds", "8,8",
+                "--max-pes", "12", "--phase-shapes", "per-phase",
+                "--strategy", "beam:4",
+            ]))
+            .unwrap(),
+            0,
+            "--strategy beam must lift the per-phase explosion refusal"
+        );
+        // ...and the refusal judges a sharded run on its own slice:
+        // the estimate that trips solo must pass once split enough
+        // ways. (Probed indirectly — a slice that is still over the
+        // cap keeps refusing, so the gate is genuinely per-shard.)
+        let e = run_cli(&s(&[
+            "dse", "--workload", "gemver", "--phase-shapes",
+            "per-phase", "--shard", "1/2",
+        ]));
+        assert!(
+            matches!(e, Err(CliError::Usage(_))),
+            "half of an enormous space is still over the cap: {e:?}"
+        );
+    }
+
+    #[test]
+    fn dse_strategy_and_shard_flag_validation() {
+        for bad in ["beams", "beam:", "beam:0", "beam:x", "BEAM"] {
+            let e = run_cli(&s(&[
+                "dse", "--workload", "gesummv", "--bounds", "8,8",
+                "--max-pes", "2", "--strategy", bad,
+            ]));
+            let Err(CliError::Usage(msg)) = e else {
+                panic!(
+                    "--strategy {bad} should be a usage error, got {e:?}"
+                );
+            };
+            assert!(msg.contains(bad), "{msg}");
+        }
+        for bad in ["3", "0/3", "4/3", "2-3", "a/b"] {
+            let e = run_cli(&s(&[
+                "dse", "--workload", "gesummv", "--bounds", "8,8",
+                "--max-pes", "2", "--shard", bad,
+            ]));
+            let Err(CliError::Usage(msg)) = e else {
+                panic!(
+                    "--shard {bad} should be a usage error, got {e:?}"
+                );
+            };
+            assert!(msg.contains("--shard"), "{msg}");
+        }
+        // A heuristic subset has no stable global indices to shard.
+        let e = run_cli(&s(&[
+            "dse", "--workload", "gesummv", "--bounds", "8,8",
+            "--max-pes", "2", "--strategy", "beam", "--shard", "1/2",
+        ]));
+        assert!(matches!(e, Err(CliError::Usage(_))), "{e:?}");
+    }
+
+    #[test]
+    fn dse_merge_validates_its_inputs() {
+        for bad in [
+            // merge requires --shards,
+            vec!["dse", "merge", "--workload", "gesummv"],
+            // refuses the single-slice flag,
+            vec![
+                "dse", "merge", "--workload", "gesummv", "--shard",
+                "1/2", "--shards", "x.journal",
+            ],
+            // and refuses sweep-only robustness flags.
+            vec![
+                "dse", "merge", "--workload", "gesummv", "--resume",
+                "--shards", "x.journal",
+            ],
+        ] {
+            let e = run_cli(&s(&bad));
+            assert!(
+                matches!(e, Err(CliError::Usage(_))),
+                "{bad:?} should be a usage error, got {e:?}"
+            );
+        }
+        // A merge over journals that do not exist is a loud checkpoint
+        // error naming the path — never a silent empty report.
+        let e = run_cli(&s(&[
+            "dse", "merge", "--workload", "gesummv", "--bounds", "8,8",
+            "--max-pes", "2", "--shards", "/nonexistent/a.journal",
+        ]));
+        let Err(CliError::Checkpoint(msg)) = e else {
+            panic!("expected a checkpoint error, got {e:?}");
+        };
+        assert!(msg.contains("/nonexistent/a.journal"), "{msg}");
+    }
+
+    #[test]
+    fn dse_sharded_runs_then_merge_reports_the_full_frontier() {
+        let dir = std::env::temp_dir()
+            .join(format!("tcpa-cli-shard-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut journals = Vec::new();
+        for i in 1..=2 {
+            let j = dir.join(format!("shard{i}.journal"));
+            let j_s = j.to_str().unwrap().to_string();
+            let sh = format!("{i}/2");
+            assert_eq!(
+                run_cli(&s(&[
+                    "dse", "--workload", "gesummv", "--bounds", "8,8",
+                    "--max-pes", "2", "--shard", &sh, "--checkpoint",
+                    &j_s,
+                ]))
+                .unwrap(),
+                0,
+                "shard {sh} must sweep its slice"
+            );
+            journals.push(j_s);
+        }
+        assert_eq!(
+            run_cli(&s(&[
+                "dse", "merge", "--workload", "gesummv", "--bounds",
+                "8,8", "--max-pes", "2", "--shards",
+                &journals.join(","),
+            ]))
+            .unwrap(),
+            0,
+            "merging both finished slices must succeed"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dse_beam_strategy_sweeps_a_small_space() {
+        assert_eq!(
+            run_cli(&s(&[
+                "dse", "--workload", "gesummv", "--bounds", "8,8",
+                "--max-pes", "2", "--strategy", "beam:4",
+            ]))
+            .unwrap(),
+            0
+        );
     }
 
     #[test]

@@ -91,8 +91,9 @@ use super::journal::{
 use super::pareto::{knee_point, pareto_frontier, Objectives};
 use super::space::{
     DesignPoint, DesignSpace, PhasePolicy, PhaseShapes, ScheduleChoice,
-    SchedulePolicy,
+    SchedulePolicy, Shard,
 };
+use super::strategy::Strategy;
 
 /// Explorer knobs.
 #[derive(Debug, Clone, Default)]
@@ -200,6 +201,13 @@ pub struct ExploreControl {
     pub progress: Option<Box<dyn Fn(usize, usize) + Send + Sync>>,
     /// Deterministic fault injection (tests; inert by default).
     pub faults: FaultPlan,
+    /// Which slice of the enumeration this run owns (`dse --shard
+    /// i/n`; defaults to the whole space). Lives in the control block,
+    /// not the [`DesignSpace`]: sharding changes who evaluates a
+    /// point, never which points exist, so every shard shares one
+    /// space fingerprint and the shard identity is bound into the
+    /// journal header as its own field.
+    pub shard: Shard,
 }
 
 /// One evaluated design point.
@@ -306,6 +314,12 @@ pub struct ExploreResult {
     /// write failures. The sweep's numbers are unaffected; callers
     /// should surface these to the user.
     pub warnings: Vec<String>,
+    /// How the enumeration was produced (provenance for the report
+    /// header; [`Strategy::Exhaustive`] for merged shard results).
+    pub strategy: Strategy,
+    /// The shard this run evaluated, when it was one slice of a
+    /// sharded sweep (`None` for unsharded runs and merged results).
+    pub shard: Option<Shard>,
 }
 
 impl ExploreResult {
@@ -380,7 +394,12 @@ pub(crate) fn phase_params(
 /// per base point; only latency (and therefore EDP) is re-evaluated per
 /// candidate — the structural cheapness that makes the schedule a free
 /// axis on top of the cached analyses.
-fn evaluate(
+///
+/// `pub(crate)` so [`super::strategy::beam_points`] prices candidate
+/// states through the *same* arithmetic and cache: a beam-visited
+/// point re-evaluated by the explorer is a cache hit with bit-identical
+/// objectives.
+pub(crate) fn evaluate(
     wl: &Workload,
     fingerprint: u64,
     phase_fps: &[u64],
@@ -618,27 +637,43 @@ pub fn explore_controlled(
     }
 
     let t0 = Instant::now();
-    // The per-phase axis needs the workload's phase count, which the
-    // space cannot know — resolve the base-point enumeration here.
-    let points = match space.phase_policy {
-        PhasePolicy::Uniform => space.points(),
-        PhasePolicy::PerPhase => space.phase_points(wl.phases.len()),
-    };
-    let n = points.len();
     let policy = space.schedules;
     let verify = space.verify_schedules;
     // One IR walk for the whole sweep, not one per design point.
     let fingerprint = workload_fingerprint(wl);
     let phase_fps: Vec<u64> =
         wl.phases.iter().map(phase_fingerprint).collect();
+    // The per-phase axis needs the workload's phase count, which the
+    // space cannot know — resolve the base-point enumeration here.
+    // Under `Strategy::Beam` the enumeration is the beam's visited
+    // set re-emitted in canonical order (a subsequence of the
+    // exhaustive list); journal indices, shard ownership and report
+    // order are all positions in whichever enumeration the strategy
+    // produced, and the strategy is part of the space fingerprint.
+    let points = match &space.strategy {
+        Strategy::Exhaustive => match space.phase_policy {
+            PhasePolicy::Uniform => space.points(),
+            PhasePolicy::PerPhase => space.phase_points(wl.phases.len()),
+        },
+        Strategy::Beam { .. } => super::strategy::beam_points(
+            wl, fingerprint, &phase_fps, space, cache,
+        ),
+    };
+    let n = points.len();
+    // Shard-local workload: the indices this run owns. Everything the
+    // user observes — progress, completed/total, the partial report —
+    // is in terms of the owned slice; record indices stay global so
+    // shard journals merge.
+    let n_owned = (0..n).filter(|&i| ctl.shard.owns(i)).count();
 
     let mut warnings: Vec<String> = Vec::new();
     let mut journal_warned = false;
     // Resume: load the replayable prefix. Stale/corrupt journals are
     // loud errors (see `journal::load`); per-record damage degrades
     // to warnings and re-evaluation.
-    let header =
-        ctl.checkpoint.as_ref().map(|_| JournalHeader::new(wl, space, n));
+    let header = ctl.checkpoint.as_ref().map(|_| {
+        JournalHeader::new(wl, space, n).with_shard(ctl.shard)
+    });
     let mut replayed: BTreeMap<usize, JournalRecord> = BTreeMap::new();
     if ctl.resume {
         let (Some(path), Some(h)) = (&ctl.checkpoint, &header) else {
@@ -688,12 +723,12 @@ pub fn explore_controlled(
     let jobs: Vec<(usize, DesignPoint)> = points
         .iter()
         .enumerate()
-        .filter(|(i, _)| !replayed.contains_key(i))
+        .filter(|(i, _)| ctl.shard.owns(*i) && !replayed.contains_key(i))
         .map(|(i, p)| (i, p.clone()))
         .collect();
     let workers = cfg.effective_workers(jobs.len());
     if let Some(p) = &ctl.progress {
-        p(replayed.len(), n);
+        p(replayed.len(), n_owned);
     }
     let (jtx, jrx) = mpsc::channel::<(usize, DesignPoint)>();
     for job in jobs {
@@ -791,7 +826,9 @@ pub fn explore_controlled(
         let mut buffer: BTreeMap<usize, Outcome> = BTreeMap::new();
         let mut frozen = false;
         let mut cursor = 0usize;
-        while cursor < n && replayed.contains_key(&cursor) {
+        while cursor < n
+            && (!ctl.shard.owns(cursor) || replayed.contains_key(&cursor))
+        {
             cursor += 1;
         }
         while let Ok((idx, out)) = rrx.recv() {
@@ -839,11 +876,14 @@ pub fn explore_controlled(
                 }
                 committed += 1;
                 cursor += 1;
-                while cursor < n && replayed.contains_key(&cursor) {
+                while cursor < n
+                    && (!ctl.shard.owns(cursor)
+                        || replayed.contains_key(&cursor))
+                {
                     cursor += 1;
                 }
                 if let Some(p) = &ctl.progress {
-                    p(replayed.len() + committed, n);
+                    p(replayed.len() + committed, n_owned);
                 }
                 // Fault hooks count *newly committed* points, so a
                 // resumed run under the same hooks makes progress.
@@ -895,8 +935,42 @@ pub fn explore_controlled(
     let evaluated: Vec<EvaluatedPoint> =
         slots.into_iter().flatten().collect();
 
-    // Group by scenario, preserving first-seen order, then compute one
-    // frontier + knee per group.
+    let (groups, frontier, knee) = compute_frontiers(&evaluated);
+
+    let completed = replayed.len() + committed;
+    // A deadline that fires after the last commit lost nothing: the
+    // run is complete, not cancelled.
+    let cancelled =
+        if completed < n_owned { ctl.cancel.cancelled() } else { None };
+
+    Ok(ExploreResult {
+        workload: wl.name.clone(),
+        points: evaluated,
+        groups,
+        frontier,
+        knee,
+        failures,
+        cache: cache.stats(),
+        wall: t0.elapsed(),
+        sim_verify: std::collections::BTreeMap::new(),
+        completed,
+        total: n_owned,
+        replayed: replayed.len(),
+        cancelled,
+        warnings,
+        strategy: space.strategy.clone(),
+        shard: if ctl.shard.is_solo() { None } else { Some(ctl.shard) },
+    })
+}
+
+/// Group evaluated points by scenario (bounds, backend) preserving
+/// first-seen order, then compute one Pareto frontier + knee per
+/// group, the sorted frontier union, and the single-scenario knee.
+/// Shared between [`explore_controlled`] and [`merge_shards`] so a
+/// merged report is structurally identical to an unsharded one.
+pub(crate) fn compute_frontiers(
+    evaluated: &[EvaluatedPoint],
+) -> (Vec<FrontierGroup>, Vec<usize>, Option<usize>) {
     let mut groups: Vec<FrontierGroup> = Vec::new();
     let mut members: Vec<Vec<usize>> = Vec::new();
     for (i, p) in evaluated.iter().enumerate() {
@@ -933,13 +1007,138 @@ pub fn explore_controlled(
         [only] => only.knee,
         _ => None,
     };
+    (groups, frontier, knee)
+}
 
-    let completed = replayed.len() + committed;
-    // A deadline that fires after the last commit lost nothing: the
-    // run is complete, not cancelled.
-    let cancelled =
-        if completed < n { ctl.cancel.cancelled() } else { None };
+/// Fold the checkpoint journals of a sharded sweep (`dse --shard i/n
+/// --checkpoint FILE` per process) into one complete [`ExploreResult`],
+/// **byte-identical** in every report to the unsharded run: the space
+/// is re-enumerated from the same flags, each journal is validated
+/// against the workload/space fingerprints (stale inputs fail loudly
+/// with the field and file named), and every global index must be
+/// covered exactly once by the shard that owns it.
+///
+/// Merging requires [`Strategy::Exhaustive`]: shard journals are
+/// defined over the canonical enumeration, while a beam enumeration
+/// depends on cache state the merging process does not replay.
+pub fn merge_shards(
+    wl: &Workload,
+    space: &DesignSpace,
+    paths: &[PathBuf],
+) -> Result<ExploreResult, String> {
+    let t0 = Instant::now();
+    if !space.strategy.is_exhaustive() {
+        return Err(format!(
+            "dse merge requires --strategy exhaustive (got --strategy \
+             {}): shard journals index the canonical enumeration",
+            space.strategy.label()
+        ));
+    }
+    if paths.is_empty() {
+        return Err("dse merge needs at least one --shards journal path"
+            .to_string());
+    }
+    let points = match space.phase_policy {
+        PhasePolicy::Uniform => space.points(),
+        PhasePolicy::PerPhase => space.phase_points(wl.phases.len()),
+    };
+    let n = points.len();
+    let expected = JournalHeader::new(wl, space, n);
 
+    let mut warnings: Vec<String> = Vec::new();
+    // path of each shard index seen so far, for duplicate diagnostics.
+    let mut seen: BTreeMap<usize, &PathBuf> = BTreeMap::new();
+    let mut records: BTreeMap<usize, JournalRecord> = BTreeMap::new();
+    let mut count: Option<usize> = None;
+    for path in paths {
+        let (shard, recs, w) = journal::load_shard(path, &expected)?;
+        warnings.extend(w);
+        match count {
+            None => count = Some(shard.count),
+            Some(c) if c == shard.count => {}
+            Some(c) => {
+                return Err(format!(
+                    "shard journal {} is from a {}-way sweep but {} \
+                     declared {c} shards; all inputs must share one \
+                     --shard denominator",
+                    path.display(),
+                    shard.count,
+                    seen.values()
+                        .next()
+                        .map(|p| p.display().to_string())
+                        .unwrap_or_default(),
+                ));
+            }
+        }
+        if let Some(first) = seen.get(&shard.index) {
+            return Err(format!(
+                "duplicate shard {}: both {} and {} claim it",
+                shard.label(),
+                first.display(),
+                path.display()
+            ));
+        }
+        seen.insert(shard.index, path);
+        for (idx, rec) in recs {
+            if !shard.owns(idx) {
+                return Err(format!(
+                    "shard journal {} contains point {idx}, which shard \
+                     {} does not own — the journal was tampered with or \
+                     mixed up",
+                    path.display(),
+                    shard.label()
+                ));
+            }
+            records.insert(idx, rec);
+        }
+    }
+    let count = count.expect("paths is non-empty");
+    if seen.len() != count {
+        let missing: Vec<String> = (1..=count)
+            .filter(|i| !seen.contains_key(i))
+            .map(|i| format!("{i}/{count}"))
+            .collect();
+        return Err(format!(
+            "incomplete merge: {} of {count} shard journals given; \
+             missing shard(s) {}",
+            seen.len(),
+            missing.join(", ")
+        ));
+    }
+    for idx in 0..n {
+        if !records.contains_key(&idx) {
+            let owner = Shard::owner_of(idx, count);
+            return Err(format!(
+                "incomplete merge: point {idx} has no journal record; \
+                 its owner shard {} ({}) did not finish — re-run that \
+                 shard with --resume, then merge again",
+                owner.label(),
+                seen[&owner.index].display()
+            ));
+        }
+    }
+
+    // Reconstruct exactly like an all-replayed resume: bit-for-bit
+    // metrics, failures in enumeration order, frontiers recomputed by
+    // the shared grouping code.
+    let mut slots: Vec<Vec<EvaluatedPoint>> = vec![Vec::new(); n];
+    let mut failures: Vec<(DesignPoint, String)> = Vec::new();
+    for (idx, rec) in &records {
+        match rec {
+            JournalRecord::Ok(cands) => {
+                slots[*idx] = cands
+                    .iter()
+                    .map(|c| c.to_evaluated(&points[*idx]))
+                    .collect();
+            }
+            JournalRecord::Fail(msg) => {
+                failures.push((points[*idx].clone(), msg.clone()));
+            }
+        }
+    }
+    let evaluated: Vec<EvaluatedPoint> =
+        slots.into_iter().flatten().collect();
+    let (groups, frontier, knee) = compute_frontiers(&evaluated);
     Ok(ExploreResult {
         workload: wl.name.clone(),
         points: evaluated,
@@ -947,14 +1146,16 @@ pub fn explore_controlled(
         frontier,
         knee,
         failures,
-        cache: cache.stats(),
+        cache: CacheStats::default(),
         wall: t0.elapsed(),
         sim_verify: std::collections::BTreeMap::new(),
-        completed,
+        completed: n,
         total: n,
-        replayed: replayed.len(),
-        cancelled,
+        replayed: n,
+        cancelled: None,
         warnings,
+        strategy: Strategy::Exhaustive,
+        shard: None,
     })
 }
 
@@ -1614,5 +1815,186 @@ mod tests {
         for k in keys {
             std::env::remove_var(k);
         }
+    }
+
+    #[test]
+    fn shard_run_owns_exactly_its_round_robin_slice() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = small_space();
+        let full = explore(&wl, &space, &ExploreConfig::serial());
+        assert!(full.failures.is_empty(), "{:?}", full.failures);
+        let points = space.points();
+        let n = points.len();
+        let count = 3usize;
+        let mut union: Vec<EvaluatedPoint> = Vec::new();
+        for index in 1..=count {
+            let shard = Shard { index, count };
+            let ctl =
+                ExploreControl { shard, ..ExploreControl::default() };
+            let res = explore_controlled(
+                &wl,
+                &space,
+                &ExploreConfig::serial(),
+                &AnalysisCache::new(),
+                &ctl,
+            )
+            .unwrap();
+            assert_eq!(res.shard, Some(shard));
+            let owned: Vec<usize> =
+                (0..n).filter(|&i| shard.owns(i)).collect();
+            assert_eq!(res.total, owned.len());
+            assert_eq!(res.completed, owned.len());
+            assert!(res.cancelled.is_none());
+            // The shard evaluated exactly its owned points, in order,
+            // bit-identical to the unsharded run's values.
+            let expect: Vec<&EvaluatedPoint> = full
+                .points
+                .iter()
+                .filter(|p| {
+                    let gi = points
+                        .iter()
+                        .position(|q| *q == p.point)
+                        .expect("point from the same enumeration");
+                    shard.owns(gi)
+                })
+                .collect();
+            assert_eq!(res.points.len(), expect.len());
+            for (a, b) in res.points.iter().zip(expect) {
+                assert_eq!(a.point, b.point);
+                assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+                assert_eq!(a.latency_cycles, b.latency_cycles);
+            }
+            union.extend(res.points.iter().cloned());
+        }
+        // Shards partition: together they cover every point once.
+        assert_eq!(union.len(), full.points.len());
+    }
+
+    #[test]
+    fn merge_shards_reproduces_the_unsharded_result() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = small_space();
+        let dir = journal_dir("merge");
+        let full = explore(&wl, &space, &ExploreConfig::serial());
+        let count = 3usize;
+        let mut paths = Vec::new();
+        for index in 1..=count {
+            let path = dir.join(format!("shard{index}.journal"));
+            let ctl = ExploreControl {
+                shard: Shard { index, count },
+                checkpoint: Some(path.clone()),
+                ..ExploreControl::default()
+            };
+            explore_controlled(
+                &wl,
+                &space,
+                &ExploreConfig::serial(),
+                &AnalysisCache::new(),
+                &ctl,
+            )
+            .unwrap();
+            paths.push(path);
+        }
+        let merged = merge_shards(&wl, &space, &paths).unwrap();
+        assert_eq!(merged.points.len(), full.points.len());
+        for (a, b) in merged.points.iter().zip(&full.points) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.dram_pj.to_bits(), b.dram_pj.to_bits());
+            assert_eq!(a.latency_cycles, b.latency_cycles);
+            assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+        }
+        assert_eq!(merged.groups, full.groups);
+        assert_eq!(merged.frontier, full.frontier);
+        assert_eq!(merged.knee, full.knee);
+        assert_eq!(merged.completed, full.completed);
+        assert_eq!(merged.total, full.total);
+        assert!(merged.cancelled.is_none());
+        assert_eq!(merged.shard, None);
+        assert!(merged.strategy.is_exhaustive());
+        // Input-order independence: the denominator comes from the
+        // headers, not the argument order.
+        paths.reverse();
+        let reversed = merge_shards(&wl, &space, &paths).unwrap();
+        assert_eq!(reversed.frontier, merged.frontier);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_shards_fails_loudly_naming_the_offender() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let space = small_space();
+        let dir = journal_dir("merge-loud");
+        let count = 3usize;
+        let mut paths = Vec::new();
+        for index in 1..=count {
+            let path = dir.join(format!("shard{index}.journal"));
+            let ctl = ExploreControl {
+                shard: Shard { index, count },
+                checkpoint: Some(path.clone()),
+                ..ExploreControl::default()
+            };
+            explore_controlled(
+                &wl,
+                &space,
+                &ExploreConfig::serial(),
+                &AnalysisCache::new(),
+                &ctl,
+            )
+            .unwrap();
+            paths.push(path);
+        }
+        // Missing shard: 2/3 absent from the input set.
+        let missing = vec![paths[0].clone(), paths[2].clone()];
+        let err = merge_shards(&wl, &space, &missing).unwrap_err();
+        assert!(err.contains("incomplete merge"), "{err}");
+        assert!(err.contains("2/3"), "{err}");
+        // Duplicate shard: 1/3 given twice.
+        let dup =
+            vec![paths[0].clone(), paths[0].clone(), paths[2].clone()];
+        let err = merge_shards(&wl, &space, &dup).unwrap_err();
+        assert!(err.contains("duplicate shard 1/3"), "{err}");
+        assert!(err.contains("shard1.journal"), "{err}");
+        // Stale fingerprint: journals from a different space, the
+        // field and file named.
+        let other = space.clone().with_bounds(vec![16, 16]);
+        let err = merge_shards(&wl, &other, &paths).unwrap_err();
+        assert!(err.contains("space_fp"), "{err}");
+        assert!(err.contains(".journal"), "{err}");
+        // Incomplete shard: truncate shard 2's journal to one record
+        // and the missing point must name its owner.
+        let content = std::fs::read_to_string(&paths[1]).unwrap();
+        let keep: Vec<&str> = content.lines().take(7).collect();
+        std::fs::write(&paths[1], format!("{}\n", keep.join("\n")))
+            .unwrap();
+        let err = merge_shards(&wl, &space, &paths).unwrap_err();
+        assert!(err.contains("incomplete merge"), "{err}");
+        assert!(err.contains("2/3"), "{err}");
+        assert!(err.contains("shard2.journal"), "{err}");
+        // Beam journals refuse to merge.
+        let beamed = space.clone().with_strategy(Strategy::beam(4));
+        let err = merge_shards(&wl, &beamed, &paths).unwrap_err();
+        assert!(err.contains("--strategy exhaustive"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn beam_strategy_explores_the_same_small_space_as_exhaustive() {
+        let wl = workloads::by_name("gesummv").unwrap();
+        let exhaustive =
+            explore(&wl, &small_space(), &ExploreConfig::serial());
+        let space =
+            small_space().with_strategy(Strategy::beam_with_budget(4, 1024));
+        let res = explore(&wl, &space, &ExploreConfig::serial());
+        assert_eq!(res.strategy, Strategy::beam_with_budget(4, 1024));
+        assert_eq!(res.shard, None);
+        assert_eq!(res.points.len(), exhaustive.points.len());
+        for (a, b) in res.points.iter().zip(&exhaustive.points) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.latency_cycles, b.latency_cycles);
+        }
+        assert_eq!(res.frontier, exhaustive.frontier);
+        assert_eq!(res.knee, exhaustive.knee);
     }
 }

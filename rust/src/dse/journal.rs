@@ -38,12 +38,13 @@ use std::path::{Path, PathBuf};
 
 use crate::dse::cache::workload_fingerprint;
 use crate::dse::explore::EvaluatedPoint;
-use crate::dse::space::{DesignPoint, DesignSpace, ScheduleChoice};
+use crate::dse::space::{DesignPoint, DesignSpace, ScheduleChoice, Shard};
 use crate::pra::Workload;
 
 /// First line of every journal; bump the version on format changes so
-/// old files are quarantined, not misparsed.
-pub const MAGIC: &str = "tcpa-dse-journal v1";
+/// old files are quarantined, not misparsed. v2 added the `shard`
+/// header line.
+pub const MAGIC: &str = "tcpa-dse-journal v2";
 
 /// Deterministic structural fingerprint of a [`DesignSpace`] — the
 /// same derive-`Debug`-and-hash idiom as
@@ -69,32 +70,48 @@ pub struct JournalHeader {
     pub workload_fp: u64,
     /// [`space_fingerprint`] of the sweep's design space.
     pub space_fp: u64,
-    /// Total number of enumerated design points (`k/n` denominators
-    /// and the record-index upper bound).
+    /// Total number of enumerated design points across **all** shards
+    /// (`k/n` denominators and the record-index upper bound; record
+    /// indices are always global).
     pub points: usize,
+    /// Which slice of the enumeration this journal owns (`1/1` for an
+    /// unsharded sweep). Bound into the header so a shard journal can
+    /// never be resumed — or merged — as a different shard.
+    pub shard: Shard,
 }
 
 impl JournalHeader {
     /// The header binding `(wl, space)` with `points` enumerated
-    /// design points.
+    /// design points, for an unsharded sweep.
     pub fn new(wl: &Workload, space: &DesignSpace, points: usize) -> Self {
         JournalHeader {
             workload: wl.name.clone(),
             workload_fp: workload_fingerprint(wl),
             space_fp: space_fingerprint(space),
             points,
+            shard: Shard::solo(),
         }
+    }
+
+    /// The same header bound to one shard of the enumeration.
+    pub fn with_shard(mut self, shard: Shard) -> Self {
+        self.shard = shard;
+        self
     }
 
     fn render(&self) -> String {
         format!(
             "{MAGIC}\nworkload {}\nworkload_fp {:016x}\n\
-             space_fp {:016x}\npoints {}\n",
-            self.workload, self.workload_fp, self.space_fp, self.points
+             space_fp {:016x}\npoints {}\nshard {}\n",
+            self.workload,
+            self.workload_fp,
+            self.space_fp,
+            self.points,
+            self.shard.label()
         )
     }
 
-    /// Parse the five header lines; `None` means *corrupt* (the
+    /// Parse the six header lines; `None` means *corrupt* (the
     /// caller quarantines), not *stale* (that is a field-level
     /// mismatch diagnosed separately).
     fn parse(lines: &mut std::str::Lines) -> Option<Self> {
@@ -114,7 +131,9 @@ impl JournalHeader {
         .ok()?;
         let points: usize =
             lines.next()?.strip_prefix("points ")?.parse().ok()?;
-        Some(JournalHeader { workload, workload_fp, space_fp, points })
+        let shard =
+            Shard::parse(lines.next()?.strip_prefix("shard ")?).ok()?;
+        Some(JournalHeader { workload, workload_fp, space_fp, points, shard })
     }
 
     /// First field (name, value-in-file, value-expected) that
@@ -140,6 +159,12 @@ impl JournalHeader {
                 "points",
                 self.points.to_string(),
                 expected.points.to_string(),
+            ))
+        } else if self.shard != expected.shard {
+            Some((
+                "shard",
+                self.shard.label(),
+                expected.shard.label(),
             ))
         } else if self.workload != expected.workload {
             Some((
@@ -310,6 +335,65 @@ pub fn load(
         }
     }
     Ok(JournalLoad::Replayed { records, warnings })
+}
+
+/// Load one shard's journal for `dse merge`: like [`load`], but the
+/// file's own shard identity is *returned* rather than required to
+/// match (the merger collects shards it has not seen yet), and a
+/// missing or corrupt file is a hard error — a merge must never
+/// silently fabricate a complete report from a partial input. Nothing
+/// is quarantined: merge inputs belong to other runs.
+pub fn load_shard(
+    path: &Path,
+    expected: &JournalHeader,
+) -> Result<(Shard, BTreeMap<usize, JournalRecord>, Vec<String>), String> {
+    let content = std::fs::read_to_string(path).map_err(|e| {
+        format!("cannot read shard journal {}: {e}", path.display())
+    })?;
+    let mut lines = content.lines();
+    let Some(header) = JournalHeader::parse(&mut lines) else {
+        return Err(format!(
+            "shard journal {} has a corrupt header",
+            path.display()
+        ));
+    };
+    // Validate everything *except* the shard identity: build the
+    // expectation for whatever shard the file claims to be, then run
+    // the usual field-by-field staleness check.
+    let want = expected.clone().with_shard(header.shard);
+    if let Some((field, found, expect)) = header.mismatch(&want) {
+        return Err(format!(
+            "shard journal {} is stale: {field} is {found} but this merge \
+             expects {expect} (was the journal written with the same \
+             workload and dse flags?)",
+            path.display()
+        ));
+    }
+    let mut records = BTreeMap::new();
+    let mut warnings = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        match parse_record(line) {
+            Some((idx, rec)) if idx < expected.points => {
+                records.insert(idx, rec);
+            }
+            Some((idx, _)) => warnings.push(format!(
+                "shard journal {}: record for point {idx} is beyond the \
+                 {}-point space; ignored",
+                path.display(),
+                expected.points
+            )),
+            None => warnings.push(format!(
+                "shard journal {}: dropped a corrupt or truncated record \
+                 line ({} bytes)",
+                path.display(),
+                line.len()
+            )),
+        }
+    }
+    Ok((header.shard, records, warnings))
 }
 
 /// Rename a damaged journal to `<path>.corrupt` so it is preserved
@@ -852,6 +936,53 @@ mod tests {
         assert!(!orphan.exists(), "our orphan temp is reaped");
         assert!(foreign.exists(), "foreign temps are kept");
         assert!(suffixed.exists(), "non-digit suffixes are kept");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_identity_binds_into_the_header() {
+        let dir = tmp_dir("shard-header");
+        let path = dir.join("shard2.journal");
+        let (wl, space, points) = small_setup();
+        let shard = Shard::parse("2/3").unwrap();
+        let header =
+            JournalHeader::new(&wl, &space, points.len()).with_shard(shard);
+        let recs = sample_records(&points);
+        let mut w = JournalWriter::create(&path, &header, 1);
+        for (idx, rec) in &recs {
+            w.append(*idx, rec).unwrap();
+        }
+        // Resuming as the same shard replays; resuming unsharded (or
+        // as a different shard) is stale with the shard field named.
+        match load(&path, &header).unwrap() {
+            JournalLoad::Replayed { records, .. } => {
+                assert_eq!(records.len(), recs.len());
+            }
+            JournalLoad::Absent => panic!("journal was just written"),
+        }
+        let solo = JournalHeader::new(&wl, &space, points.len());
+        let err = load(&path, &solo).unwrap_err();
+        assert!(err.contains("stale"), "{err}");
+        assert!(err.contains("shard"), "{err}");
+        assert!(err.contains("2/3"), "{err}");
+        // The merge loader returns the file's shard instead.
+        let (got, records, warnings) = load_shard(&path, &solo).unwrap();
+        assert_eq!(got, shard);
+        assert_eq!(records.len(), recs.len());
+        assert!(warnings.is_empty(), "{warnings:?}");
+        // ...but still rejects a journal from another space, naming
+        // the field and the file.
+        let other = DesignSpace::new()
+            .with_arrays(vec![vec![4, 4]])
+            .with_bounds(vec![16, 16]);
+        let expected = JournalHeader::new(&wl, &other, points.len());
+        let err = load_shard(&path, &expected).unwrap_err();
+        assert!(err.contains("space_fp"), "{err}");
+        assert!(err.contains("shard2.journal"), "{err}");
+        // A missing merge input is a hard error, not Absent.
+        let gone = dir.join("nope.journal");
+        let err = load_shard(&gone, &solo).unwrap_err();
+        assert!(err.contains("cannot read"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -51,9 +51,18 @@
 //! * [`journal`] — the **checkpoint journal**: an append-only,
 //!   checksummed, line-oriented record of completed points
 //!   (`dse --checkpoint FILE`), fingerprint-locked to its (workload,
-//!   space), tolerant of truncated tails, quarantining corrupt
+//!   space, shard), tolerant of truncated tails, quarantining corrupt
 //!   headers — `--resume` replays completed points bit-for-bit and
 //!   evaluates only the remainder.
+//! * [`strategy`] — the **search strategies**: [`Strategy::Exhaustive`]
+//!   (the default and the differential oracle) vs. a deterministic
+//!   Pareto-guided beam over the shape / phase-shape axis
+//!   (`dse --strategy beam[:W]`), seeded from per-phase energy argmins
+//!   off the shared analysis cache. Combined with design-space
+//!   **sharding** ([`Shard`], `dse --shard i/n`): a stable round-robin
+//!   partition of the canonical enumeration whose per-shard journals
+//!   [`merge_shards`] (`dse merge`) folds into a report byte-identical
+//!   to the unsharded run.
 //! * [`pareto`] — **multi-objective selection**: (energy, latency,
 //!   PE count, DRAM traffic) non-dominated frontiers and knee-point
 //!   picking, replacing the old single-scalar EDP sort. All float
@@ -83,16 +92,17 @@ pub mod journal;
 pub mod pareto;
 pub mod persist;
 pub mod space;
+pub mod strategy;
 pub mod verify;
 
 pub use cache::{
     phase_fingerprint, workload_fingerprint, AnalysisCache, CacheStats,
 };
 pub use explore::{
-    explore, explore_controlled, explore_with_cache, EvaluatedPoint,
-    ExploreConfig, ExploreControl, ExploreResult, FaultPlan,
-    FrontierGroup, FAULT_DEADLINE_AFTER_ENV, FAULT_JOURNAL_WRITE_ENV,
-    FAULT_KILL_AFTER_ENV, JOURNAL_BATCH_ENV,
+    explore, explore_controlled, explore_with_cache, merge_shards,
+    EvaluatedPoint, ExploreConfig, ExploreControl, ExploreResult,
+    FaultPlan, FrontierGroup, FAULT_DEADLINE_AFTER_ENV,
+    FAULT_JOURNAL_WRITE_ENV, FAULT_KILL_AFTER_ENV, JOURNAL_BATCH_ENV,
 };
 pub use journal::{
     space_fingerprint, JournalHeader, JournalLoad, JournalRecord,
@@ -102,6 +112,7 @@ pub use pareto::{dominates, knee_point, pareto_frontier, Objectives};
 pub use persist::{phase_cache_name, DiskCache};
 pub use space::{
     DesignPoint, DesignSpace, PhasePolicy, PhaseShapes, ScheduleChoice,
-    SchedulePolicy,
+    SchedulePolicy, Shard,
 };
+pub use strategy::{Strategy, DEFAULT_BEAM_BUDGET, DEFAULT_BEAM_WIDTH};
 pub use verify::{sim_verify_frontier, SimVerify};

@@ -5,7 +5,88 @@
 
 use std::collections::HashSet;
 
+use super::strategy::Strategy;
 use crate::energy::{Backend, Policy};
+
+/// One slice of a deterministically partitioned sweep: shard `index` of
+/// `count` (1-based, rendered `i/n`) owns every enumeration index `idx`
+/// with `idx % count == index - 1`.
+///
+/// Round-robin over the canonical enumeration order — not contiguous
+/// blocks — so every shard sees every (bounds, backend) scenario group:
+/// the axes vary fastest innermost, and striding by `count` cycles
+/// through them. The partition depends only on `(index, count)` and the
+/// enumeration order, never on timing or worker count, which is the
+/// invariant that makes shard journals mergeable (`dse merge`): shard
+/// identity is bound into the journal header, and the merged union of
+/// owned indices reconstructs the unsharded sweep exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// 1-based shard index, `1 ≤ index ≤ count`.
+    pub index: usize,
+    /// Total number of shards, `≥ 1`.
+    pub count: usize,
+}
+
+impl Default for Shard {
+    fn default() -> Self {
+        Shard::solo()
+    }
+}
+
+impl Shard {
+    /// The trivial partition: one shard owning every point.
+    pub fn solo() -> Self {
+        Shard { index: 1, count: 1 }
+    }
+
+    /// True for the trivial `1/1` partition.
+    pub fn is_solo(&self) -> bool {
+        self.count == 1
+    }
+
+    /// Parse the CLI form `i/n` (e.g. `2/3`), validating `1 ≤ i ≤ n`.
+    pub fn parse(s: &str) -> Result<Shard, String> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| format!("expected i/n (e.g. 2/3), got {s:?}"))?;
+        let index: usize = i
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad shard index {i:?} in {s:?}"))?;
+        let count: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad shard count {n:?} in {s:?}"))?;
+        if count == 0 {
+            return Err(format!("shard count must be >= 1, got {s:?}"));
+        }
+        if index == 0 || index > count {
+            return Err(format!(
+                "shard index must be in 1..={count}, got {s:?}"
+            ));
+        }
+        Ok(Shard { index, count })
+    }
+
+    /// Render back to the `i/n` CLI/journal form.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.index, self.count)
+    }
+
+    /// Does this shard own enumeration index `idx`?
+    pub fn owns(&self, idx: usize) -> bool {
+        idx % self.count == self.index - 1
+    }
+
+    /// The shard that owns enumeration index `idx` in an `n`-way
+    /// partition — how `dse merge` names the shard responsible for a
+    /// missing record.
+    pub fn owner_of(idx: usize, count: usize) -> Shard {
+        assert!(count >= 1, "shard count must be >= 1");
+        Shard { index: idx % count + 1, count }
+    }
+}
 
 /// Whether a multi-phase workload's phases share one array shape or each
 /// take their own — the per-phase heterogeneous mapping axis.
@@ -239,6 +320,14 @@ pub struct DesignSpace {
     /// default — builtins carry their own test coverage — and switched
     /// on for untrusted input (`dse --workload-file`).
     pub verify_schedules: bool,
+    /// How the explorer walks this space (see [`Strategy`]): exhaustive
+    /// enumeration (the default and the oracle), or a beam search over
+    /// the shape/phase-shape axis that visits only a budgeted,
+    /// deterministically chosen subset. Part of the space — not the
+    /// control block — because the strategy changes *which* points
+    /// exist, so it belongs in the space fingerprint that checkpoint
+    /// journals bind to.
+    pub strategy: Strategy,
 }
 
 impl Default for DesignSpace {
@@ -261,6 +350,7 @@ impl DesignSpace {
             max_pes: None,
             prune_symmetric: false,
             verify_schedules: false,
+            strategy: Strategy::Exhaustive,
         }
     }
 
@@ -389,6 +479,16 @@ impl DesignSpace {
         self
     }
 
+    /// Exploration strategy (default [`Strategy::Exhaustive`]). With a
+    /// [`Strategy::Beam`] the explorer enumerates only the combos the
+    /// beam search visits (`dse::strategy::beam_points`) instead of the
+    /// full [`Self::points`] / [`Self::phase_points`] cross-product —
+    /// which is what lifts the CLI's per-phase point cap.
+    pub fn with_strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
     /// Does `array` survive the shape-level pruning rules?
     fn keep_array(&self, array: &[i64]) -> bool {
         if let Some(budget) = self.max_pes {
@@ -404,7 +504,11 @@ impl DesignSpace {
     /// enumerated *and* itself fits `bounds` — otherwise pruning would
     /// silently lose a feasible orientation (e.g. `(4,2)` under bounds
     /// `(16,2)`, whose mirror `(2,4)` does not fit).
-    fn symmetric_duplicate(&self, array: &[i64], bounds: &[i64]) -> bool {
+    pub(crate) fn symmetric_duplicate(
+        &self,
+        array: &[i64],
+        bounds: &[i64],
+    ) -> bool {
         if !self.prune_symmetric {
             return false;
         }
@@ -418,7 +522,7 @@ impl DesignSpace {
     /// Does `array` fit the problem `bounds`? (A PE row/column beyond the
     /// iteration extent would idle entirely — prune, like the original
     /// serial sweep did.) `bounds` is padded with its last entry.
-    fn fits(array: &[i64], bounds: &[i64]) -> bool {
+    pub(crate) fn fits(array: &[i64], bounds: &[i64]) -> bool {
         let last = *bounds.last().expect("non-empty bounds");
         array
             .iter()
@@ -466,7 +570,7 @@ impl DesignSpace {
 
     /// The deduplicated, budget-pruned shape list [`Self::points`] and
     /// [`Self::phase_points`] both draw from (first occurrence wins).
-    fn surviving_shapes(&self) -> Vec<&Vec<i64>> {
+    pub(crate) fn surviving_shapes(&self) -> Vec<&Vec<i64>> {
         let mut seen: HashSet<&[i64]> = HashSet::new();
         self.arrays
             .iter()
@@ -562,7 +666,7 @@ impl DesignSpace {
     /// the bounds. Like [`Self::symmetric_duplicate`], exact for
     /// dimension-swap-symmetric workloads and a documented
     /// approximation otherwise.
-    fn symmetric_combo_duplicate(
+    pub(crate) fn symmetric_combo_duplicate(
         &self,
         combo: &[Vec<i64>],
         bounds: &[i64],
@@ -894,6 +998,64 @@ mod tests {
         // despite with_schedules' assert — clamps instead of silently
         // erasing every point from the sweep.
         assert_eq!(SchedulePolicy::Limit(0).per_phase_cap(), Some(1));
+    }
+
+    #[test]
+    fn shard_parse_label_and_validation() {
+        assert_eq!(Shard::parse("2/3"), Ok(Shard { index: 2, count: 3 }));
+        assert_eq!(Shard::parse("2/3").unwrap().label(), "2/3");
+        assert_eq!(Shard::solo(), Shard { index: 1, count: 1 });
+        assert!(Shard::solo().is_solo());
+        assert!(!Shard::parse("1/2").unwrap().is_solo());
+        assert_eq!(Shard::default(), Shard::solo());
+        for bad in ["", "2", "0/3", "4/3", "a/3", "2/b", "2/0", "/"] {
+            assert!(Shard::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn shards_partition_every_enumeration_exactly() {
+        // The stability invariant `dse merge` relies on: for any n, the
+        // owned index sets of shards 1..=n partition 0..len with no
+        // overlap, and ownership is pure round-robin.
+        let s = DesignSpace::new()
+            .with_arrays_2d(8)
+            .with_bounds_sweep(&[8, 16], 2)
+            .with_backends(Backend::builtins());
+        let len = s.points().len();
+        assert!(len > 8);
+        for n in [1usize, 2, 3, 4, 7] {
+            let mut owners = vec![0usize; len];
+            for i in 1..=n {
+                let shard = Shard { index: i, count: n };
+                for (idx, o) in owners.iter_mut().enumerate() {
+                    if shard.owns(idx) {
+                        *o += 1;
+                        assert_eq!(Shard::owner_of(idx, n), shard);
+                    }
+                }
+            }
+            assert!(
+                owners.iter().all(|&o| o == 1),
+                "every index owned exactly once for n = {n}"
+            );
+        }
+        // Round-robin, not block: consecutive indices go to consecutive
+        // shards, so every shard sees every backend/bounds group.
+        let two = Shard { index: 2, count: 3 };
+        assert!(!two.owns(0) && two.owns(1) && !two.owns(2) && two.owns(4));
+    }
+
+    #[test]
+    fn strategy_defaults_to_exhaustive_and_is_a_space_axis() {
+        let s = DesignSpace::new();
+        assert_eq!(s.strategy, Strategy::Exhaustive);
+        let s = s.with_strategy(Strategy::beam(4));
+        assert!(matches!(s.strategy, Strategy::Beam { width: 4, .. }));
+        // The strategy is part of the Debug form and therefore of the
+        // journal's space fingerprint: beam and exhaustive journals can
+        // never be confused for one another.
+        assert!(format!("{s:?}").contains("Beam"));
     }
 
     #[test]

@@ -1,0 +1,713 @@
+//! Search strategies over the design space.
+//!
+//! PR 8 made long sweeps *survivable* (checkpoint/resume, deadlines);
+//! this module makes them *avoidable*. [`Strategy`] is a first-class
+//! axis of [`DesignSpace`]: `Exhaustive` keeps the canonical
+//! enumeration ([`DesignSpace::points`] / [`DesignSpace::phase_points`])
+//! and stays the oracle, while `Beam` replaces it with a deterministic
+//! Pareto-guided local search over the shape / phase-shape axis that
+//! visits only a budgeted subset of the combination space. The paper's
+//! bargain — one symbolic analysis per (phase, shape) covers every
+//! combination that reuses the shape — is exactly what makes the beam
+//! cheap: pricing a candidate combination is a cache hit on analyses
+//! the seeds already paid for.
+//!
+//! # Beam state and neighborhood model
+//!
+//! A *state* is a vector of shape indices into the surviving shape
+//! list, one per phase (length 1 under [`PhasePolicy::Uniform`]). The
+//! search runs once per *scenario* — each (bounds, tile-scale,
+//! backend) triple — because shape fitness and energy both depend on
+//! the bounds/backend, and the frontier is grouped per (bounds,
+//! backend) downstream.
+//!
+//! - **Seeds.** The extreme uniform diagonals (smallest and largest
+//!   fitting shape in every phase) plus, per phase, the shape with the
+//!   minimal single-phase energy. Phase energies are *separable* — a
+//!   combination's energy is the sum of its phases' — so the vector of
+//!   per-phase energy argmins IS the global energy argmin: the beam
+//!   starts at the optimum of the energy objective and explores
+//!   outward. Each argmin shape also seeds its uniform diagonal.
+//! - **Neighbors.** Per phase: the transposed shape (when enumerated)
+//!   and the previous/next *fitting* shape in enumeration order
+//!   (resize steps). Neighbors falling on a symmetry-pruned duplicate
+//!   are canonicalized to their mirror representative, and an expanded
+//!   state also contributes its mirror's raw neighbors — the search
+//!   graph is then exactly the symmetry quotient of a product of
+//!   paths, which is connected.
+//! - **Generations.** Every visited state is priced with the same
+//!   [`evaluate`](super::explore) the exhaustive explorer uses (so
+//!   objective values are bit-identical), and the open list is ranked:
+//!   states Pareto-nondominated against everything seen so far first
+//!   (canonical order within a class), then dominated states, then
+//!   failed ones. The top `W` are expanded. Nothing is ever discarded
+//!   — dominated and failed states keep their place in the open list,
+//!   so with `budget >=` the reachable set the beam degenerates to a
+//!   full traversal and emits *exactly* the exhaustive enumeration
+//!   (the oracle-equality pin in `tests/strategy_oracle.rs`).
+//! - **Termination.** The scenario search stops when the open list is
+//!   empty or `budget` states have been visited.
+//!
+//! The visited sets of all scenarios are then re-emitted in the
+//! canonical enumeration order (combination-major, then bounds, tile
+//! scales, backends — the same nesting as `points()`/`phase_points()`),
+//! so journal indices, shard ownership and report ordering are
+//! meaningful under both strategies.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::energy::Backend;
+use crate::pra::Workload;
+
+use super::cache::AnalysisCache;
+use super::explore::{evaluate, phase_params};
+use super::pareto::{dominates, NUM_OBJECTIVES};
+use super::space::{
+    DesignPoint, DesignSpace, PhasePolicy, PhaseShapes, ScheduleChoice,
+};
+
+/// Beam width when `--strategy beam` is given without `:W`.
+pub const DEFAULT_BEAM_WIDTH: usize = 8;
+
+/// Visited-state budget per scenario. Chosen so small spaces (a few
+/// hundred combinations) are covered in full — beam == exhaustive —
+/// while the >20k cliffs the CLI refuses under exhaustion stay
+/// bounded.
+pub const DEFAULT_BEAM_BUDGET: usize = 4096;
+
+/// How the explorer walks the design space.
+///
+/// Part of [`DesignSpace`] (not the control block) because the
+/// strategy changes *which* points exist: it participates in the
+/// space fingerprint that checkpoint journals bind to, so a beam
+/// journal can never silently resume an exhaustive sweep or vice
+/// versa.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Strategy {
+    /// Enumerate every point (the default, and the oracle the beam is
+    /// differentially tested against).
+    Exhaustive,
+    /// Deterministic Pareto-guided beam search (see module docs).
+    Beam {
+        /// States expanded per generation.
+        width: usize,
+        /// Visited-state cap per (bounds, tile-scale, backend)
+        /// scenario.
+        budget: usize,
+    },
+}
+
+impl Default for Strategy {
+    fn default() -> Self {
+        Strategy::Exhaustive
+    }
+}
+
+impl Strategy {
+    /// Beam search with the default visited budget.
+    pub fn beam(width: usize) -> Strategy {
+        Strategy::Beam { width: width.max(1), budget: DEFAULT_BEAM_BUDGET }
+    }
+
+    /// Beam search with an explicit visited budget (tests use a huge
+    /// budget to force full coverage, benches a small one to measure
+    /// regret).
+    pub fn beam_with_budget(width: usize, budget: usize) -> Strategy {
+        Strategy::Beam { width: width.max(1), budget: budget.max(1) }
+    }
+
+    /// Parse a `--strategy` argument: `exhaustive`, `beam`, or
+    /// `beam:W`.
+    pub fn parse(s: &str) -> Result<Strategy, String> {
+        match s {
+            "exhaustive" => Ok(Strategy::Exhaustive),
+            "beam" => Ok(Strategy::beam(DEFAULT_BEAM_WIDTH)),
+            _ => match s.strip_prefix("beam:") {
+                Some(w) => match w.parse::<usize>() {
+                    Ok(width) if width >= 1 => Ok(Strategy::beam(width)),
+                    _ => Err(format!(
+                        "bad beam width {w:?} in --strategy {s:?} \
+                         (expected beam:W with W >= 1, e.g. beam:8)"
+                    )),
+                },
+                None => Err(format!(
+                    "unknown strategy {s:?} (expected exhaustive, beam \
+                     or beam:W)"
+                )),
+            },
+        }
+    }
+
+    /// Round-trippable CLI label: `exhaustive` or `beam:W`.
+    pub fn label(&self) -> String {
+        match self {
+            Strategy::Exhaustive => "exhaustive".to_string(),
+            Strategy::Beam { width, .. } => format!("beam:{width}"),
+        }
+    }
+
+    /// True for the exhaustive oracle.
+    pub fn is_exhaustive(&self) -> bool {
+        matches!(self, Strategy::Exhaustive)
+    }
+}
+
+/// Enumerate the design points the beam strategy visits, in canonical
+/// enumeration order (a subsequence of what `Exhaustive` would emit).
+///
+/// `fingerprint`/`phase_fps` are the workload fingerprints the caller
+/// already computed for cache keying; pricing goes through the shared
+/// `cache`, so the analyses paid for here are hits when the explorer
+/// evaluates the emitted points.
+pub(crate) fn beam_points(
+    wl: &Workload,
+    fingerprint: u64,
+    phase_fps: &[u64],
+    space: &DesignSpace,
+    cache: &AnalysisCache,
+) -> Vec<DesignPoint> {
+    let Strategy::Beam { width, budget } = space.strategy.clone() else {
+        return match space.phase_policy {
+            PhasePolicy::Uniform => space.points(),
+            PhasePolicy::PerPhase => space.phase_points(wl.phases.len()),
+        };
+    };
+    let shapes = space.surviving_shapes();
+    if shapes.is_empty() {
+        return Vec::new();
+    }
+    let nphases = match space.phase_policy {
+        PhasePolicy::Uniform => 1,
+        PhasePolicy::PerPhase => wl.phases.len(),
+    };
+    if nphases == 0 {
+        return Vec::new();
+    }
+    let index_of: BTreeMap<&[i64], usize> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.as_slice(), i))
+        .collect();
+
+    // Visited combination sets, per scenario and pooled. BTreeSet keys
+    // are index vectors, so iteration order IS the canonical
+    // combination order (the odometer in `phase_points` ticks phase 0
+    // most significantly; under Uniform the single index matches the
+    // surviving-shape order).
+    let mut per_scenario: BTreeMap<(usize, usize, usize), BTreeSet<Vec<usize>>> =
+        BTreeMap::new();
+    let mut all: BTreeSet<Vec<usize>> = BTreeSet::new();
+    for (bi, bounds) in space.bounds_grid.iter().enumerate() {
+        for (ti, &tile_scale) in space.tile_scales.iter().enumerate() {
+            for (ki, backend) in space.backends.iter().enumerate() {
+                let visited = beam_scenario(
+                    wl, fingerprint, phase_fps, space, cache, &shapes,
+                    &index_of, nphases, bounds, tile_scale, backend, width,
+                    budget,
+                );
+                all.extend(visited.iter().cloned());
+                per_scenario.insert((bi, ti, ki), visited);
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for combo in &all {
+        for (bi, bounds) in space.bounds_grid.iter().enumerate() {
+            for (ti, &tile_scale) in space.tile_scales.iter().enumerate() {
+                for (ki, backend) in space.backends.iter().enumerate() {
+                    if per_scenario[&(bi, ti, ki)].contains(combo) {
+                        out.push(combo_point(
+                            space, &shapes, combo, bounds, tile_scale,
+                            backend,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Materialize a combination as a [`DesignPoint`], mirroring the
+/// construction in `points()`/`phase_points()` field for field so the
+/// emitted points are indistinguishable from exhaustively enumerated
+/// ones.
+fn combo_point(
+    space: &DesignSpace,
+    shapes: &[&Vec<i64>],
+    combo: &[usize],
+    bounds: &[i64],
+    tile_scale: i64,
+    backend: &Backend,
+) -> DesignPoint {
+    match space.phase_policy {
+        PhasePolicy::Uniform => DesignPoint {
+            array: shapes[combo[0]].clone(),
+            bounds: bounds.to_vec(),
+            tile_scale,
+            backend: backend.clone(),
+            schedule: ScheduleChoice::First,
+            phase_shapes: PhaseShapes::Uniform,
+        },
+        PhasePolicy::PerPhase => {
+            let per: Vec<Vec<i64>> =
+                combo.iter().map(|&i| shapes[i].clone()).collect();
+            // Provision the array for the largest phase shape — the
+            // same last-wins tie-break as `phase_points`.
+            let array = per
+                .iter()
+                .rev()
+                .max_by_key(|s| s.iter().product::<i64>())
+                .expect("combo has >= 1 phase")
+                .clone();
+            DesignPoint {
+                array,
+                bounds: bounds.to_vec(),
+                tile_scale,
+                backend: backend.clone(),
+                schedule: ScheduleChoice::First,
+                phase_shapes: PhaseShapes::PerPhase(per),
+            }
+        }
+    }
+}
+
+/// Minimal single-phase energy of `shape` for phase `q` under this
+/// scenario, priced off the shared per-(phase, shape) analysis cache —
+/// the same analyses and parameter choice `evaluate` uses, so the
+/// argmin is exact w.r.t. the explorer's own numbers. `None` when the
+/// analysis fails (the full combination would fail too).
+#[allow(clippy::too_many_arguments)]
+fn phase_energy(
+    wl: &Workload,
+    phase_fps: &[u64],
+    q: usize,
+    shape: &[i64],
+    bounds: &[i64],
+    tile_scale: i64,
+    backend: &Backend,
+    cache: &AnalysisCache,
+) -> Option<f64> {
+    let (ana, _) =
+        cache.try_get_or_analyze_phase_keyed(wl, phase_fps[q], q, shape);
+    let ana = ana.ok()?;
+    let probe = DesignPoint {
+        array: shape.to_vec(),
+        bounds: bounds.to_vec(),
+        tile_scale,
+        backend: backend.clone(),
+        schedule: ScheduleChoice::First,
+        phase_shapes: PhaseShapes::Uniform,
+    };
+    let params = phase_params(&[&*ana], &probe);
+    let energy = crate::analysis::energy_at_backend_phases(
+        std::iter::once(&*ana),
+        &params,
+        backend,
+    );
+    Some(energy.total)
+}
+
+/// One scenario's beam search; returns the visited (canonical,
+/// enumerable) combinations.
+#[allow(clippy::too_many_arguments)]
+fn beam_scenario(
+    wl: &Workload,
+    fingerprint: u64,
+    phase_fps: &[u64],
+    space: &DesignSpace,
+    cache: &AnalysisCache,
+    shapes: &[&Vec<i64>],
+    index_of: &BTreeMap<&[i64], usize>,
+    nphases: usize,
+    bounds: &[i64],
+    tile_scale: i64,
+    backend: &Backend,
+    width: usize,
+    budget: usize,
+) -> BTreeSet<Vec<usize>> {
+    // Shapes that fit these bounds — the axis resize moves walk along.
+    let fitting: Vec<usize> = (0..shapes.len())
+        .filter(|&i| DesignSpace::fits(shapes[i], bounds))
+        .collect();
+    if fitting.is_empty() {
+        return BTreeSet::new();
+    }
+
+    // A combination is enumerable iff the exhaustive enumeration would
+    // emit it for these bounds: every shape fits and it is not a
+    // symmetry-pruned duplicate.
+    let valid = |combo: &[usize]| -> bool {
+        match space.phase_policy {
+            PhasePolicy::Uniform => {
+                let s = shapes[combo[0]];
+                DesignSpace::fits(s, bounds)
+                    && !space.symmetric_duplicate(s, bounds)
+            }
+            PhasePolicy::PerPhase => {
+                let per: Vec<Vec<i64>> =
+                    combo.iter().map(|&i| shapes[i].clone()).collect();
+                per.iter().all(|s| DesignSpace::fits(s, bounds))
+                    && !space.symmetric_combo_duplicate(&per, bounds)
+            }
+        }
+    };
+
+    // Canonicalize a raw move target: drop it if some shape does not
+    // fit; if it lands on a symmetry-pruned duplicate, jump to the
+    // mirror representative the exhaustive enumeration kept.
+    let canon = |combo: Vec<usize>| -> Option<Vec<usize>> {
+        if !combo.iter().all(|&i| fitting.binary_search(&i).is_ok()) {
+            return None;
+        }
+        if valid(&combo) {
+            return Some(combo);
+        }
+        let mirror: Option<Vec<usize>> = match space.phase_policy {
+            PhasePolicy::Uniform => {
+                // `symmetric_duplicate` canonicalizes to the sorted
+                // orientation.
+                let mut sorted = shapes[combo[0]].clone();
+                sorted.sort_unstable();
+                index_of.get(sorted.as_slice()).map(|&i| vec![i])
+            }
+            PhasePolicy::PerPhase => combo
+                .iter()
+                .map(|&i| {
+                    let rev: Vec<i64> =
+                        shapes[i].iter().rev().copied().collect();
+                    index_of.get(rev.as_slice()).copied()
+                })
+                .collect(),
+        };
+        mirror.filter(|m| valid(m))
+    };
+
+    // Raw neighborhood of one state: per phase, the transposed shape
+    // and the adjacent fitting shapes in enumeration order. When
+    // symmetry pruning is on, a state stands for its whole mirror
+    // orbit, so its mirror's raw neighbors count too — that makes the
+    // canonicalized search graph the exact quotient of the (connected)
+    // product-of-paths graph, hence connected: sufficient budget
+    // reaches everything.
+    let raw_neighbors = |state: &[usize]| -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        let mut bases: Vec<Vec<usize>> = vec![state.to_vec()];
+        if space.prune_symmetric {
+            let mirror: Option<Vec<usize>> = state
+                .iter()
+                .map(|&i| {
+                    let rev: Vec<i64> =
+                        shapes[i].iter().rev().copied().collect();
+                    index_of.get(rev.as_slice()).copied()
+                })
+                .collect();
+            if let Some(m) = mirror {
+                if m.as_slice() != state
+                    && m.iter()
+                        .all(|&i| fitting.binary_search(&i).is_ok())
+                {
+                    bases.push(m);
+                }
+            }
+        }
+        for base in &bases {
+            for q in 0..base.len() {
+                let i = base[q];
+                let rev: Vec<i64> =
+                    shapes[i].iter().rev().copied().collect();
+                if let Some(&j) = index_of.get(rev.as_slice()) {
+                    if j != i {
+                        let mut nb = base.clone();
+                        nb[q] = j;
+                        out.push(nb);
+                    }
+                }
+                if let Ok(pos) = fitting.binary_search(&i) {
+                    if pos > 0 {
+                        let mut nb = base.clone();
+                        nb[q] = fitting[pos - 1];
+                        out.push(nb);
+                    }
+                    if pos + 1 < fitting.len() {
+                        let mut nb = base.clone();
+                        nb[q] = fitting[pos + 1];
+                        out.push(nb);
+                    }
+                }
+            }
+        }
+        out
+    };
+
+    // Price a state exactly as the explorer will: same `evaluate`,
+    // same cache — the analyses are hits when the emitted points are
+    // re-evaluated. A state with several schedule candidates carries
+    // all their objective vectors.
+    let price = |combo: &[usize]| -> Option<Vec<[f64; NUM_OBJECTIVES]>> {
+        let point =
+            combo_point(space, shapes, combo, bounds, tile_scale, backend);
+        evaluate(
+            wl,
+            fingerprint,
+            phase_fps,
+            &point,
+            cache,
+            space.schedules,
+            space.verify_schedules,
+        )
+        .ok()
+        .map(|evals| {
+            evals.iter().map(|e| e.objectives().to_array()).collect()
+        })
+    };
+
+    // Seeds: extreme uniform diagonals + per-phase energy argmins (see
+    // module docs for why the argmin vector is the exact global energy
+    // optimum).
+    let mut seeds: BTreeSet<Vec<usize>> = BTreeSet::new();
+    let first = *fitting.first().expect("fitting is non-empty");
+    let last = *fitting.last().expect("fitting is non-empty");
+    for i in [first, last] {
+        if let Some(c) = canon(vec![i; nphases]) {
+            seeds.insert(c);
+        }
+    }
+    if space.phase_policy == PhasePolicy::PerPhase {
+        let mut argmin: Vec<usize> = Vec::with_capacity(nphases);
+        for q in 0..nphases {
+            let mut best: Option<(f64, usize)> = None;
+            for &i in &fitting {
+                if let Some(e) = phase_energy(
+                    wl, phase_fps, q, shapes[i], bounds, tile_scale,
+                    backend, cache,
+                ) {
+                    let better = match best {
+                        Some((be, _)) => e < be,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((e, i));
+                    }
+                }
+            }
+            match best {
+                Some((_, i)) => argmin.push(i),
+                None => {
+                    argmin.clear();
+                    break;
+                }
+            }
+        }
+        if argmin.len() == nphases {
+            for &i in &argmin {
+                if let Some(c) = canon(vec![i; nphases]) {
+                    seeds.insert(c);
+                }
+            }
+            if let Some(c) = canon(argmin) {
+                seeds.insert(c);
+            }
+        }
+    }
+
+    let mut visited: BTreeSet<Vec<usize>> = BTreeSet::new();
+    let mut open: BTreeSet<Vec<usize>> = BTreeSet::new();
+    let mut scored: BTreeMap<Vec<usize>, Option<Vec<[f64; NUM_OBJECTIVES]>>> =
+        BTreeMap::new();
+    for s in seeds {
+        if visited.len() >= budget {
+            break;
+        }
+        if visited.insert(s.clone()) {
+            scored.insert(s.clone(), price(&s));
+            open.insert(s);
+        }
+    }
+
+    while !open.is_empty() && visited.len() < budget {
+        // Rank the whole open list against every objective vector seen
+        // so far: nondominated first (a state survives if ANY of its
+        // schedule candidates is nondominated), then dominated, then
+        // failed — canonical combination order inside each class.
+        // Nothing is discarded; a state skipped this generation stays
+        // open for the next.
+        let pool: Vec<[f64; NUM_OBJECTIVES]> = scored
+            .values()
+            .flatten()
+            .flatten()
+            .copied()
+            .collect();
+        let mut ranked: Vec<(u8, Vec<usize>)> = open
+            .iter()
+            .map(|c| {
+                let class = match &scored[c] {
+                    None => 2u8,
+                    Some(objs) => {
+                        let nondominated = objs.iter().any(|o| {
+                            !pool.iter().any(|p| dominates(p, o))
+                        });
+                        if nondominated {
+                            0
+                        } else {
+                            1
+                        }
+                    }
+                };
+                (class, c.clone())
+            })
+            .collect();
+        ranked.sort();
+        for (_, state) in ranked.into_iter().take(width) {
+            open.remove(&state);
+            for nb in raw_neighbors(&state) {
+                if visited.len() >= budget {
+                    break;
+                }
+                if let Some(c) = canon(nb) {
+                    if visited.insert(c.clone()) {
+                        scored.insert(c.clone(), price(&c));
+                        open.insert(c);
+                    }
+                }
+            }
+        }
+    }
+    visited
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+    use super::super::cache::{phase_fingerprint, workload_fingerprint};
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        assert_eq!(Strategy::parse("exhaustive"), Ok(Strategy::Exhaustive));
+        assert_eq!(
+            Strategy::parse("beam"),
+            Ok(Strategy::beam(DEFAULT_BEAM_WIDTH))
+        );
+        assert_eq!(Strategy::parse("beam:3"), Ok(Strategy::beam(3)));
+        for s in ["exhaustive", "beam:8", "beam:3"] {
+            let parsed = Strategy::parse(s).unwrap();
+            assert_eq!(Strategy::parse(&parsed.label()), Ok(parsed));
+        }
+        assert_eq!(Strategy::Exhaustive.label(), "exhaustive");
+        assert_eq!(Strategy::beam(4).label(), "beam:4");
+        assert!(Strategy::Exhaustive.is_exhaustive());
+        assert!(!Strategy::beam(4).is_exhaustive());
+        assert_eq!(Strategy::default(), Strategy::Exhaustive);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_strategies() {
+        for s in ["", "beam:", "beam:0", "beam:x", "beams", "BEAM", "beam:-1"]
+        {
+            let err = Strategy::parse(s).unwrap_err();
+            assert!(
+                err.contains(&format!("{s:?}")),
+                "error {err:?} should name the input {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn width_and_budget_are_clamped_to_one() {
+        assert_eq!(
+            Strategy::beam(0),
+            Strategy::Beam { width: 1, budget: DEFAULT_BEAM_BUDGET }
+        );
+        assert_eq!(
+            Strategy::beam_with_budget(0, 0),
+            Strategy::Beam { width: 1, budget: 1 }
+        );
+    }
+
+    /// With a budget covering the whole space the beam is a full
+    /// traversal: the emitted list must equal the exhaustive
+    /// enumeration exactly — order included — for both phase policies
+    /// and with symmetry pruning on.
+    #[test]
+    fn full_budget_beam_equals_exhaustive_enumeration() {
+        let wl = workloads::by_name("gemver").unwrap();
+        let fingerprint = workload_fingerprint(&wl);
+        let phase_fps: Vec<u64> =
+            wl.phases.iter().map(phase_fingerprint).collect();
+        for per_phase in [false, true] {
+            for prune in [false, true] {
+                let mut space = DesignSpace::new()
+                    .with_arrays_2d(4)
+                    .with_bounds_sweep(&[8, 16], 2)
+                    .with_strategy(Strategy::beam_with_budget(2, 1_000_000));
+                if per_phase {
+                    space = space.with_phase_shapes(PhasePolicy::PerPhase);
+                }
+                space.prune_symmetric = prune;
+                let exhaustive = match space.phase_policy {
+                    PhasePolicy::Uniform => space.points(),
+                    PhasePolicy::PerPhase => {
+                        space.phase_points(wl.phases.len())
+                    }
+                };
+                let cache = AnalysisCache::new();
+                let beam = beam_points(
+                    &wl, fingerprint, &phase_fps, &space, &cache,
+                );
+                assert_eq!(
+                    beam, exhaustive,
+                    "per_phase={per_phase} prune={prune}: full-budget \
+                     beam must reproduce the exhaustive enumeration"
+                );
+            }
+        }
+    }
+
+    /// A tight budget yields a strict, deterministic subset in
+    /// canonical order.
+    #[test]
+    fn tight_budget_beam_is_a_deterministic_ordered_subset() {
+        let wl = workloads::by_name("gemver").unwrap();
+        let fingerprint = workload_fingerprint(&wl);
+        let phase_fps: Vec<u64> =
+            wl.phases.iter().map(phase_fingerprint).collect();
+        let space = DesignSpace::new()
+            .with_arrays_2d(6)
+            .with_bounds(vec![12, 12])
+            .with_phase_shapes(PhasePolicy::PerPhase)
+            .with_strategy(Strategy::beam_with_budget(2, 12));
+        let exhaustive = space.phase_points(wl.phases.len());
+        let a = beam_points(
+            &wl,
+            fingerprint,
+            &phase_fps,
+            &space,
+            &AnalysisCache::new(),
+        );
+        let b = beam_points(
+            &wl,
+            fingerprint,
+            &phase_fps,
+            &space,
+            &AnalysisCache::new(),
+        );
+        assert_eq!(a, b, "beam enumeration must be deterministic");
+        assert!(
+            a.len() < exhaustive.len(),
+            "budget 12 must prune a {}-point space",
+            exhaustive.len()
+        );
+        // Subset in canonical order: walking the exhaustive list must
+        // encounter every beam point in sequence.
+        let mut it = exhaustive.iter();
+        for p in &a {
+            assert!(
+                it.any(|e| e == p),
+                "beam point missing from the exhaustive enumeration \
+                 or out of canonical order: {p:?}"
+            );
+        }
+    }
+}

@@ -21,7 +21,10 @@ fn main() {
              [--policies all|tcpa,no-fd,no-reuse]\n                       \
              [--prune-symmetric] [--workers W] [--out DIR]\n                       \
              [--checkpoint FILE] [--resume] [--deadline SECS]\n                       \
-             [--point-timeout SECS] [--progress]\n  \
+             [--point-timeout SECS] [--progress]\n                       \
+             [--strategy exhaustive|beam[:W]] [--shard i/n]\n  \
+             tcpa-energy dse merge <same space flags> \
+             --shards a.journal,b.journal,..\n  \
              tcpa-energy figures  [--out DIR] [--quick]\n  \
              tcpa-energy lint     --workload NAME | --workload-file F | \
              --all-builtins\n                       \
@@ -39,7 +42,13 @@ fn main() {
              --resume replays them\nbit-for-bit, --deadline/--point-timeout \
              bound the clock, Ctrl-C drains and\nflushes. `dse` exit \
              codes: 0 ok, 1 all points failed, 2 error, 3 partial\n\
-             (cancelled; frontier marked `partial (k/n points)`)."
+             (cancelled; frontier marked `partial (k/n points)`).\n\n\
+             Scaling: --strategy beam[:W] searches the shape axis with a \
+             deterministic\nPareto beam (exhaustive stays the oracle); \
+             --shard i/n sweeps the i-th\nround-robin slice of the \
+             enumeration, and `dse merge --shards ...` folds\nfinished \
+             shard journals into a report byte-identical to the unsharded \
+             run."
         );
         return;
     }

@@ -133,6 +133,25 @@ pub fn dse_frontier_markdown(res: &ExploreResult) -> String {
         res.points.len(),
         res.failures.len(),
     );
+    // Provenance lines appear only off the defaults, so exhaustive
+    // unsharded reports — including merged shard reports — stay
+    // byte-identical to what earlier versions emitted.
+    if !res.strategy.is_exhaustive() {
+        let _ = writeln!(
+            out,
+            "strategy: {} (heuristic subset; rerun with --strategy \
+             exhaustive for the oracle)",
+            res.strategy.label()
+        );
+    }
+    if let Some(shard) = res.shard {
+        let _ = writeln!(
+            out,
+            "shard: {} (this slice only; `dse merge` folds all shards \
+             into the full frontier)",
+            shard.label()
+        );
+    }
     for g in &res.groups {
         let mut t = CsvTable::new(HEADER.to_vec());
         for &i in &g.frontier {
@@ -256,6 +275,22 @@ mod tests {
             !md.contains("partial ("),
             "a complete sweep must not be marked partial"
         );
+    }
+
+    #[test]
+    fn markdown_carries_strategy_and_shard_provenance() {
+        use crate::dse::{Shard, Strategy};
+        // Defaults: no provenance lines at all (byte-compat with
+        // pre-strategy reports, and with merged shard reports).
+        let mut res = small_result();
+        let md = dse_frontier_markdown(&res);
+        assert!(!md.contains("strategy:"), "{md}");
+        assert!(!md.contains("shard:"), "{md}");
+        res.strategy = Strategy::beam(4);
+        res.shard = Some(Shard::parse("2/3").unwrap());
+        let md = dse_frontier_markdown(&res);
+        assert!(md.contains("strategy: beam:4"), "{md}");
+        assert!(md.contains("shard: 2/3"), "{md}");
     }
 
     #[test]

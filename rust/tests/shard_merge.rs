@@ -1,0 +1,325 @@
+//! Sharded-sweep partition and merge acceptance suite.
+//!
+//! `--shard i/n` must slice the canonical enumeration into a true
+//! partition — every point owned by exactly one shard, no overlap —
+//! and `dse merge` must fold the per-shard journals into a report
+//! **byte-identical** to the unsharded run, failing loudly (naming the
+//! offending shard, field, or file) on a missing, duplicated, stale,
+//! or unfinished shard. Like the fault-injection suite, these tests
+//! drive the real binary: the property pinned is the end-to-end
+//! artifact a CI pipeline diffs.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use tcpa_energy::dse::Shard;
+
+const BIN: &str = env!("CARGO_BIN_EXE_tcpa-energy");
+
+const KILL_AFTER: &str = "TCPA_DSE_FAULT_KILL_AFTER";
+const JOURNAL_BATCH: &str = "TCPA_DSE_JOURNAL_BATCH";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("tcpa-shard-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run `tcpa-energy dse --workload gesummv --bounds 8,8 --max-pes 4
+/// --workers 2 <extra>` — an 8-point canonical enumeration — with the
+/// given env hooks.
+fn dse(extra: &[&str], envs: &[(&str, &str)]) -> Output {
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "dse", "--workload", "gesummv", "--bounds", "8,8", "--max-pes",
+        "4", "--workers", "2",
+    ]);
+    cmd.args(extra);
+    // Never inherit hooks from the harness environment.
+    for k in [KILL_AFTER, JOURNAL_BATCH] {
+        cmd.env_remove(k);
+    }
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.output().expect("spawn tcpa-energy")
+}
+
+/// `dse merge` over the same space, folding `journals`.
+fn merge(journals: &[&str], out: Option<&Path>) -> Output {
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "dse", "merge", "--workload", "gesummv", "--bounds", "8,8",
+        "--max-pes", "4",
+    ]);
+    let list = journals.join(",");
+    cmd.args(["--shards", &list]);
+    if let Some(dir) = out {
+        cmd.args(["--out", dir.to_str().unwrap()]);
+    }
+    cmd.output().expect("spawn tcpa-energy dse merge")
+}
+
+/// The three report files `--out` writes, as raw bytes.
+fn report_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    ["dse_gesummv_points.csv", "dse_gesummv_frontier.csv",
+     "dse_gesummv_frontier.md"]
+        .iter()
+        .map(|f| (f.to_string(), std::fs::read(dir.join(f)).unwrap()))
+        .collect()
+}
+
+fn assert_reports_identical(
+    base: &[(String, Vec<u8>)],
+    dir: &Path,
+    what: &str,
+) {
+    for ((name, want), (_, got)) in
+        base.iter().zip(report_bytes(dir).iter())
+    {
+        assert_eq!(
+            want, got,
+            "{what}: {name} must be byte-identical to the unsharded \
+             sweep"
+        );
+    }
+}
+
+/// Data rows (header stripped) of one run's points CSV.
+fn point_rows(dir: &Path) -> Vec<String> {
+    let text =
+        std::fs::read_to_string(dir.join("dse_gesummv_points.csv"))
+            .unwrap();
+    text.lines().skip(1).map(str::to_string).collect()
+}
+
+/// Run all `n` shards, journaling under `dir`; returns the journal
+/// paths in shard order.
+fn run_shards(dir: &Path, n: usize, with_out: bool) -> Vec<PathBuf> {
+    (1..=n)
+        .map(|i| {
+            let j = dir.join(format!("shard{i}.journal"));
+            let sh = format!("{i}/{n}");
+            let mut extra: Vec<String> = vec![
+                "--shard".into(),
+                sh.clone(),
+                "--checkpoint".into(),
+                j.to_str().unwrap().into(),
+            ];
+            if with_out {
+                extra.extend([
+                    "--out".into(),
+                    dir.join(format!("out{i}")).to_str().unwrap().into(),
+                ]);
+            }
+            let extra_refs: Vec<&str> =
+                extra.iter().map(String::as_str).collect();
+            let out = dse(&extra_refs, &[]);
+            assert!(out.status.success(), "shard {sh} failed: {out:?}");
+            j
+        })
+        .collect()
+}
+
+#[test]
+fn shard_slices_partition_the_enumeration_for_several_n() {
+    // Library-level invariant first: round-robin ownership is a true
+    // partition for any n — exactly one owner per index.
+    for n in [1usize, 2, 3, 5, 8, 11] {
+        for idx in 0..16usize {
+            let owners: Vec<usize> = (1..=n)
+                .filter(|&i| Shard { index: i, count: n }.owns(idx))
+                .collect();
+            assert_eq!(
+                owners,
+                vec![Shard::owner_of(idx, n).index],
+                "point {idx} must have exactly one owner of {n} shards"
+            );
+        }
+    }
+    // End-to-end: the union of the shard-local point CSVs is exactly
+    // the unsharded point CSV, with no row appearing in two shards.
+    let dir = tmp_dir("partition");
+    let base_dir = dir.join("base");
+    assert!(dse(&["--out", base_dir.to_str().unwrap()], &[])
+        .status
+        .success());
+    let all_rows = point_rows(&base_dir);
+    assert_eq!(
+        all_rows.len(),
+        8,
+        "gesummv 8,8 max-pes 4 enumerates 8 points"
+    );
+    for n in [2usize, 3] {
+        let sub = dir.join(format!("n{n}"));
+        std::fs::create_dir_all(&sub).unwrap();
+        run_shards(&sub, n, true);
+        let mut union: Vec<String> = Vec::new();
+        for i in 1..=n {
+            let rows = point_rows(&sub.join(format!("out{i}")));
+            for r in &rows {
+                assert!(
+                    !union.contains(r),
+                    "row owned by two shards of {n}: {r}"
+                );
+            }
+            union.extend(rows);
+        }
+        let mut want = all_rows.clone();
+        want.sort();
+        union.sort();
+        assert_eq!(
+            union, want,
+            "the union of {n} shard slices must cover the space"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn three_way_merge_is_byte_identical_to_the_unsharded_run() {
+    let dir = tmp_dir("merge");
+    let base_dir = dir.join("base");
+    assert!(dse(&["--out", base_dir.to_str().unwrap()], &[])
+        .status
+        .success());
+    let base = report_bytes(&base_dir);
+    let journals = run_shards(&dir, 3, false);
+    let refs: Vec<&str> =
+        journals.iter().map(|j| j.to_str().unwrap()).collect();
+    let merged_dir = dir.join("merged");
+    let out = merge(&refs, Some(&merged_dir));
+    assert!(out.status.success(), "merge failed: {out:?}");
+    assert_reports_identical(&base, &merged_dir, "3-way merge");
+    // Order independence: shards fold identically in any order.
+    let rev: Vec<&str> = refs.iter().rev().copied().collect();
+    let rev_dir = dir.join("merged-rev");
+    assert!(merge(&rev, Some(&rev_dir)).status.success());
+    assert_reports_identical(&base, &rev_dir, "reversed-order merge");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn merge_failures_are_loud_and_name_the_offender() {
+    let dir = tmp_dir("offender");
+    let journals = run_shards(&dir, 3, false);
+    let refs: Vec<&str> =
+        journals.iter().map(|j| j.to_str().unwrap()).collect();
+
+    // Missing shard: only 2 of 3 journals given.
+    let out = merge(&[refs[0], refs[2]], None);
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+    let err = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(err.contains("2 of 3"), "{err}");
+    assert!(err.contains("2/3"), "missing shard must be named: {err}");
+
+    // Duplicate shard: 1/3 given twice, both paths named.
+    let out = merge(&[refs[0], refs[1], refs[0]], None);
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+    let err = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(err.contains("duplicate shard 1/3"), "{err}");
+    assert!(err.contains("shard1.journal"), "{err}");
+
+    // Stale shard: a journal written over different bounds — the
+    // fingerprint mismatch and the file are named.
+    let stale = dir.join("stale.journal");
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "dse", "--workload", "gesummv", "--bounds", "16,16",
+        "--max-pes", "4", "--shard", "2/3", "--checkpoint",
+        stale.to_str().unwrap(),
+    ]);
+    assert!(cmd.output().unwrap().status.success());
+    let out = merge(&[refs[0], stale.to_str().unwrap(), refs[2]], None);
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+    let err = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(err.contains("stale"), "{err}");
+    assert!(err.contains("stale.journal"), "{err}");
+
+    // Unfinished shard: tear the records off shard 2's journal — the
+    // first unowned point names the owning shard, its journal file,
+    // and the recovery (--resume).
+    let text = std::fs::read_to_string(&journals[1]).unwrap();
+    let header_only: String =
+        text.lines().take(6).map(|l| format!("{l}\n")).collect();
+    std::fs::write(&journals[1], header_only).unwrap();
+    let out = merge(&refs, None);
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+    let err = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(err.contains("incomplete merge"), "{err}");
+    assert!(err.contains("2/3"), "{err}");
+    assert!(err.contains("shard2.journal"), "{err}");
+    assert!(err.contains("--resume"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn killed_shard_resumes_and_still_merges_byte_identical() {
+    let dir = tmp_dir("interop");
+    let base_dir = dir.join("base");
+    assert!(dse(&["--out", base_dir.to_str().unwrap()], &[])
+        .status
+        .success());
+    let base = report_bytes(&base_dir);
+    // Shards 1 and 3 complete; shard 2 is killed after its first
+    // committed point, then resumed in a fresh process — the sharded
+    // and interruptible machineries must compose.
+    let j: Vec<PathBuf> = (1..=3)
+        .map(|i| dir.join(format!("shard{i}.journal")))
+        .collect();
+    for i in [1usize, 3] {
+        let sh = format!("{i}/3");
+        let out = dse(
+            &["--shard", &sh, "--checkpoint",
+              j[i - 1].to_str().unwrap()],
+            &[],
+        );
+        assert!(out.status.success(), "shard {sh}: {out:?}");
+    }
+    let killed = dse(
+        &["--shard", "2/3", "--checkpoint", j[1].to_str().unwrap()],
+        &[(KILL_AFTER, "1"), (JOURNAL_BATCH, "1")],
+    );
+    assert!(!killed.status.success(), "the kill must fire: {killed:?}");
+    assert!(j[1].exists(), "the shard journal survives the kill");
+    let resumed = dse(
+        &["--shard", "2/3", "--checkpoint", j[1].to_str().unwrap(),
+          "--resume"],
+        &[],
+    );
+    assert!(resumed.status.success(), "{resumed:?}");
+    let stdout = String::from_utf8_lossy(&resumed.stdout);
+    assert!(
+        stdout.contains("1 replayed from journal"),
+        "the resume must replay the committed prefix: {stdout}"
+    );
+    let refs: Vec<&str> =
+        j.iter().map(|p| p.to_str().unwrap()).collect();
+    let merged_dir = dir.join("merged");
+    let out = merge(&refs, Some(&merged_dir));
+    assert!(out.status.success(), "merge failed: {out:?}");
+    assert_reports_identical(&base, &merged_dir, "kill+resume+merge");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resuming_under_a_different_shard_flag_is_a_stale_journal() {
+    let dir = tmp_dir("stale-shard");
+    let j = dir.join("sweep.journal");
+    let js = j.to_str().unwrap().to_string();
+    assert!(dse(&["--shard", "1/3", "--checkpoint", &js], &[])
+        .status
+        .success());
+    // The journal is fingerprint-locked to its slice: replaying shard
+    // 1's records into shard 2's sweep would silently mis-assign
+    // points, so it must be rejected as stale, naming the field.
+    let clash =
+        dse(&["--shard", "2/3", "--checkpoint", &js, "--resume"], &[]);
+    assert_eq!(clash.status.code(), Some(2), "{clash:?}");
+    let err = String::from_utf8_lossy(&clash.stderr).to_string();
+    assert!(err.contains("stale"), "{err}");
+    assert!(err.contains("shard"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
